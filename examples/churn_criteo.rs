@@ -1,0 +1,73 @@
+//! Prediction churn on the Criteo stand-in (paper §3.5 / Table 1), as a
+//! minimal standalone scenario: train the same DNN twice with different
+//! seeds, and a codistilled pair twice, then compare mean |Δp|.
+//!
+//! Run: `cargo run --release --example churn_criteo -- [steps=N]`
+
+use codistill::codistill::{DistillSchedule, Member};
+use codistill::config::Settings;
+use codistill::experiments::common::open_bundle;
+use codistill::metrics::mean_abs_diff;
+use codistill::models::criteo::{CriteoMember, CriteoValSet};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let mut s = Settings::new();
+    for kv in std::env::args().skip(1).filter(|a| a.contains('=')) {
+        s.apply(&kv)?;
+    }
+    let steps = s.u64_or("steps", 200)?;
+    let lr = s.f32_or("lr", 0.05)?;
+    let bundle = open_bundle(&s, "criteo")?;
+    let buckets = bundle.meta_usize("buckets")?;
+    let batch = bundle.meta_usize("batch")?;
+    let val = CriteoValSet::generate(42, 9_999_999, buckets, batch, 6)?;
+
+    // Two independent retrains of the plain DNN.
+    let mut preds = Vec::new();
+    for seed in [1i32, 2] {
+        let mut m = CriteoMember::new(&bundle, 42, seed as u64 * 10, seed, val.clone())?;
+        for _ in 0..steps {
+            m.train_step(0.0, lr)?;
+        }
+        println!("DNN retrain {seed}: val logloss {:.4}", m.evaluate()?.loss);
+        preds.push(m.val_predictions()?);
+    }
+    let dnn_churn = mean_abs_diff(&preds[0], &preds[1])?;
+
+    // Two retrains of a two-way codistilled pair (pick copy A each time).
+    let sched = DistillSchedule::new(steps / 4, steps / 8, 1.0);
+    let mut cod_preds = Vec::new();
+    for seed in [11i32, 22] {
+        let mut a = CriteoMember::new(&bundle, 42, seed as u64 * 10, seed, val.clone())?;
+        let mut b = CriteoMember::new(&bundle, 42, seed as u64 * 10 + 1, seed + 50, val.clone())?;
+        for step in 0..steps {
+            if step % 20 == 0 {
+                let ca = Arc::new(a.snapshot()?);
+                let cb = Arc::new(b.snapshot()?);
+                a.set_teachers(vec![cb])?;
+                b.set_teachers(vec![ca])?;
+            }
+            let w = sched.weight_at(step);
+            a.train_step(w, lr)?;
+            b.train_step(w, lr)?;
+        }
+        println!(
+            "codistilled retrain {seed}: val logloss {:.4}",
+            a.evaluate()?.loss
+        );
+        cod_preds.push(a.val_predictions()?);
+    }
+    let cod_churn = mean_abs_diff(&cod_preds[0], &cod_preds[1])?;
+
+    println!("\nchurn (mean |Δp| between retrains):");
+    println!("  plain DNN:       {dnn_churn:.4}");
+    println!("  codistilled DNN: {cod_churn:.4}");
+    if cod_churn < dnn_churn {
+        println!(
+            "  -> codistillation reduced churn by {:.0}% (paper: ~35%)",
+            100.0 * (1.0 - cod_churn / dnn_churn)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Codistillation topologies on the LM: pair vs ring vs fully-connected
+//! with four members (the paper's §4 "other topologies" discussion).
+//!
+//! Run: `cargo run --release --example codistill_lm -- [steps=N]`
+
+use codistill::codistill::{DistillSchedule, LrSchedule, Member, Orchestrator, OrchestratorConfig, Topology};
+use codistill::config::Settings;
+use codistill::data::shard::{ShardMode, ShardPlan};
+use codistill::experiments::common::{lm_member, open_bundle};
+use codistill::models::lm::SmoothingMode;
+
+fn main() -> anyhow::Result<()> {
+    let mut s = Settings::new();
+    for kv in std::env::args().skip(1).filter(|a| a.contains('=')) {
+        s.apply(&kv)?;
+    }
+    let steps = s.u64_or("steps", 150)?;
+    let n = s.usize_or("members", 2)?;
+    let bundle = open_bundle(&s, "lm_b64")?;
+
+    for topology in [Topology::Pair, Topology::Ring, Topology::FullyConnected] {
+        let plan = ShardPlan::new(n, 64, ShardMode::Disjoint);
+        let mut members: Vec<Box<dyn Member>> = (0..n)
+            .map(|g| {
+                Ok(Box::new(lm_member(
+                    &bundle,
+                    &plan,
+                    g,
+                    7,
+                    (g + 1) as i32,
+                    SmoothingMode::None,
+                    2,
+                )?) as Box<dyn Member>)
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let cfg = OrchestratorConfig {
+            total_steps: steps,
+            reload_interval: 25,
+            extra_staleness: 0,
+            eval_every: steps,
+            distill: DistillSchedule::new(steps / 3, steps / 6, 1.0),
+            lr: LrSchedule::Constant(0.03),
+            topology,
+            cluster: None,
+            seed: 7,
+            verbose: false,
+        };
+        let log = Orchestrator::new(cfg).run(&mut members)?;
+        println!(
+            "{topology:?}: mean final val loss {:.4}",
+            log.final_mean_loss().unwrap_or(f64::NAN)
+        );
+    }
+    Ok(())
+}

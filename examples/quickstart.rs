@@ -1,0 +1,59 @@
+//! Quickstart: train the LSTM LM for 100 steps through the full stack
+//! (Rust coordinator → PJRT → AOT-compiled JAX/Pallas artifacts), then
+//! enable two-way codistillation and watch the ψ loss engage.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use codistill::codistill::{DistillSchedule, LrSchedule, Member, Orchestrator, OrchestratorConfig, Topology};
+use codistill::config::Settings;
+use codistill::data::shard::{ShardMode, ShardPlan};
+use codistill::experiments::common::{lm_member, open_bundle};
+use codistill::models::lm::SmoothingMode;
+
+fn main() -> anyhow::Result<()> {
+    let s = Settings::new();
+    // 1. Open an artifact bundle (compiled once by `make artifacts`).
+    let bundle = open_bundle(&s, "lm_b64")?;
+    println!(
+        "bundle lm_b64: vocab={} hidden={} batch={}",
+        bundle.meta("vocab").unwrap(),
+        bundle.meta("hidden").unwrap(),
+        bundle.meta("batch").unwrap()
+    );
+
+    // 2. Two codistilling members on disjoint shards of the synthetic
+    //    Common Crawl stand-in.
+    let plan = ShardPlan::new(2, 64, ShardMode::Disjoint);
+    let mut members: Vec<Box<dyn Member>> = vec![
+        Box::new(lm_member(&bundle, &plan, 0, 42, 1, SmoothingMode::None, 2)?),
+        Box::new(lm_member(&bundle, &plan, 1, 42, 2, SmoothingMode::None, 2)?),
+    ];
+
+    // 3. Orchestrate: burn-in 40 steps, then ramp the distillation term in;
+    //    checkpoints exchanged every 20 steps.
+    let cfg = OrchestratorConfig {
+        total_steps: 100,
+        reload_interval: 20,
+        extra_staleness: 0,
+        eval_every: 25,
+        distill: DistillSchedule::new(40, 20, 1.0),
+        lr: LrSchedule::Constant(0.03),
+        topology: Topology::Pair,
+        cluster: None,
+        seed: 42,
+        verbose: true,
+    };
+    let orch = Orchestrator::new(cfg);
+    let log = orch.run(&mut members)?;
+
+    for (i, curve) in log.eval.iter().enumerate() {
+        let first = curve.first().unwrap();
+        let last = curve.last().unwrap();
+        println!(
+            "member {i}: val loss {:.4} (step {}) -> {:.4} (step {})",
+            first.loss, first.step, last.loss, last.step
+        );
+    }
+    println!("quickstart OK");
+    Ok(())
+}

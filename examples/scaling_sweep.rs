@@ -1,0 +1,80 @@
+//! Sync-SGD scaling sweep (the Fig 1 scenario) plus the §2.1 communication
+//! comparison: per-step bytes for sync SGD vs amortized codistillation
+//! checkpoint exchange, across worker counts.
+//!
+//! Also exercises the REAL allreduce path — an explicit 4-worker group
+//! (grad fan-out → tree reduce → apply) — and checks it tracks the fused
+//! large-batch equivalent.
+//!
+//! Run: `cargo run --release --example scaling_sweep -- [steps=N]`
+
+use codistill::codistill::Member;
+use codistill::config::Settings;
+use codistill::data::shard::{ShardMode, ShardPlan};
+use codistill::experiments::common::{corpus_for, lm_member, open_bundle};
+use codistill::models::lm::{LmSyncGroup, SmoothingMode};
+use codistill::netsim::{sweep::step_time_sweep, ClusterModel};
+
+fn main() -> anyhow::Result<()> {
+    let mut s = Settings::new();
+    for kv in std::env::args().skip(1).filter(|a| a.contains('=')) {
+        s.apply(&kv)?;
+    }
+    let steps = s.u64_or("steps", 30)?;
+
+    // --- Analytic cluster sweep (paper-scale worker counts).
+    println!("cluster model (40 MB gradients):");
+    println!("  workers  step_time  sgd_bytes/step  codistill_bytes/step");
+    for (w, t) in step_time_sweep(&[32, 64, 128, 256], 40_000_000, 300, 7) {
+        let m = ClusterModel::gpu_cluster(w, 40_000_000);
+        println!(
+            "  {w:>7}  {t:>8.3}s  {:>14}  {:>20.0}",
+            m.sync_sgd_bytes_per_step(),
+            m.codistill_bytes_per_step()
+        );
+    }
+
+    // --- Real allreduce group vs fused equivalent.
+    let worker_bundle = open_bundle(&s, "lm_w8")?;
+    let fused_bundle = open_bundle(&s, "lm_b32")?;
+    let corpus = corpus_for(&fused_bundle)?;
+    let streams: Vec<u64> = (0..32).collect();
+    let val: Vec<u64> = (3_000_000..3_000_032).collect();
+    let mut group = LmSyncGroup::new(
+        &worker_bundle,
+        &fused_bundle,
+        11,
+        5,
+        4,
+        &streams,
+        &val,
+        &corpus,
+        2,
+    )?;
+    let plan = ShardPlan::new(1, 32, ShardMode::Disjoint);
+    let mut fused = lm_member(&fused_bundle, &plan, 0, 11, 5, SmoothingMode::None, 2)?;
+
+    println!("\nexplicit 4-worker allreduce group vs fused batch-32 step:");
+    for step in 0..steps {
+        let g = group.train_step(0.0, 0.03)?;
+        let f = fused.train_step(0.0, 0.03)?;
+        if step % 10 == 0 || step + 1 == steps {
+            println!(
+                "  step {:>3}: group loss {:.4} | fused loss {:.4}",
+                step + 1,
+                g.loss,
+                f.loss
+            );
+        }
+    }
+    let gl = group.evaluate()?.loss;
+    let fl = fused.evaluate()?.loss;
+    println!("  final val loss: group {gl:.4} vs fused {fl:.4}");
+    println!(
+        "  param-space mean|Δ|: {:.5}",
+        group
+            .params()
+            .prefix_mean_abs_diff(fused.params(), "params.")?
+    );
+    Ok(())
+}

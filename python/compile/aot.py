@@ -1,0 +1,203 @@
+"""AOT lowering: JAX models -> HLO-text artifact bundles for the Rust side.
+
+Run once via ``make artifacts``. For every configured (model, config) pair
+this writes ``artifacts/<bundle>/``:
+
+* ``<exec>.hlo.txt``  — XLA HLO **text** (NOT a serialized proto:
+  xla_extension 0.5.1 rejects jax>=0.5's 64-bit instruction ids; the text
+  parser reassigns ids — see /opt/xla-example/README.md),
+* ``<exec>.spec.txt`` — the flattened I/O signature (names/dtypes/shapes
+  in exact flattened-pytree order) parsed by ``rust/src/runtime/spec.rs``,
+* ``bundle.txt``      — model hyperparameters for ``runtime/bundle.rs``.
+
+Incremental: a bundle is skipped when its ``fingerprint.txt`` (config +
+source mtimes) is unchanged.
+
+Usage: ``python -m compile.aot [--out DIR] [--only BUNDLE[,BUNDLE...]]
+[--tfm-preset {small,100m}] [--force]``
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model_criteo, model_images, model_lm, model_transformer
+
+# --------------------------------------------------------------- bundle set
+
+
+def bundle_configs(tfm_preset: str) -> Dict[str, Any]:
+    """All artifact bundles. Keys are directory names under artifacts/."""
+    bundles: Dict[str, Any] = {}
+
+    # Primary LM config (the "128-GPU-group equivalent", DESIGN.md §4):
+    # effective batch 64 for fused group steps, per-worker batch 8 for the
+    # real allreduce path.
+    base = dict(vocab=512, embed=32, hidden=64, layers=2, unroll=16)
+    # Fig 1 sweep: effective batch = 32..256 (scaled 1:16 from the paper's
+    # 4096..32768), one fused bundle per size.
+    for eff in (32, 64, 128, 256):
+        bundles[f"lm_b{eff}"] = ("lm", model_lm.LmConfig(batch=eff, **base))
+    # Per-worker bundle for the gradient/allreduce path.
+    bundles["lm_w8"] = ("lm", model_lm.LmConfig(batch=8, **base))
+
+    bundles["criteo"] = ("criteo", model_criteo.CriteoConfig())
+    bundles["images"] = ("images", model_images.ImagesConfig())
+
+    tfm_cfg = (
+        model_transformer.PRESET_100M
+        if tfm_preset == "100m"
+        else model_transformer.TfmConfig()
+    )
+    bundles["tfm"] = ("transformer", tfm_cfg)
+    return bundles
+
+
+MODELS = {
+    "lm": model_lm,
+    "criteo": model_criteo,
+    "images": model_images,
+    "transformer": model_transformer,
+}
+
+# ----------------------------------------------------------------- lowering
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+_DTYPE_NAMES = {
+    jnp.dtype("float32"): "f32",
+    jnp.dtype("int32"): "i32",
+    jnp.dtype("uint32"): "u32",
+}
+
+
+def _path_name(prefix: str, path) -> str:
+    parts = [prefix]
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def _leaf_lines(tag: str, prefix: str, tree) -> list:
+    lines = []
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves:
+        dt = _DTYPE_NAMES.get(jnp.dtype(leaf.dtype))
+        if dt is None:
+            raise ValueError(f"unsupported dtype {leaf.dtype} at {prefix}{path}")
+        dims = ",".join(str(d) for d in leaf.shape) if leaf.shape else "-"
+        lines.append(f"{tag} {_path_name(prefix, path)} {dt} {dims}")
+    return lines
+
+
+def make_spec(name: str, args: Dict[str, Any], out_tree, meta: Dict[str, str]) -> str:
+    lines = ["spec-version 1", f"name {name}"]
+    for k, v in meta.items():
+        lines.append(f"meta {k} {v}")
+    for argname, tree in args.items():
+        lines.extend(_leaf_lines("in", argname, tree))
+    lines.extend(_leaf_lines("out", "", out_tree))
+    # outputs get a leading "." from the empty prefix; strip it
+    lines = [l[:4] + l[4:].lstrip(".") if l.startswith("out ") else l for l in lines]
+    return "\n".join(lines) + "\n"
+
+
+def lower_export(name: str, fn, example_args: Dict[str, Any]):
+    args = list(example_args.values())
+    lowered = jax.jit(fn).lower(*args)
+    out_shape = jax.eval_shape(fn, *args)
+    return to_hlo_text(lowered), out_shape
+
+
+# -------------------------------------------------------------- driver
+
+
+def fingerprint(model_name: str, cfg) -> str:
+    here = os.path.dirname(__file__)
+    h = hashlib.sha256()
+    h.update(repr(cfg).encode())
+    for fname in sorted(os.listdir(here)):
+        if fname.endswith(".py"):
+            h.update(fname.encode())
+            with open(os.path.join(here, fname), "rb") as f:
+                h.update(f.read())
+    kdir = os.path.join(here, "kernels")
+    for fname in sorted(os.listdir(kdir)):
+        if fname.endswith(".py"):
+            with open(os.path.join(kdir, fname), "rb") as f:
+                h.update(f.read())
+    return h.hexdigest()
+
+
+def build_bundle(out_dir: str, bundle: str, model_name: str, cfg, force: bool) -> bool:
+    bdir = os.path.join(out_dir, bundle)
+    os.makedirs(bdir, exist_ok=True)
+    fp = fingerprint(model_name, cfg)
+    fp_path = os.path.join(bdir, "fingerprint.txt")
+    if not force and os.path.exists(fp_path):
+        with open(fp_path) as f:
+            if f.read().strip() == fp:
+                print(f"[aot] {bundle}: up to date")
+                return False
+    model = MODELS[model_name]
+    meta = cfg.meta()
+    for exec_name, export in model.EXPORTS.items():
+        fn, example_args = export(cfg)
+        hlo, out_shape = lower_export(exec_name, fn, example_args)
+        with open(os.path.join(bdir, f"{exec_name}.hlo.txt"), "w") as f:
+            f.write(hlo)
+        spec = make_spec(exec_name, example_args, out_shape, meta)
+        with open(os.path.join(bdir, f"{exec_name}.spec.txt"), "w") as f:
+            f.write(spec)
+        print(f"[aot] {bundle}/{exec_name}: {len(hlo)} chars")
+    with open(os.path.join(bdir, "bundle.txt"), "w") as f:
+        for k, v in meta.items():
+            f.write(f"{k} {v}\n")
+    with open(fp_path, "w") as f:
+        f.write(fp + "\n")
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None, help="comma-separated bundle names")
+    ap.add_argument("--tfm-preset", choices=["small", "100m"], default="small")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    bundles = bundle_configs(args.tfm_preset)
+    selected = set(args.only.split(",")) if args.only else set(bundles)
+    unknown = selected - set(bundles)
+    if unknown:
+        sys.exit(f"unknown bundles: {sorted(unknown)}; available: {sorted(bundles)}")
+
+    built = 0
+    for bundle, (model_name, cfg) in bundles.items():
+        if bundle not in selected:
+            continue
+        built += build_bundle(args.out, bundle, model_name, cfg, args.force)
+    print(f"[aot] done; {built} bundle(s) rebuilt at {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

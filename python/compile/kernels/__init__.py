@@ -1,0 +1,26 @@
+"""Layer-1 Pallas kernels for the codistillation stack.
+
+Every kernel is lowered in interpret mode (CPU-PJRT executable HLO) and has
+a pure-jnp oracle in :mod:`ref` plus hypothesis-driven tests under
+``python/tests/``. Kernels that sit inside the differentiated region carry
+``jax.custom_vjp`` with explicit backward kernels — interpret-mode
+``pallas_call`` does not support reverse-mode autodiff.
+"""
+
+from .distill_xent import distill_xent
+from .layernorm import layernorm
+from .lstm_gates import lstm_gates
+from .matmul import matmul
+from .optim import adagrad_update, adam_update, momentum_update
+from .softmax_xent import softmax_xent
+
+__all__ = [
+    "adagrad_update",
+    "adam_update",
+    "distill_xent",
+    "layernorm",
+    "lstm_gates",
+    "matmul",
+    "momentum_update",
+    "softmax_xent",
+]

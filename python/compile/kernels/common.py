@@ -1,0 +1,46 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels in this package are lowered with ``interpret=True``: the CPU
+PJRT plugin cannot execute Mosaic custom-calls, so interpret mode is the
+correctness path and TPU performance is estimated from the BlockSpec
+structure (see DESIGN.md §Hardware-Adaptation and §Perf).
+
+Block-size policy: target MXU-aligned tiles (multiples of 8 sublanes ×
+128 lanes) but never exceed the actual dimension; fall back to the largest
+divisor so that grids always tile shapes exactly (our model dims are powers
+of two, so in practice blocks stay aligned).
+"""
+
+INTERPRET = True
+
+# VMEM budget per core used for the §Perf estimates (bytes). Matches a
+# TPUv4-style 16 MiB scratchpad with headroom for double buffering.
+VMEM_BUDGET = 16 * 1024 * 1024
+
+
+def pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``target``.
+
+    Guarantees exact tiling (pallas BlockSpec grids must cover the array).
+    For power-of-two dims this returns min(dim, largest power-of-two
+    <= target), keeping tiles MXU-aligned.
+    """
+    if dim <= 0:
+        raise ValueError(f"dim must be positive, got {dim}")
+    b = min(dim, target)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def vmem_bytes(*block_shapes, dtype_bytes: int = 4) -> int:
+    """Approximate VMEM residency of a kernel invocation: the sum of its
+    input/output blocks (double-buffered pipelines double this; reported
+    as-is and interpreted in DESIGN.md §Perf)."""
+    total = 0
+    for shape in block_shapes:
+        n = dtype_bytes
+        for d in shape:
+            n *= d
+        total += n
+    return total

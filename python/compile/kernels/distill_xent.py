@@ -1,0 +1,100 @@
+"""Soft-target cross-entropy Pallas kernel — the paper's distillation loss ψ.
+
+loss[b] = -Σ_v p_t[b,v] · log_softmax(z)[b,v]
+
+with the teacher predictive distribution p_t as soft targets (paper §2:
+"we use the cross entropy error treating the teacher predictive
+distribution as soft targets"). The same kernel also implements both
+label-smoothing baselines of Fig 2a — the caller passes the uniform or
+unigram distribution as ``teacher_probs``.
+
+p_t need not sum to one (scaled smoothing targets); the gradient keeps the
+general form  dz = g[:,None] · (softmax(z)·Σp − p).
+
+Grid tiles batch rows with the whole vocab resident, mirroring
+softmax_xent's schedule so the two losses fuse into one HBM pass of the
+logits on TPU.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_block
+
+DEFAULT_BB = 64
+
+
+def _dx_fwd_kernel(logits_ref, probs_ref, loss_ref):
+    z = logits_ref[...]
+    p = probs_ref[...]
+    m = jnp.max(z, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(z - m), axis=-1, keepdims=True)) + m
+    logp = z - lse
+    loss_ref[...] = -jnp.sum(p * logp, axis=-1)
+
+
+def _dx_fwd(logits, probs, bb=DEFAULT_BB):
+    b, v = logits.shape
+    bb = pick_block(b, bb)
+    grid = (b // bb,)
+    return pl.pallas_call(
+        _dx_fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, v), lambda i: (i, 0)),
+            pl.BlockSpec((bb, v), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=INTERPRET,
+    )(logits, probs)
+
+
+def _dx_bwd_kernel(logits_ref, probs_ref, g_ref, dz_ref):
+    z = logits_ref[...]
+    p = probs_ref[...]
+    m = jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z - m)
+    sm = e / jnp.sum(e, axis=-1, keepdims=True)
+    sum_p = jnp.sum(p, axis=-1, keepdims=True)
+    dz_ref[...] = g_ref[...][:, None] * (sm * sum_p - p)
+
+
+def _dx_bwd(res, g, bb=DEFAULT_BB):
+    logits, probs = res
+    b, v = logits.shape
+    bb = pick_block(b, bb)
+    grid = (b // bb,)
+    dz = pl.pallas_call(
+        _dx_bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, v), lambda i: (i, 0)),
+            pl.BlockSpec((bb, v), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb, v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, v), jnp.float32),
+        interpret=INTERPRET,
+    )(logits, probs, g)
+    # Teacher probs are data (stale predictions), never differentiated —
+    # matching Algorithm 1 where only θ_i receives gradient.
+    return dz, None
+
+
+@jax.custom_vjp
+def distill_xent(logits, teacher_probs):
+    """Per-example soft-target cross entropy: [b,v],[b,v] -> [b]."""
+    return _dx_fwd(logits, teacher_probs)
+
+
+def _distill_xent_fwd(logits, probs):
+    return _dx_fwd(logits, probs), (logits, probs)
+
+
+def _distill_xent_bwd(res, g):
+    return _dx_bwd(res, g)
+
+
+distill_xent.defvjp(_distill_xent_fwd, _distill_xent_bwd)

@@ -1,0 +1,136 @@
+"""LayerNorm Pallas kernel (last-dim normalization) with custom VJP.
+
+The paper's LM uses LayerNorm-LSTM (Ba et al., 2016); this kernel
+normalizes the fused gate pre-activations. The grid tiles rows; each block
+holds ``(bb, d)`` so the full feature dimension is VMEM-resident (d is at
+most 4*hidden = a few thousand floats, far under budget) and the mean/var
+reduction happens entirely on-chip.
+
+Backward uses the closed form: with xhat = (x-mu)/std and dxh = dy * gain,
+  dx = (dxh - mean(dxh) - xhat * mean(dxh * xhat)) / std.
+dgain/dbias are row-reductions computed by a second Pallas kernel that
+accumulates over the row-block grid axis.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_block
+
+EPS = 1e-5
+DEFAULT_BB = 128
+
+
+def _ln_fwd_kernel(x_ref, gain_ref, bias_ref, y_ref, xhat_ref, rstd_ref):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + EPS)
+    xhat = (x - mu) * rstd
+    y_ref[...] = xhat * gain_ref[...] + bias_ref[...]
+    xhat_ref[...] = xhat
+    rstd_ref[...] = rstd[:, 0]
+
+
+def _ln_fwd(x, gain, bias, bb=DEFAULT_BB):
+    b, d = x.shape
+    bb = pick_block(b, bb)
+    grid = (b // bb,)
+    return pl.pallas_call(
+        _ln_fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(x, gain, bias)
+
+
+def _ln_bwd_dx_kernel(dy_ref, xhat_ref, rstd_ref, gain_ref, dx_ref):
+    dy = dy_ref[...]
+    xhat = xhat_ref[...]
+    dxh = dy * gain_ref[...]
+    m1 = jnp.mean(dxh, axis=-1, keepdims=True)
+    m2 = jnp.mean(dxh * xhat, axis=-1, keepdims=True)
+    dx_ref[...] = (dxh - m1 - xhat * m2) * rstd_ref[...][:, None]
+
+
+def _ln_bwd_dparams_kernel(dy_ref, xhat_ref, dgain_ref, dbias_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        dgain_ref[...] = jnp.zeros_like(dgain_ref)
+        dbias_ref[...] = jnp.zeros_like(dbias_ref)
+
+    dy = dy_ref[...]
+    dgain_ref[...] += jnp.sum(dy * xhat_ref[...], axis=0)
+    dbias_ref[...] += jnp.sum(dy, axis=0)
+
+
+def _ln_bwd(res, dy, bb=DEFAULT_BB):
+    xhat, rstd, gain = res
+    b, d = xhat.shape
+    bb = pick_block(b, bb)
+    grid = (b // bb,)
+    dx = pl.pallas_call(
+        _ln_bwd_dx_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=INTERPRET,
+    )(dy, xhat, rstd, gain)
+    dgain, dbias = pl.pallas_call(
+        _ln_bwd_dparams_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(dy, xhat)
+    return dx, dgain, dbias
+
+
+@jax.custom_vjp
+def layernorm(x, gain, bias):
+    """Differentiable LayerNorm over the last dim. x: [b,d], gain/bias: [d]."""
+    y, _, _ = _ln_fwd(x, gain, bias)
+    return y
+
+
+def _layernorm_fwd(x, gain, bias):
+    y, xhat, rstd = _ln_fwd(x, gain, bias)
+    return y, (xhat, rstd, gain)
+
+
+def _layernorm_bwd(res, dy):
+    return _ln_bwd(res, dy)
+
+
+layernorm.defvjp(_layernorm_fwd, _layernorm_bwd)

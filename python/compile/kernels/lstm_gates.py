@@ -1,0 +1,136 @@
+"""Fused LSTM gate nonlinearity + cell-update Pallas kernel with custom VJP.
+
+Consumes the (already layer-normalized) gate pre-activations ``[b, 4h]``
+ordered (i, f, g, o) and the previous cell state ``[b, h]``; produces the
+new hidden and cell states. Everything is elementwise, so the grid tiles
+rows and the full gate width stays in VMEM.
+
+The forward kernel also emits the post-nonlinearity gates (i, f, g, o
+concatenated) and tanh(c_new) as residuals so the backward kernel never
+recomputes transcendental functions — on TPU this trades a small VMEM/HBM
+footprint for VPU throughput, the same trade the paper's training stack
+makes by checkpointing activations.
+
+Backward (denote tc = tanh(c_new)):
+  do = dh * tc            dtc = dh * o      dc = dc_in + dtc * (1 - tc^2)
+  di = dc * g   dg = dc * i   df = dc * c_prev   dc_prev = dc * f
+  dpre_i = di * i(1-i)    dpre_f = df * f(1-f)
+  dpre_g = dg * (1-g^2)   dpre_o = do * o(1-o)
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_block
+
+DEFAULT_BB = 128
+
+
+def _split4(a, h):
+    return a[..., 0 * h : 1 * h], a[..., 1 * h : 2 * h], a[..., 2 * h : 3 * h], a[..., 3 * h : 4 * h]
+
+
+def _gates_fwd_kernel(pre_ref, c_prev_ref, h_ref, c_ref, gates_ref, tc_ref):
+    pre = pre_ref[...]
+    c_prev = c_prev_ref[...]
+    h = c_prev.shape[-1]
+    zi, zf, zg, zo = _split4(pre, h)
+    i = jax.nn.sigmoid(zi)
+    f = jax.nn.sigmoid(zf)
+    g = jnp.tanh(zg)
+    o = jax.nn.sigmoid(zo)
+    c_new = f * c_prev + i * g
+    tc = jnp.tanh(c_new)
+    h_ref[...] = o * tc
+    c_ref[...] = c_new
+    gates_ref[...] = jnp.concatenate([i, f, g, o], axis=-1)
+    tc_ref[...] = tc
+
+
+def _gates_fwd(pre, c_prev, bb=DEFAULT_BB):
+    b, h4 = pre.shape
+    h = c_prev.shape[-1]
+    assert h4 == 4 * h, f"preact width {h4} != 4*hidden {h}"
+    bb = pick_block(b, bb)
+    grid = (b // bb,)
+    row4 = pl.BlockSpec((bb, h4), lambda i: (i, 0))
+    row1 = pl.BlockSpec((bb, h), lambda i: (i, 0))
+    return pl.pallas_call(
+        _gates_fwd_kernel,
+        grid=grid,
+        in_specs=[row4, row1],
+        out_specs=[row1, row1, row4, row1],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h4), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(pre, c_prev)
+
+
+def _gates_bwd_kernel(gates_ref, tc_ref, c_prev_ref, dh_ref, dc_in_ref, dpre_ref, dc_prev_ref):
+    gates = gates_ref[...]
+    h = tc_ref.shape[-1]
+    i, f, g, o = _split4(gates, h)
+    tc = tc_ref[...]
+    dh = dh_ref[...]
+    do = dh * tc
+    dc = dc_in_ref[...] + dh * o * (1.0 - tc * tc)
+    di = dc * g
+    dg = dc * i
+    df = dc * c_prev_ref[...]
+    dc_prev_ref[...] = dc * f
+    dpre_ref[...] = jnp.concatenate(
+        [
+            di * i * (1.0 - i),
+            df * f * (1.0 - f),
+            dg * (1.0 - g * g),
+            do * o * (1.0 - o),
+        ],
+        axis=-1,
+    )
+
+
+def _gates_bwd(res, grads, bb=DEFAULT_BB):
+    gates, tc, c_prev = res
+    dh, dc_in = grads
+    b, h4 = gates.shape
+    h = h4 // 4
+    bb = pick_block(b, bb)
+    grid = (b // bb,)
+    row4 = pl.BlockSpec((bb, h4), lambda i: (i, 0))
+    row1 = pl.BlockSpec((bb, h), lambda i: (i, 0))
+    dpre, dc_prev = pl.pallas_call(
+        _gates_bwd_kernel,
+        grid=grid,
+        in_specs=[row4, row1, row1, row1, row1],
+        out_specs=[row4, row1],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h4), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(gates, tc, c_prev, dh, dc_in)
+    return dpre, dc_prev
+
+
+@jax.custom_vjp
+def lstm_gates(pre, c_prev):
+    """Differentiable fused LSTM gates. Returns (h_new, c_new)."""
+    h, c, _, _ = _gates_fwd(pre, c_prev)
+    return h, c
+
+
+def _lstm_gates_fwd(pre, c_prev):
+    h, c, gates, tc = _gates_fwd(pre, c_prev)
+    return (h, c), (gates, tc, c_prev)
+
+
+def _lstm_gates_bwd(res, grads):
+    return _gates_bwd(res, grads)
+
+
+lstm_gates.defvjp(_lstm_gates_fwd, _lstm_gates_bwd)

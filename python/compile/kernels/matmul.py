@@ -1,0 +1,78 @@
+"""Tiled matmul Pallas kernel with custom VJP.
+
+The MXU-facing workhorse: every dense layer and the fused LSTM gate
+projection lower through this kernel. The grid is (m/bm, n/bn, k/bk); the
+k axis is the innermost (sequential) grid dimension so each (i, j) output
+tile stays resident in VMEM while partial products accumulate into it —
+the standard Pallas revisiting-accumulator pattern, which is also the
+HBM↔VMEM schedule a TPU would want (weight tiles stream, accumulator
+stays put).
+
+Backward is two more tiled matmuls: dx = g @ y^T, dy = x^T @ g.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_block
+
+# Default tile targets: 128 lanes to fill the MXU's systolic array,
+# 128 sublane rows to amortize the pipeline.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _mm_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul_pallas(x, y, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """Raw forward: [m,k] @ [k,n] -> [m,n], f32."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"matmul inner dims mismatch: {x.shape} @ {y.shape}"
+    bm = pick_block(m, bm)
+    bn = pick_block(n, bn)
+    bk = pick_block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x, y)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def matmul(x, y):
+    """Differentiable tiled matmul (Pallas fwd + Pallas bwd)."""
+    return matmul_pallas(x, y)
+
+
+def _matmul_fwd(x, y):
+    return matmul_pallas(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    dx = matmul_pallas(g, y.T)
+    dy = matmul_pallas(x.T, g)
+    return dx, dy
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,94 @@
+"""Fused softmax cross-entropy Pallas kernel (integer labels) with custom VJP.
+
+The LM's output-layer loss over the vocabulary — the single hottest loss
+op in the paper's workload. The grid tiles batch rows with the full vocab
+per block: the row-max / logsumexp reduction and the label gather all stay
+in VMEM, so logits stream from HBM exactly once (forward) and once more in
+backward (recomputing softmax is cheaper than spilling it for the sizes
+the LM uses; see DESIGN.md §Perf).
+
+Backward: dlogits = g[:, None] * (softmax(z) - onehot(labels)).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_block
+
+DEFAULT_BB = 64
+
+
+def _xent_fwd_kernel(logits_ref, labels_ref, loss_ref):
+    z = logits_ref[...]
+    labels = labels_ref[...]
+    m = jnp.max(z, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(z - m), axis=-1)) + m[:, 0]
+    picked = jnp.take_along_axis(z, labels[:, None], axis=-1)[:, 0]
+    loss_ref[...] = lse - picked
+
+
+def _xent_fwd(logits, labels, bb=DEFAULT_BB):
+    b, v = logits.shape
+    bb = pick_block(b, bb)
+    grid = (b // bb,)
+    return pl.pallas_call(
+        _xent_fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, v), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=INTERPRET,
+    )(logits, labels)
+
+
+def _xent_bwd_kernel(logits_ref, labels_ref, g_ref, dz_ref):
+    z = logits_ref[...]
+    labels = labels_ref[...]
+    m = jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    onehot = (labels[:, None] == jax.lax.iota(jnp.int32, z.shape[-1])[None, :]).astype(
+        jnp.float32
+    )
+    dz_ref[...] = g_ref[...][:, None] * (p - onehot)
+
+
+def _xent_bwd(res, g, bb=DEFAULT_BB):
+    logits, labels = res
+    b, v = logits.shape
+    bb = pick_block(b, bb)
+    grid = (b // bb,)
+    dz = pl.pallas_call(
+        _xent_bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, v), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb, v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, v), jnp.float32),
+        interpret=INTERPRET,
+    )(logits, labels, g)
+    return dz, None
+
+
+@jax.custom_vjp
+def softmax_xent(logits, labels):
+    """Per-example cross entropy. logits: [b,v] f32, labels: [b] i32 -> [b]."""
+    return _xent_fwd(logits, labels)
+
+
+def _softmax_xent_fwd(logits, labels):
+    return _xent_fwd(logits, labels), (logits, labels)
+
+
+def _softmax_xent_bwd(res, g):
+    return _xent_bwd(res, g)
+
+
+softmax_xent.defvjp(_softmax_xent_fwd, _softmax_xent_bwd)

@@ -1,0 +1,213 @@
+"""Layer-2: the Criteo click-through-rate DNN (paper §3.1, Table 1).
+
+Paper architecture: feed-forward ReLU net, hidden sizes 2560/1024/256,
+logistic output, Adagrad lr 0.001, inputs = 13 integer + 26 categorical
+features. Scaled default here is 256/128/64 (configurable; the Table 1
+claim is about *relative churn between retrains*, which survives scaling).
+
+Categorical features are hash-bucketed on the Rust side into
+``[0, buckets)`` per field; the model owns one embedding table per field
+(stored as a single ``[26*buckets, dim]`` matrix, indexed with per-field
+offsets).
+
+Binary losses reuse the vocabulary kernels via the 2-class embedding
+``sigmoid(z) = softmax([0, z])[1]``: hard loss = softmax_xent on 2-class
+logits, distillation loss = distill_xent against ``[1-p_t, p_t]`` — so the
+Criteo path exercises the exact same Layer-1 kernels as the LM.
+"""
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import adagrad_update, distill_xent, matmul, softmax_xent
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class CriteoConfig:
+    n_dense: int = 13
+    n_cat: int = 26
+    buckets: int = 1000  # hash buckets per categorical field
+    cat_dim: int = 8
+    hidden1: int = 256
+    hidden2: int = 128
+    hidden3: int = 64
+    batch: int = 256
+
+    def meta(self) -> Dict[str, str]:
+        return {
+            "model": "criteo",
+            "n_dense": str(self.n_dense),
+            "n_cat": str(self.n_cat),
+            "buckets": str(self.buckets),
+            "cat_dim": str(self.cat_dim),
+            "hidden1": str(self.hidden1),
+            "hidden2": str(self.hidden2),
+            "hidden3": str(self.hidden3),
+            "batch": str(self.batch),
+            "optimizer": "adagrad",
+        }
+
+    @property
+    def mlp_in(self) -> int:
+        return self.n_dense + self.n_cat * self.cat_dim
+
+
+# ------------------------------------------------------------------- params
+
+
+def init_params(cfg: CriteoConfig, seed) -> Params:
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    keys = jax.random.split(key, 5)
+    dims = [cfg.mlp_in, cfg.hidden1, cfg.hidden2, cfg.hidden3, 1]
+    params: Params = {
+        "emb": jax.random.normal(keys[0], (cfg.n_cat * cfg.buckets, cfg.cat_dim)) * 0.05,
+    }
+    for i in range(4):
+        lim = jnp.sqrt(6.0 / (dims[i] + dims[i + 1]))
+        params[f"fc{i}"] = {
+            "w": jax.random.uniform(keys[i + 1], (dims[i], dims[i + 1]), minval=-lim, maxval=lim),
+            "b": jnp.zeros((dims[i + 1],)),
+        }
+    return params
+
+
+def init_opt(params: Params):
+    """Adagrad accumulator per leaf (paper: Adagrad, lr 0.001)."""
+    return {"acc": jax.tree_util.tree_map(lambda p: jnp.full(p.shape, 0.1), params)}
+
+
+# ------------------------------------------------------------------ forward
+
+
+def forward(cfg: CriteoConfig, params: Params, dense, cat_idx):
+    """dense: [B, 13] f32 (already log-normalized on the Rust side);
+    cat_idx: [B, 26] i32 in [0, buckets). Returns logits [B]."""
+    offsets = (jnp.arange(cfg.n_cat, dtype=jnp.int32) * cfg.buckets)[None, :]
+    emb = jnp.take(params["emb"], cat_idx + offsets, axis=0)  # [B, 26, D]
+    x = jnp.concatenate([dense, emb.reshape(dense.shape[0], -1)], axis=-1)
+    for i in range(3):
+        p = params[f"fc{i}"]
+        x = jax.nn.relu(matmul(x, p["w"]) + p["b"])
+    p = params["fc3"]
+    return (matmul(x, p["w"]) + p["b"])[:, 0]  # [B]
+
+
+def _two_class(logits):
+    """[B] -> [B, 2] logits such that softmax(.)[1] == sigmoid(logits)."""
+    return jnp.stack([jnp.zeros_like(logits), logits], axis=-1)
+
+
+def loss_fn(cfg, params, dense, cat_idx, labels, teacher_p, distill_w):
+    logits = forward(cfg, params, dense, cat_idx)
+    z2 = _two_class(logits)
+    hard = jnp.mean(softmax_xent(z2, labels))
+    soft_targets = jnp.stack([1.0 - teacher_p, teacher_p], axis=-1)
+    soft = jnp.mean(distill_xent(z2, soft_targets))
+    return hard + distill_w * soft, (hard, soft)
+
+
+# -------------------------------------------------------------- executables
+
+
+def _zeros_like_tree(tree):
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), tree)
+
+
+def _example_params(cfg):
+    shapes = jax.eval_shape(lambda s: init_params(cfg, s), jnp.zeros((), jnp.int32))
+    return _zeros_like_tree(shapes)
+
+
+def example_batch(cfg: CriteoConfig):
+    return {
+        "dense": jnp.zeros((cfg.batch, cfg.n_dense)),
+        "cat_idx": jnp.zeros((cfg.batch, cfg.n_cat), jnp.int32),
+        "labels": jnp.zeros((cfg.batch,), jnp.int32),
+        "teacher_p": jnp.zeros((cfg.batch,)),
+    }
+
+
+def export_init(cfg: CriteoConfig):
+    def fn(seed):
+        return {"params": init_params(cfg, seed)}
+
+    return fn, {"seed": jnp.zeros((), jnp.int32)}
+
+
+def export_train_step(cfg: CriteoConfig):
+    def fn(params, opt, dense, cat_idx, labels, teacher_p, distill_w, lr):
+        (_, (hard, soft)), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, dense, cat_idx, labels, teacher_p, distill_w),
+            has_aux=True,
+        )(params)
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_a = jax.tree_util.tree_flatten(opt["acc"])[0]
+        flat_g = jax.tree_util.tree_flatten(grads)[0]
+        new_p, new_a = [], []
+        for p, a, g in zip(flat_p, flat_a, flat_g):
+            p2, a2 = adagrad_update(p, a, g, lr)
+            new_p.append(p2)
+            new_a.append(a2)
+        unf = jax.tree_util.tree_unflatten
+        return {
+            "params": unf(treedef, new_p),
+            "opt": {"acc": unf(treedef, new_a)},
+            "loss": hard,
+            "distill_loss": soft,
+        }
+
+    params = _example_params(cfg)
+    batch = example_batch(cfg)
+    return fn, {
+        "params": params,
+        "opt": {"acc": _zeros_like_tree(params)},
+        **batch,
+        "distill_w": jnp.zeros(()),
+        "lr": jnp.zeros(()),
+    }
+
+
+def export_predict(cfg: CriteoConfig):
+    """CTR probabilities — used both as the codistillation teacher signal
+    and by the churn evaluator (mean |Δp| between retrains, Table 1)."""
+
+    def fn(params, dense, cat_idx):
+        return {"probs": jax.nn.sigmoid(forward(cfg, params, dense, cat_idx))}
+
+    params = _example_params(cfg)
+    b = example_batch(cfg)
+    return fn, {"params": params, "dense": b["dense"], "cat_idx": b["cat_idx"]}
+
+
+def export_eval(cfg: CriteoConfig):
+    """Validation log loss (summed; Rust accumulates over batches)."""
+
+    def fn(params, dense, cat_idx, labels):
+        logits = forward(cfg, params, dense, cat_idx)
+        xent = softmax_xent(_two_class(logits), labels)
+        return {
+            "sum_loss": jnp.sum(xent),
+            "count": jnp.asarray(xent.shape[0], jnp.float32),
+        }
+
+    params = _example_params(cfg)
+    b = example_batch(cfg)
+    return fn, {
+        "params": params,
+        "dense": b["dense"],
+        "cat_idx": b["cat_idx"],
+        "labels": b["labels"],
+    }
+
+
+EXPORTS = {
+    "init": export_init,
+    "train_step": export_train_step,
+    "predict": export_predict,
+    "eval": export_eval,
+}

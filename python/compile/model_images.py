@@ -1,0 +1,221 @@
+"""Layer-2: the image-classification model for the Fig 3 reproduction.
+
+The paper validates codistillation on ImageNet with the Goyal et al.
+setup (ResNet, momentum SGD, warmup + step-decay schedule, batch 16384,
+75% top-1). The CPU-PJRT substitute (DESIGN.md §4) is a small convnet on
+synthetic 10-class prototype images: Fig 3 is a claim about the *training
+algorithm* (codistillation enabled after burn-in reaches the baseline's
+accuracy in fewer steps and ends slightly higher), which only needs a
+stable accuracy-vs-steps curve with tunable headroom.
+
+Matching pieces kept from the paper's setup: momentum SGD, runtime lr
+input (the Rust coordinator implements the Goyal warmup + decay
+schedule), softmax cross entropy, distillation via soft targets.
+
+Convolutions lower through XLA's conv op (there is no MXU story for tiny
+3×3 convs at this scale); all dense layers and both losses go through the
+Layer-1 Pallas kernels.
+"""
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import distill_xent, matmul, momentum_update, softmax_xent
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ImagesConfig:
+    size: int = 16  # image side
+    channels: int = 3
+    classes: int = 10
+    conv1: int = 16
+    conv2: int = 32
+    dense: int = 128
+    batch: int = 64
+
+    def meta(self) -> Dict[str, str]:
+        return {
+            "model": "images",
+            "size": str(self.size),
+            "channels": str(self.channels),
+            "classes": str(self.classes),
+            "conv1": str(self.conv1),
+            "conv2": str(self.conv2),
+            "dense": str(self.dense),
+            "batch": str(self.batch),
+            "optimizer": "momentum",
+        }
+
+    @property
+    def flat_dim(self) -> int:
+        return (self.size // 4) * (self.size // 4) * self.conv2
+
+
+# ------------------------------------------------------------------- params
+
+
+def init_params(cfg: ImagesConfig, seed) -> Params:
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    ks = jax.random.split(key, 4)
+
+    def conv_init(k, shape):
+        fan_in = shape[0] * shape[1] * shape[2]
+        return jax.random.normal(k, shape) * jnp.sqrt(2.0 / fan_in)
+
+    def fc_init(k, shape):
+        lim = jnp.sqrt(6.0 / (shape[0] + shape[1]))
+        return jax.random.uniform(k, shape, minval=-lim, maxval=lim)
+
+    return {
+        "conv1": {
+            "w": conv_init(ks[0], (3, 3, cfg.channels, cfg.conv1)),
+            "b": jnp.zeros((cfg.conv1,)),
+        },
+        "conv2": {
+            "w": conv_init(ks[1], (3, 3, cfg.conv1, cfg.conv2)),
+            "b": jnp.zeros((cfg.conv2,)),
+        },
+        "fc1": {
+            "w": fc_init(ks[2], (cfg.flat_dim, cfg.dense)),
+            "b": jnp.zeros((cfg.dense,)),
+        },
+        "fc2": {
+            "w": fc_init(ks[3], (cfg.dense, cfg.classes)),
+            "b": jnp.zeros((cfg.classes,)),
+        },
+    }
+
+
+def init_opt(params: Params):
+    return {"vel": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+
+# ------------------------------------------------------------------ forward
+
+
+def _conv_block(x, p):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + p["b"]
+    y = jax.nn.relu(y)
+    return jax.lax.reduce_window(
+        y, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward(cfg: ImagesConfig, params: Params, images):
+    """images: [B, S, S, C] f32 -> logits [B, classes]."""
+    x = _conv_block(images, params["conv1"])
+    x = _conv_block(x, params["conv2"])
+    x = x.reshape(images.shape[0], -1)
+    x = jax.nn.relu(matmul(x, params["fc1"]["w"]) + params["fc1"]["b"])
+    return matmul(x, params["fc2"]["w"]) + params["fc2"]["b"]
+
+
+def loss_fn(cfg, params, images, labels, teacher_probs, distill_w):
+    logits = forward(cfg, params, images)
+    hard = jnp.mean(softmax_xent(logits, labels))
+    soft = jnp.mean(distill_xent(logits, teacher_probs))
+    return hard + distill_w * soft, (hard, soft)
+
+
+# -------------------------------------------------------------- executables
+
+
+def _zeros_like_tree(tree):
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), tree)
+
+
+def _example_params(cfg):
+    return _zeros_like_tree(
+        jax.eval_shape(lambda s: init_params(cfg, s), jnp.zeros((), jnp.int32))
+    )
+
+
+def example_batch(cfg: ImagesConfig):
+    return {
+        "images": jnp.zeros((cfg.batch, cfg.size, cfg.size, cfg.channels)),
+        "labels": jnp.zeros((cfg.batch,), jnp.int32),
+        "teacher_probs": jnp.zeros((cfg.batch, cfg.classes)),
+    }
+
+
+def export_init(cfg: ImagesConfig):
+    def fn(seed):
+        return {"params": init_params(cfg, seed)}
+
+    return fn, {"seed": jnp.zeros((), jnp.int32)}
+
+
+def export_train_step(cfg: ImagesConfig):
+    def fn(params, opt, images, labels, teacher_probs, distill_w, lr):
+        (_, (hard, soft)), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, images, labels, teacher_probs, distill_w),
+            has_aux=True,
+        )(params)
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_v = jax.tree_util.tree_flatten(opt["vel"])[0]
+        flat_g = jax.tree_util.tree_flatten(grads)[0]
+        new_p, new_v = [], []
+        for p, v, g in zip(flat_p, flat_v, flat_g):
+            p2, v2 = momentum_update(p, v, g, lr)
+            new_p.append(p2)
+            new_v.append(v2)
+        unf = jax.tree_util.tree_unflatten
+        return {
+            "params": unf(treedef, new_p),
+            "opt": {"vel": unf(treedef, new_v)},
+            "loss": hard,
+            "distill_loss": soft,
+        }
+
+    params = _example_params(cfg)
+    b = example_batch(cfg)
+    return fn, {
+        "params": params,
+        "opt": {"vel": _zeros_like_tree(params)},
+        **b,
+        "distill_w": jnp.zeros(()),
+        "lr": jnp.zeros(()),
+    }
+
+
+def export_predict(cfg: ImagesConfig):
+    def fn(params, images):
+        return {"probs": jax.nn.softmax(forward(cfg, params, images), axis=-1)}
+
+    params = _example_params(cfg)
+    b = example_batch(cfg)
+    return fn, {"params": params, "images": b["images"]}
+
+
+def export_eval(cfg: ImagesConfig):
+    """Validation loss + top-1 correct count (Fig 3 is accuracy-vs-steps)."""
+
+    def fn(params, images, labels):
+        logits = forward(cfg, params, images)
+        xent = softmax_xent(logits, labels)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+        return {
+            "sum_loss": jnp.sum(xent),
+            "correct": correct,
+            "count": jnp.asarray(xent.shape[0], jnp.float32),
+        }
+
+    params = _example_params(cfg)
+    b = example_batch(cfg)
+    return fn, {"params": params, "images": b["images"], "labels": b["labels"]}
+
+
+EXPORTS = {
+    "init": export_init,
+    "train_step": export_train_step,
+    "predict": export_predict,
+    "eval": export_eval,
+}

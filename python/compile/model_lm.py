@@ -1,0 +1,343 @@
+"""Layer-2: the paper's Common Crawl language model.
+
+An RNN LM with ``n_layers`` LayerNorm-LSTM layers (Ba et al. 2016), tied to
+the paper's §3.1 architecture (2×LSTM-1024 + LN, 256-dim embeddings, word
+pieces, Adam) but dimensionally scaled for the CPU-PJRT testbed — all dims
+come from :class:`LmConfig` and the artifact bundles record them.
+
+Semantics preserved from the paper:
+
+* hidden state is **carried across batches** ("saving hidden state across
+  batches"); the state is an explicit input/output of every executable and
+  the Rust coordinator owns it per data stream;
+* the state never gets reset by the pipeline — the model sees an
+  end-of-document token and the forward pass resets h/c *at* EOD positions,
+  so "the model has to learn to use the end of document token to reset
+  itself" is replaced by an explicit, testable reset (documented
+  simplification: at our scale learned resets don't emerge reliably);
+* the training loss is phi + psi: hard cross entropy plus the distillation
+  cross entropy against teacher soft targets, with the distillation weight
+  a runtime input so one artifact serves plain SGD (w=0), codistillation,
+  and both label-smoothing baselines of Fig 2a;
+* Adam, as in all Common Crawl experiments in the paper.
+
+All dense compute lowers through the Layer-1 Pallas kernels.
+"""
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    adam_update,
+    distill_xent,
+    layernorm,
+    lstm_gates,
+    matmul,
+    softmax_xent,
+)
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class LmConfig:
+    """Static dimensions baked into one artifact bundle."""
+
+    vocab: int = 512
+    embed: int = 32
+    hidden: int = 64
+    layers: int = 2
+    batch: int = 64
+    unroll: int = 16  # T: tokens per stream per step (paper: 32)
+    eod_id: int = 1  # end-of-document token id (0 is reserved for OOV)
+
+    def meta(self) -> Dict[str, str]:
+        return {
+            "model": "lm",
+            "vocab": str(self.vocab),
+            "embed": str(self.embed),
+            "hidden": str(self.hidden),
+            "layers": str(self.layers),
+            "batch": str(self.batch),
+            "unroll": str(self.unroll),
+            "eod_id": str(self.eod_id),
+            "optimizer": "adam",
+        }
+
+
+# ------------------------------------------------------------------- params
+
+
+def init_params(cfg: LmConfig, seed) -> Params:
+    """Initialize parameters from a scalar seed (lowered into `init`).
+
+    Glorot-uniform matrices, +1 forget-gate bias (standard LSTM practice),
+    unit LN gain.
+    """
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    keys = jax.random.split(key, 2 + cfg.layers)
+    params: Params = {
+        "embedding": jax.random.normal(keys[0], (cfg.vocab, cfg.embed)) * 0.05,
+    }
+    for l in range(cfg.layers):
+        fan_in = (cfg.embed if l == 0 else cfg.hidden) + cfg.hidden
+        fan_out = 4 * cfg.hidden
+        lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+        w = jax.random.uniform(keys[1 + l], (fan_in, fan_out), minval=-lim, maxval=lim)
+        b = jnp.zeros((fan_out,))
+        # forget-gate bias +1: gates ordered (i, f, g, o)
+        b = b.at[cfg.hidden : 2 * cfg.hidden].set(1.0)
+        params[f"layer{l}"] = {
+            "w": w,
+            "b": b,
+            "ln_gain": jnp.ones((fan_out,)),
+            "ln_bias": jnp.zeros((fan_out,)),
+        }
+    lim = jnp.sqrt(6.0 / (cfg.hidden + cfg.vocab))
+    params["out"] = {
+        "w": jax.random.uniform(keys[-1], (cfg.hidden, cfg.vocab), minval=-lim, maxval=lim),
+        "b": jnp.zeros((cfg.vocab,)),
+    }
+    return params
+
+
+def init_state(cfg: LmConfig) -> Dict[str, jnp.ndarray]:
+    """Zero RNN state: h/c stacked over layers, [L, B, H]."""
+    shape = (cfg.layers, cfg.batch, cfg.hidden)
+    return {"h": jnp.zeros(shape), "c": jnp.zeros(shape)}
+
+
+def init_opt(params: Params) -> Dict[str, Any]:
+    """Adam state: first/second moments per leaf + step counter."""
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "step": jnp.zeros(())}
+
+
+# ------------------------------------------------------------------ forward
+
+
+def _step_cell(cfg: LmConfig, params: Params, l: int, x, h, c):
+    p = params[f"layer{l}"]
+    xa = jnp.concatenate([x, h], axis=-1)
+    pre = matmul(xa, p["w"]) + p["b"]
+    pre = layernorm(pre, p["ln_gain"], p["ln_bias"])
+    return lstm_gates(pre, c)
+
+
+def forward(cfg: LmConfig, params: Params, state, tokens):
+    """Run the LM over one unroll.
+
+    tokens: [B, T+1] i32 — inputs are tokens[:, :-1], targets tokens[:, 1:].
+    Returns (logits [T*B, V], targets [T*B], new_state).
+    """
+    inputs = tokens[:, :-1]  # [B, T]
+    targets = tokens[:, 1:]  # [B, T]
+    emb = jnp.take(params["embedding"], inputs, axis=0)  # [B, T, E]
+    emb_t = jnp.transpose(emb, (1, 0, 2))  # [T, B, E]
+    inputs_t = jnp.transpose(inputs, (1, 0))  # [T, B]
+
+    def scan_step(carry, xs):
+        h, c = carry  # [L, B, H] each
+        x_t, tok_t = xs  # [B, E], [B]
+        # EOD reset: zero the state before consuming an EOD token.
+        keep = (tok_t != cfg.eod_id).astype(jnp.float32)[None, :, None]
+        h = h * keep
+        c = c * keep
+        new_h = []
+        new_c = []
+        inp = x_t
+        for l in range(cfg.layers):
+            hl, cl = _step_cell(cfg, params, l, inp, h[l], c[l])
+            new_h.append(hl)
+            new_c.append(cl)
+            inp = hl
+        return (jnp.stack(new_h), jnp.stack(new_c)), inp  # top-layer h out
+
+    (h_fin, c_fin), tops = jax.lax.scan(
+        scan_step, (state["h"], state["c"]), (emb_t, inputs_t)
+    )
+    # tops: [T, B, H]
+    t, b, hd = tops.shape
+    logits = matmul(tops.reshape(t * b, hd), params["out"]["w"]) + params["out"]["b"]
+    new_state = {"h": jax.lax.stop_gradient(h_fin), "c": jax.lax.stop_gradient(c_fin)}
+    return logits, targets.transpose(1, 0).reshape(t * b), new_state
+
+
+# ------------------------------------------------------------------- losses
+
+
+def loss_fn(cfg: LmConfig, params, state, tokens, teacher_probs, distill_w):
+    """phi + w·psi. teacher_probs: [T*B, V] in the same flattened layout as
+    the logits (time-major)."""
+    logits, targets, new_state = forward(cfg, params, state, tokens)
+    hard = jnp.mean(softmax_xent(logits, targets))
+    soft = jnp.mean(distill_xent(logits, teacher_probs))
+    return hard + distill_w * soft, (hard, soft, new_state)
+
+
+# -------------------------------------------------------------- executables
+#
+# Each ``export_*`` returns (fn, example_args: dict of name->pytree). aot.py
+# lowers fn(*example_args.values()) and derives the spec from the pytrees.
+
+
+def _example_params(cfg: LmConfig) -> Params:
+    return jax.eval_shape(lambda s: init_params(cfg, s), jnp.zeros((), jnp.int32))
+
+
+def _zeros_like_tree(tree):
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), tree)
+
+
+def example_inputs(cfg: LmConfig):
+    params = _zeros_like_tree(_example_params(cfg))
+    state = init_state(cfg)
+    tokens = jnp.zeros((cfg.batch, cfg.unroll + 1), jnp.int32)
+    probs = jnp.zeros((cfg.unroll * cfg.batch, cfg.vocab))
+    return params, state, tokens, probs
+
+
+def export_init(cfg: LmConfig):
+    def fn(seed):
+        return {"params": init_params(cfg, seed)}
+
+    return fn, {"seed": jnp.zeros((), jnp.int32)}
+
+
+def export_grad(cfg: LmConfig):
+    """Per-worker gradient computation (the allreduce path)."""
+
+    def fn(params, state, tokens, teacher_probs, distill_w):
+        (loss, (hard, soft, new_state)), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, state, tokens, teacher_probs, distill_w),
+            has_aux=True,
+        )(params)
+        return {
+            "grads": grads,
+            "state": new_state,
+            "loss": hard,
+            "distill_loss": soft,
+        }
+
+    params, state, tokens, probs = example_inputs(cfg)
+    return fn, {
+        "params": params,
+        "state": state,
+        "tokens": tokens,
+        "teacher_probs": probs,
+        "distill_w": jnp.zeros(()),
+    }
+
+
+def export_apply(cfg: LmConfig):
+    """Adam apply step for reduced gradients (the allreduce path)."""
+
+    def fn(params, opt, grads, lr):
+        step = opt["step"] + 1.0
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_m = jax.tree_util.tree_flatten(opt["m"])[0]
+        flat_v = jax.tree_util.tree_flatten(opt["v"])[0]
+        flat_g = jax.tree_util.tree_flatten(grads)[0]
+        new_p, new_m, new_v = [], [], []
+        for p, m, v, g in zip(flat_p, flat_m, flat_v, flat_g):
+            p2, m2, v2 = adam_update(p, m, v, g, lr, step)
+            new_p.append(p2)
+            new_m.append(m2)
+            new_v.append(v2)
+        unf = jax.tree_util.tree_unflatten
+        return {
+            "params": unf(treedef, new_p),
+            "opt": {"m": unf(treedef, new_m), "v": unf(treedef, new_v), "step": step},
+        }
+
+    params, _, _, _ = example_inputs(cfg)
+    opt = {
+        "m": _zeros_like_tree(params),
+        "v": _zeros_like_tree(params),
+        "step": jnp.zeros(()),
+    }
+    return fn, {
+        "params": params,
+        "opt": opt,
+        "grads": _zeros_like_tree(params),
+        "lr": jnp.zeros(()),
+    }
+
+
+def export_train_step(cfg: LmConfig):
+    """Fused grad+apply at the full (effective) batch — the fast path used
+    when a sync-SGD group is simulated as one large-batch step."""
+
+    grad_fn, _ = export_grad(cfg)
+    apply_fn, _ = export_apply(cfg)
+
+    def fn(params, opt, state, tokens, teacher_probs, distill_w, lr):
+        g = grad_fn(params, state, tokens, teacher_probs, distill_w)
+        upd = apply_fn(params, opt, g["grads"], lr)
+        return {
+            "params": upd["params"],
+            "opt": upd["opt"],
+            "state": g["state"],
+            "loss": g["loss"],
+            "distill_loss": g["distill_loss"],
+        }
+
+    params, state, tokens, probs = example_inputs(cfg)
+    opt = {
+        "m": _zeros_like_tree(params),
+        "v": _zeros_like_tree(params),
+        "step": jnp.zeros(()),
+    }
+    return fn, {
+        "params": params,
+        "opt": opt,
+        "state": state,
+        "tokens": tokens,
+        "teacher_probs": probs,
+        "distill_w": jnp.zeros(()),
+        "lr": jnp.zeros(()),
+    }
+
+
+def export_predict(cfg: LmConfig):
+    """Teacher forward pass: softmax probabilities for distillation.
+
+    Output layout matches the logits flattening ([T*B, V], time-major) so
+    the Rust side can feed them straight back as ``teacher_probs``.
+    """
+
+    def fn(params, state, tokens):
+        logits, _, new_state = forward(cfg, params, state, tokens)
+        return {"probs": jax.nn.softmax(logits, axis=-1), "state": new_state}
+
+    params, state, tokens, _ = example_inputs(cfg)
+    return fn, {"params": params, "state": state, "tokens": tokens}
+
+
+def export_eval(cfg: LmConfig):
+    """Validation: summed token cross entropy + count (Rust accumulates)."""
+
+    def fn(params, state, tokens):
+        logits, targets, new_state = forward(cfg, params, state, tokens)
+        xent = softmax_xent(logits, targets)
+        return {
+            "sum_loss": jnp.sum(xent),
+            "count": jnp.asarray(xent.shape[0], jnp.float32),
+            "state": new_state,
+        }
+
+    params, state, tokens, _ = example_inputs(cfg)
+    return fn, {"params": params, "state": state, "tokens": tokens}
+
+
+EXPORTS = {
+    "init": export_init,
+    "grad": export_grad,
+    "apply": export_apply,
+    "train_step": export_train_step,
+    "predict": export_predict,
+    "eval": export_eval,
+}

@@ -1,0 +1,266 @@
+"""Layer-2: decoder-only transformer LM.
+
+The paper predates transformers' dominance and trains an LSTM, but its
+codistillation recipe is architecture-agnostic (§2: "using the same
+architecture for all the models" is the only requirement). This model
+backs the end-to-end `train_e2e` example: a realistically structured
+transformer trained through the full Rust coordinator, demonstrating that
+the codistillation machinery composes with a second architecture.
+
+Pre-LN blocks, learned positional embeddings, causal attention, Adam.
+Projection/MLP matmuls and both losses lower through the Layer-1 Pallas
+kernels; the batched attention einsums use XLA's native batched matmul
+(a tiled Pallas flash-attention is TPU-profitable only at much longer
+sequence lengths than this testbed uses — see DESIGN.md §Perf).
+
+Size is set by :class:`TfmConfig`; the default is small enough to train
+a few hundred steps on CPU in minutes. ``aot.py --tfm-preset=100m``
+emits a ~100M-parameter bundle with the same interface.
+"""
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import adam_update, distill_xent, layernorm, matmul, softmax_xent
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TfmConfig:
+    vocab: int = 1024
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 512
+    batch: int = 8
+    seq: int = 32
+
+    def meta(self) -> Dict[str, str]:
+        return {
+            "model": "transformer",
+            "vocab": str(self.vocab),
+            "d_model": str(self.d_model),
+            "n_heads": str(self.n_heads),
+            "n_layers": str(self.n_layers),
+            "d_ff": str(self.d_ff),
+            "batch": str(self.batch),
+            "seq": str(self.seq),
+            "optimizer": "adam",
+        }
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# 100M-ish preset for the e2e example at full scale.
+PRESET_100M = TfmConfig(
+    vocab=32768, d_model=768, n_heads=12, n_layers=12, d_ff=3072, batch=8, seq=128
+)
+
+
+def param_count(cfg: TfmConfig) -> int:
+    per_layer = (
+        4 * cfg.d_model * cfg.d_model  # qkv + out proj
+        + 2 * cfg.d_model * cfg.d_ff  # mlp
+        + cfg.d_ff
+        + cfg.d_model  # biases (b1, b2)
+        + 4 * cfg.d_model  # 2 LNs (gain+bias)
+    )
+    return cfg.vocab * cfg.d_model + cfg.seq * cfg.d_model + cfg.n_layers * per_layer + 2 * cfg.d_model
+
+
+# ------------------------------------------------------------------- params
+
+
+def init_params(cfg: TfmConfig, seed) -> Params:
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    ks = jax.random.split(key, 2 + cfg.n_layers * 6)
+
+    def mat(k, shape):
+        lim = jnp.sqrt(6.0 / (shape[0] + shape[1]))
+        return jax.random.uniform(k, shape, minval=-lim, maxval=lim)
+
+    d = cfg.d_model
+    params: Params = {
+        "embedding": jax.random.normal(ks[0], (cfg.vocab, d)) * 0.02,
+        "pos": jax.random.normal(ks[1], (cfg.seq, d)) * 0.02,
+        "ln_f": {"gain": jnp.ones((d,)), "bias": jnp.zeros((d,))},
+    }
+    for l in range(cfg.n_layers):
+        o = 2 + l * 6
+        params[f"layer{l}"] = {
+            "wq": mat(ks[o + 0], (d, d)),
+            "wk": mat(ks[o + 1], (d, d)),
+            "wv": mat(ks[o + 2], (d, d)),
+            "wo": mat(ks[o + 3], (d, d)),
+            "w1": mat(ks[o + 4], (d, cfg.d_ff)),
+            "b1": jnp.zeros((cfg.d_ff,)),
+            "w2": mat(ks[o + 5], (cfg.d_ff, d)),
+            "b2": jnp.zeros((d,)),
+            "ln1": {"gain": jnp.ones((d,)), "bias": jnp.zeros((d,))},
+            "ln2": {"gain": jnp.ones((d,)), "bias": jnp.zeros((d,))},
+        }
+    return params
+
+
+def init_opt(params: Params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {
+        "m": zeros,
+        "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "step": jnp.zeros(()),
+    }
+
+
+# ------------------------------------------------------------------ forward
+
+
+def _ln2d(x, p):
+    """layernorm kernel over a [B*T, D]-flattened view."""
+    b, t, d = x.shape
+    return layernorm(x.reshape(b * t, d), p["gain"], p["bias"]).reshape(b, t, d)
+
+
+def _proj(x, w):
+    b, t, d = x.shape
+    return matmul(x.reshape(b * t, d), w).reshape(b, t, -1)
+
+
+def _attention(cfg: TfmConfig, p, x):
+    b, t, d = x.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    q = _proj(x, p["wq"]).reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    k = _proj(x, p["wk"]).reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    v = _proj(x, p["wv"]).reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return _proj(out, p["wo"])
+
+
+def forward(cfg: TfmConfig, params: Params, tokens):
+    """tokens: [B, T+1] i32 -> (logits [B*T, V], targets [B*T])."""
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    x = jnp.take(params["embedding"], inputs, axis=0) + params["pos"][None]
+    for l in range(cfg.n_layers):
+        p = params[f"layer{l}"]
+        x = x + _attention(cfg, p, _ln2d(x, p["ln1"]))
+        h = _ln2d(x, p["ln2"])
+        h = jax.nn.relu(_proj(h, p["w1"]) + p["b1"])
+        x = x + _proj(h, p["w2"]) + p["b2"]
+    x = _ln2d(x, params["ln_f"])
+    b, t, d = x.shape
+    logits = matmul(x.reshape(b * t, d), params["embedding"].T)  # tied softmax
+    return logits, targets.reshape(b * t)
+
+
+def loss_fn(cfg, params, tokens, teacher_probs, distill_w):
+    logits, targets = forward(cfg, params, tokens)
+    hard = jnp.mean(softmax_xent(logits, targets))
+    soft = jnp.mean(distill_xent(logits, teacher_probs))
+    return hard + distill_w * soft, (hard, soft)
+
+
+# -------------------------------------------------------------- executables
+
+
+def _zeros_like_tree(tree):
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), tree)
+
+
+def _example_params(cfg):
+    return _zeros_like_tree(
+        jax.eval_shape(lambda s: init_params(cfg, s), jnp.zeros((), jnp.int32))
+    )
+
+
+def export_init(cfg: TfmConfig):
+    def fn(seed):
+        return {"params": init_params(cfg, seed)}
+
+    return fn, {"seed": jnp.zeros((), jnp.int32)}
+
+
+def export_train_step(cfg: TfmConfig):
+    def fn(params, opt, tokens, teacher_probs, distill_w, lr):
+        (_, (hard, soft)), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, tokens, teacher_probs, distill_w),
+            has_aux=True,
+        )(params)
+        step = opt["step"] + 1.0
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_m = jax.tree_util.tree_flatten(opt["m"])[0]
+        flat_v = jax.tree_util.tree_flatten(opt["v"])[0]
+        flat_g = jax.tree_util.tree_flatten(grads)[0]
+        new_p, new_m, new_v = [], [], []
+        for p, m, v, g in zip(flat_p, flat_m, flat_v, flat_g):
+            p2, m2, v2 = adam_update(p, m, v, g, lr, step)
+            new_p.append(p2)
+            new_m.append(m2)
+            new_v.append(v2)
+        unf = jax.tree_util.tree_unflatten
+        return {
+            "params": unf(treedef, new_p),
+            "opt": {"m": unf(treedef, new_m), "v": unf(treedef, new_v), "step": step},
+            "loss": hard,
+            "distill_loss": soft,
+        }
+
+    params = _example_params(cfg)
+    return fn, {
+        "params": params,
+        "opt": {
+            "m": _zeros_like_tree(params),
+            "v": _zeros_like_tree(params),
+            "step": jnp.zeros(()),
+        },
+        "tokens": jnp.zeros((cfg.batch, cfg.seq + 1), jnp.int32),
+        "teacher_probs": jnp.zeros((cfg.batch * cfg.seq, cfg.vocab)),
+        "distill_w": jnp.zeros(()),
+        "lr": jnp.zeros(()),
+    }
+
+
+def export_predict(cfg: TfmConfig):
+    def fn(params, tokens):
+        logits, _ = forward(cfg, params, tokens)
+        return {"probs": jax.nn.softmax(logits, axis=-1)}
+
+    params = _example_params(cfg)
+    return fn, {
+        "params": params,
+        "tokens": jnp.zeros((cfg.batch, cfg.seq + 1), jnp.int32),
+    }
+
+
+def export_eval(cfg: TfmConfig):
+    def fn(params, tokens):
+        logits, targets = forward(cfg, params, tokens)
+        xent = softmax_xent(logits, targets)
+        return {
+            "sum_loss": jnp.sum(xent),
+            "count": jnp.asarray(xent.shape[0], jnp.float32),
+        }
+
+    params = _example_params(cfg)
+    return fn, {
+        "params": params,
+        "tokens": jnp.zeros((cfg.batch, cfg.seq + 1), jnp.int32),
+    }
+
+
+EXPORTS = {
+    "init": export_init,
+    "train_step": export_train_step,
+    "predict": export_predict,
+    "eval": export_eval,
+}

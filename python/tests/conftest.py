@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Make `compile` importable when pytest runs from the repo root or python/.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from hypothesis import settings
+
+# Interpret-mode pallas is slow; keep sweeps small but meaningful and kill
+# the per-example deadline (first-call tracing dominates).
+settings.register_profile("kernels", max_examples=12, deadline=None)
+settings.load_profile("kernels")

@@ -1,0 +1,62 @@
+"""layernorm kernel vs oracle: values + grads wrt x, gain, bias."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+rows = st.sampled_from([1, 2, 4, 8, 32, 96, 128, 256])
+feats = st.sampled_from([2, 4, 8, 64, 128, 256])
+
+
+def _case(seed, b, d):
+    kx, kg, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (b, d), dtype=jnp.float32) * 3.0 + 0.5
+    gain = jax.random.normal(kg, (d,), dtype=jnp.float32) * 0.2 + 1.0
+    bias = jax.random.normal(kb, (d,), dtype=jnp.float32) * 0.1
+    return x, gain, bias
+
+
+@given(b=rows, d=feats, seed=st.integers(0, 2**16))
+def test_layernorm_matches_ref(b, d, seed):
+    x, gain, bias = _case(seed, b, d)
+    np.testing.assert_allclose(
+        kernels.layernorm(x, gain, bias),
+        ref.layernorm(x, gain, bias),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+@given(b=st.sampled_from([2, 16, 64]), d=st.sampled_from([4, 32, 128]),
+       seed=st.integers(0, 2**16))
+def test_layernorm_grads_match_ref(b, d, seed):
+    x, gain, bias = _case(seed, b, d)
+
+    def lk(x, g, bb):
+        return jnp.sum(kernels.layernorm(x, g, bb) ** 2)
+
+    def lr(x, g, bb):
+        return jnp.sum(ref.layernorm(x, g, bb) ** 2)
+
+    for i in range(3):
+        gk = jax.grad(lk, argnums=i)(x, gain, bias)
+        gr = jax.grad(lr, argnums=i)(x, gain, bias)
+        np.testing.assert_allclose(gk, gr, rtol=1e-3, atol=1e-3)
+
+
+def test_layernorm_normalizes():
+    x, _, _ = _case(0, 32, 64)
+    y = kernels.layernorm(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(np.mean(np.asarray(y), axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.std(np.asarray(y), axis=-1), 1.0, atol=1e-3)
+
+
+def test_layernorm_shift_invariant():
+    x, gain, bias = _case(1, 8, 32)
+    y1 = kernels.layernorm(x, gain, bias)
+    y2 = kernels.layernorm(x + 100.0, gain, bias)
+    np.testing.assert_allclose(y1, y2, rtol=1e-3, atol=1e-3)

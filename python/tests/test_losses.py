@@ -1,0 +1,105 @@
+"""softmax_xent + distill_xent kernels vs oracles, plus the algebraic
+relationships the codistillation loss relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+batch = st.sampled_from([1, 2, 8, 32, 64])
+vocab = st.sampled_from([2, 8, 50, 128, 512])
+
+
+def _logits(seed, b, v, scale=3.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (b, v), dtype=jnp.float32) * scale
+
+
+@given(b=batch, v=vocab, seed=st.integers(0, 2**16))
+def test_softmax_xent_matches_ref(b, v, seed):
+    z = _logits(seed, b, v)
+    labels = jax.random.randint(jax.random.PRNGKey(seed + 1), (b,), 0, v)
+    np.testing.assert_allclose(
+        kernels.softmax_xent(z, labels), ref.softmax_xent(z, labels),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+@given(b=st.sampled_from([2, 16]), v=st.sampled_from([8, 64, 256]),
+       seed=st.integers(0, 2**16))
+def test_softmax_xent_grad_matches_ref(b, v, seed):
+    z = _logits(seed, b, v)
+    labels = jax.random.randint(jax.random.PRNGKey(seed + 1), (b,), 0, v)
+    gk = jax.grad(lambda z: kernels.softmax_xent(z, labels).mean())(z)
+    gr = jax.grad(lambda z: ref.softmax_xent(z, labels).mean())(z)
+    np.testing.assert_allclose(gk, gr, rtol=1e-3, atol=1e-5)
+
+
+@given(b=batch, v=vocab, seed=st.integers(0, 2**16))
+def test_distill_xent_matches_ref(b, v, seed):
+    z = _logits(seed, b, v)
+    probs = jax.nn.softmax(_logits(seed + 1, b, v))
+    np.testing.assert_allclose(
+        kernels.distill_xent(z, probs), ref.distill_xent(z, probs),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@given(b=st.sampled_from([2, 16]), v=st.sampled_from([8, 64, 256]),
+       seed=st.integers(0, 2**16))
+def test_distill_xent_grad_matches_ref(b, v, seed):
+    z = _logits(seed, b, v)
+    probs = jax.nn.softmax(_logits(seed + 1, b, v))
+    gk = jax.grad(lambda z: kernels.distill_xent(z, probs).mean())(z)
+    gr = jax.grad(lambda z: ref.distill_xent(z, probs).mean())(z)
+    np.testing.assert_allclose(gk, gr, rtol=1e-3, atol=1e-5)
+
+
+def test_distill_with_onehot_equals_hard_xent():
+    # psi with a one-hot "teacher" degenerates to the hard loss phi —
+    # the identity that lets one artifact serve both baselines.
+    b, v = 16, 32
+    z = _logits(3, b, v)
+    labels = jax.random.randint(jax.random.PRNGKey(4), (b,), 0, v)
+    onehot = jax.nn.one_hot(labels, v)
+    np.testing.assert_allclose(
+        kernels.distill_xent(z, onehot), kernels.softmax_xent(z, labels),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_distill_unnormalized_scales_gradient():
+    # Scaled teacher distribution scales both the loss and its gradient —
+    # the property the burn-in ramp (weight * probs) relies on.
+    b, v = 8, 16
+    z = _logits(5, b, v)
+    probs = jax.nn.softmax(_logits(6, b, v))
+    l1 = kernels.distill_xent(z, probs)
+    l2 = kernels.distill_xent(z, probs * 0.5)
+    np.testing.assert_allclose(l2, 0.5 * l1, rtol=1e-4, atol=1e-5)
+    g1 = jax.grad(lambda z: kernels.distill_xent(z, probs).sum())(z)
+    g2 = jax.grad(lambda z: kernels.distill_xent(z, probs * 0.5).sum())(z)
+    np.testing.assert_allclose(g2, 0.5 * g1, rtol=1e-4, atol=1e-5)
+
+
+def test_distill_minimized_at_teacher():
+    # Over a simplex-constrained softmax, psi(p_t, z) is minimized when
+    # softmax(z) == p_t; check the gradient vanishes there.
+    b, v = 4, 8
+    logits = _logits(7, b, v)
+    probs = jax.nn.softmax(logits)
+    g = jax.grad(lambda z: kernels.distill_xent(z, probs).sum())(logits)
+    np.testing.assert_allclose(g, jnp.zeros_like(g), atol=1e-5)
+
+
+def test_xent_uniform_logits():
+    # All-equal logits: loss is log(v) for every label.
+    b, v = 8, 64
+    z = jnp.zeros((b, v))
+    labels = jnp.arange(b, dtype=jnp.int32) % v
+    np.testing.assert_allclose(
+        kernels.softmax_xent(z, labels), jnp.full((b,), np.log(v)),
+        rtol=1e-5,
+    )

@@ -1,0 +1,101 @@
+"""lstm_gates kernel vs oracle: values, grads, and cell-dynamics invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+rows = st.sampled_from([1, 2, 8, 32, 128])
+hidden = st.sampled_from([1, 2, 4, 16, 64])
+
+
+def _case(seed, b, h):
+    kp, kc = jax.random.split(jax.random.PRNGKey(seed))
+    pre = jax.random.normal(kp, (b, 4 * h), dtype=jnp.float32) * 2.0
+    c = jax.random.normal(kc, (b, h), dtype=jnp.float32)
+    return pre, c
+
+
+@given(b=rows, h=hidden, seed=st.integers(0, 2**16))
+def test_lstm_gates_matches_ref(b, h, seed):
+    pre, c = _case(seed, b, h)
+    hk, ck = kernels.lstm_gates(pre, c)
+    hr, cr = ref.lstm_gates(pre, c)
+    np.testing.assert_allclose(hk, hr, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(ck, cr, rtol=1e-4, atol=1e-5)
+
+
+@given(b=st.sampled_from([2, 16]), h=st.sampled_from([2, 8, 32]),
+       seed=st.integers(0, 2**16))
+def test_lstm_gates_grads_match_ref(b, h, seed):
+    pre, c = _case(seed, b, h)
+
+    def lk(p, cc):
+        hn, cn = kernels.lstm_gates(p, cc)
+        return jnp.sum(hn**2) + jnp.sum(jnp.tanh(cn))
+
+    def lr(p, cc):
+        hn, cn = ref.lstm_gates(p, cc)
+        return jnp.sum(hn**2) + jnp.sum(jnp.tanh(cn))
+
+    for i in range(2):
+        gk = jax.grad(lk, argnums=i)(pre, c)
+        gr = jax.grad(lr, argnums=i)(pre, c)
+        np.testing.assert_allclose(gk, gr, rtol=1e-3, atol=1e-4)
+
+
+def test_hidden_state_bounded():
+    # |h| <= 1 because h = sigmoid(o) * tanh(c).
+    pre, c = _case(0, 64, 16)
+    hn, _ = kernels.lstm_gates(pre * 10.0, c * 10.0)
+    assert np.all(np.abs(np.asarray(hn)) <= 1.0 + 1e-6)
+
+
+def test_forget_gate_extremes():
+    # With f-gate pre-activation driven to -inf the old cell is erased;
+    # with +inf it is fully kept (plus the input-gate contribution).
+    b, h = 4, 8
+    pre, c = _case(1, b, h)
+    big = jnp.full((b, h), 50.0)
+    pre_keep = pre.at[:, h : 2 * h].set(big)
+    pre_drop = pre.at[:, h : 2 * h].set(-big)
+    _, c_keep = kernels.lstm_gates(pre_keep, c)
+    _, c_drop = kernels.lstm_gates(pre_drop, c)
+    i = jax.nn.sigmoid(pre[:, :h])
+    g = jnp.tanh(pre[:, 2 * h : 3 * h])
+    np.testing.assert_allclose(c_keep, c + i * g, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(c_drop, i * g, rtol=1e-4, atol=1e-5)
+
+
+def test_composed_lstm_cell_matches_ref():
+    # Full LayerNorm-LSTM cell composed from the three kernels equals the
+    # pure-jnp composed reference (value + grad wrt weights).
+    b, e, h = 8, 12, 16
+    keys = jax.random.split(jax.random.PRNGKey(7), 7)
+    x = jax.random.normal(keys[0], (b, e))
+    hp = jax.random.normal(keys[1], (b, h))
+    cp = jax.random.normal(keys[2], (b, h))
+    w = jax.random.normal(keys[3], (e + h, 4 * h)) * 0.1
+    bb = jax.random.normal(keys[4], (4 * h,)) * 0.1
+    gain = jnp.ones(4 * h) + jax.random.normal(keys[5], (4 * h,)) * 0.05
+    bias = jax.random.normal(keys[6], (4 * h,)) * 0.05
+
+    def cell_k(w, b_):
+        xa = jnp.concatenate([x, hp], axis=-1)
+        pre = kernels.matmul(xa, w) + b_
+        pre = kernels.layernorm(pre, gain, bias)
+        hn, cn = kernels.lstm_gates(pre, cp)
+        return jnp.sum(hn**2) + jnp.sum(cn)
+
+    def cell_r(w, b_):
+        hn, cn = ref.lstm_cell(x, hp, cp, w, b_, gain, bias)
+        return jnp.sum(hn**2) + jnp.sum(cn)
+
+    np.testing.assert_allclose(cell_k(w, bb), cell_r(w, bb), rtol=1e-4)
+    gw_k, gb_k = jax.grad(cell_k, argnums=(0, 1))(w, bb)
+    gw_r, gb_r = jax.grad(cell_r, argnums=(0, 1))(w, bb)
+    np.testing.assert_allclose(gw_k, gw_r, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gb_k, gb_r, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,70 @@
+"""matmul kernel vs pure-jnp oracle: values and both gradients."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+from compile.kernels.common import pick_block
+
+dims = st.sampled_from([1, 2, 3, 4, 8, 16, 24, 64, 96, 128, 160, 256])
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**16))
+def test_matmul_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    y = _rand(seed + 1, (k, n))
+    np.testing.assert_allclose(
+        kernels.matmul(x, y), ref.matmul(x, y), rtol=1e-4, atol=1e-5
+    )
+
+
+@given(m=st.sampled_from([2, 8, 32]), k=st.sampled_from([4, 16, 96]),
+       n=st.sampled_from([2, 8, 64]), seed=st.integers(0, 2**16))
+def test_matmul_grads_match_ref(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    y = _rand(seed + 1, (k, n))
+
+    def loss_k(x, y):
+        return jnp.sum(kernels.matmul(x, y) ** 2)
+
+    def loss_r(x, y):
+        return jnp.sum(ref.matmul(x, y) ** 2)
+
+    gx_k, gy_k = jax.grad(loss_k, argnums=(0, 1))(x, y)
+    gx_r, gy_r = jax.grad(loss_r, argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(gx_k, gx_r, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(gy_k, gy_r, rtol=1e-3, atol=1e-4)
+
+
+def test_matmul_identity():
+    x = _rand(0, (8, 8))
+    np.testing.assert_allclose(
+        kernels.matmul(x, jnp.eye(8)), x, rtol=1e-5, atol=1e-6
+    )
+
+
+def test_matmul_jit_compatible():
+    x = _rand(1, (16, 32))
+    y = _rand(2, (32, 8))
+    out = jax.jit(kernels.matmul)(x, y)
+    np.testing.assert_allclose(out, ref.matmul(x, y), rtol=1e-4, atol=1e-5)
+
+
+@given(dim=st.integers(1, 300), target=st.integers(1, 256))
+def test_pick_block_divides(dim, target):
+    b = pick_block(dim, target)
+    assert 1 <= b <= min(dim, target)
+    assert dim % b == 0
+
+
+def test_pick_block_power_of_two_alignment():
+    assert pick_block(256, 128) == 128
+    assert pick_block(64, 128) == 64
+    assert pick_block(96, 128) == 96

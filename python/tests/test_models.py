@@ -1,0 +1,175 @@
+"""Layer-2 model tests: shapes, semantics (EOD reset, state carry,
+distill-term identities), and short-horizon learnability in pure JAX
+before AOT lowering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model_criteo, model_images, model_lm, model_transformer
+
+
+def small_lm():
+    return model_lm.LmConfig(vocab=64, embed=8, hidden=16, layers=2, batch=4, unroll=8)
+
+
+def test_lm_init_shapes_and_determinism():
+    cfg = small_lm()
+    p1 = model_lm.init_params(cfg, jnp.asarray(3, jnp.int32))
+    p2 = model_lm.init_params(cfg, jnp.asarray(3, jnp.int32))
+    p3 = model_lm.init_params(cfg, jnp.asarray(4, jnp.int32))
+    assert p1["embedding"].shape == (64, 8)
+    assert p1["layer0"]["w"].shape == (8 + 16, 64)
+    assert p1["layer1"]["w"].shape == (16 + 16, 64)
+    assert p1["out"]["w"].shape == (16, 64)
+    np.testing.assert_array_equal(p1["embedding"], p2["embedding"])
+    assert not np.array_equal(p1["embedding"], p3["embedding"])
+    # forget-gate bias +1
+    np.testing.assert_array_equal(p1["layer0"]["b"][16:32], np.ones(16))
+
+
+def test_lm_forward_shapes_and_state_carry():
+    cfg = small_lm()
+    params = model_lm.init_params(cfg, jnp.asarray(0, jnp.int32))
+    state = model_lm.init_state(cfg)
+    tokens = jnp.ones((cfg.batch, cfg.unroll + 1), jnp.int32) * 5
+    logits, targets, new_state = model_lm.forward(cfg, params, state, tokens)
+    assert logits.shape == (cfg.unroll * cfg.batch, cfg.vocab)
+    assert targets.shape == (cfg.unroll * cfg.batch,)
+    assert new_state["h"].shape == (cfg.layers, cfg.batch, cfg.hidden)
+    # state actually changes
+    assert not np.allclose(new_state["h"], state["h"])
+    # and feeding the carried state changes the next forward's output
+    logits2a, _, _ = model_lm.forward(cfg, params, new_state, tokens)
+    logits2b, _, _ = model_lm.forward(cfg, params, state, tokens)
+    assert not np.allclose(logits2a, logits2b)
+
+
+def test_lm_eod_resets_state():
+    cfg = small_lm()
+    params = model_lm.init_params(cfg, jnp.asarray(0, jnp.int32))
+    # random nonzero state
+    key = jax.random.PRNGKey(1)
+    state = {
+        "h": jax.random.normal(key, (cfg.layers, cfg.batch, cfg.hidden)),
+        "c": jax.random.normal(key, (cfg.layers, cfg.batch, cfg.hidden)),
+    }
+    zero_state = model_lm.init_state(cfg)
+    # first input token is EOD -> state is zeroed before the first cell
+    eod_first = jnp.full((cfg.batch, cfg.unroll + 1), 7, jnp.int32)
+    eod_first = eod_first.at[:, 0].set(cfg.eod_id)
+    la, _, _ = model_lm.forward(cfg, params, state, eod_first)
+    lb, _, _ = model_lm.forward(cfg, params, zero_state, eod_first)
+    np.testing.assert_allclose(la, lb, rtol=1e-5, atol=1e-6)
+    # without EOD the states matter
+    no_eod = jnp.full((cfg.batch, cfg.unroll + 1), 7, jnp.int32)
+    la2, _, _ = model_lm.forward(cfg, params, state, no_eod)
+    lb2, _, _ = model_lm.forward(cfg, params, zero_state, no_eod)
+    assert not np.allclose(la2, lb2)
+
+
+def test_lm_distill_zero_weight_is_plain_loss():
+    cfg = small_lm()
+    params = model_lm.init_params(cfg, jnp.asarray(0, jnp.int32))
+    state = model_lm.init_state(cfg)
+    key = jax.random.PRNGKey(2)
+    tokens = jax.random.randint(key, (cfg.batch, cfg.unroll + 1), 3, cfg.vocab)
+    probs = jax.nn.softmax(jax.random.normal(key, (cfg.unroll * cfg.batch, cfg.vocab)))
+    l0, (hard0, _, _) = model_lm.loss_fn(cfg, params, state, tokens, probs, jnp.float32(0.0))
+    np.testing.assert_allclose(l0, hard0, rtol=1e-6)
+    l1, (hard1, soft1, _) = model_lm.loss_fn(cfg, params, state, tokens, probs, jnp.float32(0.5))
+    np.testing.assert_allclose(l1, hard1 + 0.5 * soft1, rtol=1e-6)
+
+
+def test_lm_learns_constant_sequence():
+    # A few Adam steps on a repetitive sequence should slash the loss.
+    cfg = small_lm()
+    init_fn, _ = model_lm.export_init(cfg)
+    params = init_fn(jnp.asarray(1, jnp.int32))["params"]
+    state = model_lm.init_state(cfg)
+    opt = model_lm.init_opt(params)
+    tokens = jnp.tile(jnp.arange(3, 3 + cfg.unroll + 1, dtype=jnp.int32), (cfg.batch, 1))
+    probs = jnp.zeros((cfg.unroll * cfg.batch, cfg.vocab))
+
+    fn, _ = model_lm.export_train_step(cfg)
+    step = jax.jit(fn)
+    first = None
+    for _ in range(30):
+        out = step(params, opt, state, tokens, probs, jnp.float32(0.0), jnp.float32(0.01))
+        params, opt, state = out["params"], out["opt"], out["state"]
+        if first is None:
+            first = float(out["loss"])
+    last = float(out["loss"])
+    assert last < first * 0.7, f"{first} -> {last}"
+
+
+def test_criteo_two_class_identity():
+    cfg = model_criteo.CriteoConfig(buckets=10, batch=4)
+    params = model_criteo.init_params(cfg, jnp.asarray(0, jnp.int32))
+    dense = jnp.ones((4, cfg.n_dense))
+    cat = jnp.zeros((4, cfg.n_cat), jnp.int32)
+    logits = model_criteo.forward(cfg, params, dense, cat)
+    assert logits.shape == (4,)
+    # sigmoid(z) == softmax([0, z])[1]
+    z2 = model_criteo._two_class(logits)
+    np.testing.assert_allclose(
+        jax.nn.sigmoid(logits), jax.nn.softmax(z2, axis=-1)[:, 1], rtol=1e-5
+    )
+
+
+def test_criteo_embedding_offsets_separate_fields():
+    cfg = model_criteo.CriteoConfig(buckets=10, batch=2)
+    params = model_criteo.init_params(cfg, jnp.asarray(0, jnp.int32))
+    dense = jnp.zeros((2, cfg.n_dense))
+    # same bucket id in different fields must hit different embeddings
+    cat_a = jnp.zeros((2, cfg.n_cat), jnp.int32)
+    cat_b = cat_a.at[:, 1].set(0).at[:, 0].set(0)
+    cat_c = cat_a.at[:, 0].set(1)
+    la = model_criteo.forward(cfg, params, dense, cat_a)
+    lc = model_criteo.forward(cfg, params, dense, cat_c)
+    assert not np.allclose(la, lc)
+    np.testing.assert_allclose(
+        la, model_criteo.forward(cfg, params, dense, cat_b), rtol=1e-6
+    )
+
+
+def test_images_forward_and_loss():
+    cfg = model_images.ImagesConfig(size=8, batch=4)
+    params = model_images.init_params(cfg, jnp.asarray(0, jnp.int32))
+    images = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 8, 3))
+    logits = model_images.forward(cfg, params, images)
+    assert logits.shape == (4, cfg.classes)
+    labels = jnp.array([0, 1, 2, 3], jnp.int32)
+    probs = jnp.full((4, cfg.classes), 0.1)
+    loss, (hard, soft) = model_images.loss_fn(
+        cfg, params, images, labels, probs, jnp.float32(0.25)
+    )
+    np.testing.assert_allclose(loss, hard + 0.25 * soft, rtol=1e-6)
+
+
+def test_transformer_causality():
+    cfg = model_transformer.TfmConfig(
+        vocab=32, d_model=16, n_heads=2, n_layers=1, d_ff=32, batch=2, seq=8
+    )
+    params = model_transformer.init_params(cfg, jnp.asarray(0, jnp.int32))
+    key = jax.random.PRNGKey(3)
+    tokens = jax.random.randint(key, (2, cfg.seq + 1), 0, 32)
+    logits, _ = model_transformer.forward(cfg, params, tokens)
+    logits = logits.reshape(2, cfg.seq, 32)
+    # Changing a future token must not change past logits.
+    tokens2 = tokens.at[:, cfg.seq - 1].set((tokens[:, cfg.seq - 1] + 1) % 32)
+    logits2, _ = model_transformer.forward(cfg, params, tokens2)
+    logits2 = logits2.reshape(2, cfg.seq, 32)
+    np.testing.assert_allclose(
+        logits[:, : cfg.seq - 2], logits2[:, : cfg.seq - 2], rtol=1e-4, atol=1e-5
+    )
+    assert not np.allclose(logits[:, cfg.seq - 1], logits2[:, cfg.seq - 1])
+
+
+def test_transformer_param_count_formula():
+    cfg = model_transformer.TfmConfig()
+    params = model_transformer.init_params(cfg, jnp.asarray(0, jnp.int32))
+    actual = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    assert actual == model_transformer.param_count(cfg)
+    # the 100m preset really is ~100M
+    assert 8e7 < model_transformer.param_count(model_transformer.PRESET_100M) < 1.6e8

@@ -1,0 +1,79 @@
+"""Fused optimizer kernels vs oracles + multi-step trajectory equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+shapes = st.sampled_from([(3,), (7, 13), (4, 8, 2), (128,), (96, 5)])
+
+
+def _tensors(seed, shape):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    p = jax.random.normal(ks[0], shape, dtype=jnp.float32)
+    g = jax.random.normal(ks[1], shape, dtype=jnp.float32)
+    aux = jnp.abs(jax.random.normal(ks[2], shape, dtype=jnp.float32))
+    return p, g, aux
+
+
+@given(shape=shapes, seed=st.integers(0, 2**16),
+       step=st.integers(1, 1000), lr=st.sampled_from([1e-4, 1e-2, 0.3]))
+def test_adam_matches_ref(shape, seed, step, lr):
+    p, g, _ = _tensors(seed, shape)
+    m = jnp.zeros_like(p) + 0.1
+    v = jnp.zeros_like(p) + 0.2
+    got = kernels.adam_update(p, m, v, g, jnp.float32(lr), jnp.float32(step))
+    want = ref.adam_update(p, m, v, g, lr, 0.9, 0.999, 1e-8, float(step))
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+
+@given(shape=shapes, seed=st.integers(0, 2**16),
+       lr=st.sampled_from([1e-3, 1e-2]))
+def test_adagrad_matches_ref(shape, seed, lr):
+    p, g, acc = _tensors(seed, shape)
+    got = kernels.adagrad_update(p, acc, g, jnp.float32(lr))
+    want = ref.adagrad_update(p, acc, g, lr, 1e-10)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+
+@given(shape=shapes, seed=st.integers(0, 2**16),
+       lr=st.sampled_from([1e-2, 0.1]))
+def test_momentum_matches_ref(shape, seed, lr):
+    p, g, vel = _tensors(seed, shape)
+    got = kernels.momentum_update(p, vel, g, jnp.float32(lr))
+    want = ref.momentum_update(p, vel, g, lr, 0.9)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+
+def test_adam_trajectory_decreases_quadratic():
+    # 20 Adam steps on f(p) = |p|^2 shrink the norm.
+    p = jnp.array([2.0, -3.0, 1.5, 4.0])
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    n0 = float(jnp.linalg.norm(p))
+    for t in range(1, 21):
+        g = 2.0 * p
+        p, m, v = kernels.adam_update(p, m, v, g, jnp.float32(0.1), jnp.float32(t))
+    assert float(jnp.linalg.norm(p)) < n0 * 0.5
+
+
+def test_adagrad_accumulator_monotone():
+    p, g, acc = _tensors(0, (32,))
+    _, acc2 = kernels.adagrad_update(p, acc, g, jnp.float32(0.01))
+    assert np.all(np.asarray(acc2) >= np.asarray(acc) - 1e-7)
+
+
+def test_momentum_accumulates_direction():
+    # Constant gradient: velocity converges toward g / (1 - mu).
+    p = jnp.zeros((8,))
+    vel = jnp.zeros((8,))
+    g = jnp.ones((8,))
+    for _ in range(60):
+        p, vel = kernels.momentum_update(p, vel, g, jnp.float32(0.0))
+    np.testing.assert_allclose(vel, jnp.full((8,), 1.0 / (1.0 - 0.9)), rtol=1e-2)

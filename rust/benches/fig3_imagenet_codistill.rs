@@ -1,0 +1,21 @@
+//! cargo-bench wrapper for the `fig3` experiment (harness=false).
+//!
+//! Runs a scaled-down-but-representative configuration by default so the
+//! whole bench suite completes in minutes; pass key=value args after
+//! `cargo bench --bench fig3_imagenet_codistill -- ` to override (e.g. steps=600 for the
+//! full EXPERIMENTS.md configuration).
+
+use codistill::config::Settings;
+
+fn main() {
+    let mut s = Settings::new();
+    for kv in ["steps=200", "eval_every=25", "burn_in=60", ] {
+        s.apply(kv).unwrap();
+    }
+    for kv in std::env::args().skip(1).filter(|a| a.contains('=')) {
+        s.apply(&kv).unwrap();
+    }
+    let t0 = std::time::Instant::now();
+    codistill::experiments::fig3::run(&s).expect("fig3 failed");
+    println!("[bench:fig3_imagenet_codistill] completed in {:.1}s", t0.elapsed().as_secs_f64());
+}

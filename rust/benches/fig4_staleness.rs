@@ -1,0 +1,21 @@
+//! cargo-bench wrapper for the `fig4` experiment (harness=false).
+//!
+//! Runs a scaled-down-but-representative configuration by default so the
+//! whole bench suite completes in minutes; pass key=value args after
+//! `cargo bench --bench fig4_staleness -- ` to override (e.g. steps=600 for the
+//! full EXPERIMENTS.md configuration).
+
+use codistill::config::Settings;
+
+fn main() {
+    let mut s = Settings::new();
+    for kv in ["steps=120", "eval_every=20", "burn_in=40", "ramp=20", "intervals=10,25,50", ] {
+        s.apply(kv).unwrap();
+    }
+    for kv in std::env::args().skip(1).filter(|a| a.contains('=')) {
+        s.apply(&kv).unwrap();
+    }
+    let t0 = std::time::Instant::now();
+    codistill::experiments::fig4::run(&s).expect("fig4 failed");
+    println!("[bench:fig4_staleness] completed in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,137 @@
+//! Hot-path microbenchmarks (harness=false): the numbers behind
+//! EXPERIMENTS.md §Perf.
+//!
+//! Measures, per layer-3 hot spot:
+//!   * fused `train_step` latency (the floor set by L1/L2);
+//!   * teacher `predict` latency (codistillation's extra forward pass —
+//!     the paper argues this is nearly free; here we print the ratio);
+//!   * allreduce strategies (naive vs tree) at LM-gradient sizes;
+//!   * tensor<->literal boundary cost (runtime overhead);
+//!   * explicit sync-SGD group step vs fused equivalent (coordinator
+//!     overhead).
+
+use codistill::codistill::Member;
+use codistill::config::Settings;
+use codistill::data::corpus::Batcher;
+use codistill::data::shard::{ShardMode, ShardPlan};
+use codistill::experiments::common::{corpus_for, lm_member, open_bundle};
+use codistill::models::lm::{LmSyncGroup, SmoothingMode};
+use codistill::runtime::{Tensor, TensorMap};
+use codistill::sgd::allreduce::{allreduce_mean, ReduceStrategy};
+use std::time::Instant;
+
+fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..n {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / n as f64
+}
+
+fn main() {
+    let mut s = Settings::new();
+    for kv in std::env::args().skip(1).filter(|a| a.contains('=')) {
+        s.apply(&kv).unwrap();
+    }
+    let iters = s.usize_or("iters", 10).unwrap();
+
+    // ---- train_step + predict latency (fused member).
+    let bundle = open_bundle(&s, "lm_b64").expect("artifacts missing: run make artifacts");
+    let plan = ShardPlan::new(1, 64, ShardMode::Disjoint);
+    let mut member = lm_member(&bundle, &plan, 0, 7, 1, SmoothingMode::None, 2).unwrap();
+    member.train_step(0.0, 0.03).unwrap(); // warmup/compile
+    let t_step = time_n(iters, || {
+        member.train_step(0.0, 0.03).unwrap();
+    });
+    println!("train_step(b=64):        {:>8.2} ms", t_step * 1e3);
+
+    let corpus = corpus_for(&bundle).unwrap();
+    let streams: Vec<u64> = (500..564).collect();
+    let mut batcher = Batcher::new(&corpus, 7, &streams, 16);
+    let tokens = batcher.next_batch().unwrap();
+    member.predict_probs(&tokens).unwrap();
+    let t_pred = time_n(iters, || {
+        member.predict_probs(&tokens).unwrap();
+    });
+    println!(
+        "teacher predict(b=64):   {:>8.2} ms  ({:.0}% of a train step; paper: \"worst case ~50%\")",
+        t_pred * 1e3,
+        100.0 * t_pred / t_step
+    );
+
+    // ---- codistillation step (train + teacher forward).
+    let mut a = lm_member(&bundle, &plan, 0, 9, 1, SmoothingMode::None, 2).unwrap();
+    let b = lm_member(&bundle, &plan, 0, 9, 2, SmoothingMode::None, 2).unwrap();
+    a.set_fixed_teachers(vec![std::sync::Arc::new(b.snapshot().unwrap())])
+        .unwrap();
+    a.train_step(1.0, 0.03).unwrap();
+    let t_codist = time_n(iters, || {
+        a.train_step(1.0, 0.03).unwrap();
+    });
+    println!(
+        "codistill step(b=64):    {:>8.2} ms  ({:.2}x baseline step)",
+        t_codist * 1e3,
+        t_codist / t_step
+    );
+
+    // ---- allreduce strategies at paper-ish gradient sizes.
+    for (workers, numel) in [(8usize, 65_536usize), (32, 65_536), (8, 1_048_576)] {
+        let make = || -> Vec<TensorMap> {
+            (0..workers)
+                .map(|w| {
+                    let mut m = TensorMap::new();
+                    m.insert(
+                        "grads.w",
+                        Tensor::f32(&[numel], vec![w as f32; numel]).unwrap(),
+                    );
+                    m
+                })
+                .collect()
+        };
+        let t_naive = time_n(5, || {
+            allreduce_mean(make(), "grads.", ReduceStrategy::Naive).unwrap();
+        });
+        let t_tree = time_n(5, || {
+            allreduce_mean(make(), "grads.", ReduceStrategy::Tree).unwrap();
+        });
+        println!(
+            "allreduce w={workers:<2} n={numel:>8}: naive {:>7.2} ms, tree {:>7.2} ms ({:.2}x)",
+            t_naive * 1e3,
+            t_tree * 1e3,
+            t_naive / t_tree
+        );
+    }
+
+    // ---- tensor <-> literal boundary.
+    let big = Tensor::f32(&[1_048_576], vec![1.0; 1_048_576]).unwrap();
+    let t_lit = time_n(50, || {
+        let _ = big.to_literal().unwrap();
+    });
+    println!("to_literal(4 MB):        {:>8.2} ms", t_lit * 1e3);
+
+    // ---- explicit allreduce group step vs fused equivalent.
+    let worker_bundle = open_bundle(&s, "lm_w8").unwrap();
+    let group_streams: Vec<u64> = (0..64).collect();
+    let val_streams: Vec<u64> = (2_000_000..2_000_064).collect();
+    let mut group = LmSyncGroup::new(
+        &worker_bundle,
+        &bundle,
+        7,
+        1,
+        8,
+        &group_streams,
+        &val_streams,
+        &corpus,
+        2,
+    )
+    .unwrap();
+    group.train_step(0.0, 0.03).unwrap();
+    let t_group = time_n(iters.min(5), || {
+        group.train_step(0.0, 0.03).unwrap();
+    });
+    println!(
+        "sync group step (8x b=8):{:>8.2} ms  (coordinator overhead vs fused: {:.2}x)",
+        t_group * 1e3,
+        t_group / t_step
+    );
+}

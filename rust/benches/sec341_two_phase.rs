@@ -1,0 +1,21 @@
+//! cargo-bench wrapper for the `sec341` experiment (harness=false).
+//!
+//! Runs a scaled-down-but-representative configuration by default so the
+//! whole bench suite completes in minutes; pass key=value args after
+//! `cargo bench --bench sec341_two_phase -- ` to override (e.g. steps=600 for the
+//! full EXPERIMENTS.md configuration).
+
+use codistill::config::Settings;
+
+fn main() {
+    let mut s = Settings::new();
+    for kv in ["phase1_steps=120", "phase2_steps=60", "codist_steps=180", "burn_in=40", ] {
+        s.apply(kv).unwrap();
+    }
+    for kv in std::env::args().skip(1).filter(|a| a.contains('=')) {
+        s.apply(&kv).unwrap();
+    }
+    let t0 = std::time::Instant::now();
+    codistill::experiments::two_phase::run(&s).expect("sec341 failed");
+    println!("[bench:sec341_two_phase] completed in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,21 @@
+//! cargo-bench wrapper for the `table1` experiment (harness=false).
+//!
+//! Runs a scaled-down-but-representative configuration by default so the
+//! whole bench suite completes in minutes; pass key=value args after
+//! `cargo bench --bench table1_churn -- ` to override (e.g. steps=600 for the
+//! full EXPERIMENTS.md configuration).
+
+use codistill::config::Settings;
+
+fn main() {
+    let mut s = Settings::new();
+    for kv in ["repeats=1", "steps=150", "burn_in=40", "reload=15", ] {
+        s.apply(kv).unwrap();
+    }
+    for kv in std::env::args().skip(1).filter(|a| a.contains('=')) {
+        s.apply(&kv).unwrap();
+    }
+    let t0 = std::time::Instant::now();
+    codistill::experiments::table1::run(&s).expect("table1 failed");
+    println!("[bench:table1_churn] completed in {:.1}s", t0.elapsed().as_secs_f64());
+}

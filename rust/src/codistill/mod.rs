@@ -1,0 +1,67 @@
+//! The paper's contribution: codistillation as a distributed training
+//! algorithm (Algorithm 1 + §2.1).
+//!
+//! `n` members (each a model copy, or a whole sync-SGD worker group) train
+//! in parallel; after a burn-in period each member adds
+//! `ψ(mean_{j≠i} F(θ_j, x), F(θ_i, x))` to its loss, where the `θ_j` are
+//! **stale** copies read from a checkpoint store on a configurable reload
+//! interval. Prediction staleness is the delay-tolerant communication
+//! channel that lets the algorithm scale past sync-SGD's limits.
+
+pub mod orchestrator;
+pub mod schedule;
+pub mod store;
+pub mod topology;
+
+pub use orchestrator::{Orchestrator, OrchestratorConfig, RunLog};
+pub use schedule::{DistillSchedule, LrSchedule};
+pub use store::{Checkpoint, CheckpointStore};
+pub use topology::Topology;
+
+use crate::runtime::TensorMap;
+use anyhow::Result;
+
+/// Per-step statistics reported by a member.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    /// Member-local step index (1-based after the step completes).
+    pub step: u64,
+    /// Hard-label loss φ (mean over the batch).
+    pub loss: f32,
+    /// Distillation loss ψ (mean over the batch; 0 when disabled).
+    pub distill_loss: f32,
+}
+
+/// Validation statistics.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalStats {
+    /// Mean per-example (or per-token) validation loss.
+    pub loss: f64,
+    /// Top-1 accuracy where defined (images), else None.
+    pub accuracy: Option<f64>,
+}
+
+/// One codistilling participant: a model copy plus its data shard,
+/// optimizer state, and locally-held stale teacher copies.
+pub trait Member {
+    /// Run one training step. `distill_w` is the ψ weight for this step
+    /// (0 during burn-in); `lr` comes from the orchestrator's schedule.
+    fn train_step(&mut self, distill_w: f32, lr: f32) -> Result<StepStats>;
+
+    /// Snapshot current parameters for publication to the store.
+    fn snapshot(&self) -> Result<Checkpoint>;
+
+    /// Install stale peer checkpoints as this member's teachers. The
+    /// member averages the teachers' predictions when computing ψ
+    /// (Algorithm 1's `1/(N-1) Σ_{j≠i}`).
+    fn set_teachers(&mut self, peers: Vec<std::sync::Arc<Checkpoint>>) -> Result<()>;
+
+    /// Evaluate on the member's validation stream.
+    fn evaluate(&mut self) -> Result<EvalStats>;
+
+    /// Steps taken so far.
+    fn steps_done(&self) -> u64;
+
+    /// Current parameters (for churn measurement and tests).
+    fn params(&self) -> &TensorMap;
+}

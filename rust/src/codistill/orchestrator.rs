@@ -1,0 +1,239 @@
+//! The codistillation orchestrator: drives N members, the checkpoint
+//! exchange, the burn-in/ramp schedule, validation, and the simulated wall
+//! clock. This is Algorithm 1 at system scale — each "member" is a whole
+//! synchronous-SGD worker group in the scalability experiments.
+
+use crate::codistill::schedule::{DistillSchedule, LrSchedule};
+use crate::codistill::store::CheckpointStore;
+use crate::codistill::topology::Topology;
+use crate::codistill::{EvalStats, Member};
+use crate::netsim::ClusterModel;
+use crate::prng::Pcg64;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Orchestration parameters.
+#[derive(Debug, Clone)]
+pub struct OrchestratorConfig {
+    pub total_steps: u64,
+    /// Checkpoint publish + reload interval in steps (paper Fig 4: 50 is
+    /// safe; larger degrades mildly).
+    pub reload_interval: u64,
+    /// Extra staleness injected on reads, in steps (0 = freshest
+    /// available). Models slow checkpoint propagation.
+    pub extra_staleness: u64,
+    pub eval_every: u64,
+    pub distill: DistillSchedule,
+    pub lr: LrSchedule,
+    pub topology: Topology,
+    /// Wall-clock model for the cluster hosting ONE member (each member is
+    /// a worker group; groups run concurrently, so the run's wall time is
+    /// the max over members — here: identical models, so one clock).
+    pub cluster: Option<ClusterModel>,
+    /// Seed for the straggler-sampling stream.
+    pub seed: u64,
+    /// Print progress lines.
+    pub verbose: bool,
+}
+
+impl Default for OrchestratorConfig {
+    fn default() -> Self {
+        OrchestratorConfig {
+            total_steps: 400,
+            reload_interval: 50,
+            extra_staleness: 0,
+            eval_every: 25,
+            distill: DistillSchedule::new(100, 50, 1.0),
+            lr: LrSchedule::Constant(0.1),
+            topology: Topology::Pair,
+            cluster: None,
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// One point on a member's validation curve.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalPoint {
+    pub step: u64,
+    pub wall_s: f64,
+    pub loss: f64,
+    pub accuracy: Option<f64>,
+}
+
+/// Full record of an orchestrated run.
+#[derive(Debug, Clone, Default)]
+pub struct RunLog {
+    /// Per-member validation curves.
+    pub eval: Vec<Vec<EvalPoint>>,
+    /// (step, member, train loss, distill loss).
+    pub train: Vec<(u64, usize, f32, f32)>,
+    /// Total simulated wall seconds (0 when no cluster model).
+    pub wall_s: f64,
+    /// Observed teacher staleness at *usage* time: one sample per member
+    /// per step while teachers are installed (step, member, staleness).
+    pub staleness: Vec<(u64, usize, u64)>,
+}
+
+impl RunLog {
+    /// First step at which a member's validation loss reaches `target`.
+    pub fn steps_to_target(&self, member: usize, target: f64) -> Option<u64> {
+        self.eval
+            .get(member)?
+            .iter()
+            .find(|p| p.loss <= target)
+            .map(|p| p.step)
+    }
+
+    /// Best (minimum) validation loss for a member.
+    pub fn best_loss(&self, member: usize) -> Option<f64> {
+        self.eval
+            .get(member)?
+            .iter()
+            .map(|p| p.loss)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Mean final validation loss over members.
+    pub fn final_mean_loss(&self) -> Option<f64> {
+        let finals: Vec<f64> = self
+            .eval
+            .iter()
+            .filter_map(|curve| curve.last().map(|p| p.loss))
+            .collect();
+        if finals.is_empty() {
+            None
+        } else {
+            Some(finals.iter().sum::<f64>() / finals.len() as f64)
+        }
+    }
+}
+
+/// Drives members in lockstep. Members run their steps sequentially in
+/// process but model *concurrent* groups: the wall clock advances by the
+/// max step time over members, not the sum.
+pub struct Orchestrator {
+    cfg: OrchestratorConfig,
+    store: Arc<CheckpointStore>,
+}
+
+impl Orchestrator {
+    pub fn new(cfg: OrchestratorConfig) -> Self {
+        Orchestrator {
+            cfg,
+            store: Arc::new(CheckpointStore::new(8)),
+        }
+    }
+
+    pub fn with_store(cfg: OrchestratorConfig, store: Arc<CheckpointStore>) -> Self {
+        Orchestrator { cfg, store }
+    }
+
+    pub fn store(&self) -> &Arc<CheckpointStore> {
+        &self.store
+    }
+
+    /// Run the full schedule over the given members.
+    pub fn run(&self, members: &mut [Box<dyn Member>]) -> Result<RunLog> {
+        let n = members.len();
+        let cfg = &self.cfg;
+        let mut log = RunLog {
+            eval: vec![Vec::new(); n],
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(cfg.seed ^ 0xc0d15711);
+        let mut wall = 0.0f64;
+        // freshest installed teacher checkpoint step, per member
+        let mut installed: Vec<Option<u64>> = vec![None; n];
+
+        // Initial publication so teachers exist from the first reload.
+        for (i, m) in members.iter().enumerate() {
+            let mut ck = m.snapshot()?;
+            ck.member = i;
+            self.store.publish(ck)?;
+        }
+
+        for step in 0..cfg.total_steps {
+            let distill_w = cfg.distill.weight_at(step);
+            let lr = cfg.lr.at(step);
+
+            // Reload teachers on the exchange cadence, right before the ψ
+            // term first becomes active and every interval thereafter.
+            if step % cfg.reload_interval == 0 && n > 1 {
+                for i in 0..n {
+                    let teacher_ids = cfg.topology.teachers_of(i, n);
+                    let mut peers = Vec::with_capacity(teacher_ids.len());
+                    for j in teacher_ids {
+                        let ck = if cfg.extra_staleness > 0 {
+                            let bound = step.saturating_sub(cfg.extra_staleness);
+                            self.store
+                                .latest_at_most(j, bound)
+                                .or_else(|| self.store.latest_at_most(j, u64::MAX))
+                        } else {
+                            self.store.latest(j)
+                        };
+                        let ck = ck.with_context(|| format!("no checkpoint for member {j}"))?;
+                        peers.push(ck);
+                    }
+                    installed[i] = peers.iter().map(|c| c.step).max();
+                    members[i].set_teachers(peers)?;
+                }
+            }
+
+            // One step per member (modelled as concurrent groups).
+            let mut max_step_time = 0.0f64;
+            for (i, m) in members.iter_mut().enumerate() {
+                if let Some(tstep) = installed[i] {
+                    log.staleness.push((step, i, step.saturating_sub(tstep)));
+                }
+                let stats = m.train_step(distill_w, lr)?;
+                log.train.push((step, i, stats.loss, stats.distill_loss));
+                if let Some(cluster) = &cfg.cluster {
+                    max_step_time = max_step_time.max(cluster.step_time(&mut rng));
+                }
+            }
+            wall += max_step_time;
+
+            // Publish on the same cadence (offset so a publish at step k is
+            // visible to reloads at step k+interval, i.e. one-interval
+            // staleness floor, like the paper's asynchronous exchange).
+            if (step + 1) % cfg.reload_interval == 0 {
+                for (i, m) in members.iter().enumerate() {
+                    let mut ck = m.snapshot()?;
+                    ck.member = i;
+                    ck.step = step + 1;
+                    self.store.publish(ck)?;
+                }
+                if let Some(cluster) = &cfg.cluster {
+                    // Checkpoint write+read amortized over the interval.
+                    wall += cluster.checkpoint_exchange_time();
+                }
+            }
+
+            if (step + 1) % cfg.eval_every == 0 || step + 1 == cfg.total_steps {
+                for (i, m) in members.iter_mut().enumerate() {
+                    let EvalStats { loss, accuracy } = m.evaluate()?;
+                    log.eval[i].push(EvalPoint {
+                        step: step + 1,
+                        wall_s: wall,
+                        loss,
+                        accuracy,
+                    });
+                    if cfg.verbose {
+                        let acc = accuracy
+                            .map(|a| format!(" acc={a:.4}"))
+                            .unwrap_or_default();
+                        eprintln!(
+                            "[orch] step {:>6} member {} val_loss={loss:.4}{acc} w={distill_w:.2}",
+                            step + 1,
+                            i
+                        );
+                    }
+                }
+            }
+        }
+        log.wall_s = wall;
+        Ok(log)
+    }
+}

@@ -1,0 +1,137 @@
+//! Training schedules.
+//!
+//! * [`DistillSchedule`]: the paper enables ψ "once training has gotten off
+//!   the ground" (§2) — weight 0 for `burn_in` steps, then a linear ramp to
+//!   the target weight over `ramp` steps (avoiding the "complicated loss
+//!   function schedule" the paper warns about: two numbers, not a curve).
+//! * [`LrSchedule`]: constant, or the Goyal et al. warmup + step-decay used
+//!   by the ImageNet experiments.
+
+/// Distillation-weight schedule: burn-in, then linear ramp to `weight`.
+#[derive(Debug, Clone, Copy)]
+pub struct DistillSchedule {
+    pub burn_in: u64,
+    pub ramp: u64,
+    pub weight: f32,
+}
+
+impl DistillSchedule {
+    pub fn new(burn_in: u64, ramp: u64, weight: f32) -> Self {
+        DistillSchedule {
+            burn_in,
+            ramp,
+            weight,
+        }
+    }
+
+    /// A schedule that never enables distillation (baselines).
+    pub fn off() -> Self {
+        DistillSchedule {
+            burn_in: u64::MAX,
+            ramp: 0,
+            weight: 0.0,
+        }
+    }
+
+    /// ψ weight at a given step.
+    pub fn weight_at(&self, step: u64) -> f32 {
+        if step < self.burn_in {
+            return 0.0;
+        }
+        if self.ramp == 0 {
+            return self.weight;
+        }
+        let into = (step - self.burn_in).min(self.ramp) as f32;
+        self.weight * into / self.ramp as f32
+    }
+
+    pub fn enabled_at(&self, step: u64) -> bool {
+        self.weight_at(step) > 0.0
+    }
+}
+
+/// Learning-rate schedule.
+#[derive(Debug, Clone)]
+pub enum LrSchedule {
+    Constant(f32),
+    /// Goyal et al.: linear warmup from `base/warmup` to `base` over
+    /// `warmup` steps, then ×`decay` at each milestone.
+    WarmupStep {
+        base: f32,
+        warmup: u64,
+        milestones: Vec<u64>,
+        decay: f32,
+    },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: u64) -> f32 {
+        match self {
+            LrSchedule::Constant(lr) => *lr,
+            LrSchedule::WarmupStep {
+                base,
+                warmup,
+                milestones,
+                decay,
+            } => {
+                if step < *warmup {
+                    return base * (step + 1) as f32 / *warmup as f32;
+                }
+                let hits = milestones.iter().filter(|&&m| step >= m).count() as i32;
+                base * decay.powi(hits)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distill_burn_in_then_ramp() {
+        let s = DistillSchedule::new(100, 50, 1.0);
+        assert_eq!(s.weight_at(0), 0.0);
+        assert_eq!(s.weight_at(99), 0.0);
+        assert_eq!(s.weight_at(100), 0.0); // ramp starts at 0
+        assert!((s.weight_at(125) - 0.5).abs() < 1e-6);
+        assert_eq!(s.weight_at(150), 1.0);
+        assert_eq!(s.weight_at(10_000), 1.0);
+        assert!(!s.enabled_at(50));
+        assert!(s.enabled_at(150));
+    }
+
+    #[test]
+    fn distill_no_ramp_is_step_function() {
+        let s = DistillSchedule::new(10, 0, 0.7);
+        assert_eq!(s.weight_at(9), 0.0);
+        assert_eq!(s.weight_at(10), 0.7);
+    }
+
+    #[test]
+    fn distill_off_never_enables() {
+        let s = DistillSchedule::off();
+        assert_eq!(s.weight_at(u64::MAX - 1), 0.0);
+    }
+
+    #[test]
+    fn lr_constant() {
+        assert_eq!(LrSchedule::Constant(0.1).at(12345), 0.1);
+    }
+
+    #[test]
+    fn lr_warmup_and_decay() {
+        let s = LrSchedule::WarmupStep {
+            base: 1.0,
+            warmup: 10,
+            milestones: vec![100, 200],
+            decay: 0.1,
+        };
+        assert!((s.at(0) - 0.1).abs() < 1e-6);
+        assert!((s.at(4) - 0.5).abs() < 1e-6);
+        assert!((s.at(10) - 1.0).abs() < 1e-6);
+        assert!((s.at(99) - 1.0).abs() < 1e-6);
+        assert!((s.at(100) - 0.1).abs() < 1e-6);
+        assert!((s.at(250) - 0.01).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,317 @@
+//! Checkpoint store: the codistillation communication substrate.
+//!
+//! Stands in for the paper's shared filesystem (§2.1: "workers checkpoint
+//! their parameters; other workers load the freshest available checkpoints").
+//! Checkpoints are immutable parameter snapshots tagged with the publishing
+//! member and step; the store keeps a bounded history per member so the
+//! orchestrator can both read "freshest available" and deliberately fetch
+//! older snapshots (staleness injection for the Fig 4-style ablations).
+//!
+//! An optional disk spool writes every published checkpoint through the
+//! same text-free binary format used by the CLI's `--save` flag, proving
+//! the exchange also works across processes.
+
+use crate::runtime::{Tensor, TensorMap};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Immutable parameter snapshot.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Publishing member id.
+    pub member: usize,
+    /// Member-local step at publication.
+    pub step: u64,
+    /// `params.*` entries only.
+    pub params: TensorMap,
+}
+
+impl Checkpoint {
+    pub fn new(member: usize, step: u64, params: TensorMap) -> Self {
+        Checkpoint {
+            member,
+            step,
+            params,
+        }
+    }
+
+    /// Serialize to a simple length-prefixed binary format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating {}", path.display()))?,
+        );
+        f.write_all(b"CKPT0001")?;
+        f.write_all(&(self.member as u64).to_le_bytes())?;
+        f.write_all(&self.step.to_le_bytes())?;
+        let entries = self.params.prefix_entries("");
+        f.write_all(&(entries.len() as u64).to_le_bytes())?;
+        for (name, t) in entries {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u32).to_le_bytes())?;
+            f.write_all(nb)?;
+            let shape = t.shape();
+            f.write_all(&(shape.len() as u32).to_le_bytes())?;
+            for &d in shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            match t {
+                Tensor::F32 { data, .. } => {
+                    f.write_all(&[0u8])?;
+                    for v in data {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                Tensor::I32 { data, .. } => {
+                    f.write_all(&[1u8])?;
+                    for v in data {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a checkpoint written by [`Checkpoint::save`].
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != b"CKPT0001" {
+            bail!("{}: bad checkpoint magic", path.display());
+        }
+        let member = read_u64(&mut f)? as usize;
+        let step = read_u64(&mut f)?;
+        let n = read_u64(&mut f)? as usize;
+        let mut params = TensorMap::new();
+        for _ in 0..n {
+            let name_len = read_u32(&mut f)? as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("checkpoint name not utf8")?;
+            let rank = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(read_u64(&mut f)? as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let mut tag = [0u8; 1];
+            f.read_exact(&mut tag)?;
+            let t = match tag[0] {
+                0 => {
+                    let mut data = vec![0f32; numel];
+                    let mut buf = [0u8; 4];
+                    for v in data.iter_mut() {
+                        f.read_exact(&mut buf)?;
+                        *v = f32::from_le_bytes(buf);
+                    }
+                    Tensor::f32(&shape, data)?
+                }
+                1 => {
+                    let mut data = vec![0i32; numel];
+                    let mut buf = [0u8; 4];
+                    for v in data.iter_mut() {
+                        f.read_exact(&mut buf)?;
+                        *v = i32::from_le_bytes(buf);
+                    }
+                    Tensor::i32(&shape, data)?
+                }
+                other => bail!("bad dtype tag {other}"),
+            };
+            params.insert(name, t);
+        }
+        Ok(Checkpoint {
+            member,
+            step,
+            params,
+        })
+    }
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Bounded per-member checkpoint history with freshest-available reads.
+pub struct CheckpointStore {
+    inner: Mutex<HashMap<usize, Vec<Arc<Checkpoint>>>>,
+    history: usize,
+    spool: Option<PathBuf>,
+}
+
+impl CheckpointStore {
+    pub fn new(history: usize) -> Self {
+        CheckpointStore {
+            inner: Mutex::new(HashMap::new()),
+            history: history.max(1),
+            spool: None,
+        }
+    }
+
+    /// Also write every published checkpoint to `dir` (cross-process mode).
+    pub fn with_spool(mut self, dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        self.spool = Some(dir.to_path_buf());
+        Ok(self)
+    }
+
+    /// Publish a member's checkpoint.
+    pub fn publish(&self, ckpt: Checkpoint) -> Result<()> {
+        if let Some(dir) = &self.spool {
+            let path = dir.join(format!("member{}_step{}.ckpt", ckpt.member, ckpt.step));
+            ckpt.save(&path)?;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let hist = inner.entry(ckpt.member).or_default();
+        if let Some(last) = hist.last() {
+            if ckpt.step < last.step {
+                bail!(
+                    "member {} published step {} after step {}",
+                    ckpt.member,
+                    ckpt.step,
+                    last.step
+                );
+            }
+        }
+        hist.push(Arc::new(ckpt));
+        let len = hist.len();
+        if len > self.history {
+            hist.drain(0..len - self.history);
+        }
+        Ok(())
+    }
+
+    /// Freshest available checkpoint from a member (paper semantics).
+    pub fn latest(&self, member: usize) -> Option<Arc<Checkpoint>> {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(&member)
+            .and_then(|h| h.last().cloned())
+    }
+
+    /// Freshest checkpoint from a member with `step <= max_step`
+    /// (explicit staleness injection).
+    pub fn latest_at_most(&self, member: usize, max_step: u64) -> Option<Arc<Checkpoint>> {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(&member)
+            .and_then(|h| h.iter().rev().find(|c| c.step <= max_step).cloned())
+    }
+
+    /// Staleness (in steps) a reader at `now` would observe for a member.
+    pub fn staleness(&self, member: usize, now: u64) -> Option<u64> {
+        self.latest(member).map(|c| now.saturating_sub(c.step))
+    }
+
+    pub fn members(&self) -> Vec<usize> {
+        let mut m: Vec<usize> = self.inner.lock().unwrap().keys().copied().collect();
+        m.sort();
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ckpt(member: usize, step: u64, val: f32) -> Checkpoint {
+        let mut params = TensorMap::new();
+        params.insert("params.w", Tensor::f32(&[2], vec![val, val]).unwrap());
+        Checkpoint::new(member, step, params)
+    }
+
+    #[test]
+    fn latest_returns_freshest() {
+        let store = CheckpointStore::new(4);
+        store.publish(ckpt(0, 10, 1.0)).unwrap();
+        store.publish(ckpt(0, 20, 2.0)).unwrap();
+        let c = store.latest(0).unwrap();
+        assert_eq!(c.step, 20);
+        assert_eq!(store.latest(1).map(|c| c.step), None);
+    }
+
+    #[test]
+    fn latest_at_most_respects_bound() {
+        let store = CheckpointStore::new(8);
+        for s in [5u64, 10, 15, 20] {
+            store.publish(ckpt(1, s, s as f32)).unwrap();
+        }
+        assert_eq!(store.latest_at_most(1, 12).unwrap().step, 10);
+        assert!(store.latest_at_most(1, 4).is_none());
+        assert_eq!(store.latest_at_most(1, 100).unwrap().step, 20);
+    }
+
+    #[test]
+    fn history_is_bounded() {
+        let store = CheckpointStore::new(2);
+        for s in 0..10u64 {
+            store.publish(ckpt(0, s, 0.0)).unwrap();
+        }
+        // only the last 2 checkpoints (steps 8, 9) survive
+        assert_eq!(store.latest(0).unwrap().step, 9);
+        assert_eq!(store.latest_at_most(0, 8).unwrap().step, 8);
+        assert!(store.latest_at_most(0, 7).is_none(), "old history retained");
+    }
+
+    #[test]
+    fn rejects_step_regression() {
+        let store = CheckpointStore::new(4);
+        store.publish(ckpt(0, 10, 0.0)).unwrap();
+        assert!(store.publish(ckpt(0, 5, 0.0)).is_err());
+    }
+
+    #[test]
+    fn staleness_accounting() {
+        let store = CheckpointStore::new(4);
+        store.publish(ckpt(2, 100, 0.0)).unwrap();
+        assert_eq!(store.staleness(2, 150), Some(50));
+        assert_eq!(store.staleness(2, 50), Some(0)); // saturating
+        assert_eq!(store.staleness(3, 10), None);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("codistill_test_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        let mut params = TensorMap::new();
+        params.insert("params.w", Tensor::f32(&[2, 2], vec![1.0, -2.0, 3.5, 0.0]).unwrap());
+        params.insert("params.ids", Tensor::i32(&[3], vec![7, 8, 9]).unwrap());
+        let c = Checkpoint::new(3, 42, params);
+        c.save(&path).unwrap();
+        let l = Checkpoint::load(&path).unwrap();
+        assert_eq!(l.member, 3);
+        assert_eq!(l.step, 42);
+        assert_eq!(
+            l.params.get("params.w").unwrap().as_f32().unwrap(),
+            &[1.0, -2.0, 3.5, 0.0]
+        );
+        assert_eq!(l.params.get("params.ids").unwrap().as_i32().unwrap(), &[7, 8, 9]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn spool_writes_files() {
+        let dir = std::env::temp_dir().join(format!("codistill_spool_{}", std::process::id()));
+        let store = CheckpointStore::new(2).with_spool(&dir).unwrap();
+        store.publish(ckpt(0, 7, 1.0)).unwrap();
+        assert!(dir.join("member0_step7.ckpt").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,93 @@
+//! Codistillation topologies (paper §4: "if pairs are useful then so are
+//! other topologies. Fully connected graphs might make the models too
+//! similar, too quickly so ring structures might also be interesting").
+//!
+//! A topology answers: which peers does member `i` distill from? The
+//! paper's experiments use [`Topology::Pair`] (two-way); the ring and
+//! fully-connected variants back the topology ablation bench.
+
+/// Who teaches whom.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// Everyone distills from everyone else (Algorithm 1 verbatim).
+    FullyConnected,
+    /// Member i distills from member (i+1) mod n only.
+    Ring,
+    /// Disjoint pairs: (0,1), (2,3), ... Two-way codistillation when n=2.
+    Pair,
+}
+
+impl Topology {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "full" | "fully-connected" => Some(Topology::FullyConnected),
+            "ring" => Some(Topology::Ring),
+            "pair" => Some(Topology::Pair),
+            _ => None,
+        }
+    }
+
+    /// Teacher set for member `i` of `n`.
+    pub fn teachers_of(&self, i: usize, n: usize) -> Vec<usize> {
+        assert!(i < n);
+        match self {
+            Topology::FullyConnected => (0..n).filter(|&j| j != i).collect(),
+            Topology::Ring => {
+                if n <= 1 {
+                    vec![]
+                } else {
+                    vec![(i + 1) % n]
+                }
+            }
+            Topology::Pair => {
+                let partner = i ^ 1;
+                if partner < n && partner != i {
+                    vec![partner]
+                } else {
+                    vec![]
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fully_connected_excludes_self() {
+        let t = Topology::FullyConnected;
+        assert_eq!(t.teachers_of(1, 4), vec![0, 2, 3]);
+        assert_eq!(t.teachers_of(0, 1), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn ring_is_single_successor() {
+        let t = Topology::Ring;
+        assert_eq!(t.teachers_of(0, 3), vec![1]);
+        assert_eq!(t.teachers_of(2, 3), vec![0]);
+        assert_eq!(t.teachers_of(0, 1), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn pair_matches_partners() {
+        let t = Topology::Pair;
+        assert_eq!(t.teachers_of(0, 2), vec![1]);
+        assert_eq!(t.teachers_of(1, 2), vec![0]);
+        assert_eq!(t.teachers_of(2, 4), vec![3]);
+        // odd member count: last member has no partner
+        assert_eq!(t.teachers_of(2, 3), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn every_topology_never_includes_self() {
+        for t in [Topology::FullyConnected, Topology::Ring, Topology::Pair] {
+            for n in 1..6 {
+                for i in 0..n {
+                    assert!(!t.teachers_of(i, n).contains(&i), "{t:?} n={n} i={i}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Experiment configuration: typed defaults + `key=value` overrides.
+//!
+//! No serde/toml offline, so configuration is a flat string map parsed
+//! from CLI `--set key=value` flags and/or a simple `key value` file —
+//! enough for every sweep in the experiment harness while staying
+//! dependency-free.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Flat string-keyed settings with typed accessors.
+#[derive(Debug, Clone, Default)]
+pub struct Settings {
+    map: HashMap<String, String>,
+}
+
+impl Settings {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse a `key value` / `key=value` lines file (# comments allowed).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let mut s = Settings::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            s.apply(line)
+                .with_context(|| format!("{}:{}", path.display(), i + 1))?;
+        }
+        Ok(s)
+    }
+
+    /// Apply one `key=value` (or `key value`) override.
+    pub fn apply(&mut self, kv: &str) -> Result<()> {
+        let (k, v) = if let Some((k, v)) = kv.split_once('=') {
+            (k, v)
+        } else if let Some((k, v)) = kv.split_once(' ') {
+            (k, v)
+        } else {
+            bail!("expected key=value, got {kv:?}");
+        };
+        self.map.insert(k.trim().to_string(), v.trim().to_string());
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}={v} not usize")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}={v} not u64")),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}={v} not f32")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}={v} not f64")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true" | "1" | "yes") => Ok(true),
+            Some("false" | "0" | "no") => Ok(false),
+            Some(v) => bail!("{key}={v} not a bool"),
+        }
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+/// Paths shared by the harness.
+#[derive(Debug, Clone)]
+pub struct Paths {
+    pub artifacts: std::path::PathBuf,
+    pub results: std::path::PathBuf,
+}
+
+impl Paths {
+    pub fn from_settings(s: &Settings) -> Self {
+        Paths {
+            artifacts: s.str_or("artifacts", "artifacts").into(),
+            results: s.str_or("results", "results").into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_and_typed_get() {
+        let mut s = Settings::new();
+        s.apply("steps=500").unwrap();
+        s.apply("lr=0.3").unwrap();
+        s.apply("mode same").unwrap();
+        assert_eq!(s.usize_or("steps", 1).unwrap(), 500);
+        assert!((s.f32_or("lr", 0.0).unwrap() - 0.3).abs() < 1e-6);
+        assert_eq!(s.str_or("mode", "x"), "same");
+        assert_eq!(s.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let mut s = Settings::new();
+        s.apply("steps=abc").unwrap();
+        assert!(s.usize_or("steps", 1).is_err());
+        assert!(s.apply("novalue").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let p = std::env::temp_dir().join(format!("codistill_cfg_{}", std::process::id()));
+        std::fs::write(&p, "# comment\nsteps=12\nverbose true\n\n").unwrap();
+        let s = Settings::from_file(&p).unwrap();
+        assert_eq!(s.usize_or("steps", 0).unwrap(), 12);
+        assert!(s.bool_or("verbose", false).unwrap());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,18 @@
+//! Data substrates.
+//!
+//! The paper trains on Common Crawl (673B word pieces), ImageNet, and the
+//! Criteo click logs — none of which are available here, so each is
+//! replaced by a deterministic synthetic generator that exercises the same
+//! code paths and preserves the statistics the experiments depend on
+//! (DESIGN.md §4). Every generator is an infinite, seed-addressed stream:
+//! "never revisits data" holds just as it does for the paper's corpus.
+
+pub mod corpus;
+pub mod criteo;
+pub mod images;
+pub mod shard;
+
+pub use corpus::{Batcher, CorpusConfig, TokenStream};
+pub use criteo::{CriteoBatch, CriteoGen};
+pub use images::{ImageBatch, ImageGen};
+pub use shard::{ShardMode, ShardPlan};

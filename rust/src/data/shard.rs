@@ -1,0 +1,113 @@
+//! Shard assignment: which data streams feed which (group, worker, row).
+//!
+//! The paper's codistillation protocol trains each group "on a locally
+//! available subset of the training data" (§2.1). Fig 2b's control arm
+//! forces both groups onto the *same* subset to show that the gains come
+//! from information about unseen data flowing through teacher predictions.
+//!
+//! A [`ShardPlan`] deterministically maps every batch row of every group to
+//! a stream id. Stream ids are globally unique in [`ShardMode::Disjoint`]
+//! and shared across groups in [`ShardMode::SameData`].
+
+/// How groups' data shards relate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardMode {
+    /// Every group sees its own disjoint slice (the paper's main setup).
+    Disjoint,
+    /// All groups see identical data (Fig 2b control).
+    SameData,
+}
+
+impl ShardMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "disjoint" => Some(ShardMode::Disjoint),
+            "same" | "same-data" => Some(ShardMode::SameData),
+            _ => None,
+        }
+    }
+}
+
+/// Deterministic stream-id assignment.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub n_groups: usize,
+    pub rows_per_group: usize,
+    pub mode: ShardMode,
+}
+
+impl ShardPlan {
+    pub fn new(n_groups: usize, rows_per_group: usize, mode: ShardMode) -> Self {
+        assert!(n_groups > 0 && rows_per_group > 0);
+        ShardPlan {
+            n_groups,
+            rows_per_group,
+            mode,
+        }
+    }
+
+    /// Stream ids for one group's batch rows.
+    pub fn group_streams(&self, group: usize) -> Vec<u64> {
+        assert!(group < self.n_groups, "group {group} out of range");
+        let base = match self.mode {
+            ShardMode::Disjoint => (group * self.rows_per_group) as u64,
+            ShardMode::SameData => 0,
+        };
+        (0..self.rows_per_group as u64).map(|r| base + r).collect()
+    }
+
+    /// Stream ids for the validation set: a reserved range that never
+    /// overlaps any group's training streams.
+    pub fn validation_streams(&self, rows: usize) -> Vec<u64> {
+        let base = (self.n_groups * self.rows_per_group) as u64 + 1_000_000;
+        (0..rows as u64).map(|r| base + r).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn disjoint_groups_do_not_overlap() {
+        let plan = ShardPlan::new(4, 8, ShardMode::Disjoint);
+        let mut seen = HashSet::new();
+        for g in 0..4 {
+            for s in plan.group_streams(g) {
+                assert!(seen.insert(s), "stream {s} duplicated");
+            }
+        }
+        assert_eq!(seen.len(), 32);
+    }
+
+    #[test]
+    fn same_data_groups_are_identical() {
+        let plan = ShardPlan::new(3, 16, ShardMode::SameData);
+        let a = plan.group_streams(0);
+        let b = plan.group_streams(2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn validation_never_overlaps_training() {
+        let plan = ShardPlan::new(2, 64, ShardMode::Disjoint);
+        let train: HashSet<u64> = (0..2).flat_map(|g| plan.group_streams(g)).collect();
+        for v in plan.validation_streams(64) {
+            assert!(!train.contains(&v));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn group_out_of_range_panics() {
+        ShardPlan::new(2, 4, ShardMode::Disjoint).group_streams(2);
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(ShardMode::parse("disjoint"), Some(ShardMode::Disjoint));
+        assert_eq!(ShardMode::parse("same"), Some(ShardMode::SameData));
+        assert_eq!(ShardMode::parse("nope"), None);
+    }
+}

@@ -1,0 +1,232 @@
+//! Shared experiment plumbing: bundle opening, member construction, CLI
+//! commands, result-table printing.
+
+use crate::codistill::{
+    DistillSchedule, LrSchedule, Member, Orchestrator, OrchestratorConfig, RunLog, Topology,
+};
+use crate::config::Settings;
+use crate::data::corpus::CorpusConfig;
+use crate::data::shard::{ShardMode, ShardPlan};
+use crate::models::lm::{LmMember, SmoothingMode};
+use crate::netsim::ClusterModel;
+use crate::runtime::{Bundle, Runtime};
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Thread-local runtime (PJRT client): the xla wrapper types are not Send,
+/// so each thread that touches XLA owns its own client + compile cache.
+/// Experiments are single-threaded over XLA, so in practice this is one
+/// client per process.
+pub fn runtime() -> Result<Arc<Runtime>> {
+    thread_local! {
+        static RT: std::cell::OnceCell<Arc<Runtime>> = const { std::cell::OnceCell::new() };
+    }
+    RT.with(|cell| {
+        if let Some(rt) = cell.get() {
+            return Ok(rt.clone());
+        }
+        let rt = Arc::new(Runtime::cpu()?);
+        let _ = cell.set(rt.clone());
+        Ok(rt)
+    })
+}
+
+pub fn artifacts_dir(s: &Settings) -> PathBuf {
+    // Default relative to the crate root so tests/benches work from
+    // anywhere inside the repo.
+    let p = PathBuf::from(s.str_or("artifacts", ""));
+    if !p.as_os_str().is_empty() {
+        return p;
+    }
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest.join("artifacts")
+}
+
+pub fn results_dir(s: &Settings) -> PathBuf {
+    let p = PathBuf::from(s.str_or("results", ""));
+    if !p.as_os_str().is_empty() {
+        return p;
+    }
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest.join("results")
+}
+
+pub fn open_bundle(s: &Settings, name: &str) -> Result<Bundle> {
+    let dir = artifacts_dir(s).join(name);
+    Bundle::open(runtime()?, &dir).with_context(|| format!("opening bundle {name}"))
+}
+
+/// Corpus config matching an LM bundle's dims.
+pub fn corpus_for(bundle: &Bundle) -> Result<CorpusConfig> {
+    Ok(CorpusConfig {
+        vocab: bundle.meta_usize("vocab")?,
+        ..CorpusConfig::default()
+    })
+}
+
+/// Build one LM member on a shard plan slot.
+#[allow(clippy::too_many_arguments)]
+pub fn lm_member(
+    bundle: &Bundle,
+    plan: &ShardPlan,
+    group: usize,
+    seed: u64,
+    init_seed: i32,
+    smoothing: SmoothingMode,
+    val_batches: usize,
+) -> Result<LmMember> {
+    let corpus = corpus_for(bundle)?;
+    let streams = plan.group_streams(group);
+    let dims_batch = bundle.meta_usize("batch")?;
+    let val_streams = plan.validation_streams(dims_batch);
+    LmMember::new(
+        bundle,
+        seed,
+        init_seed,
+        &streams,
+        &val_streams,
+        &corpus,
+        smoothing,
+        val_batches,
+    )
+}
+
+/// Standard LM experiment knobs with paper-scaled defaults.
+pub struct LmExpDefaults {
+    pub steps: u64,
+    pub eval_every: u64,
+    pub reload: u64,
+    pub burn_in: u64,
+    pub ramp: u64,
+    pub weight: f32,
+    pub lr: f32,
+    pub seed: u64,
+    pub val_batches: usize,
+    pub verbose: bool,
+}
+
+pub fn lm_defaults(s: &Settings) -> Result<LmExpDefaults> {
+    Ok(LmExpDefaults {
+        steps: s.u64_or("steps", 600)?,
+        eval_every: s.u64_or("eval_every", 30)?,
+        reload: s.u64_or("reload", 50)?,
+        burn_in: s.u64_or("burn_in", 150)?,
+        ramp: s.u64_or("ramp", 50)?,
+        weight: s.f32_or("weight", 1.0)?,
+        lr: s.f32_or("lr", 0.03)?,
+        seed: s.u64_or("seed", 42)?,
+        val_batches: s.usize_or("val_batches", 4)?,
+        verbose: s.bool_or("verbose", false)?,
+    })
+}
+
+pub fn orch_config(d: &LmExpDefaults, distill: DistillSchedule, cluster: Option<ClusterModel>) -> OrchestratorConfig {
+    OrchestratorConfig {
+        total_steps: d.steps,
+        reload_interval: d.reload,
+        extra_staleness: 0,
+        eval_every: d.eval_every,
+        distill,
+        lr: LrSchedule::Constant(d.lr),
+        topology: Topology::Pair,
+        cluster,
+        seed: d.seed,
+        verbose: d.verbose,
+    }
+}
+
+/// Print a run's per-member final summary.
+pub fn print_runlog(tag: &str, log: &RunLog) {
+    for (i, curve) in log.eval.iter().enumerate() {
+        if let Some(last) = curve.last() {
+            let best = log.best_loss(i).unwrap_or(f64::NAN);
+            println!(
+                "[{tag}] member {i}: final val loss {:.4} (best {best:.4}) at step {}",
+                last.loss, last.step
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------ CLI commands
+
+/// `codistill train`: single-member baseline.
+pub fn cmd_train(s: &Settings) -> Result<()> {
+    let d = lm_defaults(s)?;
+    let bundle = open_bundle(s, s.str_or("bundle", "lm_b64"))?;
+    let plan = ShardPlan::new(1, bundle.meta_usize("batch")?, ShardMode::Disjoint);
+    let member = lm_member(&bundle, &plan, 0, d.seed, 1, SmoothingMode::None, d.val_batches)?;
+    let cfg = orch_config(&d, DistillSchedule::off(), None);
+    let orch = Orchestrator::new(cfg);
+    let mut members: Vec<Box<dyn Member>> = vec![Box::new(member)];
+    let log = orch.run(&mut members)?;
+    print_runlog("train", &log);
+    Ok(())
+}
+
+/// `codistill codistill`: n-way codistillation.
+pub fn cmd_codistill(s: &Settings) -> Result<()> {
+    let d = lm_defaults(s)?;
+    let n = s.usize_or("members", 2)?;
+    let bundle = open_bundle(s, s.str_or("bundle", "lm_b64"))?;
+    let mode = ShardMode::parse(s.str_or("shard_mode", "disjoint"))
+        .context("shard_mode must be disjoint|same")?;
+    let plan = ShardPlan::new(n, bundle.meta_usize("batch")?, mode);
+    let mut members: Vec<Box<dyn Member>> = Vec::new();
+    for g in 0..n {
+        members.push(Box::new(lm_member(
+            &bundle,
+            &plan,
+            g,
+            d.seed,
+            (g + 1) as i32,
+            SmoothingMode::None,
+            d.val_batches,
+        )?));
+    }
+    let topology = Topology::parse(s.str_or("topology", "pair")).context("bad topology")?;
+    let mut cfg = orch_config(
+        &d,
+        DistillSchedule::new(d.burn_in, d.ramp, d.weight),
+        None,
+    );
+    cfg.topology = topology;
+    let orch = Orchestrator::new(cfg);
+    let log = orch.run(&mut members)?;
+    print_runlog("codistill", &log);
+    Ok(())
+}
+
+/// `codistill inspect`: list a bundle's executables and I/O.
+pub fn cmd_inspect(s: &Settings) -> Result<()> {
+    let name = s.str_or("bundle", "lm_b64");
+    let dir = artifacts_dir(s).join(name);
+    println!("bundle {} ({})", name, dir.display());
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".spec.txt"))
+        .collect();
+    entries.sort();
+    let rt = runtime()?;
+    for e in entries {
+        let stem = e.trim_end_matches(".spec.txt").to_string();
+        let exe = rt.load(&dir.join(&stem))?;
+        let spec = exe.spec();
+        let in_elems: usize = spec.inputs.iter().map(|t| t.numel()).sum();
+        let out_elems: usize = spec.outputs.iter().map(|t| t.numel()).sum();
+        println!(
+            "  {stem}: {} inputs ({} elems), {} outputs ({} elems)",
+            spec.inputs.len(),
+            in_elems,
+            spec.outputs.len(),
+            out_elems
+        );
+    }
+    Ok(())
+}
+
+/// Scale factor mapping our testbed worker counts to the paper's
+/// (paper trains with 32-256 GPUs; we simulate 4-32 workers, 1:8).
+pub const WORKER_SCALE: usize = 8;

@@ -1,0 +1,92 @@
+//! Fig 1a/1b: reaching the limits of distributed sync SGD.
+//!
+//! Paper: validation error vs steps (1a) and vs wall time (1b) for fully
+//! synchronous SGD with 32/64/128/256 workers (effective batch 4096–32768,
+//! per-worker batch 128). Finding: steps-to-target improves up to 128
+//! workers then plateaus; at 256 workers step-time degradation makes more
+//! workers counterproductive.
+//!
+//! Here (1:8 scale, DESIGN.md §4): worker counts {4, 8, 16, 32} × per-
+//! worker batch 8 → fused effective batches {32, 64, 128, 256} (bundles
+//! `lm_b32..lm_b256`), and the step-time model prices the paper-scale
+//! cluster (32·8=256 workers at the top end) for the wall-time axis.
+//!
+//! Emits `results/fig1a.csv` (worker count, step, val loss) and
+//! `results/fig1b.csv` (worker count, wall seconds, val loss).
+
+use crate::codistill::{DistillSchedule, Member, Orchestrator};
+use crate::config::Settings;
+use crate::data::shard::{ShardMode, ShardPlan};
+use crate::experiments::common::{
+    lm_defaults, lm_member, open_bundle, orch_config, print_runlog, results_dir, WORKER_SCALE,
+};
+use crate::metrics::CsvWriter;
+use crate::models::lm::SmoothingMode;
+use crate::netsim::ClusterModel;
+use anyhow::Result;
+
+/// Per-worker batch in our scaled setup (paper: 128).
+pub const WORKER_BATCH: usize = 8;
+
+/// Simulated worker counts (paper: ×8 of these).
+pub const WORKERS: [usize; 4] = [4, 8, 16, 32];
+
+pub struct Fig1Summary {
+    /// (workers, steps_to_target or u64::MAX, final loss, mean step time s)
+    pub rows: Vec<(usize, u64, f64, f64)>,
+}
+
+pub fn run(s: &Settings) -> Result<Fig1Summary> {
+    let mut d = lm_defaults(s)?;
+    d.steps = s.u64_or("steps", 240)?;
+    d.eval_every = s.u64_or("eval_every", 20)?;
+    let target = s.f64_or("target", 4.95)?;
+    let results = results_dir(s);
+    let mut csv_a = CsvWriter::create(&results.join("fig1a.csv"), &["workers", "step", "val_loss"])?;
+    let mut csv_b = CsvWriter::create(
+        &results.join("fig1b.csv"),
+        &["workers", "wall_s", "val_loss"],
+    )?;
+
+    // LM f32 params ≈ 0.26 MB at this scale; the netsim prices the paper's
+    // model (2×LSTM-1024 ≈ 40 MB of gradients) for realistic wall times.
+    let paper_model_bytes: u64 = 40_000_000;
+
+    let mut rows = Vec::new();
+    for &w in &WORKERS {
+        let eff = w * WORKER_BATCH;
+        let bundle = open_bundle(s, &format!("lm_b{eff}"))?;
+        let plan = ShardPlan::new(1, eff, ShardMode::Disjoint);
+        let member = lm_member(&bundle, &plan, 0, d.seed, 1, SmoothingMode::None, d.val_batches)?;
+        let cluster = ClusterModel::gpu_cluster(w * WORKER_SCALE, paper_model_bytes);
+        let mean_step = cluster.mean_step_time(200, d.seed ^ w as u64);
+        let cfg = orch_config(&d, DistillSchedule::off(), Some(cluster));
+        let orch = Orchestrator::new(cfg);
+        let mut members: Vec<Box<dyn Member>> = vec![Box::new(member)];
+        let log = orch.run(&mut members)?;
+        for p in &log.eval[0] {
+            csv_a.row(&[w.to_string(), p.step.to_string(), format!("{:.5}", p.loss)])?;
+            csv_b.row(&[
+                w.to_string(),
+                format!("{:.2}", p.wall_s),
+                format!("{:.5}", p.loss),
+            ])?;
+        }
+        let stt = log.steps_to_target(0, target).unwrap_or(u64::MAX);
+        let fin = log.final_mean_loss().unwrap_or(f64::NAN);
+        println!(
+            "[fig1] workers={w} (paper ~{}) eff_batch={eff}: steps_to_{target}={} final={fin:.4} mean_step_time={mean_step:.3}s",
+            w * WORKER_SCALE,
+            if stt == u64::MAX { "n/a".into() } else { stt.to_string() },
+        );
+        print_runlog(&format!("fig1 w={w}"), &log);
+        rows.push((w, stt, fin, mean_step));
+    }
+    csv_a.finish()?;
+    csv_b.finish()?;
+
+    println!("\n[fig1] paper shape checks:");
+    println!("  - steps-to-target should improve with workers, then plateau");
+    println!("  - mean step time should degrade at the largest worker count");
+    Ok(Fig1Summary { rows })
+}

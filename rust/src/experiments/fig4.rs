@@ -1,0 +1,88 @@
+//! Fig 4: sensitivity to the checkpoint reload interval.
+//!
+//! Paper: two-way synchronous codistillation on Common Crawl with
+//! exchange delays of 50/100/250 steps — beyond 50 steps (819,200
+//! examples) the learning curve degrades only slightly, demonstrating the
+//! staleness tolerance that makes the algorithm communication-cheap.
+//!
+//! Emits `results/fig4.csv` (reload_interval, step, val_loss) plus a
+//! summary of observed teacher staleness per interval.
+
+use crate::codistill::{DistillSchedule, Member, Orchestrator};
+use crate::config::Settings;
+use crate::data::shard::{ShardMode, ShardPlan};
+use crate::experiments::common::{lm_defaults, lm_member, open_bundle, orch_config, results_dir};
+use crate::metrics::CsvWriter;
+use crate::models::lm::SmoothingMode;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+pub struct Fig4Summary {
+    /// interval -> final val loss
+    pub finals: BTreeMap<u64, f64>,
+    /// interval -> mean observed staleness (steps)
+    pub staleness: BTreeMap<u64, f64>,
+}
+
+pub fn run(s: &Settings) -> Result<Fig4Summary> {
+    let mut d = lm_defaults(s)?;
+    d.steps = s.u64_or("steps", 240)?;
+    d.eval_every = s.u64_or("eval_every", 20)?;
+    d.burn_in = s.u64_or("burn_in", 60)?;
+    d.ramp = s.u64_or("ramp", 30)?;
+    let intervals: Vec<u64> = s
+        .str_or("intervals", "25,50,100")
+        .split(',')
+        .map(|v| v.trim().parse().unwrap())
+        .collect();
+    let bundle = open_bundle(s, s.str_or("bundle", "lm_b64"))?;
+    let results = results_dir(s);
+    let mut csv = CsvWriter::create(
+        &results.join("fig4.csv"),
+        &["reload_interval", "step", "val_loss"],
+    )?;
+
+    let mut finals = BTreeMap::new();
+    let mut staleness = BTreeMap::new();
+    for &interval in &intervals {
+        let plan = ShardPlan::new(2, bundle.meta_usize("batch")?, ShardMode::Disjoint);
+        let mut members: Vec<Box<dyn Member>> = Vec::new();
+        for g in 0..2 {
+            members.push(Box::new(lm_member(
+                &bundle,
+                &plan,
+                g,
+                d.seed,
+                (g + 1) as i32,
+                SmoothingMode::None,
+                d.val_batches,
+            )?));
+        }
+        let mut cfg = orch_config(&d, DistillSchedule::new(d.burn_in, d.ramp, d.weight), None);
+        cfg.reload_interval = interval;
+        let orch = Orchestrator::new(cfg);
+        let log = orch.run(&mut members)?;
+        for p in &log.eval[0] {
+            csv.row(&[
+                interval.to_string(),
+                p.step.to_string(),
+                format!("{:.5}", p.loss),
+            ])?;
+        }
+        let fin = log.final_mean_loss().unwrap_or(f64::NAN);
+        let mean_stale = if log.staleness.is_empty() {
+            0.0
+        } else {
+            log.staleness.iter().map(|&(_, _, st)| st as f64).sum::<f64>()
+                / log.staleness.len() as f64
+        };
+        println!(
+            "[fig4] reload={interval}: final={fin:.4} mean_observed_staleness={mean_stale:.1} steps"
+        );
+        finals.insert(interval, fin);
+        staleness.insert(interval, mean_stale);
+    }
+    csv.finish()?;
+    println!("[fig4] paper shape: mild monotone degradation as interval grows");
+    Ok(Fig4Summary { finals, staleness })
+}

@@ -1,0 +1,14 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md §6).
+//!
+//! Each module exposes a `run(&Settings) -> Result<Summary>` that trains
+//! the relevant configurations, writes `results/<id>.csv` with the same
+//! series the paper plots, and prints a human-readable table. The cargo
+//! bench targets under `rust/benches/` are thin wrappers over these.
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod table1;
+pub mod two_phase;

@@ -1,0 +1,29 @@
+//! codistill — reproduction of "Large Scale Distributed Neural Network
+//! Training Through Online Distillation" (Anil et al., ICLR 2018).
+//!
+//! Three-layer architecture:
+//!  - Layer 1 (build time): Pallas kernels in `python/compile/kernels/`.
+//!  - Layer 2 (build time): JAX models in `python/compile/model.py`, lowered
+//!    once to HLO text artifacts by `python/compile/aot.py`.
+//!  - Layer 3 (run time, this crate): the distributed-training coordinator —
+//!    synchronous-SGD worker groups, the codistillation orchestrator that
+//!    exchanges stale checkpoints between groups, the simulated cluster
+//!    (network / straggler model), data substrates, and the experiment
+//!    harness that regenerates every figure and table in the paper.
+//!
+//! Python never runs on the training path: the coordinator loads the
+//! `artifacts/*.hlo.txt` executables through PJRT (the `xla` crate) and owns
+//! the entire training loop.
+
+pub mod cli;
+pub mod codistill;
+pub mod config;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod models;
+pub mod netsim;
+pub mod prng;
+pub mod runtime;
+pub mod sgd;
+pub mod testkit;

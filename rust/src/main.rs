@@ -1,0 +1,3 @@
+fn main() -> anyhow::Result<()> {
+    codistill::cli::main_entry()
+}

@@ -1,0 +1,92 @@
+//! Prediction churn (paper §3.5, Table 1).
+//!
+//! Churn is estimated as the mean absolute difference between the
+//! predictions of two retrains of the same training procedure on a fixed
+//! validation set; Table 1 reports mean ± half-range over 5 repeats.
+
+use anyhow::{bail, Result};
+
+/// Mean |a - b| between two prediction vectors on the same examples.
+pub fn mean_abs_diff(a: &[f32], b: &[f32]) -> Result<f64> {
+    if a.len() != b.len() || a.is_empty() {
+        bail!("prediction vectors differ in length ({} vs {})", a.len(), b.len());
+    }
+    let sum: f64 = a
+        .iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs() as f64)
+        .sum();
+    Ok(sum / a.len() as f64)
+}
+
+/// Aggregate of repeated churn measurements: mean ± half-range
+/// (the paper's Table 1 convention, footnote 6).
+#[derive(Debug, Clone)]
+pub struct ChurnReport {
+    pub samples: Vec<f64>,
+}
+
+impl ChurnReport {
+    pub fn new() -> Self {
+        ChurnReport { samples: vec![] }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Half the range (max-min)/2 — the paper's ± column.
+    pub fn half_range(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let max = self.samples.iter().cloned().fold(f64::MIN, f64::max);
+        let min = self.samples.iter().cloned().fold(f64::MAX, f64::min);
+        (max - min) / 2.0
+    }
+}
+
+impl Default for ChurnReport {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mad_basic() {
+        let d = mean_abs_diff(&[0.1, 0.5, 0.9], &[0.2, 0.5, 0.5]).unwrap();
+        assert!((d - (0.1 + 0.0 + 0.4) / 3.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn mad_identical_is_zero() {
+        assert_eq!(mean_abs_diff(&[0.3; 10], &[0.3; 10]).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn mad_length_mismatch() {
+        assert!(mean_abs_diff(&[0.1], &[0.1, 0.2]).is_err());
+        assert!(mean_abs_diff(&[], &[]).is_err());
+    }
+
+    #[test]
+    fn report_mean_and_half_range() {
+        let mut r = ChurnReport::new();
+        for v in [0.02, 0.03, 0.04] {
+            r.push(v);
+        }
+        assert!((r.mean() - 0.03).abs() < 1e-12);
+        assert!((r.half_range() - 0.01).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,97 @@
+//! Minimal CSV emission (no csv crate offline). Every experiment writes
+//! its series under `results/` so figures can be re-plotted externally.
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+pub struct CsvWriter {
+    path: PathBuf,
+    file: std::io::BufWriter<std::fs::File>,
+    columns: usize,
+    rows: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncate) a CSV with the given header.
+    pub fn create(path: &Path, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = CsvWriter {
+            path: path.to_path_buf(),
+            file: std::io::BufWriter::new(file),
+            columns: header.len(),
+            rows: 0,
+        };
+        writeln!(w.file, "{}", header.join(","))?;
+        Ok(w)
+    }
+
+    /// Write one row of display-formatted cells.
+    pub fn row(&mut self, cells: &[String]) -> Result<()> {
+        anyhow::ensure!(
+            cells.len() == self.columns,
+            "{}: row has {} cells, header has {}",
+            self.path.display(),
+            cells.len(),
+            self.columns
+        );
+        for c in cells {
+            anyhow::ensure!(
+                !c.contains(',') && !c.contains('\n'),
+                "cell {c:?} needs quoting; keep cells simple"
+            );
+        }
+        writeln!(self.file, "{}", cells.join(","))?;
+        self.rows += 1;
+        Ok(())
+    }
+
+    /// Convenience: all-numeric row.
+    pub fn num_row(&mut self, cells: &[f64]) -> Result<()> {
+        self.row(&cells.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+
+    pub fn rows_written(&self) -> usize {
+        self.rows
+    }
+
+    pub fn finish(mut self) -> Result<PathBuf> {
+        self.file.flush()?;
+        Ok(self.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("codistill_csv_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn writes_header_and_rows() {
+        let p = tmp("basic.csv");
+        let mut w = CsvWriter::create(&p, &["step", "loss"]).unwrap();
+        w.num_row(&[1.0, 0.5]).unwrap();
+        w.row(&["2".into(), "0.25".into()]).unwrap();
+        assert_eq!(w.rows_written(), 2);
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "step,loss\n1,0.5\n2,0.25\n");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_arity_and_commas() {
+        let p = tmp("arity.csv");
+        let mut w = CsvWriter::create(&p, &["a", "b"]).unwrap();
+        assert!(w.row(&["1".into()]).is_err());
+        assert!(w.row(&["1,2".into(), "3".into()]).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

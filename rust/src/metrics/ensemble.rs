@@ -1,0 +1,108 @@
+//! Ensemble scoring (the Fig 2a "two-way ensemble" comparison arm).
+//!
+//! The ensemble averages the *predictive distributions* of its members and
+//! is scored with the same token cross entropy: loss = −log p̄[target].
+//! Member probabilities come from each member's `predict` executable; the
+//! averaging and scoring happen here on the host, since no single artifact
+//! owns both members' parameters.
+
+use crate::runtime::Tensor;
+use anyhow::{bail, Result};
+
+/// Token targets in the probs layout.
+///
+/// `predict` emits probs as `[T*B, V]` time-major (row `t*B + b`); targets
+/// for row `(t, b)` are `tokens[b, t+1]`.
+pub fn lm_targets_time_major(tokens: &Tensor) -> Result<Vec<usize>> {
+    let shape = tokens.shape();
+    if shape.len() != 2 {
+        bail!("tokens must be [B, T+1]");
+    }
+    let (b, t1) = (shape[0], shape[1]);
+    let t = t1 - 1;
+    let data = tokens.as_i32()?;
+    let mut targets = Vec::with_capacity(t * b);
+    for ti in 0..t {
+        for bi in 0..b {
+            targets.push(data[bi * t1 + ti + 1] as usize);
+        }
+    }
+    Ok(targets)
+}
+
+/// Mean token cross entropy of an averaged-probability ensemble.
+///
+/// `member_probs`: one `[T*B, V]` tensor per member, same batch.
+pub fn lm_ensemble_eval(member_probs: &[Tensor], tokens: &Tensor) -> Result<f64> {
+    if member_probs.is_empty() {
+        bail!("empty ensemble");
+    }
+    let targets = lm_targets_time_major(tokens)?;
+    let shape = member_probs[0].shape().to_vec();
+    if shape.len() != 2 || shape[0] != targets.len() {
+        bail!(
+            "probs shape {:?} inconsistent with {} targets",
+            shape,
+            targets.len()
+        );
+    }
+    let v = shape[1];
+    let n = member_probs.len() as f64;
+    let mut total = 0.0f64;
+    for (row, &target) in targets.iter().enumerate() {
+        if target >= v {
+            bail!("target {target} out of vocab {v}");
+        }
+        let mut p = 0.0f64;
+        for m in member_probs {
+            p += m.as_f32()?[row * v + target] as f64;
+        }
+        total += -(p / n).max(1e-12).ln();
+    }
+    Ok(total / targets.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn targets_layout() {
+        // B=2, T=2: tokens[b, t]
+        let tokens = Tensor::i32(&[2, 3], vec![10, 11, 12, 20, 21, 22]).unwrap();
+        let t = lm_targets_time_major(&tokens).unwrap();
+        // rows: (t0,b0)=11, (t0,b1)=21, (t1,b0)=12, (t1,b1)=22
+        assert_eq!(t, vec![11, 21, 12, 22]);
+    }
+
+    #[test]
+    fn ensemble_of_identical_is_member_loss() {
+        let tokens = Tensor::i32(&[1, 2], vec![0, 1]).unwrap();
+        let probs = Tensor::f32(&[1, 3], vec![0.2, 0.5, 0.3]).unwrap();
+        let single = lm_ensemble_eval(&[probs.clone()], &tokens).unwrap();
+        let double = lm_ensemble_eval(&[probs.clone(), probs], &tokens).unwrap();
+        assert!((single - double).abs() < 1e-9);
+        assert!((single - (-(0.5f64).ln())).abs() < 1e-6);
+    }
+
+    #[test]
+    fn averaging_helps_disagreeing_members() {
+        // One confident-wrong member + one confident-right member: the
+        // average's log loss is far below the mean of individual losses.
+        let tokens = Tensor::i32(&[1, 2], vec![0, 0]).unwrap();
+        let right = Tensor::f32(&[1, 2], vec![0.99, 0.01]).unwrap();
+        let wrong = Tensor::f32(&[1, 2], vec![0.01, 0.99]).unwrap();
+        let ens = lm_ensemble_eval(&[right.clone(), wrong.clone()], &tokens).unwrap();
+        let l_right = lm_ensemble_eval(&[right], &tokens).unwrap();
+        let l_wrong = lm_ensemble_eval(&[wrong], &tokens).unwrap();
+        assert!(ens < (l_right + l_wrong) / 2.0);
+    }
+
+    #[test]
+    fn bad_shapes_error() {
+        let tokens = Tensor::i32(&[1, 2], vec![0, 5]).unwrap();
+        let probs = Tensor::f32(&[1, 3], vec![0.2, 0.5, 0.3]).unwrap();
+        assert!(lm_ensemble_eval(&[probs], &tokens).is_err()); // target 5 >= vocab 3
+        assert!(lm_ensemble_eval(&[], &tokens).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Metrics: CSV emission, curve summaries, churn, and ensemble scoring.
+
+pub mod churn;
+pub mod csv;
+pub mod ensemble;
+
+pub use churn::{mean_abs_diff, ChurnReport};
+pub use csv::CsvWriter;
+pub use ensemble::lm_ensemble_eval;

@@ -1,0 +1,196 @@
+//! The Criteo CTR member (paper §3.1 + Table 1).
+//!
+//! Stateless feed-forward model: simpler than the LM member (no RNN state
+//! to thread), but it adds the churn-measurement surface — predictions on
+//! a *fixed* validation set, comparable across independent retrains.
+
+use crate::codistill::{Checkpoint, EvalStats, Member, StepStats};
+use crate::data::criteo::{CriteoBatch, CriteoGen};
+use crate::models::lm::{run_mapped, zeros_for_prefix};
+use crate::runtime::{Bundle, Executable, Tensor, TensorMap};
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Fixed validation set, shared across retrains (Arc so every member of a
+/// churn experiment scores the identical examples).
+pub struct CriteoValSet {
+    pub batches: Vec<CriteoBatch>,
+}
+
+impl CriteoValSet {
+    /// Build from a dedicated validation stream.
+    pub fn generate(seed: u64, stream: u64, buckets: usize, batch: usize, n: usize) -> Result<Arc<Self>> {
+        let mut gen = CriteoGen::new(seed, stream, buckets);
+        let batches = (0..n)
+            .map(|_| gen.next_batch(batch))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Arc::new(CriteoValSet { batches }))
+    }
+
+    pub fn examples(&self) -> usize {
+        self.batches
+            .iter()
+            .map(|b| b.labels.numel())
+            .sum()
+    }
+}
+
+pub struct CriteoMember {
+    train_step: Arc<Executable>,
+    predict: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+    vars: TensorMap,
+    teachers: Vec<TensorMap>,
+    gen: CriteoGen,
+    val: Arc<CriteoValSet>,
+    batch: usize,
+    step: u64,
+}
+
+impl CriteoMember {
+    /// `init_seed` differentiates retrains; `stream` is this member's data
+    /// shard (disjoint across codistilling members, per the paper).
+    pub fn new(
+        bundle: &Bundle,
+        data_seed: u64,
+        stream: u64,
+        init_seed: i32,
+        val: Arc<CriteoValSet>,
+    ) -> Result<Self> {
+        let train_step = bundle.exe("train_step")?;
+        let predict = bundle.exe("predict")?;
+        let eval_exe = bundle.exe("eval")?;
+        let buckets = bundle.meta_usize("buckets")?;
+        let batch = bundle.meta_usize("batch")?;
+        let init = bundle.exe("init")?;
+        let outs = init.run(&[&Tensor::scalar_i32(init_seed)])?;
+        let mut vars = TensorMap::from_outputs(init.spec(), outs)?;
+        vars.merge(zeros_for_prefix(train_step.spec(), "opt."));
+        // Adagrad accumulator starts at 0.1 (model_criteo.init_opt).
+        for idx in train_step.spec().inputs_with_prefix("opt.") {
+            let name = train_step.spec().inputs[idx].name.clone();
+            let t = vars.get_mut(&name)?;
+            if let Ok(d) = t.as_f32_mut() {
+                for v in d.iter_mut() {
+                    *v = 0.1;
+                }
+            }
+        }
+        Ok(CriteoMember {
+            train_step,
+            predict,
+            eval_exe,
+            vars,
+            teachers: Vec::new(),
+            gen: CriteoGen::new(data_seed, stream, buckets),
+            val,
+            batch,
+            step: 0,
+        })
+    }
+
+    /// Teacher CTR probabilities on a batch: mean over stale peers.
+    fn teacher_p(&mut self, batch: &CriteoBatch) -> Result<Tensor> {
+        let mut acc: Option<Tensor> = None;
+        for t in &self.teachers {
+            let mut extra = TensorMap::new();
+            extra.insert("dense", batch.dense.clone());
+            extra.insert("cat_idx", batch.cat_idx.clone());
+            let outs = run_mapped(&self.predict, t, &extra)?;
+            let p = outs.get("probs")?.clone();
+            match &mut acc {
+                None => acc = Some(p),
+                Some(a) => a.add_assign(&p)?,
+            }
+        }
+        let mut p = acc.context("no teachers")?;
+        if self.teachers.len() > 1 {
+            p.scale(1.0 / self.teachers.len() as f32)?;
+        }
+        Ok(p)
+    }
+
+    /// Predictions over the fixed validation set — the Table 1 churn
+    /// surface. Returns one probability per validation example.
+    pub fn val_predictions(&self) -> Result<Vec<f32>> {
+        let mut preds = Vec::with_capacity(self.val.examples());
+        for b in &self.val.batches {
+            let mut extra = TensorMap::new();
+            extra.insert("dense", b.dense.clone());
+            extra.insert("cat_idx", b.cat_idx.clone());
+            let outs = run_mapped(&self.predict, &self.vars, &extra)?;
+            preds.extend_from_slice(outs.get("probs")?.as_f32()?);
+        }
+        Ok(preds)
+    }
+
+    pub fn val_set(&self) -> &Arc<CriteoValSet> {
+        &self.val
+    }
+}
+
+impl Member for CriteoMember {
+    fn train_step(&mut self, distill_w: f32, lr: f32) -> Result<StepStats> {
+        let batch = self.gen.next_batch(self.batch)?;
+        let (teacher_p, w) = if distill_w > 0.0 && !self.teachers.is_empty() {
+            (self.teacher_p(&batch)?, distill_w)
+        } else {
+            (Tensor::full_f32(&[self.batch], 0.5), 0.0)
+        };
+        let mut extra = TensorMap::new();
+        extra.insert("dense", batch.dense);
+        extra.insert("cat_idx", batch.cat_idx);
+        extra.insert("labels", batch.labels);
+        extra.insert("teacher_p", teacher_p);
+        extra.insert("distill_w", Tensor::scalar_f32(w));
+        extra.insert("lr", Tensor::scalar_f32(lr));
+        let outs = run_mapped(&self.train_step, &self.vars, &extra)?;
+        let loss = outs.get("loss")?.item_f32()?;
+        let dloss = outs.get("distill_loss")?.item_f32()?;
+        self.vars.adopt_prefix(&outs, "params.", "params.");
+        self.vars.adopt_prefix(&outs, "opt.", "opt.");
+        self.step += 1;
+        Ok(StepStats {
+            step: self.step,
+            loss,
+            distill_loss: dloss,
+        })
+    }
+
+    fn snapshot(&self) -> Result<Checkpoint> {
+        let mut params = TensorMap::new();
+        params.adopt_prefix(&self.vars, "params.", "params.");
+        Ok(Checkpoint::new(0, self.step, params))
+    }
+
+    fn set_teachers(&mut self, peers: Vec<Arc<Checkpoint>>) -> Result<()> {
+        self.teachers = peers.into_iter().map(|c| c.params.clone()).collect();
+        Ok(())
+    }
+
+    fn evaluate(&mut self) -> Result<EvalStats> {
+        let mut sum = 0.0f64;
+        let mut count = 0.0f64;
+        for b in &self.val.batches {
+            let mut extra = TensorMap::new();
+            extra.insert("dense", b.dense.clone());
+            extra.insert("cat_idx", b.cat_idx.clone());
+            extra.insert("labels", b.labels.clone());
+            let outs = run_mapped(&self.eval_exe, &self.vars, &extra)?;
+            sum += outs.get("sum_loss")?.item_f32()? as f64;
+            count += outs.get("count")?.item_f32()? as f64;
+        }
+        Ok(EvalStats {
+            loss: sum / count.max(1.0),
+            accuracy: None,
+        })
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.step
+    }
+
+    fn params(&self) -> &TensorMap {
+        &self.vars
+    }
+}

@@ -1,0 +1,170 @@
+//! The image-classification member (Fig 3 / ImageNet stand-in).
+//!
+//! Momentum SGD with the Goyal-style warmup schedule is supplied by the
+//! orchestrator's [`LrSchedule`](crate::codistill::LrSchedule); accuracy is
+//! the Fig 3 y-axis so `evaluate` reports top-1 as well as loss.
+
+use crate::codistill::{Checkpoint, EvalStats, Member, StepStats};
+use crate::data::images::{ImageBatch, ImageGen};
+use crate::models::lm::{run_mapped, zeros_for_prefix};
+use crate::runtime::{Bundle, Executable, Tensor, TensorMap};
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Fixed validation set shared by all members of an experiment.
+pub struct ImagesValSet {
+    pub batches: Vec<ImageBatch>,
+}
+
+impl ImagesValSet {
+    #[allow(clippy::too_many_arguments)]
+    pub fn generate(
+        seed: u64,
+        stream: u64,
+        size: usize,
+        channels: usize,
+        classes: usize,
+        batch: usize,
+        n: usize,
+        noise: f64,
+    ) -> Result<Arc<Self>> {
+        let mut gen = ImageGen::new(seed, stream, size, channels, classes).with_noise(noise);
+        let batches = (0..n)
+            .map(|_| gen.next_batch(batch))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Arc::new(ImagesValSet { batches }))
+    }
+}
+
+pub struct ImagesMember {
+    train_step: Arc<Executable>,
+    predict: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+    vars: TensorMap,
+    teachers: Vec<TensorMap>,
+    gen: ImageGen,
+    val: Arc<ImagesValSet>,
+    batch: usize,
+    classes: usize,
+    step: u64,
+}
+
+impl ImagesMember {
+    pub fn new(
+        bundle: &Bundle,
+        data_seed: u64,
+        stream: u64,
+        init_seed: i32,
+        noise: f64,
+        val: Arc<ImagesValSet>,
+    ) -> Result<Self> {
+        let train_step = bundle.exe("train_step")?;
+        let predict = bundle.exe("predict")?;
+        let eval_exe = bundle.exe("eval")?;
+        let batch = bundle.meta_usize("batch")?;
+        let size = bundle.meta_usize("size")?;
+        let channels = bundle.meta_usize("channels")?;
+        let classes = bundle.meta_usize("classes")?;
+        let init = bundle.exe("init")?;
+        let outs = init.run(&[&Tensor::scalar_i32(init_seed)])?;
+        let mut vars = TensorMap::from_outputs(init.spec(), outs)?;
+        vars.merge(zeros_for_prefix(train_step.spec(), "opt."));
+        Ok(ImagesMember {
+            train_step,
+            predict,
+            eval_exe,
+            vars,
+            teachers: Vec::new(),
+            gen: ImageGen::new(data_seed, stream, size, channels, classes).with_noise(noise),
+            val,
+            batch,
+            classes,
+            step: 0,
+        })
+    }
+
+    fn teacher_probs(&mut self, batch: &ImageBatch) -> Result<Tensor> {
+        let mut acc: Option<Tensor> = None;
+        for t in &self.teachers {
+            let mut extra = TensorMap::new();
+            extra.insert("images", batch.images.clone());
+            let outs = run_mapped(&self.predict, t, &extra)?;
+            let p = outs.get("probs")?.clone();
+            match &mut acc {
+                None => acc = Some(p),
+                Some(a) => a.add_assign(&p)?,
+            }
+        }
+        let mut p = acc.context("no teachers")?;
+        if self.teachers.len() > 1 {
+            p.scale(1.0 / self.teachers.len() as f32)?;
+        }
+        Ok(p)
+    }
+}
+
+impl Member for ImagesMember {
+    fn train_step(&mut self, distill_w: f32, lr: f32) -> Result<StepStats> {
+        let batch = self.gen.next_batch(self.batch)?;
+        let (probs, w) = if distill_w > 0.0 && !self.teachers.is_empty() {
+            (self.teacher_probs(&batch)?, distill_w)
+        } else {
+            (Tensor::full_f32(&[self.batch, self.classes], 0.0), 0.0)
+        };
+        let mut extra = TensorMap::new();
+        extra.insert("images", batch.images);
+        extra.insert("labels", batch.labels);
+        extra.insert("teacher_probs", probs);
+        extra.insert("distill_w", Tensor::scalar_f32(w));
+        extra.insert("lr", Tensor::scalar_f32(lr));
+        let outs = run_mapped(&self.train_step, &self.vars, &extra)?;
+        let loss = outs.get("loss")?.item_f32()?;
+        let dloss = outs.get("distill_loss")?.item_f32()?;
+        self.vars.adopt_prefix(&outs, "params.", "params.");
+        self.vars.adopt_prefix(&outs, "opt.", "opt.");
+        self.step += 1;
+        Ok(StepStats {
+            step: self.step,
+            loss,
+            distill_loss: dloss,
+        })
+    }
+
+    fn snapshot(&self) -> Result<Checkpoint> {
+        let mut params = TensorMap::new();
+        params.adopt_prefix(&self.vars, "params.", "params.");
+        Ok(Checkpoint::new(0, self.step, params))
+    }
+
+    fn set_teachers(&mut self, peers: Vec<Arc<Checkpoint>>) -> Result<()> {
+        self.teachers = peers.into_iter().map(|c| c.params.clone()).collect();
+        Ok(())
+    }
+
+    fn evaluate(&mut self) -> Result<EvalStats> {
+        let mut sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut count = 0.0f64;
+        for b in &self.val.batches {
+            let mut extra = TensorMap::new();
+            extra.insert("images", b.images.clone());
+            extra.insert("labels", b.labels.clone());
+            let outs = run_mapped(&self.eval_exe, &self.vars, &extra)?;
+            sum += outs.get("sum_loss")?.item_f32()? as f64;
+            correct += outs.get("correct")?.item_f32()? as f64;
+            count += outs.get("count")?.item_f32()? as f64;
+        }
+        Ok(EvalStats {
+            loss: sum / count.max(1.0),
+            accuracy: Some(correct / count.max(1.0)),
+        })
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.step
+    }
+
+    fn params(&self) -> &TensorMap {
+        &self.vars
+    }
+}

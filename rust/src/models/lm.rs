@@ -1,0 +1,621 @@
+//! The language-model codistillation member (the paper's Common Crawl
+//! workload).
+//!
+//! Two flavours share all the plumbing:
+//!
+//! * [`LmMember`] — a whole sync-SGD group simulated as one fused
+//!   large-batch `train_step` (mathematically identical: the mean gradient
+//!   over W shards of size b equals the gradient of one W·b batch).
+//! * [`LmSyncGroup`] — the explicit data-parallel path: W workers, each
+//!   running the per-worker `grad` executable on its own shard (in
+//!   parallel threads), reduced with [`allreduce_mean`], applied with the
+//!   `apply` executable. Used to validate the fused equivalence and to
+//!   measure coordinator overhead.
+//!
+//! Teacher handling follows the paper: a member holds stale copies of its
+//! peers' weights (refreshed by the orchestrator on the reload interval)
+//! and computes teacher predictions *locally* on its own next batch with
+//! the `predict` executable. The teacher's RNN hidden state on this
+//! member's streams is owned by this member — stale weights, fresh state.
+
+use crate::codistill::{Checkpoint, EvalStats, Member, StepStats};
+use crate::data::corpus::{Batcher, CorpusConfig};
+use crate::runtime::{Bundle, Executable, Tensor, TensorMap};
+use crate::sgd::allreduce::{allreduce_mean, ReduceStrategy};
+use anyhow::{bail, Context, Result};
+use std::sync::{Arc, Mutex};
+
+/// Fig 2a label-smoothing baselines: ψ against a fixed distribution.
+#[derive(Debug, Clone)]
+pub enum SmoothingMode {
+    /// Plain codistillation (teacher = stale peers).
+    None,
+    /// ψ against the uniform distribution (confidence penalty baseline).
+    Uniform,
+    /// ψ against the corpus unigram distribution.
+    Unigram(Vec<f32>),
+}
+
+/// Static dims read from the bundle.
+#[derive(Debug, Clone, Copy)]
+pub struct LmDims {
+    pub vocab: usize,
+    pub batch: usize,
+    pub unroll: usize,
+}
+
+impl LmDims {
+    pub fn from_bundle(bundle: &Bundle) -> Result<Self> {
+        Ok(LmDims {
+            vocab: bundle.meta_usize("vocab")?,
+            batch: bundle.meta_usize("batch")?,
+            unroll: bundle.meta_usize("unroll")?,
+        })
+    }
+}
+
+/// A stale teacher copy + its RNN state on this member's streams.
+struct Teacher {
+    /// `params.*` of the stale peer.
+    params: TensorMap,
+    /// `state.*` threaded through `predict` calls.
+    state: TensorMap,
+    /// Step the checkpoint was published at (staleness accounting).
+    ckpt_step: u64,
+}
+
+/// Shared plumbing for both flavours.
+struct LmCore {
+    dims: LmDims,
+    predict: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+    /// Training variables: `params.*`, `opt.*`, `state.*`.
+    vars: TensorMap,
+    teachers: Vec<Teacher>,
+    smoothing: SmoothingMode,
+    batcher: Batcher,
+    val_batcher: Batcher,
+    val_state: TensorMap,
+    val_batches: usize,
+    zero_probs: Tensor,
+    smooth_probs: Option<Tensor>,
+    /// Pre-converted literals for step-invariant inputs (zero / smoothing
+    /// distributions) — §Perf constant-input caching.
+    const_lits: std::collections::HashMap<String, xla::Literal>,
+    step: u64,
+    /// Cumulative teacher forward passes (perf accounting).
+    teacher_fwd: u64,
+}
+
+pub fn zeros_for_prefix(spec: &crate::runtime::Spec, prefix: &str) -> TensorMap {
+    let mut m = TensorMap::new();
+    for idx in spec.inputs_with_prefix(prefix) {
+        let ts = &spec.inputs[idx];
+        m.insert(ts.name.clone(), Tensor::zeros(ts));
+    }
+    m
+}
+
+pub fn run_mapped(
+    exe: &Executable,
+    joined: &TensorMap,
+    extra: &TensorMap,
+) -> Result<TensorMap> {
+    run_mapped_cached(exe, joined, extra, &std::collections::HashMap::new())
+}
+
+/// Like [`run_mapped`], but inputs whose names appear in `cached` reuse a
+/// pre-converted literal instead of re-converting the host tensor every
+/// step. Used for step-invariant inputs (the zero / smoothing teacher
+/// distributions) — see EXPERIMENTS.md §Perf.
+pub fn run_mapped_cached(
+    exe: &Executable,
+    joined: &TensorMap,
+    extra: &TensorMap,
+    cached: &std::collections::HashMap<String, xla::Literal>,
+) -> Result<TensorMap> {
+    let spec = exe.spec();
+    let inputs = joined.assemble(spec, extra)?;
+    // Convert only the non-cached inputs.
+    let mut fresh: Vec<xla::Literal> = Vec::with_capacity(inputs.len());
+    let mut use_cache: Vec<Option<&xla::Literal>> = Vec::with_capacity(inputs.len());
+    for (t, ts) in inputs.iter().zip(spec.inputs.iter()) {
+        if let Some(l) = cached.get(&ts.name) {
+            use_cache.push(Some(l));
+        } else {
+            use_cache.push(None);
+            fresh.push(t.to_literal()?);
+        }
+    }
+    let mut it = fresh.iter();
+    let refs: Vec<&xla::Literal> = use_cache
+        .iter()
+        .map(|slot| slot.unwrap_or_else(|| it.next().expect("fresh literal count")))
+        .collect();
+    TensorMap::from_outputs(spec, exe.run_refs(&refs)?)
+}
+
+impl LmCore {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        bundle: &Bundle,
+        train_spec: &crate::runtime::Spec,
+        seed: u64,
+        init_seed: i32,
+        streams: &[u64],
+        val_streams: &[u64],
+        corpus: &CorpusConfig,
+        smoothing: SmoothingMode,
+        val_batches: usize,
+    ) -> Result<Self> {
+        let dims = LmDims::from_bundle(bundle)?;
+        if corpus.vocab != dims.vocab {
+            bail!("corpus vocab {} != bundle vocab {}", corpus.vocab, dims.vocab);
+        }
+        if val_streams.len() != dims.batch {
+            bail!(
+                "bundle batch {} != {} validation stream rows",
+                dims.batch,
+                val_streams.len()
+            );
+        }
+        let init = bundle.exe("init")?;
+        let predict = bundle.exe("predict")?;
+        let eval_exe = bundle.exe("eval")?;
+
+        let seed_t = Tensor::scalar_i32(init_seed);
+        let outs = init.run(&[&seed_t])?;
+        let mut vars = TensorMap::from_outputs(init.spec(), outs)?;
+        vars.merge(zeros_for_prefix(train_spec, "opt."));
+        vars.merge(zeros_for_prefix(train_spec, "state."));
+
+        let tb = dims.unroll * dims.batch;
+        let zero_probs = Tensor::full_f32(&[tb, dims.vocab], 0.0);
+        let smooth_probs = match &smoothing {
+            SmoothingMode::None => None,
+            SmoothingMode::Uniform => Some(Tensor::full_f32(
+                &[tb, dims.vocab],
+                1.0 / dims.vocab as f32,
+            )),
+            SmoothingMode::Unigram(u) => {
+                if u.len() != dims.vocab {
+                    bail!("unigram length {} != vocab {}", u.len(), dims.vocab);
+                }
+                let mut data = Vec::with_capacity(tb * dims.vocab);
+                for _ in 0..tb {
+                    data.extend_from_slice(u);
+                }
+                Some(Tensor::f32(&[tb, dims.vocab], data)?)
+            }
+        };
+
+        let val_state = zeros_for_prefix(eval_exe.spec(), "state.");
+        let mut const_lits = std::collections::HashMap::new();
+        // The constant ψ target (zeros for plain runs, the smoothing
+        // distribution for the Fig 2a baselines) is by far the largest
+        // step-invariant input (T·B·V floats); convert it once.
+        let const_probs = smooth_probs.as_ref().unwrap_or(&zero_probs);
+        const_lits.insert("teacher_probs".to_string(), const_probs.to_literal()?);
+        Ok(LmCore {
+            dims,
+            predict,
+            eval_exe,
+            vars,
+            teachers: Vec::new(),
+            smoothing,
+            batcher: Batcher::new(corpus, seed, streams, dims.unroll),
+            val_batcher: Batcher::new(corpus, seed, val_streams, dims.unroll),
+            val_state,
+            val_batches,
+            zero_probs,
+            smooth_probs,
+            const_lits,
+            step: 0,
+            teacher_fwd: 0,
+        })
+    }
+
+    /// Teacher soft targets for a batch: mean over teachers' predictions
+    /// (Algorithm 1). Advances each teacher's RNN state.
+    fn teacher_probs(&mut self, tokens: &Tensor) -> Result<Tensor> {
+        let mut acc: Option<Tensor> = None;
+        let n = self.teachers.len();
+        let spec = self.predict.spec().clone();
+        for t in self.teachers.iter_mut() {
+            let mut extra = TensorMap::new();
+            extra.insert("tokens", tokens.clone());
+            let mut joined = t.params.clone();
+            joined.merge(t.state.clone());
+            let outs = run_mapped(&self.predict, &joined, &extra)?;
+            let _ = &spec;
+            self.teacher_fwd += 1;
+            // carry teacher state forward on this member's streams
+            t.state.adopt_prefix(&outs, "state.", "state.");
+            let probs = outs.get("probs")?.clone();
+            match &mut acc {
+                None => acc = Some(probs),
+                Some(a) => a.add_assign(&probs)?,
+            }
+        }
+        let mut probs = acc.context("teacher_probs with no teachers")?;
+        if n > 1 {
+            probs.scale(1.0 / n as f32)?;
+        }
+        Ok(probs)
+    }
+
+    /// ψ target + effective weight for this step.
+    fn distill_inputs(&mut self, tokens: &Tensor, distill_w: f32) -> Result<(Tensor, f32)> {
+        if distill_w <= 0.0 {
+            return Ok((self.zero_probs.clone(), 0.0));
+        }
+        match &self.smoothing {
+            SmoothingMode::Uniform | SmoothingMode::Unigram(_) => {
+                Ok((self.smooth_probs.clone().unwrap(), distill_w))
+            }
+            SmoothingMode::None => {
+                if self.teachers.is_empty() {
+                    Ok((self.zero_probs.clone(), 0.0))
+                } else {
+                    Ok((self.teacher_probs(tokens)?, distill_w))
+                }
+            }
+        }
+    }
+
+    fn evaluate(&mut self) -> Result<EvalStats> {
+        let mut sum = 0.0f64;
+        let mut count = 0.0f64;
+        for _ in 0..self.val_batches {
+            let tokens = self.val_batcher.next_batch()?;
+            let mut extra = TensorMap::new();
+            extra.insert("tokens", tokens);
+            let mut joined = TensorMap::new();
+            joined.adopt_prefix(&self.vars, "params.", "params.");
+            joined.merge(self.val_state.clone());
+            let outs = run_mapped(&self.eval_exe, &joined, &extra)?;
+            sum += outs.get("sum_loss")?.item_f32()? as f64;
+            count += outs.get("count")?.item_f32()? as f64;
+            self.val_state.adopt_prefix(&outs, "state.", "state.");
+        }
+        Ok(EvalStats {
+            loss: sum / count.max(1.0),
+            accuracy: None,
+        })
+    }
+
+    fn snapshot(&self) -> Result<Checkpoint> {
+        let mut params = TensorMap::new();
+        params.adopt_prefix(&self.vars, "params.", "params.");
+        Ok(Checkpoint::new(0, self.step, params))
+    }
+
+    fn set_teachers(&mut self, peers: Vec<Arc<Checkpoint>>) -> Result<()> {
+        // Keep existing per-teacher RNN state when the peer set is stable:
+        // stale weights, fresh state (see module docs).
+        let mut new_teachers = Vec::with_capacity(peers.len());
+        for (i, ck) in peers.into_iter().enumerate() {
+            let state = if let Some(old) = self.teachers.get_mut(i) {
+                std::mem::replace(&mut old.state, TensorMap::new())
+            } else {
+                zeros_for_prefix(self.predict.spec(), "state.")
+            };
+            new_teachers.push(Teacher {
+                params: ck.params.clone(),
+                state,
+                ckpt_step: ck.step,
+            });
+        }
+        self.teachers = new_teachers;
+        Ok(())
+    }
+
+    /// Probabilities on an arbitrary token batch using CURRENT params
+    /// (zeroed state; diagnostics + §3.4.1 fixed-ensemble teachers).
+    fn predict_probs(&self, tokens: &Tensor) -> Result<Tensor> {
+        let mut extra = TensorMap::new();
+        extra.insert("tokens", tokens.clone());
+        let mut joined = TensorMap::new();
+        joined.adopt_prefix(&self.vars, "params.", "params.");
+        joined.merge(zeros_for_prefix(self.predict.spec(), "state."));
+        let outs = run_mapped(&self.predict, &joined, &extra)?;
+        Ok(outs.get("probs")?.clone())
+    }
+}
+
+// ------------------------------------------------------------- fused member
+
+/// One codistilling member simulated as a fused large-batch group.
+pub struct LmMember {
+    core: LmCore,
+    train_step: Arc<Executable>,
+}
+
+impl LmMember {
+    /// `streams`/`val_streams` come from a [`crate::data::ShardPlan`];
+    /// both must have exactly `bundle.batch` rows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        bundle: &Bundle,
+        seed: u64,
+        init_seed: i32,
+        streams: &[u64],
+        val_streams: &[u64],
+        corpus: &CorpusConfig,
+        smoothing: SmoothingMode,
+        val_batches: usize,
+    ) -> Result<Self> {
+        let train_step = bundle.exe("train_step")?;
+        let dims = LmDims::from_bundle(bundle)?;
+        if streams.len() != dims.batch {
+            bail!("bundle batch {} != {} stream rows", dims.batch, streams.len());
+        }
+        let core = LmCore::new(
+            bundle,
+            train_step.spec(),
+            seed,
+            init_seed,
+            streams,
+            val_streams,
+            corpus,
+            smoothing,
+            val_batches,
+        )?;
+        Ok(LmMember { core, train_step })
+    }
+
+    pub fn dims(&self) -> LmDims {
+        self.core.dims
+    }
+
+    pub fn predict_probs(&self, tokens: &Tensor) -> Result<Tensor> {
+        self.core.predict_probs(tokens)
+    }
+
+    pub fn teacher_forward_count(&self) -> u64 {
+        self.core.teacher_fwd
+    }
+
+    /// Install a fixed (never-reloaded) teacher set — the offline
+    /// distillation phase of §3.4.1.
+    pub fn set_fixed_teachers(&mut self, peers: Vec<Arc<Checkpoint>>) -> Result<()> {
+        self.core.set_teachers(peers)
+    }
+
+    /// Observed staleness of the current teacher set, in steps.
+    pub fn teacher_staleness(&self) -> Vec<u64> {
+        self.core
+            .teachers
+            .iter()
+            .map(|t| self.core.step.saturating_sub(t.ckpt_step))
+            .collect()
+    }
+}
+
+impl Member for LmMember {
+    fn train_step(&mut self, distill_w: f32, lr: f32) -> Result<StepStats> {
+        let tokens = self.core.batcher.next_batch()?;
+        let (probs, w) = self.core.distill_inputs(&tokens, distill_w)?;
+        // Constant ψ targets (zeros / smoothing) reuse their pre-converted
+        // literal; live teacher predictions convert fresh each step.
+        let is_const = match &self.core.smoothing {
+            SmoothingMode::None => w == 0.0,
+            _ => true,
+        };
+        let mut extra = TensorMap::new();
+        extra.insert("tokens", tokens);
+        extra.insert("teacher_probs", probs);
+        extra.insert("distill_w", Tensor::scalar_f32(w));
+        extra.insert("lr", Tensor::scalar_f32(lr));
+        let empty = std::collections::HashMap::new();
+        let cache = if is_const { &self.core.const_lits } else { &empty };
+        let outs = run_mapped_cached(&self.train_step, &self.core.vars, &extra, cache)?;
+        let loss = outs.get("loss")?.item_f32()?;
+        let dloss = outs.get("distill_loss")?.item_f32()?;
+        self.core.vars.adopt_prefix(&outs, "params.", "params.");
+        self.core.vars.adopt_prefix(&outs, "opt.", "opt.");
+        self.core.vars.adopt_prefix(&outs, "state.", "state.");
+        self.core.step += 1;
+        Ok(StepStats {
+            step: self.core.step,
+            loss,
+            distill_loss: dloss,
+        })
+    }
+
+    fn snapshot(&self) -> Result<Checkpoint> {
+        self.core.snapshot()
+    }
+
+    fn set_teachers(&mut self, peers: Vec<Arc<Checkpoint>>) -> Result<()> {
+        self.core.set_teachers(peers)
+    }
+
+    fn evaluate(&mut self) -> Result<EvalStats> {
+        self.core.evaluate()
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.core.step
+    }
+
+    fn params(&self) -> &TensorMap {
+        &self.core.vars
+    }
+}
+
+// ------------------------------------------------------- allreduce group
+
+/// The explicit data-parallel sync-SGD group: W workers × per-worker
+/// `grad` at batch b, reduced in Rust, applied with `apply`.
+pub struct LmSyncGroup {
+    core: LmCore,
+    grad: Arc<Executable>,
+    apply: Arc<Executable>,
+    workers: usize,
+    worker_batch: usize,
+    /// Per-worker batchers (each over its own stream rows) + RNN state.
+    worker_data: Vec<Mutex<(Batcher, TensorMap)>>,
+    strategy: ReduceStrategy,
+}
+
+impl LmSyncGroup {
+    /// `worker_bundle` must expose `grad`/`apply` at per-worker batch b;
+    /// `eval_bundle` (can be the same) provides init/predict/eval.
+    /// `streams.len()` must equal `workers * b`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        worker_bundle: &Bundle,
+        eval_bundle: &Bundle,
+        seed: u64,
+        init_seed: i32,
+        workers: usize,
+        streams: &[u64],
+        val_streams: &[u64],
+        corpus: &CorpusConfig,
+        val_batches: usize,
+    ) -> Result<Self> {
+        let grad = worker_bundle.exe("grad")?;
+        let apply = worker_bundle.exe("apply")?;
+        let wdims = LmDims::from_bundle(worker_bundle)?;
+        if streams.len() != workers * wdims.batch {
+            bail!(
+                "{} streams for {} workers x batch {}",
+                streams.len(),
+                workers,
+                wdims.batch
+            );
+        }
+        let core = LmCore::new(
+            eval_bundle,
+            apply.spec(),
+            seed,
+            init_seed,
+            streams, // unused by workers; core batcher unused in group mode
+            val_streams,
+            corpus,
+            SmoothingMode::None,
+            val_batches,
+        )
+        .or_else(|_| {
+            // core batcher wants exactly eval-bundle batch rows; reuse the
+            // validation rows for the (unused) training batcher.
+            LmCore::new(
+                eval_bundle,
+                apply.spec(),
+                seed,
+                init_seed,
+                val_streams,
+                val_streams,
+                corpus,
+                SmoothingMode::None,
+                val_batches,
+            )
+        })?;
+        let mut worker_data = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let rows = &streams[w * wdims.batch..(w + 1) * wdims.batch];
+            let batcher = Batcher::new(corpus, seed, rows, wdims.unroll);
+            let state = zeros_for_prefix(grad.spec(), "state.");
+            worker_data.push(Mutex::new((batcher, state)));
+        }
+        Ok(LmSyncGroup {
+            core,
+            grad,
+            apply,
+            workers,
+            worker_batch: wdims.batch,
+            strategy: ReduceStrategy::Tree,
+            worker_data,
+        })
+    }
+
+    pub fn with_strategy(mut self, s: ReduceStrategy) -> Self {
+        self.strategy = s;
+        self
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn effective_batch(&self) -> usize {
+        self.workers * self.worker_batch
+    }
+
+    fn worker_grad(&self, w: usize) -> Result<TensorMap> {
+        let mut guard = self.worker_data[w].lock().unwrap();
+        let (batcher, state) = &mut *guard;
+        let tokens = batcher.next_batch()?;
+        let tb = batcher.unroll() * batcher.batch_size();
+        let zero_probs = Tensor::full_f32(&[tb, self.core.dims.vocab], 0.0);
+        let mut extra = TensorMap::new();
+        extra.insert("tokens", tokens);
+        extra.insert("teacher_probs", zero_probs);
+        extra.insert("distill_w", Tensor::scalar_f32(0.0));
+        let mut joined = TensorMap::new();
+        joined.adopt_prefix(&self.core.vars, "params.", "params.");
+        joined.merge(state.clone());
+        let outs = run_mapped(&self.grad, &joined, &extra)?;
+        state.adopt_prefix(&outs, "state.", "state.");
+        Ok(outs)
+    }
+}
+
+impl Member for LmSyncGroup {
+    fn train_step(&mut self, _distill_w: f32, lr: f32) -> Result<StepStats> {
+        // Codistillation at per-worker granularity is exercised through the
+        // fused member; the explicit group is the plain-SGD algorithmic
+        // path (grad fan-out → allreduce → apply).
+        //
+        // Worker grads run sequentially on this thread: PJRT wrapper types
+        // are not Send (Rc internals), and XLA's CPU client already
+        // parallelizes each execution internally. The *reduction* (pure
+        // Rust) is thread-parallel under ReduceStrategy::Tree.
+        let per_worker: Vec<TensorMap> = (0..self.workers)
+            .map(|w| self.worker_grad(w))
+            .collect::<Result<_>>()?;
+        let mut loss = 0.0f32;
+        for o in &per_worker {
+            loss += o.get("loss")?.item_f32()?;
+        }
+        loss /= self.workers as f32;
+        let reduced = allreduce_mean(per_worker, "grads.", self.strategy)?;
+
+        let mut extra = TensorMap::new();
+        extra.insert("lr", Tensor::scalar_f32(lr));
+        let mut joined = TensorMap::new();
+        joined.adopt_prefix(&self.core.vars, "params.", "params.");
+        joined.adopt_prefix(&self.core.vars, "opt.", "opt.");
+        joined.adopt_prefix(&reduced, "grads.", "grads.");
+        let outs = run_mapped(&self.apply, &joined, &extra)?;
+        self.core.vars.adopt_prefix(&outs, "params.", "params.");
+        self.core.vars.adopt_prefix(&outs, "opt.", "opt.");
+        self.core.step += 1;
+        Ok(StepStats {
+            step: self.core.step,
+            loss,
+            distill_loss: 0.0,
+        })
+    }
+
+    fn snapshot(&self) -> Result<Checkpoint> {
+        self.core.snapshot()
+    }
+
+    fn set_teachers(&mut self, peers: Vec<Arc<Checkpoint>>) -> Result<()> {
+        self.core.set_teachers(peers)
+    }
+
+    fn evaluate(&mut self) -> Result<EvalStats> {
+        self.core.evaluate()
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.core.step
+    }
+
+    fn params(&self) -> &TensorMap {
+        &self.core.vars
+    }
+}

@@ -1,0 +1,15 @@
+//! Model-family trainers (codistillation [`Member`](crate::codistill::Member)
+//! implementations) built on the artifact bundles.
+//!
+//! * [`lm`] — the LayerNorm-LSTM language model (Common Crawl experiments):
+//!   fused large-batch member + real allreduce worker group.
+//! * [`criteo`] — the CTR DNN (Table 1 churn experiments).
+//! * [`images`] — the convnet (Fig 3 / ImageNet experiments).
+
+pub mod criteo;
+pub mod images;
+pub mod lm;
+
+pub use criteo::CriteoMember;
+pub use images::ImagesMember;
+pub use lm::{LmMember, LmSyncGroup, SmoothingMode};

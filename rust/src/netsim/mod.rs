@@ -1,0 +1,164 @@
+//! Simulated cluster wall-clock model.
+//!
+//! The paper's Fig 1b shape — step time degrading as synchronous worker
+//! count grows — comes from (i) allreduce cost scaling with workers and
+//! model size and (ii) the max-over-workers straggler tail (§1: "the long
+//! tail of the machine and network latency distributions"). Neither is
+//! observable on a single host, so this module prices them analytically:
+//!
+//!   step_time = max_{w∈workers}(compute_w) + allreduce_time
+//!   compute_w ~ compute_mean · LogNormal(0, σ)
+//!   allreduce_time = 2·(W−1)/W · bytes/bandwidth + 2·(W−1)·latency
+//!
+//! (ring allreduce; bandwidth term ~flat in W, latency term linear in W).
+//! Codistillation's exchange prices a checkpoint write + read per reload
+//! interval — the communication-cost asymmetry at the heart of §2.1.
+//!
+//! Defaults are calibrated to the paper's testbed scale: ~100ms/step GPU
+//! compute, 10GbE-ish effective bandwidth, sub-millisecond base latency.
+
+use crate::prng::Pcg64;
+
+pub mod sweep;
+
+/// Analytic wall-clock model for one synchronous worker group.
+#[derive(Debug, Clone)]
+pub struct ClusterModel {
+    /// Synchronous workers in the group.
+    pub workers: usize,
+    /// Mean per-worker compute time per step (seconds).
+    pub compute_mean_s: f64,
+    /// Lognormal sigma of per-worker compute jitter (straggler tail).
+    pub straggler_sigma: f64,
+    /// Gradient/model bytes exchanged per step per worker.
+    pub model_bytes: u64,
+    /// Effective point-to-point bandwidth (bytes/second).
+    pub bandwidth_bps: f64,
+    /// Per-hop latency (seconds).
+    pub latency_s: f64,
+    /// Steps between checkpoint exchanges (codistillation only).
+    pub reload_interval: u64,
+}
+
+impl ClusterModel {
+    /// A paper-scale default: `workers` GPUs, 40 MB model (the scaled LM's
+    /// f32 params × a gradient exchange), 1.25 GB/s effective bandwidth.
+    pub fn gpu_cluster(workers: usize, model_bytes: u64) -> Self {
+        ClusterModel {
+            workers,
+            compute_mean_s: 0.1,
+            straggler_sigma: 0.15,
+            model_bytes,
+            bandwidth_bps: 1.25e9,
+            latency_s: 25e-6,
+            reload_interval: 50,
+        }
+    }
+
+    /// Ring-allreduce time for this group.
+    pub fn allreduce_time(&self) -> f64 {
+        if self.workers <= 1 {
+            return 0.0;
+        }
+        let w = self.workers as f64;
+        let bw_term = 2.0 * (w - 1.0) / w * self.model_bytes as f64 / self.bandwidth_bps;
+        let lat_term = 2.0 * (w - 1.0) * self.latency_s;
+        bw_term + lat_term
+    }
+
+    /// Max-over-workers compute time (the synchronous straggler effect).
+    pub fn compute_time(&self, rng: &mut Pcg64) -> f64 {
+        let mut worst: f64 = 0.0;
+        for _ in 0..self.workers.max(1) {
+            let t = self.compute_mean_s * rng.lognormal(0.0, self.straggler_sigma);
+            worst = worst.max(t);
+        }
+        worst
+    }
+
+    /// One synchronous step's wall time.
+    pub fn step_time(&self, rng: &mut Pcg64) -> f64 {
+        self.compute_time(rng) + self.allreduce_time()
+    }
+
+    /// Expected step time (deterministic; used for closed-form sweeps).
+    /// E[max of n lognormals] is approximated by sampling.
+    pub fn mean_step_time(&self, samples: usize, seed: u64) -> f64 {
+        let mut rng = Pcg64::new(seed);
+        let total: f64 = (0..samples).map(|_| self.step_time(&mut rng)).sum();
+        total / samples as f64
+    }
+
+    /// Wall cost of one codistillation checkpoint exchange: write the
+    /// params once + read each teacher's params once, at full bandwidth.
+    /// Amortized per exchange (NOT per step) — this is why codistillation's
+    /// communication is cheap (§2.1).
+    pub fn checkpoint_exchange_time(&self) -> f64 {
+        2.0 * self.model_bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Per-step communication bytes for sync SGD vs codistillation —
+    /// the §2.1 comparison, used by the ablation bench.
+    pub fn sync_sgd_bytes_per_step(&self) -> u64 {
+        // ring allreduce moves ~2×model per worker per step
+        2 * self.model_bytes
+    }
+
+    pub fn codistill_bytes_per_step(&self) -> f64 {
+        2.0 * self.model_bytes as f64 / self.reload_interval.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_grows_with_latency_term() {
+        let mut m = ClusterModel::gpu_cluster(2, 40_000_000);
+        let t2 = m.allreduce_time();
+        m.workers = 256;
+        let t256 = m.allreduce_time();
+        assert!(t256 > t2, "{t256} !> {t2}");
+        m.workers = 1;
+        assert_eq!(m.allreduce_time(), 0.0);
+    }
+
+    #[test]
+    fn straggler_tail_grows_with_workers() {
+        let m8 = ClusterModel::gpu_cluster(8, 1);
+        let m256 = ClusterModel::gpu_cluster(256, 1);
+        let t8 = m8.mean_step_time(400, 1);
+        let t256 = m256.mean_step_time(400, 1);
+        assert!(
+            t256 > t8 * 1.1,
+            "max-of-256 ({t256}) should exceed max-of-8 ({t8}) by >10%"
+        );
+    }
+
+    #[test]
+    fn step_time_positive_and_reproducible() {
+        let m = ClusterModel::gpu_cluster(16, 40_000_000);
+        let mut r1 = Pcg64::new(5);
+        let mut r2 = Pcg64::new(5);
+        let a = m.step_time(&mut r1);
+        let b = m.step_time(&mut r2);
+        assert!(a > 0.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn codistill_communication_is_cheaper() {
+        // The §2.1 claim: per-step bytes for codistillation (amortized
+        // checkpoint reads) are far below sync SGD's allreduce traffic.
+        let m = ClusterModel::gpu_cluster(128, 40_000_000);
+        assert!(m.codistill_bytes_per_step() * 10.0 < m.sync_sgd_bytes_per_step() as f64);
+    }
+
+    #[test]
+    fn exchange_time_amortizes() {
+        let m = ClusterModel::gpu_cluster(128, 40_000_000);
+        let per_step = m.checkpoint_exchange_time() / m.reload_interval as f64;
+        assert!(per_step < m.allreduce_time());
+    }
+}

@@ -1,0 +1,38 @@
+//! Closed-form worker sweeps over the cluster model (Fig 1b's x-axis).
+
+use crate::netsim::ClusterModel;
+
+/// Step-time table across worker counts for a fixed model size.
+pub fn step_time_sweep(
+    workers: &[usize],
+    model_bytes: u64,
+    samples: usize,
+    seed: u64,
+) -> Vec<(usize, f64)> {
+    workers
+        .iter()
+        .map(|&w| {
+            let m = ClusterModel::gpu_cluster(w, model_bytes);
+            (w, m.mean_step_time(samples, seed ^ w as u64))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_monotone_in_workers() {
+        let s = step_time_sweep(&[8, 32, 128, 256], 40_000_000, 300, 7);
+        assert_eq!(s.len(), 4);
+        for pair in s.windows(2) {
+            assert!(
+                pair[1].1 >= pair[0].1 * 0.98,
+                "step time should not improve with more sync workers: {s:?}"
+            );
+        }
+        // 256 workers must be visibly worse than 8 (the Fig 1b cliff).
+        assert!(s[3].1 > s[0].1 * 1.05);
+    }
+}

@@ -1,0 +1,105 @@
+//! An artifact bundle: one directory of AOT-lowered executables belonging to
+//! a single model configuration.
+//!
+//! `python/compile/aot.py` writes, per model config, a directory like
+//!
+//! ```text
+//! artifacts/lm_b64/
+//!   bundle.txt          # key/value hyperparameters of the lowered model
+//!   init.hlo.txt        + init.spec.txt
+//!   grad.hlo.txt        + grad.spec.txt
+//!   apply.hlo.txt       + apply.spec.txt
+//!   train_step.hlo.txt  + train_step.spec.txt
+//!   predict.hlo.txt     + predict.spec.txt
+//!   eval.hlo.txt        + eval.spec.txt
+//! ```
+//!
+//! A [`Bundle`] lazily loads + compiles executables from the directory
+//! through the shared [`Runtime`] cache.
+
+use crate::runtime::client::Runtime;
+use crate::runtime::exec::Executable;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// A directory of executables for one model configuration.
+pub struct Bundle {
+    dir: PathBuf,
+    runtime: Arc<Runtime>,
+    /// Parsed `bundle.txt` hyperparameters.
+    meta: HashMap<String, String>,
+}
+
+impl Bundle {
+    /// Open a bundle directory, parsing `bundle.txt`.
+    pub fn open(runtime: Arc<Runtime>, dir: &Path) -> Result<Self> {
+        if !dir.is_dir() {
+            bail!(
+                "bundle directory {} does not exist — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        let meta_path = dir.join("bundle.txt");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let mut meta = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.splitn(2, ' ');
+            let k = it.next().unwrap().to_string();
+            let v = it.next().unwrap_or("").trim().to_string();
+            meta.insert(k, v);
+        }
+        Ok(Bundle {
+            dir: dir.to_path_buf(),
+            runtime,
+            meta,
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load (and cache) the executable with the given stem name.
+    pub fn exe(&self, name: &str) -> Result<Arc<Executable>> {
+        self.runtime.load(&self.dir.join(name))
+    }
+
+    /// Whether the bundle ships an executable with this stem name.
+    pub fn has(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).is_file()
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.runtime
+    }
+
+    /// Raw metadata value.
+    pub fn meta(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).map(|s| s.as_str())
+    }
+
+    /// Metadata value parsed as usize.
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        let v = self
+            .meta(key)
+            .with_context(|| format!("bundle {} missing meta key {key}", self.dir.display()))?;
+        v.parse()
+            .with_context(|| format!("bundle meta {key}={v} is not a usize"))
+    }
+
+    /// Metadata value parsed as f32.
+    pub fn meta_f32(&self, key: &str) -> Result<f32> {
+        let v = self
+            .meta(key)
+            .with_context(|| format!("bundle {} missing meta key {key}", self.dir.display()))?;
+        v.parse()
+            .with_context(|| format!("bundle meta {key}={v} is not an f32"))
+    }
+}

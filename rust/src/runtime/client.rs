@@ -1,0 +1,59 @@
+//! PJRT client wrapper with an executable cache.
+//!
+//! One [`Runtime`] per process; compiled executables are cached by artifact
+//! path so that e.g. every simulated worker group shares a single compiled
+//! `lm_grad` executable (PJRT executions are internally thread-safe).
+
+use crate::runtime::exec::Executable;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Process-wide runtime: PJRT CPU client + compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load and compile an artifact: `<stem>.hlo.txt` + `<stem>.spec.txt`.
+    ///
+    /// `stem` is the path without the `.hlo.txt` suffix, e.g.
+    /// `artifacts/lm/train_step`. Compiled executables are cached.
+    pub fn load(&self, stem: &Path) -> Result<Arc<Executable>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(stem) {
+                return Ok(exe.clone());
+            }
+        }
+        let hlo_path = stem.with_extension("hlo.txt");
+        let spec_path = stem.with_extension("spec.txt");
+        let exe = Arc::new(Executable::load(&self.client, &hlo_path, &spec_path)?);
+        let mut cache = self.cache.lock().unwrap();
+        Ok(cache.entry(stem.to_path_buf()).or_insert(exe).clone())
+    }
+
+    /// Number of distinct compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

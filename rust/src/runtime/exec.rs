@@ -1,0 +1,142 @@
+//! A single compiled artifact: HLO text + spec, executed via PJRT.
+
+use crate::runtime::spec::Spec;
+use crate::runtime::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Compiled executable plus its flattened I/O spec.
+///
+/// All artifacts are lowered with `return_tuple=True`, so execution yields a
+/// single tuple literal which is decomposed back into the spec'd outputs.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    spec: Spec,
+    /// Total number of `run` invocations (perf accounting).
+    runs: AtomicU64,
+}
+
+impl Executable {
+    /// Load HLO text + spec and compile on the given client.
+    pub fn load(client: &xla::PjRtClient, hlo_path: &Path, spec_path: &Path) -> Result<Self> {
+        let spec = Spec::load(spec_path)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .with_context(|| format!("non-utf8 path {}", hlo_path.display()))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", hlo_path.display()))?;
+        Ok(Executable {
+            exe,
+            spec,
+            runs: AtomicU64::new(0),
+        })
+    }
+
+    pub fn spec(&self) -> &Spec {
+        &self.spec
+    }
+
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    pub fn run_count(&self) -> u64 {
+        self.runs.load(Ordering::Relaxed)
+    }
+
+    /// Execute with host tensors, validating shapes/dtypes against the spec.
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, ts)) in inputs.iter().zip(self.spec.inputs.iter()).enumerate() {
+            if !t.matches(ts) {
+                bail!(
+                    "{}: input {} ({}) mismatch: tensor {:?} {:?} vs spec {:?} {:?}",
+                    self.spec.name,
+                    i,
+                    ts.name,
+                    t.dtype(),
+                    t.shape(),
+                    ts.dtype,
+                    ts.shape
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute with pre-built literals (no spec validation on inputs).
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        self.runs.fetch_add(1, Ordering::Relaxed);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(literals)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        self.collect_outputs(result)
+    }
+
+    /// Execute with borrowed literals — lets callers keep converted
+    /// literals for step-invariant inputs (§Perf: constant-input caching).
+    pub fn run_refs(&self, literals: &[&xla::Literal]) -> Result<Vec<Tensor>> {
+        self.runs.fetch_add(1, Ordering::Relaxed);
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(literals)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        self.collect_outputs(result)
+    }
+
+    fn collect_outputs(
+        &self,
+        result: Vec<Vec<xla::PjRtBuffer>>,
+    ) -> Result<Vec<Tensor>> {
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = tuple
+            .to_tuple()
+            .with_context(|| format!("{}: decomposing result tuple", self.spec.name))?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: spec declares {} outputs but executable returned {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ts) in parts.iter().zip(self.spec.outputs.iter()) {
+            let t = Tensor::from_literal(lit)
+                .with_context(|| format!("{}: converting output {}", self.spec.name, ts.name))?;
+            if !t.matches(ts) {
+                bail!(
+                    "{}: output {} mismatch: got {:?} {:?}, spec {:?} {:?}",
+                    self.spec.name,
+                    ts.name,
+                    t.dtype(),
+                    t.shape(),
+                    ts.dtype,
+                    ts.shape
+                );
+            }
+            out.push(t);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,25 @@
+//! Runtime layer: loads AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them through PJRT (the `xla` crate).
+//!
+//! This is the only module that talks to XLA. Everything above it works in
+//! terms of host [`Tensor`]s and named [`Executable`]s described by the
+//! text spec files that accompany each artifact.
+//!
+//! Interchange format is HLO **text**, not serialized `HloModuleProto`:
+//! jax >= 0.5 emits protos with 64-bit instruction ids which the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see /opt/xla-example/README.md).
+
+pub mod bundle;
+pub mod client;
+pub mod exec;
+pub mod spec;
+pub mod tensor;
+pub mod tmap;
+
+pub use bundle::Bundle;
+pub use client::Runtime;
+pub use exec::Executable;
+pub use spec::{DType, Spec, TensorSpec};
+pub use tensor::Tensor;
+pub use tmap::TensorMap;

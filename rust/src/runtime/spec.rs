@@ -1,0 +1,271 @@
+//! Text spec files describing the flattened I/O signature of each artifact.
+//!
+//! `aot.py` writes one `<name>.spec.txt` next to each `<name>.hlo.txt`.
+//! The format is deliberately line-based and dependency-free:
+//!
+//! ```text
+//! spec-version 1
+//! name lm_train_step
+//! in params.embedding f32 512,32
+//! in batch.tokens i32 16,17
+//! out loss f32 -
+//! ```
+//!
+//! Dims are comma-separated; `-` denotes a scalar (rank 0). The order of
+//! `in`/`out` lines is the exact flattened argument/result order of the
+//! lowered jax function, so the Rust side can match tensors positionally
+//! while still addressing them by name.
+
+use anyhow::{bail, Context, Result};
+use std::fmt;
+use std::path::Path;
+
+/// Element type of a tensor crossing the runtime boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            other => bail!("unknown dtype in spec: {other:?}"),
+        })
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::U32 => "u32",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Shape + dtype + flattened-position name of one input or output tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * self.dtype.size_bytes()
+    }
+}
+
+/// Parsed signature of one artifact.
+#[derive(Debug, Clone, Default)]
+pub struct Spec {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form `meta key value` lines (model hyperparameters etc).
+    pub meta: Vec<(String, String)>,
+}
+
+impl Spec {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut spec = Spec::default();
+        let mut saw_version = false;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let tag = parts.next().unwrap();
+            let rest: Vec<&str> = parts.collect();
+            let ctx = || format!("spec line {}: {:?}", lineno + 1, raw);
+            match tag {
+                "spec-version" => {
+                    if rest != ["1"] {
+                        bail!("unsupported spec version: {rest:?}");
+                    }
+                    saw_version = true;
+                }
+                "name" => {
+                    spec.name = rest.join(" ");
+                }
+                "in" | "out" => {
+                    if rest.len() != 3 {
+                        bail!("expected `{} <name> <dtype> <dims>`, got {}", tag, ctx());
+                    }
+                    let ts = TensorSpec {
+                        name: rest[0].to_string(),
+                        dtype: DType::parse(rest[1]).with_context(ctx)?,
+                        shape: parse_dims(rest[2]).with_context(ctx)?,
+                    };
+                    if tag == "in" {
+                        spec.inputs.push(ts);
+                    } else {
+                        spec.outputs.push(ts);
+                    }
+                }
+                "meta" => {
+                    if rest.len() < 2 {
+                        bail!("expected `meta <key> <value>`, got {}", ctx());
+                    }
+                    spec.meta.push((rest[0].to_string(), rest[1..].join(" ")));
+                }
+                other => bail!("unknown spec tag {other:?} in {}", ctx()),
+            }
+        }
+        if !saw_version {
+            bail!("spec missing `spec-version 1` header");
+        }
+        if spec.name.is_empty() {
+            bail!("spec missing `name`");
+        }
+        Ok(spec)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading spec {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing spec {}", path.display()))
+    }
+
+    /// Index of the input with the given name.
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|t| t.name == name)
+    }
+
+    /// Index of the output with the given name.
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|t| t.name == name)
+    }
+
+    /// Value of a `meta` key, if present.
+    pub fn meta(&self, key: &str) -> Option<&str> {
+        self.meta
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Inputs whose name starts with `prefix` (e.g. all `params.` leaves),
+    /// in flattened order.
+    pub fn inputs_with_prefix(&self, prefix: &str) -> Vec<usize> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.name.starts_with(prefix))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn outputs_with_prefix(&self, prefix: &str) -> Vec<usize> {
+        self.outputs
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.name.starts_with(prefix))
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+fn parse_dims(s: &str) -> Result<Vec<usize>> {
+    if s == "-" {
+        return Ok(vec![]);
+    }
+    s.split(',')
+        .map(|d| {
+            d.parse::<usize>()
+                .with_context(|| format!("bad dim {d:?}"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+spec-version 1
+name lm_train_step
+meta vocab 512
+meta batch 16
+in params.embedding f32 512,32
+in batch.tokens i32 16,17
+in lr f32 -
+out loss f32 -
+out params.embedding f32 512,32
+";
+
+    #[test]
+    fn parses_sample() {
+        let spec = Spec::parse(SAMPLE).unwrap();
+        assert_eq!(spec.name, "lm_train_step");
+        assert_eq!(spec.inputs.len(), 3);
+        assert_eq!(spec.outputs.len(), 2);
+        assert_eq!(spec.inputs[0].shape, vec![512, 32]);
+        assert_eq!(spec.inputs[2].shape, Vec::<usize>::new());
+        assert_eq!(spec.inputs[1].dtype, DType::I32);
+        assert_eq!(spec.meta("vocab"), Some("512"));
+        assert_eq!(spec.meta("missing"), None);
+    }
+
+    #[test]
+    fn indexes_by_name_and_prefix() {
+        let spec = Spec::parse(SAMPLE).unwrap();
+        assert_eq!(spec.input_index("lr"), Some(2));
+        assert_eq!(spec.input_index("nope"), None);
+        assert_eq!(spec.output_index("loss"), Some(0));
+        assert_eq!(spec.inputs_with_prefix("params."), vec![0]);
+        assert_eq!(spec.outputs_with_prefix("params."), vec![1]);
+    }
+
+    #[test]
+    fn rejects_missing_version() {
+        assert!(Spec::parse("name x\n").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = "spec-version 1\nname x\nin a f64 2,2\n";
+        assert!(Spec::parse(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dims() {
+        let bad = "spec-version 1\nname x\nin a f32 2,x\n";
+        assert!(Spec::parse(bad).is_err());
+    }
+
+    #[test]
+    fn tensor_spec_sizes() {
+        let t = TensorSpec {
+            name: "w".into(),
+            dtype: DType::F32,
+            shape: vec![3, 4],
+        };
+        assert_eq!(t.numel(), 12);
+        assert_eq!(t.size_bytes(), 48);
+        let s = TensorSpec {
+            name: "s".into(),
+            dtype: DType::F32,
+            shape: vec![],
+        };
+        assert_eq!(s.numel(), 1);
+    }
+}

@@ -1,0 +1,335 @@
+//! Host-side tensors crossing the PJRT boundary.
+//!
+//! A [`Tensor`] is a dense row-major array of f32 or i32 living on the
+//! host. Conversions to/from [`xla::Literal`] happen only at the runtime
+//! boundary; all coordinator code (allreduce, checkpoint store, data
+//! pipeline) manipulates `Tensor`s directly.
+
+use crate::runtime::spec::{DType, TensorSpec};
+use anyhow::{bail, Context, Result};
+
+/// Dense host tensor. Row-major (C) layout, matching XLA's default.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    // ---------------------------------------------------------------- ctors
+
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if data.len() != numel {
+            bail!(
+                "f32 tensor shape {:?} wants {} elems, got {}",
+                shape,
+                numel,
+                data.len()
+            );
+        }
+        Ok(Tensor::F32 {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if data.len() != numel {
+            bail!(
+                "i32 tensor shape {:?} wants {} elems, got {}",
+                shape,
+                numel,
+                data.len()
+            );
+        }
+        Ok(Tensor::I32 {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::F32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Tensor::I32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn zeros(spec: &TensorSpec) -> Self {
+        match spec.dtype {
+            DType::F32 => Tensor::F32 {
+                shape: spec.shape.clone(),
+                data: vec![0.0; spec.numel()],
+            },
+            DType::I32 | DType::U32 => Tensor::I32 {
+                shape: spec.shape.clone(),
+                data: vec![0; spec.numel()],
+            },
+        }
+    }
+
+    pub fn full_f32(shape: &[usize], v: f32) -> Self {
+        Tensor::F32 {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    // ------------------------------------------------------------ accessors
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            Tensor::F32 { .. } => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Scalar value of a rank-0 (or single-element) f32 tensor.
+    pub fn item_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("item_f32 on tensor with {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+
+    pub fn item_i32(&self) -> Result<i32> {
+        let d = self.as_i32()?;
+        if d.len() != 1 {
+            bail!("item_i32 on tensor with {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+
+    /// Whether shape and dtype match a spec entry.
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        let dt_ok = match (self.dtype(), spec.dtype) {
+            (DType::F32, DType::F32) => true,
+            (DType::I32, DType::I32) | (DType::I32, DType::U32) => true,
+            _ => false,
+        };
+        dt_ok && self.shape() == spec.shape.as_slice()
+    }
+
+    // ----------------------------------------------------- literal boundary
+
+    /// Convert to an `xla::Literal` for execution.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+        };
+        lit.reshape(&dims)
+            .with_context(|| format!("reshape literal to {:?}", self.shape()))
+    }
+
+    /// Convert from an `xla::Literal` (non-tuple) back to a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit
+            .array_shape()
+            .context("literal has no array shape (tuple?)")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let data = lit.to_vec::<f32>()?;
+                Tensor::f32(&dims, data)
+            }
+            xla::ElementType::S32 => {
+                let data = lit.to_vec::<i32>()?;
+                Tensor::i32(&dims, data)
+            }
+            xla::ElementType::U32 => {
+                // Reinterpret u32 as i32 on the host; the spec layer keeps
+                // track of signedness where it matters (PRNG seeds).
+                let data = lit.to_vec::<u32>()?;
+                Tensor::i32(&dims, data.into_iter().map(|v| v as i32).collect())
+            }
+            xla::ElementType::F64 => {
+                let data = lit.to_vec::<f64>()?;
+                Tensor::f32(&dims, data.into_iter().map(|v| v as f32).collect())
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    // ---------------------------------------------------------------- maths
+
+    /// Elementwise in-place add (for gradient reduction).
+    pub fn add_assign(&mut self, other: &Tensor) -> Result<()> {
+        if self.shape() != other.shape() {
+            bail!(
+                "add_assign shape mismatch: {:?} vs {:?}",
+                self.shape(),
+                other.shape()
+            );
+        }
+        let dst = self.as_f32_mut()?;
+        let src = other.as_f32()?;
+        for (d, s) in dst.iter_mut().zip(src.iter()) {
+            *d += *s;
+        }
+        Ok(())
+    }
+
+    /// Elementwise in-place scale.
+    pub fn scale(&mut self, k: f32) -> Result<()> {
+        for d in self.as_f32_mut()? {
+            *d *= k;
+        }
+        Ok(())
+    }
+
+    /// Mean absolute difference against another tensor (churn metric).
+    pub fn mean_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape() != other.shape() {
+            bail!("mean_abs_diff shape mismatch");
+        }
+        let a = self.as_f32()?;
+        let b = other.as_f32()?;
+        if a.is_empty() {
+            return Ok(0.0);
+        }
+        let sum: f64 = a
+            .iter()
+            .zip(b.iter())
+            .map(|(x, y)| (x - y).abs() as f64)
+            .sum();
+        Ok((sum / a.len() as f64) as f32)
+    }
+
+    /// L2 norm (diagnostics / divergence detection).
+    pub fn l2_norm(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        let s: f64 = d.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        Ok(s.sqrt() as f32)
+    }
+
+    pub fn is_finite(&self) -> bool {
+        match self {
+            Tensor::F32 { data, .. } => data.iter().all(|v| v.is_finite()),
+            Tensor::I32 { .. } => true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctor_checks_numel() {
+        assert!(Tensor::f32(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::f32(&[2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::i32(&[2], vec![1]).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::scalar_f32(3.5);
+        assert_eq!(t.numel(), 1);
+        assert_eq!(t.item_f32().unwrap(), 3.5);
+        assert!(t.item_i32().is_err());
+    }
+
+    #[test]
+    fn add_assign_and_scale() {
+        let mut a = Tensor::f32(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::f32(&[3], vec![10.0, 20.0, 30.0]).unwrap();
+        a.add_assign(&b).unwrap();
+        a.scale(0.5).unwrap();
+        assert_eq!(a.as_f32().unwrap(), &[5.5, 11.0, 16.5]);
+    }
+
+    #[test]
+    fn add_assign_shape_mismatch() {
+        let mut a = Tensor::f32(&[2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::f32(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        assert!(a.add_assign(&b).is_err());
+    }
+
+    #[test]
+    fn mean_abs_diff_basic() {
+        let a = Tensor::f32(&[4], vec![0.0, 1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::f32(&[4], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let d = a.mean_abs_diff(&b).unwrap();
+        assert!((d - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matches_spec() {
+        let spec = TensorSpec {
+            name: "x".into(),
+            dtype: DType::F32,
+            shape: vec![2, 2],
+        };
+        let t = Tensor::f32(&[2, 2], vec![0.0; 4]).unwrap();
+        assert!(t.matches(&spec));
+        let t2 = Tensor::i32(&[2, 2], vec![0; 4]).unwrap();
+        assert!(!t2.matches(&spec));
+    }
+
+    #[test]
+    fn zeros_from_spec() {
+        let spec = TensorSpec {
+            name: "x".into(),
+            dtype: DType::I32,
+            shape: vec![3],
+        };
+        let t = Tensor::zeros(&spec);
+        assert_eq!(t.as_i32().unwrap(), &[0, 0, 0]);
+    }
+
+    #[test]
+    fn finite_and_norm() {
+        let t = Tensor::f32(&[2], vec![3.0, 4.0]).unwrap();
+        assert!((t.l2_norm().unwrap() - 5.0).abs() < 1e-6);
+        assert!(t.is_finite());
+        let bad = Tensor::f32(&[1], vec![f32::NAN]).unwrap();
+        assert!(!bad.is_finite());
+    }
+}

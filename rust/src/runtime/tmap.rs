@@ -1,0 +1,243 @@
+//! Name-addressed tensor collections.
+//!
+//! Executable signatures are flat positional lists, but the coordinator
+//! thinks in named groups (`params.*`, `opt.*`, `state.*`, `tokens`, ...).
+//! A [`TensorMap`] bridges the two: assemble inputs for a [`Spec`] by name,
+//! capture outputs back into names, move whole prefixes between maps
+//! (e.g. teacher params into a student's predict call).
+
+use crate::runtime::spec::Spec;
+use crate::runtime::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// A named collection of host tensors.
+#[derive(Debug, Clone, Default)]
+pub struct TensorMap {
+    map: HashMap<String, Tensor>,
+}
+
+impl TensorMap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.map.insert(name.into(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map
+            .get(name)
+            .with_context(|| format!("TensorMap missing {name:?}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        self.map
+            .get_mut(name)
+            .with_context(|| format!("TensorMap missing {name:?}"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    /// Build the positional input list for a spec, overlaying `extra`
+    /// values (scalars like lr / distill_w) over this map's contents.
+    pub fn assemble<'a>(
+        &'a self,
+        spec: &Spec,
+        extra: &'a TensorMap,
+    ) -> Result<Vec<&'a Tensor>> {
+        let mut out = Vec::with_capacity(spec.inputs.len());
+        for ts in &spec.inputs {
+            let t = if let Some(t) = extra.map.get(&ts.name) {
+                t
+            } else if let Some(t) = self.map.get(&ts.name) {
+                t
+            } else {
+                bail!(
+                    "no tensor named {:?} for executable {} (have: {:?})",
+                    ts.name,
+                    spec.name,
+                    {
+                        let mut n: Vec<&str> =
+                            self.map.keys().map(|s| s.as_str()).collect();
+                        n.sort();
+                        n
+                    }
+                );
+            };
+            if !t.matches(ts) {
+                bail!(
+                    "{}: tensor {:?} has {:?} {:?}, spec wants {:?} {:?}",
+                    spec.name,
+                    ts.name,
+                    t.dtype(),
+                    t.shape(),
+                    ts.dtype,
+                    ts.shape
+                );
+            }
+            out.push(t);
+        }
+        Ok(out)
+    }
+
+    /// Capture executable outputs into a map keyed by the spec's names.
+    pub fn from_outputs(spec: &Spec, outputs: Vec<Tensor>) -> Result<Self> {
+        if outputs.len() != spec.outputs.len() {
+            bail!(
+                "{}: {} outputs for {} spec entries",
+                spec.name,
+                outputs.len(),
+                spec.outputs.len()
+            );
+        }
+        let mut map = HashMap::with_capacity(outputs.len());
+        for (ts, t) in spec.outputs.iter().zip(outputs) {
+            map.insert(ts.name.clone(), t);
+        }
+        Ok(TensorMap { map })
+    }
+
+    /// Copy every entry under `prefix` from `src`, optionally re-rooting it
+    /// under `new_prefix` (e.g. teacher `params.*` -> student-side storage).
+    pub fn adopt_prefix(&mut self, src: &TensorMap, prefix: &str, new_prefix: &str) {
+        for (k, v) in &src.map {
+            if let Some(rest) = k.strip_prefix(prefix) {
+                self.map.insert(format!("{new_prefix}{rest}"), v.clone());
+            }
+        }
+    }
+
+    /// All entries under a prefix, sorted by name (deterministic order).
+    pub fn prefix_entries(&self, prefix: &str) -> Vec<(&str, &Tensor)> {
+        let mut v: Vec<(&str, &Tensor)> = self
+            .map
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(k, t)| (k.as_str(), t))
+            .collect();
+        v.sort_by_key(|(k, _)| *k);
+        v
+    }
+
+    /// Total f32/i32 elements under a prefix (parameter counting).
+    pub fn prefix_numel(&self, prefix: &str) -> usize {
+        self.prefix_entries(prefix).iter().map(|(_, t)| t.numel()).sum()
+    }
+
+    /// Merge another map in, overwriting collisions.
+    pub fn merge(&mut self, other: TensorMap) {
+        self.map.extend(other.map);
+    }
+
+    /// Mean |a-b| over the f32 entries shared under a prefix — the churn
+    /// metric generalized to parameter space (diagnostics).
+    pub fn prefix_mean_abs_diff(&self, other: &TensorMap, prefix: &str) -> Result<f32> {
+        let mut total = 0.0f64;
+        let mut n = 0usize;
+        for (k, t) in self.prefix_entries(prefix) {
+            let o = other.get(k)?;
+            if let (Ok(a), Ok(b)) = (t.as_f32(), o.as_f32()) {
+                total += a
+                    .iter()
+                    .zip(b.iter())
+                    .map(|(x, y)| (x - y).abs() as f64)
+                    .sum::<f64>();
+                n += a.len();
+            }
+        }
+        if n == 0 {
+            bail!("no shared f32 entries under {prefix:?}");
+        }
+        Ok((total / n as f64) as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::spec::Spec;
+
+    fn sample_spec() -> Spec {
+        Spec::parse(
+            "spec-version 1\nname t\n\
+             in params.a f32 2\nin lr f32 -\nin x i32 2\n\
+             out params.a f32 2\nout loss f32 -\n",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn assemble_in_spec_order_with_extras() {
+        let spec = sample_spec();
+        let mut m = TensorMap::new();
+        m.insert("params.a", Tensor::f32(&[2], vec![1.0, 2.0]).unwrap());
+        m.insert("x", Tensor::i32(&[2], vec![3, 4]).unwrap());
+        let mut extra = TensorMap::new();
+        extra.insert("lr", Tensor::scalar_f32(0.1));
+        let inputs = m.assemble(&spec, &extra).unwrap();
+        assert_eq!(inputs.len(), 3);
+        assert_eq!(inputs[0].as_f32().unwrap(), &[1.0, 2.0]);
+        assert_eq!(inputs[1].item_f32().unwrap(), 0.1);
+        assert_eq!(inputs[2].as_i32().unwrap(), &[3, 4]);
+    }
+
+    #[test]
+    fn assemble_missing_tensor_errors() {
+        let spec = sample_spec();
+        let m = TensorMap::new();
+        assert!(m.assemble(&spec, &TensorMap::new()).is_err());
+    }
+
+    #[test]
+    fn assemble_shape_mismatch_errors() {
+        let spec = sample_spec();
+        let mut m = TensorMap::new();
+        m.insert("params.a", Tensor::f32(&[3], vec![1.0; 3]).unwrap());
+        m.insert("x", Tensor::i32(&[2], vec![0, 0]).unwrap());
+        let mut extra = TensorMap::new();
+        extra.insert("lr", Tensor::scalar_f32(0.1));
+        assert!(m.assemble(&spec, &extra).is_err());
+    }
+
+    #[test]
+    fn outputs_roundtrip_and_prefix_ops() {
+        let spec = sample_spec();
+        let outs = vec![
+            Tensor::f32(&[2], vec![5.0, 6.0]).unwrap(),
+            Tensor::scalar_f32(0.25),
+        ];
+        let m = TensorMap::from_outputs(&spec, outs).unwrap();
+        assert_eq!(m.get("loss").unwrap().item_f32().unwrap(), 0.25);
+        assert_eq!(m.prefix_numel("params."), 2);
+
+        let mut dst = TensorMap::new();
+        dst.adopt_prefix(&m, "params.", "teacher.");
+        assert_eq!(dst.get("teacher.a").unwrap().as_f32().unwrap(), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn prefix_mean_abs_diff() {
+        let mut a = TensorMap::new();
+        a.insert("params.w", Tensor::f32(&[2], vec![1.0, 3.0]).unwrap());
+        let mut b = TensorMap::new();
+        b.insert("params.w", Tensor::f32(&[2], vec![2.0, 1.0]).unwrap());
+        let d = a.prefix_mean_abs_diff(&b, "params.").unwrap();
+        assert!((d - 1.5).abs() < 1e-6);
+    }
+}

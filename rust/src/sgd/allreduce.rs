@@ -1,0 +1,166 @@
+//! Gradient reduction across workers.
+//!
+//! Two strategies with identical semantics (mean over workers, leaf-wise):
+//!
+//! * [`ReduceStrategy::Naive`]: sequential accumulation — O(W·N) adds on
+//!   one thread.
+//! * [`ReduceStrategy::Tree`]: pairwise tree reduction across threads —
+//!   the in-process analogue of a reduction tree, and measurably faster
+//!   for large W·N (see `benches/perf_hotpath.rs`).
+
+use crate::runtime::TensorMap;
+#[cfg(test)]
+use crate::runtime::Tensor;
+use anyhow::{bail, Result};
+
+/// Reduction algorithm choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceStrategy {
+    Naive,
+    Tree,
+}
+
+/// Mean-reduce the `grads.`-prefixed entries of per-worker maps into one
+/// map (same names). All maps must share identical shapes.
+pub fn allreduce_mean(
+    workers: Vec<TensorMap>,
+    prefix: &str,
+    strategy: ReduceStrategy,
+) -> Result<TensorMap> {
+    if workers.is_empty() {
+        bail!("allreduce over zero workers");
+    }
+    let n = workers.len();
+    let mut acc = match strategy {
+        ReduceStrategy::Naive => reduce_naive(workers, prefix)?,
+        ReduceStrategy::Tree => reduce_tree(workers, prefix)?,
+    };
+    let names: Vec<String> = acc
+        .prefix_entries(prefix)
+        .iter()
+        .map(|(k, _)| k.to_string())
+        .collect();
+    for name in names {
+        acc.get_mut(&name)?.scale(1.0 / n as f32)?;
+    }
+    Ok(acc)
+}
+
+fn sum_into(dst: &mut TensorMap, src: &TensorMap, prefix: &str) -> Result<()> {
+    let names: Vec<String> = dst
+        .prefix_entries(prefix)
+        .iter()
+        .map(|(k, _)| k.to_string())
+        .collect();
+    if names.is_empty() {
+        bail!("no entries under {prefix:?} to reduce");
+    }
+    for name in names {
+        let s = src.get(&name)?.clone();
+        dst.get_mut(&name)?.add_assign(&s)?;
+    }
+    Ok(())
+}
+
+fn reduce_naive(mut workers: Vec<TensorMap>, prefix: &str) -> Result<TensorMap> {
+    let mut acc = workers.remove(0);
+    // Touch the prefix once to validate presence even for W=1.
+    if acc.prefix_entries(prefix).is_empty() {
+        bail!("no entries under {prefix:?} to reduce");
+    }
+    for w in &workers {
+        sum_into(&mut acc, w, prefix)?;
+    }
+    Ok(acc)
+}
+
+fn reduce_tree(mut workers: Vec<TensorMap>, prefix: &str) -> Result<TensorMap> {
+    if workers.iter().any(|w| w.prefix_entries(prefix).is_empty()) {
+        bail!("no entries under {prefix:?} to reduce");
+    }
+    while workers.len() > 1 {
+        let mut next: Vec<TensorMap> = Vec::with_capacity(workers.len().div_ceil(2));
+        let mut pairs: Vec<(TensorMap, Option<TensorMap>)> = Vec::new();
+        while workers.len() >= 2 {
+            let b = workers.pop().unwrap();
+            let a = workers.pop().unwrap();
+            pairs.push((a, Some(b)));
+        }
+        if let Some(last) = workers.pop() {
+            pairs.push((last, None));
+        }
+        // Pairwise sums in parallel.
+        let results: Vec<Result<TensorMap>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = pairs
+                .into_iter()
+                .map(|(mut a, b)| {
+                    scope.spawn(move || {
+                        if let Some(b) = b {
+                            sum_into(&mut a, &b, prefix)?;
+                        }
+                        Ok(a)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in results {
+            next.push(r?);
+        }
+        workers = next;
+    }
+    Ok(workers.pop().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn worker(vals: &[f32]) -> TensorMap {
+        let mut m = TensorMap::new();
+        m.insert("grads.w", Tensor::f32(&[vals.len()], vals.to_vec()).unwrap());
+        m.insert("loss", Tensor::scalar_f32(1.0));
+        m
+    }
+
+    #[test]
+    fn naive_mean_of_three() {
+        let ws = vec![worker(&[1.0, 2.0]), worker(&[3.0, 4.0]), worker(&[5.0, 6.0])];
+        let r = allreduce_mean(ws, "grads.", ReduceStrategy::Naive).unwrap();
+        assert_eq!(r.get("grads.w").unwrap().as_f32().unwrap(), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn tree_matches_naive() {
+        for n in [1usize, 2, 3, 5, 8, 13] {
+            let ws_a: Vec<TensorMap> =
+                (0..n).map(|i| worker(&[i as f32, 2.0 * i as f32])).collect();
+            let ws_b = ws_a.clone();
+            let a = allreduce_mean(ws_a, "grads.", ReduceStrategy::Naive).unwrap();
+            let b = allreduce_mean(ws_b, "grads.", ReduceStrategy::Tree).unwrap();
+            let va = a.get("grads.w").unwrap().as_f32().unwrap();
+            let vb = b.get("grads.w").unwrap().as_f32().unwrap();
+            for (x, y) in va.iter().zip(vb.iter()) {
+                assert!((x - y).abs() < 1e-5, "n={n}: {va:?} vs {vb:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_workers_error() {
+        assert!(allreduce_mean(vec![], "grads.", ReduceStrategy::Naive).is_err());
+    }
+
+    #[test]
+    fn missing_prefix_errors() {
+        let ws = vec![worker(&[1.0])];
+        assert!(allreduce_mean(ws, "nope.", ReduceStrategy::Naive).is_err());
+    }
+
+    #[test]
+    fn single_worker_identity() {
+        let r = allreduce_mean(vec![worker(&[7.0, 9.0])], "grads.", ReduceStrategy::Tree)
+            .unwrap();
+        assert_eq!(r.get("grads.w").unwrap().as_f32().unwrap(), &[7.0, 9.0]);
+    }
+}

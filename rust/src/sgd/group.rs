@@ -1,0 +1,82 @@
+//! Worker fan-out: run one closure per worker on its own thread and
+//! collect results in worker order. PJRT executions are internally
+//! synchronized, so workers sharing a compiled executable is safe; this
+//! is the in-process analogue of the paper's per-GPU workers.
+
+use anyhow::Result;
+
+/// Run `f(worker_id)` for `n` workers concurrently; results in id order.
+pub fn parallel_workers<T, F>(n: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let f = &f;
+    let results: Vec<Result<T>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n).map(|i| scope.spawn(move || f(i))).collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    results.into_iter().collect()
+}
+
+/// Sequential variant (ablation/debug; same signature).
+pub fn sequential_workers<T, F>(n: usize, f: F) -> Result<Vec<T>>
+where
+    F: Fn(usize) -> Result<T>,
+{
+    (0..n).map(f).collect()
+}
+
+/// Re-export site for the group step used by models::lm::LmSyncGroup.
+pub struct SyncGroup;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_in_worker_order() {
+        let out = parallel_workers(8, |i| Ok(i * 10)).unwrap();
+        assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60, 70]);
+    }
+
+    #[test]
+    fn all_workers_run() {
+        let count = AtomicUsize::new(0);
+        parallel_workers(16, |_| {
+            count.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(count.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn error_propagates() {
+        let r = parallel_workers(4, |i| {
+            if i == 2 {
+                anyhow::bail!("worker {i} failed")
+            } else {
+                Ok(i)
+            }
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn zero_workers_ok() {
+        let out: Vec<usize> = parallel_workers(0, |i| Ok(i)).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn matches_sequential() {
+        let a = parallel_workers(5, |i| Ok(i * i)).unwrap();
+        let b = sequential_workers(5, |i| Ok(i * i)).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,18 @@
+//! Synchronous-SGD machinery: data-parallel worker groups and gradient
+//! reduction.
+//!
+//! A [`SyncGroup`](group::SyncGroup) runs W workers, each computing
+//! gradients on its own shard via the per-worker `grad` executable, reduces
+//! them ([`allreduce`]), and applies the update via the `apply` executable.
+//! This is the real algorithmic path of distributed sync SGD; the *wires*
+//! are priced by [`crate::netsim`] (DESIGN.md §4).
+//!
+//! The fused path (`train_step` at effective batch = W·b) is mathematically
+//! identical — `group::tests` asserts the equivalence numerically — and is
+//! what the large experiment sweeps use for speed.
+
+pub mod allreduce;
+pub mod group;
+
+pub use allreduce::{allreduce_mean, ReduceStrategy};
+pub use group::SyncGroup;

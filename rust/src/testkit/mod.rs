@@ -1,0 +1,119 @@
+//! Mini property-testing harness (no proptest offline).
+//!
+//! [`forall`] runs a property over `n` seeded random cases; on failure it
+//! reports the failing case seed so the case reproduces exactly with
+//! [`forall_seeded`]. Coordinator invariants (routing, batching, staleness
+//! accounting, reduction) are guarded with these properties in the
+//! integration tests.
+
+use crate::prng::Pcg64;
+
+/// Generate one random case from a seeded generator.
+pub trait Arbitrary: Sized {
+    fn arbitrary(rng: &mut Pcg64) -> Self;
+}
+
+impl Arbitrary for usize {
+    fn arbitrary(rng: &mut Pcg64) -> Self {
+        rng.below(1 << 16) as usize
+    }
+}
+
+impl Arbitrary for u64 {
+    fn arbitrary(rng: &mut Pcg64) -> Self {
+        rng.next_u64()
+    }
+}
+
+impl Arbitrary for f64 {
+    fn arbitrary(rng: &mut Pcg64) -> Self {
+        rng.normal() * 10.0
+    }
+}
+
+impl<A: Arbitrary, B: Arbitrary> Arbitrary for (A, B) {
+    fn arbitrary(rng: &mut Pcg64) -> Self {
+        (A::arbitrary(rng), B::arbitrary(rng))
+    }
+}
+
+impl<A: Arbitrary, B: Arbitrary, C: Arbitrary> Arbitrary for (A, B, C) {
+    fn arbitrary(rng: &mut Pcg64) -> Self {
+        (A::arbitrary(rng), B::arbitrary(rng), C::arbitrary(rng))
+    }
+}
+
+/// Run `prop` over `n` random cases derived from `seed`; panics with the
+/// failing case seed on the first failure.
+pub fn forall<T: Arbitrary + std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    n: usize,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for i in 0..n {
+        let case_seed = seed.wrapping_add(i as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        let mut rng = Pcg64::new(case_seed);
+        let case = T::arbitrary(&mut rng);
+        if !prop(&case) {
+            panic!(
+                "property {name:?} failed on case #{i} (seed {case_seed:#x}): {case:?}\n\
+                 reproduce with forall_seeded({case_seed:#x})"
+            );
+        }
+    }
+}
+
+/// Reproduce a single failing case.
+pub fn forall_seeded<T: Arbitrary + std::fmt::Debug>(case_seed: u64, prop: impl Fn(&T) -> bool) {
+    let mut rng = Pcg64::new(case_seed);
+    let case = T::arbitrary(&mut rng);
+    assert!(prop(&case), "case (seed {case_seed:#x}): {case:?}");
+}
+
+/// Bounded value helper: map an arbitrary u64 into [lo, hi].
+pub fn in_range(raw: u64, lo: usize, hi: usize) -> usize {
+    assert!(hi >= lo);
+    lo + (raw % (hi - lo + 1) as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall::<u64>("u64 is u64", 1, 64, |_| true);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn forall_reports_failures() {
+        forall::<u64>("always fails", 2, 8, |_| false);
+    }
+
+    #[test]
+    fn in_range_bounds() {
+        for raw in [0u64, 1, 99, u64::MAX] {
+            let v = in_range(raw, 3, 9);
+            assert!((3..=9).contains(&v));
+        }
+        assert_eq!(in_range(5, 4, 4), 4);
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut seen = Vec::new();
+        forall::<(u64, u64)>("collect", 7, 4, |c| {
+            seen.push(format!("{c:?}"));
+            true
+        });
+        let first = seen.clone();
+        seen.clear();
+        forall::<(u64, u64)>("collect", 7, 4, |c| {
+            seen.push(format!("{c:?}"));
+            true
+        });
+        assert_eq!(first, seen);
+    }
+}

@@ -1,0 +1,207 @@
+//! Integration tests over the real LM artifacts (skipped when
+//! `artifacts/` is absent; run `make artifacts` first).
+
+use codistill::codistill::{DistillSchedule, Member};
+use codistill::config::Settings;
+use codistill::data::corpus::Batcher;
+use codistill::data::shard::{ShardMode, ShardPlan};
+use codistill::experiments::common::{artifacts_dir, corpus_for, lm_member, open_bundle};
+use codistill::models::lm::{LmSyncGroup, SmoothingMode};
+use codistill::runtime::Tensor;
+use std::sync::Arc;
+
+fn have_artifacts() -> bool {
+    artifacts_dir(&Settings::new()).join("lm_b32/bundle.txt").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+    };
+}
+
+#[test]
+fn init_is_seed_deterministic() {
+    require_artifacts!();
+    let s = Settings::new();
+    let bundle = open_bundle(&s, "lm_b32").unwrap();
+    let init = bundle.exe("init").unwrap();
+    let a = init.run(&[&Tensor::scalar_i32(7)]).unwrap();
+    let b = init.run(&[&Tensor::scalar_i32(7)]).unwrap();
+    let c = init.run(&[&Tensor::scalar_i32(8)]).unwrap();
+    assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+    assert_ne!(a[0].as_f32().unwrap(), c[0].as_f32().unwrap());
+}
+
+#[test]
+fn training_reduces_validation_loss() {
+    require_artifacts!();
+    let s = Settings::new();
+    let bundle = open_bundle(&s, "lm_b32").unwrap();
+    let plan = ShardPlan::new(1, 32, ShardMode::Disjoint);
+    let mut m = lm_member(&bundle, &plan, 0, 3, 1, SmoothingMode::None, 2).unwrap();
+    let before = m.evaluate().unwrap().loss;
+    for _ in 0..40 {
+        let stats = m.train_step(0.0, 0.03).unwrap();
+        assert!(stats.loss.is_finite());
+    }
+    let after = m.evaluate().unwrap().loss;
+    assert!(
+        after < before - 0.1,
+        "loss should drop by >0.1: {before:.4} -> {after:.4}"
+    );
+}
+
+#[test]
+fn distill_weight_zero_matches_plain_step() {
+    require_artifacts!();
+    // With w=0 the ψ term is multiplied out: a member with teachers set
+    // but weight 0 must follow the exact same trajectory as a plain one.
+    let s = Settings::new();
+    let bundle = open_bundle(&s, "lm_b32").unwrap();
+    let plan = ShardPlan::new(1, 32, ShardMode::Disjoint);
+    let mut a = lm_member(&bundle, &plan, 0, 5, 1, SmoothingMode::None, 2).unwrap();
+    let mut b = lm_member(&bundle, &plan, 0, 5, 1, SmoothingMode::None, 2).unwrap();
+    let teacher = Arc::new(a.snapshot().unwrap());
+    b.set_fixed_teachers(vec![teacher]).unwrap();
+    for _ in 0..5 {
+        a.train_step(0.0, 0.03).unwrap();
+        b.train_step(0.0, 0.03).unwrap();
+    }
+    let d = a
+        .params()
+        .prefix_mean_abs_diff(b.params(), "params.")
+        .unwrap();
+    assert!(d < 1e-7, "trajectories diverged: mean|Δ|={d}");
+}
+
+#[test]
+fn teacher_predictions_are_distributions() {
+    require_artifacts!();
+    let s = Settings::new();
+    let bundle = open_bundle(&s, "lm_b32").unwrap();
+    let plan = ShardPlan::new(1, 32, ShardMode::Disjoint);
+    let m = lm_member(&bundle, &plan, 0, 9, 1, SmoothingMode::None, 2).unwrap();
+    let corpus = corpus_for(&bundle).unwrap();
+    let streams: Vec<u64> = (700..732).collect();
+    let mut batcher = Batcher::new(&corpus, 9, &streams, 16);
+    let tokens = batcher.next_batch().unwrap();
+    let probs = m.predict_probs(&tokens).unwrap();
+    assert_eq!(probs.shape(), &[16 * 32, 512]);
+    let data = probs.as_f32().unwrap();
+    assert!(data.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    // rows sum to 1
+    for row in data.chunks(512).take(8) {
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-3, "row sums to {s}");
+    }
+}
+
+#[test]
+fn allreduce_group_matches_fused_large_batch() {
+    require_artifacts!();
+    // THE sync-SGD equivalence (DESIGN.md §9): 4 workers × batch 8 with
+    // mean-reduced grads == one fused batch-32 step, on identical data.
+    let s = Settings::new();
+    let worker_bundle = open_bundle(&s, "lm_w8").unwrap();
+    let fused_bundle = open_bundle(&s, "lm_b32").unwrap();
+    let corpus = corpus_for(&fused_bundle).unwrap();
+    let streams: Vec<u64> = (0..32).collect();
+    let val: Vec<u64> = (2_000_000..2_000_032).collect();
+    let mut group = LmSyncGroup::new(
+        &worker_bundle,
+        &fused_bundle,
+        13,
+        2,
+        4,
+        &streams,
+        &val,
+        &corpus,
+        2,
+    )
+    .unwrap();
+    let plan = ShardPlan::new(1, 32, ShardMode::Disjoint);
+    let mut fused = lm_member(&fused_bundle, &plan, 0, 13, 2, SmoothingMode::None, 2).unwrap();
+
+    for _ in 0..3 {
+        group.train_step(0.0, 0.03).unwrap();
+        fused.train_step(0.0, 0.03).unwrap();
+    }
+    let d = group
+        .params()
+        .prefix_mean_abs_diff(fused.params(), "params.")
+        .unwrap();
+    // identical math up to f32 reduction order
+    assert!(d < 2e-4, "allreduce vs fused diverged: mean|Δ|={d}");
+}
+
+#[test]
+fn codistillation_couples_members() {
+    require_artifacts!();
+    // After codistillation, the two copies' PREDICTIONS on a common probe
+    // batch must agree more than two independently trained copies'
+    // (predictions are identifiable; weights are not — paper §2.1).
+    let s = Settings::new();
+    let bundle = open_bundle(&s, "lm_b32").unwrap();
+    let corpus = corpus_for(&bundle).unwrap();
+    let steps = 60u64;
+    let probe = {
+        let streams: Vec<u64> = (4_000_000..4_000_032).collect();
+        let mut b = Batcher::new(&corpus, 999, &streams, 16);
+        b.next_batch().unwrap()
+    };
+
+    let run = |codistill: bool| {
+        let plan = ShardPlan::new(2, 32, ShardMode::Disjoint);
+        let mut a = lm_member(&bundle, &plan, 0, 21, 1, SmoothingMode::None, 2).unwrap();
+        let mut b = lm_member(&bundle, &plan, 1, 21, 2, SmoothingMode::None, 2).unwrap();
+        let sched = if codistill {
+            DistillSchedule::new(10, 5, 2.0)
+        } else {
+            DistillSchedule::off()
+        };
+        for step in 0..steps {
+            if codistill && step % 10 == 0 {
+                let ca = Arc::new(a.snapshot().unwrap());
+                let cb = Arc::new(b.snapshot().unwrap());
+                a.set_fixed_teachers(vec![cb]).unwrap();
+                b.set_fixed_teachers(vec![ca]).unwrap();
+            }
+            let w = sched.weight_at(step);
+            a.train_step(w, 0.03).unwrap();
+            b.train_step(w, 0.03).unwrap();
+        }
+        let pa = a.predict_probs(&probe).unwrap();
+        let pb = b.predict_probs(&probe).unwrap();
+        pa.mean_abs_diff(&pb).unwrap()
+    };
+    let d_codist = run(true);
+    let d_indep = run(false);
+    assert!(
+        d_codist < d_indep,
+        "codistilled predictions should agree more: codist {d_codist:.6} vs indep {d_indep:.6}"
+    );
+}
+
+#[test]
+fn label_smoothing_modes_train() {
+    require_artifacts!();
+    let s = Settings::new();
+    let bundle = open_bundle(&s, "lm_b32").unwrap();
+    let corpus = corpus_for(&bundle).unwrap();
+    for mode in [
+        SmoothingMode::Uniform,
+        SmoothingMode::Unigram(corpus.unigram()),
+    ] {
+        let plan = ShardPlan::new(1, 32, ShardMode::Disjoint);
+        let mut m = lm_member(&bundle, &plan, 0, 31, 1, mode, 2).unwrap();
+        for _ in 0..5 {
+            let stats = m.train_step(0.3, 0.03).unwrap();
+            assert!(stats.loss.is_finite());
+            assert!(stats.distill_loss > 0.0, "ψ should be active");
+        }
+    }
+}

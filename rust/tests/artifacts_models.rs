@@ -1,0 +1,111 @@
+//! Integration tests for the Criteo and images members over real
+//! artifacts (skipped without `make artifacts`).
+
+use codistill::codistill::{DistillSchedule, Member};
+use codistill::config::Settings;
+use codistill::experiments::common::{artifacts_dir, open_bundle};
+use codistill::models::criteo::{CriteoMember, CriteoValSet};
+use codistill::models::images::{ImagesMember, ImagesValSet};
+use std::sync::Arc;
+
+fn have(bundle: &str) -> bool {
+    artifacts_dir(&Settings::new())
+        .join(bundle)
+        .join("bundle.txt")
+        .exists()
+}
+
+#[test]
+fn criteo_training_reduces_logloss() {
+    if !have("criteo") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let s = Settings::new();
+    let bundle = open_bundle(&s, "criteo").unwrap();
+    let val = CriteoValSet::generate(1, 999, 1000, 256, 4).unwrap();
+    let mut m = CriteoMember::new(&bundle, 1, 0, 1, val).unwrap();
+    let before = m.evaluate().unwrap().loss;
+    for _ in 0..40 {
+        m.train_step(0.0, 0.05).unwrap();
+    }
+    let after = m.evaluate().unwrap().loss;
+    assert!(after < before, "logloss {before:.4} -> {after:.4}");
+    // predictions are probabilities on the fixed val set
+    let preds = m.val_predictions().unwrap();
+    assert_eq!(preds.len(), 4 * 256);
+    assert!(preds.iter().all(|&p| (0.0..=1.0).contains(&p)));
+}
+
+#[test]
+fn criteo_retrains_differ_codistilled_pair_couples() {
+    if !have("criteo") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let s = Settings::new();
+    let bundle = open_bundle(&s, "criteo").unwrap();
+    let val = CriteoValSet::generate(1, 999, 1000, 256, 2).unwrap();
+    // two retrains differ
+    let mut m1 = CriteoMember::new(&bundle, 1, 10, 1, val.clone()).unwrap();
+    let mut m2 = CriteoMember::new(&bundle, 1, 20, 2, val.clone()).unwrap();
+    for _ in 0..80 {
+        m1.train_step(0.0, 0.05).unwrap();
+        m2.train_step(0.0, 0.05).unwrap();
+    }
+    let p1 = m1.val_predictions().unwrap();
+    let p2 = m2.val_predictions().unwrap();
+    let churn = codistill::metrics::mean_abs_diff(&p1, &p2).unwrap();
+    assert!(churn > 1e-4, "independent retrains should disagree: {churn}");
+
+    // Table 1's metric: churn BETWEEN RETRAINS of the codistilled
+    // procedure (pick copy A each retrain) drops vs the plain DNN's.
+    let sched = DistillSchedule::new(20, 10, 1.0);
+    let mut retrain = |seed: i32, stream: u64| {
+        let mut a = CriteoMember::new(&bundle, 1, stream, seed, val.clone()).unwrap();
+        let mut b = CriteoMember::new(&bundle, 1, stream + 1, seed + 50, val.clone()).unwrap();
+        for step in 0..80 {
+            if step % 10 == 0 {
+                let ca = Arc::new(a.snapshot().unwrap());
+                let cb = Arc::new(b.snapshot().unwrap());
+                a.set_teachers(vec![cb]).unwrap();
+                b.set_teachers(vec![ca]).unwrap();
+            }
+            let w = sched.weight_at(step);
+            a.train_step(w, 0.05).unwrap();
+            b.train_step(w, 0.05).unwrap();
+        }
+        a.val_predictions().unwrap()
+    };
+    let c1 = retrain(3, 30);
+    let c2 = retrain(4, 60);
+    let coupled_churn = codistill::metrics::mean_abs_diff(&c1, &c2).unwrap();
+    assert!(
+        coupled_churn < churn,
+        "codistilled retrain churn ({coupled_churn:.4}) should be below plain DNN churn ({churn:.4})"
+    );
+}
+
+#[test]
+fn images_training_improves_accuracy() {
+    if !have("images") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let s = Settings::new();
+    let bundle = open_bundle(&s, "images").unwrap();
+    let val = ImagesValSet::generate(1, 999, 16, 3, 10, 64, 3, 2.0).unwrap();
+    let mut m = ImagesMember::new(&bundle, 1, 0, 1, 2.0, val).unwrap();
+    let before = m.evaluate().unwrap();
+    for _ in 0..60 {
+        m.train_step(0.0, 0.02).unwrap();
+    }
+    let after = m.evaluate().unwrap();
+    assert!(
+        after.accuracy.unwrap() > before.accuracy.unwrap() + 0.1,
+        "accuracy {:?} -> {:?}",
+        before.accuracy,
+        after.accuracy
+    );
+    assert!(after.accuracy.unwrap() > 0.3, "should beat 10% chance clearly");
+}

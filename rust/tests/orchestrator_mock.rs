@@ -1,0 +1,223 @@
+//! Orchestrator logic tests with a mock member (no XLA): exchange cadence,
+//! staleness accounting, burn-in gating, wall-clock accumulation, and the
+//! testkit property sweep over coordinator invariants.
+
+use codistill::codistill::{
+    Checkpoint, DistillSchedule, EvalStats, LrSchedule, Member, Orchestrator,
+    OrchestratorConfig, StepStats, Topology,
+};
+use codistill::netsim::ClusterModel;
+use codistill::runtime::{Tensor, TensorMap};
+use codistill::testkit::{forall, in_range};
+use std::sync::Arc;
+
+/// Records every interaction; "loss" decays deterministically.
+struct MockMember {
+    id: usize,
+    step: u64,
+    params: TensorMap,
+    teachers_seen: Vec<(u64, Vec<u64>)>, // (at step, teacher ckpt steps)
+    distill_ws: Vec<f32>,
+}
+
+impl MockMember {
+    fn new(id: usize) -> Self {
+        let mut params = TensorMap::new();
+        params.insert("params.w", Tensor::f32(&[2], vec![id as f32, 0.0]).unwrap());
+        MockMember {
+            id,
+            step: 0,
+            params,
+            teachers_seen: vec![],
+            distill_ws: vec![],
+        }
+    }
+}
+
+impl Member for MockMember {
+    fn train_step(&mut self, distill_w: f32, _lr: f32) -> anyhow::Result<StepStats> {
+        self.step += 1;
+        self.distill_ws.push(distill_w);
+        Ok(StepStats {
+            step: self.step,
+            loss: 1.0 / self.step as f32,
+            distill_loss: distill_w,
+        })
+    }
+
+    fn snapshot(&self) -> anyhow::Result<Checkpoint> {
+        Ok(Checkpoint::new(self.id, self.step, self.params.clone()))
+    }
+
+    fn set_teachers(&mut self, peers: Vec<Arc<Checkpoint>>) -> anyhow::Result<()> {
+        self.teachers_seen
+            .push((self.step, peers.iter().map(|c| c.step).collect()));
+        Ok(())
+    }
+
+    fn evaluate(&mut self) -> anyhow::Result<EvalStats> {
+        Ok(EvalStats {
+            loss: 1.0 / (self.step.max(1)) as f64,
+            accuracy: None,
+        })
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.step
+    }
+
+    fn params(&self) -> &TensorMap {
+        &self.params
+    }
+}
+
+fn run_mock(n: usize, cfg: OrchestratorConfig) -> (Vec<MockMember>, codistill::codistill::RunLog) {
+    let mut members: Vec<Box<dyn Member>> = (0..n)
+        .map(|i| Box::new(MockMember::new(i)) as Box<dyn Member>)
+        .collect();
+    let orch = Orchestrator::new(cfg);
+    let log = orch.run(&mut members).unwrap();
+    let mocks: Vec<MockMember> = members
+        .into_iter()
+        .map(|b| {
+            // retrieve concrete type back out via raw pointer trick is not
+            // possible; instead re-run? We capture what we need from log.
+            let _ = b;
+            MockMember::new(0)
+        })
+        .collect();
+    (mocks, log)
+}
+
+fn base_cfg(steps: u64, reload: u64) -> OrchestratorConfig {
+    OrchestratorConfig {
+        total_steps: steps,
+        reload_interval: reload,
+        extra_staleness: 0,
+        eval_every: steps,
+        distill: DistillSchedule::new(0, 0, 1.0),
+        lr: LrSchedule::Constant(0.1),
+        topology: Topology::Pair,
+        cluster: None,
+        seed: 1,
+        verbose: false,
+    }
+}
+
+#[test]
+fn staleness_is_bounded_by_reload_interval() {
+    let (_m, log) = run_mock(2, base_cfg(100, 10));
+    assert!(!log.staleness.is_empty());
+    for &(at, _member, staleness) in &log.staleness {
+        assert!(
+            staleness <= 10,
+            "observed staleness {staleness} > reload interval at step {at}"
+        );
+    }
+}
+
+#[test]
+fn staleness_grows_with_interval() {
+    let (_a, log_small) = run_mock(2, base_cfg(120, 10));
+    let (_b, log_large) = run_mock(2, base_cfg(120, 40));
+    let mean = |l: &codistill::codistill::RunLog| {
+        l.staleness.iter().map(|&(_, _, s)| s as f64).sum::<f64>() / l.staleness.len() as f64
+    };
+    assert!(mean(&log_large) > mean(&log_small));
+}
+
+#[test]
+fn train_log_covers_all_members_every_step() {
+    let (_m, log) = run_mock(3, base_cfg(50, 10));
+    assert_eq!(log.train.len(), 3 * 50);
+    for step in 0..50u64 {
+        let members: Vec<usize> = log
+            .train
+            .iter()
+            .filter(|&&(s, _, _, _)| s == step)
+            .map(|&(_, m, _, _)| m)
+            .collect();
+        assert_eq!(members.len(), 3, "step {step}");
+    }
+}
+
+#[test]
+fn wall_clock_accumulates_with_cluster_model() {
+    let mut cfg = base_cfg(40, 10);
+    cfg.cluster = Some(ClusterModel::gpu_cluster(16, 1_000_000));
+    let (_m, log) = run_mock(2, cfg);
+    assert!(log.wall_s > 0.0);
+    // eval points carry increasing wall time
+    let walls: Vec<f64> = log.eval[0].iter().map(|p| p.wall_s).collect();
+    for w in walls.windows(2) {
+        assert!(w[1] >= w[0]);
+    }
+}
+
+#[test]
+fn steps_to_target_and_best_loss() {
+    let mut cfg = base_cfg(64, 8);
+    cfg.eval_every = 8;
+    let (_m, log) = run_mock(1, cfg);
+    // mock loss = 1/step: target 0.05 first hit at step >= 20 -> eval 24
+    let hit = log.steps_to_target(0, 0.05).unwrap();
+    assert_eq!(hit, 24);
+    assert!(log.best_loss(0).unwrap() <= 1.0 / 64.0 + 1e-9);
+    assert!(log.steps_to_target(0, 1e-9).is_none());
+}
+
+#[test]
+fn single_member_never_gets_teachers() {
+    let (_m, log) = run_mock(1, base_cfg(30, 5));
+    assert!(log.staleness.is_empty());
+}
+
+#[test]
+fn property_topology_teacher_counts() {
+    forall::<(u64, u64)>("topology teacher counts", 11, 200, |&(a, b)| {
+        let n = in_range(a, 1, 9);
+        let i = in_range(b, 0, n - 1);
+        let full = Topology::FullyConnected.teachers_of(i, n);
+        let ring = Topology::Ring.teachers_of(i, n);
+        let pair = Topology::Pair.teachers_of(i, n);
+        full.len() == n - 1
+            && ring.len() == usize::from(n > 1)
+            && pair.len() <= 1
+            && !full.contains(&i)
+            && !ring.contains(&i)
+            && !pair.contains(&i)
+            && full.iter().all(|&j| j < n)
+            && ring.iter().all(|&j| j < n)
+            && pair.iter().all(|&j| j < n)
+    });
+}
+
+#[test]
+fn property_distill_schedule_monotone_ramp() {
+    forall::<(u64, u64, u64)>("distill ramp monotone", 13, 200, |&(b, r, q)| {
+        let burn = in_range(b, 0, 50) as u64;
+        let ramp = in_range(r, 0, 50) as u64;
+        let sched = DistillSchedule::new(burn, ramp, 1.0);
+        let s1 = in_range(q, 0, 200) as u64;
+        let w1 = sched.weight_at(s1);
+        let w2 = sched.weight_at(s1 + 1);
+        // monotone nondecreasing, bounded, zero during burn-in
+        (0.0..=1.0).contains(&w1) && w2 >= w1 && (s1 >= burn || w1 == 0.0)
+    });
+}
+
+#[test]
+fn property_lr_warmup_bounded() {
+    forall::<(u64, u64)>("warmup lr bounded by base", 17, 200, |&(a, b)| {
+        let warmup = in_range(a, 1, 100) as u64;
+        let step = in_range(b, 0, 1000) as u64;
+        let s = LrSchedule::WarmupStep {
+            base: 0.4,
+            warmup,
+            milestones: vec![500],
+            decay: 0.1,
+        };
+        let lr = s.at(step);
+        lr > 0.0 && lr <= 0.4 + 1e-9
+    });
+}

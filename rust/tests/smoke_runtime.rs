@@ -1,0 +1,26 @@
+// End-to-end smoke: jax/pallas-lowered HLO text loads and runs through the
+// runtime with correct numerics. Requires /tmp/smoke built by CI/dev; skipped
+// if absent (the real artifact integration tests live in artifacts_*.rs).
+use codistill::runtime::{Runtime, Tensor};
+use std::path::Path;
+use std::sync::Arc;
+
+#[test]
+fn smoke_matmul_plus_two() {
+    let stem = Path::new("/tmp/smoke/fn");
+    if !stem.with_extension("hlo.txt").exists() {
+        eprintln!("skipping: /tmp/smoke/fn.hlo.txt not present");
+        return;
+    }
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let exe = rt.load(stem).unwrap();
+    let x = Tensor::f32(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+    let y = Tensor::f32(&[2, 2], vec![1., 1., 1., 1.]).unwrap();
+    let out = exe.run(&[&x, &y]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].as_f32().unwrap(), &[5., 5., 9., 9.]);
+    // cache hit returns the same executable
+    let exe2 = rt.load(stem).unwrap();
+    assert_eq!(rt.cached_executables(), 1);
+    assert_eq!(exe2.name(), "fn");
+}
