@@ -1,0 +1,26 @@
+# Build/test/bench entry points. The Rust workspace lives in rust/ and
+# builds fully offline (vendored deps; see rust/Cargo.toml).
+
+.PHONY: build test bench artifacts python-tests clean
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+# Hot-path microbenchmarks. Writes the human table to stdout and the
+# machine-readable trajectory to BENCH_hotpath.json at the repo root.
+bench:
+	cd rust && cargo bench --bench perf_hotpath -- json=../BENCH_hotpath.json
+
+# AOT-lower the JAX/Pallas models to HLO-text artifact bundles consumed by
+# the Rust coordinator (needs the python env; see python/compile/aot.py).
+artifacts:
+	cd python && python3 compile/aot.py --out ../rust/artifacts
+
+python-tests:
+	cd python && python3 -m pytest tests -q
+
+clean:
+	cd rust && cargo clean

@@ -1,23 +1,32 @@
-//! Hot-path microbenchmarks (harness=false): the numbers behind
-//! EXPERIMENTS.md §Perf.
+//! Hot-path microbenchmarks (harness=false): the numbers behind the README
+//! §Perf table, emitted both as a human table and as machine-readable
+//! `BENCH_hotpath.json` so the perf trajectory is tracked PR over PR.
 //!
 //! Measures, per layer-3 hot spot:
 //!   * fused `train_step` latency (the floor set by L1/L2);
 //!   * teacher `predict` latency (codistillation's extra forward pass —
 //!     the paper argues this is nearly free; here we print the ratio);
-//!   * allreduce strategies (naive vs tree) at LM-gradient sizes;
+//!   * allreduce strategies (naive vs tree vs flat) at LM-gradient sizes;
+//!   * the flat plane itself: gather/scatter and checkpoint save/load/
+//!     publish on a ~1M-element parameter set;
 //!   * tensor<->literal boundary cost (runtime overhead);
 //!   * explicit sync-SGD group step vs fused equivalent (coordinator
 //!     overhead).
+//!
+//! Sections that need compiled artifacts (or a real PJRT backend) are
+//! skipped gracefully and recorded as `null` in the JSON, so the pure-Rust
+//! coordinator numbers are tracked even on machines without XLA.
 
-use codistill::codistill::Member;
+use codistill::codistill::{Checkpoint, CheckpointStore, Member};
 use codistill::config::Settings;
 use codistill::data::corpus::Batcher;
 use codistill::data::shard::{ShardMode, ShardPlan};
 use codistill::experiments::common::{corpus_for, lm_member, open_bundle};
 use codistill::models::lm::{LmSyncGroup, SmoothingMode};
+use codistill::runtime::flat::{FlatBuffer, FlatLayout};
 use codistill::runtime::{Tensor, TensorMap};
 use codistill::sgd::allreduce::{allreduce_mean, ReduceStrategy};
+use std::sync::Arc;
 use std::time::Instant;
 
 fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
@@ -28,31 +37,43 @@ fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
     t0.elapsed().as_secs_f64() / n as f64
 }
 
-fn main() {
-    let mut s = Settings::new();
-    for kv in std::env::args().skip(1).filter(|a| a.contains('=')) {
-        s.apply(&kv).unwrap();
+fn ms(v: Option<f64>) -> String {
+    match v {
+        Some(s) => format!("{:.4}", s * 1e3),
+        None => "null".to_string(),
     }
-    let iters = s.usize_or("iters", 10).unwrap();
+}
 
+/// Artifact-backed section results (None = skipped: no artifacts/backend).
+#[derive(Default)]
+struct ArtifactTimes {
+    train_step: Option<f64>,
+    teacher_predict: Option<f64>,
+    codistill_step: Option<f64>,
+    sync_group_step: Option<f64>,
+}
+
+fn run_artifact_benches(s: &Settings, iters: usize, out: &mut ArtifactTimes) -> anyhow::Result<()> {
     // ---- train_step + predict latency (fused member).
-    let bundle = open_bundle(&s, "lm_b64").expect("artifacts missing: run make artifacts");
+    let bundle = open_bundle(s, "lm_b64")?;
     let plan = ShardPlan::new(1, 64, ShardMode::Disjoint);
-    let mut member = lm_member(&bundle, &plan, 0, 7, 1, SmoothingMode::None, 2).unwrap();
-    member.train_step(0.0, 0.03).unwrap(); // warmup/compile
+    let mut member = lm_member(&bundle, &plan, 0, 7, 1, SmoothingMode::None, 2)?;
+    member.train_step(0.0, 0.03)?; // warmup/compile
     let t_step = time_n(iters, || {
         member.train_step(0.0, 0.03).unwrap();
     });
+    out.train_step = Some(t_step);
     println!("train_step(b=64):        {:>8.2} ms", t_step * 1e3);
 
-    let corpus = corpus_for(&bundle).unwrap();
+    let corpus = corpus_for(&bundle)?;
     let streams: Vec<u64> = (500..564).collect();
     let mut batcher = Batcher::new(&corpus, 7, &streams, 16);
-    let tokens = batcher.next_batch().unwrap();
-    member.predict_probs(&tokens).unwrap();
+    let tokens = batcher.next_batch()?;
+    member.predict_probs(&tokens)?;
     let t_pred = time_n(iters, || {
         member.predict_probs(&tokens).unwrap();
     });
+    out.teacher_predict = Some(t_pred);
     println!(
         "teacher predict(b=64):   {:>8.2} ms  ({:.0}% of a train step; paper: \"worst case ~50%\")",
         t_pred * 1e3,
@@ -60,21 +81,97 @@ fn main() {
     );
 
     // ---- codistillation step (train + teacher forward).
-    let mut a = lm_member(&bundle, &plan, 0, 9, 1, SmoothingMode::None, 2).unwrap();
-    let b = lm_member(&bundle, &plan, 0, 9, 2, SmoothingMode::None, 2).unwrap();
-    a.set_fixed_teachers(vec![std::sync::Arc::new(b.snapshot().unwrap())])
-        .unwrap();
-    a.train_step(1.0, 0.03).unwrap();
+    let mut a = lm_member(&bundle, &plan, 0, 9, 1, SmoothingMode::None, 2)?;
+    let b = lm_member(&bundle, &plan, 0, 9, 2, SmoothingMode::None, 2)?;
+    a.set_fixed_teachers(vec![Arc::new(b.snapshot()?)])?;
+    a.train_step(1.0, 0.03)?;
     let t_codist = time_n(iters, || {
         a.train_step(1.0, 0.03).unwrap();
     });
+    out.codistill_step = Some(t_codist);
     println!(
         "codistill step(b=64):    {:>8.2} ms  ({:.2}x baseline step)",
         t_codist * 1e3,
         t_codist / t_step
     );
 
+    // ---- explicit allreduce group step vs fused equivalent.
+    let worker_bundle = open_bundle(s, "lm_w8")?;
+    let group_streams: Vec<u64> = (0..64).collect();
+    let val_streams: Vec<u64> = (2_000_000..2_000_064).collect();
+    let mut group = LmSyncGroup::new(
+        &worker_bundle,
+        &bundle,
+        7,
+        1,
+        8,
+        &group_streams,
+        &val_streams,
+        &corpus,
+        2,
+    )?
+    // `reduce=naive|tree|flat` picks the group's reduction strategy.
+    .with_strategy(ReduceStrategy::parse(s.str_or("reduce", "flat"))?);
+    group.train_step(0.0, 0.03)?;
+    let t_group = time_n(iters.min(5), || {
+        group.train_step(0.0, 0.03).unwrap();
+    });
+    out.sync_group_step = Some(t_group);
+    println!(
+        "sync group step (8x b=8):{:>8.2} ms  (coordinator overhead vs fused: {:.2}x)",
+        t_group * 1e3,
+        t_group / t_step
+    );
+    Ok(())
+}
+
+/// A ragged ~`total`-element parameter map (LM-like leaf size spread):
+/// six big windows covering 63/64 of the budget, then a tail of ~1k-element
+/// vectors, so per-window overhead is actually represented.
+fn ragged_params(total: usize) -> TensorMap {
+    let mut m = TensorMap::new();
+    let mut left = total;
+    let mut i = 0usize;
+    for frac in [2usize, 4, 8, 16, 32, 64] {
+        let n = (total / frac).max(1).min(left);
+        if n == 0 {
+            break;
+        }
+        m.insert(
+            format!("params.w{i:02}"),
+            Tensor::f32(&[n], vec![0.1 * i as f32; n]).unwrap(),
+        );
+        left -= n;
+        i += 1;
+    }
+    while left > 0 {
+        let n = left.min(1000);
+        m.insert(
+            format!("params.w{i:02}"),
+            Tensor::f32(&[n], vec![0.1 * i as f32; n]).unwrap(),
+        );
+        left -= n;
+        i += 1;
+    }
+    m
+}
+
+fn main() {
+    let mut s = Settings::new();
+    for kv in std::env::args().skip(1).filter(|a| a.contains('=')) {
+        s.apply(&kv).unwrap();
+    }
+    let iters = s.usize_or("iters", 10).unwrap();
+    let json_path = s.str_or("json", "BENCH_hotpath.json").to_string();
+
+    // ---- artifact-backed sections (skip cleanly without artifacts/XLA).
+    let mut art = ArtifactTimes::default();
+    if let Err(e) = run_artifact_benches(&s, iters, &mut art) {
+        eprintln!("skipping artifact-backed sections: {e:#}");
+    }
+
     // ---- allreduce strategies at paper-ish gradient sizes.
+    let mut allreduce_rows: Vec<String> = Vec::new();
     for (workers, numel) in [(8usize, 65_536usize), (32, 65_536), (8, 1_048_576)] {
         let make = || -> Vec<TensorMap> {
             (0..workers)
@@ -94,13 +191,70 @@ fn main() {
         let t_tree = time_n(5, || {
             allreduce_mean(make(), "grads.", ReduceStrategy::Tree).unwrap();
         });
+        let t_flat = time_n(5, || {
+            allreduce_mean(make(), "grads.", ReduceStrategy::Flat).unwrap();
+        });
         println!(
-            "allreduce w={workers:<2} n={numel:>8}: naive {:>7.2} ms, tree {:>7.2} ms ({:.2}x)",
+            "allreduce w={workers:<2} n={numel:>8}: naive {:>7.2} ms, tree {:>7.2} ms, flat {:>7.2} ms (flat {:.2}x vs tree)",
             t_naive * 1e3,
             t_tree * 1e3,
-            t_naive / t_tree
+            t_flat * 1e3,
+            t_tree / t_flat
         );
+        allreduce_rows.push(format!(
+            "{{\"workers\": {workers}, \"numel\": {numel}, \"naive_ms\": {}, \"tree_ms\": {}, \"flat_ms\": {}}}",
+            ms(Some(t_naive)),
+            ms(Some(t_tree)),
+            ms(Some(t_flat))
+        ));
     }
+
+    // ---- the flat plane itself: gather/scatter + checkpoint exchange.
+    let params = ragged_params(1_048_576);
+    let layout = Arc::new(FlatLayout::from_map(&params, "params."));
+    let t_gather = time_n(20, || {
+        FlatBuffer::gather(layout.clone(), &params).unwrap();
+    });
+    let buf = FlatBuffer::gather(layout.clone(), &params).unwrap();
+    let mut dst = ragged_params(1_048_576);
+    let t_scatter = time_n(20, || {
+        buf.scatter_into(&mut dst).unwrap();
+    });
+    println!(
+        "flat gather/scatter(4MB):{:>8.2} ms / {:.2} ms ({} windows)",
+        t_gather * 1e3,
+        t_scatter * 1e3,
+        layout.len()
+    );
+
+    let store = CheckpointStore::new(4);
+    // Share one plane across iterations: the real publish path hands the
+    // store an Arc to the member's already-gathered buffer, so the timed
+    // loop must not include a fresh 4 MB copy.
+    let plane = Arc::new(buf.clone());
+    let t_publish = time_n(20, || {
+        let ck = Checkpoint::from_flat(0, 1, plane.clone(), TensorMap::new());
+        store.publish(ck).unwrap();
+        store.latest(0).unwrap();
+    });
+    println!("ckpt publish+latest:     {:>8.2} ms  (zero-copy plane hand-off)", t_publish * 1e3);
+
+    let dir = std::env::temp_dir().join(format!("codistill_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bench.ckpt");
+    let ck = Checkpoint::from_flat(0, 1, plane.clone(), TensorMap::new());
+    let t_save = time_n(5, || {
+        ck.save(&path).unwrap();
+    });
+    let t_load = time_n(5, || {
+        Checkpoint::load(&path).unwrap();
+    });
+    println!(
+        "ckpt save/load (4MB):    {:>8.2} ms / {:.2} ms  (contiguous CKPT0002 payload)",
+        t_save * 1e3,
+        t_load * 1e3
+    );
+    std::fs::remove_dir_all(&dir).ok();
 
     // ---- tensor <-> literal boundary.
     let big = Tensor::f32(&[1_048_576], vec![1.0; 1_048_576]).unwrap();
@@ -109,29 +263,32 @@ fn main() {
     });
     println!("to_literal(4 MB):        {:>8.2} ms", t_lit * 1e3);
 
-    // ---- explicit allreduce group step vs fused equivalent.
-    let worker_bundle = open_bundle(&s, "lm_w8").unwrap();
-    let group_streams: Vec<u64> = (0..64).collect();
-    let val_streams: Vec<u64> = (2_000_000..2_000_064).collect();
-    let mut group = LmSyncGroup::new(
-        &worker_bundle,
-        &bundle,
-        7,
-        1,
-        8,
-        &group_streams,
-        &val_streams,
-        &corpus,
-        2,
-    )
-    .unwrap();
-    group.train_step(0.0, 0.03).unwrap();
-    let t_group = time_n(iters.min(5), || {
-        group.train_step(0.0, 0.03).unwrap();
-    });
-    println!(
-        "sync group step (8x b=8):{:>8.2} ms  (coordinator overhead vs fused: {:.2}x)",
-        t_group * 1e3,
-        t_group / t_step
+    // ---- machine-readable trajectory.
+    let json = format!(
+        "{{\n  \"bench\": \"perf_hotpath\",\n  \"iters\": {iters},\n  \"sections\": {{\n    \
+         \"train_step_ms\": {},\n    \
+         \"teacher_predict_ms\": {},\n    \
+         \"codistill_step_ms\": {},\n    \
+         \"sync_group_step_ms\": {},\n    \
+         \"allreduce\": [\n      {}\n    ],\n    \
+         \"flat_gather_ms\": {},\n    \
+         \"flat_scatter_ms\": {},\n    \
+         \"ckpt_publish_latest_ms\": {},\n    \
+         \"ckpt_save_ms\": {},\n    \
+         \"ckpt_load_ms\": {},\n    \
+         \"to_literal_ms\": {}\n  }}\n}}\n",
+        ms(art.train_step),
+        ms(art.teacher_predict),
+        ms(art.codistill_step),
+        ms(art.sync_group_step),
+        allreduce_rows.join(",\n      "),
+        ms(Some(t_gather)),
+        ms(Some(t_scatter)),
+        ms(Some(t_publish)),
+        ms(Some(t_save)),
+        ms(Some(t_load)),
+        ms(Some(t_lit)),
     );
+    std::fs::write(&json_path, &json).unwrap();
+    println!("wrote {json_path}");
 }

@@ -2,6 +2,12 @@
 //! exchange, the burn-in/ramp schedule, validation, and the simulated wall
 //! clock. This is Algorithm 1 at system scale — each "member" is a whole
 //! synchronous-SGD worker group in the scalability experiments.
+//!
+//! The exchange itself rides the flat parameter plane: members publish
+//! `Arc<FlatBuffer>`-backed checkpoints (one contiguous gather per
+//! publication) and the store hands the same buffers to every reader, so
+//! the reload cadence moves pointers, not parameter copies — see
+//! `codistill::store` and `runtime::flat`.
 
 use crate::codistill::schedule::{DistillSchedule, LrSchedule};
 use crate::codistill::store::CheckpointStore;

@@ -164,7 +164,16 @@ impl Member for CriteoMember {
     }
 
     fn set_teachers(&mut self, peers: Vec<Arc<Checkpoint>>) -> Result<()> {
-        self.teachers = peers.into_iter().map(|c| c.params.clone()).collect();
+        // Refresh each teacher in place when the peer's plane lines up
+        // with the installed storage; rebuild otherwise.
+        let mut old = std::mem::take(&mut self.teachers).into_iter();
+        self.teachers = peers
+            .into_iter()
+            .map(|c| match old.next() {
+                Some(prev) => c.refresh_params(prev),
+                None => Ok(c.params()),
+            })
+            .collect::<Result<_>>()?;
         Ok(())
     }
 

@@ -20,9 +20,11 @@
 
 use crate::codistill::{Checkpoint, EvalStats, Member, StepStats};
 use crate::data::corpus::{Batcher, CorpusConfig};
+use crate::runtime::flat::FlatLayout;
 use crate::runtime::{Bundle, Executable, Tensor, TensorMap};
-use crate::sgd::allreduce::{allreduce_mean, ReduceStrategy};
+use crate::sgd::allreduce::{allreduce_mean, allreduce_mean_flat, ReduceStrategy};
 use anyhow::{bail, Context, Result};
+use std::cell::OnceCell;
 use std::sync::{Arc, Mutex};
 
 /// Fig 2a label-smoothing baselines: ψ against a fixed distribution.
@@ -62,6 +64,10 @@ struct Teacher {
     state: TensorMap,
     /// Step the checkpoint was published at (staleness accounting).
     ckpt_step: u64,
+    /// Flat plane the params were scattered from. When the next reload
+    /// speaks the same plane, new weights scatter into the existing
+    /// tensor storage — no allocation on the exchange cadence.
+    plane: Arc<FlatLayout>,
 }
 
 /// Shared plumbing for both flavours.
@@ -82,6 +88,10 @@ struct LmCore {
     /// Pre-converted literals for step-invariant inputs (zero / smoothing
     /// distributions) — §Perf constant-input caching.
     const_lits: std::collections::HashMap<String, xla::Literal>,
+    /// Flat plane of this member's own `params.*` leaves, computed on the
+    /// first snapshot and reused by every publication (the checkpoint
+    /// exchange never re-derives name→offset maps).
+    snapshot_plane: OnceCell<Arc<FlatLayout>>,
     step: u64,
     /// Cumulative teacher forward passes (perf accounting).
     teacher_fwd: u64,
@@ -89,8 +99,7 @@ struct LmCore {
 
 pub fn zeros_for_prefix(spec: &crate::runtime::Spec, prefix: &str) -> TensorMap {
     let mut m = TensorMap::new();
-    for idx in spec.inputs_with_prefix(prefix) {
-        let ts = &spec.inputs[idx];
+    for ts in spec.inputs_under(prefix) {
         m.insert(ts.name.clone(), Tensor::zeros(ts));
     }
     m
@@ -210,38 +219,42 @@ impl LmCore {
             zero_probs,
             smooth_probs,
             const_lits,
+            snapshot_plane: OnceCell::new(),
             step: 0,
             teacher_fwd: 0,
         })
     }
 
     /// Teacher soft targets for a batch: mean over teachers' predictions
-    /// (Algorithm 1). Advances each teacher's RNN state.
+    /// (Algorithm 1). Advances each teacher's RNN state. The `1/n` mean is
+    /// folded into the accumulation itself ([`Tensor::add_scaled`]) so the
+    /// ramp path makes one pass per teacher instead of a final rescale.
     fn teacher_probs(&mut self, tokens: &Tensor) -> Result<Tensor> {
         let mut acc: Option<Tensor> = None;
         let n = self.teachers.len();
-        let spec = self.predict.spec().clone();
+        let inv = 1.0 / n as f32;
         for t in self.teachers.iter_mut() {
             let mut extra = TensorMap::new();
             extra.insert("tokens", tokens.clone());
             let mut joined = t.params.clone();
             joined.merge(t.state.clone());
             let outs = run_mapped(&self.predict, &joined, &extra)?;
-            let _ = &spec;
             self.teacher_fwd += 1;
             // carry teacher state forward on this member's streams
             t.state.adopt_prefix(&outs, "state.", "state.");
-            let probs = outs.get("probs")?.clone();
+            let probs = outs.get("probs")?;
             match &mut acc {
-                None => acc = Some(probs),
-                Some(a) => a.add_assign(&probs)?,
+                None => {
+                    let mut p = probs.clone();
+                    if n > 1 {
+                        p.scale(inv)?;
+                    }
+                    acc = Some(p);
+                }
+                Some(a) => a.add_scaled(probs, inv)?,
             }
         }
-        let mut probs = acc.context("teacher_probs with no teachers")?;
-        if n > 1 {
-            probs.scale(1.0 / n as f32)?;
-        }
-        Ok(probs)
+        acc.context("teacher_probs with no teachers")
     }
 
     /// ψ target + effective weight for this step.
@@ -285,26 +298,44 @@ impl LmCore {
     }
 
     fn snapshot(&self) -> Result<Checkpoint> {
-        let mut params = TensorMap::new();
-        params.adopt_prefix(&self.vars, "params.", "params.");
-        Ok(Checkpoint::new(0, self.step, params))
+        // Publish straight from `vars` onto the flat plane: the layout is
+        // derived once, then every snapshot is a single contiguous gather —
+        // no intermediate named map, no per-tensor clones.
+        let plane = self
+            .snapshot_plane
+            .get_or_init(|| Arc::new(FlatLayout::from_map(&self.vars, "params.")))
+            .clone();
+        Checkpoint::gather_from(0, self.step, plane, &self.vars, "params.")
     }
 
     fn set_teachers(&mut self, peers: Vec<Arc<Checkpoint>>) -> Result<()> {
         // Keep existing per-teacher RNN state when the peer set is stable:
-        // stale weights, fresh state (see module docs).
+        // stale weights, fresh state (see module docs). When the incoming
+        // checkpoint speaks the same flat plane as the installed teacher,
+        // the new weights scatter into the existing tensor storage.
+        let old = std::mem::take(&mut self.teachers);
+        let mut old_iter = old.into_iter();
         let mut new_teachers = Vec::with_capacity(peers.len());
-        for (i, ck) in peers.into_iter().enumerate() {
-            let state = if let Some(old) = self.teachers.get_mut(i) {
-                std::mem::replace(&mut old.state, TensorMap::new())
-            } else {
-                zeros_for_prefix(self.predict.spec(), "state.")
+        for ck in peers {
+            let incoming = ck.flat().layout();
+            let slot = match old_iter.next() {
+                Some(mut prev)
+                    if Arc::ptr_eq(&prev.plane, incoming)
+                        || prev.plane.same_plane(incoming) =>
+                {
+                    ck.scatter_params_into(&mut prev.params)?;
+                    prev.ckpt_step = ck.step;
+                    prev.plane = incoming.clone();
+                    prev
+                }
+                _ => Teacher {
+                    params: ck.params(),
+                    state: zeros_for_prefix(self.predict.spec(), "state."),
+                    ckpt_step: ck.step,
+                    plane: incoming.clone(),
+                },
             };
-            new_teachers.push(Teacher {
-                params: ck.params.clone(),
-                state,
-                ckpt_step: ck.step,
-            });
+            new_teachers.push(slot);
         }
         self.teachers = new_teachers;
         Ok(())
@@ -457,6 +488,9 @@ pub struct LmSyncGroup {
     /// Per-worker batchers (each over its own stream rows) + RNN state.
     worker_data: Vec<Mutex<(Batcher, TensorMap)>>,
     strategy: ReduceStrategy,
+    /// Cached `grads.` plane: derived from the first step's worker-0 grads,
+    /// reused every step so the flat reduce never re-hashes names.
+    grad_plane: OnceCell<Arc<FlatLayout>>,
 }
 
 impl LmSyncGroup {
@@ -478,6 +512,9 @@ impl LmSyncGroup {
         let grad = worker_bundle.exe("grad")?;
         let apply = worker_bundle.exe("apply")?;
         let wdims = LmDims::from_bundle(worker_bundle)?;
+        if workers == 0 {
+            bail!("LmSyncGroup needs at least one worker");
+        }
         if streams.len() != workers * wdims.batch {
             bail!(
                 "{} streams for {} workers x batch {}",
@@ -525,7 +562,8 @@ impl LmSyncGroup {
             apply,
             workers,
             worker_batch: wdims.batch,
-            strategy: ReduceStrategy::Tree,
+            strategy: ReduceStrategy::default(),
+            grad_plane: OnceCell::new(),
             worker_data,
         })
     }
@@ -571,7 +609,8 @@ impl Member for LmSyncGroup {
         // Worker grads run sequentially on this thread: PJRT wrapper types
         // are not Send (Rc internals), and XLA's CPU client already
         // parallelizes each execution internally. The *reduction* (pure
-        // Rust) is thread-parallel under ReduceStrategy::Tree.
+        // Rust) is thread-parallel: chunk-parallel over the fused plane
+        // under the default ReduceStrategy::Flat, pairwise under Tree.
         let per_worker: Vec<TensorMap> = (0..self.workers)
             .map(|w| self.worker_grad(w))
             .collect::<Result<_>>()?;
@@ -580,7 +619,18 @@ impl Member for LmSyncGroup {
             loss += o.get("loss")?.item_f32()?;
         }
         loss /= self.workers as f32;
-        let reduced = allreduce_mean(per_worker, "grads.", self.strategy)?;
+        let reduced = match self.strategy {
+            // Hot path: reuse the cached grads plane so the steady-state
+            // step does no name hashing or layout allocation.
+            ReduceStrategy::Flat => {
+                let layout = self
+                    .grad_plane
+                    .get_or_init(|| Arc::new(FlatLayout::from_map(&per_worker[0], "grads.")))
+                    .clone();
+                allreduce_mean_flat(per_worker, layout)?
+            }
+            s => allreduce_mean(per_worker, "grads.", s)?,
+        };
 
         let mut extra = TensorMap::new();
         extra.insert("lr", Tensor::scalar_f32(lr));

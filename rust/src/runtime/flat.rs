@@ -1,0 +1,375 @@
+//! The flat gradient/parameter plane.
+//!
+//! Every reduction and checkpoint-exchange hot path used to walk a
+//! `TensorMap` entry-by-entry: one hash lookup + one allocation per named
+//! tensor per worker per step. A [`FlatLayout`] fixes a deterministic
+//! `name -> (offset, len)` ordering once (sorted by name, the same order
+//! [`TensorMap::prefix_iter`] yields), and a [`FlatBuffer`] carries all the
+//! f32 leaves of one worker/member as a single contiguous `Vec<f32>`:
+//!
+//! * `sgd::allreduce` sums cache-sized chunks of the fused buffer across
+//!   workers on scoped threads — the in-process analogue of
+//!   reduce-scatter + all-gather ([`ReduceStrategy::Flat`]).
+//! * `codistill::store` publishes checkpoints as `Arc<FlatBuffer>` —
+//!   zero-copy in-memory exchange, and serialization writes the plane as
+//!   one contiguous byte slice instead of per-tensor framing.
+//! * Teacher reloads scatter the plane back into existing tensor storage.
+//!
+//! Non-f32 leaves (i32 id tables) are rare and stay on the named map path;
+//! constructors simply skip them and callers keep them in a residual map.
+//!
+//! [`ReduceStrategy::Flat`]: crate::sgd::allreduce::ReduceStrategy
+
+use crate::runtime::spec::{DType, Spec};
+use crate::runtime::tensor::Tensor;
+use crate::runtime::tmap::TensorMap;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::Arc;
+
+/// One named window of the flat plane.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FlatEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+impl FlatEntry {
+    pub fn range(&self) -> Range<usize> {
+        self.offset..self.offset + self.len
+    }
+}
+
+/// Deterministic name→(offset, len) ordering for the f32 leaves under a
+/// prefix. Derived once (from a live map or from a `Spec`), then shared by
+/// every buffer, reduction, and checkpoint that speaks the same plane.
+#[derive(Debug, Default)]
+pub struct FlatLayout {
+    entries: Vec<FlatEntry>,
+    /// name -> index into `entries` (random access; iteration stays sorted).
+    index: HashMap<String, usize>,
+    total: usize,
+}
+
+impl FlatLayout {
+    /// Build from explicit `(name, shape)` windows **in the given order**
+    /// (checkpoint deserialization, tests). [`FlatLayout::from_map`] /
+    /// [`FlatLayout::from_spec`] are the name-sorted constructors.
+    pub fn from_named_shapes(parts: Vec<(String, Vec<usize>)>) -> Self {
+        Self::from_parts(parts)
+    }
+
+    fn from_parts(parts: Vec<(String, Vec<usize>)>) -> Self {
+        let mut entries = Vec::with_capacity(parts.len());
+        let mut index = HashMap::with_capacity(parts.len());
+        let mut offset = 0usize;
+        for (name, shape) in parts {
+            let len: usize = shape.iter().product();
+            index.insert(name.clone(), entries.len());
+            entries.push(FlatEntry {
+                name,
+                shape,
+                offset,
+                len,
+            });
+            offset += len;
+        }
+        FlatLayout {
+            entries,
+            index,
+            total: offset,
+        }
+    }
+
+    /// Layout over the f32 entries of `map` under `prefix`, in name order.
+    pub fn from_map(map: &TensorMap, prefix: &str) -> Self {
+        let parts: Vec<(String, Vec<usize>)> = map
+            .prefix_iter(prefix)
+            .filter(|(_, t)| t.as_f32().is_ok())
+            .map(|(k, t)| (k.to_string(), t.shape().to_vec()))
+            .collect();
+        Self::from_parts(parts)
+    }
+
+    /// Layout over a spec's f32 *inputs* under `prefix` (sorted by name, so
+    /// it matches [`FlatLayout::from_map`] of any map feeding that spec).
+    pub fn from_spec(spec: &Spec, prefix: &str) -> Self {
+        let mut parts: Vec<(String, Vec<usize>)> = spec
+            .inputs_under(prefix)
+            .filter(|ts| ts.dtype == DType::F32)
+            .map(|ts| (ts.name.clone(), ts.shape.clone()))
+            .collect();
+        parts.sort();
+        parts.dedup_by(|a, b| a.0 == b.0);
+        Self::from_parts(parts)
+    }
+
+    /// Windows in name order.
+    pub fn entries(&self) -> &[FlatEntry] {
+        &self.entries
+    }
+
+    /// Number of named windows.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total f32 elements on the plane.
+    pub fn total_len(&self) -> usize {
+        self.total
+    }
+
+    /// Window metadata for a name.
+    pub fn entry(&self, name: &str) -> Option<&FlatEntry> {
+        self.index.get(name).map(|&i| &self.entries[i])
+    }
+
+    /// Whether another layout describes the identical plane.
+    pub fn same_plane(&self, other: &FlatLayout) -> bool {
+        self.entries == other.entries
+    }
+}
+
+/// One worker's (or one checkpoint's) f32 leaves, fused contiguously
+/// according to a shared [`FlatLayout`].
+#[derive(Debug, Clone)]
+pub struct FlatBuffer {
+    layout: Arc<FlatLayout>,
+    data: Vec<f32>,
+}
+
+impl FlatBuffer {
+    /// All-zeros plane.
+    pub fn zeros(layout: Arc<FlatLayout>) -> Self {
+        let n = layout.total_len();
+        FlatBuffer {
+            layout,
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Adopt an existing data vector (deserialization, reduce output).
+    pub fn from_data(layout: Arc<FlatLayout>, data: Vec<f32>) -> Result<Self> {
+        if data.len() != layout.total_len() {
+            bail!(
+                "flat buffer data has {} elems, layout wants {}",
+                data.len(),
+                layout.total_len()
+            );
+        }
+        Ok(FlatBuffer { layout, data })
+    }
+
+    /// Gather the named tensors of `map` onto the plane (one contiguous
+    /// copy per window; errors if a window's tensor is missing or its
+    /// shape/dtype disagrees with the layout).
+    pub fn gather(layout: Arc<FlatLayout>, map: &TensorMap) -> Result<Self> {
+        let mut buf = FlatBuffer {
+            data: Vec::with_capacity(layout.total_len()),
+            layout,
+        };
+        for e in buf.layout.entries() {
+            let t = map
+                .get(&e.name)
+                .with_context(|| format!("gathering flat plane window {:?}", e.name))?;
+            if t.shape() != e.shape.as_slice() {
+                bail!(
+                    "flat plane window {:?}: tensor shape {:?} != layout shape {:?}",
+                    e.name,
+                    t.shape(),
+                    e.shape
+                );
+            }
+            buf.data.extend_from_slice(t.as_f32()?);
+        }
+        debug_assert_eq!(buf.data.len(), buf.layout.total_len());
+        Ok(buf)
+    }
+
+    /// Re-gather into this buffer's existing allocation.
+    pub fn regather(&mut self, map: &TensorMap) -> Result<()> {
+        for e in self.layout.entries() {
+            let t = map
+                .get(&e.name)
+                .with_context(|| format!("regathering flat plane window {:?}", e.name))?;
+            if t.shape() != e.shape.as_slice() {
+                bail!(
+                    "flat plane window {:?}: tensor shape {:?} != layout shape {:?}",
+                    e.name,
+                    t.shape(),
+                    e.shape
+                );
+            }
+            self.data[e.range()].copy_from_slice(t.as_f32()?);
+        }
+        Ok(())
+    }
+
+    /// Scatter the plane back into `map`: windows whose destination tensor
+    /// already exists with the right shape are overwritten **in place** (no
+    /// allocation — the teacher-reload path); missing ones are inserted.
+    pub fn scatter_into(&self, map: &mut TensorMap) -> Result<()> {
+        // In-place pass over whatever already exists.
+        let mut pending: Vec<&FlatEntry> = Vec::new();
+        for e in self.layout.entries() {
+            match map.get_mut(&e.name) {
+                Ok(t) if t.shape() == e.shape.as_slice() && t.as_f32().is_ok() => {
+                    t.as_f32_mut()?.copy_from_slice(&self.data[e.range()]);
+                }
+                _ => pending.push(e),
+            }
+        }
+        for e in pending {
+            map.insert(
+                e.name.clone(),
+                Tensor::f32(&e.shape, self.data[e.range()].to_vec())?,
+            );
+        }
+        Ok(())
+    }
+
+    /// Materialize the plane as a fresh named map.
+    pub fn to_map(&self) -> Result<TensorMap> {
+        let mut m = TensorMap::new();
+        self.scatter_into(&mut m)?;
+        Ok(m)
+    }
+
+    /// The window of one named tensor.
+    pub fn view(&self, name: &str) -> Result<&[f32]> {
+        let e = self
+            .layout
+            .entry(name)
+            .with_context(|| format!("flat plane has no window {name:?}"))?;
+        Ok(&self.data[e.range()])
+    }
+
+    pub fn layout(&self) -> &Arc<FlatLayout> {
+        &self.layout
+    }
+
+    /// The whole contiguous plane.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the raw vector (serialization).
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ragged_map() -> TensorMap {
+        let mut m = TensorMap::new();
+        m.insert("grads.w2", Tensor::f32(&[3], vec![4.0, 5.0, 6.0]).unwrap());
+        m.insert("grads.b", Tensor::f32(&[1], vec![9.0]).unwrap());
+        m.insert("grads.w1", Tensor::f32(&[2, 2], vec![0.0, 1.0, 2.0, 3.0]).unwrap());
+        m.insert("grads.ids", Tensor::i32(&[2], vec![7, 8]).unwrap()); // skipped
+        m.insert("loss", Tensor::scalar_f32(0.5)); // outside prefix
+        m
+    }
+
+    #[test]
+    fn layout_is_sorted_and_offsets_pack() {
+        let m = ragged_map();
+        let l = FlatLayout::from_map(&m, "grads.");
+        let names: Vec<&str> = l.entries().iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, vec!["grads.b", "grads.w1", "grads.w2"]);
+        assert_eq!(l.total_len(), 1 + 4 + 3);
+        assert_eq!(l.entry("grads.w1").unwrap().offset, 1);
+        assert_eq!(l.entry("grads.w2").unwrap().range(), 5..8);
+        assert!(l.entry("grads.ids").is_none(), "i32 leaves stay off-plane");
+        assert!(l.entry("loss").is_none());
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let m = ragged_map();
+        let l = Arc::new(FlatLayout::from_map(&m, "grads."));
+        let buf = FlatBuffer::gather(l.clone(), &m).unwrap();
+        assert_eq!(buf.data(), &[9.0, 0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(buf.view("grads.w2").unwrap(), &[4.0, 5.0, 6.0]);
+
+        let round = buf.to_map().unwrap();
+        for name in ["grads.b", "grads.w1", "grads.w2"] {
+            assert_eq!(
+                round.get(name).unwrap().as_f32().unwrap(),
+                m.get(name).unwrap().as_f32().unwrap(),
+                "{name}"
+            );
+            assert_eq!(round.get(name).unwrap().shape(), m.get(name).unwrap().shape());
+        }
+    }
+
+    #[test]
+    fn scatter_overwrites_in_place() {
+        let m = ragged_map();
+        let l = Arc::new(FlatLayout::from_map(&m, "grads."));
+        let mut buf = FlatBuffer::gather(l, &m).unwrap();
+        crate::runtime::vecops::scale(buf.data_mut(), 2.0);
+
+        let mut dst = ragged_map();
+        buf.scatter_into(&mut dst).unwrap();
+        assert_eq!(dst.get("grads.b").unwrap().as_f32().unwrap(), &[18.0]);
+        assert_eq!(
+            dst.get("grads.w2").unwrap().as_f32().unwrap(),
+            &[8.0, 10.0, 12.0]
+        );
+        // off-plane entries untouched
+        assert_eq!(dst.get("grads.ids").unwrap().as_i32().unwrap(), &[7, 8]);
+        assert_eq!(dst.get("loss").unwrap().item_f32().unwrap(), 0.5);
+    }
+
+    #[test]
+    fn gather_rejects_missing_and_misshapen() {
+        let m = ragged_map();
+        let l = Arc::new(FlatLayout::from_map(&m, "grads."));
+        let mut missing = TensorMap::new();
+        missing.insert("grads.b", Tensor::f32(&[1], vec![0.0]).unwrap());
+        assert!(FlatBuffer::gather(l.clone(), &missing).is_err());
+
+        let mut misshapen = ragged_map();
+        misshapen.insert("grads.b", Tensor::f32(&[2], vec![0.0, 0.0]).unwrap());
+        assert!(FlatBuffer::gather(l, &misshapen).is_err());
+    }
+
+    #[test]
+    fn from_spec_matches_from_map() {
+        let spec = Spec::parse(
+            "spec-version 1\nname t\n\
+             in grads.w1 f32 2,2\nin grads.b f32 1\nin grads.w2 f32 3\n\
+             in grads.ids i32 2\nin lr f32 -\n\
+             out loss f32 -\n",
+        )
+        .unwrap();
+        let from_spec = FlatLayout::from_spec(&spec, "grads.");
+        let from_map = FlatLayout::from_map(&ragged_map(), "grads.");
+        assert!(from_spec.same_plane(&from_map));
+    }
+
+    #[test]
+    fn zeros_and_regather() {
+        let m = ragged_map();
+        let l = Arc::new(FlatLayout::from_map(&m, "grads."));
+        let mut buf = FlatBuffer::zeros(l);
+        assert!(buf.data().iter().all(|&v| v == 0.0));
+        buf.regather(&m).unwrap();
+        assert_eq!(buf.view("grads.b").unwrap(), &[9.0]);
+        assert!(FlatBuffer::from_data(buf.layout().clone(), vec![0.0; 3]).is_err());
+    }
+}

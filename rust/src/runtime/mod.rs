@@ -13,13 +13,16 @@
 pub mod bundle;
 pub mod client;
 pub mod exec;
+pub mod flat;
 pub mod spec;
 pub mod tensor;
 pub mod tmap;
+pub mod vecops;
 
 pub use bundle::Bundle;
 pub use client::Runtime;
 pub use exec::Executable;
+pub use flat::{FlatBuffer, FlatEntry, FlatLayout};
 pub use spec::{DType, Spec, TensorSpec};
 pub use tensor::Tensor;
 pub use tmap::TensorMap;

@@ -162,6 +162,16 @@ impl Spec {
             .map(|(_, v)| v.as_str())
     }
 
+    /// Iterate the input specs under a prefix, in flattened order
+    /// (allocation-free companion to [`Spec::inputs_with_prefix`]; the flat
+    /// plane and zero-initializers walk this).
+    pub fn inputs_under<'a>(
+        &'a self,
+        prefix: &'a str,
+    ) -> impl Iterator<Item = &'a TensorSpec> + 'a {
+        self.inputs.iter().filter(move |t| t.name.starts_with(prefix))
+    }
+
     /// Inputs whose name starts with `prefix` (e.g. all `params.` leaves),
     /// in flattened order.
     pub fn inputs_with_prefix(&self, prefix: &str) -> Vec<usize> {

@@ -6,6 +6,7 @@
 //! pipeline) manipulates `Tensor`s directly.
 
 use crate::runtime::spec::{DType, TensorSpec};
+use crate::runtime::vecops;
 use anyhow::{bail, Context, Result};
 
 /// Dense host tensor. Row-major (C) layout, matching XLA's default.
@@ -199,7 +200,8 @@ impl Tensor {
 
     // ---------------------------------------------------------------- maths
 
-    /// Elementwise in-place add (for gradient reduction).
+    /// Elementwise in-place add (for gradient reduction). Chunked through
+    /// [`vecops`] so it vectorizes identically to the flat-plane path.
     pub fn add_assign(&mut self, other: &Tensor) -> Result<()> {
         if self.shape() != other.shape() {
             bail!(
@@ -210,17 +212,29 @@ impl Tensor {
         }
         let dst = self.as_f32_mut()?;
         let src = other.as_f32()?;
-        for (d, s) in dst.iter_mut().zip(src.iter()) {
-            *d += *s;
+        vecops::add(dst, src);
+        Ok(())
+    }
+
+    /// Elementwise in-place axpy: `self += k * other` — folds a weight into
+    /// the accumulation pass (teacher-probability averaging, ramp mixing).
+    pub fn add_scaled(&mut self, other: &Tensor, k: f32) -> Result<()> {
+        if self.shape() != other.shape() {
+            bail!(
+                "add_scaled shape mismatch: {:?} vs {:?}",
+                self.shape(),
+                other.shape()
+            );
         }
+        let dst = self.as_f32_mut()?;
+        let src = other.as_f32()?;
+        vecops::add_scaled(dst, src, k);
         Ok(())
     }
 
     /// Elementwise in-place scale.
     pub fn scale(&mut self, k: f32) -> Result<()> {
-        for d in self.as_f32_mut()? {
-            *d *= k;
-        }
+        vecops::scale(self.as_f32_mut()?, k);
         Ok(())
     }
 
@@ -234,19 +248,12 @@ impl Tensor {
         if a.is_empty() {
             return Ok(0.0);
         }
-        let sum: f64 = a
-            .iter()
-            .zip(b.iter())
-            .map(|(x, y)| (x - y).abs() as f64)
-            .sum();
-        Ok((sum / a.len() as f64) as f32)
+        Ok((vecops::abs_diff_sum(a, b) / a.len() as f64) as f32)
     }
 
     /// L2 norm (diagnostics / divergence detection).
     pub fn l2_norm(&self) -> Result<f32> {
-        let d = self.as_f32()?;
-        let s: f64 = d.iter().map(|&x| (x as f64) * (x as f64)).sum();
-        Ok(s.sqrt() as f32)
+        Ok(vecops::sq_sum(self.as_f32()?).sqrt() as f32)
     }
 
     pub fn is_finite(&self) -> bool {
@@ -283,6 +290,19 @@ mod tests {
         a.add_assign(&b).unwrap();
         a.scale(0.5).unwrap();
         assert_eq!(a.as_f32().unwrap(), &[5.5, 11.0, 16.5]);
+    }
+
+    #[test]
+    fn add_scaled_is_axpy() {
+        let mut a = Tensor::f32(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::f32(&[3], vec![10.0, 20.0, 30.0]).unwrap();
+        a.add_scaled(&b, 0.1).unwrap();
+        let got = a.as_f32().unwrap();
+        for (g, want) in got.iter().zip([2.0f32, 4.0, 6.0]) {
+            assert!((g - want).abs() < 1e-6, "{got:?}");
+        }
+        let c = Tensor::f32(&[2], vec![0.0; 2]).unwrap();
+        assert!(a.add_scaled(&c, 1.0).is_err());
     }
 
     #[test]

@@ -5,16 +5,22 @@
 //! A [`TensorMap`] bridges the two: assemble inputs for a [`Spec`] by name,
 //! capture outputs back into names, move whole prefixes between maps
 //! (e.g. teacher params into a student's predict call).
+//!
+//! Storage is an ordered map so every prefix walk
+//! ([`TensorMap::prefix_iter`]) is a sorted range scan: deterministic order
+//! with no collect-sort round trip and no repeated hashing — the property
+//! [`crate::runtime::flat::FlatLayout`] builds its name→offset plane on.
 
 use crate::runtime::spec::Spec;
 use crate::runtime::tensor::Tensor;
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
+use std::ops::Bound;
 
-/// A named collection of host tensors.
+/// A named collection of host tensors (name-ordered).
 #[derive(Debug, Clone, Default)]
 pub struct TensorMap {
-    map: HashMap<String, Tensor>,
+    map: BTreeMap<String, Tensor>,
 }
 
 impl TensorMap {
@@ -50,8 +56,33 @@ impl TensorMap {
         self.map.is_empty()
     }
 
+    /// All names in sorted order.
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.map.keys().map(|s| s.as_str())
+    }
+
+    /// Sorted, allocation-free iteration over the entries under a prefix
+    /// (a range scan on the ordered map — no collect, no re-hash).
+    pub fn prefix_iter<'a>(
+        &'a self,
+        prefix: &'a str,
+    ) -> impl Iterator<Item = (&'a str, &'a Tensor)> + 'a {
+        self.map
+            .range::<str, _>((Bound::Included(prefix), Bound::Unbounded))
+            .take_while(move |(k, _)| k.starts_with(prefix))
+            .map(|(k, t)| (k.as_str(), t))
+    }
+
+    /// Mutable variant of [`TensorMap::prefix_iter`] (in-place scaling,
+    /// flat-plane scatter into existing storage).
+    pub fn prefix_iter_mut<'a>(
+        &'a mut self,
+        prefix: &'a str,
+    ) -> impl Iterator<Item = (&'a str, &'a mut Tensor)> + 'a {
+        self.map
+            .range_mut::<str, _>((Bound::Included(prefix), Bound::Unbounded))
+            .take_while(move |(k, _)| k.starts_with(prefix))
+            .map(|(k, t)| (k.as_str(), t))
     }
 
     /// Build the positional input list for a spec, overlaying `extra`
@@ -106,7 +137,7 @@ impl TensorMap {
                 spec.outputs.len()
             );
         }
-        let mut map = HashMap::with_capacity(outputs.len());
+        let mut map = BTreeMap::new();
         for (ts, t) in spec.outputs.iter().zip(outputs) {
             map.insert(ts.name.clone(), t);
         }
@@ -115,29 +146,33 @@ impl TensorMap {
 
     /// Copy every entry under `prefix` from `src`, optionally re-rooting it
     /// under `new_prefix` (e.g. teacher `params.*` -> student-side storage).
+    /// When names and shapes already match, the copy happens in place
+    /// (no map churn, no fresh allocations on the steady-state train loop).
     pub fn adopt_prefix(&mut self, src: &TensorMap, prefix: &str, new_prefix: &str) {
-        for (k, v) in &src.map {
-            if let Some(rest) = k.strip_prefix(prefix) {
+        for (k, v) in src.prefix_iter(prefix) {
+            let rest = &k[prefix.len()..];
+            // Fast path: same-name, same-shape destination — copy into its
+            // existing storage instead of cloning a fresh tensor.
+            let copied = if new_prefix == prefix {
+                self.map.get_mut(k).is_some_and(|dst| copy_in_place(dst, v))
+            } else {
+                false
+            };
+            if !copied {
                 self.map.insert(format!("{new_prefix}{rest}"), v.clone());
             }
         }
     }
 
     /// All entries under a prefix, sorted by name (deterministic order).
+    /// Prefer [`TensorMap::prefix_iter`] on hot paths; this collects.
     pub fn prefix_entries(&self, prefix: &str) -> Vec<(&str, &Tensor)> {
-        let mut v: Vec<(&str, &Tensor)> = self
-            .map
-            .iter()
-            .filter(|(k, _)| k.starts_with(prefix))
-            .map(|(k, t)| (k.as_str(), t))
-            .collect();
-        v.sort_by_key(|(k, _)| *k);
-        v
+        self.prefix_iter(prefix).collect()
     }
 
     /// Total f32/i32 elements under a prefix (parameter counting).
     pub fn prefix_numel(&self, prefix: &str) -> usize {
-        self.prefix_entries(prefix).iter().map(|(_, t)| t.numel()).sum()
+        self.prefix_iter(prefix).map(|(_, t)| t.numel()).sum()
     }
 
     /// Merge another map in, overwriting collisions.
@@ -150,14 +185,10 @@ impl TensorMap {
     pub fn prefix_mean_abs_diff(&self, other: &TensorMap, prefix: &str) -> Result<f32> {
         let mut total = 0.0f64;
         let mut n = 0usize;
-        for (k, t) in self.prefix_entries(prefix) {
+        for (k, t) in self.prefix_iter(prefix) {
             let o = other.get(k)?;
             if let (Ok(a), Ok(b)) = (t.as_f32(), o.as_f32()) {
-                total += a
-                    .iter()
-                    .zip(b.iter())
-                    .map(|(x, y)| (x - y).abs() as f64)
-                    .sum::<f64>();
+                total += crate::runtime::vecops::abs_diff_sum(a, b);
                 n += a.len();
             }
         }
@@ -165,6 +196,25 @@ impl TensorMap {
             bail!("no shared f32 entries under {prefix:?}");
         }
         Ok((total / n as f64) as f32)
+    }
+}
+
+/// Overwrite `dst`'s storage with `src`'s when name-independent metadata
+/// (shape + dtype) matches. Returns false (caller clones) otherwise.
+fn copy_in_place(dst: &mut Tensor, src: &Tensor) -> bool {
+    if dst.shape() != src.shape() {
+        return false;
+    }
+    match (dst, src) {
+        (Tensor::F32 { data: d, .. }, Tensor::F32 { data: s, .. }) => {
+            d.copy_from_slice(s);
+            true
+        }
+        (Tensor::I32 { data: d, .. }, Tensor::I32 { data: s, .. }) => {
+            d.copy_from_slice(s);
+            true
+        }
+        _ => false,
     }
 }
 
@@ -229,6 +279,35 @@ mod tests {
         let mut dst = TensorMap::new();
         dst.adopt_prefix(&m, "params.", "teacher.");
         assert_eq!(dst.get("teacher.a").unwrap().as_f32().unwrap(), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn prefix_iter_sorted_and_bounded() {
+        let mut m = TensorMap::new();
+        for name in ["params.z", "params.a", "opt.m", "paramsx", "loss"] {
+            m.insert(name, Tensor::scalar_f32(0.0));
+        }
+        let names: Vec<&str> = m.prefix_iter("params.").map(|(k, _)| k).collect();
+        assert_eq!(names, vec!["params.a", "params.z"]);
+        assert_eq!(m.prefix_iter("").count(), 5);
+        assert_eq!(m.prefix_iter("nope.").count(), 0);
+        // mutable variant reaches the same entries
+        for (_, t) in m.prefix_iter_mut("params.") {
+            t.scale(2.0).unwrap();
+        }
+        assert_eq!(m.prefix_entries("params.").len(), 2);
+    }
+
+    #[test]
+    fn adopt_prefix_in_place_overwrite() {
+        let mut dst = TensorMap::new();
+        dst.insert("params.w", Tensor::f32(&[2], vec![0.0, 0.0]).unwrap());
+        let mut src = TensorMap::new();
+        src.insert("params.w", Tensor::f32(&[2], vec![5.0, 6.0]).unwrap());
+        src.insert("params.new", Tensor::scalar_f32(1.0));
+        dst.adopt_prefix(&src, "params.", "params.");
+        assert_eq!(dst.get("params.w").unwrap().as_f32().unwrap(), &[5.0, 6.0]);
+        assert_eq!(dst.get("params.new").unwrap().item_f32().unwrap(), 1.0);
     }
 
     #[test]

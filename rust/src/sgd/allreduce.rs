@@ -1,27 +1,63 @@
 //! Gradient reduction across workers.
 //!
-//! Two strategies with identical semantics (mean over workers, leaf-wise):
+//! Three strategies with identical semantics (mean over workers, leaf-wise):
 //!
 //! * [`ReduceStrategy::Naive`]: sequential accumulation — O(W·N) adds on
 //!   one thread.
 //! * [`ReduceStrategy::Tree`]: pairwise tree reduction across threads —
-//!   the in-process analogue of a reduction tree, and measurably faster
-//!   for large W·N (see `benches/perf_hotpath.rs`).
+//!   the in-process analogue of a reduction tree. Still pays one named map
+//!   per round and touches every element log₂(W) times.
+//! * [`ReduceStrategy::Flat`]: the fused bucketed reduce. Workers gather
+//!   onto one contiguous plane ([`FlatBuffer`]), the plane is split into
+//!   cache-sized chunks, and each chunk is summed across *all* workers on
+//!   its own thread with the `1/W` scale folded into the same pass — the
+//!   in-process analogue of reduce-scatter + all-gather. No per-tensor
+//!   clones, no per-name hashing, and every element is written exactly
+//!   once. This is the default for `LmSyncGroup` and the substrate the
+//!   cross-process exchange will reuse (see ROADMAP).
+//!
+//! `benches/perf_hotpath.rs` measures all three at LM-gradient sizes.
 
+use crate::runtime::flat::{FlatBuffer, FlatLayout};
+use crate::runtime::vecops;
 use crate::runtime::TensorMap;
+use crate::sgd::group::parallel_chunks;
 #[cfg(test)]
 use crate::runtime::Tensor;
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// Reduction algorithm choice.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ReduceStrategy {
     Naive,
     Tree,
+    #[default]
+    Flat,
+}
+
+impl ReduceStrategy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "naive" => ReduceStrategy::Naive,
+            "tree" => ReduceStrategy::Tree,
+            "flat" => ReduceStrategy::Flat,
+            other => bail!("unknown reduce strategy {other:?} (naive|tree|flat)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReduceStrategy::Naive => "naive",
+            ReduceStrategy::Tree => "tree",
+            ReduceStrategy::Flat => "flat",
+        }
+    }
 }
 
 /// Mean-reduce the `grads.`-prefixed entries of per-worker maps into one
-/// map (same names). All maps must share identical shapes.
+/// map (same names; worker 0's off-prefix entries ride along, as with the
+/// sequential strategies). All maps must share identical shapes.
 pub fn allreduce_mean(
     workers: Vec<TensorMap>,
     prefix: &str,
@@ -31,33 +67,33 @@ pub fn allreduce_mean(
         bail!("allreduce over zero workers");
     }
     let n = workers.len();
-    let mut acc = match strategy {
-        ReduceStrategy::Naive => reduce_naive(workers, prefix)?,
-        ReduceStrategy::Tree => reduce_tree(workers, prefix)?,
-    };
-    let names: Vec<String> = acc
-        .prefix_entries(prefix)
-        .iter()
-        .map(|(k, _)| k.to_string())
-        .collect();
-    for name in names {
-        acc.get_mut(&name)?.scale(1.0 / n as f32)?;
+    match strategy {
+        // Flat folds the 1/n scale into the chunk pass itself.
+        ReduceStrategy::Flat => reduce_flat(workers, prefix),
+        ReduceStrategy::Naive | ReduceStrategy::Tree => {
+            let mut acc = match strategy {
+                ReduceStrategy::Naive => reduce_naive(workers, prefix)?,
+                _ => reduce_tree(workers, prefix)?,
+            };
+            let inv = 1.0 / n as f32;
+            for (_, t) in acc.prefix_iter_mut(prefix) {
+                t.scale(inv)?;
+            }
+            Ok(acc)
+        }
     }
-    Ok(acc)
 }
 
+/// `dst[prefix] += src[prefix]`, leaf-wise, borrowing the source tensors
+/// (no clone-per-add on the hot loop).
 fn sum_into(dst: &mut TensorMap, src: &TensorMap, prefix: &str) -> Result<()> {
-    let names: Vec<String> = dst
-        .prefix_entries(prefix)
-        .iter()
-        .map(|(k, _)| k.to_string())
-        .collect();
-    if names.is_empty() {
-        bail!("no entries under {prefix:?} to reduce");
+    let mut touched = 0usize;
+    for (name, d) in dst.prefix_iter_mut(prefix) {
+        d.add_assign(src.get(name)?)?;
+        touched += 1;
     }
-    for name in names {
-        let s = src.get(&name)?.clone();
-        dst.get_mut(&name)?.add_assign(&s)?;
+    if touched == 0 {
+        bail!("no entries under {prefix:?} to reduce");
     }
     Ok(())
 }
@@ -65,7 +101,7 @@ fn sum_into(dst: &mut TensorMap, src: &TensorMap, prefix: &str) -> Result<()> {
 fn reduce_naive(mut workers: Vec<TensorMap>, prefix: &str) -> Result<TensorMap> {
     let mut acc = workers.remove(0);
     // Touch the prefix once to validate presence even for W=1.
-    if acc.prefix_entries(prefix).is_empty() {
+    if acc.prefix_iter(prefix).next().is_none() {
         bail!("no entries under {prefix:?} to reduce");
     }
     for w in &workers {
@@ -75,7 +111,7 @@ fn reduce_naive(mut workers: Vec<TensorMap>, prefix: &str) -> Result<TensorMap> 
 }
 
 fn reduce_tree(mut workers: Vec<TensorMap>, prefix: &str) -> Result<TensorMap> {
-    if workers.iter().any(|w| w.prefix_entries(prefix).is_empty()) {
+    if workers.iter().any(|w| w.prefix_iter(prefix).next().is_none()) {
         bail!("no entries under {prefix:?} to reduce");
     }
     while workers.len() > 1 {
@@ -112,6 +148,64 @@ fn reduce_tree(mut workers: Vec<TensorMap>, prefix: &str) -> Result<TensorMap> {
     Ok(workers.pop().unwrap())
 }
 
+/// The fused bucketed reduce: derive the plane from worker 0, validate,
+/// and delegate to [`allreduce_mean_flat`].
+fn reduce_flat(workers: Vec<TensorMap>, prefix: &str) -> Result<TensorMap> {
+    // Semantics parity with Naive/Tree: a non-f32 leaf under the prefix is
+    // an error, not a silently unreduced pass-through.
+    for (name, t) in workers[0].prefix_iter(prefix) {
+        if t.as_f32().is_err() {
+            bail!("cannot reduce non-f32 tensor {name:?} under {prefix:?}");
+        }
+    }
+    let layout = Arc::new(FlatLayout::from_map(&workers[0], prefix));
+    if layout.is_empty() {
+        bail!("no entries under {prefix:?} to reduce");
+    }
+    allreduce_mean_flat(workers, layout)
+}
+
+/// Flat mean-reduce against a caller-cached layout — the steady-state hot
+/// path: `LmSyncGroup` derives the plane once and reuses it every step, so
+/// a training step performs no name hashing or layout allocation at all.
+/// Leaves outside the layout are ignored; derive the layout with
+/// [`FlatLayout::from_map`]/[`FlatLayout::from_spec`] and validate once.
+pub fn allreduce_mean_flat(
+    workers: Vec<TensorMap>,
+    layout: Arc<FlatLayout>,
+) -> Result<TensorMap> {
+    if workers.is_empty() {
+        bail!("allreduce over zero workers");
+    }
+    if layout.is_empty() {
+        bail!("flat allreduce over an empty layout");
+    }
+    let n = workers.len();
+    // Fuse each worker's leaves into one contiguous buffer (a single
+    // sequential copy per worker — the in-process stand-in for the
+    // transport placing remote gradients into a registered flat region).
+    let planes: Vec<FlatBuffer> = workers
+        .iter()
+        .map(|w| FlatBuffer::gather(layout.clone(), w))
+        .collect::<Result<_>>()?;
+
+    let mut out = vec![0.0f32; layout.total_len()];
+    {
+        let views: Vec<&[f32]> = planes.iter().map(|p| p.data()).collect();
+        let views = views.as_slice();
+        let inv = 1.0 / n as f32;
+        parallel_chunks(&mut out, vecops::PAR_CHUNK, |start, chunk| {
+            vecops::mean_reduce_chunk(chunk, views, start, inv);
+        });
+    }
+
+    // Scatter the reduced plane into worker 0's map so off-prefix entries
+    // (losses, counters) ride along exactly like the sequential paths.
+    let mut base = workers.into_iter().next().unwrap();
+    FlatBuffer::from_data(layout, out)?.scatter_into(&mut base)?;
+    Ok(base)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,17 +225,28 @@ mod tests {
     }
 
     #[test]
-    fn tree_matches_naive() {
+    fn flat_mean_of_three_keeps_off_prefix_entries() {
+        let ws = vec![worker(&[1.0, 2.0]), worker(&[3.0, 4.0]), worker(&[5.0, 6.0])];
+        let r = allreduce_mean(ws, "grads.", ReduceStrategy::Flat).unwrap();
+        assert_eq!(r.get("grads.w").unwrap().as_f32().unwrap(), &[3.0, 4.0]);
+        assert_eq!(r.get("loss").unwrap().item_f32().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn strategies_agree() {
         for n in [1usize, 2, 3, 5, 8, 13] {
-            let ws_a: Vec<TensorMap> =
-                (0..n).map(|i| worker(&[i as f32, 2.0 * i as f32])).collect();
-            let ws_b = ws_a.clone();
-            let a = allreduce_mean(ws_a, "grads.", ReduceStrategy::Naive).unwrap();
-            let b = allreduce_mean(ws_b, "grads.", ReduceStrategy::Tree).unwrap();
+            let make = || -> Vec<TensorMap> {
+                (0..n).map(|i| worker(&[i as f32, 2.0 * i as f32])).collect()
+            };
+            let a = allreduce_mean(make(), "grads.", ReduceStrategy::Naive).unwrap();
+            let b = allreduce_mean(make(), "grads.", ReduceStrategy::Tree).unwrap();
+            let c = allreduce_mean(make(), "grads.", ReduceStrategy::Flat).unwrap();
             let va = a.get("grads.w").unwrap().as_f32().unwrap();
             let vb = b.get("grads.w").unwrap().as_f32().unwrap();
-            for (x, y) in va.iter().zip(vb.iter()) {
+            let vc = c.get("grads.w").unwrap().as_f32().unwrap();
+            for ((x, y), z) in va.iter().zip(vb.iter()).zip(vc.iter()) {
                 assert!((x - y).abs() < 1e-5, "n={n}: {va:?} vs {vb:?}");
+                assert!((x - z).abs() < 1e-5, "n={n}: {va:?} vs {vc:?}");
             }
         }
     }
@@ -149,18 +254,65 @@ mod tests {
     #[test]
     fn empty_workers_error() {
         assert!(allreduce_mean(vec![], "grads.", ReduceStrategy::Naive).is_err());
+        assert!(allreduce_mean(vec![], "grads.", ReduceStrategy::Flat).is_err());
     }
 
     #[test]
     fn missing_prefix_errors() {
-        let ws = vec![worker(&[1.0])];
-        assert!(allreduce_mean(ws, "nope.", ReduceStrategy::Naive).is_err());
+        for s in [ReduceStrategy::Naive, ReduceStrategy::Tree, ReduceStrategy::Flat] {
+            let ws = vec![worker(&[1.0])];
+            assert!(allreduce_mean(ws, "nope.", s).is_err(), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn non_f32_under_prefix_errors_in_every_strategy() {
+        let mut w0 = worker(&[1.0, 2.0]);
+        w0.insert("grads.count", Tensor::i32(&[1], vec![3]).unwrap());
+        let mut w1 = worker(&[3.0, 4.0]);
+        w1.insert("grads.count", Tensor::i32(&[1], vec![4]).unwrap());
+        for s in [ReduceStrategy::Naive, ReduceStrategy::Tree, ReduceStrategy::Flat] {
+            let r = allreduce_mean(vec![w0.clone(), w1.clone()], "grads.", s);
+            assert!(r.is_err(), "{s:?} silently accepted an i32 grad leaf");
+        }
+    }
+
+    #[test]
+    fn cached_layout_path_matches_checked_path() {
+        let ws = vec![worker(&[1.0, 2.0]), worker(&[3.0, 4.0])];
+        let layout = Arc::new(FlatLayout::from_map(&ws[0], "grads."));
+        let a = allreduce_mean_flat(ws.clone(), layout).unwrap();
+        let b = allreduce_mean(ws, "grads.", ReduceStrategy::Flat).unwrap();
+        assert_eq!(
+            a.get("grads.w").unwrap().as_f32().unwrap(),
+            b.get("grads.w").unwrap().as_f32().unwrap()
+        );
+        assert!(allreduce_mean_flat(vec![], Arc::new(FlatLayout::default())).is_err());
+    }
+
+    #[test]
+    fn ragged_worker_errors_not_panics() {
+        // Second worker missing a leaf the layout expects.
+        let mut short = TensorMap::new();
+        short.insert("grads.other", Tensor::f32(&[2], vec![0.0; 2]).unwrap());
+        let ws = vec![worker(&[1.0, 2.0]), short];
+        assert!(allreduce_mean(ws, "grads.", ReduceStrategy::Flat).is_err());
     }
 
     #[test]
     fn single_worker_identity() {
-        let r = allreduce_mean(vec![worker(&[7.0, 9.0])], "grads.", ReduceStrategy::Tree)
-            .unwrap();
-        assert_eq!(r.get("grads.w").unwrap().as_f32().unwrap(), &[7.0, 9.0]);
+        for s in [ReduceStrategy::Tree, ReduceStrategy::Flat] {
+            let r = allreduce_mean(vec![worker(&[7.0, 9.0])], "grads.", s).unwrap();
+            assert_eq!(r.get("grads.w").unwrap().as_f32().unwrap(), &[7.0, 9.0], "{s:?}");
+        }
+    }
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        for s in [ReduceStrategy::Naive, ReduceStrategy::Tree, ReduceStrategy::Flat] {
+            assert_eq!(ReduceStrategy::parse(s.name()).unwrap(), s);
+        }
+        assert!(ReduceStrategy::parse("ring").is_err());
+        assert_eq!(ReduceStrategy::default(), ReduceStrategy::Flat);
     }
 }

@@ -30,6 +30,36 @@ where
     (0..n).map(f).collect()
 }
 
+/// Chunk fan-out over one contiguous f32 plane: split `out` into at most
+/// `available_parallelism` contiguous chunks of at least `min_chunk`
+/// elements and run `f(plane_offset, chunk)` for each on its own scoped
+/// thread. The flat allreduce drives this with a cache-sized `min_chunk`
+/// so each chunk stays resident while it is summed across all workers.
+pub fn parallel_chunks<F>(out: &mut [f32], min_chunk: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let total = out.len();
+    if total == 0 {
+        return;
+    }
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let chunks = threads.min(total.div_ceil(min_chunk.max(1))).max(1);
+    let chunk_len = total.div_ceil(chunks);
+    if chunks == 1 {
+        f(0, out);
+        return;
+    }
+    let f = &f;
+    std::thread::scope(|scope| {
+        for (ci, oc) in out.chunks_mut(chunk_len).enumerate() {
+            scope.spawn(move || f(ci * chunk_len, oc));
+        }
+    });
+}
+
 /// Re-export site for the group step used by models::lm::LmSyncGroup.
 pub struct SyncGroup;
 
@@ -78,5 +108,20 @@ mod tests {
         let a = parallel_workers(5, |i| Ok(i * i)).unwrap();
         let b = sequential_workers(5, |i| Ok(i * i)).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parallel_chunks_covers_plane_once() {
+        for n in [0usize, 1, 5, 64, 1000] {
+            let mut out = vec![0.0f32; n];
+            parallel_chunks(&mut out, 16, |start, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v += (start + i) as f32; // += catches double-visits
+                }
+            });
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i as f32, "n={n} i={i}");
+            }
+        }
     }
 }

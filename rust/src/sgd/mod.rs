@@ -14,5 +14,5 @@
 pub mod allreduce;
 pub mod group;
 
-pub use allreduce::{allreduce_mean, ReduceStrategy};
+pub use allreduce::{allreduce_mean, allreduce_mean_flat, ReduceStrategy};
 pub use group::SyncGroup;

@@ -1,0 +1,207 @@
+//! Flat-plane integration tests (no XLA): property-style equivalence of
+//! the three reduce strategies over ragged tensor sets, flat gather/scatter
+//! round trips, and checkpoint format compatibility (CKPT0002 writer +
+//! CKPT0001 reader/writer).
+
+use codistill::codistill::Checkpoint;
+use codistill::prng::Pcg64;
+use codistill::runtime::flat::{FlatBuffer, FlatLayout};
+use codistill::runtime::{Tensor, TensorMap};
+use codistill::sgd::allreduce::{allreduce_mean, ReduceStrategy};
+use std::sync::Arc;
+
+/// Worker counts the paper's group sweeps actually use.
+const WORKER_COUNTS: [usize; 6] = [1, 2, 3, 5, 8, 13];
+
+/// A ragged leaf set: `k` tensors with pseudo-random small shapes.
+fn ragged_shapes(rng: &mut Pcg64, k: usize) -> Vec<(String, Vec<usize>)> {
+    (0..k)
+        .map(|i| {
+            let rank = 1 + (rng.below(3) as usize); // 1..=3
+            let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(7) as usize).collect();
+            (format!("grads.t{i:02}"), shape)
+        })
+        .collect()
+}
+
+/// One worker's map over the given leaf shapes, values seeded per worker.
+fn worker_map(shapes: &[(String, Vec<usize>)], w: usize, seed: u64) -> TensorMap {
+    let mut rng = Pcg64::new(seed ^ (w as u64).wrapping_mul(0x9e3779b97f4a7c15));
+    let mut m = TensorMap::new();
+    for (name, shape) in shapes {
+        let numel: usize = shape.iter().product();
+        let data: Vec<f32> = (0..numel).map(|_| rng.normal() as f32).collect();
+        m.insert(name.clone(), Tensor::f32(shape, data).unwrap());
+    }
+    // Off-prefix cargo every worker carries.
+    m.insert("loss", Tensor::scalar_f32(w as f32));
+    m
+}
+
+#[test]
+fn flat_equals_tree_equals_naive_over_ragged_sets() {
+    for (case, &workers) in WORKER_COUNTS.iter().enumerate().map(|(c, w)| (c as u64, w)) {
+        for leaves in [1usize, 3, 9] {
+            let mut rng = Pcg64::new(1000 + case * 17 + leaves as u64);
+            let shapes = ragged_shapes(&mut rng, leaves);
+            let make = || -> Vec<TensorMap> {
+                (0..workers).map(|w| worker_map(&shapes, w, 42 + case)).collect()
+            };
+            let a = allreduce_mean(make(), "grads.", ReduceStrategy::Naive).unwrap();
+            let b = allreduce_mean(make(), "grads.", ReduceStrategy::Tree).unwrap();
+            let c = allreduce_mean(make(), "grads.", ReduceStrategy::Flat).unwrap();
+            for (name, _) in &shapes {
+                let va = a.get(name).unwrap().as_f32().unwrap();
+                let vb = b.get(name).unwrap().as_f32().unwrap();
+                let vc = c.get(name).unwrap().as_f32().unwrap();
+                for i in 0..va.len() {
+                    assert!(
+                        (va[i] - vb[i]).abs() < 1e-5,
+                        "tree diverged: w={workers} {name}[{i}]: {} vs {}",
+                        va[i],
+                        vb[i]
+                    );
+                    assert!(
+                        (va[i] - vc[i]).abs() < 1e-5,
+                        "flat diverged: w={workers} {name}[{i}]: {} vs {}",
+                        va[i],
+                        vc[i]
+                    );
+                }
+            }
+            // worker 0's off-prefix entries ride along in every strategy
+            assert_eq!(c.get("loss").unwrap().item_f32().unwrap(), 0.0);
+        }
+    }
+}
+
+#[test]
+fn flat_mean_matches_analytic_value() {
+    // Values are w (worker index) everywhere: mean must be (W-1)/2.
+    for workers in WORKER_COUNTS {
+        let ws: Vec<TensorMap> = (0..workers)
+            .map(|w| {
+                let mut m = TensorMap::new();
+                m.insert("grads.w", Tensor::f32(&[33], vec![w as f32; 33]).unwrap());
+                m
+            })
+            .collect();
+        let r = allreduce_mean(ws, "grads.", ReduceStrategy::Flat).unwrap();
+        let want = (workers as f32 - 1.0) / 2.0;
+        for v in r.get("grads.w").unwrap().as_f32().unwrap() {
+            assert!((v - want).abs() < 1e-6, "w={workers}: {v} vs {want}");
+        }
+    }
+}
+
+#[test]
+fn gather_scatter_roundtrips_ragged_maps() {
+    for case in 0..20u64 {
+        let mut rng = Pcg64::new(777 + case);
+        let shapes = ragged_shapes(&mut rng, 1 + (case as usize % 7));
+        let m = worker_map(&shapes, 0, case);
+        let layout = Arc::new(FlatLayout::from_map(&m, "grads."));
+        let buf = FlatBuffer::gather(layout.clone(), &m).unwrap();
+        assert_eq!(buf.data().len(), layout.total_len());
+        let round = buf.to_map().unwrap();
+        for (name, shape) in &shapes {
+            let orig = m.get(name).unwrap();
+            let got = round.get(name).unwrap();
+            assert_eq!(got.shape(), shape.as_slice(), "{name}");
+            assert_eq!(got.as_f32().unwrap(), orig.as_f32().unwrap(), "{name}");
+        }
+        // windows are name-sorted and contiguous
+        let mut offset = 0usize;
+        for e in layout.entries() {
+            assert_eq!(e.offset, offset, "{}", e.name);
+            offset += e.len;
+        }
+        assert_eq!(offset, layout.total_len());
+    }
+}
+
+fn mixed_checkpoint(step: u64) -> Checkpoint {
+    let mut rng = Pcg64::new(step);
+    let mut params = TensorMap::new();
+    for (name, shape) in ragged_shapes(&mut rng, 5) {
+        let name = name.replace("grads.", "params.");
+        let numel: usize = shape.iter().product();
+        let data: Vec<f32> = (0..numel).map(|_| rng.normal() as f32).collect();
+        params.insert(name, Tensor::f32(&shape, data).unwrap());
+    }
+    params.insert("params.vocab_ids", Tensor::i32(&[4], vec![3, 1, 4, 1]).unwrap());
+    Checkpoint::new(2, step, params)
+}
+
+fn assert_same_params(a: &Checkpoint, b: &Checkpoint) {
+    let pa = a.params();
+    let pb = b.params();
+    let names_a: Vec<&str> = pa.names().collect();
+    let names_b: Vec<&str> = pb.names().collect();
+    assert_eq!(names_a, names_b);
+    for name in names_a {
+        let ta = pa.get(name).unwrap();
+        let tb = pb.get(name).unwrap();
+        assert_eq!(ta.shape(), tb.shape(), "{name}");
+        match (ta.as_f32(), tb.as_f32()) {
+            (Ok(x), Ok(y)) => assert_eq!(x, y, "{name}"),
+            _ => assert_eq!(
+                ta.as_i32().unwrap(),
+                tb.as_i32().unwrap(),
+                "{name}"
+            ),
+        }
+    }
+}
+
+#[test]
+fn flat_checkpoint_roundtrips_both_formats() {
+    let dir = std::env::temp_dir().join(format!("codistill_flatplane_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ck = mixed_checkpoint(42);
+
+    // CKPT0002: contiguous flat payload.
+    let p2 = dir.join("v2.ckpt");
+    ck.save(&p2).unwrap();
+    let l2 = Checkpoint::load(&p2).unwrap();
+    assert_eq!((l2.member, l2.step), (2, 42));
+    assert_same_params(&ck, &l2);
+    assert!(l2.flat().layout().same_plane(ck.flat().layout()));
+
+    // CKPT0001: legacy per-tensor framing, same reader entry point.
+    let p1 = dir.join("v1.ckpt");
+    ck.save_v1(&p1).unwrap();
+    let raw = std::fs::read(&p1).unwrap();
+    assert_eq!(&raw[..8], b"CKPT0001");
+    let l1 = Checkpoint::load(&p1).unwrap();
+    assert_eq!((l1.member, l1.step), (2, 42));
+    assert_same_params(&ck, &l1);
+
+    // and a flat-built checkpoint equals its v1 round trip on the plane too
+    assert_eq!(l1.flat().data(), ck.flat().data());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn scatter_reload_preserves_untouched_entries() {
+    let ck = mixed_checkpoint(7);
+    let mut dst = ck.params();
+    // perturb, then reload from the checkpoint plane
+    for (_, t) in dst.prefix_iter_mut("params.") {
+        if let Ok(d) = t.as_f32_mut() {
+            for v in d.iter_mut() {
+                *v += 100.0;
+            }
+        }
+    }
+    dst.insert("state.h", Tensor::f32(&[2], vec![9.0, 9.0]).unwrap());
+    ck.scatter_params_into(&mut dst).unwrap();
+    assert_same_params(&ck, &Checkpoint::new(2, 7, {
+        let mut p = TensorMap::new();
+        p.adopt_prefix(&dst, "params.", "params.");
+        p
+    }));
+    // non-param storage untouched by the reload
+    assert_eq!(dst.get("state.h").unwrap().as_f32().unwrap(), &[9.0, 9.0]);
+}

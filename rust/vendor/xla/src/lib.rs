@@ -1,0 +1,320 @@
+//! Host-side stub of the `xla` PJRT wrapper crate.
+//!
+//! The coordinator only needs two things from the real crate:
+//!
+//! 1. **`Literal`** — the host tensor interchange type. This stub implements
+//!    it for real (typed storage + dims), so every pure-host path
+//!    (`Tensor::to_literal` / `from_literal`, constant-input caching,
+//!    the tensor<->literal boundary benchmarks) works unchanged.
+//! 2. **PJRT compilation/execution** — `PjRtClient::cpu()` and everything
+//!    downstream of it return a descriptive error. Artifact-backed tests and
+//!    experiments detect the missing backend (or the missing `artifacts/`
+//!    directory) and skip, exactly as they do on a machine without the XLA
+//!    shared library.
+//!
+//! Replacing this stub with the real crate is a Cargo.toml path swap; the
+//! API below mirrors the subset of xla-rs 0.5 the workspace calls.
+
+use std::fmt::{self, Display};
+
+/// Error type mirroring `xla::Error` (implements `std::error::Error`, so
+/// `anyhow`'s `?`/`.context()` work on it).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn backend_unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} requires the real PJRT backend; this build links the vendored \
+         host-side stub (rust/vendor/xla). Swap in the real `xla` crate to \
+         compile/execute HLO artifacts."
+    ))
+}
+
+/// Element types crossing the runtime boundary (full PJRT set; the stub
+/// stores only the four the coordinator uses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+    C64,
+    C128,
+}
+
+/// Typed storage behind a [`Literal`]. Public (doc-hidden) only so the
+/// sealed [`NativeType`] trait can name it in its method signatures.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    S32(Vec<i32>),
+    U32(Vec<u32>),
+    Tuple(Vec<Literal>),
+}
+
+impl Storage {
+    fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::F64(v) => v.len(),
+            Storage::S32(v) => v.len(),
+            Storage::U32(v) => v.len(),
+            Storage::Tuple(v) => v.len(),
+        }
+    }
+
+    fn ty(&self) -> Option<ElementType> {
+        match self {
+            Storage::F32(_) => Some(ElementType::F32),
+            Storage::F64(_) => Some(ElementType::F64),
+            Storage::S32(_) => Some(ElementType::S32),
+            Storage::U32(_) => Some(ElementType::U32),
+            Storage::Tuple(_) => None,
+        }
+    }
+}
+
+/// Sealed conversion between native element types and [`Storage`].
+pub trait NativeType: Copy + private::Sealed {
+    #[doc(hidden)]
+    fn wrap(data: Vec<Self>) -> Storage;
+    #[doc(hidden)]
+    fn unwrap(storage: &Storage) -> Result<Vec<Self>>;
+}
+
+mod private {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for f64 {}
+    impl Sealed for i32 {}
+    impl Sealed for u32 {}
+}
+
+macro_rules! native {
+    ($t:ty, $variant:ident, $name:literal) => {
+        impl NativeType for $t {
+            fn wrap(data: Vec<Self>) -> Storage {
+                Storage::$variant(data)
+            }
+            fn unwrap(storage: &Storage) -> Result<Vec<Self>> {
+                match storage {
+                    Storage::$variant(v) => Ok(v.clone()),
+                    other => Err(Error(format!(
+                        "literal is {:?}, expected {}",
+                        other.ty(),
+                        $name
+                    ))),
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32, "f32");
+native!(f64, F64, "f64");
+native!(i32, S32, "s32");
+native!(u32, U32, "u32");
+
+/// Array shape of a non-tuple literal: dims + element type.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host literal: dense typed buffer + dims (or a tuple of literals).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a native slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let dims = vec![data.len() as i64];
+        Literal {
+            storage: T::wrap(data.to_vec()),
+            dims,
+        }
+    }
+
+    /// Tuple literal (as produced by `return_tuple=True` executables).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        let n = parts.len() as i64;
+        Literal {
+            storage: Storage::Tuple(parts),
+            dims: vec![n],
+        }
+    }
+
+    /// Reinterpret with new dims; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.storage, Storage::Tuple(_)) {
+            return Err(Error("cannot reshape a tuple literal".into()));
+        }
+        let numel: i64 = dims.iter().product();
+        if numel as usize != self.storage.len() {
+            return Err(Error(format!(
+                "reshape to {:?} wants {} elems, literal has {}",
+                dims,
+                numel,
+                self.storage.len()
+            )));
+        }
+        Ok(Literal {
+            storage: self.storage.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Shape of a non-tuple literal.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self.storage.ty() {
+            Some(ty) => Ok(ArrayShape {
+                dims: self.dims.clone(),
+                ty,
+            }),
+            None => Err(Error("tuple literal has no array shape".into())),
+        }
+    }
+
+    /// Copy out as a native vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.storage)
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.storage {
+            Storage::Tuple(parts) => Ok(parts.clone()),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: parsing requires the real backend).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        Err(backend_unavailable(&format!("parsing HLO text {path}")))
+    }
+}
+
+/// XLA computation handle.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client (stub: creation reports the missing backend).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(backend_unavailable("creating a PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(backend_unavailable("compiling an XLA computation"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Accepts both `&[Literal]` and `&[&Literal]`, like the real crate.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(backend_unavailable("executing a compiled artifact"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(backend_unavailable("fetching a device buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2.0f32])]);
+        assert!(t.array_shape().is_err());
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<i32>().unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn backend_paths_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/tmp/x.hlo.txt").is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("stub"), "{msg}");
+    }
+}
