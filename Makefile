@@ -1,12 +1,24 @@
 # Build/test/bench entry points. The Rust workspace lives in rust/ and
 # builds fully offline (vendored deps; see rust/Cargo.toml).
 
-.PHONY: build test bench artifacts python-tests clean
+.PHONY: build test check bench artifacts python-tests clean
 
 build:
 	cd rust && cargo build --release
 
 test:
+	cd rust && cargo test -q
+
+# Lint + test gate: rustfmt and clippy when the toolchain ships them
+# (skipped with a notice otherwise, so `make check` works on minimal
+# toolchains), then the tier-1 test suite.
+check:
+	cd rust && if cargo fmt --version >/dev/null 2>&1; then \
+		cargo fmt --all -- --check; \
+	else echo "make check: rustfmt unavailable, skipping fmt"; fi
+	cd rust && if cargo clippy --version >/dev/null 2>&1; then \
+		cargo clippy -p codistill --all-targets -- -D warnings; \
+	else echo "make check: clippy unavailable, skipping lints"; fi
 	cd rust && cargo test -q
 
 # Hot-path microbenchmarks. Writes the human table to stdout and the

@@ -17,7 +17,9 @@
 //! skipped gracefully and recorded as `null` in the JSON, so the pure-Rust
 //! coordinator numbers are tracked even on machines without XLA.
 
-use codistill::codistill::{Checkpoint, CheckpointStore, Member};
+use codistill::codistill::{
+    Checkpoint, ExchangeTransport, InProcess, Member, SocketServer, SocketTransport, SpoolDir,
+};
 use codistill::config::Settings;
 use codistill::data::corpus::Batcher;
 use codistill::data::shard::{ShardMode, ShardPlan};
@@ -227,7 +229,7 @@ fn main() {
         layout.len()
     );
 
-    let store = CheckpointStore::new(4);
+    let store = InProcess::new(4);
     // Share one plane across iterations: the real publish path hands the
     // store an Arc to the member's already-gathered buffer, so the timed
     // loop must not include a fresh 4 MB copy.
@@ -256,6 +258,92 @@ fn main() {
     );
     std::fs::remove_dir_all(&dir).ok();
 
+    // ---- the same ~4MB plane through each exchange transport: publish,
+    // full-plane fetch (latest), and windowed fetch (all windows by name;
+    // for `socket-windowed`, even `latest` reassembles from batched
+    // window requests instead of one full-plane response).
+    let window_names: Vec<String> = layout.names().map(|s| s.to_string()).collect();
+    let mut transport_rows: Vec<String> = Vec::new();
+    {
+        let spool_dir =
+            std::env::temp_dir().join(format!("codistill_bench_spool_{}", std::process::id()));
+        std::fs::remove_dir_all(&spool_dir).ok();
+        let server =
+            SocketServer::bind_tcp("127.0.0.1:0", 4).expect("binding bench exchange server");
+        let inproc: Arc<dyn ExchangeTransport> = Arc::new(InProcess::new(4));
+        let socket: Arc<dyn ExchangeTransport> =
+            Arc::new(SocketTransport::connect_tcp(server.addr()));
+        let socket_windowed: Arc<dyn ExchangeTransport> =
+            Arc::new(SocketTransport::connect_tcp(server.addr()).with_windowed_fetch(8));
+        // Publisher and reader are separate handles where the medium
+        // allows it: a second SpoolDir on the same directory models a
+        // reading process, so fetches pay real file reads instead of
+        // hitting the publisher's in-memory cache (full-plane spool reads
+        // additionally use a fresh handle per iteration — the reader
+        // handle itself caches repeat loads of one step).
+        let backends: Vec<(&str, Arc<dyn ExchangeTransport>, Arc<dyn ExchangeTransport>)> = vec![
+            ("inproc", inproc.clone(), inproc),
+            (
+                "spool",
+                Arc::new(SpoolDir::open(&spool_dir, 4).expect("opening bench spool")),
+                Arc::new(SpoolDir::open(&spool_dir, 4).expect("opening bench spool")),
+            ),
+            ("socket", socket.clone(), socket),
+            (
+                "socket-windowed",
+                socket_windowed.clone(),
+                socket_windowed,
+            ),
+        ];
+        for (member, (name, publisher, reader)) in backends.iter().enumerate() {
+            let mut step = 0u64;
+            let t_publish = time_n(5, || {
+                step += 1;
+                publisher
+                    .publish(Checkpoint::from_flat(
+                        member,
+                        step,
+                        plane.clone(),
+                        TensorMap::new(),
+                    ))
+                    .unwrap();
+            });
+            let t_full = if *name == "spool" {
+                time_n(5, || {
+                    SpoolDir::open(&spool_dir, 4)
+                        .unwrap()
+                        .latest(member)
+                        .unwrap()
+                        .unwrap();
+                })
+            } else {
+                time_n(5, || {
+                    reader.latest(member).unwrap().unwrap();
+                })
+            };
+            let t_windowed = time_n(5, || {
+                reader
+                    .fetch_windows(member, u64::MAX, &window_names)
+                    .unwrap()
+                    .unwrap();
+            });
+            println!(
+                "exchange {name:>15}: publish {:>7.2} ms, fetch full {:>7.2} ms, windowed {:>7.2} ms",
+                t_publish * 1e3,
+                t_full * 1e3,
+                t_windowed * 1e3
+            );
+            transport_rows.push(format!(
+                "{{\"name\": \"{name}\", \"publish_ms\": {}, \"fetch_full_ms\": {}, \"fetch_windowed_ms\": {}}}",
+                ms(Some(t_publish)),
+                ms(Some(t_full)),
+                ms(Some(t_windowed))
+            ));
+        }
+        drop(backends);
+        std::fs::remove_dir_all(&spool_dir).ok();
+    }
+
     // ---- tensor <-> literal boundary.
     let big = Tensor::f32(&[1_048_576], vec![1.0; 1_048_576]).unwrap();
     let t_lit = time_n(50, || {
@@ -276,6 +364,7 @@ fn main() {
          \"ckpt_publish_latest_ms\": {},\n    \
          \"ckpt_save_ms\": {},\n    \
          \"ckpt_load_ms\": {},\n    \
+         \"transport\": [\n      {}\n    ],\n    \
          \"to_literal_ms\": {}\n  }}\n}}\n",
         ms(art.train_step),
         ms(art.teacher_predict),
@@ -287,6 +376,7 @@ fn main() {
         ms(Some(t_publish)),
         ms(Some(t_save)),
         ms(Some(t_load)),
+        transport_rows.join(",\n      "),
         ms(Some(t_lit)),
     );
     std::fs::write(&json_path, &json).unwrap();

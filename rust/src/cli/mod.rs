@@ -1,7 +1,8 @@
 //! Hand-rolled CLI (no clap offline).
 //!
 //! ```text
-//! codistill <command> [--set key=value]... [--config file]
+//! codistill <command> [--transport inproc|spool|socket]
+//!           [--set key=value]... [--config file]
 //!
 //! commands:
 //!   train       single-member LM baseline training
@@ -11,6 +12,12 @@
 //!   fig1|fig2|fig3|fig4|table1|sec341   run one experiment
 //!   inspect     print an artifact bundle's executables and specs
 //! ```
+//!
+//! `--transport` picks the checkpoint-exchange backend for `codistill`
+//! (see `codistill::transport`): `spool` exchanges through
+//! `spool_dir=PATH` (shared with other processes), `socket` connects to
+//! `socket_addr=HOST:PORT|unix:PATH` (or serves one in-process when
+//! unset); `socket_windows=N` shards teacher reloads N windows per fetch.
 
 use crate::config::Settings;
 use anyhow::{bail, Context, Result};
@@ -51,6 +58,13 @@ pub fn parse_args(args: &[String]) -> Result<Cli> {
                 settings.apply("verbose=true")?;
                 i += 1;
             }
+            "--transport" => {
+                let v = args.get(i + 1).context("--transport needs inproc|spool|socket")?;
+                // validate eagerly so typos fail at parse time, not mid-run
+                crate::codistill::TransportKind::parse(v)?;
+                settings.apply(&format!("transport={v}"))?;
+                i += 2;
+            }
             other if other.starts_with("--") => bail!("unknown flag {other}\n{}", usage()),
             other => {
                 // bare key=value
@@ -70,7 +84,7 @@ fn settings_dump(_s: &Settings) -> Vec<String> {
 
 pub fn usage() -> String {
     "usage: codistill <train|codistill|figures|fig1|fig2|fig3|fig4|table1|sec341|inspect> \
-     [--set key=value]... [--config FILE] [--verbose]"
+     [--transport inproc|spool|socket] [--set key=value]... [--config FILE] [--verbose]"
         .to_string()
 }
 
@@ -138,5 +152,13 @@ mod tests {
     fn rejects_empty_and_unknown_flags() {
         assert!(parse_args(&[]).is_err());
         assert!(parse_args(&sv(&["train", "--bogus"])).is_err());
+    }
+
+    #[test]
+    fn transport_flag_validates_and_applies() {
+        let cli = parse_args(&sv(&["codistill", "--transport", "spool"])).unwrap();
+        assert_eq!(cli.settings.str_or("transport", "inproc"), "spool");
+        assert!(parse_args(&sv(&["codistill", "--transport", "floppy"])).is_err());
+        assert!(parse_args(&sv(&["codistill", "--transport"])).is_err());
     }
 }

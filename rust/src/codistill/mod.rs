@@ -4,19 +4,67 @@
 //! `n` members (each a model copy, or a whole sync-SGD worker group) train
 //! in parallel; after a burn-in period each member adds
 //! `ψ(mean_{j≠i} F(θ_j, x), F(θ_i, x))` to its loss, where the `θ_j` are
-//! **stale** copies read from a checkpoint store on a configurable reload
-//! interval. Prediction staleness is the delay-tolerant communication
-//! channel that lets the algorithm scale past sync-SGD's limits.
+//! **stale** copies read from a checkpoint exchange on a configurable
+//! reload interval. Prediction staleness is the delay-tolerant
+//! communication channel that lets the algorithm scale past sync-SGD's
+//! limits.
+//!
+//! ## The checkpoint exchange
+//!
+//! The exchange is split into a value type and a medium:
+//!
+//! * [`store`] defines [`Checkpoint`] — an immutable `Arc<FlatBuffer>`
+//!   parameter snapshot — and its `CKPT0002` encoding (a window table,
+//!   then the whole flat plane as one contiguous byte slice). The same
+//!   bytes serve as the disk format and the socket wire format.
+//! * [`transport`] defines [`ExchangeTransport`] — `publish` / `latest` /
+//!   `latest_at_most` / `fetch_windows` / `members` / `gc` — with three
+//!   interchangeable backends: [`InProcess`] (zero-copy shared buffers),
+//!   [`SpoolDir`] (CKPT0002 files + atomic `MANIFEST` in a shared
+//!   directory; readers may `pread` single windows), and
+//!   [`SocketTransport`]/[`SocketServer`] (length-prefixed TCP/Unix
+//!   protocol with optional sharded fetch: window table first, then only
+//!   the [`FlatLayout`](crate::runtime::flat::FlatLayout) windows a
+//!   reload needs, in batches).
+//!
+//! The [`Orchestrator`] is constructed from any `Arc<dyn
+//! ExchangeTransport>` ([`Orchestrator::with_transport`]) and feeds
+//! [`Member::set_teachers`] exclusively from transport reads, so the same
+//! run rides any medium; `codistill --transport {inproc,spool,socket}`
+//! selects one from the CLI.
+//!
+//! ### A two-process spool-dir exchange
+//!
+//! ```sh
+//! # terminal 1: member group 0 publishes into / reads from ./exchange
+//! codistill codistill --transport spool --set spool_dir=./exchange
+//! # terminal 2: a second coordinator on the same directory
+//! codistill codistill --transport spool --set spool_dir=./exchange
+//! ```
+//!
+//! Both processes write `memberNNNN_stepNNN...N.ckpt` files (zero-padded
+//! so directory order equals step order, temp+rename so never torn) and
+//! converge on the atomic `MANIFEST`; `gc` bounds the files each member
+//! keeps.
 
 pub mod orchestrator;
 pub mod schedule;
 pub mod store;
 pub mod topology;
+pub mod transport;
 
 pub use orchestrator::{Orchestrator, OrchestratorConfig, RunLog};
 pub use schedule::{DistillSchedule, LrSchedule};
-pub use store::{Checkpoint, CheckpointStore};
+pub use store::Checkpoint;
 pub use topology::Topology;
+pub use transport::{
+    ExchangeTransport, InProcess, SocketServer, SocketTransport, SpoolDir, TransportKind,
+    WindowedFetch,
+};
+
+/// The zero-copy in-process store under its historical name (it was the
+/// only exchange before the transport split).
+pub use transport::InProcess as CheckpointStore;
 
 use crate::runtime::TensorMap;
 use anyhow::Result;

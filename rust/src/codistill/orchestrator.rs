@@ -3,15 +3,17 @@
 //! clock. This is Algorithm 1 at system scale — each "member" is a whole
 //! synchronous-SGD worker group in the scalability experiments.
 //!
-//! The exchange itself rides the flat parameter plane: members publish
-//! `Arc<FlatBuffer>`-backed checkpoints (one contiguous gather per
-//! publication) and the store hands the same buffers to every reader, so
-//! the reload cadence moves pointers, not parameter copies — see
-//! `codistill::store` and `runtime::flat`.
+//! The exchange itself is a pluggable [`ExchangeTransport`]: members
+//! publish `Arc<FlatBuffer>`-backed checkpoints (one contiguous gather
+//! per publication) and teachers are installed exclusively from transport
+//! reads, so the same orchestrated run rides the in-process zero-copy
+//! store, a spool directory shared between processes, or a socket server
+//! — see `codistill::transport` and `runtime::flat`. The orchestrator
+//! never names a concrete backend.
 
 use crate::codistill::schedule::{DistillSchedule, LrSchedule};
-use crate::codistill::store::CheckpointStore;
 use crate::codistill::topology::Topology;
+use crate::codistill::transport::{ExchangeTransport, InProcess};
 use crate::codistill::{EvalStats, Member};
 use crate::netsim::ClusterModel;
 use crate::prng::Pcg64;
@@ -121,23 +123,23 @@ impl RunLog {
 /// max step time over members, not the sum.
 pub struct Orchestrator {
     cfg: OrchestratorConfig,
-    store: Arc<CheckpointStore>,
+    transport: Arc<dyn ExchangeTransport>,
 }
 
 impl Orchestrator {
+    /// Default exchange: the in-process zero-copy store with an 8-deep
+    /// history.
     pub fn new(cfg: OrchestratorConfig) -> Self {
-        Orchestrator {
-            cfg,
-            store: Arc::new(CheckpointStore::new(8)),
-        }
+        Self::with_transport(cfg, Arc::new(InProcess::new(8)))
     }
 
-    pub fn with_store(cfg: OrchestratorConfig, store: Arc<CheckpointStore>) -> Self {
-        Orchestrator { cfg, store }
+    /// Run over any checkpoint-exchange medium.
+    pub fn with_transport(cfg: OrchestratorConfig, transport: Arc<dyn ExchangeTransport>) -> Self {
+        Orchestrator { cfg, transport }
     }
 
-    pub fn store(&self) -> &Arc<CheckpointStore> {
-        &self.store
+    pub fn transport(&self) -> &Arc<dyn ExchangeTransport> {
+        &self.transport
     }
 
     /// Run the full schedule over the given members.
@@ -157,7 +159,7 @@ impl Orchestrator {
         for (i, m) in members.iter().enumerate() {
             let mut ck = m.snapshot()?;
             ck.member = i;
-            self.store.publish(ck)?;
+            self.transport.publish(ck)?;
         }
 
         for step in 0..cfg.total_steps {
@@ -173,11 +175,12 @@ impl Orchestrator {
                     for j in teacher_ids {
                         let ck = if cfg.extra_staleness > 0 {
                             let bound = step.saturating_sub(cfg.extra_staleness);
-                            self.store
-                                .latest_at_most(j, bound)
-                                .or_else(|| self.store.latest_at_most(j, u64::MAX))
+                            match self.transport.latest_at_most(j, bound)? {
+                                some @ Some(_) => some,
+                                None => self.transport.latest_at_most(j, u64::MAX)?,
+                            }
                         } else {
-                            self.store.latest(j)
+                            self.transport.latest(j)?
                         };
                         let ck = ck.with_context(|| format!("no checkpoint for member {j}"))?;
                         peers.push(ck);
@@ -209,8 +212,11 @@ impl Orchestrator {
                     let mut ck = m.snapshot()?;
                     ck.member = i;
                     ck.step = step + 1;
-                    self.store.publish(ck)?;
+                    self.transport.publish(ck)?;
                 }
+                // Enforce the history bound on durable backend state
+                // (spool files, server history) on the publish cadence.
+                self.transport.gc()?;
                 if let Some(cluster) = &cfg.cluster {
                     // Checkpoint write+read amortized over the interval.
                     wall += cluster.checkpoint_exchange_time();

@@ -1,9 +1,9 @@
-//! Checkpoint store: the codistillation communication substrate.
+//! Checkpoint snapshots and their wire/disk encodings.
 //!
 //! Stands in for the paper's shared filesystem (§2.1: "workers checkpoint
 //! their parameters; other workers load the freshest available checkpoints").
 //! Checkpoints are immutable parameter snapshots tagged with the publishing
-//! member and step; the store keeps a bounded history per member so the
+//! member and step; the exchange keeps a bounded history per member so the
 //! orchestrator can both read "freshest available" and deliberately fetch
 //! older snapshots (staleness injection for the Fig 4-style ablations).
 //!
@@ -22,20 +22,22 @@
 //! * `CKPT0001` (written by [`Checkpoint::save_v1`]): the original
 //!   per-tensor framing, kept for spools produced by older builds.
 //!
-//! An optional disk spool writes every published checkpoint through the
-//! same binary format used by the CLI's `--save` flag, proving the
-//! exchange also works across processes.
+//! The exchange itself — who holds published checkpoints and how readers
+//! get them — lives behind `codistill::transport::ExchangeTransport`; this
+//! module only defines the snapshot value type and its wire/disk encoding.
+//! [`Checkpoint::write_to`] / [`Checkpoint::read_from`] stream the same
+//! `CKPT0002` bytes over any `Write`/`Read` (socket frames, spool files),
+//! so every transport speaks one format.
 
 use crate::runtime::flat::{FlatBuffer, FlatLayout};
 use crate::runtime::{Tensor, TensorMap};
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
 use std::io::{Read, Write};
-use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::path::Path;
+use std::sync::Arc;
 
-const MAGIC_V1: &[u8; 8] = b"CKPT0001";
-const MAGIC_V2: &[u8; 8] = b"CKPT0002";
+pub(crate) const MAGIC_V1: &[u8; 8] = b"CKPT0001";
+pub(crate) const MAGIC_V2: &[u8; 8] = b"CKPT0002";
 
 /// Immutable parameter snapshot on the flat plane.
 #[derive(Debug, Clone)]
@@ -176,6 +178,15 @@ impl Checkpoint {
             std::fs::File::create(path)
                 .with_context(|| format!("creating {}", path.display()))?,
         );
+        self.write_to(&mut f)?;
+        // Explicit flush: BufWriter's Drop swallows errors, and a spool
+        // publish renames this file into place assuming it is complete.
+        f.flush().with_context(|| format!("flushing {}", path.display()))
+    }
+
+    /// Stream the `CKPT0002` encoding (the same bytes [`Checkpoint::save`]
+    /// puts on disk) into any writer — socket frames, spool temp files.
+    pub fn write_to(&self, f: &mut impl Write) -> Result<()> {
         f.write_all(MAGIC_V2)?;
         f.write_all(&(self.member as u64).to_le_bytes())?;
         f.write_all(&self.step.to_le_bytes())?;
@@ -236,7 +247,8 @@ impl Checkpoint {
                 }
             }
         }
-        Ok(())
+        f.flush()
+            .with_context(|| format!("flushing {}", path.display()))
     }
 
     /// Load a checkpoint written by [`Checkpoint::save`] (either format).
@@ -244,16 +256,18 @@ impl Checkpoint {
         let mut f = std::io::BufReader::new(
             std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
         );
+        Self::read_from(&mut f).with_context(|| format!("reading {}", path.display()))
+    }
+
+    /// Read either checkpoint format (magic-dispatched) from any reader —
+    /// the inverse of [`Checkpoint::write_to`].
+    pub fn read_from(f: &mut impl Read) -> Result<Self> {
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
         match &magic {
-            m if m == MAGIC_V2 => {
-                Self::load_v2(&mut f).with_context(|| format!("reading {}", path.display()))
-            }
-            m if m == MAGIC_V1 => {
-                Self::load_v1(&mut f).with_context(|| format!("reading {}", path.display()))
-            }
-            _ => bail!("{}: bad checkpoint magic", path.display()),
+            m if m == MAGIC_V2 => Self::load_v2(f),
+            m if m == MAGIC_V1 => Self::load_v1(f),
+            _ => bail!("bad checkpoint magic"),
         }
     }
 
@@ -311,21 +325,21 @@ impl Checkpoint {
 
 // ------------------------------------------------------------ binary plumbing
 
-fn write_name(f: &mut impl Write, name: &str) -> Result<()> {
+pub(crate) fn write_name(f: &mut impl Write, name: &str) -> Result<()> {
     let nb = name.as_bytes();
     f.write_all(&(nb.len() as u32).to_le_bytes())?;
     f.write_all(nb)?;
     Ok(())
 }
 
-fn read_name(f: &mut impl Read) -> Result<String> {
+pub(crate) fn read_name(f: &mut impl Read) -> Result<String> {
     let len = read_u32(f)? as usize;
     let mut buf = vec![0u8; len];
     f.read_exact(&mut buf)?;
     String::from_utf8(buf).context("checkpoint name not utf8")
 }
 
-fn write_shape(f: &mut impl Write, shape: &[usize]) -> Result<()> {
+pub(crate) fn write_shape(f: &mut impl Write, shape: &[usize]) -> Result<()> {
     f.write_all(&(shape.len() as u32).to_le_bytes())?;
     for &d in shape {
         f.write_all(&(d as u64).to_le_bytes())?;
@@ -333,7 +347,7 @@ fn write_shape(f: &mut impl Write, shape: &[usize]) -> Result<()> {
     Ok(())
 }
 
-fn read_shape(f: &mut impl Read) -> Result<Vec<usize>> {
+pub(crate) fn read_shape(f: &mut impl Read) -> Result<Vec<usize>> {
     let rank = read_u32(f)? as usize;
     let mut shape = Vec::with_capacity(rank);
     for _ in 0..rank {
@@ -343,7 +357,7 @@ fn read_shape(f: &mut impl Read) -> Result<Vec<usize>> {
 }
 
 /// One `CKPT0001`-framed tensor: name, shape, dtype tag, payload.
-fn read_framed_tensor(f: &mut impl Read) -> Result<(String, Tensor)> {
+pub(crate) fn read_framed_tensor(f: &mut impl Read) -> Result<(String, Tensor)> {
     let name = read_name(f)?;
     let shape = read_shape(f)?;
     let numel: usize = shape.iter().product();
@@ -372,7 +386,7 @@ const IO_CHUNK_ELEMS: usize = 4096;
 /// Chunked little-endian slice IO over any 4-byte element type.
 macro_rules! le_slice_io {
     ($write:ident, $read:ident, $t:ty) => {
-        fn $write(f: &mut impl Write, data: &[$t]) -> Result<()> {
+        pub(crate) fn $write(f: &mut impl Write, data: &[$t]) -> Result<()> {
             let mut buf = [0u8; IO_CHUNK_ELEMS * 4];
             for chunk in data.chunks(IO_CHUNK_ELEMS) {
                 for (i, v) in chunk.iter().enumerate() {
@@ -383,7 +397,7 @@ macro_rules! le_slice_io {
             Ok(())
         }
 
-        fn $read(f: &mut impl Read, out: &mut [$t]) -> Result<()> {
+        pub(crate) fn $read(f: &mut impl Read, out: &mut [$t]) -> Result<()> {
             let mut buf = [0u8; IO_CHUNK_ELEMS * 4];
             for chunk in out.chunks_mut(IO_CHUNK_ELEMS) {
                 let bytes = &mut buf[..chunk.len() * 4];
@@ -400,171 +414,21 @@ macro_rules! le_slice_io {
 le_slice_io!(write_f32s, read_f32s, f32);
 le_slice_io!(write_i32s, read_i32s, i32);
 
-fn read_u64(f: &mut impl Read) -> Result<u64> {
+pub(crate) fn read_u64(f: &mut impl Read) -> Result<u64> {
     let mut b = [0u8; 8];
     f.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
 }
 
-fn read_u32(f: &mut impl Read) -> Result<u32> {
+pub(crate) fn read_u32(f: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
     f.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
 }
 
-/// Bounded per-member checkpoint history with freshest-available reads.
-/// Publications and reads share `Arc<Checkpoint>` (and through it the flat
-/// plane), so the in-memory exchange never copies parameters.
-pub struct CheckpointStore {
-    inner: Mutex<HashMap<usize, Vec<Arc<Checkpoint>>>>,
-    history: usize,
-    spool: Option<PathBuf>,
-}
-
-impl CheckpointStore {
-    pub fn new(history: usize) -> Self {
-        CheckpointStore {
-            inner: Mutex::new(HashMap::new()),
-            history: history.max(1),
-            spool: None,
-        }
-    }
-
-    /// Also write every published checkpoint to `dir` (cross-process mode).
-    pub fn with_spool(mut self, dir: &Path) -> Result<Self> {
-        std::fs::create_dir_all(dir)?;
-        self.spool = Some(dir.to_path_buf());
-        Ok(self)
-    }
-
-    /// Publish a member's checkpoint.
-    pub fn publish(&self, ckpt: Checkpoint) -> Result<()> {
-        if let Some(dir) = &self.spool {
-            let path = dir.join(format!("member{}_step{}.ckpt", ckpt.member, ckpt.step));
-            ckpt.save(&path)?;
-        }
-        let mut inner = self.inner.lock().unwrap();
-        let hist = inner.entry(ckpt.member).or_default();
-        if let Some(last) = hist.last() {
-            if ckpt.step < last.step {
-                bail!(
-                    "member {} published step {} after step {}",
-                    ckpt.member,
-                    ckpt.step,
-                    last.step
-                );
-            }
-        }
-        hist.push(Arc::new(ckpt));
-        let len = hist.len();
-        if len > self.history {
-            hist.drain(0..len - self.history);
-        }
-        Ok(())
-    }
-
-    /// Freshest available checkpoint from a member (paper semantics).
-    pub fn latest(&self, member: usize) -> Option<Arc<Checkpoint>> {
-        self.inner
-            .lock()
-            .unwrap()
-            .get(&member)
-            .and_then(|h| h.last().cloned())
-    }
-
-    /// Freshest checkpoint from a member with `step <= max_step`
-    /// (explicit staleness injection).
-    pub fn latest_at_most(&self, member: usize, max_step: u64) -> Option<Arc<Checkpoint>> {
-        self.inner
-            .lock()
-            .unwrap()
-            .get(&member)
-            .and_then(|h| h.iter().rev().find(|c| c.step <= max_step).cloned())
-    }
-
-    /// Staleness (in steps) a reader at `now` would observe for a member.
-    pub fn staleness(&self, member: usize, now: u64) -> Option<u64> {
-        self.latest(member).map(|c| now.saturating_sub(c.step))
-    }
-
-    pub fn members(&self) -> Vec<usize> {
-        let mut m: Vec<usize> = self.inner.lock().unwrap().keys().copied().collect();
-        m.sort();
-        m
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn ckpt(member: usize, step: u64, val: f32) -> Checkpoint {
-        let mut params = TensorMap::new();
-        params.insert("params.w", Tensor::f32(&[2], vec![val, val]).unwrap());
-        Checkpoint::new(member, step, params)
-    }
-
-    #[test]
-    fn latest_returns_freshest() {
-        let store = CheckpointStore::new(4);
-        store.publish(ckpt(0, 10, 1.0)).unwrap();
-        store.publish(ckpt(0, 20, 2.0)).unwrap();
-        let c = store.latest(0).unwrap();
-        assert_eq!(c.step, 20);
-        assert_eq!(store.latest(1).map(|c| c.step), None);
-    }
-
-    #[test]
-    fn reads_share_the_flat_plane_zero_copy() {
-        let store = CheckpointStore::new(4);
-        let c = ckpt(0, 1, 3.0);
-        let plane = c.flat().clone();
-        store.publish(c).unwrap();
-        let a = store.latest(0).unwrap();
-        let b = store.latest(0).unwrap();
-        assert!(Arc::ptr_eq(a.flat(), &plane), "publish copied the plane");
-        assert!(Arc::ptr_eq(a.flat(), b.flat()), "reads copied the plane");
-        assert_eq!(a.flat().view("params.w").unwrap(), &[3.0, 3.0]);
-    }
-
-    #[test]
-    fn latest_at_most_respects_bound() {
-        let store = CheckpointStore::new(8);
-        for s in [5u64, 10, 15, 20] {
-            store.publish(ckpt(1, s, s as f32)).unwrap();
-        }
-        assert_eq!(store.latest_at_most(1, 12).unwrap().step, 10);
-        assert!(store.latest_at_most(1, 4).is_none());
-        assert_eq!(store.latest_at_most(1, 100).unwrap().step, 20);
-    }
-
-    #[test]
-    fn history_is_bounded() {
-        let store = CheckpointStore::new(2);
-        for s in 0..10u64 {
-            store.publish(ckpt(0, s, 0.0)).unwrap();
-        }
-        // only the last 2 checkpoints (steps 8, 9) survive
-        assert_eq!(store.latest(0).unwrap().step, 9);
-        assert_eq!(store.latest_at_most(0, 8).unwrap().step, 8);
-        assert!(store.latest_at_most(0, 7).is_none(), "old history retained");
-    }
-
-    #[test]
-    fn rejects_step_regression() {
-        let store = CheckpointStore::new(4);
-        store.publish(ckpt(0, 10, 0.0)).unwrap();
-        assert!(store.publish(ckpt(0, 5, 0.0)).is_err());
-    }
-
-    #[test]
-    fn staleness_accounting() {
-        let store = CheckpointStore::new(4);
-        store.publish(ckpt(2, 100, 0.0)).unwrap();
-        assert_eq!(store.staleness(2, 150), Some(50));
-        assert_eq!(store.staleness(2, 50), Some(0)); // saturating
-        assert_eq!(store.staleness(3, 10), None);
-    }
 
     fn mixed_params() -> TensorMap {
         let mut params = TensorMap::new();
@@ -619,6 +483,29 @@ mod tests {
     }
 
     #[test]
+    fn stream_roundtrip_matches_disk_format() {
+        // write_to/read_from (the socket wire path) must produce exactly
+        // the bytes save() puts on disk.
+        let c = Checkpoint::new(5, 99, mixed_params());
+        let mut wire: Vec<u8> = Vec::new();
+        c.write_to(&mut wire).unwrap();
+        assert_eq!(&wire[..8], MAGIC_V2);
+
+        let dir = std::env::temp_dir().join(format!("codistill_ckpt_wire_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.ckpt");
+        c.save(&path).unwrap();
+        let disk = std::fs::read(&path).unwrap();
+        assert_eq!(wire, disk, "stream and disk encodings diverged");
+
+        let l = Checkpoint::read_from(&mut wire.as_slice()).unwrap();
+        assert_eq!(l.member, 5);
+        assert_eq!(l.step, 99);
+        assert_eq!(l.flat().data(), c.flat().data());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn refresh_params_rebuilds_on_plane_mismatch() {
         let a = Checkpoint::new(0, 1, mixed_params());
         let mut bigger = mixed_params();
@@ -652,16 +539,4 @@ mod tests {
         assert_eq!(c.numel(), 4 + 3);
     }
 
-    #[test]
-    fn spool_writes_files() {
-        let dir = std::env::temp_dir().join(format!("codistill_spool_{}", std::process::id()));
-        let store = CheckpointStore::new(2).with_spool(&dir).unwrap();
-        store.publish(ckpt(0, 7, 1.0)).unwrap();
-        let path = dir.join("member0_step7.ckpt");
-        assert!(path.exists());
-        // and they load back through the v2 reader
-        let l = Checkpoint::load(&path).unwrap();
-        assert_eq!(l.flat().view("params.w").unwrap(), &[1.0, 1.0]);
-        std::fs::remove_dir_all(&dir).ok();
-    }
 }

@@ -1,0 +1,284 @@
+//! The in-process backend: the zero-copy `Arc<FlatBuffer>` store.
+//!
+//! Publications and reads share `Arc<Checkpoint>` (and through it the flat
+//! plane), so the in-memory exchange never copies parameters. This is the
+//! reference backend the spool-dir and socket transports must match
+//! byte-for-byte, and the store a [`SocketServer`] serves from.
+//!
+//! An optional disk spool additionally writes every publication as a
+//! `CKPT0002` file (zero-padded, temp+rename — the same naming scheme
+//! [`SpoolDir`] reads), and the history bound is enforced on those files
+//! too: publishing past `history` deletes the member's oldest spool file.
+//!
+//! [`SocketServer`]: crate::codistill::transport::SocketServer
+//! [`SpoolDir`]: crate::codistill::transport::SpoolDir
+
+use crate::codistill::store::Checkpoint;
+use crate::codistill::transport::{
+    windows_from_checkpoint, ExchangeTransport, TransportKind, WindowedFetch,
+};
+use crate::codistill::transport::spool::{spool_file_name, spool_temp_name};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Bounded per-member checkpoint history with freshest-available reads.
+pub struct InProcess {
+    inner: Mutex<HashMap<usize, Vec<Arc<Checkpoint>>>>,
+    history: usize,
+    spool: Option<PathBuf>,
+}
+
+impl InProcess {
+    pub fn new(history: usize) -> Self {
+        InProcess {
+            inner: Mutex::new(HashMap::new()),
+            history: history.max(1),
+            spool: None,
+        }
+    }
+
+    /// Also write every published checkpoint to `dir` (cross-process
+    /// mode): another process can read the same exchange through a
+    /// [`SpoolDir`](crate::codistill::transport::SpoolDir) on `dir`.
+    pub fn with_spool(mut self, dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        self.spool = Some(dir.to_path_buf());
+        Ok(self)
+    }
+
+    /// Retention bound (publications kept per member).
+    pub fn history(&self) -> usize {
+        self.history
+    }
+
+    /// Publish a member's checkpoint.
+    pub fn publish(&self, ckpt: Checkpoint) -> Result<()> {
+        if let Some(dir) = &self.spool {
+            // temp+rename so a concurrent SpoolDir reader never sees a
+            // torn file, then drop this member's files past the bound and
+            // refresh the manifest SpoolDir readers prefer over a scan.
+            let tmp = dir.join(spool_temp_name(ckpt.member, ckpt.step));
+            ckpt.save(&tmp)?;
+            std::fs::rename(&tmp, dir.join(spool_file_name(ckpt.member, ckpt.step)))?;
+            crate::codistill::transport::spool::prune_spool(dir, self.history)?;
+            crate::codistill::transport::spool::write_manifest(dir)?;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let hist = inner.entry(ckpt.member).or_default();
+        if let Some(last) = hist.last() {
+            if ckpt.step < last.step {
+                bail!(
+                    "member {} published step {} after step {}",
+                    ckpt.member,
+                    ckpt.step,
+                    last.step
+                );
+            }
+        }
+        hist.push(Arc::new(ckpt));
+        let len = hist.len();
+        if len > self.history {
+            hist.drain(0..len - self.history);
+        }
+        Ok(())
+    }
+
+    /// Freshest available checkpoint from a member (paper semantics).
+    pub fn latest(&self, member: usize) -> Option<Arc<Checkpoint>> {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(&member)
+            .and_then(|h| h.last().cloned())
+    }
+
+    /// Freshest checkpoint from a member with `step <= max_step`
+    /// (explicit staleness injection).
+    pub fn latest_at_most(&self, member: usize, max_step: u64) -> Option<Arc<Checkpoint>> {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(&member)
+            .and_then(|h| h.iter().rev().find(|c| c.step <= max_step).cloned())
+    }
+
+    /// Staleness (in steps) a reader at `now` would observe for a member.
+    pub fn staleness(&self, member: usize, now: u64) -> Option<u64> {
+        self.latest(member).map(|c| now.saturating_sub(c.step))
+    }
+
+    pub fn members(&self) -> Vec<usize> {
+        let mut m: Vec<usize> = self.inner.lock().unwrap().keys().copied().collect();
+        m.sort();
+        m
+    }
+}
+
+impl ExchangeTransport for InProcess {
+    fn kind(&self) -> TransportKind {
+        TransportKind::InProcess
+    }
+
+    fn publish(&self, ckpt: Checkpoint) -> Result<()> {
+        InProcess::publish(self, ckpt)
+    }
+
+    fn latest(&self, member: usize) -> Result<Option<Arc<Checkpoint>>> {
+        Ok(InProcess::latest(self, member))
+    }
+
+    fn latest_at_most(&self, member: usize, max_step: u64) -> Result<Option<Arc<Checkpoint>>> {
+        Ok(InProcess::latest_at_most(self, member, max_step))
+    }
+
+    fn fetch_windows(
+        &self,
+        member: usize,
+        max_step: u64,
+        names: &[String],
+    ) -> Result<Option<WindowedFetch>> {
+        match InProcess::latest_at_most(self, member, max_step) {
+            Some(ckpt) => Ok(Some(windows_from_checkpoint(&ckpt, names)?)),
+            None => Ok(None),
+        }
+    }
+
+    fn members(&self) -> Result<Vec<usize>> {
+        Ok(InProcess::members(self))
+    }
+
+    fn gc(&self) -> Result<()> {
+        // In-memory history is bounded on publish; only spool files can
+        // outlive the bound. Rewrite the shared manifest only when the
+        // prune actually removed something.
+        if let Some(dir) = &self.spool {
+            if crate::codistill::transport::spool::prune_spool(dir, self.history)? > 0 {
+                crate::codistill::transport::spool::write_manifest(dir)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Tensor, TensorMap};
+
+    fn ckpt(member: usize, step: u64, val: f32) -> Checkpoint {
+        let mut params = TensorMap::new();
+        params.insert("params.w", Tensor::f32(&[2], vec![val, val]).unwrap());
+        Checkpoint::new(member, step, params)
+    }
+
+    #[test]
+    fn latest_returns_freshest() {
+        let store = InProcess::new(4);
+        store.publish(ckpt(0, 10, 1.0)).unwrap();
+        store.publish(ckpt(0, 20, 2.0)).unwrap();
+        let c = store.latest(0).unwrap();
+        assert_eq!(c.step, 20);
+        assert_eq!(store.latest(1).map(|c| c.step), None);
+    }
+
+    #[test]
+    fn reads_share_the_flat_plane_zero_copy() {
+        let store = InProcess::new(4);
+        let c = ckpt(0, 1, 3.0);
+        let plane = c.flat().clone();
+        store.publish(c).unwrap();
+        let a = store.latest(0).unwrap();
+        let b = store.latest(0).unwrap();
+        assert!(Arc::ptr_eq(a.flat(), &plane), "publish copied the plane");
+        assert!(Arc::ptr_eq(a.flat(), b.flat()), "reads copied the plane");
+        assert_eq!(a.flat().view("params.w").unwrap(), &[3.0, 3.0]);
+    }
+
+    #[test]
+    fn latest_at_most_respects_bound() {
+        let store = InProcess::new(8);
+        for s in [5u64, 10, 15, 20] {
+            store.publish(ckpt(1, s, s as f32)).unwrap();
+        }
+        assert_eq!(store.latest_at_most(1, 12).unwrap().step, 10);
+        assert!(store.latest_at_most(1, 4).is_none());
+        assert_eq!(store.latest_at_most(1, 100).unwrap().step, 20);
+    }
+
+    #[test]
+    fn history_is_bounded() {
+        let store = InProcess::new(2);
+        for s in 0..10u64 {
+            store.publish(ckpt(0, s, 0.0)).unwrap();
+        }
+        // only the last 2 checkpoints (steps 8, 9) survive
+        assert_eq!(store.latest(0).unwrap().step, 9);
+        assert_eq!(store.latest_at_most(0, 8).unwrap().step, 8);
+        assert!(store.latest_at_most(0, 7).is_none(), "old history retained");
+    }
+
+    #[test]
+    fn rejects_step_regression() {
+        let store = InProcess::new(4);
+        store.publish(ckpt(0, 10, 0.0)).unwrap();
+        assert!(store.publish(ckpt(0, 5, 0.0)).is_err());
+    }
+
+    #[test]
+    fn staleness_accounting() {
+        let store = InProcess::new(4);
+        store.publish(ckpt(2, 100, 0.0)).unwrap();
+        assert_eq!(store.staleness(2, 150), Some(50));
+        assert_eq!(store.staleness(2, 50), Some(0)); // saturating
+        assert_eq!(store.staleness(3, 10), None);
+    }
+
+    #[test]
+    fn spool_writes_files_and_prunes_past_history() {
+        let dir =
+            std::env::temp_dir().join(format!("codistill_spool_gc_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = InProcess::new(2).with_spool(&dir).unwrap();
+        for s in 0..5u64 {
+            store.publish(ckpt(0, s, s as f32)).unwrap();
+        }
+        // history=2: only steps 3 and 4 survive on disk (the old unpadded,
+        // unbounded spool kept all five forever).
+        let mut names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".ckpt"))
+            .collect();
+        names.sort();
+        assert_eq!(names, vec![spool_file_name(0, 3), spool_file_name(0, 4)]);
+        // and they load back through the v2 reader
+        let l = Checkpoint::load(&dir.join(spool_file_name(0, 4))).unwrap();
+        assert_eq!(l.flat().view("params.w").unwrap(), &[4.0, 4.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fetch_windows_slices_the_plane() {
+        let store = InProcess::new(4);
+        let mut params = TensorMap::new();
+        params.insert("params.a", Tensor::f32(&[2], vec![1.0, 2.0]).unwrap());
+        params.insert("params.b", Tensor::f32(&[3], vec![3.0, 4.0, 5.0]).unwrap());
+        store.publish(Checkpoint::new(0, 7, params)).unwrap();
+
+        let t: &dyn ExchangeTransport = &store;
+        let f = t
+            .fetch_windows(0, u64::MAX, &["params.b".to_string()])
+            .unwrap()
+            .unwrap();
+        assert_eq!(f.step, 7);
+        assert_eq!(f.windows.len(), 1);
+        assert_eq!(f.windows[0].data, vec![3.0, 4.0, 5.0]);
+        assert_eq!(f.payload_bytes(), 12);
+        // unknown window is an error, absent member is None
+        assert!(t.fetch_windows(0, u64::MAX, &["params.z".to_string()]).is_err());
+        assert!(t.fetch_windows(9, u64::MAX, &[]).unwrap().is_none());
+    }
+}

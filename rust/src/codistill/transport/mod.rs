@@ -1,0 +1,228 @@
+//! Pluggable checkpoint-exchange transports.
+//!
+//! The paper's systems argument (§2.1) is that codistillation scales
+//! because teachers only need **rarely transmitted** parameter snapshots —
+//! which makes the transmission medium swappable. This module fixes one
+//! API, [`ExchangeTransport`], and ships three interchangeable backends
+//! that move the identical `CKPT0002` flat-plane bytes:
+//!
+//! * [`InProcess`] — the zero-copy `Arc<FlatBuffer>` store: publisher,
+//!   history, and every reader share one buffer. The default for
+//!   single-process runs and the reference implementation the other
+//!   backends must match byte-for-byte.
+//! * [`SpoolDir`] — checkpoints as `CKPT0002` files in a shared directory
+//!   (one file per publication, written temp+rename so readers never see
+//!   a torn file) plus an atomic `MANIFEST`. Separate coordinator
+//!   processes exchange by pointing at the same directory; reads can
+//!   `pread` just the windows they need out of the contiguous payload.
+//! * [`Socket`](SocketTransport) — a length-prefixed request/response
+//!   protocol over TCP or Unix sockets against a [`SocketServer`]. A
+//!   member can pull a teacher's full plane in one response or *shard*
+//!   the fetch: ask for the window table first, then request only the
+//!   named [`FlatLayout`](crate::runtime::flat::FlatLayout) windows it
+//!   needs, in batches.
+//!
+//! ## Sharded (windowed) fetch
+//!
+//! [`ExchangeTransport::fetch_windows`] is the window-addressed read: give
+//! it a member, a staleness bound, and window names, and it returns just
+//! those slices of the freshest matching plane plus enough metadata to
+//! place them ([`WindowedFetch`]). `InProcess` slices the shared buffer,
+//! `SpoolDir` `pread`s byte ranges out of the checkpoint file, and the
+//! socket client turns it into a wire request the server answers from its
+//! own in-process store. `netsim::ClusterModel::sharded_exchange_time`
+//! prices exactly this path against the full-plane pull.
+//!
+//! ## Garbage collection
+//!
+//! Every backend bounds its history to `history` publications per member;
+//! [`ExchangeTransport::gc`] forces the bound onto durable state too
+//! (spool files past the bound are deleted). The orchestrator calls it on
+//! the publish cadence.
+
+pub mod inproc;
+pub mod socket;
+pub mod spool;
+
+pub use inproc::InProcess;
+pub use socket::{SocketServer, SocketTransport};
+pub use spool::SpoolDir;
+
+use crate::codistill::store::Checkpoint;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// `max_step` value meaning "no staleness bound: freshest available".
+pub const ANY_STEP: u64 = u64::MAX;
+
+/// Which backend a transport is (CLI parsing, logging, bench labels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    InProcess,
+    SpoolDir,
+    Socket,
+}
+
+impl TransportKind {
+    /// Parse a `--transport {inproc,spool,socket}` value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "inproc" | "inprocess" | "mem" => Ok(TransportKind::InProcess),
+            "spool" | "spooldir" | "dir" => Ok(TransportKind::SpoolDir),
+            "socket" | "tcp" | "unix" => Ok(TransportKind::Socket),
+            other => bail!("unknown transport {other:?} (want inproc|spool|socket)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InProcess => "inproc",
+            TransportKind::SpoolDir => "spool",
+            TransportKind::Socket => "socket",
+        }
+    }
+}
+
+/// One window pulled by a sharded fetch: the name, its shape, and the
+/// contiguous slice of the publisher's plane.
+#[derive(Debug, Clone)]
+pub struct FetchedWindow {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Result of [`ExchangeTransport::fetch_windows`]: which checkpoint the
+/// windows came from, plus the windows themselves in request order.
+#[derive(Debug, Clone)]
+pub struct WindowedFetch {
+    pub member: usize,
+    pub step: u64,
+    pub windows: Vec<FetchedWindow>,
+}
+
+impl WindowedFetch {
+    /// Parameter payload bytes this fetch actually moved (4 bytes per f32
+    /// element) — the quantity `netsim` prices for sharded exchange.
+    pub fn payload_bytes(&self) -> u64 {
+        self.windows.iter().map(|w| w.data.len() as u64 * 4).sum()
+    }
+}
+
+/// One checkpoint-exchange medium. All methods take `&self`: transports
+/// are shared (`Arc<dyn ExchangeTransport>`) between the orchestrator and
+/// any number of members/threads.
+///
+/// Reads are racy by design (the paper's exchange is asynchronous): a
+/// `latest` observed now may be superseded a step later. The only ordering
+/// guarantee is per-member step monotonicity of publications.
+pub trait ExchangeTransport: Send + Sync {
+    /// Which backend this is.
+    fn kind(&self) -> TransportKind;
+
+    /// Publish a member's checkpoint. Steps must be non-decreasing per
+    /// member.
+    fn publish(&self, ckpt: Checkpoint) -> Result<()>;
+
+    /// Freshest available checkpoint from a member (paper semantics);
+    /// `None` while the member has never published.
+    fn latest(&self, member: usize) -> Result<Option<Arc<Checkpoint>>>;
+
+    /// Freshest checkpoint from a member with `step <= max_step`
+    /// (explicit staleness injection). `max_step == ANY_STEP` is
+    /// equivalent to [`ExchangeTransport::latest`].
+    fn latest_at_most(&self, member: usize, max_step: u64) -> Result<Option<Arc<Checkpoint>>>;
+
+    /// Sharded fetch: only the named windows of the freshest checkpoint
+    /// from `member` with `step <= max_step`. Unknown window names are an
+    /// error (the caller's layout disagrees with the publisher's plane);
+    /// an absent checkpoint is `Ok(None)`.
+    fn fetch_windows(
+        &self,
+        member: usize,
+        max_step: u64,
+        names: &[String],
+    ) -> Result<Option<WindowedFetch>>;
+
+    /// Members that have published at least once, ascending.
+    fn members(&self) -> Result<Vec<usize>>;
+
+    /// Enforce the history bound on durable state (delete spool files /
+    /// server history past the bound). In-memory history is already
+    /// bounded on publish, so for [`InProcess`] this is a no-op.
+    fn gc(&self) -> Result<()>;
+
+    /// Staleness (in steps) a reader at `now` would observe for a member.
+    fn staleness(&self, member: usize, now: u64) -> Result<Option<u64>> {
+        Ok(self.latest(member)?.map(|c| now.saturating_sub(c.step)))
+    }
+}
+
+/// Slice a checkpoint held in memory into a [`WindowedFetch`] — the
+/// shared read path for [`InProcess`] and the socket server.
+pub(crate) fn windows_from_checkpoint(
+    ckpt: &Checkpoint,
+    names: &[String],
+) -> Result<WindowedFetch> {
+    let flat = ckpt.flat();
+    let mut windows = Vec::with_capacity(names.len());
+    for name in names {
+        let entry = match flat.layout().entry(name) {
+            Some(e) => e,
+            None => bail!(
+                "member {} step {}: plane has no window {name:?}",
+                ckpt.member,
+                ckpt.step
+            ),
+        };
+        windows.push(FetchedWindow {
+            name: name.clone(),
+            shape: entry.shape.clone(),
+            data: flat.view(name)?.to_vec(),
+        });
+    }
+    Ok(WindowedFetch {
+        member: ckpt.member,
+        step: ckpt.step,
+        windows,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for (s, k) in [
+            ("inproc", TransportKind::InProcess),
+            ("spool", TransportKind::SpoolDir),
+            ("socket", TransportKind::Socket),
+        ] {
+            assert_eq!(TransportKind::parse(s).unwrap(), k);
+            assert_eq!(TransportKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(TransportKind::parse("carrier-pigeon").is_err());
+    }
+
+    #[test]
+    fn windowed_fetch_counts_payload_bytes() {
+        let f = WindowedFetch {
+            member: 0,
+            step: 1,
+            windows: vec![
+                FetchedWindow {
+                    name: "a".into(),
+                    shape: vec![3],
+                    data: vec![0.0; 3],
+                },
+                FetchedWindow {
+                    name: "b".into(),
+                    shape: vec![2, 2],
+                    data: vec![0.0; 4],
+                },
+            ],
+        };
+        assert_eq!(f.payload_bytes(), (3 + 4) * 4);
+    }
+}

@@ -1,0 +1,795 @@
+//! The socket backend: checkpoint exchange over a length-prefixed
+//! request/response protocol (TCP or Unix domain sockets).
+//!
+//! A [`SocketServer`] owns an [`InProcess`] store and answers requests
+//! from any number of [`SocketTransport`] clients — the server process is
+//! the paper's "parameter checkpoint service", clients are coordinator
+//! processes hosting members.
+//!
+//! ## Wire format
+//!
+//! Every message is one frame: `u32 LE payload length` + payload. A
+//! request payload is `opcode u8` + body; a response payload is
+//! `status u8` (0 = ok, 1 = not found, 2 = error + utf8 message) + body.
+//! Integers are LE; names/shapes/tensors reuse the `CKPT0002` encodings
+//! from `codistill::store`, and a full checkpoint travels as the exact
+//! bytes [`Checkpoint::write_to`] produces.
+//!
+//! | op | request body | ok-response body |
+//! |----|--------------|------------------|
+//! | 1 `PUBLISH`  | checkpoint stream | — |
+//! | 2 `LATEST`   | member u64, max_step u64 | checkpoint stream |
+//! | 3 `FETCH`    | member u64, max_step u64, n u32, names | member, step, windows (name, shape, elems u64, f32 data) |
+//! | 4 `DESCRIBE` | member u64, max_step u64 | member, step, window table, residual tensors |
+//! | 5 `MEMBERS`  | — | n u64, member u64s |
+//! | 6 `GC`       | — | — |
+//!
+//! ## Sharded (windowed) fetch
+//!
+//! `FETCH` moves only the named windows of the publisher's plane. A
+//! client built `with_windowed_fetch(batch)` reloads teachers without
+//! ever pulling the whole plane in one response: `DESCRIBE` returns the
+//! window table (names + shapes, no payload), then the client issues
+//! `FETCH`es of `batch` windows at a time — **pinned to the described
+//! step** so a concurrent publish can never produce a torn plane — and
+//! reassembles the checkpoint locally. The reassembled bytes are
+//! identical to the full-plane pull; only the fetch granularity changes.
+
+use crate::codistill::store::{
+    read_framed_tensor, read_name, read_shape, read_u32, read_u64, write_f32s, write_i32s,
+    write_name, write_shape, Checkpoint,
+};
+use crate::codistill::transport::{
+    windows_from_checkpoint, ExchangeTransport, FetchedWindow, InProcess, TransportKind,
+    WindowedFetch,
+};
+use crate::runtime::flat::{FlatBuffer, FlatLayout};
+use crate::runtime::{Tensor, TensorMap};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+const OP_PUBLISH: u8 = 1;
+const OP_LATEST: u8 = 2;
+const OP_FETCH: u8 = 3;
+const OP_DESCRIBE: u8 = 4;
+const OP_MEMBERS: u8 = 5;
+const OP_GC: u8 = 6;
+
+const STATUS_OK: u8 = 0;
+const STATUS_NONE: u8 = 1;
+const STATUS_ERR: u8 = 2;
+
+/// Largest accepted frame (1 GiB): a cap on corrupt length prefixes, far
+/// above any real checkpoint in this repo.
+const MAX_FRAME: usize = 1 << 30;
+
+/// Read timeout on both sides of the wire: a wedged client cannot stall
+/// the server's accept loop, and a dead server turns a client operation
+/// into an error instead of a hang.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+// ------------------------------------------------------------------- frames
+
+fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    // Enforce the cap on the send side too: a u32 prefix cannot frame a
+    // larger payload, and a silent truncation would desync the protocol.
+    if payload.len() > MAX_FRAME {
+        bail!(
+            "frame of {} bytes exceeds the {MAX_FRAME}-byte cap (checkpoint too large for one frame)",
+            payload.len()
+        );
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame; `Ok(None)` on a clean EOF before any length byte.
+fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    if let Err(e) = r.read_exact(&mut len) {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            return Ok(None);
+        }
+        return Err(e.into());
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    if n > MAX_FRAME {
+        bail!("frame of {n} bytes exceeds the {MAX_FRAME}-byte cap");
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(Some(buf))
+}
+
+fn write_framed_tensor(w: &mut impl Write, name: &str, t: &Tensor) -> Result<()> {
+    write_name(w, name)?;
+    write_shape(w, t.shape())?;
+    match t {
+        Tensor::F32 { data, .. } => {
+            w.write_all(&[0u8])?;
+            write_f32s(w, data)?;
+        }
+        Tensor::I32 { data, .. } => {
+            w.write_all(&[1u8])?;
+            write_i32s(w, data)?;
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------- server
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Serves an [`InProcess`] store over the wire protocol on a background
+/// thread. Dropping the server shuts the thread down.
+pub struct SocketServer {
+    addr: String,
+    store: Arc<InProcess>,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    /// Unix-socket path to unlink on shutdown.
+    unlink: Option<PathBuf>,
+}
+
+impl SocketServer {
+    /// Bind a TCP endpoint (`"127.0.0.1:0"` picks a free port; the
+    /// resolved address is [`SocketServer::addr`]).
+    pub fn bind_tcp(addr: &str, history: usize) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding tcp {addr}"))?;
+        let resolved = listener.local_addr()?.to_string();
+        Self::spawn(Listener::Tcp(listener), resolved, history, None)
+    }
+
+    /// Bind a Unix-domain socket at `path` (any stale socket file is
+    /// replaced).
+    #[cfg(unix)]
+    pub fn bind_unix(path: &Path, history: usize) -> Result<Self> {
+        std::fs::remove_file(path).ok();
+        let listener = UnixListener::bind(path)
+            .with_context(|| format!("binding unix socket {}", path.display()))?;
+        Self::spawn(
+            Listener::Unix(listener),
+            path.display().to_string(),
+            history,
+            Some(path.to_path_buf()),
+        )
+    }
+
+    fn spawn(
+        listener: Listener,
+        addr: String,
+        history: usize,
+        unlink: Option<PathBuf>,
+    ) -> Result<Self> {
+        let store = Arc::new(InProcess::new(history));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let thread_store = store.clone();
+        let thread_shutdown = shutdown.clone();
+        match &listener {
+            Listener::Tcp(l) => l.set_nonblocking(true)?,
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(true)?,
+        }
+        let handle = std::thread::Builder::new()
+            .name("ckpt-exchange-server".into())
+            .spawn(move || serve(listener, thread_store, thread_shutdown))?;
+        Ok(SocketServer {
+            addr,
+            store,
+            shutdown,
+            handle: Some(handle),
+            unlink,
+        })
+    }
+
+    /// The resolved endpoint: `host:port` for TCP, the path for Unix.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// The store behind the endpoint (the server process's own members
+    /// can exchange through it zero-copy while remote members use the
+    /// wire).
+    pub fn store(&self) -> &Arc<InProcess> {
+        &self.store
+    }
+}
+
+impl Drop for SocketServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+        if let Some(p) = &self.unlink {
+            std::fs::remove_file(p).ok();
+        }
+    }
+}
+
+fn serve(listener: Listener, store: Arc<InProcess>, shutdown: Arc<AtomicBool>) {
+    while !shutdown.load(Ordering::SeqCst) {
+        let conn = match &listener {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| Conn::Unix(s)),
+        };
+        match conn {
+            Ok(mut conn) => {
+                // The accept loop polls nonblocking; each connection is
+                // served blocking (with a timeout so a wedged client
+                // cannot wedge the exchange).
+                let _ = match &mut conn {
+                    Conn::Tcp(s) => {
+                        s.set_nonblocking(false).ok();
+                        s.set_read_timeout(Some(READ_TIMEOUT)).ok()
+                    }
+                    #[cfg(unix)]
+                    Conn::Unix(s) => {
+                        s.set_nonblocking(false).ok();
+                        s.set_read_timeout(Some(READ_TIMEOUT)).ok()
+                    }
+                };
+                while let Ok(Some(request)) = read_frame(&mut conn) {
+                    let response = handle_request(&store, &request);
+                    if write_frame(&mut conn, &response).is_err() {
+                        break;
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+}
+
+/// Dispatch one request payload; never panics the server thread — every
+/// failure becomes a `STATUS_ERR` response.
+fn handle_request(store: &InProcess, payload: &[u8]) -> Vec<u8> {
+    match try_handle(store, payload) {
+        Ok(response) => response,
+        Err(e) => {
+            let mut out = vec![STATUS_ERR];
+            out.extend_from_slice(format!("{e:#}").as_bytes());
+            out
+        }
+    }
+}
+
+fn try_handle(store: &InProcess, payload: &[u8]) -> Result<Vec<u8>> {
+    let mut r = payload;
+    let mut op = [0u8; 1];
+    r.read_exact(&mut op)?;
+    match op[0] {
+        OP_PUBLISH => {
+            let ckpt = Checkpoint::read_from(&mut r)?;
+            store.publish(ckpt)?;
+            Ok(vec![STATUS_OK])
+        }
+        OP_LATEST => {
+            let member = read_u64(&mut r)? as usize;
+            let max_step = read_u64(&mut r)?;
+            match store.latest_at_most(member, max_step) {
+                Some(ckpt) => {
+                    let mut out = vec![STATUS_OK];
+                    ckpt.write_to(&mut out)?;
+                    Ok(out)
+                }
+                None => Ok(vec![STATUS_NONE]),
+            }
+        }
+        OP_FETCH => {
+            let member = read_u64(&mut r)? as usize;
+            let max_step = read_u64(&mut r)?;
+            let n = read_u32(&mut r)? as usize;
+            let mut names = Vec::with_capacity(n);
+            for _ in 0..n {
+                names.push(read_name(&mut r)?);
+            }
+            match store.latest_at_most(member, max_step) {
+                Some(ckpt) => {
+                    let fetch = windows_from_checkpoint(&ckpt, &names)?;
+                    let mut out = vec![STATUS_OK];
+                    out.extend_from_slice(&(fetch.member as u64).to_le_bytes());
+                    out.extend_from_slice(&fetch.step.to_le_bytes());
+                    out.extend_from_slice(&(fetch.windows.len() as u32).to_le_bytes());
+                    for w in &fetch.windows {
+                        write_name(&mut out, &w.name)?;
+                        write_shape(&mut out, &w.shape)?;
+                        out.extend_from_slice(&(w.data.len() as u64).to_le_bytes());
+                        write_f32s(&mut out, &w.data)?;
+                    }
+                    Ok(out)
+                }
+                None => Ok(vec![STATUS_NONE]),
+            }
+        }
+        OP_DESCRIBE => {
+            let member = read_u64(&mut r)? as usize;
+            let max_step = read_u64(&mut r)?;
+            match store.latest_at_most(member, max_step) {
+                Some(ckpt) => {
+                    let mut out = vec![STATUS_OK];
+                    out.extend_from_slice(&(ckpt.member as u64).to_le_bytes());
+                    out.extend_from_slice(&ckpt.step.to_le_bytes());
+                    let layout = ckpt.flat().layout();
+                    out.extend_from_slice(&(layout.len() as u64).to_le_bytes());
+                    for e in layout.entries() {
+                        write_name(&mut out, &e.name)?;
+                        write_shape(&mut out, &e.shape)?;
+                    }
+                    let residual = ckpt.residual().prefix_entries("");
+                    out.extend_from_slice(&(residual.len() as u64).to_le_bytes());
+                    for (name, t) in residual {
+                        write_framed_tensor(&mut out, name, t)?;
+                    }
+                    Ok(out)
+                }
+                None => Ok(vec![STATUS_NONE]),
+            }
+        }
+        OP_MEMBERS => {
+            let members = store.members();
+            let mut out = vec![STATUS_OK];
+            out.extend_from_slice(&(members.len() as u64).to_le_bytes());
+            for m in members {
+                out.extend_from_slice(&(m as u64).to_le_bytes());
+            }
+            Ok(out)
+        }
+        OP_GC => {
+            ExchangeTransport::gc(store)?;
+            Ok(vec![STATUS_OK])
+        }
+        other => bail!("unknown opcode {other}"),
+    }
+}
+
+// ------------------------------------------------------------------- client
+
+enum Target {
+    Tcp(String),
+    #[cfg(unix)]
+    Unix(PathBuf),
+}
+
+/// Window table + residual of a published checkpoint, as returned by
+/// `DESCRIBE` — the metadata a sharded reload needs before fetching.
+struct Description {
+    member: usize,
+    step: u64,
+    parts: Vec<(String, Vec<usize>)>,
+    residual: TensorMap,
+}
+
+/// Client endpoint of the wire protocol (one request/response connection
+/// per operation — the exchange cadence is seconds, not microseconds).
+pub struct SocketTransport {
+    target: Target,
+    /// `Some(batch)`: `latest`/`latest_at_most` reassemble the plane from
+    /// windowed fetches of `batch` windows each instead of one full-plane
+    /// response.
+    windowed: Option<usize>,
+    requests: AtomicU64,
+    bytes_tx: AtomicU64,
+    bytes_rx: AtomicU64,
+}
+
+impl SocketTransport {
+    /// Connect to a [`SocketServer::bind_tcp`] endpoint (`host:port`).
+    pub fn connect_tcp(addr: &str) -> Self {
+        SocketTransport {
+            target: Target::Tcp(addr.to_string()),
+            windowed: None,
+            requests: AtomicU64::new(0),
+            bytes_tx: AtomicU64::new(0),
+            bytes_rx: AtomicU64::new(0),
+        }
+    }
+
+    /// Connect to a [`SocketServer::bind_unix`] endpoint.
+    #[cfg(unix)]
+    pub fn connect_unix(path: &Path) -> Self {
+        SocketTransport {
+            target: Target::Unix(path.to_path_buf()),
+            windowed: None,
+            requests: AtomicU64::new(0),
+            bytes_tx: AtomicU64::new(0),
+            bytes_rx: AtomicU64::new(0),
+        }
+    }
+
+    /// Parse an endpoint spec: `unix:/path/to.sock` or `host:port`.
+    pub fn connect(spec: &str) -> Result<Self> {
+        #[cfg(unix)]
+        if let Some(path) = spec.strip_prefix("unix:") {
+            return Ok(Self::connect_unix(Path::new(path)));
+        }
+        if spec.contains(':') {
+            Ok(Self::connect_tcp(spec))
+        } else {
+            bail!("socket endpoint {spec:?} (want host:port or unix:/path)")
+        }
+    }
+
+    /// Reload teachers by sharded fetch, `batch` windows per request.
+    pub fn with_windowed_fetch(mut self, batch: usize) -> Self {
+        self.windowed = Some(batch.max(1));
+        self
+    }
+
+    /// (requests, bytes sent, bytes received) so far — the numbers the
+    /// bench reports and `netsim` prices.
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (
+            self.requests.load(Ordering::Relaxed),
+            self.bytes_tx.load(Ordering::Relaxed),
+            self.bytes_rx.load(Ordering::Relaxed),
+        )
+    }
+
+    fn open(&self) -> Result<Conn> {
+        // A response timeout bounds every operation: a dead server is an
+        // error, never a hang.
+        match &self.target {
+            Target::Tcp(addr) => {
+                let s =
+                    TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+                s.set_read_timeout(Some(READ_TIMEOUT))?;
+                Ok(Conn::Tcp(s))
+            }
+            #[cfg(unix)]
+            Target::Unix(path) => {
+                let s = UnixStream::connect(path)
+                    .with_context(|| format!("connecting {}", path.display()))?;
+                s.set_read_timeout(Some(READ_TIMEOUT))?;
+                Ok(Conn::Unix(s))
+            }
+        }
+    }
+
+    /// One request/response round trip. Returns the response body after
+    /// the status byte, or `None` for `STATUS_NONE`.
+    fn roundtrip(&self, request: &[u8]) -> Result<Option<Vec<u8>>> {
+        let mut conn = self.open()?;
+        write_frame(&mut conn, request)?;
+        let mut response =
+            read_frame(&mut conn)?.context("exchange server closed the connection")?;
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.bytes_tx
+            .fetch_add(request.len() as u64, Ordering::Relaxed);
+        self.bytes_rx
+            .fetch_add(response.len() as u64, Ordering::Relaxed);
+        if response.is_empty() {
+            bail!("empty response frame");
+        }
+        let status = response.remove(0);
+        match status {
+            STATUS_OK => Ok(Some(response)),
+            STATUS_NONE => Ok(None),
+            STATUS_ERR => bail!(
+                "exchange server error: {}",
+                String::from_utf8_lossy(&response)
+            ),
+            other => bail!("bad response status {other}"),
+        }
+    }
+
+    fn describe(&self, member: usize, max_step: u64) -> Result<Option<Description>> {
+        let mut req = vec![OP_DESCRIBE];
+        req.extend_from_slice(&(member as u64).to_le_bytes());
+        req.extend_from_slice(&max_step.to_le_bytes());
+        let body = match self.roundtrip(&req)? {
+            Some(b) => b,
+            None => return Ok(None),
+        };
+        let mut r = body.as_slice();
+        let member = read_u64(&mut r)? as usize;
+        let step = read_u64(&mut r)?;
+        let n_windows = read_u64(&mut r)? as usize;
+        let mut parts = Vec::with_capacity(n_windows);
+        for _ in 0..n_windows {
+            let name = read_name(&mut r)?;
+            let shape = read_shape(&mut r)?;
+            parts.push((name, shape));
+        }
+        let n_residual = read_u64(&mut r)? as usize;
+        let mut residual = TensorMap::new();
+        for _ in 0..n_residual {
+            let (name, t) = read_framed_tensor(&mut r)?;
+            residual.insert(name, t);
+        }
+        Ok(Some(Description {
+            member,
+            step,
+            parts,
+            residual,
+        }))
+    }
+
+    /// Full checkpoint via sharded fetch: describe, then pull windows in
+    /// batches pinned to the described step, then reassemble.
+    fn latest_windowed(
+        &self,
+        member: usize,
+        max_step: u64,
+        batch: usize,
+    ) -> Result<Option<Arc<Checkpoint>>> {
+        let desc = match self.describe(member, max_step)? {
+            Some(d) => d,
+            None => return Ok(None),
+        };
+        let layout = Arc::new(FlatLayout::from_named_shapes(desc.parts));
+        let mut buf = FlatBuffer::zeros(layout.clone());
+        let names: Vec<String> = layout.names().map(|s| s.to_string()).collect();
+        for chunk in names.chunks(batch) {
+            let fetch = ExchangeTransport::fetch_windows(self, member, desc.step, chunk)?
+                .context("checkpoint pruned between describe and fetch")?;
+            if fetch.step != desc.step {
+                bail!(
+                    "exchange moved from step {} to {} mid-fetch",
+                    desc.step,
+                    fetch.step
+                );
+            }
+            for w in &fetch.windows {
+                buf.write_window(&w.name, &w.data)?;
+            }
+        }
+        Ok(Some(Arc::new(Checkpoint::from_flat(
+            desc.member,
+            desc.step,
+            Arc::new(buf),
+            desc.residual,
+        ))))
+    }
+}
+
+impl ExchangeTransport for SocketTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Socket
+    }
+
+    fn publish(&self, ckpt: Checkpoint) -> Result<()> {
+        let mut req = vec![OP_PUBLISH];
+        ckpt.write_to(&mut req)?;
+        self.roundtrip(&req)?
+            .context("publish returned not-found")?;
+        Ok(())
+    }
+
+    fn latest(&self, member: usize) -> Result<Option<Arc<Checkpoint>>> {
+        self.latest_at_most(member, u64::MAX)
+    }
+
+    fn latest_at_most(&self, member: usize, max_step: u64) -> Result<Option<Arc<Checkpoint>>> {
+        if let Some(batch) = self.windowed {
+            return self.latest_windowed(member, max_step, batch);
+        }
+        let mut req = vec![OP_LATEST];
+        req.extend_from_slice(&(member as u64).to_le_bytes());
+        req.extend_from_slice(&max_step.to_le_bytes());
+        match self.roundtrip(&req)? {
+            Some(body) => Ok(Some(Arc::new(Checkpoint::read_from(&mut body.as_slice())?))),
+            None => Ok(None),
+        }
+    }
+
+    fn fetch_windows(
+        &self,
+        member: usize,
+        max_step: u64,
+        names: &[String],
+    ) -> Result<Option<WindowedFetch>> {
+        let mut req = vec![OP_FETCH];
+        req.extend_from_slice(&(member as u64).to_le_bytes());
+        req.extend_from_slice(&max_step.to_le_bytes());
+        req.extend_from_slice(&(names.len() as u32).to_le_bytes());
+        for name in names {
+            write_name(&mut req, name)?;
+        }
+        let body = match self.roundtrip(&req)? {
+            Some(b) => b,
+            None => return Ok(None),
+        };
+        let mut r = body.as_slice();
+        let member = read_u64(&mut r)? as usize;
+        let step = read_u64(&mut r)?;
+        let n = read_u32(&mut r)? as usize;
+        let mut windows = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = read_name(&mut r)?;
+            let shape = read_shape(&mut r)?;
+            let elems = read_u64(&mut r)? as usize;
+            let mut data = vec![0f32; elems];
+            crate::codistill::store::read_f32s(&mut r, &mut data)?;
+            windows.push(FetchedWindow { name, shape, data });
+        }
+        Ok(Some(WindowedFetch {
+            member,
+            step,
+            windows,
+        }))
+    }
+
+    fn members(&self) -> Result<Vec<usize>> {
+        let body = self
+            .roundtrip(&[OP_MEMBERS])?
+            .context("members returned not-found")?;
+        let mut r = body.as_slice();
+        let n = read_u64(&mut r)? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(read_u64(&mut r)? as usize);
+        }
+        Ok(out)
+    }
+
+    fn gc(&self) -> Result<()> {
+        self.roundtrip(&[OP_GC])?.context("gc returned not-found")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ckpt(member: usize, step: u64, vals: &[f32]) -> Checkpoint {
+        let mut params = TensorMap::new();
+        params.insert("params.a", Tensor::f32(&[2], vals[..2].to_vec()).unwrap());
+        params.insert("params.b", Tensor::f32(&[3], vals[2..5].to_vec()).unwrap());
+        params.insert("params.ids", Tensor::i32(&[2], vec![4, 2]).unwrap());
+        Checkpoint::new(member, step, params)
+    }
+
+    #[test]
+    fn tcp_roundtrip_full_plane() {
+        let server = SocketServer::bind_tcp("127.0.0.1:0", 4).unwrap();
+        let client = SocketTransport::connect_tcp(server.addr());
+
+        assert!(client.latest(0).unwrap().is_none());
+        client.publish(ckpt(0, 5, &[1.0, 2.0, 3.0, 4.0, 5.0])).unwrap();
+        client.publish(ckpt(0, 9, &[6.0, 7.0, 8.0, 9.0, 10.0])).unwrap();
+
+        let c = client.latest(0).unwrap().unwrap();
+        assert_eq!(c.step, 9);
+        assert_eq!(c.flat().view("params.a").unwrap(), &[6.0, 7.0]);
+        // residual (i32) leaves survive the wire
+        assert_eq!(
+            c.params().get("params.ids").unwrap().as_i32().unwrap(),
+            &[4, 2]
+        );
+        // staleness bound
+        assert_eq!(client.latest_at_most(0, 5).unwrap().unwrap().step, 5);
+        assert!(client.latest_at_most(0, 4).unwrap().is_none());
+        assert_eq!(client.members().unwrap(), vec![0]);
+        client.gc().unwrap();
+
+        // server-side store saw the same bytes (no re-encode drift)
+        let direct = server.store().latest(0).unwrap();
+        assert_eq!(direct.flat().data(), c.flat().data());
+    }
+
+    #[test]
+    fn tcp_windowed_fetch_and_reassembly() {
+        let server = SocketServer::bind_tcp("127.0.0.1:0", 4).unwrap();
+        let publisher = SocketTransport::connect_tcp(server.addr());
+        publisher.publish(ckpt(1, 3, &[1.5, 2.5, 3.5, 4.5, 5.5])).unwrap();
+
+        // raw sharded fetch: one window only
+        let reader = SocketTransport::connect_tcp(server.addr());
+        let f = reader
+            .fetch_windows(1, u64::MAX, &["params.b".to_string()])
+            .unwrap()
+            .unwrap();
+        assert_eq!(f.step, 3);
+        assert_eq!(f.windows[0].data, vec![3.5, 4.5, 5.5]);
+        assert_eq!(f.payload_bytes(), 12);
+
+        // windowed reload reassembles the identical checkpoint
+        let windowed = SocketTransport::connect_tcp(server.addr()).with_windowed_fetch(1);
+        let via_windows = windowed.latest(1).unwrap().unwrap();
+        let via_plane = reader.latest(1).unwrap().unwrap();
+        assert_eq!(via_windows.step, via_plane.step);
+        assert_eq!(via_windows.flat().data(), via_plane.flat().data());
+        assert!(via_windows
+            .flat()
+            .layout()
+            .same_plane(via_plane.flat().layout()));
+        assert_eq!(
+            via_windows.params().get("params.ids").unwrap().as_i32().unwrap(),
+            &[4, 2]
+        );
+
+        // the windowed client paid per-window requests, never one big pull
+        let (reqs, _tx, rx) = windowed.stats();
+        assert!(reqs >= 3, "describe + >=2 window fetches, got {reqs}");
+        assert!(rx > 0);
+    }
+
+    #[test]
+    fn server_reports_errors_not_hangs() {
+        let server = SocketServer::bind_tcp("127.0.0.1:0", 4).unwrap();
+        let client = SocketTransport::connect_tcp(server.addr());
+        client.publish(ckpt(0, 10, &[0.0; 5])).unwrap();
+        // step regression is rejected through the wire with the store's
+        // message, and the connection/server stay healthy
+        let err = client.publish(ckpt(0, 4, &[0.0; 5])).unwrap_err();
+        assert!(format!("{err:#}").contains("published step"), "{err:#}");
+        assert_eq!(client.members().unwrap(), vec![0]);
+        // unknown window error round-trips too
+        let err = client
+            .fetch_windows(0, u64::MAX, &["params.nope".to_string()])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("no window"), "{err:#}");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_socket_roundtrip() {
+        let path = std::env::temp_dir().join(format!(
+            "codistill_uds_{}.sock",
+            std::process::id()
+        ));
+        let server = SocketServer::bind_unix(&path, 4).unwrap();
+        let client = SocketTransport::connect(&format!("unix:{}", path.display())).unwrap();
+        client.publish(ckpt(7, 1, &[1.0, 2.0, 3.0, 4.0, 5.0])).unwrap();
+        let c = client.latest(7).unwrap().unwrap();
+        assert_eq!(c.flat().view("params.b").unwrap(), &[3.0, 4.0, 5.0]);
+        drop(client);
+        drop(server);
+        assert!(!path.exists(), "socket file not unlinked on shutdown");
+    }
+}

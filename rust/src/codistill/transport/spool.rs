@@ -1,0 +1,586 @@
+//! The spool-directory backend: checkpoint exchange through a shared
+//! filesystem — the medium the paper actually describes (§2.1: workers
+//! checkpoint to a distributed filesystem; others load the freshest
+//! available file).
+//!
+//! ## Layout of a spool directory
+//!
+//! * `memberNNNN_stepNNNNNNNNNNNNNNNNNNNN.ckpt` — one `CKPT0002` file per
+//!   publication. Member and step are zero-padded so lexicographic
+//!   directory order equals (member, step) order: manifest recovery after
+//!   a crash is a plain sorted scan. Files are written to a hidden
+//!   `.tmp_*` name and atomically renamed into place, so a concurrent
+//!   reader (this process or another) never observes a torn checkpoint.
+//! * `MANIFEST` — an atomic (write-temp+rename) text snapshot of the
+//!   published set: a header line, then `member step filename` per
+//!   checkpoint. Rewritten from a full directory scan on every publish
+//!   and gc, so concurrent publishers converge; readers fall back to the
+//!   directory scan whenever the manifest is missing or unparsable.
+//!
+//! ## Reads
+//!
+//! `latest`/`latest_at_most` load the whole file (one contiguous payload
+//! read). [`SpoolDir::fetch_windows`] is the sharded path: it parses only
+//! the `CKPT0002` header, then `pread`s (seek + exact read) the byte
+//! ranges of the requested [`FlatLayout`] windows out of the contiguous
+//! payload — an exchange over a shared file system where each reader
+//! moves only the windows it needs.
+//!
+//! Two processes exchange by constructing `SpoolDir::open` on the same
+//! directory (or one side may be an
+//! [`InProcess`](crate::codistill::transport::InProcess) store with
+//! `.with_spool(dir)` — it writes the identical files).
+//!
+//! [`FlatLayout`]: crate::runtime::flat::FlatLayout
+
+use crate::codistill::store::{
+    read_name, read_shape, read_u64, Checkpoint, MAGIC_V1, MAGIC_V2,
+};
+use crate::codistill::transport::{
+    windows_from_checkpoint, ExchangeTransport, FetchedWindow, TransportKind, WindowedFetch,
+};
+use crate::runtime::flat::FlatLayout;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+const MANIFEST: &str = "MANIFEST";
+const MANIFEST_HEADER: &str = "SPOOLMANIFEST v1";
+
+/// Canonical spool file name: zero-padded so lexicographic order equals
+/// (member, step) order — 4 digits cover the paper's member counts, 20
+/// digits cover all of u64.
+pub fn spool_file_name(member: usize, step: u64) -> String {
+    format!("member{member:04}_step{step:020}.ckpt")
+}
+
+/// Hidden temp name a publisher writes before the atomic rename (dotted,
+/// pid-tagged: skipped by scans, unique across publisher processes).
+pub fn spool_temp_name(member: usize, step: u64) -> String {
+    format!(
+        ".tmp_{}_member{member:04}_step{step:020}.ckpt",
+        std::process::id()
+    )
+}
+
+/// Parse `memberN..N_stepN..N.ckpt` (padding optional on read, so spools
+/// from older builds still scan).
+pub fn parse_spool_name(name: &str) -> Option<(usize, u64)> {
+    let rest = name.strip_prefix("member")?.strip_suffix(".ckpt")?;
+    let (member, step) = rest.split_once("_step")?;
+    Some((member.parse().ok()?, step.parse().ok()?))
+}
+
+/// All published (member, step) pairs in `dir`, ascending per member.
+fn scan_dir(dir: &Path) -> Result<BTreeMap<usize, Vec<u64>>> {
+    let mut out: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("scanning spool {}", dir.display()))?
+    {
+        let name = entry?.file_name().to_string_lossy().into_owned();
+        if let Some((member, step)) = parse_spool_name(&name) {
+            out.entry(member).or_default().push(step);
+        }
+    }
+    for steps in out.values_mut() {
+        steps.sort_unstable();
+        steps.dedup();
+    }
+    Ok(out)
+}
+
+/// Atomically rewrite `dir/MANIFEST` from a directory scan. Every
+/// publisher into a spool directory must call this after adding/pruning
+/// files ([`SpoolDir::publish`] and `InProcess::with_spool` both do), so
+/// readers that prefer the manifest converge on the true published set.
+pub(crate) fn write_manifest(dir: &Path) -> Result<()> {
+    let scan = scan_dir(dir)?;
+    let mut text = String::from(MANIFEST_HEADER);
+    text.push('\n');
+    for (member, steps) in &scan {
+        for step in steps {
+            text.push_str(&format!(
+                "{member} {step} {}\n",
+                spool_file_name(*member, *step)
+            ));
+        }
+    }
+    let tmp = dir.join(format!(".tmp_{}_{MANIFEST}", std::process::id()));
+    std::fs::write(&tmp, text)?;
+    std::fs::rename(&tmp, dir.join(MANIFEST))?;
+    Ok(())
+}
+
+/// Read the published set from the manifest; `None` when it is missing or
+/// unparsable (callers fall back to a directory scan).
+fn read_manifest(dir: &Path) -> Option<BTreeMap<usize, Vec<u64>>> {
+    let text = std::fs::read_to_string(dir.join(MANIFEST)).ok()?;
+    let mut lines = text.lines();
+    if lines.next()? != MANIFEST_HEADER {
+        return None;
+    }
+    let mut out: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
+    for line in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let member: usize = parts.next()?.parse().ok()?;
+        let step: u64 = parts.next()?.parse().ok()?;
+        out.entry(member).or_default().push(step);
+    }
+    for steps in out.values_mut() {
+        steps.sort_unstable();
+        steps.dedup();
+    }
+    Some(out)
+}
+
+/// Delete every member's spool files past the last `history` steps (the
+/// spool-side history bound — the in-memory bound's durable twin).
+/// Returns how many files were removed so callers can skip manifest
+/// rewrites when nothing changed.
+pub(crate) fn prune_spool(dir: &Path, history: usize) -> Result<usize> {
+    let history = history.max(1);
+    let mut pruned = 0usize;
+    for (member, steps) in scan_dir(dir)? {
+        if steps.len() > history {
+            for &step in &steps[..steps.len() - history] {
+                if std::fs::remove_file(dir.join(spool_file_name(member, step))).is_ok() {
+                    pruned += 1;
+                }
+            }
+        }
+    }
+    Ok(pruned)
+}
+
+/// `CKPT0002` header: everything before the payload, plus where the
+/// payload starts — enough to address any window's bytes in the file.
+struct V2Header {
+    member: usize,
+    step: u64,
+    layout: FlatLayout,
+    /// Absolute file offset of the first payload byte.
+    payload_start: u64,
+}
+
+/// Reader adapter that tracks the absolute stream position.
+struct CountingReader<R> {
+    inner: R,
+    pos: u64,
+}
+
+impl<R: Read> Read for CountingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.pos += n as u64;
+        Ok(n)
+    }
+}
+
+/// Parse a v2 header from the start of `r`. Returns `None` for a v1 file
+/// (no contiguous payload to address — callers load it whole).
+fn parse_v2_header(r: impl Read) -> Result<Option<V2Header>> {
+    let mut f = CountingReader { inner: r, pos: 0 };
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic == MAGIC_V1 {
+        return Ok(None);
+    }
+    if &magic != MAGIC_V2 {
+        bail!("bad checkpoint magic");
+    }
+    let member = read_u64(&mut f)? as usize;
+    let step = read_u64(&mut f)?;
+    let n_windows = read_u64(&mut f)? as usize;
+    let mut parts = Vec::with_capacity(n_windows);
+    for _ in 0..n_windows {
+        let name = read_name(&mut f)?;
+        let shape = read_shape(&mut f)?;
+        parts.push((name, shape));
+    }
+    let layout = FlatLayout::from_named_shapes(parts);
+    let payload_elems = read_u64(&mut f)? as usize;
+    if payload_elems != layout.total_len() {
+        bail!(
+            "flat payload has {} elems, window table wants {}",
+            payload_elems,
+            layout.total_len()
+        );
+    }
+    Ok(Some(V2Header {
+        member,
+        step,
+        layout,
+        payload_start: f.pos,
+    }))
+}
+
+/// Shared-directory checkpoint exchange (see module docs).
+pub struct SpoolDir {
+    dir: PathBuf,
+    history: usize,
+    /// Loaded checkpoints keyed by (member, step): repeated `latest`
+    /// reads on the reload cadence hit memory, not the filesystem.
+    cache: Mutex<HashMap<(usize, u64), Arc<Checkpoint>>>,
+}
+
+impl SpoolDir {
+    /// Open (creating if needed) a spool directory with a per-member
+    /// retention bound of `history` publications.
+    pub fn open(dir: &Path, history: usize) -> Result<Self> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating spool {}", dir.display()))?;
+        Ok(SpoolDir {
+            dir: dir.to_path_buf(),
+            history: history.max(1),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Published set: manifest when readable, directory scan otherwise
+    /// (recovery path — zero-padded names make the scan order correct).
+    fn published(&self) -> Result<BTreeMap<usize, Vec<u64>>> {
+        match read_manifest(&self.dir) {
+            Some(m) => Ok(m),
+            None => scan_dir(&self.dir),
+        }
+    }
+
+    /// Freshest step for `member` with `step <= max_step`.
+    fn resolve(&self, member: usize, max_step: u64) -> Result<Option<u64>> {
+        Ok(self
+            .published()?
+            .get(&member)
+            .and_then(|steps| steps.iter().rev().find(|&&s| s <= max_step).copied()))
+    }
+
+    /// Like [`SpoolDir::resolve`] but always from a fresh directory scan —
+    /// the fallback when a manifest-resolved file turns out to be gone
+    /// (stale manifest, or a concurrent publisher pruned it mid-read).
+    fn resolve_scan(&self, member: usize, max_step: u64) -> Result<Option<u64>> {
+        Ok(scan_dir(&self.dir)?
+            .get(&member)
+            .and_then(|steps| steps.iter().rev().find(|&&s| s <= max_step).copied()))
+    }
+
+    /// Load (or fetch from cache) the checkpoint file for (member, step);
+    /// `Ok(None)` when the file has vanished (concurrent prune / stale
+    /// manifest) so callers can re-resolve instead of aborting the run.
+    fn try_load_at(&self, member: usize, step: u64) -> Result<Option<Arc<Checkpoint>>> {
+        if let Some(c) = self.cache.lock().unwrap().get(&(member, step)) {
+            return Ok(Some(c.clone()));
+        }
+        let path = self.dir.join(spool_file_name(member, step));
+        if !path.exists() {
+            return Ok(None);
+        }
+        let ckpt = Arc::new(Checkpoint::load(&path)?);
+        self.cache_insert(member, step, ckpt.clone());
+        Ok(Some(ckpt))
+    }
+
+    /// Insert into the read cache, keeping at most `history` cached
+    /// publications per member (count-based, mirroring the spool bound —
+    /// steps advance by reload intervals, not by 1).
+    fn cache_insert(&self, member: usize, step: u64, ckpt: Arc<Checkpoint>) {
+        let mut cache = self.cache.lock().unwrap();
+        cache.insert((member, step), ckpt);
+        let mut steps: Vec<u64> = cache
+            .keys()
+            .filter(|&&(m, _)| m == member)
+            .map(|&(_, s)| s)
+            .collect();
+        if steps.len() > self.history {
+            steps.sort_unstable();
+            let cutoff = steps[steps.len() - self.history];
+            cache.retain(|&(m, s), _| m != member || s >= cutoff);
+        }
+    }
+
+    /// Windowed `pread` of one checkpoint file: parse the header, then
+    /// seek + read exactly the requested windows' byte ranges. `Ok(None)`
+    /// when the file has vanished (callers re-resolve).
+    fn try_pread_windows(
+        &self,
+        member: usize,
+        step: u64,
+        names: &[String],
+    ) -> Result<Option<WindowedFetch>> {
+        let path = self.dir.join(spool_file_name(member, step));
+        let file = match std::fs::File::open(&path) {
+            Ok(f) => f,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(e).with_context(|| format!("opening {}", path.display()))
+            }
+        };
+        let mut reader = std::io::BufReader::new(file);
+        let header = parse_v2_header(&mut reader)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let header = match header {
+            Some(h) => h,
+            None => {
+                // v1 spool file: no contiguous payload; load it whole.
+                let ckpt = Checkpoint::load(&path)?;
+                return windows_from_checkpoint(&ckpt, names).map(Some);
+            }
+        };
+        let mut file = reader.into_inner();
+        let mut windows = Vec::with_capacity(names.len());
+        for name in names {
+            let entry = match header.layout.entry(name) {
+                Some(e) => e,
+                None => bail!(
+                    "member {member} step {step}: plane has no window {name:?}"
+                ),
+            };
+            file.seek(SeekFrom::Start(
+                header.payload_start + entry.byte_range().start as u64,
+            ))?;
+            let mut data = vec![0f32; entry.len];
+            crate::codistill::store::read_f32s(&mut file, &mut data)?;
+            windows.push(FetchedWindow {
+                name: name.clone(),
+                shape: entry.shape.clone(),
+                data,
+            });
+        }
+        Ok(Some(WindowedFetch {
+            member: header.member,
+            step: header.step,
+            windows,
+        }))
+    }
+}
+
+impl ExchangeTransport for SpoolDir {
+    fn kind(&self) -> TransportKind {
+        TransportKind::SpoolDir
+    }
+
+    fn publish(&self, ckpt: Checkpoint) -> Result<()> {
+        if let Some(last) = self.resolve(ckpt.member, u64::MAX)? {
+            if ckpt.step < last {
+                bail!(
+                    "member {} published step {} after step {}",
+                    ckpt.member,
+                    ckpt.step,
+                    last
+                );
+            }
+        }
+        let member = ckpt.member;
+        let step = ckpt.step;
+        let tmp = self.dir.join(spool_temp_name(member, step));
+        ckpt.save(&tmp)?;
+        std::fs::rename(&tmp, self.dir.join(spool_file_name(member, step)))?;
+        prune_spool(&self.dir, self.history)?;
+        write_manifest(&self.dir)?;
+        // Publisher keeps the Arc'd plane hot for its own readers.
+        self.cache_insert(member, step, Arc::new(ckpt));
+        Ok(())
+    }
+
+    fn latest(&self, member: usize) -> Result<Option<Arc<Checkpoint>>> {
+        self.latest_at_most(member, u64::MAX)
+    }
+
+    fn latest_at_most(&self, member: usize, max_step: u64) -> Result<Option<Arc<Checkpoint>>> {
+        if let Some(step) = self.resolve(member, max_step)? {
+            if let Some(c) = self.try_load_at(member, step)? {
+                return Ok(Some(c));
+            }
+            // The resolved file vanished (stale manifest / concurrent
+            // prune): fall back to a direct directory scan. A second
+            // vanish is a hard error — something is deleting fresh files.
+            if let Some(step) = self.resolve_scan(member, max_step)? {
+                return match self.try_load_at(member, step)? {
+                    Some(c) => Ok(Some(c)),
+                    None => bail!(
+                        "spool file for member {member} step {step} vanished during read"
+                    ),
+                };
+            }
+        }
+        Ok(None)
+    }
+
+    fn fetch_windows(
+        &self,
+        member: usize,
+        max_step: u64,
+        names: &[String],
+    ) -> Result<Option<WindowedFetch>> {
+        if let Some(step) = self.resolve(member, max_step)? {
+            if let Some(f) = self.try_pread_windows(member, step, names)? {
+                return Ok(Some(f));
+            }
+            if let Some(step) = self.resolve_scan(member, max_step)? {
+                return match self.try_pread_windows(member, step, names)? {
+                    Some(f) => Ok(Some(f)),
+                    None => bail!(
+                        "spool file for member {member} step {step} vanished during read"
+                    ),
+                };
+            }
+        }
+        Ok(None)
+    }
+
+    fn members(&self) -> Result<Vec<usize>> {
+        Ok(self.published()?.keys().copied().collect())
+    }
+
+    fn gc(&self) -> Result<()> {
+        // Publish already prunes + rewrites the manifest; this pass only
+        // touches the manifest when something actually changed (or the
+        // manifest is missing/unreadable and needs recovery).
+        let pruned = prune_spool(&self.dir, self.history)?;
+        if pruned > 0 || read_manifest(&self.dir).is_none() {
+            write_manifest(&self.dir)?;
+        }
+        if pruned > 0 {
+            let published = self.published()?;
+            self.cache.lock().unwrap().retain(|&(m, s), _| {
+                published
+                    .get(&m)
+                    .map(|steps| steps.contains(&s))
+                    .unwrap_or(false)
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Tensor, TensorMap};
+
+    fn tdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("codistill_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn ckpt(member: usize, step: u64, vals: &[f32]) -> Checkpoint {
+        let mut params = TensorMap::new();
+        params.insert("params.a", Tensor::f32(&[2], vec![vals[0], vals[1]]).unwrap());
+        params.insert("params.b", Tensor::f32(&[3], vec![vals[2], vals[3], vals[4]]).unwrap());
+        Checkpoint::new(member, step, params)
+    }
+
+    #[test]
+    fn names_zero_pad_and_parse() {
+        assert_eq!(spool_file_name(3, 7), "member0003_step00000000000000000007.ckpt");
+        assert_eq!(parse_spool_name(&spool_file_name(12, 1_000_000)), Some((12, 1_000_000)));
+        // padding-free legacy names still parse
+        assert_eq!(parse_spool_name("member0_step7.ckpt"), Some((0, 7)));
+        assert_eq!(parse_spool_name("MANIFEST"), None);
+        assert_eq!(parse_spool_name(".tmp_1_member0000_step00.ckpt"), None);
+        // lexicographic order now equals step order (the seed's unpadded
+        // names sorted step10 before step9)
+        assert!(spool_file_name(0, 9) < spool_file_name(0, 10));
+    }
+
+    #[test]
+    fn publish_read_roundtrip_and_manifest() {
+        let dir = tdir("spooldir_rt");
+        let spool = SpoolDir::open(&dir, 4).unwrap();
+        spool.publish(ckpt(0, 5, &[1.0, 2.0, 3.0, 4.0, 5.0])).unwrap();
+        spool.publish(ckpt(1, 6, &[9.0, 9.0, 9.0, 9.0, 9.0])).unwrap();
+
+        assert_eq!(spool.members().unwrap(), vec![0, 1]);
+        let c = spool.latest(0).unwrap().unwrap();
+        assert_eq!(c.step, 5);
+        assert_eq!(c.flat().view("params.a").unwrap(), &[1.0, 2.0]);
+
+        // manifest exists, is atomic-format, and matches the scan
+        let text = std::fs::read_to_string(dir.join(MANIFEST)).unwrap();
+        assert!(text.starts_with(MANIFEST_HEADER));
+        assert!(text.contains(&spool_file_name(1, 6)));
+
+        // a fresh SpoolDir on the same dir (second process) sees the same
+        let other = SpoolDir::open(&dir, 4).unwrap();
+        let c2 = other.latest(0).unwrap().unwrap();
+        assert_eq!(c2.flat().data(), c.flat().data());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_recovery_from_scan() {
+        let dir = tdir("spooldir_recover");
+        let spool = SpoolDir::open(&dir, 4).unwrap();
+        spool.publish(ckpt(2, 10, &[1.0; 5])).unwrap();
+        std::fs::remove_file(dir.join(MANIFEST)).unwrap();
+        // reads fall back to the zero-padded directory scan
+        assert_eq!(spool.latest(2).unwrap().unwrap().step, 10);
+        assert_eq!(spool.members().unwrap(), vec![2]);
+        // gc rebuilds the manifest
+        spool.gc().unwrap();
+        assert!(dir.join(MANIFEST).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn history_bound_prunes_files() {
+        let dir = tdir("spooldir_gc");
+        let spool = SpoolDir::open(&dir, 2).unwrap();
+        for s in 0..6u64 {
+            spool.publish(ckpt(0, s, &[s as f32; 5])).unwrap();
+        }
+        let mut files: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".ckpt"))
+            .collect();
+        files.sort();
+        assert_eq!(files, vec![spool_file_name(0, 4), spool_file_name(0, 5)]);
+        assert!(spool.latest_at_most(0, 3).unwrap().is_none(), "pruned step readable");
+        assert_eq!(spool.latest(0).unwrap().unwrap().step, 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn windowed_pread_matches_full_load() {
+        let dir = tdir("spooldir_pread");
+        let spool = SpoolDir::open(&dir, 4).unwrap();
+        spool.publish(ckpt(0, 3, &[1.5, -2.5, 3.5, 4.5, 5.5])).unwrap();
+
+        let fetch = spool
+            .fetch_windows(0, u64::MAX, &["params.b".to_string(), "params.a".to_string()])
+            .unwrap()
+            .unwrap();
+        assert_eq!(fetch.member, 0);
+        assert_eq!(fetch.step, 3);
+        assert_eq!(fetch.windows[0].name, "params.b");
+        assert_eq!(fetch.windows[0].data, vec![3.5, 4.5, 5.5]);
+        assert_eq!(fetch.windows[1].data, vec![1.5, -2.5]);
+        assert_eq!(fetch.payload_bytes(), 5 * 4);
+        // staleness bound applies to windowed fetches too
+        assert!(spool.fetch_windows(0, 2, &[]).unwrap().is_none());
+        // unknown window rejected
+        assert!(spool
+            .fetch_windows(0, u64::MAX, &["params.zzz".to_string()])
+            .is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_step_regression_like_inproc() {
+        let dir = tdir("spooldir_regress");
+        let spool = SpoolDir::open(&dir, 4).unwrap();
+        spool.publish(ckpt(0, 10, &[0.0; 5])).unwrap();
+        assert!(spool.publish(ckpt(0, 5, &[0.0; 5])).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -2,7 +2,8 @@
 //! commands, result-table printing.
 
 use crate::codistill::{
-    DistillSchedule, LrSchedule, Member, Orchestrator, OrchestratorConfig, RunLog, Topology,
+    DistillSchedule, ExchangeTransport, InProcess, LrSchedule, Member, Orchestrator,
+    OrchestratorConfig, RunLog, SocketServer, SocketTransport, SpoolDir, Topology, TransportKind,
 };
 use crate::config::Settings;
 use crate::data::corpus::CorpusConfig;
@@ -136,6 +137,68 @@ pub fn orch_config(d: &LmExpDefaults, distill: DistillSchedule, cluster: Option<
     }
 }
 
+/// A constructed exchange transport plus whatever must stay alive while
+/// it is in use (the in-process socket server, when one was spawned).
+pub struct TransportSetup {
+    pub transport: Arc<dyn ExchangeTransport>,
+    /// Keep-alive handle: dropping it shuts the server down.
+    pub server: Option<SocketServer>,
+    pub kind: TransportKind,
+}
+
+/// Build the checkpoint-exchange transport selected by `--transport`
+/// (default `inproc`):
+///
+/// * `spool` — a [`SpoolDir`] on `spool_dir` (default
+///   `<results>/spool`); point a second process at the same directory to
+///   exchange with it.
+/// * `socket` — connect to `socket_addr` (`host:port` or `unix:/path`);
+///   when unset, serve the exchange in-process on a loopback port.
+///   `socket_windows=N` (default 0 = full-plane) shards teacher reloads
+///   to N windows per fetch.
+pub fn make_transport(s: &Settings, history: usize) -> Result<TransportSetup> {
+    let kind = TransportKind::parse(s.str_or("transport", "inproc"))?;
+    match kind {
+        TransportKind::InProcess => Ok(TransportSetup {
+            transport: Arc::new(InProcess::new(history)),
+            server: None,
+            kind,
+        }),
+        TransportKind::SpoolDir => {
+            let default_dir = results_dir(s).join("spool");
+            let dir = match s.get("spool_dir") {
+                Some(d) => PathBuf::from(d),
+                None => default_dir,
+            };
+            Ok(TransportSetup {
+                transport: Arc::new(SpoolDir::open(&dir, history)?),
+                server: None,
+                kind,
+            })
+        }
+        TransportKind::Socket => {
+            let (server, addr) = match s.get("socket_addr") {
+                Some(addr) => (None, addr.to_string()),
+                None => {
+                    let srv = SocketServer::bind_tcp("127.0.0.1:0", history)?;
+                    let addr = srv.addr().to_string();
+                    (Some(srv), addr)
+                }
+            };
+            let mut client = SocketTransport::connect(&addr)?;
+            let windows = s.usize_or("socket_windows", 0)?;
+            if windows > 0 {
+                client = client.with_windowed_fetch(windows);
+            }
+            Ok(TransportSetup {
+                transport: Arc::new(client),
+                server,
+                kind,
+            })
+        }
+    }
+}
+
 /// Print a run's per-member final summary.
 pub fn print_runlog(tag: &str, log: &RunLog) {
     for (i, curve) in log.eval.iter().enumerate() {
@@ -192,9 +255,15 @@ pub fn cmd_codistill(s: &Settings) -> Result<()> {
         None,
     );
     cfg.topology = topology;
-    let orch = Orchestrator::new(cfg);
+    let setup = make_transport(s, s.usize_or("history", 8)?)?;
+    if d.verbose {
+        eprintln!("[codistill] exchange transport: {}", setup.kind.name());
+    }
+    let orch = Orchestrator::with_transport(cfg, setup.transport.clone());
     let log = orch.run(&mut members)?;
     print_runlog("codistill", &log);
+    // `setup.server` (if any) stays alive until here by ownership.
+    drop(setup);
     Ok(())
 }
 

@@ -94,7 +94,22 @@ impl ClusterModel {
     /// Amortized per exchange (NOT per step) — this is why codistillation's
     /// communication is cheap (§2.1).
     pub fn checkpoint_exchange_time(&self) -> f64 {
-        2.0 * self.model_bytes as f64 / self.bandwidth_bps
+        self.full_exchange_time(1)
+    }
+
+    /// Full-plane exchange: one checkpoint write plus `teachers`
+    /// whole-plane reads (each reader pulls every byte of the plane —
+    /// the `latest` path of every transport).
+    pub fn full_exchange_time(&self, teachers: usize) -> f64 {
+        (1 + teachers) as f64 * self.model_bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Sharded exchange: one checkpoint write plus `teachers` windowed
+    /// reads that move only `bytes_fetched` each (`fetch_windows` /
+    /// `SocketTransport::with_windowed_fetch` — `bytes_fetched /
+    /// bandwidth` per reader instead of the whole plane).
+    pub fn sharded_exchange_time(&self, teachers: usize, bytes_fetched: u64) -> f64 {
+        (self.model_bytes as f64 + teachers as f64 * bytes_fetched as f64) / self.bandwidth_bps
     }
 
     /// Per-step communication bytes for sync SGD vs codistillation —
@@ -160,5 +175,31 @@ mod tests {
         let m = ClusterModel::gpu_cluster(128, 40_000_000);
         let per_step = m.checkpoint_exchange_time() / m.reload_interval as f64;
         assert!(per_step < m.allreduce_time());
+    }
+
+    #[test]
+    fn sharded_exchange_beats_full_plane_with_multiple_teachers() {
+        let m = ClusterModel::gpu_cluster(128, 40_000_000);
+        // each reader fetches a quarter of the plane's windows
+        let fetched = m.model_bytes / 4;
+        for teachers in [2usize, 3, 7] {
+            let full = m.full_exchange_time(teachers);
+            let sharded = m.sharded_exchange_time(teachers, fetched);
+            assert!(
+                sharded < full,
+                "W={teachers}: sharded {sharded} !< full {full}"
+            );
+        }
+        // savings grow with teacher count: the write amortizes, the reads shrink
+        let gain2 = m.full_exchange_time(2) - m.sharded_exchange_time(2, fetched);
+        let gain8 = m.full_exchange_time(8) - m.sharded_exchange_time(8, fetched);
+        assert!(gain8 > gain2);
+        // degenerate cases: fetching the whole plane equals full-plane cost,
+        // and the single-teacher wrapper keeps its historical value
+        assert_eq!(
+            m.sharded_exchange_time(3, m.model_bytes),
+            m.full_exchange_time(3)
+        );
+        assert_eq!(m.checkpoint_exchange_time(), m.full_exchange_time(1));
     }
 }

@@ -41,6 +41,15 @@ impl FlatEntry {
     pub fn range(&self) -> Range<usize> {
         self.offset..self.offset + self.len
     }
+
+    /// Byte range of this window inside the serialized plane payload
+    /// (4 bytes per f32 element) — the unit of a transport's sharded
+    /// fetch: a reader `pread`s exactly these bytes out of a `CKPT0002`
+    /// payload (or requests them over a socket) instead of the whole
+    /// plane.
+    pub fn byte_range(&self) -> Range<usize> {
+        self.offset * 4..(self.offset + self.len) * 4
+    }
 }
 
 /// Deterministic name→(offset, len) ordering for the f32 leaves under a
@@ -126,9 +135,25 @@ impl FlatLayout {
         self.total
     }
 
+    /// Total plane size in bytes (4 bytes per f32 element).
+    pub fn total_bytes(&self) -> usize {
+        self.total * 4
+    }
+
     /// Window metadata for a name.
     pub fn entry(&self, name: &str) -> Option<&FlatEntry> {
         self.index.get(name).map(|&i| &self.entries[i])
+    }
+
+    /// Window names in plane order.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|e| e.name.as_str())
+    }
+
+    /// Element range of one named window (`None` if the plane has no such
+    /// window) — range addressing for sharded transports.
+    pub fn window_range(&self, name: &str) -> Option<Range<usize>> {
+        self.entry(name).map(|e| e.range())
     }
 
     /// Whether another layout describes the identical plane.
@@ -240,6 +265,25 @@ impl FlatBuffer {
         let mut m = TensorMap::new();
         self.scatter_into(&mut m)?;
         Ok(m)
+    }
+
+    /// Overwrite one named window from a contiguous slice (the receive
+    /// side of a sharded fetch: windows arrive independently and are
+    /// placed at their layout offsets).
+    pub fn write_window(&mut self, name: &str, data: &[f32]) -> Result<()> {
+        let e = self
+            .layout
+            .entry(name)
+            .with_context(|| format!("flat plane has no window {name:?}"))?;
+        if data.len() != e.len {
+            bail!(
+                "window {name:?}: got {} elems, layout wants {}",
+                data.len(),
+                e.len
+            );
+        }
+        self.data[e.range()].copy_from_slice(data);
+        Ok(())
     }
 
     /// The window of one named tensor.
@@ -360,6 +404,32 @@ mod tests {
         let from_spec = FlatLayout::from_spec(&spec, "grads.");
         let from_map = FlatLayout::from_map(&ragged_map(), "grads.");
         assert!(from_spec.same_plane(&from_map));
+    }
+
+    #[test]
+    fn window_addressing_and_write_window() {
+        let m = ragged_map();
+        let l = Arc::new(FlatLayout::from_map(&m, "grads."));
+        // element + byte ranges line up with the packed offsets
+        assert_eq!(l.window_range("grads.w1"), Some(1..5));
+        assert_eq!(l.entry("grads.w1").unwrap().byte_range(), 4..20);
+        assert_eq!(l.total_bytes(), l.total_len() * 4);
+        assert_eq!(
+            l.names().collect::<Vec<_>>(),
+            vec!["grads.b", "grads.w1", "grads.w2"]
+        );
+        // assemble a plane window-by-window and match a direct gather
+        let full = FlatBuffer::gather(l.clone(), &m).unwrap();
+        let mut assembled = FlatBuffer::zeros(l.clone());
+        for name in ["grads.w2", "grads.b", "grads.w1"] {
+            assembled
+                .write_window(name, full.view(name).unwrap())
+                .unwrap();
+        }
+        assert_eq!(assembled.data(), full.data());
+        // wrong length and unknown window are rejected
+        assert!(assembled.write_window("grads.b", &[1.0, 2.0]).is_err());
+        assert!(assembled.write_window("grads.nope", &[1.0]).is_err());
     }
 
     #[test]

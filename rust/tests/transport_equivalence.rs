@@ -1,0 +1,262 @@
+//! Transport equivalence: the checkpoint exchange is a pluggable medium,
+//! so the same orchestrated run (fixed seed, deterministic members) must
+//! produce identical results whether checkpoints move through the
+//! in-process store, CKPT0002 files in a shared spool directory, or the
+//! socket wire protocol — including the sharded (windowed) socket fetch.
+//!
+//! The members here are mocks whose dynamics *depend on the teacher
+//! parameter values* (not just their steps), so any transport that
+//! corrupted, reordered, or re-rounded a single plane byte would diverge
+//! the eval curves.
+
+use codistill::codistill::transport::spool::spool_file_name;
+use codistill::codistill::{
+    Checkpoint, DistillSchedule, EvalStats, ExchangeTransport, InProcess, LrSchedule, Member,
+    Orchestrator, OrchestratorConfig, RunLog, SocketServer, SocketTransport, SpoolDir, StepStats,
+    Topology,
+};
+use codistill::runtime::{Tensor, TensorMap};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const W: usize = 4;
+
+/// Deterministic member: parameters drift by an id/step-dependent pattern
+/// and are pulled toward the mean of the *installed teachers' values*.
+struct PullMember {
+    id: usize,
+    step: u64,
+    params: TensorMap,
+    teacher_mean: Option<Vec<f32>>,
+}
+
+impl PullMember {
+    fn new(id: usize) -> Self {
+        let init: Vec<f32> = (0..W).map(|k| (id as f32) + 0.25 * k as f32).collect();
+        let mut params = TensorMap::new();
+        params.insert("params.w", Tensor::f32(&[W], init).unwrap());
+        PullMember {
+            id,
+            step: 0,
+            params,
+            teacher_mean: None,
+        }
+    }
+
+    fn w(&self) -> Vec<f32> {
+        self.params
+            .get("params.w")
+            .unwrap()
+            .as_f32()
+            .unwrap()
+            .to_vec()
+    }
+}
+
+impl Member for PullMember {
+    fn train_step(&mut self, distill_w: f32, lr: f32) -> anyhow::Result<StepStats> {
+        let drift = ((self.step + self.id as u64) % 7) as f32 * 0.125 - 0.375;
+        let teacher = self.teacher_mean.clone();
+        let w = self.params.get_mut("params.w")?.as_f32_mut()?;
+        let mut distill_loss = 0.0f32;
+        for (k, v) in w.iter_mut().enumerate() {
+            *v += lr * drift * (1.0 + 0.5 * k as f32);
+            if distill_w > 0.0 {
+                if let Some(t) = &teacher {
+                    let pull = t[k] - *v;
+                    *v += distill_w * lr * pull;
+                    distill_loss += pull * pull;
+                }
+            }
+        }
+        self.step += 1;
+        let loss = w.iter().map(|v| v.abs()).sum::<f32>() / W as f32;
+        Ok(StepStats {
+            step: self.step,
+            loss,
+            distill_loss,
+        })
+    }
+
+    fn snapshot(&self) -> anyhow::Result<Checkpoint> {
+        Ok(Checkpoint::new(self.id, self.step, self.params.clone()))
+    }
+
+    fn set_teachers(&mut self, peers: Vec<Arc<Checkpoint>>) -> anyhow::Result<()> {
+        let mut mean = vec![0.0f32; W];
+        for p in &peers {
+            let w = p.flat().view("params.w")?;
+            for (m, v) in mean.iter_mut().zip(w) {
+                *m += *v;
+            }
+        }
+        for m in &mut mean {
+            *m /= peers.len() as f32;
+        }
+        self.teacher_mean = Some(mean);
+        Ok(())
+    }
+
+    fn evaluate(&mut self) -> anyhow::Result<EvalStats> {
+        let loss = self.w().iter().map(|v| v.abs() as f64).sum::<f64>();
+        Ok(EvalStats {
+            loss,
+            accuracy: None,
+        })
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.step
+    }
+
+    fn params(&self) -> &TensorMap {
+        &self.params
+    }
+}
+
+fn cfg() -> OrchestratorConfig {
+    OrchestratorConfig {
+        total_steps: 40,
+        reload_interval: 10,
+        extra_staleness: 0,
+        eval_every: 10,
+        distill: DistillSchedule::new(5, 5, 1.0),
+        lr: LrSchedule::Constant(0.25),
+        topology: Topology::FullyConnected,
+        cluster: None,
+        seed: 3,
+        verbose: false,
+    }
+}
+
+fn run_over(transport: Arc<dyn ExchangeTransport>) -> RunLog {
+    let mut members: Vec<Box<dyn Member>> = (0..3)
+        .map(|i| Box::new(PullMember::new(i)) as Box<dyn Member>)
+        .collect();
+    Orchestrator::with_transport(cfg(), transport)
+        .run(&mut members)
+        .unwrap()
+}
+
+fn tdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("codistill_eqv_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+/// Exact equality of everything a RunLog records about the exchange.
+fn assert_logs_identical(tag: &str, a: &RunLog, b: &RunLog) {
+    assert_eq!(a.staleness, b.staleness, "{tag}: staleness diverged");
+    assert_eq!(a.eval.len(), b.eval.len(), "{tag}");
+    for (i, (ca, cb)) in a.eval.iter().zip(&b.eval).enumerate() {
+        assert_eq!(ca.len(), cb.len(), "{tag}: member {i} curve length");
+        for (pa, pb) in ca.iter().zip(cb) {
+            assert_eq!(pa.step, pb.step, "{tag}: member {i}");
+            assert_eq!(pa.loss, pb.loss, "{tag}: member {i} step {}", pa.step);
+        }
+    }
+    assert_eq!(a.train.len(), b.train.len(), "{tag}");
+    for (ta, tb) in a.train.iter().zip(&b.train) {
+        assert_eq!(ta, tb, "{tag}: train records diverged");
+    }
+}
+
+#[test]
+fn same_run_identical_over_all_transports() {
+    let reference = run_over(Arc::new(InProcess::new(8)));
+    assert!(
+        !reference.staleness.is_empty(),
+        "fixture never exchanged teachers"
+    );
+
+    // spool directory (fresh tempdir)
+    let dir = tdir("spool");
+    let spool = run_over(Arc::new(SpoolDir::open(&dir, 8).unwrap()));
+    assert_logs_identical("spool", &reference, &spool);
+    std::fs::remove_dir_all(&dir).ok();
+
+    // socket, full-plane fetches
+    let server = SocketServer::bind_tcp("127.0.0.1:0", 8).unwrap();
+    let socket = run_over(Arc::new(SocketTransport::connect_tcp(server.addr())));
+    assert_logs_identical("socket", &reference, &socket);
+    drop(server);
+
+    // socket, sharded: reloads reassemble the plane window by window
+    let server = SocketServer::bind_tcp("127.0.0.1:0", 8).unwrap();
+    let windowed = run_over(Arc::new(
+        SocketTransport::connect_tcp(server.addr()).with_windowed_fetch(1),
+    ));
+    assert_logs_identical("socket-windowed", &reference, &windowed);
+}
+
+#[test]
+fn spool_two_endpoints_byte_identical_to_inproc() {
+    // Two SpoolDir handles on one directory model two coordinator
+    // processes: A publishes, B reads, and the bytes B sees must equal
+    // what an in-process exchange of the same checkpoint yields.
+    let dir = tdir("two_endpoints");
+    let a = SpoolDir::open(&dir, 4).unwrap();
+    let b = SpoolDir::open(&dir, 4).unwrap();
+    let inproc = InProcess::new(4);
+
+    let member = PullMember::new(1);
+    let ck = member.snapshot().unwrap();
+    inproc.publish(ck.clone()).unwrap();
+    a.publish(ck).unwrap();
+
+    let via_spool = b.latest(1).unwrap().unwrap();
+    let via_mem = InProcess::latest(&inproc, 1).unwrap();
+    assert_eq!(via_spool.step, via_mem.step);
+    assert_eq!(
+        via_spool.flat().data(),
+        via_mem.flat().data(),
+        "spool roundtrip changed plane bytes"
+    );
+    assert!(via_spool
+        .flat()
+        .layout()
+        .same_plane(via_mem.flat().layout()));
+
+    // the windowed pread path is byte-identical too
+    let fetch = b
+        .fetch_windows(1, u64::MAX, &["params.w".to_string()])
+        .unwrap()
+        .unwrap();
+    assert_eq!(fetch.windows[0].data, via_mem.flat().view("params.w").unwrap());
+
+    // and the on-disk artifact is the canonical zero-padded CKPT0002 file
+    assert!(dir.join(spool_file_name(1, 0)).exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn socket_windowed_fetch_byte_identical_to_inproc() {
+    let inproc = InProcess::new(4);
+    let member = PullMember::new(2);
+    let ck = member.snapshot().unwrap();
+    inproc.publish(ck.clone()).unwrap();
+
+    let server = SocketServer::bind_tcp("127.0.0.1:0", 4).unwrap();
+    let publisher = SocketTransport::connect_tcp(server.addr());
+    publisher.publish(ck).unwrap();
+
+    let reader = SocketTransport::connect_tcp(server.addr()).with_windowed_fetch(1);
+    let via_socket = reader.latest(2).unwrap().unwrap();
+    let via_mem = InProcess::latest(&inproc, 2).unwrap();
+    assert_eq!(
+        via_socket.flat().data(),
+        via_mem.flat().data(),
+        "windowed socket reassembly changed plane bytes"
+    );
+    assert!(via_socket
+        .flat()
+        .layout()
+        .same_plane(via_mem.flat().layout()));
+
+    let fetch = reader
+        .fetch_windows(2, u64::MAX, &["params.w".to_string()])
+        .unwrap()
+        .unwrap();
+    assert_eq!(fetch.windows[0].data, via_mem.flat().view("params.w").unwrap());
+    assert_eq!(fetch.payload_bytes(), (W * 4) as u64);
+}
