@@ -1,7 +1,7 @@
 # Build/test/bench entry points. The Rust workspace lives in rust/ and
 # builds fully offline (vendored deps; see rust/Cargo.toml).
 
-.PHONY: build test check bench artifacts python-tests clean
+.PHONY: build test check test-faults bench artifacts python-tests clean
 
 build:
 	cd rust && cargo build --release
@@ -21,8 +21,18 @@ check:
 	else echo "make check: clippy unavailable, skipping lints"; fi
 	cd rust && cargo test -q
 
+# Deterministic fault-injection matrix: the coordinator over
+# Faulty-wrapped transports (delayed publishes, dropped/erroring fetches,
+# stale reads, blackouts, mid-run joins) under a pinned seed list. Same
+# seeds => byte-identical fault and staleness logs.
+test-faults:
+	cd rust && CODISTILL_FAULT_SEEDS="11 23 47" cargo test --test coordinator_faults -q
+
 # Hot-path microbenchmarks. Writes the human table to stdout and the
 # machine-readable trajectory to BENCH_hotpath.json at the repo root.
+# Includes the concurrent-vs-serial socket fetch rows
+# (sections.socket_concurrency) that track the thread-per-connection
+# server upgrade.
 bench:
 	cd rust && cargo bench --bench perf_hotpath -- json=../BENCH_hotpath.json
 

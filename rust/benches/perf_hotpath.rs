@@ -344,6 +344,54 @@ fn main() {
         std::fs::remove_dir_all(&spool_dir).ok();
     }
 
+    // ---- concurrent vs serial socket fetches: N clients pulling the
+    // same ~4MB plane one-after-another vs all at once. With the
+    // thread-per-connection server the concurrent wall time approaches
+    // the slowest single fetch; the old serial-accept server made it the
+    // sum.
+    let sock_concurrency = {
+        let server =
+            SocketServer::bind_tcp("127.0.0.1:0", 4).expect("binding concurrency bench server");
+        let seeder = SocketTransport::connect_tcp(server.addr());
+        seeder
+            .publish(Checkpoint::from_flat(0, 1, plane.clone(), TensorMap::new()))
+            .unwrap();
+        let clients = 4usize;
+        let t_serial = time_n(3, || {
+            for _ in 0..clients {
+                SocketTransport::connect_tcp(server.addr())
+                    .latest(0)
+                    .unwrap()
+                    .unwrap();
+            }
+        });
+        let t_concurrent = time_n(3, || {
+            let addr = server.addr().to_string();
+            let handles: Vec<_> = (0..clients)
+                .map(|_| {
+                    let addr = addr.clone();
+                    std::thread::spawn(move || {
+                        SocketTransport::connect_tcp(&addr).latest(0).unwrap().unwrap();
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        println!(
+            "socket fetch x{clients}:     serial {:>7.2} ms, concurrent {:>7.2} ms ({:.2}x)",
+            t_serial * 1e3,
+            t_concurrent * 1e3,
+            t_serial / t_concurrent
+        );
+        format!(
+            "{{\"clients\": {clients}, \"serial_fetch_ms\": {}, \"concurrent_fetch_ms\": {}}}",
+            ms(Some(t_serial)),
+            ms(Some(t_concurrent))
+        )
+    };
+
     // ---- tensor <-> literal boundary.
     let big = Tensor::f32(&[1_048_576], vec![1.0; 1_048_576]).unwrap();
     let t_lit = time_n(50, || {
@@ -365,6 +413,7 @@ fn main() {
          \"ckpt_save_ms\": {},\n    \
          \"ckpt_load_ms\": {},\n    \
          \"transport\": [\n      {}\n    ],\n    \
+         \"socket_concurrency\": {},\n    \
          \"to_literal_ms\": {}\n  }}\n}}\n",
         ms(art.train_step),
         ms(art.teacher_predict),
@@ -377,6 +426,7 @@ fn main() {
         ms(Some(t_save)),
         ms(Some(t_load)),
         transport_rows.join(",\n      "),
+        sock_concurrency,
         ms(Some(t_lit)),
     );
     std::fs::write(&json_path, &json).unwrap();

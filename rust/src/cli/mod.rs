@@ -6,7 +6,17 @@
 //!
 //! commands:
 //!   train       single-member LM baseline training
-//!   codistill   n-way codistillation on the LM
+//!   codistill   n-way codistillation on the LM (lockstep orchestrator)
+//!   coordinate  n-way codistillation through the multi-process
+//!               coordinator: global ids member_base..member_base+members
+//!               (disjoint member_base per process sharing an exchange),
+//!               per-member publish cadences (publish_intervals=50,60 /
+//!               publish_offsets=0,7), mid-run joins
+//!               (join_delays=0,0,150), publish-recency liveness
+//!               (liveness_grace=N), and deterministic fault injection
+//!               (fault_seed=N, fault_delay_p/fault_drop_p/
+//!               fault_error_p/fault_stale_p=P,
+//!               fault_blackout=member:from:until[,...])
 //!   figures     run every experiment (fig1a/1b, fig2a/2b, fig3, fig4,
 //!               table1, sec341) and write results/*.csv
 //!   fig1|fig2|fig3|fig4|table1|sec341   run one experiment
@@ -14,10 +24,12 @@
 //! ```
 //!
 //! `--transport` picks the checkpoint-exchange backend for `codistill`
-//! (see `codistill::transport`): `spool` exchanges through
-//! `spool_dir=PATH` (shared with other processes), `socket` connects to
-//! `socket_addr=HOST:PORT|unix:PATH` (or serves one in-process when
-//! unset); `socket_windows=N` shards teacher reloads N windows per fetch.
+//! and `coordinate` (see `codistill::transport`): `spool` exchanges
+//! through `spool_dir=PATH` (shared with other processes), `socket`
+//! connects to `socket_addr=HOST:PORT|unix:PATH` (or serves one
+//! in-process when unset); `socket_windows=N` shards teacher reloads N
+//! windows per fetch. Point several `coordinate` processes at one spool
+//! directory or socket server for a true multi-process run.
 
 use crate::config::Settings;
 use anyhow::{bail, Context, Result};
@@ -83,7 +95,7 @@ fn settings_dump(_s: &Settings) -> Vec<String> {
 }
 
 pub fn usage() -> String {
-    "usage: codistill <train|codistill|figures|fig1|fig2|fig3|fig4|table1|sec341|inspect> \
+    "usage: codistill <train|codistill|coordinate|figures|fig1|fig2|fig3|fig4|table1|sec341|inspect> \
      [--transport inproc|spool|socket] [--set key=value]... [--config FILE] [--verbose]"
         .to_string()
 }
@@ -106,6 +118,7 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
     match cli.command.as_str() {
         "train" => crate::experiments::common::cmd_train(s),
         "codistill" => crate::experiments::common::cmd_codistill(s),
+        "coordinate" => crate::experiments::common::cmd_coordinate(s),
         "inspect" => crate::experiments::common::cmd_inspect(s),
         "fig1" => crate::experiments::fig1::run(s).map(|_| ()),
         "fig2" => crate::experiments::fig2::run(s).map(|_| ()),

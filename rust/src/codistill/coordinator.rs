@@ -1,0 +1,601 @@
+//! Process-local coordinator: the §2.2 fault-tolerance story as a
+//! first-class runner.
+//!
+//! [`Orchestrator::run`](crate::codistill::Orchestrator) drives every
+//! member of a run in one lockstep loop over one transport handle — fine
+//! for the paper's algorithmic figures, but none of the §2.2 scenarios
+//! (stale teachers, slow or dead peers, members joining mid-run) can even
+//! occur in it. A [`Coordinator`] instead hosts a *subset* of members in
+//! this process (or thread) against a shared
+//! [`ExchangeTransport`], with:
+//!
+//! * **No global lockstep.** Every hosted member advances on its own
+//!   local step counter; several coordinators (one per OS process or
+//!   thread) share one spool/socket exchange and never synchronize
+//!   beyond the checkpoints themselves.
+//! * **A liveness table** ([`LivenessTable`]) derived purely from publish
+//!   recency: [`ExchangeTransport::last_steps`] heartbeats are polled on
+//!   the reload cadence, and a peer whose freshest published step stops
+//!   advancing for [`CoordinatorConfig::liveness_grace`] ticks is treated
+//!   as dead — dropped from teacher sets instead of stalling the run.
+//! * **Mid-run join.** A [`HostedMember`] with `join_delay > 0` sits out
+//!   that many coordinator ticks, then bootstraps its parameters from the
+//!   freshest peer checkpoint ([`Member::bootstrap`]) and enters the
+//!   distillation ramp *at its own local step* — burn-in and ramp are
+//!   member-local, exactly like a worker replacing a dead one in §2.2.
+//! * **Publish-cadence skew.** Each hosted member has its own
+//!   `publish_interval`/`publish_offset`, so exchanges are asynchronous
+//!   by construction rather than by accident.
+//! * **Fault-tolerant exchange calls.** Every transport operation is
+//!   tolerated: a failed publish or teacher fetch is logged
+//!   ([`CoordinatorLog::exchange_errors`], `skipped_teachers`) and the
+//!   member trains on with whatever teachers it has — the delay-tolerance
+//!   argument of §2.1 made executable. Only member-local compute errors
+//!   abort a run.
+//!
+//! Pair a coordinator with a
+//! [`Faulty`](crate::codistill::transport::Faulty)-wrapped transport and
+//! every failure mode becomes a deterministic test scenario
+//! (`tests/coordinator_faults.rs`); with a spool/socket transport and one
+//! coordinator per process it is the ROADMAP's "true multi-process
+//! orchestration".
+
+use crate::codistill::orchestrator::EvalPoint;
+use crate::codistill::schedule::{DistillSchedule, LrSchedule};
+use crate::codistill::topology::Topology;
+use crate::codistill::transport::ExchangeTransport;
+use crate::codistill::Member;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+/// Coordinator parameters. Schedules apply to member-*local* steps.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Local steps each hosted member runs.
+    pub total_steps: u64,
+    /// Teacher reload cadence, in local steps.
+    pub reload_interval: u64,
+    pub eval_every: u64,
+    pub distill: DistillSchedule,
+    pub lr: LrSchedule,
+    pub topology: Topology,
+    /// Ticks a peer's freshest published step may stand still before the
+    /// peer is considered dead (dropped from teacher sets). Should cover
+    /// at least one publish interval plus one reload interval.
+    pub liveness_grace: u64,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            total_steps: 400,
+            reload_interval: 50,
+            eval_every: 25,
+            distill: DistillSchedule::new(100, 50, 1.0),
+            lr: LrSchedule::Constant(0.1),
+            topology: Topology::FullyConnected,
+            liveness_grace: 120,
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// One member hosted by this coordinator: a global id, the member itself,
+/// and its local publish cadence / join schedule.
+pub struct HostedMember {
+    /// Global member id (unique across every coordinator on the exchange).
+    pub id: usize,
+    pub member: Box<dyn Member>,
+    /// Publish every this many local steps (cadence skew: members need
+    /// not agree).
+    pub publish_interval: u64,
+    /// Phase offset of the publish cadence, in local steps.
+    pub publish_offset: u64,
+    /// Coordinator ticks to sit out before joining the run (0 = from the
+    /// start). A late joiner bootstraps from the freshest peer checkpoint.
+    pub join_delay: u64,
+}
+
+impl HostedMember {
+    /// Host `member` as global `id` with the default cadence (publish
+    /// every `reload_interval` steps, no skew, joins at the start).
+    pub fn new(id: usize, member: Box<dyn Member>, publish_interval: u64) -> Self {
+        HostedMember {
+            id,
+            member,
+            publish_interval: publish_interval.max(1),
+            publish_offset: 0,
+            join_delay: 0,
+        }
+    }
+
+    pub fn with_offset(mut self, offset: u64) -> Self {
+        self.publish_offset = offset;
+        self
+    }
+
+    pub fn with_join_delay(mut self, ticks: u64) -> Self {
+        self.join_delay = ticks;
+        self
+    }
+}
+
+/// Publish-recency liveness: a member is live while its freshest
+/// published step keeps advancing. Built from
+/// [`ExchangeTransport::last_steps`] heartbeats; no side channel exists —
+/// exactly the information any peer on the exchange can observe.
+#[derive(Debug, Default)]
+pub struct LivenessTable {
+    /// member -> (freshest published step, tick when it last advanced).
+    seen: HashMap<usize, (u64, u64)>,
+}
+
+impl LivenessTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one round of heartbeats observed at `now` into the table.
+    pub fn observe(&mut self, now: u64, heartbeats: &[(usize, u64)]) {
+        for &(member, step) in heartbeats {
+            match self.seen.get_mut(&member) {
+                Some((last_step, last_advance)) => {
+                    if step > *last_step {
+                        *last_step = step;
+                        *last_advance = now;
+                    }
+                }
+                None => {
+                    self.seen.insert(member, (step, now));
+                }
+            }
+        }
+    }
+
+    /// Freshest published step this table has observed for a member.
+    pub fn last_published(&self, member: usize) -> Option<u64> {
+        self.seen.get(&member).map(|&(s, _)| s)
+    }
+
+    /// Whether a member's publications were still advancing within
+    /// `grace` ticks of `now`. Unknown members are not live.
+    pub fn is_live(&self, member: usize, now: u64, grace: u64) -> bool {
+        self.seen
+            .get(&member)
+            .map(|&(_, advanced)| now.saturating_sub(advanced) <= grace)
+            .unwrap_or(false)
+    }
+
+    /// Every member ever observed, ascending.
+    pub fn members(&self) -> Vec<usize> {
+        let mut m: Vec<usize> = self.seen.keys().copied().collect();
+        m.sort();
+        m
+    }
+
+    /// Members live at `now`, ascending.
+    pub fn live_members(&self, now: u64, grace: u64) -> Vec<usize> {
+        let mut m: Vec<usize> = self
+            .seen
+            .iter()
+            .filter(|(_, &(_, advanced))| now.saturating_sub(advanced) <= grace)
+            .map(|(&id, _)| id)
+            .collect();
+        m.sort();
+        m
+    }
+}
+
+/// Teacher ids for `self_id` under `topology`, over the *live* member set
+/// (dead peers are simply absent — the ring closes over survivors).
+pub fn teachers_from_live(topology: Topology, self_id: usize, live: &[usize]) -> Vec<usize> {
+    match topology {
+        Topology::FullyConnected => live.iter().copied().filter(|&j| j != self_id).collect(),
+        Topology::Ring => {
+            let mut all: Vec<usize> = live.to_vec();
+            if !all.contains(&self_id) {
+                all.push(self_id);
+                all.sort();
+            }
+            let idx = all.iter().position(|&j| j == self_id).unwrap();
+            let next = all[(idx + 1) % all.len()];
+            if next == self_id {
+                vec![]
+            } else {
+                vec![next]
+            }
+        }
+        Topology::Pair => {
+            let partner = self_id ^ 1;
+            if partner != self_id && live.contains(&partner) {
+                vec![partner]
+            } else {
+                vec![]
+            }
+        }
+    }
+}
+
+/// One member's mid-run join, and where it bootstrapped from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JoinRecord {
+    pub tick: u64,
+    pub member: usize,
+    /// `(peer, peer step)` whose checkpoint seeded the joiner; `None`
+    /// when no peer checkpoint was fetchable (cold start).
+    pub bootstrapped_from: Option<(usize, u64)>,
+}
+
+/// Full record of one coordinator's run.
+#[derive(Debug, Default)]
+pub struct CoordinatorLog {
+    /// Global ids of the hosted members, in hosted order.
+    pub ids: Vec<usize>,
+    /// Per-hosted-member validation curves (x = local step).
+    pub eval: Vec<Vec<EvalPoint>>,
+    /// (local step, member id, train loss, distill loss).
+    pub train: Vec<(u64, usize, f32, f32)>,
+    /// Observed teacher staleness at usage time: (local step, member id,
+    /// staleness in local steps) — the byte-comparable reproducibility
+    /// log (see [`CoordinatorLog::staleness_log_text`]).
+    pub staleness: Vec<(u64, usize, u64)>,
+    pub joins: Vec<JoinRecord>,
+    /// Teachers skipped at a reload: (local step, member id, teacher id).
+    pub skipped_teachers: Vec<(u64, usize, usize)>,
+    /// Tolerated exchange failures: (tick, member id, error text).
+    pub exchange_errors: Vec<(u64, usize, String)>,
+}
+
+impl CoordinatorLog {
+    /// Mean final validation loss over hosted members with eval points.
+    pub fn final_mean_loss(&self) -> Option<f64> {
+        let finals: Vec<f64> = self
+            .eval
+            .iter()
+            .filter_map(|curve| curve.last().map(|p| p.loss))
+            .collect();
+        if finals.is_empty() {
+            None
+        } else {
+            Some(finals.iter().sum::<f64>() / finals.len() as f64)
+        }
+    }
+
+    /// Final validation loss of one hosted member by global id.
+    pub fn final_loss_of(&self, id: usize) -> Option<f64> {
+        let idx = self.ids.iter().position(|&i| i == id)?;
+        self.eval[idx].last().map(|p| p.loss)
+    }
+
+    /// Canonical staleness log: one `step member staleness` line per
+    /// sample. Two runs with the same seed, schedule, and fault plan must
+    /// produce byte-identical text.
+    pub fn staleness_log_text(&self) -> String {
+        let mut out = String::new();
+        for &(step, member, staleness) in &self.staleness {
+            let _ = writeln!(out, "{step} {member} {staleness}");
+        }
+        out
+    }
+}
+
+/// Per-member progress the coordinator tracks between ticks.
+struct MemberState {
+    started: bool,
+    done: bool,
+    local_step: u64,
+    /// Freshest installed teacher checkpoint step, if any.
+    installed: Option<u64>,
+}
+
+/// State shared by every hosted member within one coordinator run: the
+/// liveness table persists across ticks; the per-tick flags coalesce
+/// heartbeat polls and gc so co-hosted members on the same cadence cost
+/// one transport round-trip, not one each.
+struct RunShared {
+    liveness: LivenessTable,
+    /// Heartbeats already polled this tick.
+    polled_this_tick: bool,
+    /// Some(member) when a publish this tick wants a gc afterwards.
+    gc_requested: Option<usize>,
+}
+
+/// Drives the hosted members of ONE process/thread against a shared
+/// exchange (see module docs). Multiple coordinators cooperate purely
+/// through the transport.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    transport: Arc<dyn ExchangeTransport>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig, transport: Arc<dyn ExchangeTransport>) -> Self {
+        Coordinator { cfg, transport }
+    }
+
+    pub fn transport(&self) -> &Arc<dyn ExchangeTransport> {
+        &self.transport
+    }
+
+    /// Run every hosted member to `total_steps` local steps. Exchange
+    /// failures are tolerated and logged; member compute failures abort.
+    pub fn run(&self, hosted: &mut [HostedMember]) -> Result<CoordinatorLog> {
+        let mut log = CoordinatorLog {
+            ids: hosted.iter().map(|h| h.id).collect(),
+            eval: vec![Vec::new(); hosted.len()],
+            ..Default::default()
+        };
+        let mut states: Vec<MemberState> = hosted
+            .iter()
+            .map(|_| MemberState {
+                started: false,
+                done: false,
+                local_step: 0,
+                installed: None,
+            })
+            .collect();
+        let mut shared = RunShared {
+            liveness: LivenessTable::new(),
+            polled_this_tick: false,
+            gc_requested: None,
+        };
+
+        let mut tick: u64 = 0;
+        loop {
+            let mut all_done = true;
+            shared.polled_this_tick = false;
+            shared.gc_requested = None;
+            for (idx, h) in hosted.iter_mut().enumerate() {
+                if states[idx].done {
+                    continue;
+                }
+                all_done = false;
+                if tick < h.join_delay {
+                    continue;
+                }
+                if !states[idx].started {
+                    states[idx].started = true;
+                    self.join_member(h, tick, &mut shared, &mut log)?;
+                }
+                self.drive_one_step(idx, h, &mut states[idx], tick, &mut shared, &mut log)?;
+            }
+            // One history-bound enforcement per tick, however many
+            // members published.
+            if let Some(id) = shared.gc_requested.take() {
+                if let Err(e) = self.transport.gc() {
+                    log.exchange_errors.push((tick, id, format!("{e:#}")));
+                }
+            }
+            if all_done {
+                break;
+            }
+            tick += 1;
+        }
+        Ok(log)
+    }
+
+    /// Start (or late-join) one member: bootstrap from the freshest peer
+    /// checkpoint when joining mid-run, then publish an initial snapshot
+    /// so peers can hear the newcomer.
+    fn join_member(
+        &self,
+        h: &mut HostedMember,
+        tick: u64,
+        shared: &mut RunShared,
+        log: &mut CoordinatorLog,
+    ) -> Result<()> {
+        let mut bootstrapped_from = None;
+        if h.join_delay > 0 {
+            // Freshest peer by heartbeat, payload fetched tolerantly.
+            match self.transport.last_steps() {
+                Ok(beats) => {
+                    shared.polled_this_tick = true;
+                    shared.liveness.observe(tick, &beats);
+                    let freshest = beats
+                        .iter()
+                        .filter(|&&(m, _)| m != h.id)
+                        .max_by_key(|&&(m, s)| (s, std::cmp::Reverse(m)))
+                        .copied();
+                    if let Some((peer, _)) = freshest {
+                        match self.transport.latest(peer) {
+                            Ok(Some(ck)) => {
+                                h.member
+                                    .bootstrap(&ck)
+                                    .with_context(|| format!("bootstrapping member {}", h.id))?;
+                                bootstrapped_from = Some((peer, ck.step));
+                            }
+                            Ok(None) => {}
+                            Err(e) => log.exchange_errors.push((tick, h.id, format!("{e:#}"))),
+                        }
+                    }
+                }
+                Err(e) => log.exchange_errors.push((tick, h.id, format!("{e:#}"))),
+            }
+            log.joins.push(JoinRecord {
+                tick,
+                member: h.id,
+                bootstrapped_from,
+            });
+            if self.cfg.verbose {
+                eprintln!(
+                    "[coord] tick {tick}: member {} joined (bootstrap: {bootstrapped_from:?})",
+                    h.id
+                );
+            }
+        }
+        // Initial publication (step = local step 0 for true joiners).
+        self.publish_member(h, 0, tick, log);
+        Ok(())
+    }
+
+    /// One local step of one hosted member: reload teachers on the
+    /// cadence, train, publish on the (skewed) cadence, evaluate.
+    fn drive_one_step(
+        &self,
+        idx: usize,
+        h: &mut HostedMember,
+        st: &mut MemberState,
+        tick: u64,
+        shared: &mut RunShared,
+        log: &mut CoordinatorLog,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+
+        if st.local_step % cfg.reload_interval == 0 {
+            self.reload_teachers(h, st, tick, shared, log)?;
+        }
+        if let Some(tstep) = st.installed {
+            log.staleness
+                .push((st.local_step, h.id, st.local_step.saturating_sub(tstep)));
+        }
+
+        let w = cfg.distill.weight_at(st.local_step);
+        let lr = cfg.lr.at(st.local_step);
+        let stats = h
+            .member
+            .train_step(w, lr)
+            .with_context(|| format!("member {} local step {}", h.id, st.local_step))?;
+        log.train
+            .push((st.local_step, h.id, stats.loss, stats.distill_loss));
+        st.local_step += 1;
+
+        if (st.local_step + h.publish_offset) % h.publish_interval == 0 {
+            self.publish_member(h, st.local_step, tick, log);
+            shared.gc_requested = Some(h.id);
+        }
+
+        if st.local_step % cfg.eval_every == 0 || st.local_step == cfg.total_steps {
+            let eval = h.member.evaluate()?;
+            log.eval[idx].push(EvalPoint {
+                step: st.local_step,
+                wall_s: 0.0,
+                loss: eval.loss,
+                accuracy: eval.accuracy,
+            });
+            if cfg.verbose {
+                eprintln!(
+                    "[coord] member {} local step {:>6} val_loss={:.4} w={w:.2}",
+                    h.id, st.local_step, eval.loss
+                );
+            }
+        }
+
+        if st.local_step >= cfg.total_steps {
+            st.done = true;
+        }
+        Ok(())
+    }
+
+    /// Refresh the liveness table and install the live teachers' freshest
+    /// checkpoints. Every failure is tolerated: a dead or faulty teacher
+    /// is skipped, and the member keeps its previously installed set.
+    fn reload_teachers(
+        &self,
+        h: &mut HostedMember,
+        st: &mut MemberState,
+        tick: u64,
+        shared: &mut RunShared,
+        log: &mut CoordinatorLog,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        // One heartbeat poll per tick, shared by every co-hosted member
+        // reloading on it.
+        if !shared.polled_this_tick {
+            shared.polled_this_tick = true;
+            match self.transport.last_steps() {
+                Ok(beats) => shared.liveness.observe(tick, &beats),
+                Err(e) => log.exchange_errors.push((tick, h.id, format!("{e:#}"))),
+            }
+        }
+        let live = shared.liveness.live_members(tick, cfg.liveness_grace);
+        let teacher_ids = teachers_from_live(cfg.topology, h.id, &live);
+        if teacher_ids.is_empty() {
+            return Ok(());
+        }
+        let mut peers = Vec::with_capacity(teacher_ids.len());
+        for j in teacher_ids {
+            match self.transport.latest(j) {
+                Ok(Some(ck)) => peers.push(ck),
+                Ok(None) => log.skipped_teachers.push((st.local_step, h.id, j)),
+                Err(e) => {
+                    log.skipped_teachers.push((st.local_step, h.id, j));
+                    log.exchange_errors.push((tick, h.id, format!("{e:#}")));
+                }
+            }
+        }
+        if peers.is_empty() {
+            // Nothing fetchable this round: train on with the old set.
+            return Ok(());
+        }
+        st.installed = peers.iter().map(|c| c.step).max();
+        h.member.set_teachers(peers)?;
+        Ok(())
+    }
+
+    /// Publish a member's snapshot, tolerating exchange failures.
+    fn publish_member(&self, h: &HostedMember, step: u64, tick: u64, log: &mut CoordinatorLog) {
+        let ck = match h.member.snapshot() {
+            Ok(mut ck) => {
+                ck.member = h.id;
+                ck.step = step;
+                ck
+            }
+            Err(e) => {
+                log.exchange_errors.push((tick, h.id, format!("{e:#}")));
+                return;
+            }
+        };
+        if let Err(e) = self.transport.publish(ck) {
+            log.exchange_errors.push((tick, h.id, format!("{e:#}")));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn liveness_tracks_publish_recency() {
+        let mut t = LivenessTable::new();
+        t.observe(0, &[(0, 10), (1, 10)]);
+        assert!(t.is_live(0, 5, 10));
+        assert!(!t.is_live(2, 5, 10), "never-seen member live");
+        // member 0 keeps advancing, member 1 goes silent
+        t.observe(20, &[(0, 30), (1, 10)]);
+        t.observe(40, &[(0, 50), (1, 10)]);
+        assert!(t.is_live(0, 45, 10));
+        assert!(!t.is_live(1, 45, 10), "silent member still live");
+        assert_eq!(t.live_members(45, 10), vec![0]);
+        assert_eq!(t.members(), vec![0, 1]);
+        assert_eq!(t.last_published(1), Some(10));
+        // the silent member publishes again: live again
+        t.observe(60, &[(1, 70)]);
+        assert!(t.is_live(1, 65, 10));
+    }
+
+    #[test]
+    fn teachers_from_live_adapts_to_deaths() {
+        use Topology::*;
+        // fully connected: everyone live except self
+        assert_eq!(teachers_from_live(FullyConnected, 1, &[0, 1, 2, 3]), vec![0, 2, 3]);
+        assert_eq!(teachers_from_live(FullyConnected, 1, &[1]), Vec::<usize>::new());
+        // ring closes over survivors
+        assert_eq!(teachers_from_live(Ring, 0, &[0, 1, 2]), vec![1]);
+        assert_eq!(teachers_from_live(Ring, 0, &[0, 2]), vec![2]);
+        assert_eq!(teachers_from_live(Ring, 2, &[0, 2]), vec![0]);
+        assert_eq!(teachers_from_live(Ring, 0, &[0]), Vec::<usize>::new());
+        // a ring member whose own publishes are blacked out still teaches
+        // from the next live peer
+        assert_eq!(teachers_from_live(Ring, 1, &[0, 2]), vec![2]);
+        // pairs only teach while the partner is live
+        assert_eq!(teachers_from_live(Pair, 0, &[0, 1]), vec![1]);
+        assert_eq!(teachers_from_live(Pair, 0, &[0, 2]), Vec::<usize>::new());
+        assert_eq!(teachers_from_live(Pair, 3, &[2, 3]), vec![2]);
+    }
+}

@@ -33,6 +33,18 @@
 //! run rides any medium; `codistill --transport {inproc,spool,socket}`
 //! selects one from the CLI.
 //!
+//! ## Orchestrator vs Coordinator
+//!
+//! [`Orchestrator`] is the paper's Algorithm 1 in lockstep: every member
+//! steps, reloads, and publishes together — right for the algorithmic
+//! figures. [`Coordinator`] is the §2.2 systems story: each coordinator
+//! (one per process or thread) hosts a *subset* of members with
+//! per-member publish cadences, a publish-recency [`LivenessTable`],
+//! mid-run joins ([`Member::bootstrap`]), and fault-tolerant exchange
+//! calls — run it over a [`transport::Faulty`]-wrapped backend to make
+//! every failure mode a deterministic test (`codistill coordinate` from
+//! the CLI; `tests/coordinator_faults.rs` in the suite).
+//!
 //! ### A two-process spool-dir exchange
 //!
 //! ```sh
@@ -47,19 +59,23 @@
 //! converge on the atomic `MANIFEST`; `gc` bounds the files each member
 //! keeps.
 
+pub mod coordinator;
 pub mod orchestrator;
 pub mod schedule;
 pub mod store;
 pub mod topology;
 pub mod transport;
 
+pub use coordinator::{
+    Coordinator, CoordinatorConfig, CoordinatorLog, HostedMember, JoinRecord, LivenessTable,
+};
 pub use orchestrator::{Orchestrator, OrchestratorConfig, RunLog};
 pub use schedule::{DistillSchedule, LrSchedule};
 pub use store::Checkpoint;
 pub use topology::Topology;
 pub use transport::{
-    ExchangeTransport, InProcess, SocketServer, SocketTransport, SpoolDir, TransportKind,
-    WindowedFetch,
+    ExchangeTransport, FaultPlan, Faulty, InProcess, SocketServer, SocketTransport, SpoolDir,
+    TransportKind, WindowedFetch,
 };
 
 /// The zero-copy in-process store under its historical name (it was the
@@ -103,6 +119,15 @@ pub trait Member {
     /// member averages the teachers' predictions when computing ψ
     /// (Algorithm 1's `1/(N-1) Σ_{j≠i}`).
     fn set_teachers(&mut self, peers: Vec<std::sync::Arc<Checkpoint>>) -> Result<()>;
+
+    /// Adopt a peer checkpoint's parameters as this member's own — the
+    /// §2.2 mid-run join: a member added to (or replaced in) a running
+    /// job seeds itself from the freshest available peer snapshot instead
+    /// of a cold init. Default: keep the cold init (snapshot ignored).
+    fn bootstrap(&mut self, ck: &Checkpoint) -> Result<()> {
+        let _ = ck;
+        Ok(())
+    }
 
     /// Evaluate on the member's validation stream.
     fn evaluate(&mut self) -> Result<EvalStats>;

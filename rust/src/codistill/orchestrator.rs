@@ -177,7 +177,10 @@ impl Orchestrator {
                             let bound = step.saturating_sub(cfg.extra_staleness);
                             match self.transport.latest_at_most(j, bound)? {
                                 some @ Some(_) => some,
-                                None => self.transport.latest_at_most(j, u64::MAX)?,
+                                // No checkpoint old enough (history pruned
+                                // past the bound): fall back to the paper's
+                                // freshest-available read.
+                                None => self.transport.latest(j)?,
                             }
                         } else {
                             self.transport.latest(j)?

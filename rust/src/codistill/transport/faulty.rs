@@ -1,0 +1,517 @@
+//! Deterministic fault injection for any checkpoint-exchange transport.
+//!
+//! The paper's §2.2 claim is that codistillation tolerates exactly the
+//! failures that break synchronous SGD: stale checkpoint propagation,
+//! slow or dead peers, members joining mid-run. None of those scenarios
+//! can be *tested* by hoping a real network misbehaves on cue, so
+//! [`Faulty`] wraps any [`ExchangeTransport`] and injects faults from a
+//! seeded, fully deterministic [`FaultPlan`]:
+//!
+//! * **Delayed publishes** — with probability `delay_publish_p` (decided
+//!   per `(member, step)`) a publication is held back and delivered just
+//!   before that member's *next* publish, so readers see one extra
+//!   cadence of staleness.
+//! * **Dropped / erroring fetches** — a read (`latest`, `latest_at_most`,
+//!   `fetch_windows`) returns `Ok(None)` or `Err` with probabilities
+//!   `drop_fetch_p` / `error_fetch_p`, decided per (member, read-op
+//!   counter).
+//! * **Stale-window reads** — with probability `stale_read_p` a read is
+//!   served the publication *before* the freshest one, modelling slow
+//!   checkpoint propagation.
+//! * **Member blackouts** — scripted `[from_step, until_step)` windows
+//!   during which every publication from a member is silently dropped:
+//!   the member trains on, but the exchange (and so every peer, and the
+//!   liveness table) stops hearing from it.
+//!
+//! Every decision is a pure function of `(seed, op kind, member, salt)`
+//! where the salt is the publish step or a per-member read counter — so a
+//! single-threaded run over a `Faulty` transport replays **byte-identical**
+//! fault sequences for a given seed, and `tests/coordinator_faults.rs`
+//! asserts convergence under each fault class as an ordinary `cargo test`.
+//!
+//! Metadata heartbeats ([`ExchangeTransport::last_steps`]) pass through
+//! un-faulted: faults target checkpoint *payload* movement, while a
+//! blackout is still observable through the heartbeat because the dropped
+//! publications never advance the member's published step.
+
+use crate::codistill::store::Checkpoint;
+use crate::codistill::transport::{ExchangeTransport, TransportKind, WindowedFetch};
+use crate::prng::Pcg64;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+
+/// One scripted blackout: publications from `member` with
+/// `from_step <= step < until_step` are dropped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Blackout {
+    pub member: usize,
+    pub from_step: u64,
+    pub until_step: u64,
+}
+
+impl Blackout {
+    fn covers(&self, member: usize, step: u64) -> bool {
+        member == self.member && step >= self.from_step && step < self.until_step
+    }
+}
+
+/// Seeded fault schedule (see module docs). All probabilities default to
+/// 0 and the blackout list to empty, so `FaultPlan::new(seed)` is a
+/// transparent plan until faults are switched on.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub delay_publish_p: f64,
+    pub drop_fetch_p: f64,
+    pub error_fetch_p: f64,
+    pub stale_read_p: f64,
+    pub blackouts: Vec<Blackout>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            delay_publish_p: 0.0,
+            drop_fetch_p: 0.0,
+            error_fetch_p: 0.0,
+            stale_read_p: 0.0,
+            blackouts: Vec::new(),
+        }
+    }
+
+    pub fn with_delayed_publishes(mut self, p: f64) -> Self {
+        self.delay_publish_p = p;
+        self
+    }
+
+    pub fn with_dropped_fetches(mut self, p: f64) -> Self {
+        self.drop_fetch_p = p;
+        self
+    }
+
+    pub fn with_erroring_fetches(mut self, p: f64) -> Self {
+        self.error_fetch_p = p;
+        self
+    }
+
+    pub fn with_stale_reads(mut self, p: f64) -> Self {
+        self.stale_read_p = p;
+        self
+    }
+
+    pub fn with_blackout(mut self, member: usize, from_step: u64, until_step: u64) -> Self {
+        self.blackouts.push(Blackout {
+            member,
+            from_step,
+            until_step,
+        });
+        self
+    }
+
+    /// Deterministic Bernoulli draw keyed on `(seed, kind, member, salt)`.
+    fn decide(&self, kind: u64, member: usize, salt: u64, p: f64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        if p >= 1.0 {
+            return true;
+        }
+        let stream = kind
+            .wrapping_mul(0x9e3779b97f4a7c15)
+            .wrapping_add((member as u64).wrapping_mul(0xbf58476d1ce4e5b9))
+            .wrapping_add(salt.wrapping_mul(0x94d049bb133111eb));
+        Pcg64::with_stream(self.seed, stream).bernoulli(p)
+    }
+
+    fn blackout_at(&self, member: usize, step: u64) -> bool {
+        self.blackouts.iter().any(|b| b.covers(member, step))
+    }
+}
+
+const KIND_DELAY: u64 = 1;
+const KIND_DROP: u64 = 2;
+const KIND_ERROR: u64 = 3;
+const KIND_STALE: u64 = 4;
+
+/// What [`Faulty`] did to one operation (the reproducibility log).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Publication held until the member's next publish.
+    DelayedPublish,
+    /// Publication silently dropped (scripted blackout).
+    BlackoutPublish,
+    /// Read answered `Ok(None)`.
+    DroppedFetch,
+    /// Read answered `Err`.
+    ErroredFetch,
+    /// Read served the publication before the freshest one.
+    StaleRead,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::DelayedPublish => "delayed-publish",
+            FaultKind::BlackoutPublish => "blackout-publish",
+            FaultKind::DroppedFetch => "dropped-fetch",
+            FaultKind::ErroredFetch => "errored-fetch",
+            FaultKind::StaleRead => "stale-read",
+        }
+    }
+}
+
+/// One injected fault: what happened, to which member, at which salt
+/// (publish step for publish faults, read-op counter for fetch faults).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub kind: FaultKind,
+    pub member: usize,
+    pub salt: u64,
+}
+
+/// Fault-injecting decorator over any exchange transport (see module
+/// docs). Construct with [`Faulty::wrap`]; share as
+/// `Arc<dyn ExchangeTransport>` like any other backend.
+pub struct Faulty {
+    inner: Arc<dyn ExchangeTransport>,
+    plan: FaultPlan,
+    /// Publications held by the delay fault, per member, in publish order.
+    delayed: Mutex<HashMap<usize, Vec<Checkpoint>>>,
+    /// Per-member read-operation counters (the fetch-fault salt).
+    read_ops: Mutex<HashMap<usize, u64>>,
+    log: Mutex<Vec<FaultEvent>>,
+}
+
+impl Faulty {
+    pub fn wrap(inner: Arc<dyn ExchangeTransport>, plan: FaultPlan) -> Self {
+        Faulty {
+            inner,
+            plan,
+            delayed: Mutex::new(HashMap::new()),
+            read_ops: Mutex::new(HashMap::new()),
+            log: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Every fault injected so far, in injection order.
+    pub fn fault_log(&self) -> Vec<FaultEvent> {
+        self.log.lock().unwrap().clone()
+    }
+
+    /// Canonical text rendering of the fault log (one `kind member salt`
+    /// line per event) — byte-comparable across runs of the same seed.
+    pub fn fault_log_text(&self) -> String {
+        let mut out = String::new();
+        for e in self.log.lock().unwrap().iter() {
+            let _ = writeln!(out, "{} {} {}", e.kind.name(), e.member, e.salt);
+        }
+        out
+    }
+
+    /// Deliver every held (delayed) publication to the inner transport.
+    /// Runs happily at end-of-run; the coordinator never calls it on the
+    /// exchange cadence, so a delayed publish really is late.
+    pub fn flush_delayed(&self) -> Result<()> {
+        let held: Vec<Checkpoint> = {
+            let mut delayed = self.delayed.lock().unwrap();
+            let mut all: Vec<Checkpoint> = delayed.drain().flat_map(|(_, v)| v).collect();
+            all.sort_by_key(|c| (c.member, c.step));
+            all
+        };
+        for ck in held {
+            self.inner.publish(ck)?;
+        }
+        Ok(())
+    }
+
+    fn record(&self, kind: FaultKind, member: usize, salt: u64) {
+        self.log.lock().unwrap().push(FaultEvent { kind, member, salt });
+    }
+
+    fn next_read_op(&self, member: usize) -> u64 {
+        let mut ops = self.read_ops.lock().unwrap();
+        let n = ops.entry(member).or_insert(0);
+        let salt = *n;
+        *n += 1;
+        salt
+    }
+
+    /// Apply the fetch fault classes shared by every read op. Returns the
+    /// read salt when the read should proceed; short-circuits with
+    /// `Err`/`Ok(None)` decisions via the returned enum.
+    fn read_gate(&self, member: usize) -> Result<ReadGate> {
+        let salt = self.next_read_op(member);
+        if self.plan.decide(KIND_ERROR, member, salt, self.plan.error_fetch_p) {
+            self.record(FaultKind::ErroredFetch, member, salt);
+            bail!("injected fetch error for member {member} (read op {salt})");
+        }
+        if self.plan.decide(KIND_DROP, member, salt, self.plan.drop_fetch_p) {
+            self.record(FaultKind::DroppedFetch, member, salt);
+            return Ok(ReadGate::Dropped);
+        }
+        let stale = self.plan.decide(KIND_STALE, member, salt, self.plan.stale_read_p);
+        Ok(ReadGate::Proceed { salt, stale })
+    }
+}
+
+enum ReadGate {
+    Dropped,
+    Proceed { salt: u64, stale: bool },
+}
+
+impl ExchangeTransport for Faulty {
+    fn kind(&self) -> TransportKind {
+        self.inner.kind()
+    }
+
+    fn publish(&self, ckpt: Checkpoint) -> Result<()> {
+        let member = ckpt.member;
+        let step = ckpt.step;
+        if self.plan.blackout_at(member, step) {
+            // The member believes it published; the exchange never hears.
+            self.record(FaultKind::BlackoutPublish, member, step);
+            return Ok(());
+        }
+        // Anything held from earlier delays lands first (step order is
+        // preserved: held steps precede the current one).
+        let held: Vec<Checkpoint> = self
+            .delayed
+            .lock()
+            .unwrap()
+            .remove(&member)
+            .unwrap_or_default();
+        for h in held {
+            self.inner.publish(h)?;
+        }
+        if self
+            .plan
+            .decide(KIND_DELAY, member, step, self.plan.delay_publish_p)
+        {
+            self.record(FaultKind::DelayedPublish, member, step);
+            self.delayed.lock().unwrap().entry(member).or_default().push(ckpt);
+            return Ok(());
+        }
+        self.inner.publish(ckpt)
+    }
+
+    fn latest(&self, member: usize) -> Result<Option<Arc<Checkpoint>>> {
+        self.latest_at_most(member, u64::MAX)
+    }
+
+    fn latest_at_most(&self, member: usize, max_step: u64) -> Result<Option<Arc<Checkpoint>>> {
+        let (salt, stale) = match self.read_gate(member)? {
+            ReadGate::Dropped => return Ok(None),
+            ReadGate::Proceed { salt, stale } => (salt, stale),
+        };
+        let fresh = self.inner.latest_at_most(member, max_step)?;
+        if !stale {
+            return Ok(fresh);
+        }
+        let fresh = match fresh {
+            Some(c) => c,
+            None => return Ok(None),
+        };
+        match self
+            .inner
+            .latest_at_most(member, fresh.step.saturating_sub(1))?
+        {
+            Some(older) => {
+                self.record(FaultKind::StaleRead, member, salt);
+                Ok(Some(older))
+            }
+            // Nothing older retained: the fault degrades to a clean read.
+            None => Ok(Some(fresh)),
+        }
+    }
+
+    fn fetch_windows(
+        &self,
+        member: usize,
+        max_step: u64,
+        names: &[String],
+    ) -> Result<Option<WindowedFetch>> {
+        let (salt, stale) = match self.read_gate(member)? {
+            ReadGate::Dropped => return Ok(None),
+            ReadGate::Proceed { salt, stale } => (salt, stale),
+        };
+        if stale {
+            // Cheap metadata probe for the freshest step, then bound the
+            // windowed read one publication behind it.
+            let fresh_step = self
+                .inner
+                .last_steps()?
+                .into_iter()
+                .find(|&(m, _)| m == member)
+                .map(|(_, s)| s);
+            if let Some(s) = fresh_step {
+                let bound = max_step.min(s.saturating_sub(1));
+                // Only a fault when the caller's own bound didn't already
+                // exclude the freshest publication — otherwise the read
+                // is identical to a clean one and logging it would skew
+                // the reproducibility log.
+                if bound < max_step {
+                    if let Some(f) = self.inner.fetch_windows(member, bound, names)? {
+                        self.record(FaultKind::StaleRead, member, salt);
+                        return Ok(Some(f));
+                    }
+                    // Nothing older retained: degrade to a clean read.
+                }
+            }
+        }
+        self.inner.fetch_windows(member, max_step, names)
+    }
+
+    fn members(&self) -> Result<Vec<usize>> {
+        self.inner.members()
+    }
+
+    fn last_steps(&self) -> Result<Vec<(usize, u64)>> {
+        // Heartbeats ride the metadata path un-faulted (module docs).
+        self.inner.last_steps()
+    }
+
+    fn gc(&self) -> Result<()> {
+        self.inner.gc()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codistill::transport::InProcess;
+    use crate::runtime::{Tensor, TensorMap};
+
+    fn ckpt(member: usize, step: u64, val: f32) -> Checkpoint {
+        let mut params = TensorMap::new();
+        params.insert("params.w", Tensor::f32(&[2], vec![val, val]).unwrap());
+        Checkpoint::new(member, step, params)
+    }
+
+    #[test]
+    fn transparent_plan_changes_nothing() {
+        let faulty = Faulty::wrap(Arc::new(InProcess::new(4)), FaultPlan::new(1));
+        faulty.publish(ckpt(0, 5, 1.0)).unwrap();
+        faulty.publish(ckpt(0, 9, 2.0)).unwrap();
+        assert_eq!(faulty.latest(0).unwrap().unwrap().step, 9);
+        assert_eq!(faulty.latest_at_most(0, 5).unwrap().unwrap().step, 5);
+        assert_eq!(faulty.members().unwrap(), vec![0]);
+        assert_eq!(faulty.last_steps().unwrap(), vec![(0, 9)]);
+        assert!(faulty.fault_log().is_empty());
+    }
+
+    #[test]
+    fn blackout_drops_publishes_in_window_only() {
+        let store = Arc::new(InProcess::new(8));
+        let faulty = Faulty::wrap(store.clone(), FaultPlan::new(2).with_blackout(1, 10, 20));
+        faulty.publish(ckpt(1, 5, 1.0)).unwrap();
+        faulty.publish(ckpt(1, 10, 2.0)).unwrap(); // dropped
+        faulty.publish(ckpt(1, 19, 3.0)).unwrap(); // dropped
+        faulty.publish(ckpt(1, 20, 4.0)).unwrap(); // lands
+        assert_eq!(store.latest(1).unwrap().step, 20);
+        assert!(InProcess::latest_at_most(&store, 1, 19).unwrap().step == 5);
+        let kinds: Vec<FaultKind> = faulty.fault_log().iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![FaultKind::BlackoutPublish, FaultKind::BlackoutPublish]
+        );
+        // heartbeat froze during the blackout window
+        assert_eq!(faulty.last_steps().unwrap(), vec![(1, 20)]);
+    }
+
+    #[test]
+    fn delayed_publish_lands_before_next_publish() {
+        let store = Arc::new(InProcess::new(8));
+        // p=1: every publish is delayed one cadence.
+        let faulty = Faulty::wrap(store.clone(), FaultPlan::new(3).with_delayed_publishes(1.0));
+        faulty.publish(ckpt(0, 10, 1.0)).unwrap();
+        assert!(store.latest(0).is_none(), "delayed publish leaked through");
+        faulty.publish(ckpt(0, 20, 2.0)).unwrap();
+        // the held step-10 checkpoint landed; step 20 is now held
+        assert_eq!(store.latest(0).unwrap().step, 10);
+        faulty.flush_delayed().unwrap();
+        assert_eq!(store.latest(0).unwrap().step, 20);
+    }
+
+    #[test]
+    fn stale_reads_serve_the_previous_publication() {
+        let store = Arc::new(InProcess::new(8));
+        let faulty = Faulty::wrap(store.clone(), FaultPlan::new(4).with_stale_reads(1.0));
+        faulty.publish(ckpt(0, 10, 1.0)).unwrap();
+        // only one publication retained: fault degrades to a clean read
+        assert_eq!(faulty.latest(0).unwrap().unwrap().step, 10);
+        faulty.publish(ckpt(0, 20, 2.0)).unwrap();
+        assert_eq!(faulty.latest(0).unwrap().unwrap().step, 10);
+        let f = faulty
+            .fetch_windows(0, u64::MAX, &["params.w".to_string()])
+            .unwrap()
+            .unwrap();
+        assert_eq!(f.step, 10);
+        assert!(faulty
+            .fault_log()
+            .iter()
+            .any(|e| e.kind == FaultKind::StaleRead));
+    }
+
+    #[test]
+    fn drop_and_error_fetch_rates_are_deterministic() {
+        let run = |seed: u64| -> (Vec<bool>, Vec<bool>) {
+            let faulty = Faulty::wrap(
+                Arc::new(InProcess::new(4)),
+                FaultPlan::new(seed)
+                    .with_dropped_fetches(0.4)
+                    .with_erroring_fetches(0.2),
+            );
+            faulty.publish(ckpt(0, 1, 1.0)).unwrap();
+            let mut dropped = Vec::new();
+            let mut errored = Vec::new();
+            for _ in 0..64 {
+                match faulty.latest(0) {
+                    Ok(Some(_)) => {
+                        dropped.push(false);
+                        errored.push(false);
+                    }
+                    Ok(None) => {
+                        dropped.push(true);
+                        errored.push(false);
+                    }
+                    Err(_) => {
+                        dropped.push(false);
+                        errored.push(true);
+                    }
+                }
+            }
+            (dropped, errored)
+        };
+        let (d1, e1) = run(7);
+        let (d2, e2) = run(7);
+        assert_eq!(d1, d2, "same seed must replay the same drops");
+        assert_eq!(e1, e2, "same seed must replay the same errors");
+        let drops = d1.iter().filter(|&&b| b).count();
+        let errs = e1.iter().filter(|&&b| b).count();
+        assert!(drops > 0 && drops < 64, "drop rate degenerate: {drops}/64");
+        assert!(errs > 0 && errs < 64, "error rate degenerate: {errs}/64");
+        let (d3, _) = run(8);
+        assert_ne!(d1, d3, "different seeds must differ");
+    }
+
+    #[test]
+    fn fault_log_text_is_canonical() {
+        let faulty = Faulty::wrap(
+            Arc::new(InProcess::new(4)),
+            FaultPlan::new(5).with_blackout(2, 0, 100),
+        );
+        faulty.publish(ckpt(2, 10, 1.0)).unwrap();
+        faulty.publish(ckpt(2, 20, 2.0)).unwrap();
+        assert_eq!(
+            faulty.fault_log_text(),
+            "blackout-publish 2 10\nblackout-publish 2 20\n"
+        );
+    }
+}

@@ -114,6 +114,18 @@ impl InProcess {
         m.sort();
         m
     }
+
+    /// `(member, freshest published step)` heartbeats, ascending by member
+    /// — one lock scan, no checkpoint payloads touched.
+    pub fn last_steps(&self) -> Vec<(usize, u64)> {
+        let inner = self.inner.lock().unwrap();
+        let mut out: Vec<(usize, u64)> = inner
+            .iter()
+            .filter_map(|(&m, h)| h.last().map(|c| (m, c.step)))
+            .collect();
+        out.sort();
+        out
+    }
 }
 
 impl ExchangeTransport for InProcess {
@@ -147,6 +159,10 @@ impl ExchangeTransport for InProcess {
 
     fn members(&self) -> Result<Vec<usize>> {
         Ok(InProcess::members(self))
+    }
+
+    fn last_steps(&self) -> Result<Vec<(usize, u64)>> {
+        Ok(InProcess::last_steps(self))
     }
 
     fn gc(&self) -> Result<()> {
@@ -217,6 +233,16 @@ mod tests {
         assert_eq!(store.latest(0).unwrap().step, 9);
         assert_eq!(store.latest_at_most(0, 8).unwrap().step, 8);
         assert!(store.latest_at_most(0, 7).is_none(), "old history retained");
+    }
+
+    #[test]
+    fn last_steps_reports_heartbeats() {
+        let store = InProcess::new(4);
+        assert!(store.last_steps().is_empty());
+        store.publish(ckpt(2, 7, 0.0)).unwrap();
+        store.publish(ckpt(0, 3, 0.0)).unwrap();
+        store.publish(ckpt(0, 9, 0.0)).unwrap();
+        assert_eq!(store.last_steps(), vec![(0, 9), (2, 7)]);
     }
 
     #[test]

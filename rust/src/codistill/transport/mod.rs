@@ -33,6 +33,22 @@
 //! own in-process store. `netsim::ClusterModel::sharded_exchange_time`
 //! prices exactly this path against the full-plane pull.
 //!
+//! ## Fault injection
+//!
+//! [`Faulty`] is a decorator over any backend: a seeded [`FaultPlan`]
+//! deterministically injects delayed publishes, dropped/erroring fetches,
+//! stale-window reads, and scripted member blackouts, so every §2.2
+//! failure mode is a reproducible `cargo test` scenario
+//! (`tests/coordinator_faults.rs`) instead of a hope about real networks.
+//!
+//! ## Liveness heartbeats
+//!
+//! [`ExchangeTransport::last_steps`] returns `(member, freshest step)`
+//! pairs without moving checkpoint payloads — an in-memory scan for
+//! [`InProcess`], a manifest parse for [`SpoolDir`], a dedicated opcode
+//! for the socket protocol. The coordinator's liveness table is built
+//! from these heartbeats.
+//!
 //! ## Garbage collection
 //!
 //! Every backend bounds its history to `history` publications per member;
@@ -40,10 +56,12 @@
 //! (spool files past the bound are deleted). The orchestrator calls it on
 //! the publish cadence.
 
+pub mod faulty;
 pub mod inproc;
 pub mod socket;
 pub mod spool;
 
+pub use faulty::{Blackout, FaultEvent, FaultKind, FaultPlan, Faulty};
 pub use inproc::InProcess;
 pub use socket::{SocketServer, SocketTransport};
 pub use spool::SpoolDir;
@@ -146,6 +164,22 @@ pub trait ExchangeTransport: Send + Sync {
 
     /// Members that have published at least once, ascending.
     fn members(&self) -> Result<Vec<usize>>;
+
+    /// `(member, freshest published step)` heartbeats for every member
+    /// that has published, ascending by member — the liveness probe the
+    /// coordinator polls on its reload cadence. Backends override this
+    /// with a metadata-only read (in-memory scan, manifest parse, a
+    /// dedicated wire opcode); the default pulls whole checkpoints and is
+    /// only acceptable for tests.
+    fn last_steps(&self) -> Result<Vec<(usize, u64)>> {
+        let mut out = Vec::new();
+        for m in self.members()? {
+            if let Some(c) = self.latest(m)? {
+                out.push((m, c.step));
+            }
+        }
+        Ok(out)
+    }
 
     /// Enforce the history bound on durable state (delete spool files /
     /// server history past the bound). In-memory history is already

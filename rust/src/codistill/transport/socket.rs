@@ -23,6 +23,22 @@
 //! | 4 `DESCRIBE` | member u64, max_step u64 | member, step, window table, residual tensors |
 //! | 5 `MEMBERS`  | — | n u64, member u64s |
 //! | 6 `GC`       | — | — |
+//! | 7 `STEPS`    | — | n u64, (member u64, step u64) pairs |
+//!
+//! `STEPS` is the liveness heartbeat: the freshest published step per
+//! member with no checkpoint payload attached, so a coordinator can poll
+//! it on every reload without moving planes.
+//!
+//! ## Concurrency
+//!
+//! The server is thread-per-connection behind a blocking accept: each
+//! accepted connection is served on its own worker thread (bounded by
+//! [`MAX_CONNECTIONS`]; further accepts wait for a free slot), so a slow
+//! or wedged client stalls only its own connection while other clients
+//! keep publishing and fetching. An idle server burns no CPU — the accept
+//! blocks in the kernel, and shutdown wakes it with a loopback connect
+//! instead of a poll loop. Request handling errors are isolated per
+//! connection: a malformed frame ends that connection, never the server.
 //!
 //! ## Sharded (windowed) fetch
 //!
@@ -61,6 +77,11 @@ const OP_FETCH: u8 = 3;
 const OP_DESCRIBE: u8 = 4;
 const OP_MEMBERS: u8 = 5;
 const OP_GC: u8 = 6;
+const OP_STEPS: u8 = 7;
+
+/// Bound on concurrently served connections: accepts past the cap wait
+/// for a worker slot to free instead of spawning unboundedly.
+pub const MAX_CONNECTIONS: usize = 64;
 
 const STATUS_OK: u8 = 0;
 const STATUS_NONE: u8 = 1;
@@ -168,12 +189,68 @@ impl Write for Conn {
     }
 }
 
-/// Serves an [`InProcess`] store over the wire protocol on a background
-/// thread. Dropping the server shuts the thread down.
+/// Counting semaphore over connection-worker slots (bounded accept pool).
+struct ConnPool {
+    active: std::sync::Mutex<usize>,
+    freed: std::sync::Condvar,
+}
+
+impl ConnPool {
+    fn new() -> Self {
+        ConnPool {
+            active: std::sync::Mutex::new(0),
+            freed: std::sync::Condvar::new(),
+        }
+    }
+
+    /// Block until a worker slot is free, then claim it; `None` once
+    /// shutdown is requested (a full pool must not wedge the accept
+    /// thread past shutdown — the loopback wakeup cannot reach a loop
+    /// that is waiting here, so the wait polls the flag). The returned
+    /// guard releases the slot on drop (worker exit — or the spawn
+    /// failing, which drops the closure holding the guard).
+    fn acquire(pool: &Arc<ConnPool>, shutdown: &AtomicBool) -> Option<ConnSlot> {
+        let mut n = pool.active.lock().unwrap();
+        while *n >= MAX_CONNECTIONS {
+            if shutdown.load(Ordering::SeqCst) {
+                return None;
+            }
+            let (guard, _timed_out) = pool
+                .freed
+                .wait_timeout(n, Duration::from_millis(100))
+                .unwrap();
+            n = guard;
+        }
+        *n += 1;
+        Some(ConnSlot(pool.clone()))
+    }
+
+    fn active(&self) -> usize {
+        *self.active.lock().unwrap()
+    }
+}
+
+struct ConnSlot(Arc<ConnPool>);
+
+impl Drop for ConnSlot {
+    fn drop(&mut self) {
+        let mut n = self.0.active.lock().unwrap();
+        *n -= 1;
+        drop(n);
+        self.0.freed.notify_one();
+    }
+}
+
+/// Serves an [`InProcess`] store over the wire protocol: a blocking
+/// accept loop on a background thread hands each connection to its own
+/// worker thread (see the module's Concurrency section). Dropping the
+/// server shuts the accept loop down; lingering connection workers exit
+/// at their next frame boundary (or read timeout).
 pub struct SocketServer {
     addr: String,
     store: Arc<InProcess>,
     shutdown: Arc<AtomicBool>,
+    pool: Arc<ConnPool>,
     handle: Option<std::thread::JoinHandle<()>>,
     /// Unix-socket path to unlink on shutdown.
     unlink: Option<PathBuf>,
@@ -212,20 +289,18 @@ impl SocketServer {
     ) -> Result<Self> {
         let store = Arc::new(InProcess::new(history));
         let shutdown = Arc::new(AtomicBool::new(false));
+        let pool = Arc::new(ConnPool::new());
         let thread_store = store.clone();
         let thread_shutdown = shutdown.clone();
-        match &listener {
-            Listener::Tcp(l) => l.set_nonblocking(true)?,
-            #[cfg(unix)]
-            Listener::Unix(l) => l.set_nonblocking(true)?,
-        }
+        let thread_pool = pool.clone();
         let handle = std::thread::Builder::new()
-            .name("ckpt-exchange-server".into())
-            .spawn(move || serve(listener, thread_store, thread_shutdown))?;
+            .name("ckpt-exchange-accept".into())
+            .spawn(move || accept_loop(listener, thread_store, thread_shutdown, thread_pool))?;
         Ok(SocketServer {
             addr,
             store,
             shutdown,
+            pool,
             handle: Some(handle),
             unlink,
         })
@@ -236,17 +311,39 @@ impl SocketServer {
         &self.addr
     }
 
+    /// Connections currently held by worker threads (observability for
+    /// the concurrency tests; racy by nature).
+    pub fn active_connections(&self) -> usize {
+        self.pool.active()
+    }
+
     /// The store behind the endpoint (the server process's own members
     /// can exchange through it zero-copy while remote members use the
     /// wire).
     pub fn store(&self) -> &Arc<InProcess> {
         &self.store
     }
+
+    /// Wake the blocking accept so it can observe the shutdown flag.
+    fn wake_accept(&self) {
+        match &self.unlink {
+            #[cfg(unix)]
+            Some(path) => {
+                UnixStream::connect(path).ok();
+            }
+            #[cfg(not(unix))]
+            Some(_) => {}
+            None => {
+                TcpStream::connect(&self.addr).ok();
+            }
+        }
+    }
 }
 
 impl Drop for SocketServer {
     fn drop(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
+        self.wake_accept();
         if let Some(h) = self.handle.take() {
             h.join().ok();
         }
@@ -256,40 +353,75 @@ impl Drop for SocketServer {
     }
 }
 
-fn serve(listener: Listener, store: Arc<InProcess>, shutdown: Arc<AtomicBool>) {
-    while !shutdown.load(Ordering::SeqCst) {
+/// Blocking accept loop: claim a worker slot (bounded pool), accept, hand
+/// the connection to a worker thread. No polling — an idle server sits in
+/// the kernel's accept until a client (or the shutdown wakeup) connects.
+fn accept_loop(
+    listener: Listener,
+    store: Arc<InProcess>,
+    shutdown: Arc<AtomicBool>,
+    pool: Arc<ConnPool>,
+) {
+    loop {
+        // Claim the slot before accepting so the pool bound also bounds
+        // accepted-but-unserved sockets.
+        let slot = match ConnPool::acquire(&pool, &shutdown) {
+            Some(slot) => slot,
+            None => return,
+        };
         let conn = match &listener {
             Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::Tcp(s)),
             #[cfg(unix)]
             Listener::Unix(l) => l.accept().map(|(s, _)| Conn::Unix(s)),
         };
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
         match conn {
-            Ok(mut conn) => {
-                // The accept loop polls nonblocking; each connection is
-                // served blocking (with a timeout so a wedged client
-                // cannot wedge the exchange).
-                let _ = match &mut conn {
-                    Conn::Tcp(s) => {
-                        s.set_nonblocking(false).ok();
-                        s.set_read_timeout(Some(READ_TIMEOUT)).ok()
-                    }
-                    #[cfg(unix)]
-                    Conn::Unix(s) => {
-                        s.set_nonblocking(false).ok();
-                        s.set_read_timeout(Some(READ_TIMEOUT)).ok()
-                    }
-                };
-                while let Ok(Some(request)) = read_frame(&mut conn) {
-                    let response = handle_request(&store, &request);
-                    if write_frame(&mut conn, &response).is_err() {
-                        break;
-                    }
+            Ok(conn) => {
+                let store = store.clone();
+                let shutdown = shutdown.clone();
+                // Spawn failure drops the closure (and with it the slot
+                // guard and the connection) — the server itself survives.
+                std::thread::Builder::new()
+                    .name("ckpt-exchange-conn".into())
+                    .spawn(move || {
+                        let _slot = slot;
+                        serve_connection(conn, &store, &shutdown);
+                    })
+                    .ok();
+            }
+            Err(_) => {
+                // Transient accept failure (EMFILE, aborted handshake):
+                // release the slot and retry without spinning hot. The
+                // shutdown check above still runs each iteration, so a
+                // persistently failing accept cannot outlive the server.
+                drop(slot);
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+/// Serve one connection until EOF, timeout, error, or shutdown. Errors
+/// are isolated here: they end this connection and nothing else.
+fn serve_connection(mut conn: Conn, store: &InProcess, shutdown: &AtomicBool) {
+    let _ = match &mut conn {
+        Conn::Tcp(s) => s.set_read_timeout(Some(READ_TIMEOUT)),
+        #[cfg(unix)]
+        Conn::Unix(s) => s.set_read_timeout(Some(READ_TIMEOUT)),
+    };
+    while !shutdown.load(Ordering::SeqCst) {
+        match read_frame(&mut conn) {
+            Ok(Some(request)) => {
+                let response = handle_request(store, &request);
+                if write_frame(&mut conn, &response).is_err() {
+                    return;
                 }
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(2));
-            }
-            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+            // Clean EOF, read timeout, or a torn frame: drop the
+            // connection, keep the server.
+            Ok(None) | Err(_) => return,
         }
     }
 }
@@ -391,6 +523,16 @@ fn try_handle(store: &InProcess, payload: &[u8]) -> Result<Vec<u8>> {
         OP_GC => {
             ExchangeTransport::gc(store)?;
             Ok(vec![STATUS_OK])
+        }
+        OP_STEPS => {
+            let steps = store.last_steps();
+            let mut out = vec![STATUS_OK];
+            out.extend_from_slice(&(steps.len() as u64).to_le_bytes());
+            for (m, s) in steps {
+                out.extend_from_slice(&(m as u64).to_le_bytes());
+                out.extend_from_slice(&s.to_le_bytes());
+            }
+            Ok(out)
         }
         other => bail!("unknown opcode {other}"),
     }
@@ -676,6 +818,21 @@ impl ExchangeTransport for SocketTransport {
         Ok(out)
     }
 
+    fn last_steps(&self) -> Result<Vec<(usize, u64)>> {
+        let body = self
+            .roundtrip(&[OP_STEPS])?
+            .context("steps returned not-found")?;
+        let mut r = body.as_slice();
+        let n = read_u64(&mut r)? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let m = read_u64(&mut r)? as usize;
+            let s = read_u64(&mut r)?;
+            out.push((m, s));
+        }
+        Ok(out)
+    }
+
     fn gc(&self) -> Result<()> {
         self.roundtrip(&[OP_GC])?.context("gc returned not-found")?;
         Ok(())
@@ -774,6 +931,82 @@ mod tests {
             .fetch_windows(0, u64::MAX, &["params.nope".to_string()])
             .unwrap_err();
         assert!(format!("{err:#}").contains("no window"), "{err:#}");
+    }
+
+    #[test]
+    fn steps_heartbeat_roundtrip() {
+        let server = SocketServer::bind_tcp("127.0.0.1:0", 4).unwrap();
+        let client = SocketTransport::connect_tcp(server.addr());
+        assert!(client.last_steps().unwrap().is_empty());
+        client.publish(ckpt(3, 5, &[0.0; 5])).unwrap();
+        client.publish(ckpt(1, 9, &[0.0; 5])).unwrap();
+        client.publish(ckpt(3, 8, &[0.0; 5])).unwrap();
+        assert_eq!(client.last_steps().unwrap(), vec![(1, 9), (3, 8)]);
+    }
+
+    /// Regression for the serial accept loop: two clients fetching
+    /// concurrently must both complete while a third connection sits on
+    /// the wire sending nothing (the old poll-one-connection server
+    /// served that idle connection to EOF before accepting anyone else).
+    #[test]
+    fn concurrent_fetches_complete_despite_slow_connection() {
+        use std::sync::mpsc;
+
+        let server = SocketServer::bind_tcp("127.0.0.1:0", 4).unwrap();
+        let publisher = SocketTransport::connect_tcp(server.addr());
+        publisher.publish(ckpt(0, 7, &[1.0, 2.0, 3.0, 4.0, 5.0])).unwrap();
+
+        // A slow client: connects, sends half a length prefix, stalls.
+        let mut slow = TcpStream::connect(server.addr()).unwrap();
+        slow.write_all(&[9u8, 0]).unwrap();
+        // Give the server time to hand the slow connection to a worker.
+        std::thread::sleep(Duration::from_millis(50));
+
+        let (tx, rx) = mpsc::channel();
+        let addr = server.addr().to_string();
+        let mut handles = Vec::new();
+        for i in 0..2 {
+            let tx = tx.clone();
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let c = SocketTransport::connect_tcp(&addr);
+                let got = c.latest(0).unwrap().unwrap();
+                tx.send((i, got.step)).unwrap();
+            }));
+        }
+        drop(tx);
+        let mut done = Vec::new();
+        for _ in 0..2 {
+            // A serial server would sit on the slow connection until its
+            // 30 s read timeout; the concurrent server answers promptly.
+            let (i, step) = rx
+                .recv_timeout(Duration::from_secs(5))
+                .expect("fetch blocked behind the slow connection");
+            assert_eq!(step, 7);
+            done.push(i);
+        }
+        done.sort();
+        assert_eq!(done, vec![0, 1]);
+        for h in handles {
+            h.join().unwrap();
+        }
+        // The slow connection is still being served (held by its worker).
+        assert!(server.active_connections() >= 1);
+        drop(slow);
+    }
+
+    /// Dropping the server must not wait out the accept poll or any read
+    /// timeout: the shutdown wakeup unblocks the accept immediately.
+    #[test]
+    fn shutdown_is_prompt() {
+        let server = SocketServer::bind_tcp("127.0.0.1:0", 4).unwrap();
+        let t0 = std::time::Instant::now();
+        drop(server);
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "server drop took {:?}",
+            t0.elapsed()
+        );
     }
 
     #[cfg(unix)]

@@ -439,6 +439,16 @@ impl ExchangeTransport for SpoolDir {
         Ok(self.published()?.keys().copied().collect())
     }
 
+    fn last_steps(&self) -> Result<Vec<(usize, u64)>> {
+        // Manifest (or scan) only — a liveness probe never opens a
+        // checkpoint file.
+        Ok(self
+            .published()?
+            .iter()
+            .filter_map(|(&m, steps)| steps.last().map(|&s| (m, s)))
+            .collect())
+    }
+
     fn gc(&self) -> Result<()> {
         // Publish already prunes + rewrites the manifest; this pass only
         // touches the manifest when something actually changed (or the
@@ -572,6 +582,25 @@ mod tests {
         assert!(spool
             .fetch_windows(0, u64::MAX, &["params.zzz".to_string()])
             .is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn last_steps_is_metadata_only() {
+        let dir = tdir("spooldir_heartbeat");
+        let spool = SpoolDir::open(&dir, 4).unwrap();
+        spool.publish(ckpt(1, 5, &[0.0; 5])).unwrap();
+        spool.publish(ckpt(1, 9, &[0.0; 5])).unwrap();
+        spool.publish(ckpt(3, 2, &[0.0; 5])).unwrap();
+        // corrupt every checkpoint file: the heartbeat probe must not
+        // open payloads, so it still answers from the manifest
+        for e in std::fs::read_dir(&dir).unwrap().filter_map(|e| e.ok()) {
+            if e.file_name().to_string_lossy().ends_with(".ckpt") {
+                std::fs::write(e.path(), b"garbage").unwrap();
+            }
+        }
+        let reader = SpoolDir::open(&dir, 4).unwrap();
+        assert_eq!(reader.last_steps().unwrap(), vec![(1, 9), (3, 2)]);
         std::fs::remove_dir_all(&dir).ok();
     }
 

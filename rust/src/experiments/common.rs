@@ -2,8 +2,9 @@
 //! commands, result-table printing.
 
 use crate::codistill::{
-    DistillSchedule, ExchangeTransport, InProcess, LrSchedule, Member, Orchestrator,
-    OrchestratorConfig, RunLog, SocketServer, SocketTransport, SpoolDir, Topology, TransportKind,
+    Coordinator, CoordinatorConfig, DistillSchedule, ExchangeTransport, FaultPlan, Faulty,
+    HostedMember, InProcess, LrSchedule, Member, Orchestrator, OrchestratorConfig, RunLog,
+    SocketServer, SocketTransport, SpoolDir, Topology, TransportKind,
 };
 use crate::config::Settings;
 use crate::data::corpus::CorpusConfig;
@@ -11,7 +12,7 @@ use crate::data::shard::{ShardMode, ShardPlan};
 use crate::models::lm::{LmMember, SmoothingMode};
 use crate::netsim::ClusterModel;
 use crate::runtime::{Bundle, Runtime};
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -263,6 +264,165 @@ pub fn cmd_codistill(s: &Settings) -> Result<()> {
     let log = orch.run(&mut members)?;
     print_runlog("codistill", &log);
     // `setup.server` (if any) stays alive until here by ownership.
+    drop(setup);
+    Ok(())
+}
+
+/// Comma-separated u64 list setting (`key=10,20,30`); empty when unset.
+fn u64_list(s: &Settings, key: &str) -> Result<Vec<u64>> {
+    match s.get(key) {
+        None => Ok(Vec::new()),
+        Some(v) => v
+            .split(',')
+            .map(|p| {
+                p.trim()
+                    .parse()
+                    .with_context(|| format!("{key} entry {p:?} not u64"))
+            })
+            .collect(),
+    }
+}
+
+/// Build a [`FaultPlan`] from `fault_*` settings; `None` when no fault
+/// key is set (the common, fault-free case).
+///
+/// * `fault_seed=N` — the deterministic decision seed (default 0)
+/// * `fault_delay_p`, `fault_drop_p`, `fault_error_p`, `fault_stale_p`
+///   — per-operation probabilities for the four random fault classes
+/// * `fault_blackout=member:from:until[,member:from:until...]` —
+///   scripted blackout windows in published-step space
+pub fn fault_plan(s: &Settings) -> Result<Option<FaultPlan>> {
+    let keys = [
+        "fault_seed",
+        "fault_delay_p",
+        "fault_drop_p",
+        "fault_error_p",
+        "fault_stale_p",
+        "fault_blackout",
+    ];
+    if !keys.iter().any(|k| s.get(k).is_some()) {
+        return Ok(None);
+    }
+    let mut plan = FaultPlan::new(s.u64_or("fault_seed", 0)?)
+        .with_delayed_publishes(s.f64_or("fault_delay_p", 0.0)?)
+        .with_dropped_fetches(s.f64_or("fault_drop_p", 0.0)?)
+        .with_erroring_fetches(s.f64_or("fault_error_p", 0.0)?)
+        .with_stale_reads(s.f64_or("fault_stale_p", 0.0)?);
+    if let Some(spec) = s.get("fault_blackout") {
+        for part in spec.split(',') {
+            let mut fields = part.trim().split(':');
+            let (m, from, until) = (fields.next(), fields.next(), fields.next());
+            match (m, from, until, fields.next()) {
+                (Some(m), Some(from), Some(until), None) => {
+                    plan = plan.with_blackout(
+                        m.parse().with_context(|| format!("blackout member {m:?}"))?,
+                        from.parse().with_context(|| format!("blackout from {from:?}"))?,
+                        until
+                            .parse()
+                            .with_context(|| format!("blackout until {until:?}"))?,
+                    );
+                }
+                _ => bail!("fault_blackout entry {part:?} (want member:from:until)"),
+            }
+        }
+    }
+    Ok(Some(plan))
+}
+
+/// `codistill coordinate`: n-way codistillation through the coordinator —
+/// per-member publish cadences (`publish_intervals=50,60`,
+/// `publish_offsets=0,7`), mid-run joins (`join_delays=0,0,150`),
+/// publish-recency liveness (`liveness_grace=N` ticks), and optional
+/// deterministic fault injection (see [`fault_plan`]) over any
+/// `--transport`.
+///
+/// Global member ids are `member_base..member_base+members`: when several
+/// coordinator processes share one exchange, give each a disjoint
+/// `member_base` (and its own `seed`) — two processes publishing under
+/// the same global id would collide on the exchange's per-member step
+/// monotonicity.
+pub fn cmd_coordinate(s: &Settings) -> Result<()> {
+    let d = lm_defaults(s)?;
+    let n = s.usize_or("members", 2)?;
+    let bundle = open_bundle(s, s.str_or("bundle", "lm_b64"))?;
+    let mode = ShardMode::parse(s.str_or("shard_mode", "disjoint"))
+        .context("shard_mode must be disjoint|same")?;
+    let plan = ShardPlan::new(n, bundle.meta_usize("batch")?, mode);
+    let topology = Topology::parse(s.str_or("topology", "full")).context("bad topology")?;
+    let cfg = CoordinatorConfig {
+        total_steps: d.steps,
+        reload_interval: d.reload,
+        eval_every: d.eval_every,
+        distill: DistillSchedule::new(d.burn_in, d.ramp, d.weight),
+        lr: LrSchedule::Constant(d.lr),
+        topology,
+        liveness_grace: s.u64_or("liveness_grace", 2 * d.reload + d.reload / 2)?,
+        seed: d.seed,
+        verbose: d.verbose,
+    };
+
+    let setup = make_transport(s, s.usize_or("history", 8)?)?;
+    let (transport, faulty): (Arc<dyn ExchangeTransport>, Option<Arc<Faulty>>) =
+        match fault_plan(s)? {
+            Some(fp) => {
+                let f = Arc::new(Faulty::wrap(setup.transport.clone(), fp));
+                (f.clone() as Arc<dyn ExchangeTransport>, Some(f))
+            }
+            None => (setup.transport.clone(), None),
+        };
+    if d.verbose {
+        eprintln!(
+            "[coordinate] transport: {}{}",
+            setup.kind.name(),
+            if faulty.is_some() { " (+faults)" } else { "" }
+        );
+    }
+
+    let base = s.usize_or("member_base", 0)?;
+    let intervals = u64_list(s, "publish_intervals")?;
+    let offsets = u64_list(s, "publish_offsets")?;
+    let delays = u64_list(s, "join_delays")?;
+    let mut hosted = Vec::with_capacity(n);
+    for g in 0..n {
+        let member = lm_member(
+            &bundle,
+            &plan,
+            g,
+            d.seed,
+            (base + g + 1) as i32,
+            SmoothingMode::None,
+            d.val_batches,
+        )?;
+        let mut h = HostedMember::new(
+            base + g,
+            Box::new(member) as Box<dyn Member>,
+            intervals.get(g).copied().unwrap_or(d.reload),
+        );
+        h.publish_offset = offsets.get(g).copied().unwrap_or(0);
+        h.join_delay = delays.get(g).copied().unwrap_or(0);
+        hosted.push(h);
+    }
+
+    let coord = Coordinator::new(cfg, transport);
+    let log = coord.run(&mut hosted)?;
+    for (i, curve) in log.eval.iter().enumerate() {
+        if let Some(last) = curve.last() {
+            println!(
+                "[coordinate] member {}: final val loss {:.4} at local step {}",
+                log.ids[i], last.loss, last.step
+            );
+        }
+    }
+    println!(
+        "[coordinate] staleness samples: {}, joins: {}, skipped teachers: {}, tolerated exchange errors: {}",
+        log.staleness.len(),
+        log.joins.len(),
+        log.skipped_teachers.len(),
+        log.exchange_errors.len()
+    );
+    if let Some(f) = &faulty {
+        println!("[coordinate] injected faults: {}", f.fault_log().len());
+    }
     drop(setup);
     Ok(())
 }

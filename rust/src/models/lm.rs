@@ -462,6 +462,12 @@ impl Member for LmMember {
         self.core.set_teachers(peers)
     }
 
+    fn bootstrap(&mut self, ck: &Checkpoint) -> Result<()> {
+        // Mid-run join: adopt the peer's `params.*` plane in place;
+        // optimizer/state leaves stay this member's own.
+        ck.scatter_params_into(&mut self.core.vars)
+    }
+
     fn evaluate(&mut self) -> Result<EvalStats> {
         self.core.evaluate()
     }
@@ -655,6 +661,12 @@ impl Member for LmSyncGroup {
 
     fn set_teachers(&mut self, peers: Vec<Arc<Checkpoint>>) -> Result<()> {
         self.core.set_teachers(peers)
+    }
+
+    fn bootstrap(&mut self, ck: &Checkpoint) -> Result<()> {
+        // A whole joining group seeds its shared params from the peer
+        // snapshot; per-worker optimizer state stays local.
+        ck.scatter_params_into(&mut self.core.vars)
     }
 
     fn evaluate(&mut self) -> Result<EvalStats> {

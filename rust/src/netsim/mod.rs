@@ -112,6 +112,33 @@ impl ClusterModel {
         (self.model_bytes as f64 + teachers as f64 * bytes_fetched as f64) / self.bandwidth_bps
     }
 
+    /// Exchange wall time when `dead` of a reader's `teachers` peers are
+    /// unreachable (§2.2: the coordinator's liveness table drops them):
+    /// the write and the live reads move planes at full bandwidth, while
+    /// each dead peer costs only a failed probe at latency scale — the
+    /// run degrades smoothly instead of stalling like a synchronous
+    /// barrier would.
+    pub fn degraded_exchange_time(&self, teachers: usize, dead: usize) -> f64 {
+        let dead = dead.min(teachers);
+        self.full_exchange_time(teachers - dead) + dead as f64 * self.latency_s
+    }
+
+    /// Mean exchange bytes per step under publish-cadence skew: member
+    /// `i` publishes (and is read) every `intervals[i]` steps instead of
+    /// one shared reload interval. Equals
+    /// [`ClusterModel::codistill_bytes_per_step`] when every interval is
+    /// `reload_interval`.
+    pub fn skewed_bytes_per_step(&self, intervals: &[u64]) -> f64 {
+        if intervals.is_empty() {
+            return 0.0;
+        }
+        let per_member: f64 = intervals
+            .iter()
+            .map(|&i| 2.0 * self.model_bytes as f64 / i.max(1) as f64)
+            .sum();
+        per_member / intervals.len() as f64
+    }
+
     /// Per-step communication bytes for sync SGD vs codistillation —
     /// the §2.1 comparison, used by the ablation bench.
     pub fn sync_sgd_bytes_per_step(&self) -> u64 {
@@ -122,6 +149,16 @@ impl ClusterModel {
     pub fn codistill_bytes_per_step(&self) -> f64 {
         2.0 * self.model_bytes as f64 / self.reload_interval.max(1) as f64
     }
+}
+
+/// Expected teacher staleness (in steps) when the teacher publishes every
+/// `publish_interval` steps and the reader reloads every
+/// `reload_interval`: on average half of each cadence elapses between a
+/// publication and the reload that uses it, and another half-reload while
+/// the installed copy ages — the analytic twin of the coordinator's
+/// per-member cadence skew.
+pub fn expected_staleness_steps(reload_interval: u64, publish_interval: u64) -> f64 {
+    (reload_interval as f64 + publish_interval as f64) / 2.0
 }
 
 #[cfg(test)]
@@ -175,6 +212,41 @@ mod tests {
         let m = ClusterModel::gpu_cluster(128, 40_000_000);
         let per_step = m.checkpoint_exchange_time() / m.reload_interval as f64;
         assert!(per_step < m.allreduce_time());
+    }
+
+    #[test]
+    fn dead_members_cheapen_the_exchange_instead_of_stalling_it() {
+        let m = ClusterModel::gpu_cluster(128, 40_000_000);
+        // all-live degenerates to the full exchange
+        assert_eq!(m.degraded_exchange_time(3, 0), m.full_exchange_time(3));
+        // each death removes a plane read and adds only a probe latency
+        let t_all = m.degraded_exchange_time(3, 0);
+        let t_one_dead = m.degraded_exchange_time(3, 1);
+        let t_all_dead = m.degraded_exchange_time(3, 3);
+        assert!(t_one_dead < t_all, "{t_one_dead} !< {t_all}");
+        assert!(t_all_dead < t_one_dead);
+        // even with every teacher dead the member still pays its write
+        assert!(t_all_dead >= m.full_exchange_time(0));
+        // dead counts past the teacher set saturate
+        assert_eq!(m.degraded_exchange_time(3, 9), m.degraded_exchange_time(3, 3));
+    }
+
+    #[test]
+    fn skewed_cadences_price_between_their_extremes() {
+        let m = ClusterModel::gpu_cluster(128, 40_000_000);
+        // uniform skew equals the shared-interval price
+        assert_eq!(
+            m.skewed_bytes_per_step(&[50, 50, 50]),
+            m.codistill_bytes_per_step()
+        );
+        let mixed = m.skewed_bytes_per_step(&[25, 50, 100]);
+        let fast = m.skewed_bytes_per_step(&[25, 25, 25]);
+        let slow = m.skewed_bytes_per_step(&[100, 100, 100]);
+        assert!(mixed < fast && mixed > slow, "{slow} < {mixed} < {fast}");
+        assert_eq!(m.skewed_bytes_per_step(&[]), 0.0);
+        // staleness grows with either cadence
+        assert!(expected_staleness_steps(50, 100) > expected_staleness_steps(50, 50));
+        assert!(expected_staleness_steps(100, 50) > expected_staleness_steps(50, 50));
     }
 
     #[test]

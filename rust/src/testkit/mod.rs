@@ -1,12 +1,23 @@
-//! Mini property-testing harness (no proptest offline).
+//! Mini property-testing harness (no proptest offline), plus shared
+//! deterministic fixtures.
 //!
 //! [`forall`] runs a property over `n` seeded random cases; on failure it
 //! reports the failing case seed so the case reproduces exactly with
 //! [`forall_seeded`]. Coordinator invariants (routing, batching, staleness
 //! accounting, reduction) are guarded with these properties in the
 //! integration tests.
+//!
+//! [`DriftMember`] is the deterministic mock member the fault-injection
+//! tests and the `coordinator_faults` example share: its dynamics
+//! contract toward a bounded (id, step)-keyed drift attractor, so runs
+//! converge to (nearly) the same final loss no matter how the exchange
+//! misbehaved along the way — exactly the property the §2.2 scenarios
+//! assert.
 
+use crate::codistill::{Checkpoint, EvalStats, Member, StepStats};
 use crate::prng::Pcg64;
+use crate::runtime::{Tensor, TensorMap};
+use std::sync::{Arc, Mutex};
 
 /// Generate one random case from a seeded generator.
 pub trait Arbitrary: Sized {
@@ -75,6 +86,143 @@ pub fn forall_seeded<T: Arbitrary + std::fmt::Debug>(case_seed: u64, prop: impl 
 pub fn in_range(raw: u64, lo: usize, hi: usize) -> usize {
     assert!(hi >= lo);
     lo + (raw % (hi - lo + 1) as u64) as usize
+}
+
+// -------------------------------------------------- deterministic member
+
+/// Observations a [`DriftMember`] records for assertions after the
+/// coordinator has consumed the boxed member.
+#[derive(Debug, Default)]
+pub struct DriftProbe {
+    /// Values adopted at bootstrap (mid-run join).
+    pub bootstrapped: Option<Vec<f32>>,
+    /// ψ weight passed to every train step, in order.
+    pub distill_ws: Vec<f32>,
+    /// Teacher-set size at every `set_teachers` call, in order.
+    pub teacher_counts: Vec<usize>,
+}
+
+/// Deterministic member: parameters low-pass-filter an (id, step)-keyed
+/// drift sequence and are pulled toward the installed teachers' mean, so
+/// dynamics contract toward the same bounded attractor in every run and
+/// fault-induced perturbations decay. Eval loss is `1 + mean|w|`.
+pub struct DriftMember {
+    id: usize,
+    step: u64,
+    params: TensorMap,
+    teacher_mean: Option<Vec<f32>>,
+    probe: Arc<Mutex<DriftProbe>>,
+}
+
+impl DriftMember {
+    /// Parameter-vector width.
+    pub const W: usize = 4;
+
+    pub fn new(id: usize) -> Self {
+        Self::with_probe(id, Arc::new(Mutex::new(DriftProbe::default())))
+    }
+
+    /// Share `probe` with a test that wants to inspect the member's
+    /// interactions after the run.
+    pub fn with_probe(id: usize, probe: Arc<Mutex<DriftProbe>>) -> Self {
+        let init: Vec<f32> = (0..Self::W)
+            .map(|k| 0.5 + id as f32 * 0.25 + 0.1 * k as f32)
+            .collect();
+        let mut params = TensorMap::new();
+        params.insert("params.w", Tensor::f32(&[Self::W], init).unwrap());
+        DriftMember {
+            id,
+            step: 0,
+            params,
+            teacher_mean: None,
+            probe,
+        }
+    }
+
+    /// Current parameter vector.
+    pub fn w(&self) -> Vec<f32> {
+        self.params
+            .get("params.w")
+            .unwrap()
+            .as_f32()
+            .unwrap()
+            .to_vec()
+    }
+}
+
+impl Member for DriftMember {
+    fn train_step(&mut self, distill_w: f32, lr: f32) -> anyhow::Result<StepStats> {
+        self.probe.lock().unwrap().distill_ws.push(distill_w);
+        let teacher = self.teacher_mean.clone();
+        let step = self.step;
+        let id = self.id as u64;
+        let w = self.params.get_mut("params.w")?.as_f32_mut()?;
+        let mut distill_loss = 0.0f32;
+        for (k, v) in w.iter_mut().enumerate() {
+            let drift = (((step * 7 + id * 13 + k as u64 * 5) % 11) as f32) * 0.02 - 0.1;
+            *v = *v * (1.0 - lr) + lr * drift;
+            if distill_w > 0.0 {
+                if let Some(t) = &teacher {
+                    let pull = t[k] - *v;
+                    *v += distill_w * lr * 0.5 * pull;
+                    distill_loss += pull * pull;
+                }
+            }
+        }
+        self.step += 1;
+        let loss = w.iter().map(|v| v.abs()).sum::<f32>() / Self::W as f32;
+        Ok(StepStats {
+            step: self.step,
+            loss,
+            distill_loss,
+        })
+    }
+
+    fn snapshot(&self) -> anyhow::Result<Checkpoint> {
+        Ok(Checkpoint::new(self.id, self.step, self.params.clone()))
+    }
+
+    fn set_teachers(&mut self, peers: Vec<Arc<Checkpoint>>) -> anyhow::Result<()> {
+        self.probe.lock().unwrap().teacher_counts.push(peers.len());
+        let mut mean = vec![0.0f32; Self::W];
+        for p in &peers {
+            for (m, v) in mean.iter_mut().zip(p.flat().view("params.w")?) {
+                *m += *v;
+            }
+        }
+        for m in &mut mean {
+            *m /= peers.len() as f32;
+        }
+        self.teacher_mean = Some(mean);
+        Ok(())
+    }
+
+    fn bootstrap(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
+        let vals = ck.flat().view("params.w")?.to_vec();
+        self.params
+            .get_mut("params.w")?
+            .as_f32_mut()?
+            .copy_from_slice(&vals);
+        self.probe.lock().unwrap().bootstrapped = Some(vals);
+        Ok(())
+    }
+
+    fn evaluate(&mut self) -> anyhow::Result<EvalStats> {
+        let loss =
+            1.0 + self.w().iter().map(|v| v.abs() as f64).sum::<f64>() / Self::W as f64;
+        Ok(EvalStats {
+            loss,
+            accuracy: None,
+        })
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.step
+    }
+
+    fn params(&self) -> &TensorMap {
+        &self.params
+    }
 }
 
 #[cfg(test)]

@@ -205,3 +205,51 @@ fn scatter_reload_preserves_untouched_entries() {
     // non-param storage untouched by the reload
     assert_eq!(dst.get("state.h").unwrap().as_f32().unwrap(), &[9.0, 9.0]);
 }
+
+/// Property (seeded cases, testkit-style): for random layouts, the window
+/// addressing surface — `byte_range`, `window_range`, `write_window` —
+/// round-trips every leaf, and concatenating the windows in layout order
+/// reassembles the exact plane bytes. This is the invariant every sharded
+/// transport fetch (spool `pread`, socket `FETCH`) leans on.
+#[test]
+fn property_window_addressing_roundtrips_random_layouts() {
+    for case in 0..40u64 {
+        let mut rng = Pcg64::new(0xF1A7 ^ case.wrapping_mul(0x9e3779b97f4a7c15));
+        let k = 1 + rng.below(9) as usize;
+        let shapes = ragged_shapes(&mut rng, k);
+        let map = worker_map(&shapes, case as usize, 99);
+        let layout = Arc::new(FlatLayout::from_map(&map, "grads."));
+        let full = FlatBuffer::gather(layout.clone(), &map).unwrap();
+
+        // windows pack densely, byte ranges are 4x element ranges, and
+        // both addressing forms agree
+        let mut expect_offset = 0usize;
+        for e in layout.entries() {
+            assert_eq!(e.offset, expect_offset, "case {case}: {:?}", e.name);
+            assert_eq!(e.byte_range(), e.offset * 4..(e.offset + e.len) * 4);
+            assert_eq!(layout.window_range(&e.name), Some(e.range()));
+            expect_offset += e.len;
+        }
+        assert_eq!(expect_offset, layout.total_len(), "case {case}");
+        assert_eq!(layout.total_bytes(), layout.total_len() * 4);
+
+        // write_window reassembles the plane from its windows in any order
+        let mut names: Vec<String> = layout.names().map(|s| s.to_string()).collect();
+        rng.shuffle(&mut names);
+        let mut assembled = FlatBuffer::zeros(layout.clone());
+        for name in &names {
+            assembled
+                .write_window(name, full.view(name).unwrap())
+                .unwrap();
+        }
+        assert_eq!(assembled.data(), full.data(), "case {case}");
+
+        // concatenated windows in layout order ARE the plane bytes
+        let concat: Vec<f32> = layout
+            .entries()
+            .iter()
+            .flat_map(|e| full.view(&e.name).unwrap().to_vec())
+            .collect();
+        assert_eq!(concat, full.data(), "case {case}");
+    }
+}

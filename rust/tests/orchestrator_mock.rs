@@ -166,6 +166,32 @@ fn steps_to_target_and_best_loss() {
     assert!(log.steps_to_target(0, 1e-9).is_none());
 }
 
+/// Pins the staleness-injection fallback: when history pruning leaves no
+/// checkpoint old enough for the `extra_staleness` bound, the reload
+/// falls back to the paper-semantics freshest read (`latest`) instead of
+/// failing — observable as staleness far below the requested bound.
+#[test]
+fn staleness_fallback_serves_freshest_when_no_old_checkpoint_survives() {
+    let mut cfg = base_cfg(40, 5);
+    // Demand 1000-step-old teachers that a 1-deep history can never hold.
+    cfg.extra_staleness = 1000;
+    let transport = Arc::new(codistill::codistill::InProcess::new(1));
+    let mut members: Vec<Box<dyn Member>> = (0..2)
+        .map(|i| Box::new(MockMember::new(i)) as Box<dyn Member>)
+        .collect();
+    let log = Orchestrator::with_transport(cfg, transport)
+        .run(&mut members)
+        .expect("fallback must keep the run alive");
+    assert!(!log.staleness.is_empty(), "teachers were never installed");
+    for &(at, member, staleness) in &log.staleness {
+        assert!(
+            staleness <= 5,
+            "member {member} at step {at}: fallback should serve the freshest \
+             publication (staleness <= reload interval), got {staleness}"
+        );
+    }
+}
+
 #[test]
 fn single_member_never_gets_teachers() {
     let (_m, log) = run_mock(1, base_cfg(30, 5));

@@ -229,6 +229,149 @@ fn spool_two_endpoints_byte_identical_to_inproc() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+// ---------------------------------------------------------- error paths
+//
+// Corrupt or vanished exchange state must surface `Err` (or a documented
+// recovery) — never a panic, never a hang. One table per backend.
+
+fn raw_ckpt(member: usize, step: u64) -> Checkpoint {
+    let mut params = TensorMap::new();
+    params.insert("params.w", Tensor::f32(&[W], vec![1.5; W]).unwrap());
+    Checkpoint::new(member, step, params)
+}
+
+#[test]
+fn inproc_error_paths_surface_err() {
+    let store = InProcess::new(4);
+    store.publish(raw_ckpt(0, 10)).unwrap();
+    let cases: Vec<(&str, anyhow::Result<()>)> = vec![
+        ("step regression", store.publish(raw_ckpt(0, 5))),
+        (
+            "unknown window",
+            ExchangeTransport::fetch_windows(&store, 0, u64::MAX, &["params.nope".to_string()])
+                .map(|_| ()),
+        ),
+    ];
+    for (name, result) in cases {
+        assert!(result.is_err(), "inproc {name}: expected Err");
+    }
+    // absent members are a clean None, not an error
+    assert!(store.latest(9).is_none());
+    assert!(ExchangeTransport::fetch_windows(&store, 9, u64::MAX, &[])
+        .unwrap()
+        .is_none());
+}
+
+#[test]
+fn spool_error_paths_surface_err() {
+    fn truncate_ckpt(dir: &std::path::Path) {
+        let p = dir.join(spool_file_name(0, 5));
+        let data = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &data[..24]).unwrap();
+    }
+    fn bad_magic_ckpt(dir: &std::path::Path) {
+        std::fs::write(dir.join(spool_file_name(0, 5)), b"XXPT9999 not a checkpoint").unwrap();
+    }
+    fn scribble_manifest(dir: &std::path::Path) {
+        std::fs::write(dir.join("MANIFEST"), "%% not a manifest %%\n\x00\x01").unwrap();
+    }
+
+    // (name, corruption, expect Err from a fresh reader)
+    let cases: Vec<(&str, fn(&std::path::Path), bool)> = vec![
+        ("truncated CKPT0002 payload", truncate_ckpt, true),
+        ("bad checkpoint magic", bad_magic_ckpt, true),
+        // a corrupt manifest alone is recoverable: readers fall back to
+        // the zero-padded directory scan
+        ("corrupt MANIFEST only", scribble_manifest, false),
+        (
+            "corrupt MANIFEST and truncated payload",
+            |dir| {
+                scribble_manifest(dir);
+                truncate_ckpt(dir);
+            },
+            true,
+        ),
+    ];
+    for (i, (name, corrupt, expect_err)) in cases.into_iter().enumerate() {
+        let dir = tdir(&format!("spool_err_{i}"));
+        let writer = SpoolDir::open(&dir, 4).unwrap();
+        writer.publish(raw_ckpt(0, 5)).unwrap();
+        corrupt(&dir);
+        // fresh handle: no read cache to mask the corruption
+        let reader = SpoolDir::open(&dir, 4).unwrap();
+        let latest = reader.latest(0);
+        let windows = reader.fetch_windows(0, u64::MAX, &["params.w".to_string()]);
+        if expect_err {
+            assert!(latest.is_err(), "spool {name}: latest should Err");
+            assert!(windows.is_err(), "spool {name}: fetch_windows should Err");
+        } else {
+            assert_eq!(
+                latest.unwrap().expect("recovery lost the checkpoint").step,
+                5,
+                "spool {name}"
+            );
+            assert_eq!(windows.unwrap().unwrap().windows[0].data, vec![1.5; W]);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn socket_error_paths_surface_err_not_hang() {
+    use std::io::{Read, Write};
+    use std::net::TcpListener;
+
+    // dead server: every operation is a prompt Err, never a hang
+    let gone_addr = {
+        let server = SocketServer::bind_tcp("127.0.0.1:0", 4).unwrap();
+        server.addr().to_string()
+    };
+    // server mid-DESCRIBE shutdown: accepts, reads the request length,
+    // then disappears before answering
+    let quitter = TcpListener::bind("127.0.0.1:0").unwrap();
+    let quitter_addr = quitter.local_addr().unwrap().to_string();
+    let quitter_thread = std::thread::spawn(move || {
+        let (mut s, _) = quitter.accept().unwrap();
+        let mut len = [0u8; 4];
+        s.read_exact(&mut len).ok();
+    });
+    // protocol-corrupting server: answers any request with a bogus status
+    let garbler = TcpListener::bind("127.0.0.1:0").unwrap();
+    let garbler_addr = garbler.local_addr().unwrap().to_string();
+    let garbler_thread = std::thread::spawn(move || {
+        let (mut s, _) = garbler.accept().unwrap();
+        let mut len = [0u8; 4];
+        s.read_exact(&mut len).unwrap();
+        let mut body = vec![0u8; u32::from_le_bytes(len) as usize];
+        s.read_exact(&mut body).unwrap();
+        s.write_all(&1u32.to_le_bytes()).unwrap();
+        s.write_all(&[0xEE]).unwrap();
+    });
+
+    let cases: Vec<(&str, anyhow::Result<()>)> = vec![
+        (
+            "connect to a dead server",
+            SocketTransport::connect_tcp(&gone_addr).latest(0).map(|_| ()),
+        ),
+        (
+            "server shutdown mid-DESCRIBE",
+            SocketTransport::connect_tcp(&quitter_addr)
+                .with_windowed_fetch(2)
+                .latest(0)
+                .map(|_| ()),
+        ),
+        (
+            "corrupt response status",
+            SocketTransport::connect_tcp(&garbler_addr).members().map(|_| ()),
+        ),
+    ];
+    for (name, result) in cases {
+        assert!(result.is_err(), "socket {name}: expected Err");
+    }
+    quitter_thread.join().unwrap();
+    garbler_thread.join().unwrap();
+}
+
 #[test]
 fn socket_windowed_fetch_byte_identical_to_inproc() {
     let inproc = InProcess::new(4);
