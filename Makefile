@@ -1,7 +1,7 @@
 # Build/test/bench entry points. The Rust workspace lives in rust/ and
 # builds fully offline (vendored deps; see rust/Cargo.toml).
 
-.PHONY: build test check test-faults bench artifacts python-tests clean
+.PHONY: build test check test-faults test-procs bench artifacts python-tests clean
 
 build:
 	cd rust && cargo build --release
@@ -27,6 +27,15 @@ check:
 # seeds => byte-identical fault and staleness logs.
 test-faults:
 	cd rust && CODISTILL_FAULT_SEEDS="11 23 47" cargo test --test coordinator_faults -q
+
+# OS-process-level coordinator harness: N real `codistill coordinate`
+# child processes (deterministic mock members, --delta incremental
+# reloads) over ONE spool directory; asserts they converge and actually
+# exchanged deltas (unchanged windows skipped). Builds the binary first
+# so the example can spawn it.
+test-procs:
+	cd rust && cargo build --release --bin codistill
+	cd rust && cargo run --release --example spool_procs
 
 # Hot-path microbenchmarks. Writes the human table to stdout and the
 # machine-readable trajectory to BENCH_hotpath.json at the repo root.

@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
             topology,
             cluster: None,
             seed: 7,
+            delta: false,
             verbose: false,
         };
         let log = Orchestrator::new(cfg).run(&mut members)?;

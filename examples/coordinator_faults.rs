@@ -33,6 +33,7 @@ fn main() -> anyhow::Result<()> {
         topology: Topology::FullyConnected,
         liveness_grace: 35,
         seed: fault_seed,
+        delta: false,
         verbose: true,
     };
 

@@ -41,6 +41,7 @@ fn main() -> anyhow::Result<()> {
         topology: Topology::Pair,
         cluster: None,
         seed: 42,
+        delta: false,
         verbose: true,
     };
     let orch = Orchestrator::new(cfg);

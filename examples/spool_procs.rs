@@ -1,0 +1,167 @@
+//! OS-process-level coordinator harness: spawn N real `codistill
+//! coordinate` child processes over ONE spool directory and assert they
+//! converge and exchange **deltas** — multi-process orchestration
+//! exercised with actual process isolation, not just threads.
+//!
+//! Each child hosts a disjoint slice of global member ids
+//! (`member_base`) over the deterministic `testkit::DriftMember` fleet
+//! (`mock=true`, so no artifact bundle or XLA backend is needed), with
+//! `--delta` incremental reloads. The children cooperate purely through
+//! `CKPT0003` files + the digest-carrying `MANIFEST` in the shared
+//! directory. The harness asserts, from each child's stdout:
+//!
+//! * clean exit, with every hosted member reaching its final eval;
+//! * convergence: drift dynamics contract, so every member's final val
+//!   loss lands in the attractor band well below its starting loss, and
+//!   the members agree across processes;
+//! * delta exchange actually engaged: the frozen `params.table` window
+//!   is skipped (`unchanged > 0`) and delta fetches outnumber full ones.
+//!
+//! Run via `make test-procs` (which builds the binary first), or
+//! directly with `CODISTILL_BIN=path/to/codistill cargo run --release
+//! --example spool_procs`.
+
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+
+const PROCS: usize = 2;
+const MEMBERS_PER_PROC: usize = 2;
+const STEPS: u64 = 240;
+
+/// Locate the `codistill` binary: `$CODISTILL_BIN`, else next to this
+/// example (`target/<profile>/examples/spool_procs` ->
+/// `target/<profile>/codistill`).
+fn codistill_bin() -> Result<PathBuf> {
+    if let Some(p) = std::env::var_os("CODISTILL_BIN") {
+        return Ok(PathBuf::from(p));
+    }
+    let exe = std::env::current_exe().context("resolving current_exe")?;
+    let profile_dir = exe
+        .parent()
+        .and_then(|d| d.parent())
+        .context("examples dir has no parent")?;
+    for candidate in [
+        profile_dir.join("codistill"),
+        profile_dir.join("codistill.exe"),
+    ] {
+        if candidate.exists() {
+            return Ok(candidate);
+        }
+    }
+    bail!(
+        "codistill binary not found next to {} — run `make test-procs` \
+         (it builds the binary first) or set CODISTILL_BIN",
+        exe.display()
+    )
+}
+
+/// `key=value` fields out of the `[coordinate] delta exchange:` line.
+fn delta_field(stdout: &str, key: &str) -> Option<u64> {
+    let line = stdout
+        .lines()
+        .find(|l| l.contains("delta exchange:"))?;
+    line.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(&format!("{key}=")))
+        .and_then(|v| v.parse().ok())
+}
+
+fn main() -> Result<()> {
+    let bin = codistill_bin()?;
+    let spool = std::env::temp_dir().join(format!("codistill_procs_{}", std::process::id()));
+    std::fs::remove_dir_all(&spool).ok();
+
+    println!(
+        "[spool_procs] spawning {PROCS} `codistill coordinate` processes \
+         ({MEMBERS_PER_PROC} members each) over {}",
+        spool.display()
+    );
+    let mut children = Vec::new();
+    for p in 0..PROCS {
+        let child = Command::new(&bin)
+            .args(["coordinate", "--transport", "spool", "--delta"])
+            .arg(format!("spool_dir={}", spool.display()))
+            .arg("mock=true")
+            .arg("mock_frozen=256")
+            .arg(format!("members={MEMBERS_PER_PROC}"))
+            .arg(format!("member_base={}", p * MEMBERS_PER_PROC))
+            .arg(format!("seed={}", 42 + p as u64))
+            .arg(format!("steps={STEPS}"))
+            .arg("reload=20")
+            .arg("burn_in=40")
+            .arg("ramp=20")
+            .arg(format!("eval_every={STEPS}"))
+            .arg("lr=0.2")
+            .arg("liveness_grace=50")
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning {}", bin.display()))?;
+        children.push((p, child));
+    }
+
+    let mut final_losses: Vec<f64> = Vec::new();
+    for (p, child) in children {
+        let out = child
+            .wait_with_output()
+            .with_context(|| format!("waiting for child {p}"))?;
+        let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+        print!("{stdout}");
+        if !out.status.success() {
+            bail!("child {p} exited with {:?}", out.status);
+        }
+
+        // every hosted member reported a final eval at the last local step
+        let mut member_lines = 0usize;
+        for line in stdout.lines() {
+            if let Some(rest) = line.strip_prefix("[coordinate] member ") {
+                let loss: f64 = rest
+                    .split("final val loss ")
+                    .nth(1)
+                    .and_then(|t| t.split_whitespace().next())
+                    .context("unparsable member line")?
+                    .parse()?;
+                member_lines += 1;
+                final_losses.push(loss);
+            }
+        }
+        if member_lines != MEMBERS_PER_PROC {
+            bail!("child {p}: {member_lines} of {MEMBERS_PER_PROC} members finished");
+        }
+
+        // delta exchange engaged: frozen windows skipped, deltas dominate
+        let unchanged = delta_field(&stdout, "unchanged")
+            .with_context(|| format!("child {p}: no delta accounting line"))?;
+        let deltas = delta_field(&stdout, "delta").unwrap_or(0);
+        let full = delta_field(&stdout, "full").unwrap_or(0);
+        if unchanged == 0 {
+            bail!("child {p}: delta exchange never skipped an unchanged window");
+        }
+        if deltas <= full {
+            bail!("child {p}: {deltas} delta vs {full} full fetches — deltas should dominate");
+        }
+    }
+
+    // Convergence: DriftMember dynamics contract toward a bounded
+    // attractor (|w| well under 0.25 ⇒ eval loss = 1 + mean|w| < 1.25,
+    // from starting losses ≥ 1.5), and codistillation pulls the members
+    // together across processes.
+    for &loss in &final_losses {
+        if !(1.0..1.25).contains(&loss) {
+            bail!("member did not converge: final loss {loss} outside [1.0, 1.25)");
+        }
+    }
+    let min = final_losses.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = final_losses.iter().cloned().fold(0.0f64, f64::max);
+    if max - min > 0.2 {
+        bail!("members disagree: final losses span [{min}, {max}]");
+    }
+
+    std::fs::remove_dir_all(&spool).ok();
+    println!(
+        "[spool_procs] OK: {} members over {PROCS} processes converged \
+         (losses in [{min:.4}, {max:.4}]) and exchanged deltas",
+        final_losses.len()
+    );
+    Ok(())
+}

@@ -9,6 +9,9 @@
 //!   * allreduce strategies (naive vs tree vs flat) at LM-gradient sizes;
 //!   * the flat plane itself: gather/scatter and checkpoint save/load/
 //!     publish on a ~1M-element parameter set;
+//!   * incremental (delta) exchange: full vs delta fetch bytes and time
+//!     at changed fractions {1.0, 0.25, 0.05} over each transport, plus
+//!     flat-vs-tree allreduce across worker counts {2, 4, 8, 16};
 //!   * tensor<->literal boundary cost (runtime overhead);
 //!   * explicit sync-SGD group step vs fused equivalent (coordinator
 //!     overhead).
@@ -17,6 +20,7 @@
 //! skipped gracefully and recorded as `null` in the JSON, so the pure-Rust
 //! coordinator numbers are tracked even on machines without XLA.
 
+use codistill::codistill::transport::{Basis, FetchSpec, ANY_STEP};
 use codistill::codistill::{
     Checkpoint, ExchangeTransport, InProcess, Member, SocketServer, SocketTransport, SpoolDir,
 };
@@ -211,6 +215,42 @@ fn main() {
         ));
     }
 
+    // ---- ROADMAP trajectory: flat vs tree across worker counts at one
+    // LM-ish gradient size (the plotted scaling curve).
+    let mut allreduce_scaling_rows: Vec<String> = Vec::new();
+    for workers in [2usize, 4, 8, 16] {
+        let numel = 262_144usize;
+        let make = || -> Vec<TensorMap> {
+            (0..workers)
+                .map(|w| {
+                    let mut m = TensorMap::new();
+                    m.insert(
+                        "grads.w",
+                        Tensor::f32(&[numel], vec![w as f32; numel]).unwrap(),
+                    );
+                    m
+                })
+                .collect()
+        };
+        let t_tree = time_n(3, || {
+            allreduce_mean(make(), "grads.", ReduceStrategy::Tree).unwrap();
+        });
+        let t_flat = time_n(3, || {
+            allreduce_mean(make(), "grads.", ReduceStrategy::Flat).unwrap();
+        });
+        println!(
+            "allreduce scaling w={workers:<2} n={numel}: tree {:>7.2} ms, flat {:>7.2} ms ({:.2}x)",
+            t_tree * 1e3,
+            t_flat * 1e3,
+            t_tree / t_flat
+        );
+        allreduce_scaling_rows.push(format!(
+            "{{\"workers\": {workers}, \"numel\": {numel}, \"tree_ms\": {}, \"flat_ms\": {}}}",
+            ms(Some(t_tree)),
+            ms(Some(t_flat))
+        ));
+    }
+
     // ---- the flat plane itself: gather/scatter + checkpoint exchange.
     let params = ragged_params(1_048_576);
     let layout = Arc::new(FlatLayout::from_map(&params, "params."));
@@ -344,6 +384,97 @@ fn main() {
         std::fs::remove_dir_all(&spool_dir).ok();
     }
 
+    // ---- incremental (delta) exchange: full vs delta fetch of the same
+    // ~4MB plane when only a fraction of its bytes changed since the
+    // reader's installed basis. Changed windows are picked
+    // smallest-first until the byte budget is met, so the fraction is
+    // honest about bytes, not window counts.
+    let mut delta_rows: Vec<String> = Vec::new();
+    for frac in [1.0f64, 0.25, 0.05] {
+        // v2 plane: `frac` of the v1 bytes rewritten
+        let (v2, changed_elems) = {
+            let mut b = (*plane).clone();
+            let target = (frac * layout.total_len() as f64) as usize;
+            let mut entries: Vec<_> = layout.entries().iter().collect();
+            entries.sort_by_key(|e| e.len);
+            let mut changed = 0usize;
+            for e in entries {
+                if changed + e.len <= target {
+                    for v in &mut b.data_mut()[e.range()] {
+                        *v += 1.0;
+                    }
+                    changed += e.len;
+                }
+            }
+            (Arc::new(b), changed)
+        };
+        let spool_dir = std::env::temp_dir().join(format!(
+            "codistill_bench_delta_{}_{}",
+            std::process::id(),
+            (frac * 100.0) as u32
+        ));
+        std::fs::remove_dir_all(&spool_dir).ok();
+        let server =
+            SocketServer::bind_tcp("127.0.0.1:0", 4).expect("binding delta bench server");
+        let backends: Vec<(&str, Arc<dyn ExchangeTransport>)> = vec![
+            ("inproc", Arc::new(InProcess::new(4))),
+            (
+                "spool",
+                Arc::new(SpoolDir::open(&spool_dir, 4).expect("opening delta bench spool")),
+            ),
+            ("socket", Arc::new(SocketTransport::connect_tcp(server.addr()))),
+        ];
+        for (member, (name, transport)) in backends.iter().enumerate() {
+            let ck1 = Checkpoint::from_flat(member, 1, plane.clone(), TensorMap::new());
+            let basis = Basis {
+                step: 1,
+                digests: ck1.window_digests().as_ref().clone(),
+            };
+            transport.publish(ck1).unwrap();
+            transport
+                .publish(Checkpoint::from_flat(member, 2, v2.clone(), TensorMap::new()))
+                .unwrap();
+            let full_spec = FetchSpec::full(member, ANY_STEP);
+            let delta_spec = FetchSpec::full(member, ANY_STEP).with_basis(basis);
+            // spool reads go through a fresh handle per fetch so the
+            // read cache cannot hide the file IO (same policy as the
+            // transport section above)
+            let fetch = |spec: &FetchSpec| {
+                if *name == "spool" {
+                    SpoolDir::open(&spool_dir, 4).unwrap().fetch(spec).unwrap().unwrap()
+                } else {
+                    transport.fetch(spec).unwrap().unwrap()
+                }
+            };
+            let full_bytes = fetch(&full_spec).payload_bytes();
+            let delta_bytes = fetch(&delta_spec).payload_bytes();
+            let t_full = time_n(3, || {
+                fetch(&full_spec);
+            });
+            let t_delta = time_n(3, || {
+                fetch(&delta_spec);
+            });
+            println!(
+                "delta {name:>7} frac={frac:<4}: full {:>7.2} ms / {full_bytes:>8} B, \
+                 delta {:>7.2} ms / {delta_bytes:>8} B ({:.1}% of full)",
+                t_full * 1e3,
+                t_delta * 1e3,
+                100.0 * delta_bytes as f64 / full_bytes as f64
+            );
+            delta_rows.push(format!(
+                "{{\"transport\": \"{name}\", \"changed_fraction\": {frac}, \
+                 \"changed_elems\": {changed_elems}, \
+                 \"fetch_full_ms\": {}, \"fetch_delta_ms\": {}, \
+                 \"full_payload_bytes\": {full_bytes}, \"delta_payload_bytes\": {delta_bytes}}}",
+                ms(Some(t_full)),
+                ms(Some(t_delta))
+            ));
+        }
+        drop(backends);
+        drop(server);
+        std::fs::remove_dir_all(&spool_dir).ok();
+    }
+
     // ---- concurrent vs serial socket fetches: N clients pulling the
     // same ~4MB plane one-after-another vs all at once. With the
     // thread-per-connection server the concurrent wall time approaches
@@ -407,12 +538,14 @@ fn main() {
          \"codistill_step_ms\": {},\n    \
          \"sync_group_step_ms\": {},\n    \
          \"allreduce\": [\n      {}\n    ],\n    \
+         \"allreduce_scaling\": [\n      {}\n    ],\n    \
          \"flat_gather_ms\": {},\n    \
          \"flat_scatter_ms\": {},\n    \
          \"ckpt_publish_latest_ms\": {},\n    \
          \"ckpt_save_ms\": {},\n    \
          \"ckpt_load_ms\": {},\n    \
          \"transport\": [\n      {}\n    ],\n    \
+         \"delta_exchange\": [\n      {}\n    ],\n    \
          \"socket_concurrency\": {},\n    \
          \"to_literal_ms\": {}\n  }}\n}}\n",
         ms(art.train_step),
@@ -420,12 +553,14 @@ fn main() {
         ms(art.codistill_step),
         ms(art.sync_group_step),
         allreduce_rows.join(",\n      "),
+        allreduce_scaling_rows.join(",\n      "),
         ms(Some(t_gather)),
         ms(Some(t_scatter)),
         ms(Some(t_publish)),
         ms(Some(t_save)),
         ms(Some(t_load)),
         transport_rows.join(",\n      "),
+        delta_rows.join(",\n      "),
         sock_concurrency,
         ms(Some(t_lit)),
     );

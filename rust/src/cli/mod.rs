@@ -1,7 +1,7 @@
 //! Hand-rolled CLI (no clap offline).
 //!
 //! ```text
-//! codistill <command> [--transport inproc|spool|socket]
+//! codistill <command> [--transport inproc|spool|socket] [--delta]
 //!           [--set key=value]... [--config file]
 //!
 //! commands:
@@ -30,6 +30,15 @@
 //! in-process when unset); `socket_windows=N` shards teacher reloads N
 //! windows per fetch. Point several `coordinate` processes at one spool
 //! directory or socket server for a true multi-process run.
+//!
+//! `--delta` (alias `delta=true`) turns on incremental teacher reloads
+//! for `codistill` and `coordinate`: readers keep per-teacher installed
+//! planes and fetch only the windows whose content digests changed
+//! (`codistill::transport::DeltaCache`) — byte-identical installs,
+//! strictly less traffic. `mock=true` on `coordinate` swaps the LM
+//! members for the deterministic `testkit::DriftMember` fleet (no
+//! artifacts/XLA needed — the OS-process harness `examples/spool_procs.rs`
+//! uses this).
 
 use crate::config::Settings;
 use anyhow::{bail, Context, Result};
@@ -70,6 +79,10 @@ pub fn parse_args(args: &[String]) -> Result<Cli> {
                 settings.apply("verbose=true")?;
                 i += 1;
             }
+            "--delta" => {
+                settings.apply("delta=true")?;
+                i += 1;
+            }
             "--transport" => {
                 let v = args.get(i + 1).context("--transport needs inproc|spool|socket")?;
                 // validate eagerly so typos fail at parse time, not mid-run
@@ -96,7 +109,7 @@ fn settings_dump(_s: &Settings) -> Vec<String> {
 
 pub fn usage() -> String {
     "usage: codistill <train|codistill|coordinate|figures|fig1|fig2|fig3|fig4|table1|sec341|inspect> \
-     [--transport inproc|spool|socket] [--set key=value]... [--config FILE] [--verbose]"
+     [--transport inproc|spool|socket] [--delta] [--set key=value]... [--config FILE] [--verbose]"
         .to_string()
 }
 
@@ -173,5 +186,16 @@ mod tests {
         assert_eq!(cli.settings.str_or("transport", "inproc"), "spool");
         assert!(parse_args(&sv(&["codistill", "--transport", "floppy"])).is_err());
         assert!(parse_args(&sv(&["codistill", "--transport"])).is_err());
+    }
+
+    #[test]
+    fn delta_flag_applies() {
+        let cli = parse_args(&sv(&["coordinate", "--delta"])).unwrap();
+        assert!(cli.settings.bool_or("delta", false).unwrap());
+        assert!(!parse_args(&sv(&["coordinate"]))
+            .unwrap()
+            .settings
+            .bool_or("delta", false)
+            .unwrap());
     }
 }

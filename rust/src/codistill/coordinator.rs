@@ -43,7 +43,7 @@
 use crate::codistill::orchestrator::EvalPoint;
 use crate::codistill::schedule::{DistillSchedule, LrSchedule};
 use crate::codistill::topology::Topology;
-use crate::codistill::transport::ExchangeTransport;
+use crate::codistill::transport::{DeltaCache, DeltaStats, ExchangeTransport};
 use crate::codistill::Member;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -66,6 +66,12 @@ pub struct CoordinatorConfig {
     /// at least one publish interval plus one reload interval.
     pub liveness_grace: u64,
     pub seed: u64,
+    /// Incremental (delta) teacher reloads: this coordinator keeps one
+    /// installed plane per teacher (`transport::DeltaCache`, shared by
+    /// its co-hosted members like the heartbeat polls are) and fetches
+    /// only the windows whose content changed. Installed teachers are
+    /// byte-identical to full fetches; only the exchange traffic shrinks.
+    pub delta: bool,
     pub verbose: bool,
 }
 
@@ -80,6 +86,7 @@ impl Default for CoordinatorConfig {
             topology: Topology::FullyConnected,
             liveness_grace: 120,
             seed: 0,
+            delta: false,
             verbose: false,
         }
     }
@@ -249,6 +256,8 @@ pub struct CoordinatorLog {
     pub skipped_teachers: Vec<(u64, usize, usize)>,
     /// Tolerated exchange failures: (tick, member id, error text).
     pub exchange_errors: Vec<(u64, usize, String)>,
+    /// Delta-exchange traffic accounting (`Some` only for delta runs).
+    pub delta: Option<DeltaStats>,
 }
 
 impl CoordinatorLog {
@@ -303,6 +312,9 @@ struct RunShared {
     polled_this_tick: bool,
     /// Some(member) when a publish this tick wants a gc afterwards.
     gc_requested: Option<usize>,
+    /// Per-teacher installed planes for delta reloads (`Some` only when
+    /// `CoordinatorConfig::delta`), shared by co-hosted members.
+    delta: Option<DeltaCache>,
 }
 
 /// Drives the hosted members of ONE process/thread against a shared
@@ -343,6 +355,7 @@ impl Coordinator {
             liveness: LivenessTable::new(),
             polled_this_tick: false,
             gc_requested: None,
+            delta: self.cfg.delta.then(DeltaCache::new),
         };
 
         let mut tick: u64 = 0;
@@ -376,6 +389,7 @@ impl Coordinator {
             }
             tick += 1;
         }
+        log.delta = shared.delta.as_ref().map(|c| c.stats());
         Ok(log)
     }
 
@@ -519,7 +533,11 @@ impl Coordinator {
         }
         let mut peers = Vec::with_capacity(teacher_ids.len());
         for j in teacher_ids {
-            match self.transport.latest(j) {
+            let fetched = match shared.delta.as_mut() {
+                Some(cache) => cache.latest(self.transport.as_ref(), j),
+                None => self.transport.latest(j),
+            };
+            match fetched {
                 Ok(Some(ck)) => peers.push(ck),
                 Ok(None) => log.skipped_teachers.push((st.local_step, h.id, j)),
                 Err(e) => {

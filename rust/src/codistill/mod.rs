@@ -14,18 +14,22 @@
 //! The exchange is split into a value type and a medium:
 //!
 //! * [`store`] defines [`Checkpoint`] — an immutable `Arc<FlatBuffer>`
-//!   parameter snapshot — and its `CKPT0002` encoding (a window table,
-//!   then the whole flat plane as one contiguous byte slice). The same
+//!   parameter snapshot — and its `CKPT0003` encoding (a window table
+//!   with per-window content digests, then the whole flat plane as one
+//!   contiguous byte slice; `CKPT0002`/`CKPT0001` still read). The same
 //!   bytes serve as the disk format and the socket wire format.
-//! * [`transport`] defines [`ExchangeTransport`] — `publish` / `latest` /
-//!   `latest_at_most` / `fetch_windows` / `members` / `gc` — with three
-//!   interchangeable backends: [`InProcess`] (zero-copy shared buffers),
-//!   [`SpoolDir`] (CKPT0002 files + atomic `MANIFEST` in a shared
-//!   directory; readers may `pread` single windows), and
-//!   [`SocketTransport`]/[`SocketServer`] (length-prefixed TCP/Unix
-//!   protocol with optional sharded fetch: window table first, then only
-//!   the [`FlatLayout`](crate::runtime::flat::FlatLayout) windows a
-//!   reload needs, in batches).
+//! * [`transport`] defines [`ExchangeTransport`] around one unified,
+//!   delta-aware read — `fetch(FetchSpec) -> FetchResult` — plus
+//!   `publish` / `members` / `gc` / `last_steps`; `latest` /
+//!   `latest_at_most` / `fetch_windows` are shims over `fetch`. Three
+//!   interchangeable backends implement it natively: [`InProcess`]
+//!   (zero-copy shared buffers), [`SpoolDir`] (`CKPT0003` files + atomic
+//!   digest-carrying `MANIFEST` in a shared directory; readers `pread`
+//!   only changed windows), and [`SocketTransport`]/[`SocketServer`]
+//!   (length-prefixed TCP/Unix protocol with a `DELTA` opcode: basis
+//!   digests up, changed windows down). [`DeltaCache`] is the reader
+//!   side: per-teacher installed planes patched in place, byte-identical
+//!   to full fetches while moving only what changed.
 //!
 //! The [`Orchestrator`] is constructed from any `Arc<dyn
 //! ExchangeTransport>` ([`Orchestrator::with_transport`]) and feeds
@@ -74,8 +78,8 @@ pub use schedule::{DistillSchedule, LrSchedule};
 pub use store::Checkpoint;
 pub use topology::Topology;
 pub use transport::{
-    ExchangeTransport, FaultPlan, Faulty, InProcess, SocketServer, SocketTransport, SpoolDir,
-    TransportKind, WindowedFetch,
+    Basis, DeltaCache, DeltaStats, ExchangeTransport, FaultPlan, Faulty, FetchResult, FetchSpec,
+    InProcess, SocketServer, SocketTransport, SpoolDir, TransportKind, WindowSel, WindowedFetch,
 };
 
 /// The zero-copy in-process store under its historical name (it was the

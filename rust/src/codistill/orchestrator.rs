@@ -13,7 +13,7 @@
 
 use crate::codistill::schedule::{DistillSchedule, LrSchedule};
 use crate::codistill::topology::Topology;
-use crate::codistill::transport::{ExchangeTransport, InProcess};
+use crate::codistill::transport::{DeltaCache, DeltaStats, ExchangeTransport, InProcess};
 use crate::codistill::{EvalStats, Member};
 use crate::netsim::ClusterModel;
 use crate::prng::Pcg64;
@@ -40,6 +40,11 @@ pub struct OrchestratorConfig {
     pub cluster: Option<ClusterModel>,
     /// Seed for the straggler-sampling stream.
     pub seed: u64,
+    /// Incremental (delta) teacher reloads: keep a per-teacher installed
+    /// plane and fetch only the windows whose content changed since it
+    /// (`transport::DeltaCache`). Installed teachers are byte-identical
+    /// to full fetches; only the exchange traffic shrinks.
+    pub delta: bool,
     /// Print progress lines.
     pub verbose: bool,
 }
@@ -56,6 +61,7 @@ impl Default for OrchestratorConfig {
             topology: Topology::Pair,
             cluster: None,
             seed: 0,
+            delta: false,
             verbose: false,
         }
     }
@@ -82,6 +88,8 @@ pub struct RunLog {
     /// Observed teacher staleness at *usage* time: one sample per member
     /// per step while teachers are installed (step, member, staleness).
     pub staleness: Vec<(u64, usize, u64)>,
+    /// Delta-exchange traffic accounting (`Some` only for delta runs).
+    pub delta: Option<DeltaStats>,
 }
 
 impl RunLog {
@@ -154,6 +162,12 @@ impl Orchestrator {
         let mut wall = 0.0f64;
         // freshest installed teacher checkpoint step, per member
         let mut installed: Vec<Option<u64>> = vec![None; n];
+        // one installed-plane cache per reader when delta exchange is on
+        let mut delta_caches: Vec<DeltaCache> = if cfg.delta {
+            (0..n).map(|_| DeltaCache::new()).collect()
+        } else {
+            Vec::new()
+        };
 
         // Initial publication so teachers exist from the first reload.
         for (i, m) in members.iter().enumerate() {
@@ -173,17 +187,29 @@ impl Orchestrator {
                     let teacher_ids = cfg.topology.teachers_of(i, n);
                     let mut peers = Vec::with_capacity(teacher_ids.len());
                     for j in teacher_ids {
+                        // One bounded read, delta-aware when enabled.
+                        let mut read = |max_step: u64| {
+                            if cfg.delta {
+                                delta_caches[i].latest_at_most(
+                                    self.transport.as_ref(),
+                                    j,
+                                    max_step,
+                                )
+                            } else {
+                                self.transport.latest_at_most(j, max_step)
+                            }
+                        };
                         let ck = if cfg.extra_staleness > 0 {
                             let bound = step.saturating_sub(cfg.extra_staleness);
-                            match self.transport.latest_at_most(j, bound)? {
+                            match read(bound)? {
                                 some @ Some(_) => some,
                                 // No checkpoint old enough (history pruned
                                 // past the bound): fall back to the paper's
                                 // freshest-available read.
-                                None => self.transport.latest(j)?,
+                                None => read(crate::codistill::transport::ANY_STEP)?,
                             }
                         } else {
-                            self.transport.latest(j)?
+                            read(crate::codistill::transport::ANY_STEP)?
                         };
                         let ck = ck.with_context(|| format!("no checkpoint for member {j}"))?;
                         peers.push(ck);
@@ -249,6 +275,14 @@ impl Orchestrator {
             }
         }
         log.wall_s = wall;
+        if cfg.delta {
+            // Aggregate every reader's exchange accounting.
+            let mut total = DeltaStats::default();
+            for c in &delta_caches {
+                total.merge(c.stats());
+            }
+            log.delta = Some(total);
+        }
         Ok(log)
     }
 }

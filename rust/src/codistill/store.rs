@@ -14,19 +14,28 @@
 //! buffer — and teacher reloads scatter the plane into existing tensor
 //! storage instead of rebuilding named maps.
 //!
-//! On disk there are two formats, both understood by [`Checkpoint::load`]:
+//! On disk there are three formats, all understood by [`Checkpoint::load`]:
 //!
-//! * `CKPT0002` (written by [`Checkpoint::save`]): a window table followed
-//!   by the whole flat plane as one contiguous byte slice — no per-tensor
-//!   framing on the payload.
+//! * `CKPT0003` (written by [`Checkpoint::save`]): the `CKPT0002` layout
+//!   with a per-window [`content_digest`] added to each window-table
+//!   entry. The digest table is what makes incremental (delta) exchange
+//!   possible: a reader compares it against the digests of its installed
+//!   copy and pulls only the windows whose bytes changed. Loading
+//!   recomputes and verifies every digest, so a corrupt payload fails
+//!   loudly instead of poisoning a delta basis.
+//! * `CKPT0002` (written by [`Checkpoint::save_v2`]): a window table
+//!   followed by the whole flat plane as one contiguous byte slice — no
+//!   per-tensor framing on the payload, no digests.
 //! * `CKPT0001` (written by [`Checkpoint::save_v1`]): the original
 //!   per-tensor framing, kept for spools produced by older builds.
+//!
+//! [`content_digest`]: crate::runtime::flat::content_digest
 //!
 //! The exchange itself — who holds published checkpoints and how readers
 //! get them — lives behind `codistill::transport::ExchangeTransport`; this
 //! module only defines the snapshot value type and its wire/disk encoding.
 //! [`Checkpoint::write_to`] / [`Checkpoint::read_from`] stream the same
-//! `CKPT0002` bytes over any `Write`/`Read` (socket frames, spool files),
+//! `CKPT0003` bytes over any `Write`/`Read` (socket frames, spool files),
 //! so every transport speaks one format.
 
 use crate::runtime::flat::{FlatBuffer, FlatLayout};
@@ -34,10 +43,11 @@ use crate::runtime::{Tensor, TensorMap};
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 pub(crate) const MAGIC_V1: &[u8; 8] = b"CKPT0001";
 pub(crate) const MAGIC_V2: &[u8; 8] = b"CKPT0002";
+pub(crate) const MAGIC_V3: &[u8; 8] = b"CKPT0003";
 
 /// Immutable parameter snapshot on the flat plane.
 #[derive(Debug, Clone)]
@@ -51,6 +61,10 @@ pub struct Checkpoint {
     flat: Arc<FlatBuffer>,
     /// Non-f32 leaves (embedding id tables etc.) — usually empty.
     residual: TensorMap,
+    /// Per-window content digests in plane order, computed once (at the
+    /// first publish/save/fetch that needs them, or adopted verified from
+    /// a `CKPT0003` load) and shared by every reader of this snapshot.
+    digests: OnceLock<Arc<Vec<u64>>>,
 }
 
 impl Checkpoint {
@@ -84,6 +98,7 @@ impl Checkpoint {
             step,
             flat: Arc::new(flat),
             residual,
+            digests: OnceLock::new(),
         })
     }
 
@@ -100,12 +115,22 @@ impl Checkpoint {
             step,
             flat,
             residual,
+            digests: OnceLock::new(),
         }
     }
 
     /// The fused f32 plane (zero-copy view shared with the store).
     pub fn flat(&self) -> &Arc<FlatBuffer> {
         &self.flat
+    }
+
+    /// Per-window content digests in plane order. Computed once per
+    /// snapshot (a checkpoint is immutable) and cached, so the publish
+    /// path, the `CKPT0003` writer, and every delta-serving fetch share
+    /// one hashing pass over the plane.
+    pub fn window_digests(&self) -> &Arc<Vec<u64>> {
+        self.digests
+            .get_or_init(|| Arc::new(self.flat.window_digests()))
     }
 
     /// Non-f32 leaves.
@@ -171,8 +196,9 @@ impl Checkpoint {
         self.flat.layout().total_len() + self.residual.prefix_numel("")
     }
 
-    /// Serialize (format `CKPT0002`): window table + the flat plane as one
-    /// contiguous byte slice + residual entries.
+    /// Serialize (format `CKPT0003`): window table with per-window
+    /// digests + the flat plane as one contiguous byte slice + residual
+    /// entries.
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut f = std::io::BufWriter::new(
             std::fs::File::create(path)
@@ -184,9 +210,37 @@ impl Checkpoint {
         f.flush().with_context(|| format!("flushing {}", path.display()))
     }
 
-    /// Stream the `CKPT0002` encoding (the same bytes [`Checkpoint::save`]
+    /// Serialize in the `CKPT0002` format (no digest table) — compat
+    /// writer for consumers of older spools, like [`Checkpoint::save_v1`].
+    pub fn save_v2(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating {}", path.display()))?,
+        );
+        self.write_to_v2(&mut f)?;
+        f.flush().with_context(|| format!("flushing {}", path.display()))
+    }
+
+    /// Stream the `CKPT0003` encoding (the same bytes [`Checkpoint::save`]
     /// puts on disk) into any writer — socket frames, spool temp files.
     pub fn write_to(&self, f: &mut impl Write) -> Result<()> {
+        f.write_all(MAGIC_V3)?;
+        f.write_all(&(self.member as u64).to_le_bytes())?;
+        f.write_all(&self.step.to_le_bytes())?;
+
+        let layout = self.flat.layout();
+        let digests = self.window_digests();
+        f.write_all(&(layout.len() as u64).to_le_bytes())?;
+        for (e, d) in layout.entries().iter().zip(digests.iter()) {
+            write_name(&mut f, &e.name)?;
+            write_shape(&mut f, &e.shape)?;
+            f.write_all(&d.to_le_bytes())?;
+        }
+        self.write_payload_and_residual(f)
+    }
+
+    /// Stream the `CKPT0002` encoding — the digest-free window table.
+    pub fn write_to_v2(&self, f: &mut impl Write) -> Result<()> {
         f.write_all(MAGIC_V2)?;
         f.write_all(&(self.member as u64).to_le_bytes())?;
         f.write_all(&self.step.to_le_bytes())?;
@@ -197,7 +251,12 @@ impl Checkpoint {
             write_name(&mut f, &e.name)?;
             write_shape(&mut f, &e.shape)?;
         }
-        // The whole plane, unframed.
+        self.write_payload_and_residual(f)
+    }
+
+    /// The part of the v2/v3 encodings after the window table: the whole
+    /// plane as one unframed slice, then the framed residual entries.
+    fn write_payload_and_residual(&self, f: &mut impl Write) -> Result<()> {
         f.write_all(&(self.flat.data().len() as u64).to_le_bytes())?;
         write_f32s(&mut f, self.flat.data())?;
 
@@ -259,28 +318,37 @@ impl Checkpoint {
         Self::read_from(&mut f).with_context(|| format!("reading {}", path.display()))
     }
 
-    /// Read either checkpoint format (magic-dispatched) from any reader —
+    /// Read any checkpoint format (magic-dispatched) from any reader —
     /// the inverse of [`Checkpoint::write_to`].
     pub fn read_from(f: &mut impl Read) -> Result<Self> {
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
         match &magic {
-            m if m == MAGIC_V2 => Self::load_v2(f),
+            m if m == MAGIC_V3 => Self::load_contiguous(f, true),
+            m if m == MAGIC_V2 => Self::load_contiguous(f, false),
             m if m == MAGIC_V1 => Self::load_v1(f),
             _ => bail!("bad checkpoint magic"),
         }
     }
 
-    fn load_v2(f: &mut impl Read) -> Result<Self> {
+    /// Shared v2/v3 reader (`with_digests` selects the v3 window table).
+    /// A v3 load recomputes every window digest from the payload and
+    /// verifies it against the stored table: a flipped payload byte is a
+    /// load error here, not a silently-wrong delta basis later.
+    fn load_contiguous(f: &mut impl Read, with_digests: bool) -> Result<Self> {
         let member = read_u64(f)? as usize;
         let step = read_u64(f)?;
 
         let n_windows = read_u64(f)? as usize;
         let mut parts = Vec::with_capacity(n_windows);
+        let mut stored_digests = Vec::with_capacity(if with_digests { n_windows } else { 0 });
         for _ in 0..n_windows {
             let name = read_name(f)?;
             let shape = read_shape(f)?;
             parts.push((name, shape));
+            if with_digests {
+                stored_digests.push(read_u64(f)?);
+            }
         }
         let layout = Arc::new(FlatLayout::from_named_shapes(parts));
 
@@ -296,6 +364,24 @@ impl Checkpoint {
         read_f32s(f, &mut data)?;
         let flat = FlatBuffer::from_data(layout, data)?;
 
+        let digests = OnceLock::new();
+        if with_digests {
+            let computed = flat.window_digests();
+            for (i, (stored, computed)) in
+                stored_digests.iter().zip(&computed).enumerate()
+            {
+                if stored != computed {
+                    bail!(
+                        "checkpoint window {:?} digest mismatch \
+                         (stored {stored:#018x}, payload hashes to {computed:#018x}): \
+                         corrupt payload or digest table",
+                        flat.layout().entries()[i].name
+                    );
+                }
+            }
+            let _ = digests.set(Arc::new(computed));
+        }
+
         let n_residual = read_u64(f)? as usize;
         let mut residual = TensorMap::new();
         for _ in 0..n_residual {
@@ -307,6 +393,7 @@ impl Checkpoint {
             step,
             flat: Arc::new(flat),
             residual,
+            digests,
         })
     }
 
@@ -438,12 +525,14 @@ mod tests {
     }
 
     #[test]
-    fn save_load_roundtrip_v2() {
-        let dir = std::env::temp_dir().join(format!("codistill_ckpt_v2_{}", std::process::id()));
+    fn save_load_roundtrip_v3() {
+        let dir = std::env::temp_dir().join(format!("codistill_ckpt_v3_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("c.ckpt");
         let c = Checkpoint::new(3, 42, mixed_params());
         c.save(&path).unwrap();
+        let raw = std::fs::read(&path).unwrap();
+        assert_eq!(&raw[..8], MAGIC_V3);
         let l = Checkpoint::load(&path).unwrap();
         assert_eq!(l.member, 3);
         assert_eq!(l.step, 42);
@@ -455,6 +544,51 @@ mod tests {
         assert_eq!(p.get("params.w").unwrap().shape(), &[2, 2]);
         assert_eq!(p.get("params.ids").unwrap().as_i32().unwrap(), &[7, 8, 9]);
         assert!(l.flat().layout().same_plane(c.flat().layout()));
+        // the digest table survives the round trip (adopted, not recomputed
+        // lazily: load verified it against the payload)
+        assert_eq!(l.window_digests(), c.window_digests());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_writer_and_reader_stay_compatible() {
+        let dir =
+            std::env::temp_dir().join(format!("codistill_ckpt_v2c_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c2.ckpt");
+        let c = Checkpoint::new(2, 11, mixed_params());
+        c.save_v2(&path).unwrap();
+        let raw = std::fs::read(&path).unwrap();
+        assert_eq!(&raw[..8], MAGIC_V2);
+        let l = Checkpoint::load(&path).unwrap();
+        assert_eq!((l.member, l.step), (2, 11));
+        assert_eq!(l.flat().data(), c.flat().data());
+        // no digest table on disk: digests come from a lazy recompute and
+        // still agree with the publisher's
+        assert_eq!(l.window_digests(), c.window_digests());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v3_load_rejects_corrupt_payload() {
+        let dir =
+            std::env::temp_dir().join(format!("codistill_ckpt_v3corrupt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c3.ckpt");
+        let c = Checkpoint::new(0, 1, mixed_params());
+        c.save(&path).unwrap();
+        // flip one byte of the last payload f32 of params.w: the window
+        // table (incl. digests) stays valid, only the content lies
+        let mut raw = std::fs::read(&path).unwrap();
+        let payload_end_of_w = raw.len()
+            - (8 /* n_residual */ + {
+                // params.ids residual frame: name + shape + tag + 3 i32s
+                4 + "params.ids".len() + 4 + 8 + 1 + 3 * 4
+            });
+        raw[payload_end_of_w - 1] ^= 0x40;
+        std::fs::write(&path, &raw).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("digest mismatch"), "{err:#}");
         std::fs::remove_file(&path).ok();
     }
 
@@ -489,7 +623,7 @@ mod tests {
         let c = Checkpoint::new(5, 99, mixed_params());
         let mut wire: Vec<u8> = Vec::new();
         c.write_to(&mut wire).unwrap();
-        assert_eq!(&wire[..8], MAGIC_V2);
+        assert_eq!(&wire[..8], MAGIC_V3);
 
         let dir = std::env::temp_dir().join(format!("codistill_ckpt_wire_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();

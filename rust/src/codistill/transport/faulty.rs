@@ -11,10 +11,11 @@
 //!   per `(member, step)`) a publication is held back and delivered just
 //!   before that member's *next* publish, so readers see one extra
 //!   cadence of staleness.
-//! * **Dropped / erroring fetches** — a read (`latest`, `latest_at_most`,
-//!   `fetch_windows`) returns `Ok(None)` or `Err` with probabilities
-//!   `drop_fetch_p` / `error_fetch_p`, decided per (member, read-op
-//!   counter).
+//! * **Dropped / erroring fetches** — a read (any [`FetchSpec`] through
+//!   [`ExchangeTransport::fetch`], which `latest`/`latest_at_most`/
+//!   `fetch_windows` shim onto) returns `Ok(None)` or `Err` with
+//!   probabilities `drop_fetch_p` / `error_fetch_p`, decided per
+//!   (member, read-op counter).
 //! * **Stale-window reads** — with probability `stale_read_p` a read is
 //!   served the publication *before* the freshest one, modelling slow
 //!   checkpoint propagation.
@@ -35,7 +36,9 @@
 //! publications never advance the member's published step.
 
 use crate::codistill::store::Checkpoint;
-use crate::codistill::transport::{ExchangeTransport, TransportKind, WindowedFetch};
+use crate::codistill::transport::{
+    ExchangeTransport, FetchResult, FetchSpec, TransportKind, ANY_STEP,
+};
 use crate::prng::Pcg64;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
@@ -301,71 +304,51 @@ impl ExchangeTransport for Faulty {
         self.inner.publish(ckpt)
     }
 
-    fn latest(&self, member: usize) -> Result<Option<Arc<Checkpoint>>> {
-        self.latest_at_most(member, u64::MAX)
-    }
-
-    fn latest_at_most(&self, member: usize, max_step: u64) -> Result<Option<Arc<Checkpoint>>> {
-        let (salt, stale) = match self.read_gate(member)? {
-            ReadGate::Dropped => return Ok(None),
-            ReadGate::Proceed { salt, stale } => (salt, stale),
-        };
-        let fresh = self.inner.latest_at_most(member, max_step)?;
-        if !stale {
-            return Ok(fresh);
-        }
-        let fresh = match fresh {
-            Some(c) => c,
-            None => return Ok(None),
-        };
-        match self
-            .inner
-            .latest_at_most(member, fresh.step.saturating_sub(1))?
-        {
-            Some(older) => {
-                self.record(FaultKind::StaleRead, member, salt);
-                Ok(Some(older))
-            }
-            // Nothing older retained: the fault degrades to a clean read.
-            None => Ok(Some(fresh)),
-        }
-    }
-
-    fn fetch_windows(
-        &self,
-        member: usize,
-        max_step: u64,
-        names: &[String],
-    ) -> Result<Option<WindowedFetch>> {
+    /// The one native read: gate it through the fetch fault classes, then
+    /// delegate to the wrapped backend — with the staleness bound pulled
+    /// one publication behind the freshest on a stale-read fault. Delta
+    /// bases pass through untouched: a stale delta is still answered
+    /// relative to the reader's basis, so an installed plane stays
+    /// byte-identical to a full fetch of whatever (stale) step was
+    /// served.
+    fn fetch(&self, spec: &FetchSpec) -> Result<Option<FetchResult>> {
+        let member = spec.member;
         let (salt, stale) = match self.read_gate(member)? {
             ReadGate::Dropped => return Ok(None),
             ReadGate::Proceed { salt, stale } => (salt, stale),
         };
         if stale {
-            // Cheap metadata probe for the freshest step, then bound the
-            // windowed read one publication behind it.
-            let fresh_step = self
-                .inner
-                .last_steps()?
-                .into_iter()
-                .find(|&(m, _)| m == member)
-                .map(|(_, s)| s);
+            // Resolve the freshest step WITHIN the caller's bound with a
+            // metadata-only probe — the heartbeat for unbounded reads, a
+            // zero-window named fetch (step + tables, no payload) for
+            // bounded ones — then serve the one payload read a
+            // publication behind it. The fault is only recorded when
+            // something older really is served: a degrade-to-clean read
+            // must not skew the reproducibility log.
+            let fresh_step = if spec.max_step == ANY_STEP {
+                self.inner
+                    .last_steps()?
+                    .into_iter()
+                    .find(|&(m, _)| m == member)
+                    .map(|(_, s)| s)
+            } else {
+                self.inner
+                    .fetch(&FetchSpec::named(member, spec.max_step, Vec::new()))?
+                    .map(|r| r.step)
+            };
             if let Some(s) = fresh_step {
-                let bound = max_step.min(s.saturating_sub(1));
-                // Only a fault when the caller's own bound didn't already
-                // exclude the freshest publication — otherwise the read
-                // is identical to a clean one and logging it would skew
-                // the reproducibility log.
-                if bound < max_step {
-                    if let Some(f) = self.inner.fetch_windows(member, bound, names)? {
+                if s > 0 {
+                    let mut stale_spec = spec.clone();
+                    stale_spec.max_step = s - 1;
+                    if let Some(r) = self.inner.fetch(&stale_spec)? {
                         self.record(FaultKind::StaleRead, member, salt);
-                        return Ok(Some(f));
+                        return Ok(Some(r));
                     }
                     // Nothing older retained: degrade to a clean read.
                 }
             }
         }
-        self.inner.fetch_windows(member, max_step, names)
+        self.inner.fetch(spec)
     }
 
     fn members(&self) -> Result<Vec<usize>> {
@@ -453,6 +436,56 @@ mod tests {
             .unwrap()
             .unwrap();
         assert_eq!(f.step, 10);
+        assert!(faulty
+            .fault_log()
+            .iter()
+            .any(|e| e.kind == FaultKind::StaleRead));
+    }
+
+    #[test]
+    fn stale_faults_apply_to_bounded_reads() {
+        let store = Arc::new(InProcess::new(8));
+        let faulty = Faulty::wrap(store, FaultPlan::new(5).with_stale_reads(1.0));
+        for s in [10u64, 20, 30] {
+            faulty.publish(ckpt(0, s, s as f32)).unwrap();
+        }
+        // bounded read: freshest within 20 is step 20, stale serves 10 —
+        // the bound-relative semantics, not "bound already excludes the
+        // absolute freshest, so no fault"
+        assert_eq!(faulty.latest_at_most(0, 20).unwrap().unwrap().step, 10);
+        assert!(faulty
+            .fault_log()
+            .iter()
+            .any(|e| e.kind == FaultKind::StaleRead));
+        // nothing older than the bounded-freshest retained: degrade to a
+        // clean bounded read, and don't log a fault for it
+        let before = faulty.fault_log().len();
+        assert_eq!(faulty.latest_at_most(0, 10).unwrap().unwrap().step, 10);
+        assert_eq!(faulty.fault_log().len(), before);
+    }
+
+    #[test]
+    fn delta_reads_through_faults_stay_byte_identical() {
+        use crate::codistill::transport::DeltaCache;
+        let store = Arc::new(InProcess::new(8));
+        let faulty = Faulty::wrap(store.clone(), FaultPlan::new(6).with_stale_reads(1.0));
+        let mut cache = DeltaCache::new();
+        faulty.publish(ckpt(0, 10, 1.0)).unwrap();
+        faulty.publish(ckpt(0, 20, 2.0)).unwrap();
+        // stale fault: the cache installs step 10, not 20 — and its bytes
+        // equal a direct read of step 10
+        let got = cache.latest(&faulty, 0).unwrap().unwrap();
+        assert_eq!(got.step, 10);
+        let direct = InProcess::latest_at_most(&store, 0, 10).unwrap();
+        assert_eq!(got.flat().data(), direct.flat().data());
+        // the next read sends the installed step-10 basis; the fault
+        // serves step 20, still byte-identical to a full fetch of it
+        faulty.publish(ckpt(0, 30, 3.0)).unwrap();
+        let got = cache.latest(&faulty, 0).unwrap().unwrap();
+        assert_eq!(got.step, 20);
+        let direct = InProcess::latest_at_most(&store, 0, 20).unwrap();
+        assert_eq!(got.flat().data(), direct.flat().data());
+        assert!(cache.stats().delta_fetches >= 1);
         assert!(faulty
             .fault_log()
             .iter()

@@ -6,7 +6,7 @@
 //! byte-for-byte, and the store a [`SocketServer`] serves from.
 //!
 //! An optional disk spool additionally writes every publication as a
-//! `CKPT0002` file (zero-padded, temp+rename — the same naming scheme
+//! `CKPT0003` file (zero-padded, temp+rename — the same naming scheme
 //! [`SpoolDir`] reads), and the history bound is enforced on those files
 //! too: publishing past `history` deletes the member's oldest spool file.
 //!
@@ -15,7 +15,7 @@
 
 use crate::codistill::store::Checkpoint;
 use crate::codistill::transport::{
-    windows_from_checkpoint, ExchangeTransport, TransportKind, WindowedFetch,
+    fetch_from_checkpoint, ExchangeTransport, FetchResult, FetchSpec, TransportKind,
 };
 use crate::codistill::transport::spool::{spool_file_name, spool_temp_name};
 use anyhow::{bail, Result};
@@ -63,7 +63,10 @@ impl InProcess {
             ckpt.save(&tmp)?;
             std::fs::rename(&tmp, dir.join(spool_file_name(ckpt.member, ckpt.step)))?;
             crate::codistill::transport::spool::prune_spool(dir, self.history)?;
-            crate::codistill::transport::spool::write_manifest(dir)?;
+            crate::codistill::transport::spool::write_manifest(
+                dir,
+                Some((ckpt.member, ckpt.step, ckpt.window_digests().as_slice())),
+            )?;
         }
         let mut inner = self.inner.lock().unwrap();
         let hist = inner.entry(ckpt.member).or_default();
@@ -137,22 +140,13 @@ impl ExchangeTransport for InProcess {
         InProcess::publish(self, ckpt)
     }
 
-    fn latest(&self, member: usize) -> Result<Option<Arc<Checkpoint>>> {
-        Ok(InProcess::latest(self, member))
-    }
-
-    fn latest_at_most(&self, member: usize, max_step: u64) -> Result<Option<Arc<Checkpoint>>> {
-        Ok(InProcess::latest_at_most(self, member, max_step))
-    }
-
-    fn fetch_windows(
-        &self,
-        member: usize,
-        max_step: u64,
-        names: &[String],
-    ) -> Result<Option<WindowedFetch>> {
-        match InProcess::latest_at_most(self, member, max_step) {
-            Some(ckpt) => Ok(Some(windows_from_checkpoint(&ckpt, names)?)),
+    /// The one native read: resolve in-memory history, then answer the
+    /// spec from the shared snapshot — a no-basis full fetch hands the
+    /// `Arc<Checkpoint>` over zero-copy, a delta fetch compares digest
+    /// tables against the shared buffer and copies only changed windows.
+    fn fetch(&self, spec: &FetchSpec) -> Result<Option<FetchResult>> {
+        match InProcess::latest_at_most(self, spec.member, spec.max_step) {
+            Some(ckpt) => Ok(Some(fetch_from_checkpoint(&ckpt, spec)?)),
             None => Ok(None),
         }
     }
@@ -171,7 +165,7 @@ impl ExchangeTransport for InProcess {
         // prune actually removed something.
         if let Some(dir) = &self.spool {
             if crate::codistill::transport::spool::prune_spool(dir, self.history)? > 0 {
-                crate::codistill::transport::spool::write_manifest(dir)?;
+                crate::codistill::transport::spool::write_manifest(dir, None)?;
             }
         }
         Ok(())
@@ -280,7 +274,7 @@ mod tests {
             .collect();
         names.sort();
         assert_eq!(names, vec![spool_file_name(0, 3), spool_file_name(0, 4)]);
-        // and they load back through the v2 reader
+        // and they load back through the magic-dispatched reader
         let l = Checkpoint::load(&dir.join(spool_file_name(0, 4))).unwrap();
         assert_eq!(l.flat().view("params.w").unwrap(), &[4.0, 4.0]);
         std::fs::remove_dir_all(&dir).ok();

@@ -2,52 +2,74 @@
 //!
 //! The paper's systems argument (§2.1) is that codistillation scales
 //! because teachers only need **rarely transmitted** parameter snapshots —
-//! which makes the transmission medium swappable. This module fixes one
-//! API, [`ExchangeTransport`], and ships three interchangeable backends
-//! that move the identical `CKPT0002` flat-plane bytes:
+//! which makes the transmission medium swappable, and makes each
+//! transmission worth shrinking. This module fixes one API,
+//! [`ExchangeTransport`], and ships interchangeable backends that move the
+//! identical flat-plane bytes:
 //!
 //! * [`InProcess`] — the zero-copy `Arc<FlatBuffer>` store: publisher,
 //!   history, and every reader share one buffer. The default for
 //!   single-process runs and the reference implementation the other
 //!   backends must match byte-for-byte.
-//! * [`SpoolDir`] — checkpoints as `CKPT0002` files in a shared directory
+//! * [`SpoolDir`] — checkpoints as `CKPT0003` files in a shared directory
 //!   (one file per publication, written temp+rename so readers never see
-//!   a torn file) plus an atomic `MANIFEST`. Separate coordinator
-//!   processes exchange by pointing at the same directory; reads can
-//!   `pread` just the windows they need out of the contiguous payload.
+//!   a torn file) plus an atomic `MANIFEST` that also persists each
+//!   checkpoint's per-window digest table. Separate coordinator processes
+//!   exchange by pointing at the same directory; reads `pread` only the
+//!   windows they need out of the contiguous payload.
 //! * [`Socket`](SocketTransport) — a length-prefixed request/response
-//!   protocol over TCP or Unix sockets against a [`SocketServer`]. A
-//!   member can pull a teacher's full plane in one response or *shard*
-//!   the fetch: ask for the window table first, then request only the
-//!   named [`FlatLayout`](crate::runtime::flat::FlatLayout) windows it
-//!   needs, in batches.
+//!   protocol over TCP or Unix sockets against a [`SocketServer`].
+//! * [`Faulty`] — a decorator over any backend: a seeded [`FaultPlan`]
+//!   deterministically injects delayed publishes, dropped/erroring
+//!   fetches, stale reads, and scripted member blackouts, so every §2.2
+//!   failure mode is a reproducible `cargo test` scenario
+//!   (`tests/coordinator_faults.rs`) instead of a hope about real
+//!   networks.
 //!
-//! ## Sharded (windowed) fetch
+//! ## One read path: [`ExchangeTransport::fetch`]
 //!
-//! [`ExchangeTransport::fetch_windows`] is the window-addressed read: give
-//! it a member, a staleness bound, and window names, and it returns just
-//! those slices of the freshest matching plane plus enough metadata to
-//! place them ([`WindowedFetch`]). `InProcess` slices the shared buffer,
-//! `SpoolDir` `pread`s byte ranges out of the checkpoint file, and the
-//! socket client turns it into a wire request the server answers from its
-//! own in-process store. `netsim::ClusterModel::sharded_exchange_time`
-//! prices exactly this path against the full-plane pull.
+//! Every read is one operation: a [`FetchSpec`] names the member, a
+//! staleness bound, an optional delta [`Basis`] (the step and per-window
+//! digest table of the reader's installed copy), and a window scope
+//! ([`WindowSel::All`] or [`WindowSel::Named`]). The [`FetchResult`]
+//! carries the source plane's window table and digest table, the payload
+//! of every window whose content **differs** from the basis, and the
+//! names of the windows skipped as `unchanged` — enough metadata to prove
+//! the reader's patched plane is byte-identical to a full fetch. With no
+//! basis, a fetch degenerates to the classic full read (and in-memory
+//! backends hand the whole checkpoint over zero-copy via
+//! [`FetchResult::full`]).
 //!
-//! ## Fault injection
+//! The historical reads are thin shims over `fetch`:
+//! [`ExchangeTransport::latest`] / [`ExchangeTransport::latest_at_most`]
+//! are a no-basis full-plane spec, [`ExchangeTransport::fetch_windows`] a
+//! no-basis named-window spec — so each backend implements exactly one
+//! read natively.
 //!
-//! [`Faulty`] is a decorator over any backend: a seeded [`FaultPlan`]
-//! deterministically injects delayed publishes, dropped/erroring fetches,
-//! stale-window reads, and scripted member blackouts, so every §2.2
-//! failure mode is a reproducible `cargo test` scenario
-//! (`tests/coordinator_faults.rs`) instead of a hope about real networks.
+//! ## Incremental (delta) exchange
+//!
+//! [`DeltaCache`] is the reader side: it keeps one installed plane (and
+//! digest basis) per teacher, sends the basis with every fetch, patches
+//! changed windows in place via
+//! [`FlatBuffer::write_window`](crate::runtime::flat::FlatBuffer), and
+//! hands out ordinary `Arc<Checkpoint>`s whose bytes are identical to a
+//! full fetch (`tests/transport_equivalence.rs` pins this on every
+//! backend). Steady-state exchanges move only what changed —
+//! `netsim::ClusterModel::delta_exchange_time` prices exactly this
+//! against the full-plane pull. Backends serve deltas natively:
+//! `InProcess` compares digest tables against the shared buffer,
+//! `SpoolDir` `pread`s only changed byte ranges, and the socket protocol
+//! has a dedicated `DELTA` opcode (basis digests up, changed windows
+//! down).
 //!
 //! ## Liveness heartbeats
 //!
 //! [`ExchangeTransport::last_steps`] returns `(member, freshest step)`
 //! pairs without moving checkpoint payloads — an in-memory scan for
 //! [`InProcess`], a manifest parse for [`SpoolDir`], a dedicated opcode
-//! for the socket protocol. The coordinator's liveness table is built
-//! from these heartbeats.
+//! for the socket protocol. The coordinator's liveness table and the
+//! default [`ExchangeTransport::staleness`] probe are built from these
+//! heartbeats.
 //!
 //! ## Garbage collection
 //!
@@ -67,7 +89,10 @@ pub use socket::{SocketServer, SocketTransport};
 pub use spool::SpoolDir;
 
 use crate::codistill::store::Checkpoint;
-use anyhow::{bail, Result};
+use crate::runtime::flat::{content_digest, FlatBuffer, FlatLayout};
+use crate::runtime::TensorMap;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
 use std::sync::Arc;
 
 /// `max_step` value meaning "no staleness bound: freshest available".
@@ -101,8 +126,8 @@ impl TransportKind {
     }
 }
 
-/// One window pulled by a sharded fetch: the name, its shape, and the
-/// contiguous slice of the publisher's plane.
+/// One window pulled by a fetch: the name, its shape, and the contiguous
+/// slice of the publisher's plane.
 #[derive(Debug, Clone)]
 pub struct FetchedWindow {
     pub name: String,
@@ -127,13 +152,192 @@ impl WindowedFetch {
     }
 }
 
+/// Which windows a fetch addresses.
+#[derive(Debug, Clone)]
+pub enum WindowSel {
+    /// The whole plane (the teacher-reload path).
+    All,
+    /// Only these named windows, answered in request order (the sharded
+    /// path). Unknown names are an error: the caller's layout disagrees
+    /// with the publisher's plane.
+    Named(Vec<String>),
+}
+
+/// A reader's installed copy of a member's plane, as a delta basis: the
+/// step it was installed at and its per-window content digests **in the
+/// publisher's plane order** (the order `FetchResult::parts` lists).
+/// A basis whose digest count disagrees with the source plane's window
+/// count is ignored (the plane was reshaped) and the fetch degenerates to
+/// a full read.
+#[derive(Debug, Clone)]
+pub struct Basis {
+    pub step: u64,
+    pub digests: Vec<u64>,
+}
+
+/// One read request (see [`ExchangeTransport::fetch`]).
+#[derive(Debug, Clone)]
+pub struct FetchSpec {
+    pub member: usize,
+    /// Staleness bound: freshest checkpoint with `step <= max_step`
+    /// ([`ANY_STEP`] = freshest available, the paper semantics).
+    pub max_step: u64,
+    /// Installed basis for delta fetch; `None` = full read.
+    pub basis: Option<Basis>,
+    pub windows: WindowSel,
+}
+
+impl FetchSpec {
+    /// Full-plane, no-basis read of the freshest checkpoint with
+    /// `step <= max_step` — the [`ExchangeTransport::latest_at_most`]
+    /// shim's spec.
+    pub fn full(member: usize, max_step: u64) -> Self {
+        FetchSpec {
+            member,
+            max_step,
+            basis: None,
+            windows: WindowSel::All,
+        }
+    }
+
+    /// Named-window, no-basis read — the
+    /// [`ExchangeTransport::fetch_windows`] shim's spec.
+    pub fn named(member: usize, max_step: u64, names: Vec<String>) -> Self {
+        FetchSpec {
+            member,
+            max_step,
+            basis: None,
+            windows: WindowSel::Named(names),
+        }
+    }
+
+    /// Attach a delta basis.
+    pub fn with_basis(mut self, basis: Basis) -> Self {
+        self.basis = Some(basis);
+        self
+    }
+}
+
+/// Result of [`ExchangeTransport::fetch`]: everything a reader needs to
+/// make its installed plane byte-identical to the source checkpoint, and
+/// to prove it (the digest table covers every window, fetched or
+/// skipped).
+#[derive(Debug, Clone)]
+pub struct FetchResult {
+    pub member: usize,
+    /// Step of the checkpoint this fetch was answered from.
+    pub step: u64,
+    /// Window table `(name, shape)` of the source plane, in plane order.
+    pub parts: Vec<(String, Vec<usize>)>,
+    /// Per-window content digests aligned with `parts`.
+    pub digests: Vec<u64>,
+    /// Payloads of the requested windows whose content differs from the
+    /// basis (all requested windows when there is no applicable basis).
+    /// Request order for [`WindowSel::Named`], plane order for
+    /// [`WindowSel::All`].
+    pub windows: Vec<FetchedWindow>,
+    /// Requested windows skipped because the basis digest matched.
+    pub unchanged: Vec<String>,
+    /// Non-f32 leaves of the checkpoint (usually empty).
+    pub residual: TensorMap,
+    /// Zero-copy whole-checkpoint hand-off, set when the backend can
+    /// share its in-memory snapshot for a no-basis full-plane fetch
+    /// (`InProcess`, the spool read cache, a reassembled windowed socket
+    /// pull). `windows` is empty when this is set.
+    pub full: Option<Arc<Checkpoint>>,
+}
+
+impl FetchResult {
+    /// Parameter payload bytes this fetch moved: the whole plane for a
+    /// zero-copy full hand-off, otherwise the fetched windows only — the
+    /// quantity the delta bench records and `netsim` prices.
+    pub fn payload_bytes(&self) -> u64 {
+        match &self.full {
+            Some(ck) => ck.flat().layout().total_bytes() as u64,
+            None => self.windows.iter().map(|w| w.data.len() as u64 * 4).sum(),
+        }
+    }
+
+    /// Total bytes of the source plane (what a full fetch would move).
+    pub fn total_bytes(&self) -> u64 {
+        self.parts
+            .iter()
+            .map(|(_, shape)| shape.iter().product::<usize>() as u64 * 4)
+            .sum()
+    }
+
+    /// Materialize a whole checkpoint. Only a full result qualifies: a
+    /// delta (some windows unchanged-and-absent) cannot stand alone.
+    pub fn into_checkpoint(self) -> Result<Arc<Checkpoint>> {
+        if let Some(full) = self.full {
+            return Ok(full);
+        }
+        if !self.unchanged.is_empty() || self.windows.len() != self.parts.len() {
+            bail!(
+                "fetch result carries {} of {} windows ({} unchanged): \
+                 a delta cannot materialize a checkpoint without its basis",
+                self.windows.len(),
+                self.parts.len(),
+                self.unchanged.len()
+            );
+        }
+        verify_fetched_windows(&self.windows, &self.parts, &self.digests)?;
+        let layout = Arc::new(FlatLayout::from_named_shapes(self.parts));
+        let mut buf = FlatBuffer::zeros(layout);
+        for w in &self.windows {
+            buf.write_window(&w.name, &w.data)?;
+        }
+        Ok(Arc::new(Checkpoint::from_flat(
+            self.member,
+            self.step,
+            Arc::new(buf),
+            self.residual,
+        )))
+    }
+
+    /// View as the historical [`WindowedFetch`] (the
+    /// [`ExchangeTransport::fetch_windows`] shim).
+    pub fn into_windowed(self) -> Result<WindowedFetch> {
+        if !self.unchanged.is_empty() {
+            bail!(
+                "fetch result skipped {} unchanged windows: not a full windowed fetch",
+                self.unchanged.len()
+            );
+        }
+        let windows = match &self.full {
+            Some(ck) => {
+                let flat = ck.flat();
+                flat.layout()
+                    .entries()
+                    .iter()
+                    .map(|e| FetchedWindow {
+                        name: e.name.clone(),
+                        shape: e.shape.clone(),
+                        data: flat.data()[e.range()].to_vec(),
+                    })
+                    .collect()
+            }
+            None => self.windows,
+        };
+        Ok(WindowedFetch {
+            member: self.member,
+            step: self.step,
+            windows,
+        })
+    }
+}
+
 /// One checkpoint-exchange medium. All methods take `&self`: transports
 /// are shared (`Arc<dyn ExchangeTransport>`) between the orchestrator and
 /// any number of members/threads.
 ///
 /// Reads are racy by design (the paper's exchange is asynchronous): a
-/// `latest` observed now may be superseded a step later. The only ordering
+/// fetch observed now may be superseded a step later. The only ordering
 /// guarantee is per-member step monotonicity of publications.
+///
+/// [`ExchangeTransport::fetch`] is the one read every backend implements
+/// natively; `latest`/`latest_at_most`/`fetch_windows` are provided shims
+/// over it.
 pub trait ExchangeTransport: Send + Sync {
     /// Which backend this is.
     fn kind(&self) -> TransportKind;
@@ -142,25 +346,44 @@ pub trait ExchangeTransport: Send + Sync {
     /// member.
     fn publish(&self, ckpt: Checkpoint) -> Result<()>;
 
+    /// The unified, delta-aware read (module docs): resolve the freshest
+    /// checkpoint within `spec.max_step`, answer the requested windows,
+    /// and — when `spec.basis` applies — skip the ones whose content
+    /// digest matches the basis. `Ok(None)` while no checkpoint matches;
+    /// unknown window names are an error.
+    fn fetch(&self, spec: &FetchSpec) -> Result<Option<FetchResult>>;
+
     /// Freshest available checkpoint from a member (paper semantics);
-    /// `None` while the member has never published.
-    fn latest(&self, member: usize) -> Result<Option<Arc<Checkpoint>>>;
+    /// `None` while the member has never published. Shim over
+    /// [`ExchangeTransport::fetch`].
+    fn latest(&self, member: usize) -> Result<Option<Arc<Checkpoint>>> {
+        self.latest_at_most(member, ANY_STEP)
+    }
 
     /// Freshest checkpoint from a member with `step <= max_step`
-    /// (explicit staleness injection). `max_step == ANY_STEP` is
-    /// equivalent to [`ExchangeTransport::latest`].
-    fn latest_at_most(&self, member: usize, max_step: u64) -> Result<Option<Arc<Checkpoint>>>;
+    /// (explicit staleness injection). Shim over
+    /// [`ExchangeTransport::fetch`]: a full-plane, no-basis spec.
+    fn latest_at_most(&self, member: usize, max_step: u64) -> Result<Option<Arc<Checkpoint>>> {
+        match self.fetch(&FetchSpec::full(member, max_step))? {
+            Some(r) => Ok(Some(r.into_checkpoint()?)),
+            None => Ok(None),
+        }
+    }
 
     /// Sharded fetch: only the named windows of the freshest checkpoint
-    /// from `member` with `step <= max_step`. Unknown window names are an
-    /// error (the caller's layout disagrees with the publisher's plane);
-    /// an absent checkpoint is `Ok(None)`.
+    /// from `member` with `step <= max_step`. Shim over
+    /// [`ExchangeTransport::fetch`]: a named-window, no-basis spec.
     fn fetch_windows(
         &self,
         member: usize,
         max_step: u64,
         names: &[String],
-    ) -> Result<Option<WindowedFetch>>;
+    ) -> Result<Option<WindowedFetch>> {
+        match self.fetch(&FetchSpec::named(member, max_step, names.to_vec()))? {
+            Some(r) => Ok(Some(r.into_windowed()?)),
+            None => Ok(None),
+        }
+    }
 
     /// Members that have published at least once, ascending.
     fn members(&self) -> Result<Vec<usize>>;
@@ -187,13 +410,21 @@ pub trait ExchangeTransport: Send + Sync {
     fn gc(&self) -> Result<()>;
 
     /// Staleness (in steps) a reader at `now` would observe for a member.
+    /// Routed through the metadata-only [`ExchangeTransport::last_steps`]
+    /// heartbeat: a staleness probe must never pull a checkpoint payload
+    /// over a spool or socket just to read a step number.
     fn staleness(&self, member: usize, now: u64) -> Result<Option<u64>> {
-        Ok(self.latest(member)?.map(|c| now.saturating_sub(c.step)))
+        Ok(self
+            .last_steps()?
+            .into_iter()
+            .find(|&(m, _)| m == member)
+            .map(|(_, step)| now.saturating_sub(step)))
     }
 }
 
 /// Slice a checkpoint held in memory into a [`WindowedFetch`] — the
-/// shared read path for [`InProcess`] and the socket server.
+/// legacy window read shared by the socket server's `FETCH` opcode and
+/// the spool's v1-file fallback.
 pub(crate) fn windows_from_checkpoint(
     ckpt: &Checkpoint,
     names: &[String],
@@ -222,9 +453,386 @@ pub(crate) fn windows_from_checkpoint(
     })
 }
 
+/// Partition a plane's requested windows into (indices to fetch,
+/// unchanged names) — the window-selection / basis-validity / digest-skip
+/// core shared by every backend's native read (in-memory slice or spool
+/// pread; only the IO differs, so the semantics cannot diverge). Unknown
+/// names in a [`WindowSel::Named`] scope are an error.
+pub(crate) fn partition_windows(
+    layout: &FlatLayout,
+    digests: &[u64],
+    spec: &FetchSpec,
+) -> Result<(Vec<usize>, Vec<String>)> {
+    let requested: Vec<usize> = match &spec.windows {
+        WindowSel::All => (0..layout.len()).collect(),
+        WindowSel::Named(names) => names
+            .iter()
+            .map(|n| {
+                layout
+                    .position(n)
+                    .ok_or_else(|| anyhow::anyhow!("plane has no window {n:?}"))
+            })
+            .collect::<Result<_>>()?,
+    };
+    // A basis only applies when it describes a plane of the same window
+    // count; anything else means the plane was reshaped — full read.
+    let basis = spec
+        .basis
+        .as_ref()
+        .filter(|b| b.digests.len() == layout.len());
+    let mut fetch = Vec::new();
+    let mut unchanged = Vec::new();
+    for idx in requested {
+        match basis {
+            Some(b) if b.digests[idx] == digests[idx] => {
+                unchanged.push(layout.entries()[idx].name.clone())
+            }
+            _ => fetch.push(idx),
+        }
+    }
+    Ok((fetch, unchanged))
+}
+
+/// Answer a [`FetchSpec`] from a checkpoint held in memory — the shared
+/// native read for [`InProcess`] (and through it the socket server) and
+/// the spool's cached/v1 paths. Digest comparison, basis-validity, and
+/// the zero-copy full hand-off live here once.
+pub(crate) fn fetch_from_checkpoint(
+    ckpt: &Arc<Checkpoint>,
+    spec: &FetchSpec,
+) -> Result<FetchResult> {
+    let flat = ckpt.flat();
+    let layout = flat.layout();
+    // Every result carries the window+digest tables — the metadata that
+    // lets a reader prove (and seed) a delta basis. That costs one small
+    // name/shape clone per window even on the zero-copy full path; the
+    // payload itself is never copied there, and the tables are a few KB
+    // on a reload cadence of dozens of steps, so the uniform contract
+    // wins over shaving the last allocation.
+    let parts: Vec<(String, Vec<usize>)> = layout
+        .entries()
+        .iter()
+        .map(|e| (e.name.clone(), e.shape.clone()))
+        .collect();
+    let digests: Vec<u64> = ckpt.window_digests().as_ref().clone();
+    let basis_applies = spec
+        .basis
+        .as_ref()
+        .map(|b| b.digests.len() == parts.len())
+        .unwrap_or(false);
+
+    if !basis_applies {
+        if let WindowSel::All = spec.windows {
+            // Zero-copy: hand the whole in-memory snapshot over.
+            return Ok(FetchResult {
+                member: ckpt.member,
+                step: ckpt.step,
+                parts,
+                digests,
+                windows: Vec::new(),
+                unchanged: Vec::new(),
+                residual: ckpt.residual().clone(),
+                full: Some(ckpt.clone()),
+            });
+        }
+    }
+
+    let (fetch_idx, unchanged) = partition_windows(layout, &digests, spec)
+        .with_context(|| format!("member {} step {}", ckpt.member, ckpt.step))?;
+    let mut windows = Vec::with_capacity(fetch_idx.len());
+    for idx in fetch_idx {
+        let e = &layout.entries()[idx];
+        windows.push(FetchedWindow {
+            name: e.name.clone(),
+            shape: e.shape.clone(),
+            data: flat.data()[e.range()].to_vec(),
+        });
+    }
+    Ok(FetchResult {
+        member: ckpt.member,
+        step: ckpt.step,
+        parts,
+        digests,
+        windows,
+        unchanged,
+        residual: ckpt.residual().clone(),
+        full: None,
+    })
+}
+
+/// Check every fetched window's bytes against the digest table it rode
+/// in with — the install-side half of the "corrupt payloads fail loudly
+/// instead of poisoning a delta basis" guarantee (the publish-side half
+/// is the `CKPT0003` verify-on-load). Without this, a flipped byte in a
+/// spool payload would be installed AND its pre-corruption digest
+/// adopted as the basis, so every later fetch would skip the window as
+/// "unchanged" and the corruption would persist silently. For in-memory
+/// backends the hash is redundant (windows are copied out of the buffer
+/// the table was computed from) but it only touches the changed bytes.
+fn verify_fetched_windows(
+    windows: &[FetchedWindow],
+    parts: &[(String, Vec<usize>)],
+    digests: &[u64],
+) -> Result<()> {
+    for w in windows {
+        let idx = match parts.iter().position(|(n, _)| n == &w.name) {
+            Some(i) => i,
+            None => bail!("fetched window {:?} is not in the plane's window table", w.name),
+        };
+        let got = content_digest(&w.data);
+        if got != digests[idx] {
+            bail!(
+                "window {:?}: fetched payload hashes to {got:#018x}, digest table says \
+                 {:#018x} — corrupt delta payload",
+                w.name,
+                digests[idx]
+            );
+        }
+    }
+    Ok(())
+}
+
+// -------------------------------------------------------- delta reader
+
+/// Accumulated accounting of a [`DeltaCache`] reader's traffic.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DeltaStats {
+    /// Fetches that moved (or zero-copy shared) the whole plane.
+    pub full_fetches: u64,
+    /// Fetches answered as a delta against an installed basis.
+    pub delta_fetches: u64,
+    /// Windows whose payload was actually moved/installed.
+    pub windows_moved: u64,
+    /// Windows skipped because their digest matched the basis.
+    pub windows_unchanged: u64,
+    /// Parameter payload bytes moved (full planes count whole).
+    pub payload_bytes: u64,
+}
+
+impl DeltaStats {
+    /// Fold another reader's accounting into this one (the single point
+    /// of truth for aggregating per-reader caches into a run total).
+    pub fn merge(&mut self, other: DeltaStats) {
+        self.full_fetches += other.full_fetches;
+        self.delta_fetches += other.delta_fetches;
+        self.windows_moved += other.windows_moved;
+        self.windows_unchanged += other.windows_unchanged;
+        self.payload_bytes += other.payload_bytes;
+    }
+}
+
+/// One teacher's installed plane: the buffer delta fetches patch, plus
+/// the digest basis sent with the next fetch.
+struct InstalledPlane {
+    step: u64,
+    flat: Arc<FlatBuffer>,
+    digests: Vec<u64>,
+    residual: TensorMap,
+}
+
+impl InstalledPlane {
+    /// Whether the source plane still has our exact window set (names +
+    /// shapes, in order) — the precondition for applying a delta.
+    fn matches(&self, parts: &[(String, Vec<usize>)]) -> bool {
+        let entries = self.flat.layout().entries();
+        entries.len() == parts.len()
+            && entries
+                .iter()
+                .zip(parts)
+                .all(|(e, (name, shape))| e.name == *name && e.shape == *shape)
+    }
+}
+
+/// The reader side of incremental exchange: a per-teacher cache of
+/// installed planes. Each read sends the installed digest [`Basis`],
+/// applies the returned delta in place via
+/// [`FlatBuffer::write_window`](crate::runtime::flat::FlatBuffer::write_window)
+/// (copy-on-write when a previously handed-out checkpoint still shares
+/// the buffer), and returns an ordinary `Arc<Checkpoint>` byte-identical
+/// to a full fetch. Falls back to a full read whenever the publisher's
+/// plane no longer matches the basis.
+///
+/// Not thread-safe by itself (`&mut self`): each coordinator/orchestrator
+/// run owns one.
+#[derive(Default)]
+pub struct DeltaCache {
+    planes: HashMap<usize, InstalledPlane>,
+    stats: DeltaStats,
+}
+
+impl DeltaCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Traffic accounting so far.
+    pub fn stats(&self) -> DeltaStats {
+        self.stats
+    }
+
+    /// Step of the installed plane for a member, if any.
+    pub fn installed_step(&self, member: usize) -> Option<u64> {
+        self.planes.get(&member).map(|p| p.step)
+    }
+
+    /// Delta-aware `latest`: freshest available checkpoint, moving only
+    /// changed windows when a basis is installed.
+    pub fn latest(
+        &mut self,
+        transport: &dyn ExchangeTransport,
+        member: usize,
+    ) -> Result<Option<Arc<Checkpoint>>> {
+        self.latest_at_most(transport, member, ANY_STEP)
+    }
+
+    /// Delta-aware `latest_at_most` (see [`DeltaCache::latest`]).
+    pub fn latest_at_most(
+        &mut self,
+        transport: &dyn ExchangeTransport,
+        member: usize,
+        max_step: u64,
+    ) -> Result<Option<Arc<Checkpoint>>> {
+        let basis = self.planes.get(&member).map(|p| Basis {
+            step: p.step,
+            digests: p.digests.clone(),
+        });
+        let spec = FetchSpec {
+            member,
+            max_step,
+            basis,
+            windows: WindowSel::All,
+        };
+        match transport.fetch(&spec)? {
+            Some(res) => self.install(transport, max_step, res, true),
+            None => Ok(None),
+        }
+    }
+
+    /// Install one fetch result and hand out the resulting checkpoint.
+    fn install(
+        &mut self,
+        transport: &dyn ExchangeTransport,
+        max_step: u64,
+        res: FetchResult,
+        allow_refetch: bool,
+    ) -> Result<Option<Arc<Checkpoint>>> {
+        let FetchResult {
+            member,
+            step,
+            parts,
+            digests,
+            windows,
+            unchanged,
+            residual,
+            full,
+        } = res;
+
+        // Zero-copy full hand-off (first fetch, in-memory backends).
+        if let Some(full) = full {
+            self.stats.full_fetches += 1;
+            self.stats.windows_moved += parts.len() as u64;
+            self.stats.payload_bytes += full.flat().layout().total_bytes() as u64;
+            self.planes.insert(
+                member,
+                InstalledPlane {
+                    step,
+                    flat: full.flat().clone(),
+                    digests,
+                    residual: full.residual().clone(),
+                },
+            );
+            return Ok(Some(full));
+        }
+
+        // Every installed byte must hash to the digest it will be
+        // remembered by — see `verify_fetched_windows`.
+        verify_fetched_windows(&windows, &parts, &digests)?;
+
+        let complete = unchanged.is_empty() && windows.len() == parts.len();
+        let matches = self
+            .planes
+            .get(&member)
+            .map(|p| p.matches(&parts))
+            .unwrap_or(false);
+
+        if !matches {
+            if !complete {
+                // The publisher's plane no longer matches the basis we
+                // sent, yet the answer is still a delta (a positional
+                // digest coincidence across a reshaped plane). Drop the
+                // basis and fetch fresh once.
+                if !allow_refetch {
+                    bail!(
+                        "member {member}: basis-free fetch still returned a partial plane \
+                         ({} of {} windows)",
+                        windows.len(),
+                        parts.len()
+                    );
+                }
+                self.planes.remove(&member);
+                return match transport.fetch(&FetchSpec::full(member, max_step))? {
+                    Some(r) => self.install(transport, max_step, r, false),
+                    None => Ok(None),
+                };
+            }
+            // Full rebuild from a complete window set.
+            let layout = Arc::new(FlatLayout::from_named_shapes(parts));
+            let mut buf = FlatBuffer::zeros(layout);
+            for w in &windows {
+                buf.write_window(&w.name, &w.data)?;
+            }
+            self.stats.full_fetches += 1;
+            self.stats.windows_moved += windows.len() as u64;
+            self.stats.payload_bytes +=
+                windows.iter().map(|w| w.data.len() as u64 * 4).sum::<u64>();
+            let flat = Arc::new(buf);
+            self.planes.insert(
+                member,
+                InstalledPlane {
+                    step,
+                    flat: flat.clone(),
+                    digests,
+                    residual: residual.clone(),
+                },
+            );
+            return Ok(Some(Arc::new(Checkpoint::from_flat(
+                member, step, flat, residual,
+            ))));
+        }
+
+        // Delta apply: patch changed windows into the installed plane.
+        // Arc::make_mut is copy-on-write: in place when no handed-out
+        // checkpoint still shares the buffer, one local clone otherwise —
+        // either way the transport moved only the changed bytes. An
+        // all-unchanged fetch touches nothing at all.
+        let plane = self.planes.get_mut(&member).expect("matches checked");
+        if !windows.is_empty() {
+            let buf = Arc::make_mut(&mut plane.flat);
+            for w in &windows {
+                buf.write_window(&w.name, &w.data)?;
+            }
+        }
+        plane.step = step;
+        plane.digests = digests;
+        plane.residual = residual;
+        self.stats.delta_fetches += 1;
+        self.stats.windows_moved += windows.len() as u64;
+        self.stats.windows_unchanged += unchanged.len() as u64;
+        self.stats.payload_bytes +=
+            windows.iter().map(|w| w.data.len() as u64 * 4).sum::<u64>();
+        Ok(Some(Arc::new(Checkpoint::from_flat(
+            member,
+            plane.step,
+            plane.flat.clone(),
+            plane.residual.clone(),
+        ))))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::{Tensor, TensorMap};
 
     #[test]
     fn kind_parse_roundtrip() {
@@ -258,5 +866,120 @@ mod tests {
             ],
         };
         assert_eq!(f.payload_bytes(), (3 + 4) * 4);
+    }
+
+    fn two_window_ckpt(member: usize, step: u64, a: f32, b: f32) -> Arc<Checkpoint> {
+        let mut params = TensorMap::new();
+        params.insert("params.a", Tensor::f32(&[2], vec![a, a]).unwrap());
+        params.insert("params.b", Tensor::f32(&[3], vec![b, b, b]).unwrap());
+        Arc::new(Checkpoint::new(member, step, params))
+    }
+
+    #[test]
+    fn fetch_from_checkpoint_full_is_zero_copy() {
+        let ck = two_window_ckpt(0, 5, 1.0, 2.0);
+        let res = fetch_from_checkpoint(&ck, &FetchSpec::full(0, ANY_STEP)).unwrap();
+        assert_eq!(res.step, 5);
+        assert_eq!(res.parts.len(), 2);
+        assert_eq!(res.digests.len(), 2);
+        assert!(res.windows.is_empty() && res.unchanged.is_empty());
+        let full = res.full.as_ref().expect("full hand-off");
+        assert!(Arc::ptr_eq(full, &ck), "full fetch copied the checkpoint");
+        assert_eq!(res.payload_bytes(), (2 + 3) * 4);
+        assert_eq!(res.total_bytes(), (2 + 3) * 4);
+    }
+
+    #[test]
+    fn fetch_from_checkpoint_delta_skips_unchanged() {
+        let v1 = two_window_ckpt(0, 5, 1.0, 2.0);
+        let v2 = two_window_ckpt(0, 9, 1.0, 3.0); // params.a unchanged
+        let basis = Basis {
+            step: 5,
+            digests: v1.window_digests().as_ref().clone(),
+        };
+        let res =
+            fetch_from_checkpoint(&v2, &FetchSpec::full(0, ANY_STEP).with_basis(basis)).unwrap();
+        assert!(res.full.is_none());
+        assert_eq!(res.unchanged, vec!["params.a".to_string()]);
+        assert_eq!(res.windows.len(), 1);
+        assert_eq!(res.windows[0].name, "params.b");
+        assert_eq!(res.windows[0].data, vec![3.0; 3]);
+        assert_eq!(res.payload_bytes(), 3 * 4);
+        // a basis of the wrong arity is ignored: full read
+        let bad = Basis {
+            step: 5,
+            digests: vec![0; 7],
+        };
+        let res =
+            fetch_from_checkpoint(&v2, &FetchSpec::full(0, ANY_STEP).with_basis(bad)).unwrap();
+        assert!(res.full.is_some(), "invalid basis should degrade to full");
+    }
+
+    #[test]
+    fn fetch_result_into_checkpoint_rejects_partial() {
+        let v1 = two_window_ckpt(0, 5, 1.0, 2.0);
+        let v2 = two_window_ckpt(0, 9, 1.0, 3.0);
+        let basis = Basis {
+            step: 5,
+            digests: v1.window_digests().as_ref().clone(),
+        };
+        let res =
+            fetch_from_checkpoint(&v2, &FetchSpec::full(0, ANY_STEP).with_basis(basis)).unwrap();
+        assert!(res.into_checkpoint().is_err(), "delta materialized alone");
+    }
+
+    #[test]
+    fn delta_cache_installs_byte_identical_planes() {
+        let store = InProcess::new(8);
+        let t: &dyn ExchangeTransport = &store;
+        let mut cache = DeltaCache::new();
+
+        store.publish((*two_window_ckpt(0, 5, 1.0, 2.0)).clone()).unwrap();
+        let first = cache.latest(t, 0).unwrap().unwrap();
+        assert_eq!(first.step, 5);
+        assert_eq!(cache.stats().full_fetches, 1);
+        assert_eq!(cache.installed_step(0), Some(5));
+
+        // only params.b changes: the second fetch is a delta
+        store.publish((*two_window_ckpt(0, 9, 1.0, 3.0)).clone()).unwrap();
+        let second = cache.latest(t, 0).unwrap().unwrap();
+        let direct = InProcess::latest(&store, 0).unwrap();
+        assert_eq!(second.step, 9);
+        assert_eq!(second.flat().data(), direct.flat().data());
+        let stats = cache.stats();
+        assert_eq!(stats.delta_fetches, 1);
+        assert_eq!(stats.windows_unchanged, 1);
+        assert_eq!(stats.windows_moved, 2 + 1); // full(2) + delta(1)
+        // the first handed-out checkpoint kept its pre-delta bytes
+        assert_eq!(first.flat().view("params.b").unwrap(), &[2.0; 3]);
+
+        // nothing changed: a re-fetch moves zero windows
+        let third = cache.latest(t, 0).unwrap().unwrap();
+        assert_eq!(third.flat().data(), direct.flat().data());
+        assert_eq!(cache.stats().windows_moved, 3);
+        assert_eq!(cache.stats().windows_unchanged, 1 + 2);
+        assert!(cache.latest(t, 7).unwrap().is_none(), "absent member");
+    }
+
+    #[test]
+    fn delta_cache_rebuilds_on_reshaped_plane() {
+        let store = InProcess::new(8);
+        let t: &dyn ExchangeTransport = &store;
+        let mut cache = DeltaCache::new();
+        store.publish((*two_window_ckpt(0, 1, 1.0, 2.0)).clone()).unwrap();
+        cache.latest(t, 0).unwrap().unwrap();
+
+        // the member's plane grows a window: basis arity no longer fits
+        let mut params = TensorMap::new();
+        params.insert("params.a", Tensor::f32(&[2], vec![4.0, 4.0]).unwrap());
+        params.insert("params.b", Tensor::f32(&[3], vec![5.0; 3]).unwrap());
+        params.insert("params.c", Tensor::f32(&[1], vec![6.0]).unwrap());
+        store.publish(Checkpoint::new(0, 2, params)).unwrap();
+
+        let got = cache.latest(t, 0).unwrap().unwrap();
+        let direct = InProcess::latest(&store, 0).unwrap();
+        assert_eq!(got.flat().data(), direct.flat().data());
+        assert!(got.flat().layout().same_plane(direct.flat().layout()));
+        assert_eq!(cache.stats().full_fetches, 2);
     }
 }

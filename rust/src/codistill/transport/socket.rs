@@ -24,10 +24,21 @@
 //! | 5 `MEMBERS`  | — | n u64, member u64s |
 //! | 6 `GC`       | — | — |
 //! | 7 `STEPS`    | — | n u64, (member u64, step u64) pairs |
+//! | 8 `DELTA`    | member u64, max_step u64, basis u8 [step u64, n u64, digests u64s], sel u8 [n u32, names] | member, step, window+digest table (n u64; name, shape, digest u64), changed windows (n u32; name, shape, elems u64, f32 data), unchanged names (n u32; names), residual tensors (n u64; frames) |
 //!
 //! `STEPS` is the liveness heartbeat: the freshest published step per
 //! member with no checkpoint payload attached, so a coordinator can poll
 //! it on every reload without moving planes.
+//!
+//! `DELTA` is the one read the client's [`ExchangeTransport::fetch`]
+//! speaks: the request carries an optional delta basis (`basis u8` = 1 ⇒
+//! installed step + per-window digest vector) and a window selection
+//! (`sel u8` = 0 ⇒ whole plane, 1 ⇒ named windows), and the response
+//! returns only the windows whose content digest differs from the basis,
+//! plus the full window+digest table and the names skipped as unchanged —
+//! the server-side twin of `transport::fetch_from_checkpoint`. `LATEST` /
+//! `FETCH` / `DESCRIBE` remain for older readers and for the windowed
+//! reassembly mode below.
 //!
 //! ## Concurrency
 //!
@@ -56,8 +67,8 @@ use crate::codistill::store::{
     write_name, write_shape, Checkpoint,
 };
 use crate::codistill::transport::{
-    windows_from_checkpoint, ExchangeTransport, FetchedWindow, InProcess, TransportKind,
-    WindowedFetch,
+    fetch_from_checkpoint, windows_from_checkpoint, Basis, ExchangeTransport, FetchResult,
+    FetchSpec, FetchedWindow, InProcess, TransportKind, WindowSel, WindowedFetch,
 };
 use crate::runtime::flat::{FlatBuffer, FlatLayout};
 use crate::runtime::{Tensor, TensorMap};
@@ -78,6 +89,7 @@ const OP_DESCRIBE: u8 = 4;
 const OP_MEMBERS: u8 = 5;
 const OP_GC: u8 = 6;
 const OP_STEPS: u8 = 7;
+const OP_DELTA: u8 = 8;
 
 /// Bound on concurrently served connections: accepts past the cap wait
 /// for a worker slot to free instead of spawning unboundedly.
@@ -129,6 +141,18 @@ fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
     let mut buf = vec![0u8; n];
     r.read_exact(&mut buf)?;
     Ok(Some(buf))
+}
+
+/// Guard a wire-supplied element count against the bytes actually left
+/// in the frame (each element needs at least `min_bytes` of encoding): a
+/// malformed count becomes a protocol error on this connection, never a
+/// huge `Vec::with_capacity` that could panic the worker or abort the
+/// process.
+fn checked_count(n: usize, remaining: usize, min_bytes: usize, what: &str) -> Result<usize> {
+    if n > remaining / min_bytes.max(1) {
+        bail!("frame claims {n} {what} but only {remaining} bytes remain");
+    }
+    Ok(n)
 }
 
 fn write_framed_tensor(w: &mut impl Write, name: &str, t: &Tensor) -> Result<()> {
@@ -464,7 +488,7 @@ fn try_handle(store: &InProcess, payload: &[u8]) -> Result<Vec<u8>> {
         OP_FETCH => {
             let member = read_u64(&mut r)? as usize;
             let max_step = read_u64(&mut r)?;
-            let n = read_u32(&mut r)? as usize;
+            let n = checked_count(read_u32(&mut r)? as usize, r.len(), 4, "names")?;
             let mut names = Vec::with_capacity(n);
             for _ in 0..n {
                 names.push(read_name(&mut r)?);
@@ -533,6 +557,95 @@ fn try_handle(store: &InProcess, payload: &[u8]) -> Result<Vec<u8>> {
                 out.extend_from_slice(&s.to_le_bytes());
             }
             Ok(out)
+        }
+        OP_DELTA => {
+            let member = read_u64(&mut r)? as usize;
+            let max_step = read_u64(&mut r)?;
+            let mut flag = [0u8; 1];
+            r.read_exact(&mut flag)?;
+            let basis = match flag[0] {
+                0 => None,
+                1 => {
+                    let step = read_u64(&mut r)?;
+                    let n = checked_count(read_u64(&mut r)? as usize, r.len(), 8, "digests")?;
+                    let mut digests = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        digests.push(read_u64(&mut r)?);
+                    }
+                    Some(Basis { step, digests })
+                }
+                other => bail!("bad basis flag {other}"),
+            };
+            r.read_exact(&mut flag)?;
+            let windows = match flag[0] {
+                0 => WindowSel::All,
+                1 => {
+                    let n = checked_count(read_u32(&mut r)? as usize, r.len(), 4, "names")?;
+                    let mut names = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        names.push(read_name(&mut r)?);
+                    }
+                    WindowSel::Named(names)
+                }
+                other => bail!("bad window selection flag {other}"),
+            };
+            let spec = FetchSpec {
+                member,
+                max_step,
+                basis,
+                windows,
+            };
+            // The server IS an InProcess store: answer with its native
+            // fetch so this path can never diverge from the reference
+            // backend.
+            match ExchangeTransport::fetch(store, &spec)? {
+                Some(res) => {
+                    let mut out = vec![STATUS_OK];
+                    out.extend_from_slice(&(res.member as u64).to_le_bytes());
+                    out.extend_from_slice(&res.step.to_le_bytes());
+                    out.extend_from_slice(&(res.parts.len() as u64).to_le_bytes());
+                    for ((name, shape), d) in res.parts.iter().zip(&res.digests) {
+                        write_name(&mut out, name)?;
+                        write_shape(&mut out, shape)?;
+                        out.extend_from_slice(&d.to_le_bytes());
+                    }
+                    // A zero-copy full hand-off has no wire analogue:
+                    // expand it into windows straight off the shared plane.
+                    match &res.full {
+                        Some(ck) => {
+                            let flat = ck.flat();
+                            let entries = flat.layout().entries();
+                            out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+                            for e in entries {
+                                write_name(&mut out, &e.name)?;
+                                write_shape(&mut out, &e.shape)?;
+                                out.extend_from_slice(&(e.len as u64).to_le_bytes());
+                                write_f32s(&mut out, &flat.data()[e.range()])?;
+                            }
+                        }
+                        None => {
+                            out.extend_from_slice(&(res.windows.len() as u32).to_le_bytes());
+                            for w in &res.windows {
+                                write_name(&mut out, &w.name)?;
+                                write_shape(&mut out, &w.shape)?;
+                                out.extend_from_slice(&(w.data.len() as u64).to_le_bytes());
+                                write_f32s(&mut out, &w.data)?;
+                            }
+                        }
+                    }
+                    out.extend_from_slice(&(res.unchanged.len() as u32).to_le_bytes());
+                    for name in &res.unchanged {
+                        write_name(&mut out, name)?;
+                    }
+                    let residual = res.residual.prefix_entries("");
+                    out.extend_from_slice(&(residual.len() as u64).to_le_bytes());
+                    for (name, t) in residual {
+                        write_framed_tensor(&mut out, name, t)?;
+                    }
+                    Ok(out)
+                }
+                None => Ok(vec![STATUS_NONE]),
+            }
         }
         other => bail!("unknown opcode {other}"),
     }
@@ -700,23 +813,27 @@ impl SocketTransport {
         }))
     }
 
-    /// Full checkpoint via sharded fetch: describe, then pull windows in
-    /// batches pinned to the described step, then reassemble.
-    fn latest_windowed(
+    /// Full plane via sharded reassembly: describe, then pull windows in
+    /// `batch`-sized `FETCH` requests pinned to the described step, then
+    /// hand the reassembled checkpoint over as a zero-copy full result
+    /// (digests computed locally — a pure function of the bytes, so they
+    /// equal the server's).
+    fn windowed_full_fetch(
         &self,
         member: usize,
         max_step: u64,
         batch: usize,
-    ) -> Result<Option<Arc<Checkpoint>>> {
+    ) -> Result<Option<FetchResult>> {
         let desc = match self.describe(member, max_step)? {
             Some(d) => d,
             None => return Ok(None),
         };
-        let layout = Arc::new(FlatLayout::from_named_shapes(desc.parts));
+        let layout = Arc::new(FlatLayout::from_named_shapes(desc.parts.clone()));
         let mut buf = FlatBuffer::zeros(layout.clone());
         let names: Vec<String> = layout.names().map(|s| s.to_string()).collect();
         for chunk in names.chunks(batch) {
-            let fetch = ExchangeTransport::fetch_windows(self, member, desc.step, chunk)?
+            let fetch = self
+                .wire_fetch_windows(member, desc.step, chunk)?
                 .context("checkpoint pruned between describe and fetch")?;
             if fetch.step != desc.step {
                 bail!(
@@ -729,46 +846,28 @@ impl SocketTransport {
                 buf.write_window(&w.name, &w.data)?;
             }
         }
-        Ok(Some(Arc::new(Checkpoint::from_flat(
+        let digests = buf.window_digests();
+        let ckpt = Arc::new(Checkpoint::from_flat(
             desc.member,
             desc.step,
             Arc::new(buf),
-            desc.residual,
-        ))))
-    }
-}
-
-impl ExchangeTransport for SocketTransport {
-    fn kind(&self) -> TransportKind {
-        TransportKind::Socket
-    }
-
-    fn publish(&self, ckpt: Checkpoint) -> Result<()> {
-        let mut req = vec![OP_PUBLISH];
-        ckpt.write_to(&mut req)?;
-        self.roundtrip(&req)?
-            .context("publish returned not-found")?;
-        Ok(())
+            desc.residual.clone(),
+        ));
+        Ok(Some(FetchResult {
+            member: desc.member,
+            step: desc.step,
+            parts: desc.parts,
+            digests,
+            windows: Vec::new(),
+            unchanged: Vec::new(),
+            residual: desc.residual,
+            full: Some(ckpt),
+        }))
     }
 
-    fn latest(&self, member: usize) -> Result<Option<Arc<Checkpoint>>> {
-        self.latest_at_most(member, u64::MAX)
-    }
-
-    fn latest_at_most(&self, member: usize, max_step: u64) -> Result<Option<Arc<Checkpoint>>> {
-        if let Some(batch) = self.windowed {
-            return self.latest_windowed(member, max_step, batch);
-        }
-        let mut req = vec![OP_LATEST];
-        req.extend_from_slice(&(member as u64).to_le_bytes());
-        req.extend_from_slice(&max_step.to_le_bytes());
-        match self.roundtrip(&req)? {
-            Some(body) => Ok(Some(Arc::new(Checkpoint::read_from(&mut body.as_slice())?))),
-            None => Ok(None),
-        }
-    }
-
-    fn fetch_windows(
+    /// The raw `FETCH` wire op: named windows of the freshest checkpoint
+    /// within `max_step`, in request order.
+    fn wire_fetch_windows(
         &self,
         member: usize,
         max_step: u64,
@@ -788,12 +887,12 @@ impl ExchangeTransport for SocketTransport {
         let mut r = body.as_slice();
         let member = read_u64(&mut r)? as usize;
         let step = read_u64(&mut r)?;
-        let n = read_u32(&mut r)? as usize;
+        let n = checked_count(read_u32(&mut r)? as usize, r.len(), 16, "windows")?;
         let mut windows = Vec::with_capacity(n);
         for _ in 0..n {
             let name = read_name(&mut r)?;
             let shape = read_shape(&mut r)?;
-            let elems = read_u64(&mut r)? as usize;
+            let elems = checked_count(read_u64(&mut r)? as usize, r.len(), 4, "f32s")?;
             let mut data = vec![0f32; elems];
             crate::codistill::store::read_f32s(&mut r, &mut data)?;
             windows.push(FetchedWindow { name, shape, data });
@@ -802,6 +901,121 @@ impl ExchangeTransport for SocketTransport {
             member,
             step,
             windows,
+        }))
+    }
+}
+
+impl ExchangeTransport for SocketTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Socket
+    }
+
+    fn publish(&self, ckpt: Checkpoint) -> Result<()> {
+        let mut req = vec![OP_PUBLISH];
+        ckpt.write_to(&mut req)?;
+        self.roundtrip(&req)?
+            .context("publish returned not-found")?;
+        Ok(())
+    }
+
+    /// The one native read: a full no-basis fetch pulls the whole
+    /// checkpoint in one `LATEST` stream (or reassembles it window by
+    /// window in windowed mode); anything else — a delta basis or a named
+    /// scope — is one `DELTA` round trip moving only changed windows.
+    fn fetch(&self, spec: &FetchSpec) -> Result<Option<FetchResult>> {
+        if spec.basis.is_none() {
+            if let WindowSel::All = spec.windows {
+                if let Some(batch) = self.windowed {
+                    return self.windowed_full_fetch(spec.member, spec.max_step, batch);
+                }
+                // Whole checkpoint as one CKPT0003 stream: the digest
+                // table rides the header, verified on read.
+                let mut req = vec![OP_LATEST];
+                req.extend_from_slice(&(spec.member as u64).to_le_bytes());
+                req.extend_from_slice(&spec.max_step.to_le_bytes());
+                let ckpt = match self.roundtrip(&req)? {
+                    Some(body) => Arc::new(Checkpoint::read_from(&mut body.as_slice())?),
+                    None => return Ok(None),
+                };
+                return Ok(Some(fetch_from_checkpoint(
+                    &ckpt,
+                    &FetchSpec::full(spec.member, spec.max_step),
+                )?));
+            }
+        }
+        let mut req = vec![OP_DELTA];
+        req.extend_from_slice(&(spec.member as u64).to_le_bytes());
+        req.extend_from_slice(&spec.max_step.to_le_bytes());
+        match &spec.basis {
+            Some(b) => {
+                req.push(1);
+                req.extend_from_slice(&b.step.to_le_bytes());
+                req.extend_from_slice(&(b.digests.len() as u64).to_le_bytes());
+                for d in &b.digests {
+                    req.extend_from_slice(&d.to_le_bytes());
+                }
+            }
+            None => req.push(0),
+        }
+        match &spec.windows {
+            WindowSel::All => req.push(0),
+            WindowSel::Named(names) => {
+                req.push(1);
+                req.extend_from_slice(&(names.len() as u32).to_le_bytes());
+                for name in names {
+                    write_name(&mut req, name)?;
+                }
+            }
+        }
+        let body = match self.roundtrip(&req)? {
+            Some(b) => b,
+            None => return Ok(None),
+        };
+        let mut r = body.as_slice();
+        let member = read_u64(&mut r)? as usize;
+        let step = read_u64(&mut r)?;
+        // The counts below come off the wire too: bound them against the
+        // bytes actually present so a garbled response is an error, not
+        // an absurd allocation.
+        let n_parts = checked_count(read_u64(&mut r)? as usize, r.len(), 16, "windows")?;
+        let mut parts = Vec::with_capacity(n_parts);
+        let mut digests = Vec::with_capacity(n_parts);
+        for _ in 0..n_parts {
+            let name = read_name(&mut r)?;
+            let shape = read_shape(&mut r)?;
+            parts.push((name, shape));
+            digests.push(read_u64(&mut r)?);
+        }
+        let n_changed = checked_count(read_u32(&mut r)? as usize, r.len(), 16, "windows")?;
+        let mut windows = Vec::with_capacity(n_changed);
+        for _ in 0..n_changed {
+            let name = read_name(&mut r)?;
+            let shape = read_shape(&mut r)?;
+            let elems = checked_count(read_u64(&mut r)? as usize, r.len(), 4, "f32s")?;
+            let mut data = vec![0f32; elems];
+            crate::codistill::store::read_f32s(&mut r, &mut data)?;
+            windows.push(FetchedWindow { name, shape, data });
+        }
+        let n_unchanged = checked_count(read_u32(&mut r)? as usize, r.len(), 4, "names")?;
+        let mut unchanged = Vec::with_capacity(n_unchanged);
+        for _ in 0..n_unchanged {
+            unchanged.push(read_name(&mut r)?);
+        }
+        let n_residual = read_u64(&mut r)? as usize;
+        let mut residual = TensorMap::new();
+        for _ in 0..n_residual {
+            let (name, t) = read_framed_tensor(&mut r)?;
+            residual.insert(name, t);
+        }
+        Ok(Some(FetchResult {
+            member,
+            step,
+            parts,
+            digests,
+            windows,
+            unchanged,
+            residual,
+            full: None,
         }))
     }
 
@@ -931,6 +1145,54 @@ mod tests {
             .fetch_windows(0, u64::MAX, &["params.nope".to_string()])
             .unwrap_err();
         assert!(format!("{err:#}").contains("no window"), "{err:#}");
+    }
+
+    #[test]
+    fn delta_opcode_moves_only_changed_windows() {
+        use crate::codistill::transport::Basis;
+        let server = SocketServer::bind_tcp("127.0.0.1:0", 4).unwrap();
+        let client = SocketTransport::connect_tcp(server.addr());
+        client.publish(ckpt(0, 1, &[1.0, 2.0, 3.0, 4.0, 5.0])).unwrap();
+        let v1 = client.latest(0).unwrap().unwrap();
+        let basis = Basis {
+            step: 1,
+            digests: v1.window_digests().as_ref().clone(),
+        };
+        // params.b changes, params.a does not
+        client.publish(ckpt(0, 2, &[1.0, 2.0, 9.0, 9.0, 9.0])).unwrap();
+        let res = client
+            .fetch(&FetchSpec::full(0, u64::MAX).with_basis(basis.clone()))
+            .unwrap()
+            .unwrap();
+        assert_eq!(res.step, 2);
+        assert!(res.full.is_none());
+        assert_eq!(res.unchanged, vec!["params.a".to_string()]);
+        assert_eq!(res.windows.len(), 1);
+        assert_eq!(res.windows[0].name, "params.b");
+        assert_eq!(res.windows[0].data, vec![9.0, 9.0, 9.0]);
+        assert_eq!(res.payload_bytes(), 3 * 4);
+        assert_eq!(res.parts.len(), 2);
+        assert_eq!(res.digests.len(), 2);
+        // residual (i32) leaves ride the delta wire too
+        assert_eq!(
+            res.residual.get("params.ids").unwrap().as_i32().unwrap(),
+            &[4, 2]
+        );
+        // named scope + basis over the wire
+        let res = client
+            .fetch(
+                &FetchSpec::named(0, u64::MAX, vec!["params.a".into(), "params.b".into()])
+                    .with_basis(basis),
+            )
+            .unwrap()
+            .unwrap();
+        assert_eq!(res.unchanged, vec!["params.a".to_string()]);
+        assert_eq!(res.windows.len(), 1);
+        // absent member stays a clean None through DELTA
+        assert!(client
+            .fetch(&FetchSpec::full(9, u64::MAX))
+            .unwrap()
+            .is_none());
     }
 
     #[test]

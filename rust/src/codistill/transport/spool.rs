@@ -5,26 +5,34 @@
 //!
 //! ## Layout of a spool directory
 //!
-//! * `memberNNNN_stepNNNNNNNNNNNNNNNNNNNN.ckpt` — one `CKPT0002` file per
-//!   publication. Member and step are zero-padded so lexicographic
-//!   directory order equals (member, step) order: manifest recovery after
-//!   a crash is a plain sorted scan. Files are written to a hidden
-//!   `.tmp_*` name and atomically renamed into place, so a concurrent
-//!   reader (this process or another) never observes a torn checkpoint.
+//! * `memberNNNN_stepNNNNNNNNNNNNNNNNNNNN.ckpt` — one `CKPT0003` file per
+//!   publication (older `CKPT0002`/`CKPT0001` files still read). Member
+//!   and step are zero-padded so lexicographic directory order equals
+//!   (member, step) order: manifest recovery after a crash is a plain
+//!   sorted scan. Files are written to a hidden `.tmp_*` name and
+//!   atomically renamed into place, so a concurrent reader (this process
+//!   or another) never observes a torn checkpoint.
 //! * `MANIFEST` — an atomic (write-temp+rename) text snapshot of the
-//!   published set: a header line, then `member step filename` per
-//!   checkpoint. Rewritten from a full directory scan on every publish
-//!   and gc, so concurrent publishers converge; readers fall back to the
-//!   directory scan whenever the manifest is missing or unparsable.
+//!   published set: a header line, then
+//!   `member step filename [digest...]` per checkpoint, the trailing hex
+//!   fields being the checkpoint's per-window content digests (read out
+//!   of its `CKPT0003` header). Rewritten from a full directory scan on
+//!   every publish and gc, so concurrent publishers converge; readers
+//!   fall back to the directory scan whenever the manifest is missing or
+//!   unparsable, and to the file's own header whenever a digest column is
+//!   absent.
 //!
 //! ## Reads
 //!
-//! `latest`/`latest_at_most` load the whole file (one contiguous payload
-//! read). [`SpoolDir::fetch_windows`] is the sharded path: it parses only
-//! the `CKPT0002` header, then `pread`s (seek + exact read) the byte
-//! ranges of the requested [`FlatLayout`] windows out of the contiguous
-//! payload — an exchange over a shared file system where each reader
-//! moves only the windows it needs.
+//! [`ExchangeTransport::fetch`] is the one native read. A no-basis
+//! full-plane spec loads the whole file through the read cache (one
+//! contiguous payload read, repeat reads of one step served from memory).
+//! Anything else — named windows, or a delta [`Basis`] — parses only the
+//! checkpoint header, compares the basis against the file's digest table
+//! (or the manifest's, for digest-free `CKPT0002` files published by a
+//! digest-aware writer), then `pread`s (seek + exact read) exactly the
+//! byte ranges of the windows whose content changed: an exchange over a
+//! shared file system where each reader moves only the bytes it needs.
 //!
 //! Two processes exchange by constructing `SpoolDir::open` on the same
 //! directory (or one side may be an
@@ -32,14 +40,17 @@
 //! `.with_spool(dir)` — it writes the identical files).
 //!
 //! [`FlatLayout`]: crate::runtime::flat::FlatLayout
+//! [`Basis`]: crate::codistill::transport::Basis
 
 use crate::codistill::store::{
-    read_name, read_shape, read_u64, Checkpoint, MAGIC_V1, MAGIC_V2,
+    read_framed_tensor, read_name, read_shape, read_u64, Checkpoint, MAGIC_V1, MAGIC_V2, MAGIC_V3,
 };
 use crate::codistill::transport::{
-    windows_from_checkpoint, ExchangeTransport, FetchedWindow, TransportKind, WindowedFetch,
+    fetch_from_checkpoint, partition_windows, ExchangeTransport, FetchResult, FetchSpec,
+    FetchedWindow, TransportKind, WindowSel,
 };
 use crate::runtime::flat::FlatLayout;
+use crate::runtime::TensorMap;
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeMap, HashMap};
 use std::io::{Read, Seek, SeekFrom};
@@ -47,7 +58,10 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 const MANIFEST: &str = "MANIFEST";
-const MANIFEST_HEADER: &str = "SPOOLMANIFEST v1";
+/// Current manifest header (v2: digest columns after the filename).
+const MANIFEST_HEADER: &str = "SPOOLMANIFEST v2";
+/// Digest-free manifests from older builds still parse.
+const MANIFEST_HEADER_V1: &str = "SPOOLMANIFEST v1";
 
 /// Canonical spool file name: zero-padded so lexicographic order equals
 /// (member, step) order — 4 digits cover the paper's member counts, 20
@@ -95,16 +109,40 @@ fn scan_dir(dir: &Path) -> Result<BTreeMap<usize, Vec<u64>>> {
 /// publisher into a spool directory must call this after adding/pruning
 /// files ([`SpoolDir::publish`] and `InProcess::with_spool` both do), so
 /// readers that prefer the manifest converge on the true published set.
-pub(crate) fn write_manifest(dir: &Path) -> Result<()> {
+/// Each line also persists the checkpoint's per-window digest table so
+/// delta readers can price and verify an exchange from manifest metadata
+/// alone. A publisher passes its fresh checkpoint's digests as
+/// `fresh = (member, step, digests)` — authoritative for that file even
+/// when it overwrote an equal-step publication, and saving the header
+/// read for it.
+pub(crate) fn write_manifest(dir: &Path, fresh: Option<(usize, u64, &[u64])>) -> Result<()> {
     let scan = scan_dir(dir)?;
+    // Remaining digest columns: reuse the previous manifest's (files
+    // other than `fresh` are immutable while listed) and header-read only
+    // files covered by neither, keeping the publish path at O(1) file
+    // opens instead of O(members × history).
+    let prior = read_manifest_digests(dir).unwrap_or_default();
     let mut text = String::from(MANIFEST_HEADER);
     text.push('\n');
     for (member, steps) in &scan {
         for step in steps {
-            text.push_str(&format!(
-                "{member} {step} {}\n",
-                spool_file_name(*member, *step)
-            ));
+            let file = spool_file_name(*member, *step);
+            text.push_str(&format!("{member} {step} {file}"));
+            // Best-effort: v1/v2 files (or a file pruned mid-scan) simply
+            // get no column and readers fall back to the file header.
+            let digests = match fresh {
+                Some((fm, fs, fd)) if fm == *member && fs == *step => Some(fd.to_vec()),
+                _ => prior
+                    .get(&(*member, *step))
+                    .cloned()
+                    .or_else(|| read_file_digests(&dir.join(&file))),
+            };
+            if let Some(digests) = digests {
+                for d in digests {
+                    text.push_str(&format!(" {d:016x}"));
+                }
+            }
+            text.push('\n');
         }
     }
     let tmp = dir.join(format!(".tmp_{}_{MANIFEST}", std::process::id()));
@@ -113,16 +151,33 @@ pub(crate) fn write_manifest(dir: &Path) -> Result<()> {
     Ok(())
 }
 
+/// The digest table in a spool file's `CKPT0003` header; `None` for
+/// older formats or any parse failure.
+fn read_file_digests(path: &Path) -> Option<Vec<u64>> {
+    let file = std::fs::File::open(path).ok()?;
+    parse_plane_header(std::io::BufReader::new(file))
+        .ok()
+        .flatten()
+        .and_then(|h| h.digests)
+}
+
+/// Manifest lines split into the published set; `None` when the manifest
+/// is missing or unparsable.
+fn manifest_lines(dir: &Path) -> Option<String> {
+    let text = std::fs::read_to_string(dir.join(MANIFEST)).ok()?;
+    let header = text.lines().next()?;
+    if header != MANIFEST_HEADER && header != MANIFEST_HEADER_V1 {
+        return None;
+    }
+    Some(text)
+}
+
 /// Read the published set from the manifest; `None` when it is missing or
 /// unparsable (callers fall back to a directory scan).
 fn read_manifest(dir: &Path) -> Option<BTreeMap<usize, Vec<u64>>> {
-    let text = std::fs::read_to_string(dir.join(MANIFEST)).ok()?;
-    let mut lines = text.lines();
-    if lines.next()? != MANIFEST_HEADER {
-        return None;
-    }
+    let text = manifest_lines(dir)?;
     let mut out: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
-    for line in lines {
+    for line in text.lines().skip(1) {
         if line.trim().is_empty() {
             continue;
         }
@@ -134,6 +189,31 @@ fn read_manifest(dir: &Path) -> Option<BTreeMap<usize, Vec<u64>>> {
     for steps in out.values_mut() {
         steps.sort_unstable();
         steps.dedup();
+    }
+    Some(out)
+}
+
+/// The digest columns the manifest persists, keyed by (member, step);
+/// `None` when the manifest is missing or unparsable. Entries without
+/// digest columns are simply absent.
+pub(crate) fn read_manifest_digests(dir: &Path) -> Option<HashMap<(usize, u64), Vec<u64>>> {
+    let text = manifest_lines(dir)?;
+    let mut out = HashMap::new();
+    for line in text.lines().skip(1) {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let member: usize = parts.next()?.parse().ok()?;
+        let step: u64 = parts.next()?.parse().ok()?;
+        let _file = parts.next()?;
+        let digests: Vec<u64> = parts
+            .map(|p| u64::from_str_radix(p, 16))
+            .collect::<Result<_, _>>()
+            .ok()?;
+        if !digests.is_empty() {
+            out.insert((member, step), digests);
+        }
     }
     Some(out)
 }
@@ -157,12 +237,15 @@ pub(crate) fn prune_spool(dir: &Path, history: usize) -> Result<usize> {
     Ok(pruned)
 }
 
-/// `CKPT0002` header: everything before the payload, plus where the
-/// payload starts — enough to address any window's bytes in the file.
-struct V2Header {
+/// `CKPT0002`/`CKPT0003` header: everything before the payload, plus
+/// where the payload starts — enough to address any window's bytes in
+/// the file, and (v3) the digest table a delta fetch compares against.
+struct PlaneHeader {
     member: usize,
     step: u64,
     layout: FlatLayout,
+    /// Per-window content digests in plane order (`CKPT0003` only).
+    digests: Option<Vec<u64>>,
     /// Absolute file offset of the first payload byte.
     payload_start: u64,
 }
@@ -181,26 +264,32 @@ impl<R: Read> Read for CountingReader<R> {
     }
 }
 
-/// Parse a v2 header from the start of `r`. Returns `None` for a v1 file
-/// (no contiguous payload to address — callers load it whole).
-fn parse_v2_header(r: impl Read) -> Result<Option<V2Header>> {
+/// Parse a v2/v3 header from the start of `r`. Returns `None` for a v1
+/// file (no contiguous payload to address — callers load it whole).
+fn parse_plane_header(r: impl Read) -> Result<Option<PlaneHeader>> {
     let mut f = CountingReader { inner: r, pos: 0 };
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
     if &magic == MAGIC_V1 {
         return Ok(None);
     }
-    if &magic != MAGIC_V2 {
-        bail!("bad checkpoint magic");
-    }
+    let with_digests = match &magic {
+        m if m == MAGIC_V3 => true,
+        m if m == MAGIC_V2 => false,
+        _ => bail!("bad checkpoint magic"),
+    };
     let member = read_u64(&mut f)? as usize;
     let step = read_u64(&mut f)?;
     let n_windows = read_u64(&mut f)? as usize;
     let mut parts = Vec::with_capacity(n_windows);
+    let mut digests = Vec::with_capacity(if with_digests { n_windows } else { 0 });
     for _ in 0..n_windows {
         let name = read_name(&mut f)?;
         let shape = read_shape(&mut f)?;
         parts.push((name, shape));
+        if with_digests {
+            digests.push(read_u64(&mut f)?);
+        }
     }
     let layout = FlatLayout::from_named_shapes(parts);
     let payload_elems = read_u64(&mut f)? as usize;
@@ -211,10 +300,11 @@ fn parse_v2_header(r: impl Read) -> Result<Option<V2Header>> {
             layout.total_len()
         );
     }
-    Ok(Some(V2Header {
+    Ok(Some(PlaneHeader {
         member,
         step,
         layout,
+        digests: with_digests.then_some(digests),
         payload_start: f.pos,
     }))
 }
@@ -305,15 +395,27 @@ impl SpoolDir {
         }
     }
 
-    /// Windowed `pread` of one checkpoint file: parse the header, then
-    /// seek + read exactly the requested windows' byte ranges. `Ok(None)`
-    /// when the file has vanished (callers re-resolve).
-    fn try_pread_windows(
-        &self,
-        member: usize,
-        step: u64,
-        names: &[String],
-    ) -> Result<Option<WindowedFetch>> {
+    /// Answer one fetch from the checkpoint file at (member, step).
+    /// `Ok(None)` when the file has vanished (callers re-resolve).
+    fn try_fetch_at(&self, spec: &FetchSpec, step: u64) -> Result<Option<FetchResult>> {
+        // The classic full read: whole-file load through the read cache,
+        // answered zero-copy from memory on repeat reads of one step.
+        if spec.basis.is_none() && matches!(spec.windows, WindowSel::All) {
+            return match self.try_load_at(spec.member, step)? {
+                Some(ckpt) => Ok(Some(fetch_from_checkpoint(&ckpt, spec)?)),
+                None => Ok(None),
+            };
+        }
+        self.try_pread_fetch(spec, step)
+    }
+
+    /// Windowed/delta `pread` of one checkpoint file: parse the header,
+    /// drop every requested window whose digest matches the basis, then
+    /// seek + read exactly the remaining windows' byte ranges (plus the
+    /// small residual section after the payload). `Ok(None)` when the
+    /// file has vanished (callers re-resolve).
+    fn try_pread_fetch(&self, spec: &FetchSpec, step: u64) -> Result<Option<FetchResult>> {
+        let member = spec.member;
         let path = self.dir.join(spool_file_name(member, step));
         let file = match std::fs::File::open(&path) {
             Ok(f) => f,
@@ -323,40 +425,85 @@ impl SpoolDir {
             }
         };
         let mut reader = std::io::BufReader::new(file);
-        let header = parse_v2_header(&mut reader)
+        let header = parse_plane_header(&mut reader)
             .with_context(|| format!("reading {}", path.display()))?;
         let header = match header {
             Some(h) => h,
             None => {
-                // v1 spool file: no contiguous payload; load it whole.
-                let ckpt = Checkpoint::load(&path)?;
-                return windows_from_checkpoint(&ckpt, names).map(Some);
+                // v1 spool file: no contiguous payload; load it whole
+                // (cached) and answer from memory.
+                return match self.try_load_at(member, step)? {
+                    Some(ckpt) => Ok(Some(fetch_from_checkpoint(&ckpt, spec)?)),
+                    None => Ok(None),
+                };
             }
         };
+        // Digest table: the file's own (v3), else the manifest's column
+        // (a digest-aware publisher over a v2 file), else fall back to a
+        // whole-file read — without digests there is nothing to compare
+        // a basis against.
+        let digests = match &header.digests {
+            Some(d) => d.clone(),
+            None => {
+                let from_manifest = read_manifest_digests(&self.dir)
+                    .and_then(|m| m.get(&(member, step)).cloned())
+                    .filter(|d| d.len() == header.layout.len());
+                match from_manifest {
+                    Some(d) => d,
+                    None => {
+                        return match self.try_load_at(member, step)? {
+                            Some(ckpt) => Ok(Some(fetch_from_checkpoint(&ckpt, spec)?)),
+                            None => Ok(None),
+                        };
+                    }
+                }
+            }
+        };
+        let layout = &header.layout;
+        // The selection/basis semantics are the shared transport core;
+        // only the pread IO below is spool-specific.
+        let (fetch_idx, unchanged) = partition_windows(layout, &digests, spec)
+            .with_context(|| format!("member {member} step {step}"))?;
         let mut file = reader.into_inner();
-        let mut windows = Vec::with_capacity(names.len());
-        for name in names {
-            let entry = match header.layout.entry(name) {
-                Some(e) => e,
-                None => bail!(
-                    "member {member} step {step}: plane has no window {name:?}"
-                ),
-            };
+        let mut windows = Vec::with_capacity(fetch_idx.len());
+        for idx in fetch_idx {
+            let entry = &layout.entries()[idx];
             file.seek(SeekFrom::Start(
                 header.payload_start + entry.byte_range().start as u64,
             ))?;
             let mut data = vec![0f32; entry.len];
             crate::codistill::store::read_f32s(&mut file, &mut data)?;
             windows.push(FetchedWindow {
-                name: name.clone(),
+                name: entry.name.clone(),
                 shape: entry.shape.clone(),
                 data,
             });
         }
-        Ok(Some(WindowedFetch {
+        // The residual section sits right after the contiguous payload.
+        file.seek(SeekFrom::Start(
+            header.payload_start + layout.total_bytes() as u64,
+        ))?;
+        let mut tail = std::io::BufReader::new(file);
+        let n_residual = read_u64(&mut tail)? as usize;
+        let mut residual = TensorMap::new();
+        for _ in 0..n_residual {
+            let (name, t) = read_framed_tensor(&mut tail)?;
+            residual.insert(name, t);
+        }
+        let parts = layout
+            .entries()
+            .iter()
+            .map(|e| (e.name.clone(), e.shape.clone()))
+            .collect();
+        Ok(Some(FetchResult {
             member: header.member,
             step: header.step,
+            parts,
+            digests,
             windows,
+            unchanged,
+            residual,
+            full: None,
         }))
     }
 }
@@ -383,51 +530,32 @@ impl ExchangeTransport for SpoolDir {
         ckpt.save(&tmp)?;
         std::fs::rename(&tmp, self.dir.join(spool_file_name(member, step)))?;
         prune_spool(&self.dir, self.history)?;
-        write_manifest(&self.dir)?;
+        // save() already computed (and cached) the digest table; hand it
+        // to the manifest as the authority for this file.
+        write_manifest(
+            &self.dir,
+            Some((member, step, ckpt.window_digests().as_slice())),
+        )?;
         // Publisher keeps the Arc'd plane hot for its own readers.
         self.cache_insert(member, step, Arc::new(ckpt));
         Ok(())
     }
 
-    fn latest(&self, member: usize) -> Result<Option<Arc<Checkpoint>>> {
-        self.latest_at_most(member, u64::MAX)
-    }
-
-    fn latest_at_most(&self, member: usize, max_step: u64) -> Result<Option<Arc<Checkpoint>>> {
-        if let Some(step) = self.resolve(member, max_step)? {
-            if let Some(c) = self.try_load_at(member, step)? {
-                return Ok(Some(c));
+    /// The one native read (see the module's Reads section).
+    fn fetch(&self, spec: &FetchSpec) -> Result<Option<FetchResult>> {
+        if let Some(step) = self.resolve(spec.member, spec.max_step)? {
+            if let Some(r) = self.try_fetch_at(spec, step)? {
+                return Ok(Some(r));
             }
             // The resolved file vanished (stale manifest / concurrent
             // prune): fall back to a direct directory scan. A second
             // vanish is a hard error — something is deleting fresh files.
-            if let Some(step) = self.resolve_scan(member, max_step)? {
-                return match self.try_load_at(member, step)? {
-                    Some(c) => Ok(Some(c)),
+            if let Some(step) = self.resolve_scan(spec.member, spec.max_step)? {
+                return match self.try_fetch_at(spec, step)? {
+                    Some(r) => Ok(Some(r)),
                     None => bail!(
-                        "spool file for member {member} step {step} vanished during read"
-                    ),
-                };
-            }
-        }
-        Ok(None)
-    }
-
-    fn fetch_windows(
-        &self,
-        member: usize,
-        max_step: u64,
-        names: &[String],
-    ) -> Result<Option<WindowedFetch>> {
-        if let Some(step) = self.resolve(member, max_step)? {
-            if let Some(f) = self.try_pread_windows(member, step, names)? {
-                return Ok(Some(f));
-            }
-            if let Some(step) = self.resolve_scan(member, max_step)? {
-                return match self.try_pread_windows(member, step, names)? {
-                    Some(f) => Ok(Some(f)),
-                    None => bail!(
-                        "spool file for member {member} step {step} vanished during read"
+                        "spool file for member {} step {step} vanished during read",
+                        spec.member
                     ),
                 };
             }
@@ -455,7 +583,7 @@ impl ExchangeTransport for SpoolDir {
         // manifest is missing/unreadable and needs recovery).
         let pruned = prune_spool(&self.dir, self.history)?;
         if pruned > 0 || read_manifest(&self.dir).is_none() {
-            write_manifest(&self.dir)?;
+            write_manifest(&self.dir, None)?;
         }
         if pruned > 0 {
             let published = self.published()?;
@@ -582,6 +710,91 @@ mod tests {
         assert!(spool
             .fetch_windows(0, u64::MAX, &["params.zzz".to_string()])
             .is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn delta_pread_moves_only_changed_windows() {
+        use crate::codistill::transport::Basis;
+        let dir = tdir("spooldir_delta");
+        let spool = SpoolDir::open(&dir, 4).unwrap();
+        spool.publish(ckpt(0, 1, &[1.0, 2.0, 3.0, 4.0, 5.0])).unwrap();
+        let v1 = spool.latest(0).unwrap().unwrap();
+        let basis = Basis {
+            step: 1,
+            digests: v1.window_digests().as_ref().clone(),
+        };
+        // params.a changes, params.b does not
+        spool.publish(ckpt(0, 2, &[9.0, 9.0, 3.0, 4.0, 5.0])).unwrap();
+        // fresh handle: no read cache — the delta must come off the file
+        let reader = SpoolDir::open(&dir, 4).unwrap();
+        let res = reader
+            .fetch(&FetchSpec::full(0, u64::MAX).with_basis(basis))
+            .unwrap()
+            .unwrap();
+        assert_eq!(res.step, 2);
+        assert!(res.full.is_none());
+        assert_eq!(res.unchanged, vec!["params.b".to_string()]);
+        assert_eq!(res.windows.len(), 1);
+        assert_eq!(res.windows[0].name, "params.a");
+        assert_eq!(res.windows[0].data, vec![9.0, 9.0]);
+        assert_eq!(res.payload_bytes(), 2 * 4);
+        assert_eq!(res.digests.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_persists_digests_and_v2_files_still_delta() {
+        use crate::codistill::transport::Basis;
+        let dir = tdir("spooldir_mdigest");
+        let spool = SpoolDir::open(&dir, 4).unwrap();
+        spool.publish(ckpt(1, 3, &[1.0; 5])).unwrap();
+        let c3 = spool.latest(1).unwrap().unwrap();
+        // the manifest's digest column equals the checkpoint's table
+        let m = read_manifest_digests(&dir).unwrap();
+        assert_eq!(m.get(&(1, 3)).unwrap(), c3.window_digests().as_ref());
+
+        // a digest-free CKPT0002 file from an older writer: no column,
+        // and a delta fetch over it falls back to a whole-file read
+        let c9 = ckpt(1, 9, &[2.0; 5]);
+        c9.save_v2(&dir.join(spool_file_name(1, 9))).unwrap();
+        write_manifest(&dir, None).unwrap();
+        assert!(read_manifest_digests(&dir).unwrap().get(&(1, 9)).is_none());
+        let reader = SpoolDir::open(&dir, 4).unwrap();
+        let basis = Basis {
+            step: 3,
+            digests: c3.window_digests().as_ref().clone(),
+        };
+        let res = reader
+            .fetch(&FetchSpec::full(1, u64::MAX).with_basis(basis))
+            .unwrap()
+            .unwrap();
+        assert_eq!(res.step, 9);
+        assert_eq!(res.windows.len(), 2, "both windows changed 1.0 -> 2.0");
+
+        // a hand-added manifest digest column over the v2 file serves the
+        // pread delta path: identical content => zero windows moved
+        let line = format!("1 9 {}", spool_file_name(1, 9));
+        let col: String = c9
+            .window_digests()
+            .iter()
+            .map(|d| format!(" {d:016x}"))
+            .collect();
+        let text = std::fs::read_to_string(dir.join(MANIFEST)).unwrap();
+        std::fs::write(dir.join(MANIFEST), text.replace(&line, &format!("{line}{col}")))
+            .unwrap();
+        let basis9 = Basis {
+            step: 9,
+            digests: c9.window_digests().as_ref().clone(),
+        };
+        let res = SpoolDir::open(&dir, 4)
+            .unwrap()
+            .fetch(&FetchSpec::full(1, u64::MAX).with_basis(basis9))
+            .unwrap()
+            .unwrap();
+        assert_eq!(res.windows.len(), 0);
+        assert_eq!(res.unchanged.len(), 2);
+        assert_eq!(res.payload_bytes(), 0);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -105,6 +105,8 @@ pub struct LmExpDefaults {
     pub lr: f32,
     pub seed: u64,
     pub val_batches: usize,
+    /// Incremental (delta) teacher reloads (`--delta` / `delta=true`).
+    pub delta: bool,
     pub verbose: bool,
 }
 
@@ -119,6 +121,7 @@ pub fn lm_defaults(s: &Settings) -> Result<LmExpDefaults> {
         lr: s.f32_or("lr", 0.03)?,
         seed: s.u64_or("seed", 42)?,
         val_batches: s.usize_or("val_batches", 4)?,
+        delta: s.bool_or("delta", false)?,
         verbose: s.bool_or("verbose", false)?,
     })
 }
@@ -134,8 +137,21 @@ pub fn orch_config(d: &LmExpDefaults, distill: DistillSchedule, cluster: Option<
         topology: Topology::Pair,
         cluster,
         seed: d.seed,
+        delta: d.delta,
         verbose: d.verbose,
     }
+}
+
+/// One-line rendering of a run's delta-exchange accounting.
+pub fn delta_stats_line(tag: &str, stats: &crate::codistill::DeltaStats) {
+    println!(
+        "[{tag}] delta exchange: full={} delta={} moved={} unchanged={} payload_bytes={}",
+        stats.full_fetches,
+        stats.delta_fetches,
+        stats.windows_moved,
+        stats.windows_unchanged,
+        stats.payload_bytes
+    );
 }
 
 /// A constructed exchange transport plus whatever must stay alive while
@@ -263,6 +279,9 @@ pub fn cmd_codistill(s: &Settings) -> Result<()> {
     let orch = Orchestrator::with_transport(cfg, setup.transport.clone());
     let log = orch.run(&mut members)?;
     print_runlog("codistill", &log);
+    if let Some(stats) = &log.delta {
+        delta_stats_line("codistill", stats);
+    }
     // `setup.server` (if any) stays alive until here by ownership.
     drop(setup);
     Ok(())
@@ -332,9 +351,16 @@ pub fn fault_plan(s: &Settings) -> Result<Option<FaultPlan>> {
 /// `codistill coordinate`: n-way codistillation through the coordinator —
 /// per-member publish cadences (`publish_intervals=50,60`,
 /// `publish_offsets=0,7`), mid-run joins (`join_delays=0,0,150`),
-/// publish-recency liveness (`liveness_grace=N` ticks), and optional
-/// deterministic fault injection (see [`fault_plan`]) over any
-/// `--transport`.
+/// publish-recency liveness (`liveness_grace=N` ticks), incremental
+/// teacher reloads (`--delta`), and optional deterministic fault
+/// injection (see [`fault_plan`]) over any `--transport`.
+///
+/// `mock=true` hosts the deterministic
+/// [`DriftMember`](crate::testkit::DriftMember) fleet instead of LM
+/// members (no artifact bundle or XLA backend needed) with
+/// `mock_frozen=N` extra never-changing plane elements per member — the
+/// OS-process harness (`examples/spool_procs.rs`, `make test-procs`)
+/// runs exactly this and asserts the children exchanged deltas.
 ///
 /// Global member ids are `member_base..member_base+members`: when several
 /// coordinator processes share one exchange, give each a disjoint
@@ -344,10 +370,7 @@ pub fn fault_plan(s: &Settings) -> Result<Option<FaultPlan>> {
 pub fn cmd_coordinate(s: &Settings) -> Result<()> {
     let d = lm_defaults(s)?;
     let n = s.usize_or("members", 2)?;
-    let bundle = open_bundle(s, s.str_or("bundle", "lm_b64"))?;
-    let mode = ShardMode::parse(s.str_or("shard_mode", "disjoint"))
-        .context("shard_mode must be disjoint|same")?;
-    let plan = ShardPlan::new(n, bundle.meta_usize("batch")?, mode);
+    let mock = s.bool_or("mock", false)?;
     let topology = Topology::parse(s.str_or("topology", "full")).context("bad topology")?;
     let cfg = CoordinatorConfig {
         total_steps: d.steps,
@@ -358,6 +381,7 @@ pub fn cmd_coordinate(s: &Settings) -> Result<()> {
         topology,
         liveness_grace: s.u64_or("liveness_grace", 2 * d.reload + d.reload / 2)?,
         seed: d.seed,
+        delta: d.delta,
         verbose: d.verbose,
     };
 
@@ -372,8 +396,9 @@ pub fn cmd_coordinate(s: &Settings) -> Result<()> {
         };
     if d.verbose {
         eprintln!(
-            "[coordinate] transport: {}{}",
+            "[coordinate] transport: {}{}{}",
             setup.kind.name(),
+            if d.delta { " (+delta)" } else { "" },
             if faulty.is_some() { " (+faults)" } else { "" }
         );
     }
@@ -382,20 +407,37 @@ pub fn cmd_coordinate(s: &Settings) -> Result<()> {
     let intervals = u64_list(s, "publish_intervals")?;
     let offsets = u64_list(s, "publish_offsets")?;
     let delays = u64_list(s, "join_delays")?;
+    let mut members: Vec<Box<dyn Member>> = Vec::with_capacity(n);
+    if mock {
+        let frozen = s.usize_or("mock_frozen", 256)?;
+        for g in 0..n {
+            members.push(Box::new(crate::testkit::DriftMember::with_frozen(
+                base + g,
+                frozen,
+            )));
+        }
+    } else {
+        let bundle = open_bundle(s, s.str_or("bundle", "lm_b64"))?;
+        let mode = ShardMode::parse(s.str_or("shard_mode", "disjoint"))
+            .context("shard_mode must be disjoint|same")?;
+        let plan = ShardPlan::new(n, bundle.meta_usize("batch")?, mode);
+        for g in 0..n {
+            members.push(Box::new(lm_member(
+                &bundle,
+                &plan,
+                g,
+                d.seed,
+                (base + g + 1) as i32,
+                SmoothingMode::None,
+                d.val_batches,
+            )?));
+        }
+    }
     let mut hosted = Vec::with_capacity(n);
-    for g in 0..n {
-        let member = lm_member(
-            &bundle,
-            &plan,
-            g,
-            d.seed,
-            (base + g + 1) as i32,
-            SmoothingMode::None,
-            d.val_batches,
-        )?;
+    for (g, member) in members.into_iter().enumerate() {
         let mut h = HostedMember::new(
             base + g,
-            Box::new(member) as Box<dyn Member>,
+            member,
             intervals.get(g).copied().unwrap_or(d.reload),
         );
         h.publish_offset = offsets.get(g).copied().unwrap_or(0);
@@ -420,6 +462,9 @@ pub fn cmd_coordinate(s: &Settings) -> Result<()> {
         log.skipped_teachers.len(),
         log.exchange_errors.len()
     );
+    if let Some(stats) = &log.delta {
+        delta_stats_line("coordinate", stats);
+    }
     if let Some(f) = &faulty {
         println!("[coordinate] injected faults: {}", f.fault_log().len());
     }

@@ -83,6 +83,7 @@ pub fn run(s: &Settings) -> Result<Fig3Summary> {
             topology: Topology::Pair,
             cluster: None,
             seed,
+            delta: false,
             verbose: s.bool_or("verbose", false)?,
         };
         let orch = Orchestrator::new(cfg);

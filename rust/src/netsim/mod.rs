@@ -112,6 +112,19 @@ impl ClusterModel {
         (self.model_bytes as f64 + teachers as f64 * bytes_fetched as f64) / self.bandwidth_bps
     }
 
+    /// Incremental (delta) exchange: one full checkpoint write plus
+    /// `teachers` delta reads, each moving only the `changed_fraction` of
+    /// the plane whose window digests differ from the reader's installed
+    /// basis (`ExchangeTransport::fetch` with a `Basis`). At
+    /// `changed_fraction = 1.0` this equals the full exchange; in the
+    /// steady state of a converging run the fraction — and with it the
+    /// read cost — collapses toward the digest-table overhead, which is
+    /// below this model's resolution.
+    pub fn delta_exchange_time(&self, teachers: usize, changed_fraction: f64) -> f64 {
+        let f = changed_fraction.clamp(0.0, 1.0);
+        self.sharded_exchange_time(teachers, (f * self.model_bytes as f64) as u64)
+    }
+
     /// Exchange wall time when `dead` of a reader's `teachers` peers are
     /// unreachable (§2.2: the coordinator's liveness table drops them):
     /// the write and the live reads move planes at full bandwidth, while
@@ -159,6 +172,66 @@ impl ClusterModel {
 /// per-member cadence skew.
 pub fn expected_staleness_steps(reload_interval: u64, publish_interval: u64) -> f64 {
     (reload_interval as f64 + publish_interval as f64) / 2.0
+}
+
+/// Analytic price of one coordinator member's run (see
+/// [`ClusterModel::coordinator_run_time`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoordinatorRunCost {
+    /// Wall-clock seconds for the member's `total_steps`.
+    pub wall_s: f64,
+    /// Mean expected teacher staleness (in steps) over the cohort's
+    /// publish cadences, at this member's reload interval.
+    pub expected_staleness_steps: f64,
+}
+
+impl ClusterModel {
+    /// Wall-clock pricing of one coordinator member's run, composed from
+    /// the existing analytic pieces:
+    ///
+    /// * per-step compute + group allreduce (`compute_mean_s`,
+    ///   [`ClusterModel::allreduce_time`]);
+    /// * one [`ClusterModel::degraded_exchange_time`] per reload interval
+    ///   — `dead` of the member's `teachers` cost a probe, not a stall;
+    /// * the cohort's publish-cadence skew priced by
+    ///   [`ClusterModel::skewed_bytes_per_step`], beyond the member's own
+    ///   reload-cadence write already inside the exchange term;
+    /// * the matching [`expected_staleness_steps`], averaged over the
+    ///   cohort's cadences, reported alongside (staleness costs no wall
+    ///   time — that delay-tolerance is the paper's point — but every
+    ///   consumer of this model wants both numbers together).
+    pub fn coordinator_run_time(
+        &self,
+        total_steps: u64,
+        publish_intervals: &[u64],
+        teachers: usize,
+        dead: usize,
+    ) -> CoordinatorRunCost {
+        let steps = total_steps as f64;
+        let reload = self.reload_interval.max(1);
+        let step_term = steps * (self.compute_mean_s + self.allreduce_time());
+        let exchange_term =
+            (steps / reload as f64) * self.degraded_exchange_time(teachers, dead);
+        // Cohort publish traffic under cadence skew, minus the one
+        // reload-cadence write degraded_exchange_time already prices.
+        let own_write = 2.0 * self.model_bytes as f64 / reload as f64;
+        let skew_term = steps
+            * (self.skewed_bytes_per_step(publish_intervals) - own_write).max(0.0)
+            / self.bandwidth_bps;
+        let staleness = if publish_intervals.is_empty() {
+            expected_staleness_steps(reload, reload)
+        } else {
+            publish_intervals
+                .iter()
+                .map(|&p| expected_staleness_steps(reload, p))
+                .sum::<f64>()
+                / publish_intervals.len() as f64
+        };
+        CoordinatorRunCost {
+            wall_s: step_term + exchange_term + skew_term,
+            expected_staleness_steps: staleness,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -247,6 +320,64 @@ mod tests {
         // staleness grows with either cadence
         assert!(expected_staleness_steps(50, 100) > expected_staleness_steps(50, 50));
         assert!(expected_staleness_steps(100, 50) > expected_staleness_steps(50, 50));
+    }
+
+    #[test]
+    fn delta_exchange_prices_between_empty_and_full() {
+        let m = ClusterModel::gpu_cluster(128, 40_000_000);
+        for teachers in [1usize, 3, 8] {
+            let full = m.full_exchange_time(teachers);
+            // unchanged plane: only the member's own write remains
+            assert_eq!(m.delta_exchange_time(teachers, 0.0), m.full_exchange_time(0));
+            // the whole plane changed: delta degenerates to full
+            assert_eq!(m.delta_exchange_time(teachers, 1.0), full);
+            // steady state: strictly cheaper, monotone in the fraction
+            let d05 = m.delta_exchange_time(teachers, 0.05);
+            let d25 = m.delta_exchange_time(teachers, 0.25);
+            assert!(d05 < d25 && d25 < full, "{d05} < {d25} < {full}");
+        }
+        // out-of-range fractions clamp instead of extrapolating
+        assert_eq!(m.delta_exchange_time(3, 2.0), m.delta_exchange_time(3, 1.0));
+        assert_eq!(m.delta_exchange_time(3, -1.0), m.delta_exchange_time(3, 0.0));
+    }
+
+    #[test]
+    fn coordinator_run_time_pins_between_healthy_and_degraded_bounds() {
+        let m = ClusterModel::gpu_cluster(8, 40_000_000);
+        let intervals = [50u64, 50, 50];
+        let healthy = m.coordinator_run_time(1000, &intervals, 3, 0);
+        let one_dead = m.coordinator_run_time(1000, &intervals, 3, 1);
+        let all_dead = m.coordinator_run_time(1000, &intervals, 3, 3);
+        // dead peers remove plane reads (probe-priced), so the healthy run
+        // is the upper bound and the fully-degraded run the lower
+        assert!(
+            all_dead.wall_s < one_dead.wall_s && one_dead.wall_s < healthy.wall_s,
+            "{} < {} < {}",
+            all_dead.wall_s,
+            one_dead.wall_s,
+            healthy.wall_s
+        );
+        // even fully degraded, compute + own writes remain
+        let floor = 1000.0 * (m.compute_mean_s + m.allreduce_time());
+        assert!(all_dead.wall_s > floor);
+        // cadence skew beyond the member's own reload write adds wall time
+        let skewed = m.coordinator_run_time(1000, &[10, 10, 10], 3, 0);
+        assert!(skewed.wall_s > healthy.wall_s);
+        // staleness reports the cohort mean of expected_staleness_steps
+        assert_eq!(
+            healthy.expected_staleness_steps,
+            expected_staleness_steps(50, 50)
+        );
+        let mixed = m.coordinator_run_time(1000, &[25, 100], 3, 0);
+        assert_eq!(
+            mixed.expected_staleness_steps,
+            (expected_staleness_steps(50, 25) + expected_staleness_steps(50, 100)) / 2.0
+        );
+        // no cohort given: the member's own cadence stands in
+        assert_eq!(
+            m.coordinator_run_time(1000, &[], 3, 0).expected_staleness_steps,
+            expected_staleness_steps(50, 50)
+        );
     }
 
     #[test]

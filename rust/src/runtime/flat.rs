@@ -14,6 +14,9 @@
 //!   zero-copy in-memory exchange, and serialization writes the plane as
 //!   one contiguous byte slice instead of per-tensor framing.
 //! * Teacher reloads scatter the plane back into existing tensor storage.
+//! * Each window has a stable 64-bit [`content_digest`]; transports
+//!   compare digest tables to move only the windows whose bytes changed
+//!   since a reader's installed basis (delta checkpoint exchange).
 //!
 //! Non-f32 leaves (i32 id tables) are rare and stay on the named map path;
 //! constructors simply skip them and callers keep them in a residual map.
@@ -27,6 +30,27 @@ use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::ops::Range;
 use std::sync::Arc;
+
+/// Fast, stable 64-bit content digest of one window's bytes: FNV-1a over
+/// the f32 bit patterns. A pure function of the bits, so a publisher and
+/// any reader — in another process, behind a socket, reading a spool file
+/// — compute the identical value for identical bytes. Digest equality is
+/// the transports' cheap proxy for byte equality: a delta fetch skips
+/// every window whose digest matches the reader's installed basis.
+///
+/// Single-element changes always change the digest (the FNV prime is odd,
+/// hence invertible mod 2^64, so a nonzero word difference can never
+/// cancel); broader collisions are possible in principle at the usual
+/// 2^-64 scale, which is the same trust level as any content-addressed
+/// exchange.
+pub fn content_digest(data: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &v in data {
+        h ^= v.to_bits() as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
 
 /// One named window of the flat plane.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -143,6 +167,12 @@ impl FlatLayout {
     /// Window metadata for a name.
     pub fn entry(&self, name: &str) -> Option<&FlatEntry> {
         self.index.get(name).map(|&i| &self.entries[i])
+    }
+
+    /// Index of a named window in plane order — the position digest
+    /// tables and delta bases are aligned to.
+    pub fn position(&self, name: &str) -> Option<usize> {
+        self.index.get(name).copied()
     }
 
     /// Window names in plane order.
@@ -284,6 +314,22 @@ impl FlatBuffer {
         }
         self.data[e.range()].copy_from_slice(data);
         Ok(())
+    }
+
+    /// Content digest of one named window (see [`content_digest`]).
+    pub fn window_digest(&self, name: &str) -> Result<u64> {
+        Ok(content_digest(self.view(name)?))
+    }
+
+    /// Content digests of every window, in plane order — the digest table
+    /// a publisher attaches to a checkpoint and a reader compares a delta
+    /// basis against.
+    pub fn window_digests(&self) -> Vec<u64> {
+        self.layout
+            .entries()
+            .iter()
+            .map(|e| content_digest(&self.data[e.range()]))
+            .collect()
     }
 
     /// The window of one named tensor.
@@ -430,6 +476,36 @@ mod tests {
         // wrong length and unknown window are rejected
         assert!(assembled.write_window("grads.b", &[1.0, 2.0]).is_err());
         assert!(assembled.write_window("grads.nope", &[1.0]).is_err());
+    }
+
+    #[test]
+    fn window_digests_track_content_not_position() {
+        let m = ragged_map();
+        let l = Arc::new(FlatLayout::from_map(&m, "grads."));
+        let buf = FlatBuffer::gather(l.clone(), &m).unwrap();
+        let digests = buf.window_digests();
+        assert_eq!(digests.len(), l.len());
+        // plane-order alignment with position()
+        for (i, name) in ["grads.b", "grads.w1", "grads.w2"].iter().enumerate() {
+            assert_eq!(l.position(name), Some(i));
+            assert_eq!(buf.window_digest(name).unwrap(), digests[i]);
+        }
+        assert_eq!(l.position("grads.nope"), None);
+        // identical bytes => identical digest, across distinct buffers
+        let again = FlatBuffer::gather(l.clone(), &m).unwrap();
+        assert_eq!(again.window_digests(), digests);
+        // a one-element change flips exactly that window's digest
+        let mut changed = buf.clone();
+        changed.data_mut()[l.entry("grads.w1").unwrap().offset] += 1.0;
+        let changed_digests = changed.window_digests();
+        assert_eq!(changed_digests[0], digests[0]);
+        assert_ne!(changed_digests[1], digests[1]);
+        assert_eq!(changed_digests[2], digests[2]);
+        // the digest is a function of bytes, not shape metadata
+        assert_eq!(content_digest(&[]), content_digest(&[]));
+        assert_ne!(content_digest(&[0.0]), content_digest(&[0.0, 0.0]));
+        // 0.0 and -0.0 are different bytes, so different digests
+        assert_ne!(content_digest(&[0.0]), content_digest(&[-0.0]));
     }
 
     #[test]

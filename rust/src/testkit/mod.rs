@@ -139,6 +139,23 @@ impl DriftMember {
         }
     }
 
+    /// Like [`DriftMember::new`], plus a `params.table` window of `elems`
+    /// id-keyed constants that training never touches — the stand-in for
+    /// an embedding table that rarely changes. Every publication after
+    /// the first leaves its bytes (and so its content digest) identical,
+    /// so a delta exchange must skip it; the OS-process harness asserts
+    /// exactly that through the coordinator's delta accounting.
+    pub fn with_frozen(id: usize, elems: usize) -> Self {
+        let mut m = Self::new(id);
+        if elems > 0 {
+            m.params.insert(
+                "params.table",
+                Tensor::f32(&[elems], vec![0.25 * (id as f32 + 1.0); elems]).unwrap(),
+            );
+        }
+        m
+    }
+
     /// Current parameter vector.
     pub fn w(&self) -> Vec<f32> {
         self.params

@@ -27,6 +27,7 @@ fn cfg() -> CoordinatorConfig {
         topology: Topology::FullyConnected,
         liveness_grace: 35,
         seed: 5,
+        delta: false,
         verbose: false,
     }
 }

@@ -100,6 +100,7 @@ fn base_cfg(steps: u64, reload: u64) -> OrchestratorConfig {
         topology: Topology::Pair,
         cluster: None,
         seed: 1,
+        delta: false,
         verbose: false,
     }
 }

@@ -1,8 +1,10 @@
 //! Transport equivalence: the checkpoint exchange is a pluggable medium,
 //! so the same orchestrated run (fixed seed, deterministic members) must
 //! produce identical results whether checkpoints move through the
-//! in-process store, CKPT0002 files in a shared spool directory, or the
-//! socket wire protocol — including the sharded (windowed) socket fetch.
+//! in-process store, CKPT0003 files in a shared spool directory, or the
+//! socket wire protocol — including the sharded (windowed) socket fetch
+//! and the incremental (delta) read path, which must install teacher
+//! planes byte-identical to full fetches while moving fewer bytes.
 //!
 //! The members here are mocks whose dynamics *depend on the teacher
 //! parameter values* (not just their steps), so any transport that
@@ -10,11 +12,13 @@
 //! the eval curves.
 
 use codistill::codistill::transport::spool::spool_file_name;
+use codistill::codistill::transport::DeltaCache;
 use codistill::codistill::{
-    Checkpoint, DistillSchedule, EvalStats, ExchangeTransport, InProcess, LrSchedule, Member,
-    Orchestrator, OrchestratorConfig, RunLog, SocketServer, SocketTransport, SpoolDir, StepStats,
-    Topology,
+    Checkpoint, DistillSchedule, EvalStats, ExchangeTransport, FaultPlan, Faulty, InProcess,
+    LrSchedule, Member, Orchestrator, OrchestratorConfig, RunLog, SocketServer, SocketTransport,
+    SpoolDir, StepStats, Topology,
 };
+use codistill::runtime::flat::{content_digest, FlatBuffer, FlatLayout};
 use codistill::runtime::{Tensor, TensorMap};
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -35,6 +39,9 @@ impl PullMember {
         let init: Vec<f32> = (0..W).map(|k| (id as f32) + 0.25 * k as f32).collect();
         let mut params = TensorMap::new();
         params.insert("params.w", Tensor::f32(&[W], init).unwrap());
+        // A window training never touches: its digest is identical across
+        // publications, so delta runs must skip it every reload.
+        params.insert("params.frozen", Tensor::f32(&[8], vec![3.25; 8]).unwrap());
         PullMember {
             id,
             step: 0,
@@ -125,17 +132,29 @@ fn cfg() -> OrchestratorConfig {
         topology: Topology::FullyConnected,
         cluster: None,
         seed: 3,
+        delta: false,
         verbose: false,
     }
 }
 
-fn run_over(transport: Arc<dyn ExchangeTransport>) -> RunLog {
+fn cfg_delta() -> OrchestratorConfig {
+    OrchestratorConfig {
+        delta: true,
+        ..cfg()
+    }
+}
+
+fn run_over_cfg(cfg: OrchestratorConfig, transport: Arc<dyn ExchangeTransport>) -> RunLog {
     let mut members: Vec<Box<dyn Member>> = (0..3)
         .map(|i| Box::new(PullMember::new(i)) as Box<dyn Member>)
         .collect();
-    Orchestrator::with_transport(cfg(), transport)
+    Orchestrator::with_transport(cfg, transport)
         .run(&mut members)
         .unwrap()
+}
+
+fn run_over(transport: Arc<dyn ExchangeTransport>) -> RunLog {
+    run_over_cfg(cfg(), transport)
 }
 
 fn tdir(tag: &str) -> PathBuf {
@@ -370,6 +389,282 @@ fn socket_error_paths_surface_err_not_hang() {
     }
     quitter_thread.join().unwrap();
     garbler_thread.join().unwrap();
+}
+
+// ------------------------------------------------------ delta equivalence
+//
+// Incremental (delta) exchange must be invisible to the run: installed
+// teacher planes are byte-identical to full fetches on every backend —
+// including through fault injection — while strictly fewer payload bytes
+// move whenever part of the plane is unchanged.
+
+/// A two-window checkpoint where `params.hot` changes per step and
+/// `params.cold` never does.
+fn hot_cold_ckpt(member: usize, step: u64, hot: f32) -> Checkpoint {
+    let mut params = TensorMap::new();
+    params.insert("params.hot", Tensor::f32(&[W], vec![hot; W]).unwrap());
+    params.insert("params.cold", Tensor::f32(&[W], vec![7.5; W]).unwrap());
+    Checkpoint::new(member, step, params)
+}
+
+#[test]
+fn delta_installs_byte_identical_on_all_backends() {
+    let dir = tdir("delta_backends");
+    let server = SocketServer::bind_tcp("127.0.0.1:0", 8).unwrap();
+    let server_windowed = SocketServer::bind_tcp("127.0.0.1:0", 8).unwrap();
+    let backends: Vec<(&str, Arc<dyn ExchangeTransport>)> = vec![
+        ("inproc", Arc::new(InProcess::new(8))),
+        ("spool", Arc::new(SpoolDir::open(&dir, 8).unwrap())),
+        ("socket", Arc::new(SocketTransport::connect_tcp(server.addr()))),
+        (
+            "socket-windowed",
+            Arc::new(SocketTransport::connect_tcp(server_windowed.addr()).with_windowed_fetch(1)),
+        ),
+    ];
+    for (tag, transport) in &backends {
+        let mut cache = DeltaCache::new();
+        for (i, step) in [1u64, 5, 9].into_iter().enumerate() {
+            transport.publish(hot_cold_ckpt(0, step, i as f32)).unwrap();
+            let got = cache.latest(transport.as_ref(), 0).unwrap().unwrap();
+            let full = transport.latest(0).unwrap().unwrap();
+            assert_eq!(got.step, full.step, "{tag}");
+            assert_eq!(
+                got.flat().data(),
+                full.flat().data(),
+                "{tag}: delta install diverged from full fetch"
+            );
+            assert!(got.flat().layout().same_plane(full.flat().layout()), "{tag}");
+        }
+        let stats = cache.stats();
+        assert_eq!(stats.full_fetches, 1, "{tag}");
+        assert_eq!(stats.delta_fetches, 2, "{tag}");
+        assert_eq!(
+            stats.windows_unchanged, 2,
+            "{tag}: params.cold not skipped on both deltas"
+        );
+        // 1 full (2 windows) + 2 deltas (1 window each): strictly fewer
+        // payload bytes than three full fetches
+        let full_bytes = 3 * (2 * W as u64 * 4);
+        assert_eq!(stats.payload_bytes, (2 + 1 + 1) * W as u64 * 4, "{tag}");
+        assert!(stats.payload_bytes < full_bytes, "{tag}");
+    }
+    drop(backends);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn delta_installs_byte_identical_through_faults() {
+    // Stale reads on every fetch: the cache installs the *previous*
+    // publication each time, and its bytes must equal a direct read of
+    // whatever step was served.
+    let store = Arc::new(InProcess::new(8));
+    let faulty = Faulty::wrap(store.clone(), FaultPlan::new(11).with_stale_reads(1.0));
+    let mut cache = DeltaCache::new();
+    for (i, step) in [1u64, 5, 9, 13].into_iter().enumerate() {
+        faulty.publish(hot_cold_ckpt(0, step, i as f32)).unwrap();
+        let got = cache.latest(&faulty, 0).unwrap().unwrap();
+        let direct = InProcess::latest_at_most(&store, 0, got.step).unwrap();
+        assert_eq!(got.step, direct.step);
+        assert_eq!(
+            got.flat().data(),
+            direct.flat().data(),
+            "stale delta install diverged from the served step"
+        );
+    }
+    assert!(cache.stats().delta_fetches >= 2);
+    assert!(cache.stats().windows_unchanged >= 2, "cold window moved");
+
+    // Dropped fetches: a drop leaves the installed plane untouched, and
+    // the next successful fetch catches it up byte-identically.
+    let store = Arc::new(InProcess::new(8));
+    let faulty = Faulty::wrap(store.clone(), FaultPlan::new(12).with_dropped_fetches(0.4));
+    let mut cache = DeltaCache::new();
+    let mut installed = 0usize;
+    for (i, step) in (0..24u64).enumerate() {
+        faulty.publish(hot_cold_ckpt(0, step, i as f32)).unwrap();
+        match cache.latest(&faulty, 0).unwrap() {
+            Some(got) => {
+                installed += 1;
+                let direct = InProcess::latest_at_most(&store, 0, got.step).unwrap();
+                assert_eq!(got.flat().data(), direct.flat().data());
+            }
+            None => {} // dropped: train on with the old teachers
+        }
+    }
+    assert!(installed > 0 && installed < 24, "drop plan degenerate");
+}
+
+#[test]
+fn delta_install_rejects_corrupt_spool_payload() {
+    // A payload byte flipped on disk after publish: a full load fails
+    // the CKPT0003 digest verify; the delta pread path must fail the
+    // install-side verify instead of silently poisoning the basis (the
+    // stored digest table predates the corruption, so a poisoned basis
+    // would mark the window "unchanged" forever after).
+    let dir = tdir("delta_corrupt");
+    let spool = SpoolDir::open(&dir, 8).unwrap();
+    spool.publish(hot_cold_ckpt(0, 1, 1.0)).unwrap();
+    let mut cache = DeltaCache::new();
+    cache.latest(&spool, 0).unwrap().unwrap();
+    spool.publish(hot_cold_ckpt(0, 2, 2.0)).unwrap();
+    // flip a bit in params.hot's payload — the windows sort as
+    // [params.cold, params.hot], so hot's last f32 ends right before the
+    // trailing 8-byte residual count
+    let path = dir.join(spool_file_name(0, 2));
+    let mut raw = std::fs::read(&path).unwrap();
+    let n = raw.len();
+    raw[n - 8 - 1] ^= 0x40;
+    std::fs::write(&path, &raw).unwrap();
+    // fresh handle: no read cache; basis from step 1 forces a delta pread
+    let reader = SpoolDir::open(&dir, 8).unwrap();
+    let err = cache.latest(&reader, 0).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("corrupt delta payload"),
+        "{err:#}"
+    );
+    // and the full-load path reports the same corruption loudly
+    assert!(SpoolDir::open(&dir, 8).unwrap().latest(0).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn equal_step_republish_refreshes_manifest_digests() {
+    // A crash-restart can republish the same (member, step) with
+    // different bytes; the manifest's digest column must track the new
+    // file, not the remembered one.
+    let dir = tdir("delta_republish");
+    let spool = SpoolDir::open(&dir, 8).unwrap();
+    spool.publish(hot_cold_ckpt(0, 5, 1.0)).unwrap();
+    let first = spool.latest(0).unwrap().unwrap().window_digests().as_ref().clone();
+    let mut republished = TensorMap::new();
+    republished.insert("params.hot", Tensor::f32(&[W], vec![9.0; W]).unwrap());
+    republished.insert("params.cold", Tensor::f32(&[W], vec![7.5; W]).unwrap());
+    spool.publish(Checkpoint::new(0, 5, republished)).unwrap();
+    // the MANIFEST digest column must describe the NEW file (write_manifest
+    // must not reuse the remembered column for the step it just overwrote)
+    let new_digests = spool
+        .latest(0)
+        .unwrap()
+        .unwrap()
+        .window_digests()
+        .as_ref()
+        .clone();
+    assert_ne!(new_digests, first, "republished bytes identical?");
+    let text = std::fs::read_to_string(dir.join("MANIFEST")).unwrap();
+    let line = text.lines().find(|l| l.starts_with("0 5 ")).unwrap();
+    let cols: Vec<u64> = line
+        .split_whitespace()
+        .skip(3)
+        .map(|h| u64::from_str_radix(h, 16).unwrap())
+        .collect();
+    assert_eq!(cols, new_digests, "manifest kept stale digests for the republished step");
+    // and a fresh reader's delta fetch against the OLD digests must move
+    // the changed window
+    let reader = SpoolDir::open(&dir, 8).unwrap();
+    let res = reader
+        .fetch(
+            &codistill::codistill::FetchSpec::full(0, u64::MAX).with_basis(
+                codistill::codistill::Basis {
+                    step: 5,
+                    digests: first,
+                },
+            ),
+        )
+        .unwrap()
+        .unwrap();
+    assert_eq!(res.windows.len(), 1, "republished window not re-fetched");
+    assert_eq!(res.windows[0].name, "params.hot");
+    assert_eq!(res.windows[0].data, vec![9.0; W]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn delta_orchestrated_runs_identical_over_all_transports() {
+    let reference = run_over(Arc::new(InProcess::new(8)));
+    assert!(reference.delta.is_none());
+
+    // inproc, delta
+    let delta_inproc = run_over_cfg(cfg_delta(), Arc::new(InProcess::new(8)));
+    assert_logs_identical("delta-inproc", &reference, &delta_inproc);
+    let stats = delta_inproc.delta.expect("delta accounting missing");
+    assert!(
+        stats.windows_unchanged > 0,
+        "frozen window was never skipped: {stats:?}"
+    );
+    assert!(stats.delta_fetches > 0);
+
+    // spool, delta
+    let dir = tdir("delta_spool_run");
+    let delta_spool = run_over_cfg(cfg_delta(), Arc::new(SpoolDir::open(&dir, 8).unwrap()));
+    assert_logs_identical("delta-spool", &reference, &delta_spool);
+    assert!(delta_spool.delta.unwrap().windows_unchanged > 0);
+    std::fs::remove_dir_all(&dir).ok();
+
+    // socket, delta
+    let server = SocketServer::bind_tcp("127.0.0.1:0", 8).unwrap();
+    let delta_socket = run_over_cfg(
+        cfg_delta(),
+        Arc::new(SocketTransport::connect_tcp(server.addr())),
+    );
+    assert_logs_identical("delta-socket", &reference, &delta_socket);
+    assert!(delta_socket.delta.unwrap().windows_unchanged > 0);
+    drop(server);
+
+    // the same seeded fault plan must fault the delta run identically:
+    // one read per (member, teacher) reload in both modes
+    let plan = |seed| FaultPlan::new(seed).with_stale_reads(0.5);
+    let faulted = run_over(Arc::new(Faulty::wrap(
+        Arc::new(InProcess::new(8)),
+        plan(21),
+    )));
+    let faulted_delta = run_over_cfg(
+        cfg_delta(),
+        Arc::new(Faulty::wrap(Arc::new(InProcess::new(8)), plan(21))),
+    );
+    assert_logs_identical("delta-faulty", &faulted, &faulted_delta);
+}
+
+#[test]
+fn digest_equality_iff_byte_equality_on_flat_windows() {
+    use codistill::testkit::{forall, in_range};
+    // Over random window contents: equal bytes <=> equal digests, and a
+    // single-element perturbation (which FNV-1a can never cancel) always
+    // flips the digest.
+    forall::<(u64, u64, u64)>("digest <=> bytes", 0xD16E57, 128, |&(len_raw, pos_raw, bits)| {
+        let len = in_range(len_raw, 1, 64);
+        let mut rng_vals: Vec<f32> = (0..len)
+            .map(|i| {
+                f32::from_bits((bits as u32) ^ (i as u32).wrapping_mul(2_654_435_769))
+            })
+            .map(|v| if v.is_nan() { 1.25 } else { v })
+            .collect();
+        let layout = Arc::new(FlatLayout::from_named_shapes(vec![(
+            "params.w".to_string(),
+            vec![len],
+        )]));
+        let original = FlatBuffer::from_data(layout.clone(), rng_vals.clone()).unwrap();
+
+        // identical bytes => identical digest
+        let copy = FlatBuffer::from_data(layout.clone(), rng_vals.clone()).unwrap();
+        if original.window_digests() != copy.window_digests() {
+            return false;
+        }
+        if content_digest(original.view("params.w").unwrap())
+            != original.window_digests()[0]
+        {
+            return false;
+        }
+
+        // a one-element bit flip => different bytes => different digest
+        let pos = in_range(pos_raw, 0, len - 1);
+        let flipped = f32::from_bits(rng_vals[pos].to_bits() ^ 1);
+        if flipped.to_bits() == rng_vals[pos].to_bits() {
+            return false; // unreachable: xor 1 always changes the bits
+        }
+        rng_vals[pos] = flipped;
+        let changed = FlatBuffer::from_data(layout, rng_vals).unwrap();
+        changed.window_digests() != original.window_digests()
+    });
 }
 
 #[test]
