@@ -1,7 +1,7 @@
 # Build/test/bench entry points. The Rust workspace lives in rust/ and
 # builds fully offline (vendored deps; see rust/Cargo.toml).
 
-.PHONY: build test check test-faults test-procs bench artifacts python-tests clean
+.PHONY: build test check test-faults test-procs test-wire bench artifacts python-tests clean
 
 build:
 	cd rust && cargo build --release
@@ -37,11 +37,22 @@ test-procs:
 	cd rust && cargo build --release --bin codistill
 	cd rust && cargo run --release --example spool_procs
 
+# Wire-path hardening + codec interop tests: the socket malformed-frame
+# guards (hostile reply counts error instead of allocating), the codec
+# capability negotiation (encoded DELTA/FETCH frames, legacy-server
+# fallback), and the transport-equivalence matrix that pins codec-on
+# installs byte-identical to codec-off over every backend.
+test-wire:
+	cd rust && cargo test -q --lib transport::socket
+	cd rust && cargo test -q --lib transport::codec
+	cd rust && cargo test -q --test transport_equivalence
+
 # Hot-path microbenchmarks. Writes the human table to stdout and the
 # machine-readable trajectory to BENCH_hotpath.json at the repo root.
 # Includes the concurrent-vs-serial socket fetch rows
 # (sections.socket_concurrency) that track the thread-per-connection
-# server upgrade.
+# server upgrade, and the full/delta/delta+codec byte rows
+# (sections.compressed_exchange) that track the window-codec layer.
 bench:
 	cd rust && cargo bench --bench perf_hotpath -- json=../BENCH_hotpath.json
 

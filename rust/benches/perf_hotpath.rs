@@ -12,6 +12,9 @@
 //!   * incremental (delta) exchange: full vs delta fetch bytes and time
 //!     at changed fractions {1.0, 0.25, 0.05} over each transport, plus
 //!     flat-vs-tree allreduce across worker counts {2, 4, 8, 16};
+//!   * compressed exchange: full vs delta vs delta+codec payload bytes
+//!     (CKPT0004 spool files / encoded socket DELTA frames) at the same
+//!     changed fractions — the `sections.compressed_exchange` rows;
 //!   * tensor<->literal boundary cost (runtime overhead);
 //!   * explicit sync-SGD group step vs fused equivalent (coordinator
 //!     overhead).
@@ -20,7 +23,7 @@
 //! skipped gracefully and recorded as `null` in the JSON, so the pure-Rust
 //! coordinator numbers are tracked even on machines without XLA.
 
-use codistill::codistill::transport::{Basis, FetchSpec, ANY_STEP};
+use codistill::codistill::transport::{Basis, Codec, FetchSpec, ANY_STEP};
 use codistill::codistill::{
     Checkpoint, ExchangeTransport, InProcess, Member, SocketServer, SocketTransport, SpoolDir,
 };
@@ -475,6 +478,128 @@ fn main() {
         std::fs::remove_dir_all(&spool_dir).ok();
     }
 
+    // ---- compressed exchange: full vs delta vs delta+codec over the
+    // media where bytes actually cross a boundary (spool files, socket
+    // frames). The codec rows publish through CKPT0004 (spool) or
+    // negotiate encoded DELTA frames (socket); the delta rows are the
+    // raw-frame baseline on an identically changed plane. The JSON pins
+    // the ROADMAP claim that delta+codec moves fewer bytes than delta
+    // alone whenever windows compress.
+    let mut compressed_rows: Vec<String> = Vec::new();
+    for frac in [1.0f64, 0.25, 0.05] {
+        let v2 = {
+            let mut b = (*plane).clone();
+            let target = (frac * layout.total_len() as f64) as usize;
+            let mut entries: Vec<_> = layout.entries().iter().collect();
+            entries.sort_by_key(|e| e.len);
+            let mut changed = 0usize;
+            for e in entries {
+                if changed + e.len <= target {
+                    for v in &mut b.data_mut()[e.range()] {
+                        *v += 1.0;
+                    }
+                    changed += e.len;
+                }
+            }
+            Arc::new(b)
+        };
+        let tag = (frac * 100.0) as u32;
+        let raw_dir = std::env::temp_dir().join(format!(
+            "codistill_bench_comp_raw_{}_{tag}",
+            std::process::id()
+        ));
+        let enc_dir = std::env::temp_dir().join(format!(
+            "codistill_bench_comp_enc_{}_{tag}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&raw_dir).ok();
+        std::fs::remove_dir_all(&enc_dir).ok();
+        let server =
+            SocketServer::bind_tcp("127.0.0.1:0", 4).expect("binding compress bench server");
+        // (name, raw-reading transport, codec-reading transport,
+        // publisher for raw medium, publisher for codec medium)
+        let spool_raw: Arc<dyn ExchangeTransport> =
+            Arc::new(SpoolDir::open(&raw_dir, 4).expect("opening raw spool"));
+        let spool_enc: Arc<dyn ExchangeTransport> = Arc::new(
+            SpoolDir::open(&enc_dir, 4)
+                .expect("opening codec spool")
+                .with_codec(Codec::Shuffle),
+        );
+        let sock_raw: Arc<dyn ExchangeTransport> =
+            Arc::new(SocketTransport::connect_tcp(server.addr()));
+        let sock_enc: Arc<dyn ExchangeTransport> =
+            Arc::new(SocketTransport::connect_tcp(server.addr()).with_codec(Codec::Shuffle));
+        let cases: Vec<(&str, Arc<dyn ExchangeTransport>, Arc<dyn ExchangeTransport>)> = vec![
+            ("spool", spool_raw, spool_enc),
+            ("socket", sock_raw, sock_enc),
+        ];
+        for (member, (name, raw_t, enc_t)) in cases.iter().enumerate() {
+            let ck1 = Checkpoint::from_flat(member, 1, plane.clone(), TensorMap::new());
+            let basis = Basis {
+                step: 1,
+                digests: ck1.window_digests().as_ref().clone(),
+            };
+            // spool raw/codec are distinct directories and need their own
+            // publications; the socket pair shares one server store, so
+            // publishing through the raw client covers both readers
+            let publishers: Vec<&Arc<dyn ExchangeTransport>> = if *name == "spool" {
+                vec![raw_t, enc_t]
+            } else {
+                vec![raw_t]
+            };
+            for t in publishers {
+                t.publish(Checkpoint::from_flat(member, 1, plane.clone(), TensorMap::new()))
+                    .unwrap();
+                t.publish(Checkpoint::from_flat(member, 2, v2.clone(), TensorMap::new()))
+                    .unwrap();
+            }
+            let full_spec = FetchSpec::full(member, ANY_STEP);
+            let delta_spec = FetchSpec::full(member, ANY_STEP).with_basis(basis);
+            // fresh spool handles per fetch so the read cache cannot
+            // hide the file IO (same policy as the delta section)
+            let fetch = |t: &Arc<dyn ExchangeTransport>, dir: &std::path::Path, spec: &FetchSpec| {
+                if *name == "spool" {
+                    SpoolDir::open(dir, 4).unwrap().fetch(spec).unwrap().unwrap()
+                } else {
+                    t.fetch(spec).unwrap().unwrap()
+                }
+            };
+            let full_bytes = fetch(raw_t, &raw_dir, &full_spec).payload_bytes();
+            let delta_bytes = fetch(raw_t, &raw_dir, &delta_spec).payload_bytes();
+            let codec_bytes = fetch(enc_t, &enc_dir, &delta_spec).payload_bytes();
+            let t_full = time_n(3, || {
+                fetch(raw_t, &raw_dir, &full_spec);
+            });
+            let t_delta = time_n(3, || {
+                fetch(raw_t, &raw_dir, &delta_spec);
+            });
+            let t_codec = time_n(3, || {
+                fetch(enc_t, &enc_dir, &delta_spec);
+            });
+            println!(
+                "compress {name:>7} frac={frac:<4}: full {full_bytes:>8} B, delta {delta_bytes:>8} B, \
+                 delta+codec {codec_bytes:>8} B ({:.1}% of delta; {:.2}/{:.2}/{:.2} ms)",
+                100.0 * codec_bytes as f64 / delta_bytes.max(1) as f64,
+                t_full * 1e3,
+                t_delta * 1e3,
+                t_codec * 1e3
+            );
+            compressed_rows.push(format!(
+                "{{\"transport\": \"{name}\", \"changed_fraction\": {frac}, \
+                 \"full_payload_bytes\": {full_bytes}, \"delta_payload_bytes\": {delta_bytes}, \
+                 \"codec_payload_bytes\": {codec_bytes}, \
+                 \"fetch_full_ms\": {}, \"fetch_delta_ms\": {}, \"fetch_codec_ms\": {}}}",
+                ms(Some(t_full)),
+                ms(Some(t_delta)),
+                ms(Some(t_codec))
+            ));
+        }
+        drop(cases);
+        drop(server);
+        std::fs::remove_dir_all(&raw_dir).ok();
+        std::fs::remove_dir_all(&enc_dir).ok();
+    }
+
     // ---- concurrent vs serial socket fetches: N clients pulling the
     // same ~4MB plane one-after-another vs all at once. With the
     // thread-per-connection server the concurrent wall time approaches
@@ -546,6 +671,7 @@ fn main() {
          \"ckpt_load_ms\": {},\n    \
          \"transport\": [\n      {}\n    ],\n    \
          \"delta_exchange\": [\n      {}\n    ],\n    \
+         \"compressed_exchange\": [\n      {}\n    ],\n    \
          \"socket_concurrency\": {},\n    \
          \"to_literal_ms\": {}\n  }}\n}}\n",
         ms(art.train_step),
@@ -561,6 +687,7 @@ fn main() {
         ms(Some(t_load)),
         transport_rows.join(",\n      "),
         delta_rows.join(",\n      "),
+        compressed_rows.join(",\n      "),
         sock_concurrency,
         ms(Some(t_lit)),
     );

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! codistill <command> [--transport inproc|spool|socket] [--delta]
-//!           [--set key=value]... [--config file]
+//!           [--compress] [--set key=value]... [--config file]
 //!
 //! commands:
 //!   train       single-member LM baseline training
@@ -35,7 +35,13 @@
 //! for `codistill` and `coordinate`: readers keep per-teacher installed
 //! planes and fetch only the windows whose content digests changed
 //! (`codistill::transport::DeltaCache`) — byte-identical installs,
-//! strictly less traffic. `mock=true` on `coordinate` swaps the LM
+//! strictly less traffic. `--compress` (alias `compress=true`;
+//! `codec=raw|shuffle` picks the codec, default `shuffle`) additionally
+//! moves each window's bytes lossless-encoded: spool publications become
+//! `CKPT0004` files and socket reads negotiate encoded `DELTA`/`FETCH`
+//! frames — installs stay byte-identical (decoded + digest-verified), a
+//! no-op on the in-process transport where no bytes cross a medium.
+//! `mock=true` on `coordinate` swaps the LM
 //! members for the deterministic `testkit::DriftMember` fleet (no
 //! artifacts/XLA needed — the OS-process harness `examples/spool_procs.rs`
 //! uses this).
@@ -83,6 +89,10 @@ pub fn parse_args(args: &[String]) -> Result<Cli> {
                 settings.apply("delta=true")?;
                 i += 1;
             }
+            "--compress" => {
+                settings.apply("compress=true")?;
+                i += 1;
+            }
             "--transport" => {
                 let v = args.get(i + 1).context("--transport needs inproc|spool|socket")?;
                 // validate eagerly so typos fail at parse time, not mid-run
@@ -109,7 +119,8 @@ fn settings_dump(_s: &Settings) -> Vec<String> {
 
 pub fn usage() -> String {
     "usage: codistill <train|codistill|coordinate|figures|fig1|fig2|fig3|fig4|table1|sec341|inspect> \
-     [--transport inproc|spool|socket] [--delta] [--set key=value]... [--config FILE] [--verbose]"
+     [--transport inproc|spool|socket] [--delta] [--compress] [--set key=value]... \
+     [--config FILE] [--verbose]"
         .to_string()
 }
 
@@ -196,6 +207,17 @@ mod tests {
             .unwrap()
             .settings
             .bool_or("delta", false)
+            .unwrap());
+    }
+
+    #[test]
+    fn compress_flag_applies() {
+        let cli = parse_args(&sv(&["coordinate", "--delta", "--compress"])).unwrap();
+        assert!(cli.settings.bool_or("compress", false).unwrap());
+        assert!(!parse_args(&sv(&["coordinate"]))
+            .unwrap()
+            .settings
+            .bool_or("compress", false)
             .unwrap());
     }
 }

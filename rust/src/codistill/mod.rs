@@ -29,7 +29,13 @@
 //!   (length-prefixed TCP/Unix protocol with a `DELTA` opcode: basis
 //!   digests up, changed windows down). [`DeltaCache`] is the reader
 //!   side: per-teacher installed planes patched in place, byte-identical
-//!   to full fetches while moving only what changed.
+//!   to full fetches while moving only what changed. On top of the delta
+//!   sits the lossless [`transport::codec`] layer ([`Codec`] /
+//!   [`WindowCodec`]): per-window byteshuffle+RLE encoding negotiated
+//!   end-to-end (`CKPT0004` spool files, a capability byte on the socket
+//!   `DELTA`/`FETCH` requests, `--compress` from the CLI), decoded and
+//!   digest-verified at install so compression can never change the
+//!   installed bytes or mask corruption.
 //!
 //! The [`Orchestrator`] is constructed from any `Arc<dyn
 //! ExchangeTransport>` ([`Orchestrator::with_transport`]) and feeds
@@ -78,8 +84,9 @@ pub use schedule::{DistillSchedule, LrSchedule};
 pub use store::Checkpoint;
 pub use topology::Topology;
 pub use transport::{
-    Basis, DeltaCache, DeltaStats, ExchangeTransport, FaultPlan, Faulty, FetchResult, FetchSpec,
-    InProcess, SocketServer, SocketTransport, SpoolDir, TransportKind, WindowSel, WindowedFetch,
+    Basis, Codec, DeltaCache, DeltaStats, ExchangeTransport, FaultPlan, Faulty, FetchResult,
+    FetchSpec, InProcess, SocketServer, SocketTransport, SpoolDir, TransportKind, WindowCodec,
+    WindowSel, WindowedFetch,
 };
 
 /// The zero-copy in-process store under its historical name (it was the

@@ -14,8 +14,17 @@
 //! buffer — and teacher reloads scatter the plane into existing tensor
 //! storage instead of rebuilding named maps.
 //!
-//! On disk there are three formats, all understood by [`Checkpoint::load`]:
+//! On disk there are four formats, all understood by [`Checkpoint::load`]:
 //!
+//! * `CKPT0004` (written by [`Checkpoint::save_v4`]): the compressed
+//!   variant — each window-table entry carries `name, shape, digest,
+//!   codec u8, encoded length u64`, and the payload is the concatenation
+//!   of the per-window **encoded** byte ranges (see
+//!   `codistill::transport::codec`; windows the codec cannot shrink are
+//!   stored raw, tagged as such). Loading decodes every window and
+//!   verifies its digest, so corruption of an encoded payload fails as
+//!   loudly as the `CKPT0003` case. Spool publishers opt in via
+//!   `SpoolDir::with_codec`; readers `pread` exactly the encoded ranges.
 //! * `CKPT0003` (written by [`Checkpoint::save`]): the `CKPT0002` layout
 //!   with a per-window [`content_digest`] added to each window-table
 //!   entry. The digest table is what makes incremental (delta) exchange
@@ -38,7 +47,8 @@
 //! `CKPT0003` bytes over any `Write`/`Read` (socket frames, spool files),
 //! so every transport speaks one format.
 
-use crate::runtime::flat::{FlatBuffer, FlatLayout};
+use crate::codistill::transport::codec::Codec;
+use crate::runtime::flat::{content_digest, FlatBuffer, FlatLayout};
 use crate::runtime::{Tensor, TensorMap};
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
@@ -48,6 +58,19 @@ use std::sync::{Arc, OnceLock};
 pub(crate) const MAGIC_V1: &[u8; 8] = b"CKPT0001";
 pub(crate) const MAGIC_V2: &[u8; 8] = b"CKPT0002";
 pub(crate) const MAGIC_V3: &[u8; 8] = b"CKPT0003";
+pub(crate) const MAGIC_V4: &[u8; 8] = b"CKPT0004";
+
+/// Largest single window a checkpoint stream may claim (1 GiB — the
+/// socket layer's frame cap; any real plane window here is megabytes).
+/// Checkpoint streams are parsed off untrusted bytes, so a lying shape
+/// must become an error before it becomes an allocation.
+const MAX_WINDOW_BYTES: usize = 1 << 30;
+
+/// Cap on `Vec::with_capacity` *hints* taken from wire-supplied counts:
+/// the vectors still grow to any honest size, but a `u64::MAX` count in
+/// a corrupt stream cannot reserve memory up front — it just runs out of
+/// bytes to parse.
+const TABLE_CAPACITY_HINT: usize = 4096;
 
 /// Immutable parameter snapshot on the flat plane.
 #[derive(Debug, Clone)]
@@ -254,12 +277,63 @@ impl Checkpoint {
         self.write_payload_and_residual(f)
     }
 
+    /// Serialize in the compressed `CKPT0004` format: each window is
+    /// encoded under `codec` (with the per-window raw fallback), the
+    /// window table records the tag + encoded length actually used, and
+    /// the payload is the concatenation of the encoded ranges — so a
+    /// spool reader can `pread` exactly one window's encoded bytes.
+    pub fn save_v4(&self, path: &Path, codec: Codec) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating {}", path.display()))?,
+        );
+        self.write_to_v4(&mut f, codec)?;
+        f.flush().with_context(|| format!("flushing {}", path.display()))
+    }
+
+    /// Stream the `CKPT0004` encoding (see [`Checkpoint::save_v4`]).
+    pub fn write_to_v4(&self, f: &mut impl Write, codec: Codec) -> Result<()> {
+        f.write_all(MAGIC_V4)?;
+        f.write_all(&(self.member as u64).to_le_bytes())?;
+        f.write_all(&self.step.to_le_bytes())?;
+
+        let layout = self.flat.layout();
+        let digests = self.window_digests().clone();
+        // Encode first: the table must record each window's actual tag
+        // and encoded length before any payload byte is written.
+        let encoded: Vec<(Codec, Vec<u8>)> = layout
+            .entries()
+            .iter()
+            .map(|e| codec.encode(&self.flat.data()[e.range()]))
+            .collect();
+        f.write_all(&(layout.len() as u64).to_le_bytes())?;
+        for ((e, d), (tag, bytes)) in
+            layout.entries().iter().zip(digests.iter()).zip(&encoded)
+        {
+            write_name(&mut f, &e.name)?;
+            write_shape(&mut f, &e.shape)?;
+            f.write_all(&d.to_le_bytes())?;
+            f.write_all(&[tag.id()])?;
+            f.write_all(&(bytes.len() as u64).to_le_bytes())?;
+        }
+        let total: u64 = encoded.iter().map(|(_, b)| b.len() as u64).sum();
+        f.write_all(&total.to_le_bytes())?;
+        for (_, bytes) in &encoded {
+            f.write_all(bytes)?;
+        }
+        self.write_residual(f)
+    }
+
     /// The part of the v2/v3 encodings after the window table: the whole
     /// plane as one unframed slice, then the framed residual entries.
     fn write_payload_and_residual(&self, f: &mut impl Write) -> Result<()> {
         f.write_all(&(self.flat.data().len() as u64).to_le_bytes())?;
         write_f32s(&mut f, self.flat.data())?;
+        self.write_residual(f)
+    }
 
+    /// The framed residual section shared by every contiguous format.
+    fn write_residual(&self, f: &mut impl Write) -> Result<()> {
         let residual = self.residual.prefix_entries("");
         f.write_all(&(residual.len() as u64).to_le_bytes())?;
         for (name, t) in residual {
@@ -324,11 +398,126 @@ impl Checkpoint {
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
         match &magic {
+            m if m == MAGIC_V4 => Self::load_v4(f),
             m if m == MAGIC_V3 => Self::load_contiguous(f, true),
             m if m == MAGIC_V2 => Self::load_contiguous(f, false),
             m if m == MAGIC_V1 => Self::load_v1(f),
             _ => bail!("bad checkpoint magic"),
         }
+    }
+
+    /// `CKPT0004` reader: decode every window under its recorded codec,
+    /// then verify the decoded bytes against the stored digest — a
+    /// corrupt encoded payload (or a lying table) is a load error here,
+    /// never a silently-wrong plane.
+    ///
+    /// This stream is parsed off untrusted bytes (socket `LATEST`
+    /// replies, `PUBLISH` bodies), so wire-supplied sizes never drive an
+    /// upfront allocation: counts are capacity *hints* capped at
+    /// [`TABLE_CAPACITY_HINT`], per-window sizes are bounded by
+    /// [`MAX_WINDOW_BYTES`], and encoded payloads are read through
+    /// `take(..)` so a lying length fails at EOF instead of reserving
+    /// the claimed size.
+    fn load_v4(f: &mut impl Read) -> Result<Self> {
+        let member = read_u64(f)? as usize;
+        let step = read_u64(f)?;
+
+        let n_windows = read_u64(f)? as usize;
+        let mut parts = Vec::with_capacity(n_windows.min(TABLE_CAPACITY_HINT));
+        let mut stored_digests = Vec::with_capacity(n_windows.min(TABLE_CAPACITY_HINT));
+        let mut encodings = Vec::with_capacity(n_windows.min(TABLE_CAPACITY_HINT));
+        for _ in 0..n_windows {
+            let name = read_name(f)?;
+            let shape = read_shape(f)?;
+            let numel: usize = shape.iter().product();
+            if numel.saturating_mul(4) > MAX_WINDOW_BYTES {
+                bail!(
+                    "window {name:?} claims {numel} elems — over the {MAX_WINDOW_BYTES}-byte \
+                     window cap, corrupt table"
+                );
+            }
+            parts.push((name, shape));
+            stored_digests.push(read_u64(f)?);
+            let mut tag = [0u8; 1];
+            f.read_exact(&mut tag)?;
+            let codec = Codec::from_id(tag[0])?;
+            let enc_len = read_u64(f)? as usize;
+            // The never-larger rule bounds every stored encoding; a raw
+            // tag must match the window size exactly. Checking up front
+            // turns a corrupt table into an error instead of a huge read.
+            let cap = numel * 4;
+            let ok = match codec {
+                Codec::Raw => enc_len == cap,
+                _ => enc_len <= cap,
+            };
+            if !ok {
+                bail!(
+                    "window {:?}: {} encoding of {enc_len} bytes exceeds the {cap}-byte raw size",
+                    parts.last().unwrap().0,
+                    codec.name()
+                );
+            }
+            encodings.push((codec, enc_len));
+        }
+        let layout = Arc::new(FlatLayout::from_named_shapes(parts));
+
+        let payload_total = read_u64(f)?;
+        let expect: u64 = encodings.iter().map(|&(_, n)| n as u64).sum();
+        if payload_total != expect {
+            bail!("encoded payload claims {payload_total} bytes, window table wants {expect}");
+        }
+        // Read + decode every window BEFORE allocating the plane: memory
+        // growth tracks bytes the peer actually delivered, not what the
+        // table claims.
+        let mut decoded_windows = Vec::with_capacity(encodings.len());
+        let mut bytes = Vec::new();
+        for (i, (codec, enc_len)) in encodings.iter().enumerate() {
+            let e = &layout.entries()[i];
+            bytes.clear();
+            let took = f.by_ref().take(*enc_len as u64).read_to_end(&mut bytes)?;
+            if took != *enc_len {
+                bail!(
+                    "window {:?}: encoded payload truncated ({took} of {enc_len} bytes)",
+                    e.name
+                );
+            }
+            let decoded = codec
+                .decode(&bytes, e.len)
+                .with_context(|| format!("decoding checkpoint window {:?}", e.name))?;
+            let got = content_digest(&decoded);
+            if got != stored_digests[i] {
+                bail!(
+                    "checkpoint window {:?} digest mismatch \
+                     (stored {:#018x}, payload decodes to {got:#018x}): \
+                     corrupt payload or digest table",
+                    e.name,
+                    stored_digests[i]
+                );
+            }
+            decoded_windows.push(decoded);
+        }
+        let mut data = vec![0f32; layout.total_len()];
+        for (e, decoded) in layout.entries().iter().zip(&decoded_windows) {
+            data[e.range()].copy_from_slice(decoded);
+        }
+        drop(decoded_windows);
+        let flat = FlatBuffer::from_data(layout, data)?;
+        let digests = OnceLock::new();
+        let _ = digests.set(Arc::new(stored_digests));
+
+        let n_residual = read_u64(f)? as usize;
+        let mut residual = TensorMap::new();
+        for _ in 0..n_residual {
+            let (name, t) = read_framed_tensor(f)?;
+            residual.insert(name, t);
+        }
+        Ok(Checkpoint {
+            member,
+            step,
+            flat: Arc::new(flat),
+            residual,
+            digests,
+        })
     }
 
     /// Shared v2/v3 reader (`with_digests` selects the v3 window table).
@@ -340,8 +529,9 @@ impl Checkpoint {
         let step = read_u64(f)?;
 
         let n_windows = read_u64(f)? as usize;
-        let mut parts = Vec::with_capacity(n_windows);
-        let mut stored_digests = Vec::with_capacity(if with_digests { n_windows } else { 0 });
+        let mut parts = Vec::with_capacity(n_windows.min(TABLE_CAPACITY_HINT));
+        let mut stored_digests =
+            Vec::with_capacity(if with_digests { n_windows.min(TABLE_CAPACITY_HINT) } else { 0 });
         for _ in 0..n_windows {
             let name = read_name(f)?;
             let shape = read_shape(f)?;
@@ -590,6 +780,67 @@ mod tests {
         let err = Checkpoint::load(&path).unwrap_err();
         assert!(format!("{err:#}").contains("digest mismatch"), "{err:#}");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v4_roundtrip_compresses_and_verifies() {
+        let dir = std::env::temp_dir().join(format!("codistill_ckpt_v4_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c4.ckpt");
+        // a constant window (compresses) next to the mixed fixture
+        let mut params = mixed_params();
+        params.insert("params.big", Tensor::f32(&[512], vec![0.5; 512]).unwrap());
+        let c = Checkpoint::new(4, 77, params);
+        c.save_v4(&path, Codec::Shuffle).unwrap();
+        let raw = std::fs::read(&path).unwrap();
+        assert_eq!(&raw[..8], MAGIC_V4);
+        // the constant 512-element window alone is 2 KiB raw; the v4 file
+        // must come in well under the v3 file
+        let v3_path = dir.join("c4_ref.ckpt");
+        c.save(&v3_path).unwrap();
+        let v3_len = std::fs::metadata(&v3_path).unwrap().len();
+        assert!(
+            (raw.len() as u64) < v3_len,
+            "v4 {} bytes !< v3 {v3_len} bytes",
+            raw.len()
+        );
+
+        let l = Checkpoint::load(&path).unwrap();
+        assert_eq!((l.member, l.step), (4, 77));
+        assert_eq!(l.flat().data(), c.flat().data());
+        assert!(l.flat().layout().same_plane(c.flat().layout()));
+        assert_eq!(l.window_digests(), c.window_digests());
+        assert_eq!(
+            l.params().get("params.ids").unwrap().as_i32().unwrap(),
+            &[7, 8, 9]
+        );
+        // a Raw-codec v4 file round-trips too (every window tagged raw)
+        c.save_v4(&path, Codec::Raw).unwrap();
+        let l = Checkpoint::load(&path).unwrap();
+        assert_eq!(l.flat().data(), c.flat().data());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v4_load_rejects_corrupt_encoded_payload() {
+        let dir =
+            std::env::temp_dir().join(format!("codistill_ckpt_v4c_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c4bad.ckpt");
+        let mut params = TensorMap::new();
+        params.insert("params.w", Tensor::f32(&[256], vec![1.25; 256]).unwrap());
+        let c = Checkpoint::new(0, 1, params);
+        c.save_v4(&path, Codec::Shuffle).unwrap();
+        // flip a byte inside the encoded payload (right before the
+        // trailing 8-byte residual count): the table stays valid, the
+        // decoded window no longer hashes to its digest (or fails to
+        // decode) — either way the load errs
+        let mut raw = std::fs::read(&path).unwrap();
+        let n = raw.len();
+        raw[n - 8 - 1] ^= 0x40;
+        std::fs::write(&path, &raw).unwrap();
+        assert!(Checkpoint::load(&path).is_err(), "corrupt v4 loaded");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

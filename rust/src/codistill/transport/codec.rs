@@ -1,0 +1,457 @@
+//! Lossless window codecs for the checkpoint exchange.
+//!
+//! The paper's systems budget (§2.1) is exchange bandwidth: PR 4's delta
+//! fetch cut *which* windows move (digest-matched windows are skipped);
+//! this layer cuts *how many bytes* each moved window costs. Every codec
+//! here is **lossless on the f32 bit patterns** — the decoded window is
+//! byte-identical to the publisher's plane, so digest verification and
+//! the transport-equivalence matrix hold unchanged and the prediction
+//! math never sees the codec.
+//!
+//! Two codecs ship behind the [`WindowCodec`] trait:
+//!
+//! * [`RawCodec`] (wire id 0) — passthrough: the window's f32s as LE
+//!   bytes, exactly what moved before this layer existed. Also the
+//!   per-window fallback whenever an encoding fails to shrink a window.
+//! * [`ShuffleRleCodec`] (wire id 1) — byteshuffle + RLE with varint run
+//!   lengths, tuned for f32 parameter planes: the four bytes of each f32
+//!   are transposed into four contiguous byte planes (all byte-0s, then
+//!   all byte-1s, ...), so the highly repetitive sign/exponent bytes of
+//!   same-magnitude parameters line up into long runs that RLE collapses.
+//!   A delta window's bytes are near-identical in structure to its basis
+//!   (training nudges mantissas, rarely exponents), which is exactly the
+//!   shape this transform exploits.
+//!
+//! [`Codec`] is the wire-facing registry: a `Copy` tag that travels in
+//! `CKPT0004` window tables, socket capability bytes, and
+//! `FetchedWindow` payloads, dispatching to the trait impls. Encoding
+//! through [`Codec::encode`] applies the **never-larger rule**: if the
+//! preferred codec does not shrink a window, the window ships raw (tagged
+//! [`Codec::Raw`]), so an encoded payload is never bigger than the
+//! passthrough and decoders size-check against that bound.
+//!
+//! Decode failures (truncated stream, bad varint, length mismatch) are
+//! hard errors; the install side additionally digest-verifies every
+//! decoded window (`transport::decode_and_verify`), so a corrupt encoded
+//! payload fails exactly as loudly as a corrupt raw one.
+
+use anyhow::{bail, Context, Result};
+
+/// One lossless window encoding: f32 slice in, bytes out, and back.
+/// Implementations must be pure functions of the bits — a publisher and
+/// any reader (another process, behind a socket, reading a spool file)
+/// must produce identical bytes for identical input.
+pub trait WindowCodec {
+    /// Wire id recorded in `CKPT0004` tables and socket frames.
+    fn id(&self) -> u8;
+
+    /// Human name (CLI parsing, bench labels).
+    fn name(&self) -> &'static str;
+
+    /// Encode one window's elements.
+    fn encode(&self, data: &[f32]) -> Vec<u8>;
+
+    /// Decode one window of exactly `elems` f32s; any mismatch between
+    /// `bytes` and `elems` is an error, never a short or padded window.
+    fn decode(&self, bytes: &[u8], elems: usize) -> Result<Vec<f32>>;
+}
+
+/// Wire-facing codec tag: the registry of known [`WindowCodec`]s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Codec {
+    /// Passthrough LE f32 bytes (wire id 0).
+    #[default]
+    Raw,
+    /// Byteshuffle + RLE/varint (wire id 1).
+    Shuffle,
+}
+
+static RAW_CODEC: RawCodec = RawCodec;
+static SHUFFLE_CODEC: ShuffleRleCodec = ShuffleRleCodec;
+
+impl Codec {
+    /// The codec implementation behind this tag.
+    pub fn imp(self) -> &'static dyn WindowCodec {
+        match self {
+            Codec::Raw => &RAW_CODEC,
+            Codec::Shuffle => &SHUFFLE_CODEC,
+        }
+    }
+
+    /// Wire id (`CKPT0004` window tables, socket capability bytes).
+    pub fn id(self) -> u8 {
+        self.imp().id()
+    }
+
+    /// Inverse of [`Codec::id`]; unknown ids are an error (a frame from a
+    /// newer build — fail loudly rather than misdecode).
+    pub fn from_id(id: u8) -> Result<Self> {
+        match id {
+            0 => Ok(Codec::Raw),
+            1 => Ok(Codec::Shuffle),
+            other => bail!("unknown window codec id {other}"),
+        }
+    }
+
+    /// Parse a CLI/codec setting value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "raw" | "none" => Ok(Codec::Raw),
+            "shuffle" | "byteshuffle" | "shuffle-rle" => Ok(Codec::Shuffle),
+            other => bail!("unknown codec {other:?} (want raw|shuffle)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        self.imp().name()
+    }
+
+    /// Encode one window under the never-larger rule: try this codec,
+    /// fall back to [`Codec::Raw`] when the encoding does not shrink the
+    /// window. Returns the tag actually used alongside the bytes — the
+    /// per-window codec tag every transport carries.
+    pub fn encode(self, data: &[f32]) -> (Codec, Vec<u8>) {
+        match self {
+            Codec::Raw => (Codec::Raw, RAW_CODEC.encode(data)),
+            other => {
+                let enc = other.imp().encode(data);
+                if enc.len() < data.len() * 4 {
+                    (other, enc)
+                } else {
+                    (Codec::Raw, RAW_CODEC.encode(data))
+                }
+            }
+        }
+    }
+
+    /// Decode one window of `elems` f32s encoded under this tag.
+    pub fn decode(self, bytes: &[u8], elems: usize) -> Result<Vec<f32>> {
+        self.imp().decode(bytes, elems)
+    }
+}
+
+// ------------------------------------------------------------------ raw
+
+/// Passthrough: the window's f32s as little-endian bytes.
+pub struct RawCodec;
+
+impl WindowCodec for RawCodec {
+    fn id(&self) -> u8 {
+        0
+    }
+
+    fn name(&self) -> &'static str {
+        "raw"
+    }
+
+    fn encode(&self, data: &[f32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8], elems: usize) -> Result<Vec<f32>> {
+        if bytes.len() != elems * 4 {
+            bail!(
+                "raw window payload has {} bytes, {elems} elems need {}",
+                bytes.len(),
+                elems * 4
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+// ------------------------------------------------- byteshuffle + RLE
+
+/// Byteshuffle + run-length encoding with varint lengths (module docs).
+///
+/// Token stream after the shuffle: each token is a LEB128 varint `v`;
+/// `v & 1 == 1` means a run of `v >> 1` copies of the single byte that
+/// follows, `v & 1 == 0` a literal stretch of `v >> 1` bytes that follow.
+/// Runs shorter than [`MIN_RUN`] stay literal (a run token would not pay
+/// for itself), so worst-case expansion is one varint per maximal literal
+/// stretch — and [`Codec::encode`]'s never-larger rule ships such windows
+/// raw anyway.
+pub struct ShuffleRleCodec;
+
+/// Shortest byte run worth a run token (varint + byte ≤ 3 bytes < 4).
+const MIN_RUN: usize = 4;
+
+/// Largest window a decode will materialize (1 GiB — the socket frame
+/// cap; real plane windows are megabytes). Decodes run on untrusted
+/// input where a few bytes can *claim* terabytes (an absurd shape in a
+/// reply table, a huge RLE run token), so the claim must become an
+/// error before it becomes an allocation.
+const MAX_DECODED_BYTES: usize = 1 << 30;
+
+impl WindowCodec for ShuffleRleCodec {
+    fn id(&self) -> u8 {
+        1
+    }
+
+    fn name(&self) -> &'static str {
+        "shuffle"
+    }
+
+    fn encode(&self, data: &[f32]) -> Vec<u8> {
+        rle_encode(&shuffle(data))
+    }
+
+    fn decode(&self, bytes: &[u8], elems: usize) -> Result<Vec<f32>> {
+        if elems.saturating_mul(4) > MAX_DECODED_BYTES {
+            bail!("window claims {elems} elems — over the {MAX_DECODED_BYTES}-byte decode cap");
+        }
+        let planes = rle_decode(bytes, elems * 4)?;
+        Ok(unshuffle(&planes, elems))
+    }
+}
+
+/// Transpose f32s into four contiguous byte planes: byte 0 of every
+/// element, then byte 1, etc. (LE, so plane 3 holds sign + high exponent
+/// bits — the most repetitive plane on a trained parameter window).
+fn shuffle(data: &[f32]) -> Vec<u8> {
+    let n = data.len();
+    let mut out = vec![0u8; n * 4];
+    for (i, v) in data.iter().enumerate() {
+        let b = v.to_le_bytes();
+        out[i] = b[0];
+        out[n + i] = b[1];
+        out[2 * n + i] = b[2];
+        out[3 * n + i] = b[3];
+    }
+    out
+}
+
+fn unshuffle(bytes: &[u8], n: usize) -> Vec<f32> {
+    debug_assert_eq!(bytes.len(), n * 4);
+    (0..n)
+        .map(|i| f32::from_le_bytes([bytes[i], bytes[n + i], bytes[2 * n + i], bytes[3 * n + i]]))
+        .collect()
+}
+
+/// LEB128 unsigned varint.
+fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn read_varint(bytes: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *bytes.get(*pos).context("varint truncated")?;
+        *pos += 1;
+        if shift >= 64 || (shift == 63 && b > 1) {
+            bail!("varint overflows u64");
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+fn flush_literals(out: &mut Vec<u8>, lits: &[u8]) {
+    if !lits.is_empty() {
+        write_varint(out, (lits.len() as u64) << 1);
+        out.extend_from_slice(lits);
+    }
+}
+
+fn rle_encode(input: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(input.len() / 4 + 16);
+    let mut i = 0usize;
+    let mut lit_start = 0usize;
+    while i < input.len() {
+        let b = input[i];
+        let mut j = i + 1;
+        while j < input.len() && input[j] == b {
+            j += 1;
+        }
+        if j - i >= MIN_RUN {
+            flush_literals(&mut out, &input[lit_start..i]);
+            write_varint(&mut out, (((j - i) as u64) << 1) | 1);
+            out.push(b);
+            lit_start = j;
+        }
+        i = j;
+    }
+    flush_literals(&mut out, &input[lit_start..]);
+    out
+}
+
+fn rle_decode(input: &[u8], expect: usize) -> Result<Vec<u8>> {
+    // Capacity hint only (capped): `expect` is wire-derived, and the
+    // output-exceeds check below bounds real growth to it.
+    let mut out = Vec::with_capacity(expect.min(1 << 20));
+    let mut pos = 0usize;
+    while pos < input.len() {
+        let tok = read_varint(input, &mut pos)?;
+        let n = (tok >> 1) as usize;
+        if n == 0 {
+            bail!("rle token with zero length");
+        }
+        if out.len() + n > expect {
+            bail!("rle output exceeds the window's {expect} bytes");
+        }
+        if tok & 1 == 1 {
+            let b = *input.get(pos).context("rle run byte truncated")?;
+            pos += 1;
+            out.resize(out.len() + n, b);
+        } else {
+            let lits = input
+                .get(pos..pos + n)
+                .context("rle literal stretch truncated")?;
+            pos += n;
+            out.extend_from_slice(lits);
+        }
+    }
+    if out.len() != expect {
+        bail!("rle decoded {} bytes, window wants {expect}", out.len());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(codec: Codec, data: &[f32]) {
+        let (tag, bytes) = codec.encode(data);
+        let back = tag.decode(&bytes, data.len()).unwrap();
+        // bit-exact, not just value-equal (−0.0, NaN payloads)
+        let a: Vec<u32> = data.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = back.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "codec {} not lossless", codec.name());
+    }
+
+    #[test]
+    fn ids_and_parse_roundtrip() {
+        for c in [Codec::Raw, Codec::Shuffle] {
+            assert_eq!(Codec::from_id(c.id()).unwrap(), c);
+            assert_eq!(Codec::parse(c.name()).unwrap(), c);
+        }
+        assert!(Codec::from_id(99).is_err());
+        assert!(Codec::parse("gzip").is_err());
+        assert_eq!(Codec::parse("byteshuffle").unwrap(), Codec::Shuffle);
+    }
+
+    #[test]
+    fn both_codecs_are_lossless_on_awkward_bits() {
+        let data = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.5,
+            f32::MIN_POSITIVE,
+            f32::MAX,
+            f32::from_bits(0x7fc0_1234), // NaN with payload
+            3.25,
+            3.25,
+            3.25,
+            3.25,
+            3.25,
+        ];
+        roundtrip(Codec::Raw, &data);
+        roundtrip(Codec::Shuffle, &data);
+        roundtrip(Codec::Shuffle, &[]);
+        roundtrip(Codec::Raw, &[]);
+    }
+
+    #[test]
+    fn constant_windows_compress_hard() {
+        let data = vec![0.125f32; 4096];
+        let (tag, bytes) = Codec::Shuffle.encode(&data);
+        assert_eq!(tag, Codec::Shuffle);
+        assert!(
+            bytes.len() < data.len(), // well under 1 byte per element
+            "constant window encoded to {} bytes",
+            bytes.len()
+        );
+        roundtrip(Codec::Shuffle, &data);
+        // same-magnitude parameters share exponent bytes: still shrinks
+        let ramp: Vec<f32> = (0..1024).map(|i| 1.0 + i as f32 * 1e-6).collect();
+        let (tag, bytes) = Codec::Shuffle.encode(&ramp);
+        assert_eq!(tag, Codec::Shuffle);
+        assert!(bytes.len() < ramp.len() * 4);
+        roundtrip(Codec::Shuffle, &ramp);
+    }
+
+    #[test]
+    fn incompressible_windows_fall_back_to_raw() {
+        // pseudo-random bits: byteshuffle finds no runs, so the
+        // never-larger rule ships the window raw
+        let noise: Vec<f32> = (0..256u32)
+            .map(|i| f32::from_bits(i.wrapping_mul(2_654_435_769) | 1))
+            .map(|v| if v.is_nan() { 1.0 } else { v })
+            .collect();
+        let (tag, bytes) = Codec::Shuffle.encode(&noise);
+        assert_eq!(tag, Codec::Raw, "noise should fall back to raw");
+        assert_eq!(bytes.len(), noise.len() * 4);
+        roundtrip(Codec::Shuffle, &noise);
+    }
+
+    #[test]
+    fn corrupt_streams_fail_loudly() {
+        let data = vec![2.5f32; 64];
+        let (tag, bytes) = Codec::Shuffle.encode(&data);
+        assert_eq!(tag, Codec::Shuffle);
+        // truncated
+        assert!(tag.decode(&bytes[..bytes.len() - 1], 64).is_err());
+        // wrong element count
+        assert!(tag.decode(&bytes, 63).is_err());
+        assert!(tag.decode(&bytes, 65).is_err());
+        // raw length mismatch
+        assert!(Codec::Raw.decode(&[0u8; 7], 2).is_err());
+        // zero-length token is malformed, not an infinite loop
+        assert!(Codec::Shuffle.decode(&[0u8], 1).is_err());
+        // truncated varint
+        assert!(Codec::Shuffle.decode(&[0x80], 1).is_err());
+        // an absurd claimed element count is an error before it is an
+        // allocation (hostile reply tables claim, decoders refuse)
+        assert!(Codec::Shuffle.decode(&[0u8], usize::MAX / 2).is_err());
+    }
+
+    #[test]
+    fn rle_respects_min_run_and_literals() {
+        // runs below MIN_RUN stay literal; above, they tokenize
+        let short = [1u8, 1, 1, 2, 3];
+        let enc = rle_encode(&short);
+        assert_eq!(rle_decode(&enc, short.len()).unwrap(), short);
+        let long = [7u8; 100];
+        let enc = rle_encode(&long);
+        assert!(enc.len() <= 3, "run of 100 should be one token: {enc:?}");
+        assert_eq!(rle_decode(&enc, 100).unwrap(), long.to_vec());
+        // mixed
+        let mut mixed = vec![9u8; 10];
+        mixed.extend_from_slice(&[1, 2, 3, 4, 5]);
+        mixed.extend_from_slice(&[0u8; 8]);
+        let enc = rle_encode(&mixed);
+        assert_eq!(rle_decode(&enc, mixed.len()).unwrap(), mixed);
+    }
+
+    #[test]
+    fn varint_roundtrip() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            write_varint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(read_varint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+}

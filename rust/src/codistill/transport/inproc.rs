@@ -161,10 +161,12 @@ impl ExchangeTransport for InProcess {
 
     fn gc(&self) -> Result<()> {
         // In-memory history is bounded on publish; only spool files can
-        // outlive the bound. Rewrite the shared manifest only when the
-        // prune actually removed something.
+        // outlive the bound. Rewrite the shared manifest when the prune
+        // removed something — or when it still lists files a concurrent
+        // pruner removed (same stale-row recovery as `SpoolDir::gc`).
         if let Some(dir) = &self.spool {
-            if crate::codistill::transport::spool::prune_spool(dir, self.history)? > 0 {
+            let pruned = crate::codistill::transport::spool::prune_spool(dir, self.history)?;
+            if pruned > 0 || crate::codistill::transport::spool::manifest_needs_rewrite(dir) {
                 crate::codistill::transport::spool::write_manifest(dir, None)?;
             }
         }
@@ -295,7 +297,7 @@ mod tests {
             .unwrap();
         assert_eq!(f.step, 7);
         assert_eq!(f.windows.len(), 1);
-        assert_eq!(f.windows[0].data, vec![3.0, 4.0, 5.0]);
+        assert_eq!(f.windows[0].to_f32().unwrap(), vec![3.0, 4.0, 5.0]);
         assert_eq!(f.payload_bytes(), 12);
         // unknown window is an error, absent member is None
         assert!(t.fetch_windows(0, u64::MAX, &["params.z".to_string()]).is_err());

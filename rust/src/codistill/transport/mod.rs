@@ -62,6 +62,22 @@
 //! has a dedicated `DELTA` opcode (basis digests up, changed windows
 //! down).
 //!
+//! ## Compressed window payloads
+//!
+//! [`codec`] layers lossless per-window encoding under the delta fetch:
+//! [`FetchSpec::codec`] advertises what a reader accepts, every
+//! [`FetchedWindow`] carries a per-window codec tag, and the install side
+//! ([`DeltaCache`], [`FetchResult::into_checkpoint`]) decodes and
+//! digest-verifies before any byte lands — so compression can shrink an
+//! exchange but never weaken the corrupt-payload guarantee or change the
+//! installed bytes. `SpoolDir` publishers opt in with
+//! [`SpoolDir::with_codec`] (`CKPT0004` files whose window table records
+//! codec + encoded length; readers `pread` the encoded ranges), socket
+//! clients with [`SocketTransport::with_codec`] (a capability byte on the
+//! `DELTA`/`FETCH` requests — old servers reject it cleanly and the
+//! client falls back to raw frames, old clients never send it), and
+//! `netsim::ClusterModel::compressed_exchange_time` prices the saving.
+//!
 //! ## Liveness heartbeats
 //!
 //! [`ExchangeTransport::last_steps`] returns `(member, freshest step)`
@@ -78,11 +94,13 @@
 //! (spool files past the bound are deleted). The orchestrator calls it on
 //! the publish cadence.
 
+pub mod codec;
 pub mod faulty;
 pub mod inproc;
 pub mod socket;
 pub mod spool;
 
+pub use codec::{Codec, WindowCodec};
 pub use faulty::{Blackout, FaultEvent, FaultKind, FaultPlan, Faulty};
 pub use inproc::InProcess;
 pub use socket::{SocketServer, SocketTransport};
@@ -126,13 +144,98 @@ impl TransportKind {
     }
 }
 
-/// One window pulled by a fetch: the name, its shape, and the contiguous
-/// slice of the publisher's plane.
+/// One window pulled by a fetch: the name, its shape, and the payload —
+/// either already-decoded f32s (in-memory backends, legacy wire frames)
+/// or the still-encoded bytes exactly as they moved over the medium
+/// (compressed spool preads, capability-negotiated socket frames). The
+/// install side ([`DeltaCache`], [`FetchResult::into_checkpoint`])
+/// decodes and digest-verifies encoded payloads, so a corrupt encoded
+/// window fails exactly as loudly as a corrupt raw one.
 #[derive(Debug, Clone)]
 pub struct FetchedWindow {
     pub name: String,
     pub shape: Vec<usize>,
-    pub data: Vec<f32>,
+    pub payload: WindowPayload,
+}
+
+/// A fetched window's payload representation (see [`FetchedWindow`]).
+#[derive(Debug, Clone)]
+pub enum WindowPayload {
+    /// Decoded f32 elements.
+    Raw(Vec<f32>),
+    /// Bytes as they moved over the medium, still in `codec` encoding.
+    Encoded { codec: Codec, bytes: Vec<u8> },
+}
+
+impl FetchedWindow {
+    /// A window carrying decoded elements.
+    pub fn raw(name: String, shape: Vec<usize>, data: Vec<f32>) -> Self {
+        FetchedWindow {
+            name,
+            shape,
+            payload: WindowPayload::Raw(data),
+        }
+    }
+
+    /// A window carrying a still-encoded payload.
+    pub fn encoded(name: String, shape: Vec<usize>, codec: Codec, bytes: Vec<u8>) -> Self {
+        FetchedWindow {
+            name,
+            shape,
+            payload: WindowPayload::Encoded { codec, bytes },
+        }
+    }
+
+    /// Element count this window decodes to (from its shape).
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Codec tag the payload travels in ([`Codec::Raw`] for decoded
+    /// payloads).
+    pub fn codec(&self) -> Codec {
+        match &self.payload {
+            WindowPayload::Raw(_) => Codec::Raw,
+            WindowPayload::Encoded { codec, .. } => *codec,
+        }
+    }
+
+    /// Bytes this window actually moved over the medium: the encoded
+    /// length for encoded payloads, 4 per element otherwise — the
+    /// quantity the delta/compression bench records and `netsim` prices.
+    pub fn wire_bytes(&self) -> u64 {
+        match &self.payload {
+            WindowPayload::Raw(data) => data.len() as u64 * 4,
+            WindowPayload::Encoded { bytes, .. } => bytes.len() as u64,
+        }
+    }
+
+    /// Decode into f32 elements, consuming the window (decoded payloads
+    /// move without a copy).
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        let elems = self.elems();
+        match self.payload {
+            WindowPayload::Raw(data) => {
+                if data.len() != elems {
+                    bail!(
+                        "window {:?}: payload has {} elems, shape wants {elems}",
+                        self.name,
+                        data.len()
+                    );
+                }
+                Ok(data)
+            }
+            WindowPayload::Encoded { codec, bytes } => codec
+                .decode(&bytes, elems)
+                .with_context(|| format!("decoding window {:?} ({})", self.name, codec.name())),
+        }
+    }
+
+    /// Decode into f32 elements, cloning decoded payloads (tests,
+    /// diagnostics — hot paths use [`FetchedWindow::into_f32`]).
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        self.clone().into_f32()
+    }
 }
 
 /// Result of [`ExchangeTransport::fetch_windows`]: which checkpoint the
@@ -145,10 +248,10 @@ pub struct WindowedFetch {
 }
 
 impl WindowedFetch {
-    /// Parameter payload bytes this fetch actually moved (4 bytes per f32
-    /// element) — the quantity `netsim` prices for sharded exchange.
+    /// Parameter payload bytes this fetch actually moved — the quantity
+    /// `netsim` prices for sharded exchange.
     pub fn payload_bytes(&self) -> u64 {
-        self.windows.iter().map(|w| w.data.len() as u64 * 4).sum()
+        self.windows.iter().map(|w| w.wire_bytes()).sum()
     }
 }
 
@@ -185,6 +288,13 @@ pub struct FetchSpec {
     /// Installed basis for delta fetch; `None` = full read.
     pub basis: Option<Basis>,
     pub windows: WindowSel,
+    /// Codec negotiation: the encoding the reader accepts for window
+    /// payloads ([`Codec::Raw`] = classic uncompressed frames). Backends
+    /// MAY answer any window in this codec or raw (the per-window tag on
+    /// each [`FetchedWindow`] is authoritative); readers always decode by
+    /// tag, so a backend serving pre-encoded state (a `CKPT0004` spool
+    /// file) may return encoded windows regardless.
+    pub codec: Codec,
 }
 
 impl FetchSpec {
@@ -197,6 +307,7 @@ impl FetchSpec {
             max_step,
             basis: None,
             windows: WindowSel::All,
+            codec: Codec::Raw,
         }
     }
 
@@ -208,12 +319,19 @@ impl FetchSpec {
             max_step,
             basis: None,
             windows: WindowSel::Named(names),
+            codec: Codec::Raw,
         }
     }
 
     /// Attach a delta basis.
     pub fn with_basis(mut self, basis: Basis) -> Self {
         self.basis = Some(basis);
+        self
+    }
+
+    /// Accept window payloads in `codec` encoding.
+    pub fn with_codec(mut self, codec: Codec) -> Self {
+        self.codec = codec;
         self
     }
 }
@@ -249,12 +367,13 @@ pub struct FetchResult {
 
 impl FetchResult {
     /// Parameter payload bytes this fetch moved: the whole plane for a
-    /// zero-copy full hand-off, otherwise the fetched windows only — the
-    /// quantity the delta bench records and `netsim` prices.
+    /// zero-copy full hand-off, otherwise the fetched windows only (at
+    /// their encoded size when a codec was in play) — the quantity the
+    /// delta/compression bench records and `netsim` prices.
     pub fn payload_bytes(&self) -> u64 {
         match &self.full {
             Some(ck) => ck.flat().layout().total_bytes() as u64,
-            None => self.windows.iter().map(|w| w.data.len() as u64 * 4).sum(),
+            None => self.windows.iter().map(|w| w.wire_bytes()).sum(),
         }
     }
 
@@ -281,11 +400,11 @@ impl FetchResult {
                 self.unchanged.len()
             );
         }
-        verify_fetched_windows(&self.windows, &self.parts, &self.digests)?;
+        let decoded = decode_and_verify(self.windows, &self.parts, &self.digests)?;
         let layout = Arc::new(FlatLayout::from_named_shapes(self.parts));
         let mut buf = FlatBuffer::zeros(layout);
-        for w in &self.windows {
-            buf.write_window(&w.name, &w.data)?;
+        for (name, data) in &decoded {
+            buf.write_window(name, data)?;
         }
         Ok(Arc::new(Checkpoint::from_flat(
             self.member,
@@ -296,7 +415,8 @@ impl FetchResult {
     }
 
     /// View as the historical [`WindowedFetch`] (the
-    /// [`ExchangeTransport::fetch_windows`] shim).
+    /// [`ExchangeTransport::fetch_windows`] shim). Windows are handed
+    /// over decoded: the legacy API predates the codec layer.
     pub fn into_windowed(self) -> Result<WindowedFetch> {
         if !self.unchanged.is_empty() {
             bail!(
@@ -310,14 +430,23 @@ impl FetchResult {
                 flat.layout()
                     .entries()
                     .iter()
-                    .map(|e| FetchedWindow {
-                        name: e.name.clone(),
-                        shape: e.shape.clone(),
-                        data: flat.data()[e.range()].to_vec(),
+                    .map(|e| {
+                        FetchedWindow::raw(
+                            e.name.clone(),
+                            e.shape.clone(),
+                            flat.data()[e.range()].to_vec(),
+                        )
                     })
                     .collect()
             }
-            None => self.windows,
+            None => self
+                .windows
+                .into_iter()
+                .map(|w| {
+                    let (name, shape) = (w.name.clone(), w.shape.clone());
+                    Ok(FetchedWindow::raw(name, shape, w.into_f32()?))
+                })
+                .collect::<Result<Vec<_>>>()?,
         };
         Ok(WindowedFetch {
             member: self.member,
@@ -440,17 +569,35 @@ pub(crate) fn windows_from_checkpoint(
                 ckpt.step
             ),
         };
-        windows.push(FetchedWindow {
-            name: name.clone(),
-            shape: entry.shape.clone(),
-            data: flat.view(name)?.to_vec(),
-        });
+        windows.push(FetchedWindow::raw(
+            name.clone(),
+            entry.shape.clone(),
+            flat.view(name)?.to_vec(),
+        ));
     }
     Ok(WindowedFetch {
         member: ckpt.member,
         step: ckpt.step,
         windows,
     })
+}
+
+/// Materialize one window for a fetch answer in the spec's negotiated
+/// codec: a straight slice copy for [`Codec::Raw`], an encode (with the
+/// never-larger fallback) otherwise.
+pub(crate) fn encode_window(
+    codec: Codec,
+    name: &str,
+    shape: &[usize],
+    data: &[f32],
+) -> FetchedWindow {
+    match codec {
+        Codec::Raw => FetchedWindow::raw(name.to_string(), shape.to_vec(), data.to_vec()),
+        other => {
+            let (tag, bytes) = other.encode(data);
+            FetchedWindow::encoded(name.to_string(), shape.to_vec(), tag, bytes)
+        }
+    }
 }
 
 /// Partition a plane's requested windows into (indices to fetch,
@@ -542,11 +689,12 @@ pub(crate) fn fetch_from_checkpoint(
     let mut windows = Vec::with_capacity(fetch_idx.len());
     for idx in fetch_idx {
         let e = &layout.entries()[idx];
-        windows.push(FetchedWindow {
-            name: e.name.clone(),
-            shape: e.shape.clone(),
-            data: flat.data()[e.range()].to_vec(),
-        });
+        windows.push(encode_window(
+            spec.codec,
+            &e.name,
+            &e.shape,
+            &flat.data()[e.range()],
+        ));
     }
     Ok(FetchResult {
         member: ckpt.member,
@@ -560,36 +708,42 @@ pub(crate) fn fetch_from_checkpoint(
     })
 }
 
-/// Check every fetched window's bytes against the digest table it rode
-/// in with — the install-side half of the "corrupt payloads fail loudly
-/// instead of poisoning a delta basis" guarantee (the publish-side half
-/// is the `CKPT0003` verify-on-load). Without this, a flipped byte in a
-/// spool payload would be installed AND its pre-corruption digest
-/// adopted as the basis, so every later fetch would skip the window as
-/// "unchanged" and the corruption would persist silently. For in-memory
-/// backends the hash is redundant (windows are copied out of the buffer
-/// the table was computed from) but it only touches the changed bytes.
-fn verify_fetched_windows(
-    windows: &[FetchedWindow],
+/// Decode every fetched window and check its bytes against the digest
+/// table it rode in with — the install-side half of the "corrupt
+/// payloads fail loudly instead of poisoning a delta basis" guarantee
+/// (the publish-side half is the `CKPT0003`/`CKPT0004` verify-on-load).
+/// Without this, a flipped byte in a spool payload would be installed
+/// AND its pre-corruption digest adopted as the basis, so every later
+/// fetch would skip the window as "unchanged" and the corruption would
+/// persist silently. An encoded payload that fails to decode — or
+/// decodes to bytes that miss the digest — dies here too, so the codec
+/// layer cannot weaken the guarantee. For in-memory backends the hash is
+/// redundant (windows are copied out of the buffer the table was
+/// computed from) but it only touches the changed bytes.
+pub(crate) fn decode_and_verify(
+    windows: Vec<FetchedWindow>,
     parts: &[(String, Vec<usize>)],
     digests: &[u64],
-) -> Result<()> {
+) -> Result<Vec<(String, Vec<f32>)>> {
+    let mut out = Vec::with_capacity(windows.len());
     for w in windows {
         let idx = match parts.iter().position(|(n, _)| n == &w.name) {
             Some(i) => i,
             None => bail!("fetched window {:?} is not in the plane's window table", w.name),
         };
-        let got = content_digest(&w.data);
+        let name = w.name.clone();
+        let data = w.into_f32()?;
+        let got = content_digest(&data);
         if got != digests[idx] {
             bail!(
-                "window {:?}: fetched payload hashes to {got:#018x}, digest table says \
+                "window {name:?}: fetched payload hashes to {got:#018x}, digest table says \
                  {:#018x} — corrupt delta payload",
-                w.name,
                 digests[idx]
             );
         }
+        out.push((name, data));
     }
-    Ok(())
+    Ok(out)
 }
 
 // -------------------------------------------------------- delta reader
@@ -605,7 +759,10 @@ pub struct DeltaStats {
     pub windows_moved: u64,
     /// Windows skipped because their digest matched the basis.
     pub windows_unchanged: u64,
-    /// Parameter payload bytes moved (full planes count whole).
+    /// Moved windows that arrived codec-encoded (non-raw tag).
+    pub windows_encoded: u64,
+    /// Parameter payload bytes moved over the medium (full planes count
+    /// whole; encoded windows count their encoded size).
     pub payload_bytes: u64,
 }
 
@@ -617,6 +774,7 @@ impl DeltaStats {
         self.delta_fetches += other.delta_fetches;
         self.windows_moved += other.windows_moved;
         self.windows_unchanged += other.windows_unchanged;
+        self.windows_encoded += other.windows_encoded;
         self.payload_bytes += other.payload_bytes;
     }
 }
@@ -658,11 +816,22 @@ impl InstalledPlane {
 pub struct DeltaCache {
     planes: HashMap<usize, InstalledPlane>,
     stats: DeltaStats,
+    /// Codec this reader advertises on every fetch ([`Codec::Raw`] =
+    /// classic uncompressed frames). Installed planes are byte-identical
+    /// either way — the codec only changes how moved windows are framed.
+    codec: Codec,
 }
 
 impl DeltaCache {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Advertise `codec` on every fetch this cache issues (compressed
+    /// window payloads where the backend supports them).
+    pub fn with_codec(mut self, codec: Codec) -> Self {
+        self.codec = codec;
+        self
     }
 
     /// Traffic accounting so far.
@@ -701,6 +870,7 @@ impl DeltaCache {
             max_step,
             basis,
             windows: WindowSel::All,
+            codec: self.codec,
         };
         match transport.fetch(&spec)? {
             Some(res) => self.install(transport, max_step, res, true),
@@ -744,11 +914,17 @@ impl DeltaCache {
             return Ok(Some(full));
         }
 
-        // Every installed byte must hash to the digest it will be
-        // remembered by — see `verify_fetched_windows`.
-        verify_fetched_windows(&windows, &parts, &digests)?;
+        // Wire accounting happens before the decode: encoded windows are
+        // charged at the size they actually moved.
+        let moved_windows = windows.len() as u64;
+        let moved_bytes: u64 = windows.iter().map(|w| w.wire_bytes()).sum();
+        let moved_encoded = windows.iter().filter(|w| w.codec() != Codec::Raw).count() as u64;
 
-        let complete = unchanged.is_empty() && windows.len() == parts.len();
+        // Every installed byte must decode cleanly and hash to the digest
+        // it will be remembered by — see `decode_and_verify`.
+        let decoded = decode_and_verify(windows, &parts, &digests)?;
+
+        let complete = unchanged.is_empty() && decoded.len() == parts.len();
         let matches = self
             .planes
             .get(&member)
@@ -765,7 +941,7 @@ impl DeltaCache {
                     bail!(
                         "member {member}: basis-free fetch still returned a partial plane \
                          ({} of {} windows)",
-                        windows.len(),
+                        decoded.len(),
                         parts.len()
                     );
                 }
@@ -778,13 +954,13 @@ impl DeltaCache {
             // Full rebuild from a complete window set.
             let layout = Arc::new(FlatLayout::from_named_shapes(parts));
             let mut buf = FlatBuffer::zeros(layout);
-            for w in &windows {
-                buf.write_window(&w.name, &w.data)?;
+            for (name, data) in &decoded {
+                buf.write_window(name, data)?;
             }
             self.stats.full_fetches += 1;
-            self.stats.windows_moved += windows.len() as u64;
-            self.stats.payload_bytes +=
-                windows.iter().map(|w| w.data.len() as u64 * 4).sum::<u64>();
+            self.stats.windows_moved += moved_windows;
+            self.stats.windows_encoded += moved_encoded;
+            self.stats.payload_bytes += moved_bytes;
             let flat = Arc::new(buf);
             self.planes.insert(
                 member,
@@ -806,20 +982,20 @@ impl DeltaCache {
         // either way the transport moved only the changed bytes. An
         // all-unchanged fetch touches nothing at all.
         let plane = self.planes.get_mut(&member).expect("matches checked");
-        if !windows.is_empty() {
+        if !decoded.is_empty() {
             let buf = Arc::make_mut(&mut plane.flat);
-            for w in &windows {
-                buf.write_window(&w.name, &w.data)?;
+            for (name, data) in &decoded {
+                buf.write_window(name, data)?;
             }
         }
         plane.step = step;
         plane.digests = digests;
         plane.residual = residual;
         self.stats.delta_fetches += 1;
-        self.stats.windows_moved += windows.len() as u64;
+        self.stats.windows_moved += moved_windows;
         self.stats.windows_unchanged += unchanged.len() as u64;
-        self.stats.payload_bytes +=
-            windows.iter().map(|w| w.data.len() as u64 * 4).sum::<u64>();
+        self.stats.windows_encoded += moved_encoded;
+        self.stats.payload_bytes += moved_bytes;
         Ok(Some(Arc::new(Checkpoint::from_flat(
             member,
             plane.step,
@@ -853,19 +1029,17 @@ mod tests {
             member: 0,
             step: 1,
             windows: vec![
-                FetchedWindow {
-                    name: "a".into(),
-                    shape: vec![3],
-                    data: vec![0.0; 3],
-                },
-                FetchedWindow {
-                    name: "b".into(),
-                    shape: vec![2, 2],
-                    data: vec![0.0; 4],
-                },
+                FetchedWindow::raw("a".into(), vec![3], vec![0.0; 3]),
+                FetchedWindow::raw("b".into(), vec![2, 2], vec![0.0; 4]),
             ],
         };
         assert_eq!(f.payload_bytes(), (3 + 4) * 4);
+        // encoded windows count the bytes that actually moved
+        let (tag, bytes) = Codec::Shuffle.encode(&[0.0; 16]);
+        let enc = FetchedWindow::encoded("c".into(), vec![16], tag, bytes.clone());
+        assert_eq!(enc.wire_bytes(), bytes.len() as u64);
+        assert!(enc.wire_bytes() < 16 * 4);
+        assert_eq!(enc.to_f32().unwrap(), vec![0.0; 16]);
     }
 
     fn two_window_ckpt(member: usize, step: u64, a: f32, b: f32) -> Arc<Checkpoint> {
@@ -903,7 +1077,7 @@ mod tests {
         assert_eq!(res.unchanged, vec!["params.a".to_string()]);
         assert_eq!(res.windows.len(), 1);
         assert_eq!(res.windows[0].name, "params.b");
-        assert_eq!(res.windows[0].data, vec![3.0; 3]);
+        assert_eq!(res.windows[0].to_f32().unwrap(), vec![3.0; 3]);
         assert_eq!(res.payload_bytes(), 3 * 4);
         // a basis of the wrong arity is ignored: full read
         let bad = Basis {
@@ -913,6 +1087,61 @@ mod tests {
         let res =
             fetch_from_checkpoint(&v2, &FetchSpec::full(0, ANY_STEP).with_basis(bad)).unwrap();
         assert!(res.full.is_some(), "invalid basis should degrade to full");
+    }
+
+    #[test]
+    fn fetch_from_checkpoint_honors_codec_negotiation() {
+        let v1 = two_window_ckpt(0, 5, 1.0, 2.0);
+        let v2 = two_window_ckpt(0, 9, 1.0, 3.0); // params.a unchanged
+        let basis = Basis {
+            step: 5,
+            digests: v1.window_digests().as_ref().clone(),
+        };
+        let spec = FetchSpec::full(0, ANY_STEP)
+            .with_basis(basis)
+            .with_codec(Codec::Shuffle);
+        let res = fetch_from_checkpoint(&v2, &spec).unwrap();
+        assert_eq!(res.windows.len(), 1);
+        // constant-valued window: the encoder pays off and the tag says so
+        assert_eq!(res.windows[0].codec(), Codec::Shuffle);
+        assert!(res.payload_bytes() < 3 * 4, "{}", res.payload_bytes());
+        // decode + digest verify reproduces the publisher's bytes
+        assert_eq!(res.windows[0].to_f32().unwrap(), vec![3.0; 3]);
+        let decoded = decode_and_verify(res.windows.clone(), &res.parts, &res.digests).unwrap();
+        assert_eq!(decoded[0].1, vec![3.0; 3]);
+        // a corrupt encoded payload fails loudly at the install boundary
+        let mut bad = res.windows.clone();
+        if let WindowPayload::Encoded { bytes, .. } = &mut bad[0].payload {
+            bytes[0] ^= 0x01;
+        }
+        assert!(decode_and_verify(bad, &res.parts, &res.digests).is_err());
+    }
+
+    #[test]
+    fn delta_cache_with_codec_installs_byte_identical_planes() {
+        let store = InProcess::new(8);
+        let t: &dyn ExchangeTransport = &store;
+        let mut plain = DeltaCache::new();
+        let mut coded = DeltaCache::new().with_codec(Codec::Shuffle);
+
+        for (step, b) in [(1u64, 2.0f32), (5, 3.0), (9, 4.0)] {
+            store.publish((*two_window_ckpt(0, step, 1.0, b)).clone()).unwrap();
+            let a = plain.latest(t, 0).unwrap().unwrap();
+            let c = coded.latest(t, 0).unwrap().unwrap();
+            assert_eq!(a.flat().data(), c.flat().data(), "codec changed bytes");
+            assert_eq!(a.step, c.step);
+        }
+        let (ps, cs) = (plain.stats(), coded.stats());
+        assert_eq!(ps.windows_moved, cs.windows_moved);
+        assert_eq!(ps.windows_unchanged, cs.windows_unchanged);
+        assert_eq!(ps.windows_encoded, 0);
+        assert!(cs.windows_encoded > 0, "codec never engaged: {cs:?}");
+        assert!(
+            cs.payload_bytes < ps.payload_bytes,
+            "encoded deltas should move fewer bytes: {} !< {}",
+            cs.payload_bytes,
+            ps.payload_bytes
+        );
     }
 
     #[test]

@@ -19,19 +19,23 @@
 //! |----|--------------|------------------|
 //! | 1 `PUBLISH`  | checkpoint stream | — |
 //! | 2 `LATEST`   | member u64, max_step u64 | checkpoint stream |
-//! | 3 `FETCH`    | member u64, max_step u64, n u32, names | member, step, windows (name, shape, elems u64, f32 data) |
+//! | 3 `FETCH`    | member u64, max_step u64, n u32 (bit 31 = capability), names, [codec u8] | member, step, windows (raw frames, or tagged frames under capability) |
 //! | 4 `DESCRIBE` | member u64, max_step u64 | member, step, window table, residual tensors |
 //! | 5 `MEMBERS`  | — | n u64, member u64s |
 //! | 6 `GC`       | — | — |
 //! | 7 `STEPS`    | — | n u64, (member u64, step u64) pairs |
-//! | 8 `DELTA`    | member u64, max_step u64, basis u8 [step u64, n u64, digests u64s], sel u8 [n u32, names] | member, step, window+digest table (n u64; name, shape, digest u64), changed windows (n u32; name, shape, elems u64, f32 data), unchanged names (n u32; names), residual tensors (n u64; frames) |
+//! | 8 `DELTA`    | member u64, max_step u64, flags u8 (bit 0 = basis, bit 1 = capability) [step u64, n u64, digests u64s], sel u8 [n u32, names], [codec u8] | member, step, window+digest table (n u64; name, shape, digest u64), changed windows (n u32; raw or tagged frames), unchanged names (n u32; names), residual tensors (n u64; frames) |
+//!
+//! A raw window frame is `name, shape, elems u64, f32 data`; a tagged
+//! frame (capability negotiated) is `name, shape, codec u8, len u64,
+//! encoded bytes` — see `transport::codec`.
 //!
 //! `STEPS` is the liveness heartbeat: the freshest published step per
 //! member with no checkpoint payload attached, so a coordinator can poll
 //! it on every reload without moving planes.
 //!
 //! `DELTA` is the one read the client's [`ExchangeTransport::fetch`]
-//! speaks: the request carries an optional delta basis (`basis u8` = 1 ⇒
+//! speaks: the request carries an optional delta basis (flags bit 0 ⇒
 //! installed step + per-window digest vector) and a window selection
 //! (`sel u8` = 0 ⇒ whole plane, 1 ⇒ named windows), and the response
 //! returns only the windows whose content digest differs from the basis,
@@ -39,6 +43,23 @@
 //! the server-side twin of `transport::fetch_from_checkpoint`. `LATEST` /
 //! `FETCH` / `DESCRIBE` remain for older readers and for the windowed
 //! reassembly mode below.
+//!
+//! ## Codec capability (compressed window payloads)
+//!
+//! A client built [`SocketTransport::with_codec`] asks for encoded window
+//! frames by setting a **capability bit** on the request — bit 1 of the
+//! `DELTA` flags byte, bit 31 of the `FETCH` name count — and appending
+//! one codec-id byte after the request body. Interop is deliberately
+//! asymmetric-safe in both directions: an old client never sets the bit
+//! and keeps receiving raw frames byte-identical to before; an old server
+//! rejects the unknown bit with a clean `STATUS_ERR` ("bad basis flag" /
+//! the `checked_count` guard on the absurd name count), which the new
+//! client detects, remembers, and transparently retries raw. Replies to a
+//! capability request frame every changed window as `codec u8, len u64,
+//! bytes` with a **per-window tag**: windows the codec cannot shrink ride
+//! raw-tagged, and the client hands encoded payloads to the install side
+//! (`DeltaCache` / `into_checkpoint`), which decodes and digest-verifies
+//! before any byte lands.
 //!
 //! ## Concurrency
 //!
@@ -67,8 +88,8 @@ use crate::codistill::store::{
     write_name, write_shape, Checkpoint,
 };
 use crate::codistill::transport::{
-    fetch_from_checkpoint, windows_from_checkpoint, Basis, ExchangeTransport, FetchResult,
-    FetchSpec, FetchedWindow, InProcess, TransportKind, WindowSel, WindowedFetch,
+    fetch_from_checkpoint, windows_from_checkpoint, Basis, Codec, ExchangeTransport, FetchResult,
+    FetchSpec, FetchedWindow, InProcess, TransportKind, WindowPayload, WindowSel, WindowedFetch,
 };
 use crate::runtime::flat::{FlatBuffer, FlatLayout};
 use crate::runtime::{Tensor, TensorMap};
@@ -90,6 +111,17 @@ const OP_MEMBERS: u8 = 5;
 const OP_GC: u8 = 6;
 const OP_STEPS: u8 = 7;
 const OP_DELTA: u8 = 8;
+
+/// `DELTA` flags byte: bit 0 = a delta basis follows, bit 1 = a codec
+/// capability byte follows the window selection (module docs). Old
+/// servers reject any flags value above 1 with "bad basis flag".
+const DELTA_FLAG_BASIS: u8 = 1;
+const DELTA_FLAG_CODEC: u8 = 2;
+
+/// `FETCH` capability bit on the u32 name count: a codec byte follows
+/// the names. Old servers see an absurd count and reject it through
+/// `checked_count` — a clean error the client falls back on.
+const FETCH_CAP_BIT: u32 = 0x8000_0000;
 
 /// Bound on concurrently served connections: accepts past the cap wait
 /// for a worker slot to free instead of spawning unboundedly.
@@ -169,6 +201,71 @@ fn write_framed_tensor(w: &mut impl Write, name: &str, t: &Tensor) -> Result<()>
         }
     }
     Ok(())
+}
+
+/// Legacy window frame: `name, shape, elems u64, f32 data`. Windows that
+/// arrive encoded are decoded first — a pre-capability reader never sees
+/// codec bytes.
+fn write_window_frame_raw(out: &mut Vec<u8>, w: &FetchedWindow) -> Result<()> {
+    write_name(out, &w.name)?;
+    write_shape(out, &w.shape)?;
+    match &w.payload {
+        WindowPayload::Raw(data) => {
+            out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+            write_f32s(out, data)?;
+        }
+        WindowPayload::Encoded { .. } => {
+            let data = w.to_f32()?;
+            out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+            write_f32s(out, &data)?;
+        }
+    }
+    Ok(())
+}
+
+/// Capability window frame: `name, shape, codec u8, len u64, bytes` —
+/// the per-window tag records what the payload is actually encoded as.
+fn write_window_frame_tagged(out: &mut Vec<u8>, w: &FetchedWindow) -> Result<()> {
+    write_name(out, &w.name)?;
+    write_shape(out, &w.shape)?;
+    match &w.payload {
+        WindowPayload::Raw(data) => {
+            out.push(Codec::Raw.id());
+            out.extend_from_slice(&((data.len() * 4) as u64).to_le_bytes());
+            write_f32s(out, data)?;
+        }
+        WindowPayload::Encoded { codec, bytes } => {
+            out.push(codec.id());
+            out.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+            out.extend_from_slice(bytes);
+        }
+    }
+    Ok(())
+}
+
+/// Parse one capability window frame (the inverse of
+/// [`write_window_frame_tagged`]); the payload stays encoded for the
+/// install side to decode + digest-verify.
+fn read_window_frame_tagged(r: &mut &[u8]) -> Result<FetchedWindow> {
+    let name = read_name(r)?;
+    let shape = read_shape(r)?;
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag)?;
+    let codec = Codec::from_id(tag[0])?;
+    let len = checked_count(read_u64(r)? as usize, r.len(), 1, "payload bytes")?;
+    let mut bytes = vec![0u8; len];
+    r.read_exact(&mut bytes)?;
+    Ok(FetchedWindow::encoded(name, shape, codec, bytes))
+}
+
+/// Parse one legacy window frame.
+fn read_window_frame_raw(r: &mut &[u8]) -> Result<FetchedWindow> {
+    let name = read_name(r)?;
+    let shape = read_shape(r)?;
+    let elems = checked_count(read_u64(r)? as usize, r.len(), 4, "f32s")?;
+    let mut data = vec![0f32; elems];
+    crate::codistill::store::read_f32s(r, &mut data)?;
+    Ok(FetchedWindow::raw(name, shape, data))
 }
 
 // ------------------------------------------------------------------- server
@@ -488,11 +585,23 @@ fn try_handle(store: &InProcess, payload: &[u8]) -> Result<Vec<u8>> {
         OP_FETCH => {
             let member = read_u64(&mut r)? as usize;
             let max_step = read_u64(&mut r)?;
-            let n = checked_count(read_u32(&mut r)? as usize, r.len(), 4, "names")?;
+            let raw_count = read_u32(&mut r)?;
+            // Capability bit: a codec byte follows the names and the
+            // reply uses tagged frames. An old server never gets here —
+            // the masked-off count fails its checked_count guard.
+            let cap = raw_count & FETCH_CAP_BIT != 0;
+            let n = checked_count((raw_count & !FETCH_CAP_BIT) as usize, r.len(), 4, "names")?;
             let mut names = Vec::with_capacity(n);
             for _ in 0..n {
                 names.push(read_name(&mut r)?);
             }
+            let codec = if cap {
+                let mut tag = [0u8; 1];
+                r.read_exact(&mut tag)?;
+                Codec::from_id(tag[0])?
+            } else {
+                Codec::Raw
+            };
             match store.latest_at_most(member, max_step) {
                 Some(ckpt) => {
                     let fetch = windows_from_checkpoint(&ckpt, &names)?;
@@ -501,10 +610,22 @@ fn try_handle(store: &InProcess, payload: &[u8]) -> Result<Vec<u8>> {
                     out.extend_from_slice(&fetch.step.to_le_bytes());
                     out.extend_from_slice(&(fetch.windows.len() as u32).to_le_bytes());
                     for w in &fetch.windows {
-                        write_name(&mut out, &w.name)?;
-                        write_shape(&mut out, &w.shape)?;
-                        out.extend_from_slice(&(w.data.len() as u64).to_le_bytes());
-                        write_f32s(&mut out, &w.data)?;
+                        if cap {
+                            // Encode straight off the window's payload —
+                            // windows_from_checkpoint hands over decoded
+                            // data, so no second copy before the encode.
+                            let (tag, bytes) = match &w.payload {
+                                WindowPayload::Raw(data) => codec.encode(data),
+                                WindowPayload::Encoded { .. } => codec.encode(&w.to_f32()?),
+                            };
+                            write_name(&mut out, &w.name)?;
+                            write_shape(&mut out, &w.shape)?;
+                            out.push(tag.id());
+                            out.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+                            out.extend_from_slice(&bytes);
+                        } else {
+                            write_window_frame_raw(&mut out, w)?;
+                        }
                     }
                     Ok(out)
                 }
@@ -563,18 +684,23 @@ fn try_handle(store: &InProcess, payload: &[u8]) -> Result<Vec<u8>> {
             let max_step = read_u64(&mut r)?;
             let mut flag = [0u8; 1];
             r.read_exact(&mut flag)?;
-            let basis = match flag[0] {
-                0 => None,
-                1 => {
-                    let step = read_u64(&mut r)?;
-                    let n = checked_count(read_u64(&mut r)? as usize, r.len(), 8, "digests")?;
-                    let mut digests = Vec::with_capacity(n);
-                    for _ in 0..n {
-                        digests.push(read_u64(&mut r)?);
-                    }
-                    Some(Basis { step, digests })
+            let flags = flag[0];
+            // The pre-capability protocol used this byte as a pure 0/1
+            // basis marker; keeping the error string stable ("bad basis
+            // flag") is what lets a new client recognize an old server.
+            if flags > (DELTA_FLAG_BASIS | DELTA_FLAG_CODEC) {
+                bail!("bad basis flag {flags}");
+            }
+            let basis = if flags & DELTA_FLAG_BASIS != 0 {
+                let step = read_u64(&mut r)?;
+                let n = checked_count(read_u64(&mut r)? as usize, r.len(), 8, "digests")?;
+                let mut digests = Vec::with_capacity(n);
+                for _ in 0..n {
+                    digests.push(read_u64(&mut r)?);
                 }
-                other => bail!("bad basis flag {other}"),
+                Some(Basis { step, digests })
+            } else {
+                None
             };
             r.read_exact(&mut flag)?;
             let windows = match flag[0] {
@@ -589,15 +715,24 @@ fn try_handle(store: &InProcess, payload: &[u8]) -> Result<Vec<u8>> {
                 }
                 other => bail!("bad window selection flag {other}"),
             };
+            let cap = flags & DELTA_FLAG_CODEC != 0;
+            let codec = if cap {
+                r.read_exact(&mut flag)?;
+                Codec::from_id(flag[0])?
+            } else {
+                Codec::Raw
+            };
             let spec = FetchSpec {
                 member,
                 max_step,
                 basis,
                 windows,
+                codec,
             };
             // The server IS an InProcess store: answer with its native
             // fetch so this path can never diverge from the reference
-            // backend.
+            // backend (which also does the per-window encoding when the
+            // spec carries a codec).
             match ExchangeTransport::fetch(store, &spec)? {
                 Some(res) => {
                     let mut out = vec![STATUS_OK];
@@ -617,19 +752,31 @@ fn try_handle(store: &InProcess, payload: &[u8]) -> Result<Vec<u8>> {
                             let entries = flat.layout().entries();
                             out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
                             for e in entries {
-                                write_name(&mut out, &e.name)?;
-                                write_shape(&mut out, &e.shape)?;
-                                out.extend_from_slice(&(e.len as u64).to_le_bytes());
-                                write_f32s(&mut out, &flat.data()[e.range()])?;
+                                if cap {
+                                    let (tag, bytes) = codec.encode(&flat.data()[e.range()]);
+                                    let w = FetchedWindow::encoded(
+                                        e.name.clone(),
+                                        e.shape.clone(),
+                                        tag,
+                                        bytes,
+                                    );
+                                    write_window_frame_tagged(&mut out, &w)?;
+                                } else {
+                                    write_name(&mut out, &e.name)?;
+                                    write_shape(&mut out, &e.shape)?;
+                                    out.extend_from_slice(&(e.len as u64).to_le_bytes());
+                                    write_f32s(&mut out, &flat.data()[e.range()])?;
+                                }
                             }
                         }
                         None => {
                             out.extend_from_slice(&(res.windows.len() as u32).to_le_bytes());
                             for w in &res.windows {
-                                write_name(&mut out, &w.name)?;
-                                write_shape(&mut out, &w.shape)?;
-                                out.extend_from_slice(&(w.data.len() as u64).to_le_bytes());
-                                write_f32s(&mut out, &w.data)?;
+                                if cap {
+                                    write_window_frame_tagged(&mut out, w)?;
+                                } else {
+                                    write_window_frame_raw(&mut out, w)?;
+                                }
                             }
                         }
                     }
@@ -676,33 +823,39 @@ pub struct SocketTransport {
     /// windowed fetches of `batch` windows each instead of one full-plane
     /// response.
     windowed: Option<usize>,
+    /// Codec advertised through the capability bit on `DELTA`/`FETCH`
+    /// requests ([`Codec::Raw`] = classic raw frames, no capability).
+    codec: Codec,
+    /// Sticky fallback: set once a capability request is rejected by a
+    /// pre-capability server, so later requests skip the doomed attempt.
+    legacy_peer: AtomicBool,
     requests: AtomicU64,
     bytes_tx: AtomicU64,
     bytes_rx: AtomicU64,
 }
 
 impl SocketTransport {
-    /// Connect to a [`SocketServer::bind_tcp`] endpoint (`host:port`).
-    pub fn connect_tcp(addr: &str) -> Self {
+    fn new(target: Target) -> Self {
         SocketTransport {
-            target: Target::Tcp(addr.to_string()),
+            target,
             windowed: None,
+            codec: Codec::Raw,
+            legacy_peer: AtomicBool::new(false),
             requests: AtomicU64::new(0),
             bytes_tx: AtomicU64::new(0),
             bytes_rx: AtomicU64::new(0),
         }
     }
 
+    /// Connect to a [`SocketServer::bind_tcp`] endpoint (`host:port`).
+    pub fn connect_tcp(addr: &str) -> Self {
+        Self::new(Target::Tcp(addr.to_string()))
+    }
+
     /// Connect to a [`SocketServer::bind_unix`] endpoint.
     #[cfg(unix)]
     pub fn connect_unix(path: &Path) -> Self {
-        SocketTransport {
-            target: Target::Unix(path.to_path_buf()),
-            windowed: None,
-            requests: AtomicU64::new(0),
-            bytes_tx: AtomicU64::new(0),
-            bytes_rx: AtomicU64::new(0),
-        }
+        Self::new(Target::Unix(path.to_path_buf()))
     }
 
     /// Parse an endpoint spec: `unix:/path/to.sock` or `host:port`.
@@ -722,6 +875,35 @@ impl SocketTransport {
     pub fn with_windowed_fetch(mut self, batch: usize) -> Self {
         self.windowed = Some(batch.max(1));
         self
+    }
+
+    /// Ask the server for codec-encoded window frames (the capability
+    /// bit on `DELTA`/`FETCH` requests). Falls back to raw frames —
+    /// transparently and stickily — against a pre-capability server.
+    pub fn with_codec(mut self, codec: Codec) -> Self {
+        self.codec = codec;
+        self
+    }
+
+    /// The codec to advertise for one spec: an explicit spec codec wins,
+    /// the client default otherwise — and neither once the peer proved
+    /// pre-capability.
+    fn effective_codec(&self, spec_codec: Codec) -> Codec {
+        if self.legacy_peer.load(Ordering::Relaxed) {
+            return Codec::Raw;
+        }
+        if spec_codec != Codec::Raw {
+            spec_codec
+        } else {
+            self.codec
+        }
+    }
+
+    /// Whether `err` is a pre-capability server rejecting a capability
+    /// request (old `DELTA` flag validation / old `FETCH` count guard).
+    fn is_capability_rejection(err: &anyhow::Error) -> bool {
+        let text = format!("{err:#}");
+        text.contains("bad basis flag") || text.contains("names but only")
     }
 
     /// (requests, bytes sent, bytes received) so far — the numbers the
@@ -792,14 +974,18 @@ impl SocketTransport {
         let mut r = body.as_slice();
         let member = read_u64(&mut r)? as usize;
         let step = read_u64(&mut r)?;
-        let n_windows = read_u64(&mut r)? as usize;
+        // Reply counts come off the wire: bound them against the bytes
+        // actually present (like every other count parser here) so a
+        // truncated or malicious frame is a protocol error, never a huge
+        // allocation.
+        let n_windows = checked_count(read_u64(&mut r)? as usize, r.len(), 8, "windows")?;
         let mut parts = Vec::with_capacity(n_windows);
         for _ in 0..n_windows {
             let name = read_name(&mut r)?;
             let shape = read_shape(&mut r)?;
             parts.push((name, shape));
         }
-        let n_residual = read_u64(&mut r)? as usize;
+        let n_residual = checked_count(read_u64(&mut r)? as usize, r.len(), 9, "residuals")?;
         let mut residual = TensorMap::new();
         for _ in 0..n_residual {
             let (name, t) = read_framed_tensor(&mut r)?;
@@ -833,7 +1019,7 @@ impl SocketTransport {
         let names: Vec<String> = layout.names().map(|s| s.to_string()).collect();
         for chunk in names.chunks(batch) {
             let fetch = self
-                .wire_fetch_windows(member, desc.step, chunk)?
+                .wire_fetch_windows(member, desc.step, chunk, self.effective_codec(Codec::Raw))?
                 .context("checkpoint pruned between describe and fetch")?;
             if fetch.step != desc.step {
                 bail!(
@@ -842,8 +1028,9 @@ impl SocketTransport {
                     fetch.step
                 );
             }
-            for w in &fetch.windows {
-                buf.write_window(&w.name, &w.data)?;
+            for w in fetch.windows {
+                let name = w.name.clone();
+                buf.write_window(&name, &w.into_f32()?)?;
             }
         }
         let digests = buf.window_digests();
@@ -865,24 +1052,38 @@ impl SocketTransport {
         }))
     }
 
-    /// The raw `FETCH` wire op: named windows of the freshest checkpoint
-    /// within `max_step`, in request order.
+    /// The `FETCH` wire op: named windows of the freshest checkpoint
+    /// within `max_step`, in request order. A non-raw `codec` sets the
+    /// capability bit (tagged reply frames); a pre-capability server's
+    /// rejection flips the sticky fallback and the request retries raw.
     fn wire_fetch_windows(
         &self,
         member: usize,
         max_step: u64,
         names: &[String],
+        codec: Codec,
     ) -> Result<Option<WindowedFetch>> {
+        let cap = codec != Codec::Raw;
         let mut req = vec![OP_FETCH];
         req.extend_from_slice(&(member as u64).to_le_bytes());
         req.extend_from_slice(&max_step.to_le_bytes());
-        req.extend_from_slice(&(names.len() as u32).to_le_bytes());
+        let count = names.len() as u32 | if cap { FETCH_CAP_BIT } else { 0 };
+        req.extend_from_slice(&count.to_le_bytes());
         for name in names {
             write_name(&mut req, name)?;
         }
-        let body = match self.roundtrip(&req)? {
-            Some(b) => b,
-            None => return Ok(None),
+        if cap {
+            req.push(codec.id());
+        }
+        let body = match self.roundtrip(&req) {
+            Err(e) if cap && Self::is_capability_rejection(&e) => {
+                self.legacy_peer.store(true, Ordering::Relaxed);
+                return self.wire_fetch_windows(member, max_step, names, Codec::Raw);
+            }
+            other => match other? {
+                Some(b) => b,
+                None => return Ok(None),
+            },
         };
         let mut r = body.as_slice();
         let member = read_u64(&mut r)? as usize;
@@ -890,12 +1091,11 @@ impl SocketTransport {
         let n = checked_count(read_u32(&mut r)? as usize, r.len(), 16, "windows")?;
         let mut windows = Vec::with_capacity(n);
         for _ in 0..n {
-            let name = read_name(&mut r)?;
-            let shape = read_shape(&mut r)?;
-            let elems = checked_count(read_u64(&mut r)? as usize, r.len(), 4, "f32s")?;
-            let mut data = vec![0f32; elems];
-            crate::codistill::store::read_f32s(&mut r, &mut data)?;
-            windows.push(FetchedWindow { name, shape, data });
+            windows.push(if cap {
+                read_window_frame_tagged(&mut r)?
+            } else {
+                read_window_frame_raw(&mut r)?
+            });
         }
         Ok(Some(WindowedFetch {
             member,
@@ -921,7 +1121,8 @@ impl ExchangeTransport for SocketTransport {
     /// The one native read: a full no-basis fetch pulls the whole
     /// checkpoint in one `LATEST` stream (or reassembles it window by
     /// window in windowed mode); anything else — a delta basis or a named
-    /// scope — is one `DELTA` round trip moving only changed windows.
+    /// scope — is one `DELTA` round trip moving only changed windows,
+    /// codec-encoded when the capability negotiated (module docs).
     fn fetch(&self, spec: &FetchSpec) -> Result<Option<FetchResult>> {
         if spec.basis.is_none() {
             if let WindowSel::All = spec.windows {
@@ -943,19 +1144,25 @@ impl ExchangeTransport for SocketTransport {
                 )?));
             }
         }
+        let codec = self.effective_codec(spec.codec);
+        let cap = codec != Codec::Raw;
         let mut req = vec![OP_DELTA];
         req.extend_from_slice(&(spec.member as u64).to_le_bytes());
         req.extend_from_slice(&spec.max_step.to_le_bytes());
-        match &spec.basis {
-            Some(b) => {
-                req.push(1);
-                req.extend_from_slice(&b.step.to_le_bytes());
-                req.extend_from_slice(&(b.digests.len() as u64).to_le_bytes());
-                for d in &b.digests {
-                    req.extend_from_slice(&d.to_le_bytes());
-                }
+        let mut flags = 0u8;
+        if spec.basis.is_some() {
+            flags |= DELTA_FLAG_BASIS;
+        }
+        if cap {
+            flags |= DELTA_FLAG_CODEC;
+        }
+        req.push(flags);
+        if let Some(b) = &spec.basis {
+            req.extend_from_slice(&b.step.to_le_bytes());
+            req.extend_from_slice(&(b.digests.len() as u64).to_le_bytes());
+            for d in &b.digests {
+                req.extend_from_slice(&d.to_le_bytes());
             }
-            None => req.push(0),
         }
         match &spec.windows {
             WindowSel::All => req.push(0),
@@ -967,9 +1174,20 @@ impl ExchangeTransport for SocketTransport {
                 }
             }
         }
-        let body = match self.roundtrip(&req)? {
-            Some(b) => b,
-            None => return Ok(None),
+        if cap {
+            req.push(codec.id());
+        }
+        let body = match self.roundtrip(&req) {
+            // A pre-capability server rejects the flags byte; remember
+            // and retry the identical spec with raw frames.
+            Err(e) if cap && Self::is_capability_rejection(&e) => {
+                self.legacy_peer.store(true, Ordering::Relaxed);
+                return self.fetch(spec);
+            }
+            other => match other? {
+                Some(b) => b,
+                None => return Ok(None),
+            },
         };
         let mut r = body.as_slice();
         let member = read_u64(&mut r)? as usize;
@@ -989,19 +1207,18 @@ impl ExchangeTransport for SocketTransport {
         let n_changed = checked_count(read_u32(&mut r)? as usize, r.len(), 16, "windows")?;
         let mut windows = Vec::with_capacity(n_changed);
         for _ in 0..n_changed {
-            let name = read_name(&mut r)?;
-            let shape = read_shape(&mut r)?;
-            let elems = checked_count(read_u64(&mut r)? as usize, r.len(), 4, "f32s")?;
-            let mut data = vec![0f32; elems];
-            crate::codistill::store::read_f32s(&mut r, &mut data)?;
-            windows.push(FetchedWindow { name, shape, data });
+            windows.push(if cap {
+                read_window_frame_tagged(&mut r)?
+            } else {
+                read_window_frame_raw(&mut r)?
+            });
         }
         let n_unchanged = checked_count(read_u32(&mut r)? as usize, r.len(), 4, "names")?;
         let mut unchanged = Vec::with_capacity(n_unchanged);
         for _ in 0..n_unchanged {
             unchanged.push(read_name(&mut r)?);
         }
-        let n_residual = read_u64(&mut r)? as usize;
+        let n_residual = checked_count(read_u64(&mut r)? as usize, r.len(), 9, "residuals")?;
         let mut residual = TensorMap::new();
         for _ in 0..n_residual {
             let (name, t) = read_framed_tensor(&mut r)?;
@@ -1024,7 +1241,7 @@ impl ExchangeTransport for SocketTransport {
             .roundtrip(&[OP_MEMBERS])?
             .context("members returned not-found")?;
         let mut r = body.as_slice();
-        let n = read_u64(&mut r)? as usize;
+        let n = checked_count(read_u64(&mut r)? as usize, r.len(), 8, "members")?;
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             out.push(read_u64(&mut r)? as usize);
@@ -1037,7 +1254,7 @@ impl ExchangeTransport for SocketTransport {
             .roundtrip(&[OP_STEPS])?
             .context("steps returned not-found")?;
         let mut r = body.as_slice();
-        let n = read_u64(&mut r)? as usize;
+        let n = checked_count(read_u64(&mut r)? as usize, r.len(), 16, "heartbeats")?;
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             let m = read_u64(&mut r)? as usize;
@@ -1106,7 +1323,7 @@ mod tests {
             .unwrap()
             .unwrap();
         assert_eq!(f.step, 3);
-        assert_eq!(f.windows[0].data, vec![3.5, 4.5, 5.5]);
+        assert_eq!(f.windows[0].to_f32().unwrap(), vec![3.5, 4.5, 5.5]);
         assert_eq!(f.payload_bytes(), 12);
 
         // windowed reload reassembles the identical checkpoint
@@ -1169,7 +1386,7 @@ mod tests {
         assert_eq!(res.unchanged, vec!["params.a".to_string()]);
         assert_eq!(res.windows.len(), 1);
         assert_eq!(res.windows[0].name, "params.b");
-        assert_eq!(res.windows[0].data, vec![9.0, 9.0, 9.0]);
+        assert_eq!(res.windows[0].to_f32().unwrap(), vec![9.0, 9.0, 9.0]);
         assert_eq!(res.payload_bytes(), 3 * 4);
         assert_eq!(res.parts.len(), 2);
         assert_eq!(res.digests.len(), 2);
@@ -1193,6 +1410,187 @@ mod tests {
             .fetch(&FetchSpec::full(9, u64::MAX))
             .unwrap()
             .is_none());
+    }
+
+    /// Satellite regression: a hostile or corrupt server replying
+    /// `STATUS_OK` with absurd element counts must produce a protocol
+    /// error on the client — never a multi-gigabyte `Vec::with_capacity`.
+    /// Before the `checked_count` guards on the reply parsers, the
+    /// DESCRIBE `n_windows` and the DESCRIBE/DELTA `n_residual` counts
+    /// were trusted verbatim.
+    #[test]
+    fn malformed_reply_counts_error_instead_of_allocating() {
+        use std::net::TcpListener;
+
+        // One-shot fake server: answers every connection's first frame
+        // with the canned STATUS_OK body.
+        fn fake_server(reply: Vec<u8>) -> (String, std::thread::JoinHandle<()>) {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap().to_string();
+            let handle = std::thread::spawn(move || {
+                if let Ok((mut s, _)) = listener.accept() {
+                    if read_frame(&mut s).is_ok() {
+                        write_frame(&mut s, &reply).ok();
+                    }
+                }
+            });
+            (addr, handle)
+        }
+
+        // DESCRIBE reply claiming u64::MAX windows
+        let mut body = vec![STATUS_OK];
+        body.extend_from_slice(&0u64.to_le_bytes()); // member
+        body.extend_from_slice(&1u64.to_le_bytes()); // step
+        body.extend_from_slice(&u64::MAX.to_le_bytes()); // n_windows
+        let (addr, h) = fake_server(body);
+        let err = SocketTransport::connect_tcp(&addr)
+            .with_windowed_fetch(2)
+            .latest(0)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("frame claims"), "{err:#}");
+        h.join().unwrap();
+
+        // DELTA reply with an empty table but u64::MAX residual tensors
+        let mut body = vec![STATUS_OK];
+        body.extend_from_slice(&0u64.to_le_bytes()); // member
+        body.extend_from_slice(&1u64.to_le_bytes()); // step
+        body.extend_from_slice(&0u64.to_le_bytes()); // n_parts
+        body.extend_from_slice(&0u32.to_le_bytes()); // n_changed
+        body.extend_from_slice(&0u32.to_le_bytes()); // n_unchanged
+        body.extend_from_slice(&u64::MAX.to_le_bytes()); // n_residual
+        let (addr, h) = fake_server(body);
+        let err = SocketTransport::connect_tcp(&addr)
+            .fetch(
+                &crate::codistill::transport::FetchSpec::full(0, u64::MAX).with_basis(Basis {
+                    step: 0,
+                    digests: vec![0],
+                }),
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("frame claims"), "{err:#}");
+        h.join().unwrap();
+
+        // MEMBERS reply claiming u64::MAX members
+        let mut body = vec![STATUS_OK];
+        body.extend_from_slice(&u64::MAX.to_le_bytes());
+        let (addr, h) = fake_server(body);
+        let err = SocketTransport::connect_tcp(&addr).members().unwrap_err();
+        assert!(format!("{err:#}").contains("frame claims"), "{err:#}");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn delta_capability_moves_encoded_frames() {
+        use crate::codistill::transport::DeltaCache;
+        let server = SocketServer::bind_tcp("127.0.0.1:0", 4).unwrap();
+        let publisher = SocketTransport::connect_tcp(server.addr());
+        // constant-valued windows so the shuffle codec pays off
+        let big = |member: usize, step: u64, v: f32| {
+            let mut params = TensorMap::new();
+            params.insert("params.hot", Tensor::f32(&[256], vec![v; 256]).unwrap());
+            params.insert("params.cold", Tensor::f32(&[256], vec![0.5; 256]).unwrap());
+            Checkpoint::new(member, step, params)
+        };
+        publisher.publish(big(0, 1, 1.0)).unwrap();
+        publisher.publish(big(0, 2, 2.0)).unwrap();
+        let v1 = publisher.latest_at_most(0, 1).unwrap().unwrap();
+        let basis = Basis {
+            step: 1,
+            digests: v1.window_digests().as_ref().clone(),
+        };
+
+        let raw = SocketTransport::connect_tcp(server.addr());
+        let coded = SocketTransport::connect_tcp(server.addr()).with_codec(Codec::Shuffle);
+        let spec = crate::codistill::transport::FetchSpec::full(0, u64::MAX).with_basis(basis);
+        let res_raw = raw.fetch(&spec).unwrap().unwrap();
+        let res_enc = coded.fetch(&spec).unwrap().unwrap();
+        assert_eq!(res_raw.unchanged, res_enc.unchanged);
+        assert_eq!(res_enc.windows.len(), 1);
+        assert_eq!(res_enc.windows[0].codec(), Codec::Shuffle);
+        assert!(
+            res_enc.payload_bytes() < res_raw.payload_bytes(),
+            "{} !< {}",
+            res_enc.payload_bytes(),
+            res_raw.payload_bytes()
+        );
+        // decoded bytes identical to the raw frames
+        assert_eq!(
+            res_enc.windows[0].to_f32().unwrap(),
+            res_raw.windows[0].to_f32().unwrap()
+        );
+
+        // DeltaCache over the codec client installs byte-identically
+        let mut cache = DeltaCache::new();
+        let a = cache.latest(&coded, 0).unwrap().unwrap();
+        let b = raw.latest(0).unwrap().unwrap();
+        assert_eq!(a.flat().data(), b.flat().data());
+
+        // windowed reassembly with codec: identical plane, fewer bytes
+        let w_raw = SocketTransport::connect_tcp(server.addr()).with_windowed_fetch(1);
+        let w_enc = SocketTransport::connect_tcp(server.addr())
+            .with_windowed_fetch(1)
+            .with_codec(Codec::Shuffle);
+        let via_raw = w_raw.latest(0).unwrap().unwrap();
+        let via_enc = w_enc.latest(0).unwrap().unwrap();
+        assert_eq!(via_raw.flat().data(), via_enc.flat().data());
+        let (_, _, rx_raw) = w_raw.stats();
+        let (_, _, rx_enc) = w_enc.stats();
+        assert!(rx_enc < rx_raw, "windowed codec moved {rx_enc} !< {rx_raw}");
+    }
+
+    /// A new client against a pre-capability server: the capability
+    /// request is rejected with the old "bad basis flag" error, and the
+    /// client transparently (and stickily) falls back to raw frames.
+    #[test]
+    fn capability_falls_back_against_legacy_server() {
+        use std::net::TcpListener;
+
+        let store = Arc::new(InProcess::new(4));
+        store.publish(ckpt(0, 1, &[1.0, 2.0, 3.0, 4.0, 5.0])).unwrap();
+        store.publish(ckpt(0, 2, &[1.0, 2.0, 9.0, 9.0, 9.0])).unwrap();
+        let v1 = InProcess::latest_at_most(&store, 0, 1).unwrap();
+        let basis = Basis {
+            step: 1,
+            digests: v1.window_digests().as_ref().clone(),
+        };
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let thread_store = store.clone();
+        let legacy = std::thread::spawn(move || {
+            // serve three connections: capability attempt, raw retry,
+            // and the later already-fallen-back request
+            for _ in 0..3 {
+                let (mut s, _) = listener.accept().unwrap();
+                let req = match read_frame(&mut s).unwrap() {
+                    Some(r) => r,
+                    None => continue,
+                };
+                // a legacy server knows only flag values 0 and 1
+                let reply = if req[0] == OP_DELTA && req[17] > 1 {
+                    let mut out = vec![STATUS_ERR];
+                    out.extend_from_slice(format!("bad basis flag {}", req[17]).as_bytes());
+                    out
+                } else {
+                    handle_request(&thread_store, &req)
+                };
+                write_frame(&mut s, &reply).ok();
+            }
+        });
+
+        let client = SocketTransport::connect_tcp(&addr).with_codec(Codec::Shuffle);
+        let spec =
+            crate::codistill::transport::FetchSpec::full(0, u64::MAX).with_basis(basis.clone());
+        let res = client.fetch(&spec).unwrap().unwrap();
+        assert_eq!(res.step, 2);
+        assert_eq!(res.unchanged, vec!["params.a".to_string()]);
+        assert_eq!(res.windows[0].to_f32().unwrap(), vec![9.0, 9.0, 9.0]);
+        assert_eq!(res.windows[0].codec(), Codec::Raw, "fallback still encoded?");
+        // the fallback is sticky: the next request goes raw immediately
+        // (the legacy thread serves exactly one more connection)
+        let res = client.fetch(&spec).unwrap().unwrap();
+        assert_eq!(res.windows[0].to_f32().unwrap(), vec![9.0, 9.0, 9.0]);
+        legacy.join().unwrap();
     }
 
     #[test]

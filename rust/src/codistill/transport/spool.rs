@@ -6,7 +6,11 @@
 //! ## Layout of a spool directory
 //!
 //! * `memberNNNN_stepNNNNNNNNNNNNNNNNNNNN.ckpt` — one `CKPT0003` file per
-//!   publication (older `CKPT0002`/`CKPT0001` files still read). Member
+//!   publication, or `CKPT0004` with per-window codec-encoded payloads
+//!   when the publisher opted in via [`SpoolDir::with_codec`] (older
+//!   `CKPT0002`/`CKPT0001` files still read; handles with different
+//!   codecs interoperate on one directory because reads are driven by
+//!   each file's own window table). Member
 //!   and step are zero-padded so lexicographic directory order equals
 //!   (member, step) order: manifest recovery after a crash is a plain
 //!   sorted scan. Files are written to a hidden `.tmp_*` name and
@@ -44,9 +48,10 @@
 
 use crate::codistill::store::{
     read_framed_tensor, read_name, read_shape, read_u64, Checkpoint, MAGIC_V1, MAGIC_V2, MAGIC_V3,
+    MAGIC_V4,
 };
 use crate::codistill::transport::{
-    fetch_from_checkpoint, partition_windows, ExchangeTransport, FetchResult, FetchSpec,
+    fetch_from_checkpoint, partition_windows, Codec, ExchangeTransport, FetchResult, FetchSpec,
     FetchedWindow, TransportKind, WindowSel,
 };
 use crate::runtime::flat::FlatLayout;
@@ -54,6 +59,7 @@ use crate::runtime::TensorMap;
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeMap, HashMap};
 use std::io::{Read, Seek, SeekFrom};
+use std::ops::Range;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
@@ -127,11 +133,23 @@ pub(crate) fn write_manifest(dir: &Path, fresh: Option<(usize, u64, &[u64])>) ->
     for (member, steps) in &scan {
         for step in steps {
             let file = spool_file_name(*member, *step);
+            let is_fresh = matches!(fresh, Some((fm, fs, _)) if fm == *member && fs == *step);
+            // A file pruned between the directory scan and this row (a
+            // concurrent publisher's gc) must not be resurrected into the
+            // manifest — a manifest-preferring reader would resolve a
+            // (member, step) whose payload is gone and only recover
+            // through the scan fallback. The prior-digest reuse below
+            // makes this trap easy to spring (no file open needed), so
+            // re-check existence per row; the freshly renamed file is
+            // exempt.
+            if !is_fresh && !dir.join(&file).exists() {
+                continue;
+            }
             text.push_str(&format!("{member} {step} {file}"));
-            // Best-effort: v1/v2 files (or a file pruned mid-scan) simply
-            // get no column and readers fall back to the file header.
+            // Best-effort: v1/v2 files simply get no column and readers
+            // fall back to the file header.
             let digests = match fresh {
-                Some((fm, fs, fd)) if fm == *member && fs == *step => Some(fd.to_vec()),
+                Some((_, _, fd)) if is_fresh => Some(fd.to_vec()),
                 _ => prior
                     .get(&(*member, *step))
                     .cloned()
@@ -218,6 +236,21 @@ pub(crate) fn read_manifest_digests(dir: &Path) -> Option<HashMap<(usize, u64), 
     Some(out)
 }
 
+/// Whether `gc` must rewrite the manifest: it is missing/unparsable
+/// (recovery), or it references a checkpoint file that no longer exists
+/// — the signature of a manifest write that lost a race with a
+/// concurrent prune. One manifest parse answers both questions.
+pub(crate) fn manifest_needs_rewrite(dir: &Path) -> bool {
+    match read_manifest(dir) {
+        None => true,
+        Some(m) => m.iter().any(|(member, steps)| {
+            steps
+                .iter()
+                .any(|&s| !dir.join(spool_file_name(*member, s)).exists())
+        }),
+    }
+}
+
 /// Delete every member's spool files past the last `history` steps (the
 /// spool-side history bound — the in-memory bound's durable twin).
 /// Returns how many files were removed so callers can skip manifest
@@ -237,15 +270,22 @@ pub(crate) fn prune_spool(dir: &Path, history: usize) -> Result<usize> {
     Ok(pruned)
 }
 
-/// `CKPT0002`/`CKPT0003` header: everything before the payload, plus
-/// where the payload starts — enough to address any window's bytes in
-/// the file, and (v3) the digest table a delta fetch compares against.
+/// `CKPT0002`/`CKPT0003`/`CKPT0004` header: everything before the
+/// payload, plus where the payload starts — enough to address any
+/// window's bytes in the file, and (v3/v4) the digest table a delta
+/// fetch compares against.
 struct PlaneHeader {
     member: usize,
     step: u64,
     layout: FlatLayout,
-    /// Per-window content digests in plane order (`CKPT0003` only).
+    /// Per-window content digests in plane order (`CKPT0003`/`CKPT0004`).
     digests: Option<Vec<u64>>,
+    /// `CKPT0004` only: per-window codec tag and encoded byte range
+    /// relative to `payload_start`, in plane order.
+    enc_windows: Option<Vec<(Codec, Range<u64>)>>,
+    /// Total payload bytes on disk (raw plane bytes for v2/v3, summed
+    /// encoded lengths for v4) — the residual section starts right after.
+    payload_len: u64,
     /// Absolute file offset of the first payload byte.
     payload_start: u64,
 }
@@ -264,8 +304,8 @@ impl<R: Read> Read for CountingReader<R> {
     }
 }
 
-/// Parse a v2/v3 header from the start of `r`. Returns `None` for a v1
-/// file (no contiguous payload to address — callers load it whole).
+/// Parse a v2/v3/v4 header from the start of `r`. Returns `None` for a
+/// v1 file (no contiguous payload to address — callers load it whole).
 fn parse_plane_header(r: impl Read) -> Result<Option<PlaneHeader>> {
     let mut f = CountingReader { inner: r, pos: 0 };
     let mut magic = [0u8; 8];
@@ -273,9 +313,10 @@ fn parse_plane_header(r: impl Read) -> Result<Option<PlaneHeader>> {
     if &magic == MAGIC_V1 {
         return Ok(None);
     }
-    let with_digests = match &magic {
-        m if m == MAGIC_V3 => true,
-        m if m == MAGIC_V2 => false,
+    let (with_digests, with_codecs) = match &magic {
+        m if m == MAGIC_V4 => (true, true),
+        m if m == MAGIC_V3 => (true, false),
+        m if m == MAGIC_V2 => (false, false),
         _ => bail!("bad checkpoint magic"),
     };
     let member = read_u64(&mut f)? as usize;
@@ -283,6 +324,7 @@ fn parse_plane_header(r: impl Read) -> Result<Option<PlaneHeader>> {
     let n_windows = read_u64(&mut f)? as usize;
     let mut parts = Vec::with_capacity(n_windows);
     let mut digests = Vec::with_capacity(if with_digests { n_windows } else { 0 });
+    let mut encodings = Vec::with_capacity(if with_codecs { n_windows } else { 0 });
     for _ in 0..n_windows {
         let name = read_name(&mut f)?;
         let shape = read_shape(&mut f)?;
@@ -290,21 +332,59 @@ fn parse_plane_header(r: impl Read) -> Result<Option<PlaneHeader>> {
         if with_digests {
             digests.push(read_u64(&mut f)?);
         }
+        if with_codecs {
+            let mut tag = [0u8; 1];
+            f.read_exact(&mut tag)?;
+            let codec = Codec::from_id(tag[0])?;
+            let enc_len = read_u64(&mut f)?;
+            encodings.push((codec, enc_len));
+        }
     }
     let layout = FlatLayout::from_named_shapes(parts);
-    let payload_elems = read_u64(&mut f)? as usize;
-    if payload_elems != layout.total_len() {
-        bail!(
-            "flat payload has {} elems, window table wants {}",
-            payload_elems,
-            layout.total_len()
-        );
-    }
+    let (enc_windows, payload_len) = if with_codecs {
+        // Encoded ranges by prefix sum; the payload-total field must
+        // agree with the table.
+        let mut ranges = Vec::with_capacity(encodings.len());
+        let mut off = 0u64;
+        for (i, (codec, enc_len)) in encodings.iter().enumerate() {
+            let cap = layout.entries()[i].len as u64 * 4;
+            let ok = match codec {
+                Codec::Raw => *enc_len == cap,
+                _ => *enc_len <= cap,
+            };
+            if !ok {
+                bail!(
+                    "window {:?}: {} encoding of {enc_len} bytes exceeds the {cap}-byte raw size",
+                    layout.entries()[i].name,
+                    codec.name()
+                );
+            }
+            ranges.push((*codec, off..off + enc_len));
+            off += enc_len;
+        }
+        let total = read_u64(&mut f)?;
+        if total != off {
+            bail!("encoded payload claims {total} bytes, window table wants {off}");
+        }
+        (Some(ranges), total)
+    } else {
+        let payload_elems = read_u64(&mut f)? as usize;
+        if payload_elems != layout.total_len() {
+            bail!(
+                "flat payload has {} elems, window table wants {}",
+                payload_elems,
+                layout.total_len()
+            );
+        }
+        (None, layout.total_bytes() as u64)
+    };
     Ok(Some(PlaneHeader {
         member,
         step,
         layout,
         digests: with_digests.then_some(digests),
+        enc_windows,
+        payload_len,
         payload_start: f.pos,
     }))
 }
@@ -313,6 +393,12 @@ fn parse_plane_header(r: impl Read) -> Result<Option<PlaneHeader>> {
 pub struct SpoolDir {
     dir: PathBuf,
     history: usize,
+    /// Codec this handle's publications are written under:
+    /// [`Codec::Raw`] = `CKPT0003` files, anything else = `CKPT0004`
+    /// files with per-window encoded payloads. Read paths are
+    /// codec-agnostic (the file's own table drives decoding), so handles
+    /// with different codecs interoperate on one directory.
+    codec: Codec,
     /// Loaded checkpoints keyed by (member, step): repeated `latest`
     /// reads on the reload cadence hit memory, not the filesystem.
     cache: Mutex<HashMap<(usize, u64), Arc<Checkpoint>>>,
@@ -327,8 +413,17 @@ impl SpoolDir {
         Ok(SpoolDir {
             dir: dir.to_path_buf(),
             history: history.max(1),
+            codec: Codec::Raw,
             cache: Mutex::new(HashMap::new()),
         })
+    }
+
+    /// Publish through `codec`: checkpoints land as `CKPT0004` files
+    /// whose windows are individually encoded (raw-tagged when the codec
+    /// does not shrink them), so delta readers `pread` fewer bytes.
+    pub fn with_codec(mut self, codec: Codec) -> Self {
+        self.codec = codec;
+        self
     }
 
     pub fn dir(&self) -> &Path {
@@ -468,21 +563,40 @@ impl SpoolDir {
         let mut windows = Vec::with_capacity(fetch_idx.len());
         for idx in fetch_idx {
             let entry = &layout.entries()[idx];
-            file.seek(SeekFrom::Start(
-                header.payload_start + entry.byte_range().start as u64,
-            ))?;
-            let mut data = vec![0f32; entry.len];
-            crate::codistill::store::read_f32s(&mut file, &mut data)?;
-            windows.push(FetchedWindow {
-                name: entry.name.clone(),
-                shape: entry.shape.clone(),
-                data,
-            });
+            match &header.enc_windows {
+                // CKPT0004: pread exactly the window's encoded bytes and
+                // hand them over still encoded — the install side
+                // (DeltaCache / into_checkpoint) decodes and
+                // digest-verifies, so a reader moves the compressed size
+                // off disk and over any downstream accounting.
+                Some(enc) => {
+                    let (codec, range) = &enc[idx];
+                    file.seek(SeekFrom::Start(header.payload_start + range.start))?;
+                    let mut bytes = vec![0u8; (range.end - range.start) as usize];
+                    file.read_exact(&mut bytes)?;
+                    windows.push(FetchedWindow::encoded(
+                        entry.name.clone(),
+                        entry.shape.clone(),
+                        *codec,
+                        bytes,
+                    ));
+                }
+                None => {
+                    file.seek(SeekFrom::Start(
+                        header.payload_start + entry.byte_range().start as u64,
+                    ))?;
+                    let mut data = vec![0f32; entry.len];
+                    crate::codistill::store::read_f32s(&mut file, &mut data)?;
+                    windows.push(FetchedWindow::raw(
+                        entry.name.clone(),
+                        entry.shape.clone(),
+                        data,
+                    ));
+                }
+            }
         }
         // The residual section sits right after the contiguous payload.
-        file.seek(SeekFrom::Start(
-            header.payload_start + layout.total_bytes() as u64,
-        ))?;
+        file.seek(SeekFrom::Start(header.payload_start + header.payload_len))?;
         let mut tail = std::io::BufReader::new(file);
         let n_residual = read_u64(&mut tail)? as usize;
         let mut residual = TensorMap::new();
@@ -527,7 +641,10 @@ impl ExchangeTransport for SpoolDir {
         let member = ckpt.member;
         let step = ckpt.step;
         let tmp = self.dir.join(spool_temp_name(member, step));
-        ckpt.save(&tmp)?;
+        match self.codec {
+            Codec::Raw => ckpt.save(&tmp)?,
+            codec => ckpt.save_v4(&tmp, codec)?,
+        }
         std::fs::rename(&tmp, self.dir.join(spool_file_name(member, step)))?;
         prune_spool(&self.dir, self.history)?;
         // save() already computed (and cached) the digest table; hand it
@@ -579,13 +696,17 @@ impl ExchangeTransport for SpoolDir {
 
     fn gc(&self) -> Result<()> {
         // Publish already prunes + rewrites the manifest; this pass only
-        // touches the manifest when something actually changed (or the
-        // manifest is missing/unreadable and needs recovery).
+        // touches the manifest when something actually changed, when it
+        // is missing/unreadable, or when it still lists files a
+        // concurrent pruner removed (a manifest write that lost the race
+        // — gc actively drops the pruned rows instead of leaving every
+        // reader on the directory-scan fallback).
         let pruned = prune_spool(&self.dir, self.history)?;
-        if pruned > 0 || read_manifest(&self.dir).is_none() {
+        let stale = manifest_needs_rewrite(&self.dir);
+        if pruned > 0 || stale {
             write_manifest(&self.dir, None)?;
         }
-        if pruned > 0 {
+        if pruned > 0 || stale {
             let published = self.published()?;
             self.cache.lock().unwrap().retain(|&(m, s), _| {
                 published
@@ -701,8 +822,8 @@ mod tests {
         assert_eq!(fetch.member, 0);
         assert_eq!(fetch.step, 3);
         assert_eq!(fetch.windows[0].name, "params.b");
-        assert_eq!(fetch.windows[0].data, vec![3.5, 4.5, 5.5]);
-        assert_eq!(fetch.windows[1].data, vec![1.5, -2.5]);
+        assert_eq!(fetch.windows[0].to_f32().unwrap(), vec![3.5, 4.5, 5.5]);
+        assert_eq!(fetch.windows[1].to_f32().unwrap(), vec![1.5, -2.5]);
         assert_eq!(fetch.payload_bytes(), 5 * 4);
         // staleness bound applies to windowed fetches too
         assert!(spool.fetch_windows(0, 2, &[]).unwrap().is_none());
@@ -737,9 +858,112 @@ mod tests {
         assert_eq!(res.unchanged, vec!["params.b".to_string()]);
         assert_eq!(res.windows.len(), 1);
         assert_eq!(res.windows[0].name, "params.a");
-        assert_eq!(res.windows[0].data, vec![9.0, 9.0]);
+        assert_eq!(res.windows[0].to_f32().unwrap(), vec![9.0, 9.0]);
         assert_eq!(res.payload_bytes(), 2 * 4);
         assert_eq!(res.digests.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn codec_spool_preads_encoded_windows() {
+        use crate::codistill::transport::{Basis, DeltaCache};
+        let dir = tdir("spooldir_codec");
+        let spool = SpoolDir::open(&dir, 4).unwrap().with_codec(Codec::Shuffle);
+        // constant-valued windows: the shuffle+RLE codec pays off
+        spool.publish(ckpt(0, 1, &[1.0, 1.0, 2.0, 2.0, 2.0])).unwrap();
+        // the file on disk is CKPT0004
+        let raw = std::fs::read(dir.join(spool_file_name(0, 1))).unwrap();
+        assert_eq!(&raw[..8], MAGIC_V4);
+
+        // full load (fresh handle) round-trips through the v4 reader
+        let reader = SpoolDir::open(&dir, 4).unwrap();
+        let v1 = reader.latest(0).unwrap().unwrap();
+        assert_eq!(v1.flat().view("params.a").unwrap(), &[1.0, 1.0]);
+
+        // delta pread returns STILL-ENCODED windows that move fewer
+        // bytes; DeltaCache decodes + verifies + installs byte-identical
+        let basis = Basis {
+            step: 1,
+            digests: v1.window_digests().as_ref().clone(),
+        };
+        spool.publish(ckpt(0, 2, &[3.0, 3.0, 2.0, 2.0, 2.0])).unwrap();
+        let fresh = SpoolDir::open(&dir, 4).unwrap();
+        let res = fresh
+            .fetch(&FetchSpec::full(0, u64::MAX).with_basis(basis))
+            .unwrap()
+            .unwrap();
+        assert_eq!(res.unchanged, vec!["params.b".to_string()]);
+        assert_eq!(res.windows.len(), 1);
+        assert_eq!(res.windows[0].codec(), Codec::Shuffle);
+        assert!(res.payload_bytes() < 2 * 4, "{}", res.payload_bytes());
+        assert_eq!(res.windows[0].to_f32().unwrap(), vec![3.0, 3.0]);
+
+        let mut cache = DeltaCache::new();
+        let reader2 = SpoolDir::open(&dir, 4).unwrap();
+        let got = cache.latest(&reader2, 0).unwrap().unwrap();
+        let direct = reader2.latest(0).unwrap().unwrap();
+        assert_eq!(got.flat().data(), direct.flat().data());
+
+        // a corrupt encoded payload fails the install, never poisons.
+        // Install the step-2 basis FIRST, then publish a step 3 where
+        // both windows change and flip a byte in its encoded payload: the
+        // delta pread must move the corrupted bytes and the install-side
+        // decode + digest verify must reject them.
+        let mut cache = DeltaCache::new();
+        cache.latest(&reader2, 0).unwrap().unwrap(); // installs step 2
+        spool.publish(ckpt(0, 3, &[4.0, 4.0, 5.0, 5.0, 5.0])).unwrap();
+        let path = dir.join(spool_file_name(0, 3));
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 8 - 1] ^= 0x20; // last payload byte, before the residual count
+        std::fs::write(&path, &bytes).unwrap();
+        let basis2 = Basis {
+            step: 2,
+            digests: direct.window_digests().as_ref().clone(),
+        };
+        let res = SpoolDir::open(&dir, 4)
+            .unwrap()
+            .fetch(&FetchSpec::full(0, u64::MAX).with_basis(basis2))
+            .unwrap()
+            .unwrap();
+        assert_eq!(res.windows.len(), 2, "corruption fixture drifted");
+        assert!(
+            cache.latest(&SpoolDir::open(&dir, 4).unwrap(), 0).is_err(),
+            "corrupt encoded payload installed silently"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_drops_rows_for_vanished_files_from_manifest() {
+        let dir = tdir("spooldir_stale_manifest");
+        let spool = SpoolDir::open(&dir, 8).unwrap();
+        spool.publish(ckpt(0, 1, &[1.0; 5])).unwrap();
+        spool.publish(ckpt(0, 2, &[2.0; 5])).unwrap();
+        // Simulate a concurrent pruner whose manifest rewrite lost the
+        // race: the file vanishes while the manifest still lists it.
+        std::fs::remove_file(dir.join(spool_file_name(0, 1))).unwrap();
+        let text = std::fs::read_to_string(dir.join(MANIFEST)).unwrap();
+        assert!(text.contains(&spool_file_name(0, 1)), "fixture broken");
+
+        // A manifest-preferring reader resolves the gone file and must
+        // recover through the scan fallback — documented behavior.
+        let reader = SpoolDir::open(&dir, 8).unwrap();
+        assert!(reader.latest_at_most(0, 1).unwrap().is_none());
+        assert_eq!(reader.latest(0).unwrap().unwrap().step, 2);
+
+        // gc (nothing left to prune) must still drop the stale row so
+        // later readers stop tripping over it.
+        spool.gc().unwrap();
+        let text = std::fs::read_to_string(dir.join(MANIFEST)).unwrap();
+        assert!(
+            !text.contains(&spool_file_name(0, 1)),
+            "gc kept a manifest row for a pruned file"
+        );
+        assert!(text.contains(&spool_file_name(0, 2)));
+        // and the fetch path is clean again on a fresh reader
+        let fresh = SpoolDir::open(&dir, 8).unwrap();
+        assert_eq!(fresh.latest(0).unwrap().unwrap().step, 2);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -2,7 +2,7 @@
 //! commands, result-table printing.
 
 use crate::codistill::{
-    Coordinator, CoordinatorConfig, DistillSchedule, ExchangeTransport, FaultPlan, Faulty,
+    Codec, Coordinator, CoordinatorConfig, DistillSchedule, ExchangeTransport, FaultPlan, Faulty,
     HostedMember, InProcess, LrSchedule, Member, Orchestrator, OrchestratorConfig, RunLog,
     SocketServer, SocketTransport, SpoolDir, Topology, TransportKind,
 };
@@ -145,11 +145,12 @@ pub fn orch_config(d: &LmExpDefaults, distill: DistillSchedule, cluster: Option<
 /// One-line rendering of a run's delta-exchange accounting.
 pub fn delta_stats_line(tag: &str, stats: &crate::codistill::DeltaStats) {
     println!(
-        "[{tag}] delta exchange: full={} delta={} moved={} unchanged={} payload_bytes={}",
+        "[{tag}] delta exchange: full={} delta={} moved={} unchanged={} encoded={} payload_bytes={}",
         stats.full_fetches,
         stats.delta_fetches,
         stats.windows_moved,
         stats.windows_unchanged,
+        stats.windows_encoded,
         stats.payload_bytes
     );
 }
@@ -161,6 +162,9 @@ pub struct TransportSetup {
     /// Keep-alive handle: dropping it shuts the server down.
     pub server: Option<SocketServer>,
     pub kind: TransportKind,
+    /// Window codec in effect (`--compress` / `codec=`); [`Codec::Raw`]
+    /// when compression is off.
+    pub codec: Codec,
 }
 
 /// Build the checkpoint-exchange transport selected by `--transport`
@@ -173,13 +177,26 @@ pub struct TransportSetup {
 ///   when unset, serve the exchange in-process on a loopback port.
 ///   `socket_windows=N` (default 0 = full-plane) shards teacher reloads
 ///   to N windows per fetch.
+///
+/// `--compress` (`compress=true`; `codec=raw|shuffle`, default
+/// `shuffle`) turns on compressed window payloads: spool publications
+/// become `CKPT0004` files with per-window encoded ranges, socket reads
+/// negotiate encoded `DELTA`/`FETCH` frames via the capability byte.
+/// In-process exchange moves no bytes over a medium, so the flag is a
+/// no-op there.
 pub fn make_transport(s: &Settings, history: usize) -> Result<TransportSetup> {
     let kind = TransportKind::parse(s.str_or("transport", "inproc"))?;
+    let codec = if s.bool_or("compress", false)? {
+        Codec::parse(s.str_or("codec", "shuffle"))?
+    } else {
+        Codec::Raw
+    };
     match kind {
         TransportKind::InProcess => Ok(TransportSetup {
             transport: Arc::new(InProcess::new(history)),
             server: None,
             kind,
+            codec,
         }),
         TransportKind::SpoolDir => {
             let default_dir = results_dir(s).join("spool");
@@ -188,9 +205,10 @@ pub fn make_transport(s: &Settings, history: usize) -> Result<TransportSetup> {
                 None => default_dir,
             };
             Ok(TransportSetup {
-                transport: Arc::new(SpoolDir::open(&dir, history)?),
+                transport: Arc::new(SpoolDir::open(&dir, history)?.with_codec(codec)),
                 server: None,
                 kind,
+                codec,
             })
         }
         TransportKind::Socket => {
@@ -207,10 +225,14 @@ pub fn make_transport(s: &Settings, history: usize) -> Result<TransportSetup> {
             if windows > 0 {
                 client = client.with_windowed_fetch(windows);
             }
+            if codec != Codec::Raw {
+                client = client.with_codec(codec);
+            }
             Ok(TransportSetup {
                 transport: Arc::new(client),
                 server,
                 kind,
+                codec,
             })
         }
     }
@@ -274,7 +296,15 @@ pub fn cmd_codistill(s: &Settings) -> Result<()> {
     cfg.topology = topology;
     let setup = make_transport(s, s.usize_or("history", 8)?)?;
     if d.verbose {
-        eprintln!("[codistill] exchange transport: {}", setup.kind.name());
+        eprintln!(
+            "[codistill] exchange transport: {}{}",
+            setup.kind.name(),
+            if setup.codec != Codec::Raw {
+                format!(" (+{})", setup.codec.name())
+            } else {
+                String::new()
+            }
+        );
     }
     let orch = Orchestrator::with_transport(cfg, setup.transport.clone());
     let log = orch.run(&mut members)?;
@@ -396,9 +426,14 @@ pub fn cmd_coordinate(s: &Settings) -> Result<()> {
         };
     if d.verbose {
         eprintln!(
-            "[coordinate] transport: {}{}{}",
+            "[coordinate] transport: {}{}{}{}",
             setup.kind.name(),
             if d.delta { " (+delta)" } else { "" },
+            if setup.codec != Codec::Raw {
+                " (+compress)"
+            } else {
+                ""
+            },
             if faulty.is_some() { " (+faults)" } else { "" }
         );
     }

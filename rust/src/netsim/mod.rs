@@ -125,6 +125,29 @@ impl ClusterModel {
         self.sharded_exchange_time(teachers, (f * self.model_bytes as f64) as u64)
     }
 
+    /// Compressed incremental exchange: the delta exchange with every
+    /// *read* byte lossless-encoded at `ratio` (encoded bytes / raw
+    /// bytes): each of the `teachers` delta reads moves only the encoded
+    /// form of its changed fraction. The publish write is priced raw —
+    /// the socket transport's `PUBLISH` stream is uncompressed, and
+    /// while a `CKPT0004` spool publisher does write encoded windows,
+    /// pricing the write at full cost keeps the model an upper bound on
+    /// every backend instead of overstating socket savings. The
+    /// transport's per-window never-larger rule bounds `ratio` at 1.0
+    /// (clamped here), where this degenerates to
+    /// [`ClusterModel::delta_exchange_time`]; a converged run's
+    /// near-identical planes push the read term toward the RLE floor.
+    pub fn compressed_exchange_time(
+        &self,
+        teachers: usize,
+        changed_fraction: f64,
+        ratio: f64,
+    ) -> f64 {
+        let r = ratio.clamp(0.0, 1.0);
+        let f = changed_fraction.clamp(0.0, 1.0);
+        self.sharded_exchange_time(teachers, (f * r * self.model_bytes as f64) as u64)
+    }
+
     /// Exchange wall time when `dead` of a reader's `teachers` peers are
     /// unreachable (§2.2: the coordinator's liveness table drops them):
     /// the write and the live reads move planes at full bandwidth, while
@@ -339,6 +362,37 @@ mod tests {
         // out-of-range fractions clamp instead of extrapolating
         assert_eq!(m.delta_exchange_time(3, 2.0), m.delta_exchange_time(3, 1.0));
         assert_eq!(m.delta_exchange_time(3, -1.0), m.delta_exchange_time(3, 0.0));
+    }
+
+    #[test]
+    fn compressed_exchange_prices_under_delta() {
+        let m = ClusterModel::gpu_cluster(128, 40_000_000);
+        for teachers in [1usize, 3, 8] {
+            for frac in [1.0f64, 0.25, 0.05] {
+                let delta = m.delta_exchange_time(teachers, frac);
+                // ratio 1.0: the codec never engaged — equals the delta
+                // exchange exactly
+                assert_eq!(m.compressed_exchange_time(teachers, frac, 1.0), delta);
+                // real ratios are strictly cheaper and monotone
+                let c50 = m.compressed_exchange_time(teachers, frac, 0.5);
+                let c10 = m.compressed_exchange_time(teachers, frac, 0.1);
+                assert!(c10 < c50 && c50 < delta, "{c10} < {c50} < {delta}");
+            }
+        }
+        // the full stack of levers composes: full > delta > delta+codec
+        let full = m.full_exchange_time(3);
+        let delta = m.delta_exchange_time(3, 0.25);
+        let codec = m.compressed_exchange_time(3, 0.25, 0.3);
+        assert!(codec < delta && delta < full, "{codec} < {delta} < {full}");
+        // out-of-range ratios clamp instead of extrapolating
+        assert_eq!(
+            m.compressed_exchange_time(3, 0.25, 2.0),
+            m.compressed_exchange_time(3, 0.25, 1.0)
+        );
+        assert_eq!(
+            m.compressed_exchange_time(3, 0.25, -1.0),
+            m.compressed_exchange_time(3, 0.25, 0.0)
+        );
     }
 
     #[test]

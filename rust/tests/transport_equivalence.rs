@@ -14,9 +14,9 @@
 use codistill::codistill::transport::spool::spool_file_name;
 use codistill::codistill::transport::DeltaCache;
 use codistill::codistill::{
-    Checkpoint, DistillSchedule, EvalStats, ExchangeTransport, FaultPlan, Faulty, InProcess,
-    LrSchedule, Member, Orchestrator, OrchestratorConfig, RunLog, SocketServer, SocketTransport,
-    SpoolDir, StepStats, Topology,
+    Checkpoint, Codec, DistillSchedule, EvalStats, ExchangeTransport, FaultPlan, Faulty,
+    InProcess, LrSchedule, Member, Orchestrator, OrchestratorConfig, RunLog, SocketServer,
+    SocketTransport, SpoolDir, StepStats, Topology,
 };
 use codistill::runtime::flat::{content_digest, FlatBuffer, FlatLayout};
 use codistill::runtime::{Tensor, TensorMap};
@@ -241,7 +241,10 @@ fn spool_two_endpoints_byte_identical_to_inproc() {
         .fetch_windows(1, u64::MAX, &["params.w".to_string()])
         .unwrap()
         .unwrap();
-    assert_eq!(fetch.windows[0].data, via_mem.flat().view("params.w").unwrap());
+    assert_eq!(
+        fetch.windows[0].to_f32().unwrap(),
+        via_mem.flat().view("params.w").unwrap()
+    );
 
     // and the on-disk artifact is the canonical zero-padded CKPT0002 file
     assert!(dir.join(spool_file_name(1, 0)).exists());
@@ -329,7 +332,10 @@ fn spool_error_paths_surface_err() {
                 5,
                 "spool {name}"
             );
-            assert_eq!(windows.unwrap().unwrap().windows[0].data, vec![1.5; W]);
+            assert_eq!(
+                windows.unwrap().unwrap().windows[0].to_f32().unwrap(),
+                vec![1.5; W]
+            );
         }
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -574,7 +580,7 @@ fn equal_step_republish_refreshes_manifest_digests() {
         .unwrap();
     assert_eq!(res.windows.len(), 1, "republished window not re-fetched");
     assert_eq!(res.windows[0].name, "params.hot");
-    assert_eq!(res.windows[0].data, vec![9.0; W]);
+    assert_eq!(res.windows[0].to_f32().unwrap(), vec![9.0; W]);
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -695,6 +701,239 @@ fn socket_windowed_fetch_byte_identical_to_inproc() {
         .fetch_windows(2, u64::MAX, &["params.w".to_string()])
         .unwrap()
         .unwrap();
-    assert_eq!(fetch.windows[0].data, via_mem.flat().view("params.w").unwrap());
+    assert_eq!(
+        fetch.windows[0].to_f32().unwrap(),
+        via_mem.flat().view("params.w").unwrap()
+    );
     assert_eq!(fetch.payload_bytes(), (W * 4) as u64);
+}
+
+// ------------------------------------------------------ codec equivalence
+//
+// Compressed window payloads must be invisible to the run: a codec-on
+// reader installs planes byte-identical to a codec-off reader on every
+// backend (including through fault injection), while moving no MORE
+// payload bytes — and strictly fewer whenever the encoder pays off.
+
+#[test]
+fn codec_on_installs_byte_identical_to_codec_off() {
+    // hot windows here are constant-valued, so the shuffle+RLE codec
+    // always engages; cold windows are digest-skipped by the delta
+    let dir_raw = tdir("codec_off_spool");
+    let dir_enc = tdir("codec_on_spool");
+    let server = SocketServer::bind_tcp("127.0.0.1:0", 8).unwrap();
+
+    // (tag, codec-off pair, codec-on pair). Each pair is (transport,
+    // cache): spool encodes at the publisher (CKPT0004 files), socket at
+    // the capability-negotiating client, inproc/faulty at the
+    // codec-advertising cache (spec-level negotiation).
+    struct Case {
+        tag: &'static str,
+        raw_t: Arc<dyn ExchangeTransport>,
+        enc_t: Arc<dyn ExchangeTransport>,
+        enc_cache_codec: Option<Codec>,
+        shared_store: bool,
+    }
+    let cases = vec![
+        Case {
+            tag: "inproc",
+            raw_t: Arc::new(InProcess::new(8)),
+            enc_t: Arc::new(InProcess::new(8)),
+            enc_cache_codec: Some(Codec::Shuffle),
+            shared_store: false,
+        },
+        Case {
+            tag: "spool",
+            raw_t: Arc::new(SpoolDir::open(&dir_raw, 8).unwrap()),
+            enc_t: Arc::new(SpoolDir::open(&dir_enc, 8).unwrap().with_codec(Codec::Shuffle)),
+            enc_cache_codec: None,
+            shared_store: false,
+        },
+        Case {
+            tag: "socket",
+            raw_t: Arc::new(SocketTransport::connect_tcp(server.addr())),
+            enc_t: Arc::new(
+                SocketTransport::connect_tcp(server.addr()).with_codec(Codec::Shuffle),
+            ),
+            enc_cache_codec: None,
+            shared_store: true,
+        },
+        Case {
+            tag: "faulty",
+            raw_t: Arc::new(Faulty::wrap(
+                Arc::new(InProcess::new(8)),
+                FaultPlan::new(31).with_stale_reads(0.5),
+            )),
+            enc_t: Arc::new(Faulty::wrap(
+                Arc::new(InProcess::new(8)),
+                FaultPlan::new(31).with_stale_reads(0.5),
+            )),
+            enc_cache_codec: Some(Codec::Shuffle),
+            shared_store: false,
+        },
+    ];
+    for case in &cases {
+        let mut raw_cache = DeltaCache::new();
+        let mut enc_cache = match case.enc_cache_codec {
+            Some(c) => DeltaCache::new().with_codec(c),
+            None => DeltaCache::new(),
+        };
+        for (i, step) in [1u64, 5, 9, 13].into_iter().enumerate() {
+            let ck = hot_cold_ckpt(0, step, i as f32);
+            case.raw_t.publish(ck.clone()).unwrap();
+            if !case.shared_store {
+                case.enc_t.publish(ck).unwrap();
+            }
+            let a = raw_cache.latest(case.raw_t.as_ref(), 0).unwrap().unwrap();
+            let b = enc_cache.latest(case.enc_t.as_ref(), 0).unwrap().unwrap();
+            assert_eq!(a.step, b.step, "{}", case.tag);
+            assert_eq!(
+                a.flat().data(),
+                b.flat().data(),
+                "{}: codec-on install diverged from codec-off",
+                case.tag
+            );
+            assert!(a.flat().layout().same_plane(b.flat().layout()), "{}", case.tag);
+        }
+        let (rs, es) = (raw_cache.stats(), enc_cache.stats());
+        assert_eq!(rs.windows_moved, es.windows_moved, "{}", case.tag);
+        assert_eq!(rs.windows_unchanged, es.windows_unchanged, "{}", case.tag);
+        assert_eq!(rs.windows_encoded, 0, "{}", case.tag);
+        assert!(
+            es.windows_encoded > 0,
+            "{}: codec never engaged: {es:?}",
+            case.tag
+        );
+        assert!(
+            es.payload_bytes < rs.payload_bytes,
+            "{}: encoded deltas moved {} bytes !< raw {}",
+            case.tag,
+            es.payload_bytes,
+            rs.payload_bytes
+        );
+    }
+    drop(cases);
+    std::fs::remove_dir_all(&dir_raw).ok();
+    std::fs::remove_dir_all(&dir_enc).ok();
+}
+
+#[test]
+fn codec_orchestrated_runs_identical_to_reference() {
+    let reference = run_over(Arc::new(InProcess::new(8)));
+
+    // spool with a codec'd publisher: CKPT0004 files on disk, identical run
+    let dir = tdir("codec_run_spool");
+    let spool = run_over_cfg(
+        cfg_delta(),
+        Arc::new(SpoolDir::open(&dir, 8).unwrap().with_codec(Codec::Shuffle)),
+    );
+    assert_logs_identical("codec-spool", &reference, &spool);
+    let stats = spool.delta.expect("delta accounting missing");
+    assert!(stats.windows_unchanged > 0);
+    // the medium really was compressed: a spool file carries the v4 magic
+    let v4 = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .find(|e| e.file_name().to_string_lossy().ends_with(".ckpt"))
+        .expect("no spool files written");
+    assert_eq!(&std::fs::read(v4.path()).unwrap()[..8], b"CKPT0004");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // socket with a codec-negotiating client
+    let server = SocketServer::bind_tcp("127.0.0.1:0", 8).unwrap();
+    let socket = run_over_cfg(
+        cfg_delta(),
+        Arc::new(SocketTransport::connect_tcp(server.addr()).with_codec(Codec::Shuffle)),
+    );
+    assert_logs_identical("codec-socket", &reference, &socket);
+    drop(server);
+
+    // the same seeded fault plan faults a codec run identically to a raw
+    // one: one read-gate per reload either way (stale-only — the lockstep
+    // orchestrator treats a dropped read as fatal)
+    let plan = |seed| FaultPlan::new(seed).with_stale_reads(0.5);
+    let dir_a = tdir("codec_faulty_raw");
+    let dir_b = tdir("codec_faulty_enc");
+    let faulted_raw = run_over_cfg(
+        cfg_delta(),
+        Arc::new(Faulty::wrap(
+            Arc::new(SpoolDir::open(&dir_a, 8).unwrap()),
+            plan(37),
+        )),
+    );
+    let faulted_codec = run_over_cfg(
+        cfg_delta(),
+        Arc::new(Faulty::wrap(
+            Arc::new(SpoolDir::open(&dir_b, 8).unwrap().with_codec(Codec::Shuffle)),
+            plan(37),
+        )),
+    );
+    assert_logs_identical("codec-faulty", &faulted_raw, &faulted_codec);
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+}
+
+// ------------------------------------------------------ gc x delta
+//
+// Pruning a reader's basis step must never strand the reader: digests
+// are content-addressed, so a stale basis still deltas cleanly against
+// whatever file survived — and a reshaped survivor triggers the
+// DeltaCache full-refetch fallback.
+
+#[test]
+fn stale_basis_after_spool_gc_falls_back_cleanly() {
+    let dir = tdir("gc_delta");
+    let spool = SpoolDir::open(&dir, 1).unwrap(); // history bound of 1
+    spool.publish(hot_cold_ckpt(0, 1, 1.0)).unwrap();
+    // reader in a second handle (its own read cache, like a second process)
+    let reader = SpoolDir::open(&dir, 1).unwrap();
+    let mut cache = DeltaCache::new();
+    cache.latest(&reader, 0).unwrap().unwrap();
+    assert_eq!(cache.installed_step(0), Some(1));
+
+    // two more publications; history=1 prunes the basis step's file
+    spool.publish(hot_cold_ckpt(0, 2, 2.0)).unwrap();
+    spool.publish(hot_cold_ckpt(0, 3, 3.0)).unwrap();
+    spool.gc().unwrap();
+    assert!(
+        !dir.join(spool_file_name(0, 1)).exists(),
+        "basis step survived gc"
+    );
+
+    // the stale basis must not error: the content-addressed digest
+    // comparison serves a delta against the surviving step-3 file
+    let got = cache.latest(&reader, 0).unwrap().unwrap();
+    assert_eq!(got.step, 3);
+    let direct = SpoolDir::open(&dir, 1).unwrap().latest(0).unwrap().unwrap();
+    assert_eq!(got.flat().data(), direct.flat().data());
+    let stats = cache.stats();
+    assert_eq!(stats.delta_fetches, 1, "pruned basis forced a full refetch");
+    assert!(
+        stats.windows_unchanged >= 1,
+        "cold window moved despite matching digests: {stats:?}"
+    );
+
+    // a RESHAPED survivor (extra window) invalidates the basis arity and
+    // must route through the full(-refetch) path, still byte-identical
+    let mut params = codistill::runtime::TensorMap::new();
+    params.insert(
+        "params.hot",
+        codistill::runtime::Tensor::f32(&[W], vec![9.0; W]).unwrap(),
+    );
+    params.insert(
+        "params.cold",
+        codistill::runtime::Tensor::f32(&[W], vec![7.5; W]).unwrap(),
+    );
+    params.insert(
+        "params.new",
+        codistill::runtime::Tensor::f32(&[2], vec![1.0, 2.0]).unwrap(),
+    );
+    spool.publish(Checkpoint::new(0, 4, params)).unwrap();
+    spool.gc().unwrap();
+    let got = cache.latest(&reader, 0).unwrap().unwrap();
+    assert_eq!(got.step, 4);
+    let direct = SpoolDir::open(&dir, 1).unwrap().latest(0).unwrap().unwrap();
+    assert_eq!(got.flat().data(), direct.flat().data());
+    assert_eq!(cache.stats().full_fetches, 2, "reshape did not full-refetch");
+    std::fs::remove_dir_all(&dir).ok();
 }
