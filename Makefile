@@ -1,7 +1,7 @@
 # Build/test/bench entry points. The Rust workspace lives in rust/ and
 # builds fully offline (vendored deps; see rust/Cargo.toml).
 
-.PHONY: build test check test-faults test-procs test-wire bench artifacts python-tests clean
+.PHONY: build test check test-faults test-scenarios test-procs test-wire bench artifacts python-tests clean
 
 build:
 	cd rust && cargo build --release
@@ -27,6 +27,16 @@ check:
 # seeds => byte-identical fault and staleness logs.
 test-faults:
 	cd rust && CODISTILL_FAULT_SEEDS="11 23 47" cargo test --test coordinator_faults -q
+
+# Churn-scenario matrix: the declarative scenario engine
+# (codistill::scenario — spot-preemption waves, zone outages, flash
+# crowds, flaky exchanges) driving an O(100)-member coordinator fleet
+# over a Retry-wrapped Faulty socket transport, plus the wire-level
+# retry tests (torn mid-DELTA replies recover against a healthy
+# server). Same scenario file + seed => byte-identical staleness,
+# fault, and retry logs.
+test-scenarios:
+	cd rust && CODISTILL_FAULT_SEEDS="11 23 47" cargo test -q --test scenario_churn --test retry_transport
 
 # OS-process-level coordinator harness: N real `codistill coordinate`
 # child processes (deterministic mock members, --delta incremental

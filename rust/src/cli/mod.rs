@@ -16,7 +16,11 @@
 //!               (liveness_grace=N), and deterministic fault injection
 //!               (fault_seed=N, fault_delay_p/fault_drop_p/
 //!               fault_error_p/fault_stale_p=P,
-//!               fault_blackout=member:from:until[,...])
+//!               fault_blackout=member:from:until[,...]), declarative
+//!               churn scenarios (--scenario FILE, see
+//!               `codistill::scenario`), and a retrying transport
+//!               (--retry, retry_attempts=N, retry_base_ms=MS,
+//!               retry_seed=N, socket_timeout_ms=MS)
 //!   figures     run every experiment (fig1a/1b, fig2a/2b, fig3, fig4,
 //!               table1, sec341) and write results/*.csv
 //!   fig1|fig2|fig3|fig4|table1|sec341   run one experiment
@@ -100,6 +104,18 @@ pub fn parse_args(args: &[String]) -> Result<Cli> {
                 settings.apply(&format!("transport={v}"))?;
                 i += 2;
             }
+            "--scenario" => {
+                let path = args.get(i + 1).context("--scenario needs a file path")?;
+                // validate eagerly so a malformed scenario fails at parse
+                // time, not after artifacts load
+                crate::codistill::Scenario::from_file(std::path::Path::new(path))?;
+                settings.apply(&format!("scenario={path}"))?;
+                i += 2;
+            }
+            "--retry" => {
+                settings.apply("retry=true")?;
+                i += 1;
+            }
             other if other.starts_with("--") => bail!("unknown flag {other}\n{}", usage()),
             other => {
                 // bare key=value
@@ -119,8 +135,8 @@ fn settings_dump(_s: &Settings) -> Vec<String> {
 
 pub fn usage() -> String {
     "usage: codistill <train|codistill|coordinate|figures|fig1|fig2|fig3|fig4|table1|sec341|inspect> \
-     [--transport inproc|spool|socket] [--delta] [--compress] [--set key=value]... \
-     [--config FILE] [--verbose]"
+     [--transport inproc|spool|socket] [--delta] [--compress] [--scenario FILE] [--retry] \
+     [--set key=value]... [--config FILE] [--verbose]"
         .to_string()
 }
 
@@ -208,6 +224,33 @@ mod tests {
             .settings
             .bool_or("delta", false)
             .unwrap());
+    }
+
+    #[test]
+    fn scenario_flag_validates_the_file_eagerly() {
+        let dir = std::env::temp_dir().join(format!("cli_scenario_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("good.scn");
+        std::fs::write(&good, "seed = 3\n[flash_crowd]\nat = 10\njoiners = 2\n").unwrap();
+        let cli =
+            parse_args(&sv(&["coordinate", "--scenario", good.to_str().unwrap()])).unwrap();
+        assert_eq!(cli.settings.str_or("scenario", ""), good.to_str().unwrap());
+        // malformed file and missing file both fail at parse time
+        let bad = dir.join("bad.scn");
+        std::fs::write(&bad, "[unknown_pattern]\nx = 1\n").unwrap();
+        assert!(parse_args(&sv(&["coordinate", "--scenario", bad.to_str().unwrap()])).is_err());
+        let missing = dir.join("missing.scn");
+        assert!(
+            parse_args(&sv(&["coordinate", "--scenario", missing.to_str().unwrap()])).is_err()
+        );
+        assert!(parse_args(&sv(&["coordinate", "--scenario"])).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retry_flag_applies() {
+        let cli = parse_args(&sv(&["coordinate", "--retry"])).unwrap();
+        assert!(cli.settings.bool_or("retry", false).unwrap());
     }
 
     #[test]

@@ -43,7 +43,7 @@
 use crate::codistill::orchestrator::EvalPoint;
 use crate::codistill::schedule::{DistillSchedule, LrSchedule};
 use crate::codistill::topology::Topology;
-use crate::codistill::transport::{DeltaCache, DeltaStats, ExchangeTransport};
+use crate::codistill::transport::{DeltaCache, DeltaStats, ExchangeTransport, RetryStats};
 use crate::codistill::Member;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -93,7 +93,7 @@ impl Default for CoordinatorConfig {
 }
 
 /// One member hosted by this coordinator: a global id, the member itself,
-/// and its local publish cadence / join schedule.
+/// and its local publish cadence / join / downtime schedule.
 pub struct HostedMember {
     /// Global member id (unique across every coordinator on the exchange).
     pub id: usize,
@@ -106,6 +106,13 @@ pub struct HostedMember {
     /// Coordinator ticks to sit out before joining the run (0 = from the
     /// start). A late joiner bootstraps from the freshest peer checkpoint.
     pub join_delay: u64,
+    /// `[from_tick, until_tick)` windows during which the member is
+    /// *gone* (a preemption): no training, no publishing, so its
+    /// heartbeat freezes and peers drop it from teacher sets once the
+    /// liveness grace runs out. On resume it re-bootstraps from a live
+    /// peer and re-enters at its own local step. Scenario compilation
+    /// (`codistill::scenario`) fills these for `spot_wave` patterns.
+    pub downtimes: Vec<(u64, u64)>,
 }
 
 impl HostedMember {
@@ -118,6 +125,7 @@ impl HostedMember {
             publish_interval: publish_interval.max(1),
             publish_offset: 0,
             join_delay: 0,
+            downtimes: Vec::new(),
         }
     }
 
@@ -129,6 +137,17 @@ impl HostedMember {
     pub fn with_join_delay(mut self, ticks: u64) -> Self {
         self.join_delay = ticks;
         self
+    }
+
+    /// Preempt the member over coordinator ticks `[from, until)`.
+    pub fn with_downtime(mut self, from: u64, until: u64) -> Self {
+        self.downtimes.push((from, until));
+        self
+    }
+
+    /// Whether the member is preempted at `tick`.
+    fn down_at(&self, tick: u64) -> bool {
+        self.downtimes.iter().any(|&(f, u)| tick >= f && tick < u)
     }
 }
 
@@ -171,6 +190,14 @@ impl LivenessTable {
 
     /// Whether a member's publications were still advancing within
     /// `grace` ticks of `now`. Unknown members are not live.
+    ///
+    /// The grace boundary is **inclusive**: a member whose step last
+    /// advanced exactly `grace` ticks ago (`now - advanced == grace`) is
+    /// still live; it dies one tick later. `grace = 0` therefore means
+    /// "live only if it advanced this very tick", not "never live".
+    /// [`LivenessTable::live_members`] uses the same convention, and the
+    /// boundary is pinned by a unit test table — off-by-one drift here
+    /// silently shrinks teacher sets one reload early.
     pub fn is_live(&self, member: usize, now: u64, grace: u64) -> bool {
         self.seen
             .get(&member)
@@ -258,6 +285,10 @@ pub struct CoordinatorLog {
     pub exchange_errors: Vec<(u64, usize, String)>,
     /// Delta-exchange traffic accounting (`Some` only for delta runs).
     pub delta: Option<DeltaStats>,
+    /// Retry accounting (`Some` only when a
+    /// [`Retry`](crate::codistill::transport::Retry) decorator is in the
+    /// transport stack).
+    pub retry: Option<RetryStats>,
 }
 
 impl CoordinatorLog {
@@ -297,6 +328,8 @@ impl CoordinatorLog {
 struct MemberState {
     started: bool,
     done: bool,
+    /// In a downtime window last tick (controls re-bootstrap on resume).
+    gone: bool,
     local_step: u64,
     /// Freshest installed teacher checkpoint step, if any.
     installed: Option<u64>,
@@ -347,6 +380,7 @@ impl Coordinator {
             .map(|_| MemberState {
                 started: false,
                 done: false,
+                gone: false,
                 local_step: 0,
                 installed: None,
             })
@@ -371,9 +405,22 @@ impl Coordinator {
                 if tick < h.join_delay {
                     continue;
                 }
+                if h.down_at(tick) {
+                    // Preempted: no training, no publishing — its
+                    // heartbeat freezes and peers age it out of teacher
+                    // sets once the liveness grace runs out.
+                    states[idx].gone = true;
+                    continue;
+                }
                 if !states[idx].started {
                     states[idx].started = true;
                     self.join_member(h, tick, &mut shared, &mut log)?;
+                } else if states[idx].gone {
+                    // Back from preemption: re-bootstrap from a live peer
+                    // (the dead-peer replacement of §2.2) and re-announce
+                    // at the current local step.
+                    states[idx].gone = false;
+                    self.rejoin_member(h, states[idx].local_step, tick, &mut shared, &mut log)?;
                 }
                 self.drive_one_step(idx, h, &mut states[idx], tick, &mut shared, &mut log)?;
             }
@@ -389,13 +436,21 @@ impl Coordinator {
             }
             tick += 1;
         }
+        // End-of-run drain: publications a decorator held back past their
+        // member's final cadence (e.g. `Faulty`'s delayed publishes) land
+        // now, so the final manifest contains every member's last
+        // checkpoint. Tolerated like any other exchange call.
+        if let Err(e) = self.transport.flush() {
+            log.exchange_errors.push((tick, usize::MAX, format!("{e:#}")));
+        }
         log.delta = shared.delta.as_ref().map(|c| c.stats());
+        log.retry = self.transport.retry_stats();
         Ok(log)
     }
 
-    /// Start (or late-join) one member: bootstrap from the freshest peer
-    /// checkpoint when joining mid-run, then publish an initial snapshot
-    /// so peers can hear the newcomer.
+    /// Start (or late-join) one member: bootstrap from the freshest
+    /// fetchable peer checkpoint when joining mid-run, then publish an
+    /// initial snapshot so peers can hear the newcomer.
     fn join_member(
         &self,
         h: &mut HostedMember,
@@ -403,33 +458,8 @@ impl Coordinator {
         shared: &mut RunShared,
         log: &mut CoordinatorLog,
     ) -> Result<()> {
-        let mut bootstrapped_from = None;
         if h.join_delay > 0 {
-            // Freshest peer by heartbeat, payload fetched tolerantly.
-            match self.transport.last_steps() {
-                Ok(beats) => {
-                    shared.polled_this_tick = true;
-                    shared.liveness.observe(tick, &beats);
-                    let freshest = beats
-                        .iter()
-                        .filter(|&&(m, _)| m != h.id)
-                        .max_by_key(|&&(m, s)| (s, std::cmp::Reverse(m)))
-                        .copied();
-                    if let Some((peer, _)) = freshest {
-                        match self.transport.latest(peer) {
-                            Ok(Some(ck)) => {
-                                h.member
-                                    .bootstrap(&ck)
-                                    .with_context(|| format!("bootstrapping member {}", h.id))?;
-                                bootstrapped_from = Some((peer, ck.step));
-                            }
-                            Ok(None) => {}
-                            Err(e) => log.exchange_errors.push((tick, h.id, format!("{e:#}"))),
-                        }
-                    }
-                }
-                Err(e) => log.exchange_errors.push((tick, h.id, format!("{e:#}"))),
-            }
+            let bootstrapped_from = self.bootstrap_from_peer(h, tick, shared, log)?;
             log.joins.push(JoinRecord {
                 tick,
                 member: h.id,
@@ -445,6 +475,80 @@ impl Coordinator {
         // Initial publication (step = local step 0 for true joiners).
         self.publish_member(h, 0, tick, log);
         Ok(())
+    }
+
+    /// Resume one member after a downtime window: re-bootstrap from a
+    /// peer (its own parameters are a preemption old) and re-announce at
+    /// the current local step so the heartbeat advances again.
+    fn rejoin_member(
+        &self,
+        h: &mut HostedMember,
+        local_step: u64,
+        tick: u64,
+        shared: &mut RunShared,
+        log: &mut CoordinatorLog,
+    ) -> Result<()> {
+        let bootstrapped_from = self.bootstrap_from_peer(h, tick, shared, log)?;
+        log.joins.push(JoinRecord {
+            tick,
+            member: h.id,
+            bootstrapped_from,
+        });
+        if self.cfg.verbose {
+            eprintln!(
+                "[coord] tick {tick}: member {} resumed at local step {local_step} \
+                 (bootstrap: {bootstrapped_from:?})",
+                h.id
+            );
+        }
+        self.publish_member(h, local_step, tick, log);
+        Ok(())
+    }
+
+    /// Fetch a bootstrap checkpoint for a joiner, tolerantly. Candidates
+    /// are every heartbeating peer, tried freshest-first (ties to the
+    /// lowest id): the freshest peer's payload may be blacked out,
+    /// dropped, or gc'd away, and a joiner seeded by the *second*-freshest
+    /// peer beats a cold start. Returns the `(peer, step)` that seeded the
+    /// member, or `None` when nothing was fetchable (cold start).
+    fn bootstrap_from_peer(
+        &self,
+        h: &mut HostedMember,
+        tick: u64,
+        shared: &mut RunShared,
+        log: &mut CoordinatorLog,
+    ) -> Result<Option<(usize, u64)>> {
+        /// Payload fetches to try before giving up and starting cold.
+        const BOOTSTRAP_CANDIDATES: usize = 3;
+        let beats = match self.transport.last_steps() {
+            Ok(beats) => {
+                shared.polled_this_tick = true;
+                shared.liveness.observe(tick, &beats);
+                beats
+            }
+            Err(e) => {
+                log.exchange_errors.push((tick, h.id, format!("{e:#}")));
+                return Ok(None);
+            }
+        };
+        let mut candidates: Vec<(usize, u64)> =
+            beats.into_iter().filter(|&(m, _)| m != h.id).collect();
+        candidates.sort_by_key(|&(m, s)| (std::cmp::Reverse(s), m));
+        for &(peer, _) in candidates.iter().take(BOOTSTRAP_CANDIDATES) {
+            match self.transport.latest(peer) {
+                Ok(Some(ck)) => {
+                    h.member
+                        .bootstrap(&ck)
+                        .with_context(|| format!("bootstrapping member {}", h.id))?;
+                    return Ok(Some((peer, ck.step)));
+                }
+                // Nothing fetchable from this peer (blackout, drop, gc):
+                // fall through to the next-freshest.
+                Ok(None) => {}
+                Err(e) => log.exchange_errors.push((tick, h.id, format!("{e:#}"))),
+            }
+        }
+        Ok(None)
     }
 
     /// One local step of one hosted member: reload teachers on the
@@ -595,6 +699,37 @@ mod tests {
         // the silent member publishes again: live again
         t.observe(60, &[(1, 70)]);
         assert!(t.is_live(1, 65, 10));
+    }
+
+    #[test]
+    fn liveness_grace_boundary_is_inclusive() {
+        let mut t = LivenessTable::new();
+        t.observe(10, &[(0, 100)]); // advanced at tick 10
+        // (now, grace, expected): the documented inclusive convention —
+        // live while now - advanced <= grace, dead one tick later.
+        let table = [
+            (10, 0, true),   // advanced this very tick, zero grace
+            (11, 0, false),  // one tick late under zero grace
+            (15, 5, true),   // exactly at now - grace: still live
+            (16, 5, false),  // one past the boundary: dead
+            (9, 5, true),    // observed "in the future" (cross-coordinator
+                             // tick skew): saturating_sub keeps it live
+            (u64::MAX, u64::MAX, true), // no overflow at the extremes
+        ];
+        for (now, grace, expect) in table {
+            assert_eq!(
+                t.is_live(0, now, grace),
+                expect,
+                "is_live(now={now}, grace={grace})"
+            );
+            assert_eq!(
+                t.live_members(now, grace) == vec![0],
+                expect,
+                "live_members(now={now}, grace={grace}) disagrees with is_live"
+            );
+        }
+        // never-seen members are dead under any grace
+        assert!(!t.is_live(7, 10, u64::MAX));
     }
 
     #[test]

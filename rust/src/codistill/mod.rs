@@ -71,6 +71,7 @@
 
 pub mod coordinator;
 pub mod orchestrator;
+pub mod scenario;
 pub mod schedule;
 pub mod store;
 pub mod topology;
@@ -80,13 +81,14 @@ pub use coordinator::{
     Coordinator, CoordinatorConfig, CoordinatorLog, HostedMember, JoinRecord, LivenessTable,
 };
 pub use orchestrator::{Orchestrator, OrchestratorConfig, RunLog};
+pub use scenario::{CompiledScenario, MemberSchedule, Scenario, ScenarioEvent};
 pub use schedule::{DistillSchedule, LrSchedule};
 pub use store::Checkpoint;
 pub use topology::Topology;
 pub use transport::{
     Basis, Codec, DeltaCache, DeltaStats, ExchangeTransport, FaultPlan, Faulty, FetchResult,
-    FetchSpec, InProcess, SocketServer, SocketTransport, SpoolDir, TransportKind, WindowCodec,
-    WindowSel, WindowedFetch,
+    FetchSpec, InProcess, Retry, RetryPolicy, RetryStats, SocketServer, SocketTransport,
+    SpoolDir, TransportKind, WindowCodec, WindowSel, WindowedFetch,
 };
 
 /// The zero-copy in-process store under its historical name (it was the

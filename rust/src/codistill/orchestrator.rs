@@ -13,7 +13,9 @@
 
 use crate::codistill::schedule::{DistillSchedule, LrSchedule};
 use crate::codistill::topology::Topology;
-use crate::codistill::transport::{DeltaCache, DeltaStats, ExchangeTransport, InProcess};
+use crate::codistill::transport::{
+    DeltaCache, DeltaStats, ExchangeTransport, InProcess, RetryStats,
+};
 use crate::codistill::{EvalStats, Member};
 use crate::netsim::ClusterModel;
 use crate::prng::Pcg64;
@@ -90,6 +92,10 @@ pub struct RunLog {
     pub staleness: Vec<(u64, usize, u64)>,
     /// Delta-exchange traffic accounting (`Some` only for delta runs).
     pub delta: Option<DeltaStats>,
+    /// Retry accounting (`Some` only when a
+    /// [`Retry`](crate::codistill::transport::Retry) decorator is in the
+    /// transport stack).
+    pub retry: Option<RetryStats>,
 }
 
 impl RunLog {
@@ -283,6 +289,10 @@ impl Orchestrator {
             }
             log.delta = Some(total);
         }
+        // Drain anything a decorator held back, then pick up its retry
+        // accounting (both no-ops on plain backends).
+        self.transport.flush()?;
+        log.retry = self.transport.retry_stats();
         Ok(log)
     }
 }

@@ -1,0 +1,675 @@
+//! Declarative churn scenarios: named failure patterns compiled into a
+//! [`FaultPlan`] plus per-member join/leave/cadence schedules for the
+//! [`Coordinator`](crate::codistill::Coordinator).
+//!
+//! Hand-rolling churn for three members is fine (`join_delays=0,0,60`,
+//! `fault_blackout=1:45:56`); at a hundred members it is not. A scenario
+//! file names the *pattern* and the compiler expands it over the fleet:
+//!
+//! ```text
+//! # preempt a quarter of the fleet at tick 30, staggered rejoins
+//! seed = 11
+//! members = 100
+//!
+//! [spot_wave]
+//! at = 30          # tick the wave hits
+//! fraction = 0.25  # fraction of the fleet preempted
+//! down = 25        # ticks each victim stays gone
+//! stagger = 1      # extra down ticks per victim rank (staggered rejoin)
+//!
+//! [flaky_net]
+//! drop_p = 0.2     # per-read dropped-fetch probability
+//! error_p = 0.1    # per-read erroring-fetch probability
+//! ```
+//!
+//! The grammar is a deliberately tiny TOML subset, parsed with no
+//! dependencies: `#` comments, top-level `key = value` lines (`seed`,
+//! `members`), and repeatable `[section]` blocks, one per event. Values
+//! are integers, floats, or `lo..hi` half-open ranges. Sections:
+//!
+//! * `[spot_wave]` — correlated preemption: a seeded-random `fraction` of
+//!   the fleet goes down at tick `at` for `down` ticks, rejoining
+//!   staggered by `stagger` ticks per victim rank. Victims stop training
+//!   and publishing entirely (their liveness heartbeat freezes) and
+//!   re-bootstrap from a live peer on return.
+//! * `[zone_outage]` — `zone = lo..hi` members keep training but every
+//!   publication with step in `from..until` is blacked out (a
+//!   [`FaultPlan`] blackout per zone member): the exchange — and every
+//!   peer — stops hearing from the zone.
+//! * `[flash_crowd]` — the `joiners` highest-indexed members all join at
+//!   tick `at` and bootstrap at once.
+//! * `[diurnal]` — publish-cadence oscillation across the fleet: member
+//!   `i`'s publish interval follows an integer triangle wave from `base`
+//!   to `base + amplitude` with period `period` members, phase-offset by
+//!   its index.
+//! * `[flaky_net]` — elevated random fault probabilities (`drop_p`,
+//!   `error_p`, `stale_p`, `delay_p`) folded into the [`FaultPlan`]
+//!   (max-combined when repeated).
+//!
+//! **Determinism.** Compilation is a pure function of (scenario text,
+//! seed, member count): victim selection draws from a
+//! [`Pcg64`] stream keyed on the seed and event index, cadences are
+//! integer arithmetic, and the compiled [`FaultPlan`] inherits the
+//! scenario seed — so the same scenario file + seed replays byte-identical
+//! staleness, fault, and retry logs
+//! (`CoordinatorLog::staleness_log_text`, `Faulty::fault_log_text`,
+//! `Retry::retry_log_text`). `tests/scenario_churn.rs` pins exactly that
+//! at 100 members.
+
+use crate::codistill::coordinator::HostedMember;
+use crate::codistill::transport::FaultPlan;
+use crate::netsim::ClusterModel;
+use crate::prng::Pcg64;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One named churn pattern (see module docs for file syntax).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScenarioEvent {
+    /// Correlated preemption of a seeded-random member subset.
+    SpotWave {
+        at: u64,
+        fraction: f64,
+        down: u64,
+        stagger: u64,
+    },
+    /// Publication blackout of a contiguous member range `[zone.0, zone.1)`
+    /// over the published-step window `[from, until)`.
+    ZoneOutage {
+        zone: (usize, usize),
+        from: u64,
+        until: u64,
+    },
+    /// Burst of mid-run joins: the `joiners` highest-indexed members all
+    /// join at tick `at`.
+    FlashCrowd { at: u64, joiners: usize },
+    /// Publish-cadence oscillation over member index.
+    Diurnal { base: u64, amplitude: u64, period: u64 },
+    /// Elevated random fault probabilities.
+    FlakyNet {
+        drop_p: f64,
+        error_p: f64,
+        stale_p: f64,
+        delay_p: f64,
+    },
+}
+
+impl ScenarioEvent {
+    /// Section name this event parses from / prices as.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioEvent::SpotWave { .. } => "spot_wave",
+            ScenarioEvent::ZoneOutage { .. } => "zone_outage",
+            ScenarioEvent::FlashCrowd { .. } => "flash_crowd",
+            ScenarioEvent::Diurnal { .. } => "diurnal",
+            ScenarioEvent::FlakyNet { .. } => "flaky_net",
+        }
+    }
+}
+
+/// A parsed scenario: seed, fleet size, and the event list in file order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub seed: u64,
+    /// Fleet size the file declares; 0 = inherit the caller's count.
+    pub members: usize,
+    pub events: Vec<ScenarioEvent>,
+}
+
+/// Per-member schedule produced by compilation, applied onto a
+/// [`HostedMember`] with [`MemberSchedule::apply_to`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MemberSchedule {
+    /// Global member id this schedule is for.
+    pub member: usize,
+    /// Coordinator ticks to sit out before joining (0 = from the start).
+    pub join_delay: u64,
+    /// `[from_tick, until_tick)` windows during which the member is gone
+    /// (preempted): no training, no publishing, re-bootstrap on return.
+    pub downtimes: Vec<(u64, u64)>,
+    /// Publish cadence override, when an event (diurnal) sets one.
+    pub publish_interval: Option<u64>,
+    pub publish_offset: u64,
+}
+
+impl MemberSchedule {
+    /// Overlay this schedule onto a hosted member.
+    pub fn apply_to(&self, h: &mut HostedMember) {
+        h.join_delay = self.join_delay;
+        h.downtimes.extend(self.downtimes.iter().copied());
+        if let Some(p) = self.publish_interval {
+            h.publish_interval = p.max(1);
+            h.publish_offset = self.publish_offset;
+        }
+    }
+}
+
+/// A scenario expanded over a concrete fleet: the fault plan for the
+/// transport and one schedule per member, ids `base..base + members`.
+#[derive(Debug, Clone)]
+pub struct CompiledScenario {
+    pub seed: u64,
+    pub members: usize,
+    pub plan: FaultPlan,
+    pub schedules: Vec<MemberSchedule>,
+}
+
+impl CompiledScenario {
+    /// Overlay the schedules onto a hosted fleet, in order: `hosted[i]`
+    /// gets the schedule of scenario member `i`. Fleets larger than the
+    /// scenario keep their existing settings past the end.
+    pub fn apply(&self, hosted: &mut [HostedMember]) {
+        for (h, s) in hosted.iter_mut().zip(&self.schedules) {
+            s.apply_to(h);
+        }
+    }
+
+    /// Whether any random fault probability or blackout is active (i.e.
+    /// whether wrapping the transport in `Faulty` is worthwhile).
+    pub fn has_faults(&self) -> bool {
+        !self.plan.blackouts.is_empty()
+            || self.plan.drop_fetch_p > 0.0
+            || self.plan.error_fetch_p > 0.0
+            || self.plan.stale_read_p > 0.0
+            || self.plan.delay_publish_p > 0.0
+    }
+}
+
+impl Scenario {
+    /// Parse a scenario from text (see module docs for the grammar).
+    pub fn parse(text: &str) -> Result<Scenario> {
+        let mut scenario = Scenario {
+            seed: 0,
+            members: 0,
+            events: Vec::new(),
+        };
+        let mut section: Option<(String, HashMap<String, String>, usize)> = None;
+        let mut finish =
+            |sec: Option<(String, HashMap<String, String>, usize)>, out: &mut Vec<ScenarioEvent>| {
+                match sec {
+                    None => Ok(()),
+                    Some((name, keys, line_no)) => {
+                        let ev = build_event(&name, &keys)
+                            .with_context(|| format!("scenario section [{name}] (line {line_no})"))?;
+                        out.push(ev);
+                        Ok(())
+                    }
+                }
+            };
+        for (i, raw) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = match raw.find('#') {
+                Some(p) => &raw[..p],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                finish(section.take(), &mut scenario.events)?;
+                section = Some((name.trim().to_string(), HashMap::new(), line_no));
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("scenario line {line_no}: {line:?} (want key = value)"))?;
+            let (key, value) = (key.trim(), value.trim());
+            match &mut section {
+                Some((_, keys, _)) => {
+                    if keys.insert(key.to_string(), value.to_string()).is_some() {
+                        bail!("scenario line {line_no}: duplicate key {key:?} in section");
+                    }
+                }
+                None => match key {
+                    "seed" => {
+                        scenario.seed = value
+                            .parse()
+                            .with_context(|| format!("scenario line {line_no}: seed {value:?}"))?
+                    }
+                    "members" => {
+                        scenario.members = value
+                            .parse()
+                            .with_context(|| format!("scenario line {line_no}: members {value:?}"))?
+                    }
+                    other => bail!(
+                        "scenario line {line_no}: unknown top-level key {other:?} (want seed|members)"
+                    ),
+                },
+            }
+        }
+        finish(section.take(), &mut scenario.events)?;
+        Ok(scenario)
+    }
+
+    /// Parse a scenario file.
+    pub fn from_file(path: &Path) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario {}", path.display()))?;
+        Scenario::parse(&text).with_context(|| format!("parsing scenario {}", path.display()))
+    }
+
+    /// Fleet size for a caller hosting `caller_members`: the file's
+    /// `members` wins when declared.
+    pub fn fleet_size(&self, caller_members: usize) -> usize {
+        if self.members > 0 {
+            self.members
+        } else {
+            caller_members
+        }
+    }
+
+    /// Expand the scenario over `n` members with global ids
+    /// `base..base + n`. Pure function of (self, n, base): compiling twice
+    /// yields identical plans and schedules.
+    pub fn compile(&self, n: usize, base: usize) -> Result<CompiledScenario> {
+        if n == 0 {
+            bail!("scenario compiled for an empty fleet");
+        }
+        let mut plan = FaultPlan::new(self.seed);
+        let mut schedules: Vec<MemberSchedule> = (0..n)
+            .map(|i| MemberSchedule {
+                member: base + i,
+                ..Default::default()
+            })
+            .collect();
+        for (ei, ev) in self.events.iter().enumerate() {
+            match *ev {
+                ScenarioEvent::SpotWave {
+                    at,
+                    fraction,
+                    down,
+                    stagger,
+                } => {
+                    let victims = ((n as f64) * fraction.clamp(0.0, 1.0)).round() as usize;
+                    let victims = victims.min(n);
+                    // Seeded victim pick, keyed on the event index so two
+                    // waves preempt different subsets.
+                    let mut ids: Vec<usize> = (0..n).collect();
+                    let stream = 0x7a7e_0001u64.wrapping_add(ei as u64);
+                    Pcg64::with_stream(self.seed, stream).shuffle(&mut ids);
+                    for (rank, &i) in ids[..victims].iter().enumerate() {
+                        let until = at + down + stagger * rank as u64;
+                        schedules[i].downtimes.push((at, until.max(at + 1)));
+                    }
+                }
+                ScenarioEvent::ZoneOutage { zone, from, until } => {
+                    if zone.0 >= zone.1 {
+                        bail!("zone_outage zone {}..{} is empty", zone.0, zone.1);
+                    }
+                    for i in zone.0..zone.1.min(n) {
+                        plan = plan.with_blackout(base + i, from, until);
+                    }
+                }
+                ScenarioEvent::FlashCrowd { at, joiners } => {
+                    let j = joiners.min(n);
+                    for s in schedules.iter_mut().skip(n - j) {
+                        s.join_delay = at;
+                    }
+                }
+                ScenarioEvent::Diurnal {
+                    base: lo,
+                    amplitude,
+                    period,
+                } => {
+                    let p = period.max(2);
+                    let half = (p / 2).max(1);
+                    for (i, s) in schedules.iter_mut().enumerate() {
+                        // Integer triangle wave over member index: 0 at
+                        // phase 0, `amplitude` at phase `period/2`.
+                        let pos = i as u64 % p;
+                        let tri = if pos <= half { pos } else { p - pos };
+                        let interval = (lo + amplitude * tri / half).max(1);
+                        s.publish_interval = Some(interval);
+                        s.publish_offset = i as u64 % interval;
+                    }
+                }
+                ScenarioEvent::FlakyNet {
+                    drop_p,
+                    error_p,
+                    stale_p,
+                    delay_p,
+                } => {
+                    plan.drop_fetch_p = plan.drop_fetch_p.max(drop_p);
+                    plan.error_fetch_p = plan.error_fetch_p.max(error_p);
+                    plan.stale_read_p = plan.stale_read_p.max(stale_p);
+                    plan.delay_publish_p = plan.delay_publish_p.max(delay_p);
+                }
+            }
+        }
+        Ok(CompiledScenario {
+            seed: self.seed,
+            members: n,
+            plan,
+            schedules,
+        })
+    }
+
+    /// Analytic wall-clock price of each event over a fleet of `n`
+    /// members running `total_steps` (see the [`ClusterModel`] scenario
+    /// primitives): `(event name, seconds)` rows in file order.
+    pub fn price(
+        &self,
+        m: &ClusterModel,
+        n: usize,
+        total_steps: u64,
+    ) -> Vec<(&'static str, f64)> {
+        self.events
+            .iter()
+            .map(|ev| {
+                let cost = match *ev {
+                    ScenarioEvent::SpotWave {
+                        fraction,
+                        down,
+                        stagger,
+                        ..
+                    } => {
+                        let victims = ((n as f64) * fraction.clamp(0.0, 1.0)).round() as usize;
+                        // mean downtime includes the staggered tail
+                        let mean_down =
+                            down as f64 + stagger as f64 * victims.saturating_sub(1) as f64 / 2.0;
+                        m.preemption_wave_cost(victims.min(n), mean_down)
+                    }
+                    ScenarioEvent::ZoneOutage { zone, from, until } => {
+                        let size = zone.1.saturating_sub(zone.0).min(n);
+                        m.zone_outage_cost(size, until.saturating_sub(from))
+                    }
+                    ScenarioEvent::FlashCrowd { joiners, .. } => {
+                        m.flash_crowd_cost(joiners.min(n))
+                    }
+                    ScenarioEvent::Diurnal {
+                        base,
+                        amplitude,
+                        period,
+                    } => {
+                        // price the whole fleet's skewed publish traffic
+                        let p = period.max(2);
+                        let half = (p / 2).max(1);
+                        let intervals: Vec<u64> = (0..n as u64)
+                            .map(|i| {
+                                let pos = i % p;
+                                let tri = if pos <= half { pos } else { p - pos };
+                                (base + amplitude * tri / half).max(1)
+                            })
+                            .collect();
+                        total_steps as f64 * n as f64 * m.skewed_bytes_per_step(&intervals)
+                            / m.bandwidth_bps
+                    }
+                    ScenarioEvent::FlakyNet { drop_p, error_p, .. } => {
+                        // every member's reload reads pay the retry tax
+                        let reads =
+                            n as u64 * (total_steps / m.reload_interval.max(1)).max(1);
+                        m.flaky_net_cost(reads, drop_p + error_p, 5)
+                    }
+                };
+                (ev.name(), cost)
+            })
+            .collect()
+    }
+}
+
+/// Build one event from a finished `[section]` block, rejecting unknown
+/// keys so typos fail at parse time.
+fn build_event(name: &str, keys: &HashMap<String, String>) -> Result<ScenarioEvent> {
+    let known: &[&str] = match name {
+        "spot_wave" => &["at", "fraction", "down", "stagger"],
+        "zone_outage" => &["zone", "from", "until"],
+        "flash_crowd" => &["at", "joiners"],
+        "diurnal" => &["base", "amplitude", "period"],
+        "flaky_net" => &["drop_p", "error_p", "stale_p", "delay_p"],
+        other => bail!(
+            "unknown section {other:?} (want spot_wave|zone_outage|flash_crowd|diurnal|flaky_net)"
+        ),
+    };
+    for k in keys.keys() {
+        if !known.contains(&k.as_str()) {
+            bail!("unknown key {k:?} (known: {})", known.join(", "));
+        }
+    }
+    let u64_of = |k: &str, default: Option<u64>| -> Result<u64> {
+        match keys.get(k) {
+            Some(v) => v.parse().with_context(|| format!("key {k} = {v:?}")),
+            None => default.with_context(|| format!("missing required key {k:?}")),
+        }
+    };
+    let f64_of = |k: &str, default: Option<f64>| -> Result<f64> {
+        match keys.get(k) {
+            Some(v) => {
+                let p: f64 = v.parse().with_context(|| format!("key {k} = {v:?}"))?;
+                if !p.is_finite() || p < 0.0 {
+                    bail!("key {k} = {v:?} must be finite and >= 0");
+                }
+                Ok(p)
+            }
+            None => default.with_context(|| format!("missing required key {k:?}")),
+        }
+    };
+    Ok(match name {
+        "spot_wave" => {
+            let fraction = f64_of("fraction", None)?;
+            if fraction > 1.0 {
+                bail!("fraction {fraction} > 1");
+            }
+            ScenarioEvent::SpotWave {
+                at: u64_of("at", None)?,
+                fraction,
+                down: u64_of("down", None)?.max(1),
+                stagger: u64_of("stagger", Some(0))?,
+            }
+        }
+        "zone_outage" => {
+            let spec = keys.get("zone").context("missing required key \"zone\"")?;
+            let (lo, hi) = spec
+                .split_once("..")
+                .with_context(|| format!("zone {spec:?} (want lo..hi)"))?;
+            let zone: (usize, usize) = (
+                lo.trim().parse().with_context(|| format!("zone lo {lo:?}"))?,
+                hi.trim().parse().with_context(|| format!("zone hi {hi:?}"))?,
+            );
+            ScenarioEvent::ZoneOutage {
+                zone,
+                from: u64_of("from", None)?,
+                until: u64_of("until", None)?,
+            }
+        }
+        "flash_crowd" => ScenarioEvent::FlashCrowd {
+            at: u64_of("at", None)?,
+            joiners: u64_of("joiners", None)? as usize,
+        },
+        "diurnal" => ScenarioEvent::Diurnal {
+            base: u64_of("base", None)?.max(1),
+            amplitude: u64_of("amplitude", None)?,
+            period: u64_of("period", Some(16))?,
+        },
+        "flaky_net" => ScenarioEvent::FlakyNet {
+            drop_p: f64_of("drop_p", Some(0.0))?,
+            error_p: f64_of("error_p", Some(0.0))?,
+            stale_p: f64_of("stale_p", Some(0.0))?,
+            delay_p: f64_of("delay_p", Some(0.0))?,
+        },
+        _ => unreachable!("validated above"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FULL: &str = "\
+# every pattern at once
+seed = 11
+members = 100
+
+[spot_wave]
+at = 30
+fraction = 0.25
+down = 25
+stagger = 1
+
+[zone_outage]
+zone = 10..30
+from = 50
+until = 90
+
+[flash_crowd]
+at = 60
+joiners = 20
+
+[diurnal]
+base = 10
+amplitude = 6
+period = 32
+
+[flaky_net]
+drop_p = 0.2
+error_p = 0.1
+";
+
+    #[test]
+    fn parses_every_section() {
+        let s = Scenario::parse(FULL).unwrap();
+        assert_eq!((s.seed, s.members, s.events.len()), (11, 100, 5));
+        assert_eq!(
+            s.events[0],
+            ScenarioEvent::SpotWave {
+                at: 30,
+                fraction: 0.25,
+                down: 25,
+                stagger: 1
+            }
+        );
+        assert_eq!(
+            s.events[1],
+            ScenarioEvent::ZoneOutage {
+                zone: (10, 30),
+                from: 50,
+                until: 90
+            }
+        );
+        assert_eq!(s.events[2], ScenarioEvent::FlashCrowd { at: 60, joiners: 20 });
+        assert_eq!(
+            s.events[4],
+            ScenarioEvent::FlakyNet {
+                drop_p: 0.2,
+                error_p: 0.1,
+                stale_p: 0.0,
+                delay_p: 0.0
+            }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        for bad in [
+            "bogus = 1",                               // unknown top-level key
+            "[nope]\nx = 1",                           // unknown section
+            "[spot_wave]\nat = 1\nfraction = 0.5",     // missing `down`
+            "[spot_wave]\nat = 1\nfraction = 2.0\ndown = 5", // fraction > 1
+            "[spot_wave]\nat = 1\nat = 2\nfraction = 0.5\ndown = 5", // dup key
+            "[zone_outage]\nzone = 5\nfrom = 1\nuntil = 2", // bad range
+            "[zone_outage]\nzone = 9..3\nfrom = 1\nuntil = 2", // empty range
+            "[flaky_net]\ndrop_p = -0.5",              // negative probability
+            "[flash_crowd]\nat",                       // no `=`
+            "[spot_wave]\nat = 1\nfraction = 0.5\ndown = 5\nbanana = 1", // unknown key
+        ] {
+            assert!(Scenario::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn compile_is_deterministic_and_covers_the_fleet() {
+        let s = Scenario::parse(FULL).unwrap();
+        let a = s.compile(100, 0).unwrap();
+        let b = s.compile(100, 0).unwrap();
+        assert_eq!(a.schedules, b.schedules, "victim pick not deterministic");
+        assert_eq!(a.plan.blackouts, b.plan.blackouts);
+        // spot wave: exactly 25 members have a downtime starting at 30
+        let victims: Vec<&MemberSchedule> =
+            a.schedules.iter().filter(|m| !m.downtimes.is_empty()).collect();
+        assert_eq!(victims.len(), 25);
+        assert!(victims.iter().all(|m| m.downtimes[0].0 == 30));
+        // staggered rejoins: not all downtimes end together
+        let ends: std::collections::BTreeSet<u64> =
+            victims.iter().map(|m| m.downtimes[0].1).collect();
+        assert!(ends.len() > 1, "rejoins not staggered: {ends:?}");
+        // zone outage: 20 blackouts covering members 10..30
+        assert_eq!(a.plan.blackouts.len(), 20);
+        assert!(a.plan.blackouts.iter().all(|b| (10..30).contains(&b.member)
+            && b.from_step == 50
+            && b.until_step == 90));
+        // flash crowd: the 20 highest ids join at 60
+        assert!(a.schedules[80..].iter().all(|m| m.join_delay == 60));
+        assert!(a.schedules[..80].iter().all(|m| m.join_delay == 0));
+        // diurnal: cadence oscillates within [base, base+amplitude]
+        let intervals: Vec<u64> =
+            a.schedules.iter().map(|m| m.publish_interval.unwrap()).collect();
+        assert!(intervals.iter().all(|&i| (10..=16).contains(&i)));
+        assert!(intervals.iter().any(|&i| i == 10) && intervals.iter().any(|&i| i == 16));
+        // flaky net folded into the plan
+        assert_eq!((a.plan.drop_fetch_p, a.plan.error_fetch_p), (0.2, 0.1));
+        assert!(a.has_faults());
+        // different seeds preempt different subsets
+        let mut other = s.clone();
+        other.seed = 12;
+        let c = other.compile(100, 0).unwrap();
+        assert_ne!(a.schedules, c.schedules);
+    }
+
+    #[test]
+    fn compile_respects_member_base() {
+        let s = Scenario::parse("seed = 1\n[zone_outage]\nzone = 0..2\nfrom = 5\nuntil = 9\n")
+            .unwrap();
+        let c = s.compile(4, 100).unwrap();
+        assert_eq!(c.schedules[0].member, 100);
+        assert!(c.plan.blackouts.iter().all(|b| b.member >= 100 && b.member < 102));
+    }
+
+    #[test]
+    fn apply_overlays_schedules_onto_hosted_members() {
+        use crate::codistill::Member;
+        use crate::testkit::DriftMember;
+        let s = Scenario::parse(
+            "seed = 3\nmembers = 4\n[flash_crowd]\nat = 7\njoiners = 2\n\
+             [diurnal]\nbase = 5\namplitude = 4\nperiod = 4\n",
+        )
+        .unwrap();
+        let c = s.compile(4, 0).unwrap();
+        let mut hosted: Vec<HostedMember> = (0..4)
+            .map(|i| HostedMember::new(i, Box::new(DriftMember::new(i)) as Box<dyn Member>, 10))
+            .collect();
+        c.apply(&mut hosted);
+        assert_eq!(hosted[3].join_delay, 7);
+        assert_eq!(hosted[0].join_delay, 0);
+        assert!(hosted.iter().all(|h| h.publish_interval >= 5));
+        assert!(!c.has_faults());
+    }
+
+    #[test]
+    fn fleet_size_prefers_the_file() {
+        let with = Scenario::parse("members = 10\n").unwrap();
+        let without = Scenario::parse("seed = 1\n").unwrap();
+        assert_eq!(with.fleet_size(3), 10);
+        assert_eq!(without.fleet_size(3), 3);
+        assert!(with.compile(0, 0).is_err(), "empty fleet must be rejected");
+    }
+
+    #[test]
+    fn prices_every_event_positively() {
+        let s = Scenario::parse(FULL).unwrap();
+        let m = ClusterModel::gpu_cluster(8, 40_000_000);
+        let rows = s.price(&m, 100, 200);
+        assert_eq!(rows.len(), 5);
+        for (name, cost) in &rows {
+            assert!(*cost > 0.0, "{name} priced {cost}");
+        }
+        // a bigger wave costs more
+        let small = Scenario::parse(
+            "seed = 11\n[spot_wave]\nat = 30\nfraction = 0.05\ndown = 25\nstagger = 1\n",
+        )
+        .unwrap();
+        let wave_full = rows[0].1;
+        let wave_small = small.price(&m, 100, 200)[0].1;
+        assert!(wave_small < wave_full, "{wave_small} !< {wave_full}");
+    }
+}

@@ -363,6 +363,17 @@ impl ExchangeTransport for Faulty {
     fn gc(&self) -> Result<()> {
         self.inner.gc()
     }
+
+    /// End-of-run drain: deliver every held (delayed) publication, then
+    /// let the inner transport flush whatever it holds.
+    fn flush(&self) -> Result<()> {
+        self.flush_delayed()?;
+        self.inner.flush()
+    }
+
+    fn retry_stats(&self) -> Option<crate::codistill::transport::RetryStats> {
+        self.inner.retry_stats()
+    }
 }
 
 #[cfg(test)]

@@ -97,12 +97,14 @@
 pub mod codec;
 pub mod faulty;
 pub mod inproc;
+pub mod retry;
 pub mod socket;
 pub mod spool;
 
 pub use codec::{Codec, WindowCodec};
 pub use faulty::{Blackout, FaultEvent, FaultKind, FaultPlan, Faulty};
 pub use inproc::InProcess;
+pub use retry::{classify_error, ErrorClass, Retry, RetryPolicy, RetryStats};
 pub use socket::{SocketServer, SocketTransport};
 pub use spool::SpoolDir;
 
@@ -548,6 +550,24 @@ pub trait ExchangeTransport: Send + Sync {
             .into_iter()
             .find(|&(m, _)| m == member)
             .map(|(_, step)| now.saturating_sub(step)))
+    }
+
+    /// Deliver any state a decorator is still holding back (e.g. the
+    /// publications [`Faulty`] delayed past their member's final cadence).
+    /// The coordinator calls this once at end of run; plain backends have
+    /// nothing held, so the default is a no-op. Decorators forward to
+    /// their inner transport after draining their own state, so the call
+    /// reaches every layer of a stacked transport.
+    fn flush(&self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Retry accounting, when a [`Retry`] decorator is anywhere in the
+    /// stack. Plain backends answer `None`; decorators forward to their
+    /// inner transport so the stats surface through however many layers
+    /// wrap the retrier.
+    fn retry_stats(&self) -> Option<RetryStats> {
+        None
     }
 }
 

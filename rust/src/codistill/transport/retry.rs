@@ -1,0 +1,689 @@
+//! Retrying decorator over any checkpoint-exchange transport.
+//!
+//! The coordinator tolerates exchange failures by *skipping* them: a
+//! dropped teacher fetch is logged and the member trains on with its old
+//! set. That is the right last resort, but most real failures — a torn
+//! connection, a preempted peer mid-reply, an injected
+//! [`Faulty`](crate::codistill::transport::Faulty) fetch fault — are
+//! transient, and a single retry absorbs them before the coordinator ever
+//! has to degrade. [`Retry`] wraps any [`ExchangeTransport`] with a
+//! per-operation retry loop:
+//!
+//! * **Transient vs permanent classification** ([`classify_error`]).
+//!   Connection-shaped failures (refused/reset/torn frame/timeout — any
+//!   `std::io::Error` of those kinds in the chain), a server that closed
+//!   the connection cleanly mid-operation, and `Faulty`'s injected fetch
+//!   errors are transient: the operation is retried with backoff.
+//!   Protocol violations and corruption (digest mismatch, malformed or
+//!   oversized frames, bad opcodes/status bytes) are permanent: retrying
+//!   cannot help and might mask a real bug, so they surface immediately.
+//! * **Deterministic seeded backoff.** The delay before attempt `k` of
+//!   operation `op` is a pure function of `(policy.seed, op, k)` —
+//!   exponential with jitter, but jittered from a
+//!   [`Pcg64`] stream rather than a wall clock, so two runs with the same
+//!   seed replay byte-identical [`Retry::retry_log_text`] output.
+//! * **Empty-read retries.** A fetch answered `Ok(None)` may mean "never
+//!   published" or a dropped read (that is exactly how `Faulty` models a
+//!   drop). With [`RetryPolicy::retry_none`] (default on) empty fetch
+//!   answers are retried like transient errors and surface as `None`
+//!   only after the attempt budget is spent.
+//! * **Per-attempt deadline.** [`RetryPolicy::attempt_deadline`] marks an
+//!   attempt that failed after running past the deadline as transient
+//!   regardless of its error class: an operation slow enough to trip the
+//!   deadline is timeout-shaped even when its error text is not. (The
+//!   blocking socket client's own read timeout —
+//!   [`SocketTransport::with_read_timeout`](crate::codistill::transport::SocketTransport::with_read_timeout)
+//!   — is what actually bounds a hung read; set it at or below this
+//!   deadline.)
+//!
+//! Accounting lands in [`RetryStats`] — total operations, attempts,
+//! transient failures absorbed vs surfaced — which the coordinator and
+//! orchestrator thread into their run logs so the fault matrix can assert
+//! "N injected transient faults, M absorbed by retry, K surfaced".
+
+use crate::codistill::store::Checkpoint;
+use crate::codistill::transport::{ExchangeTransport, FetchResult, FetchSpec, TransportKind};
+use crate::prng::Pcg64;
+use anyhow::Result;
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Whether a failed exchange operation is worth retrying.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorClass {
+    /// Connection-shaped / injected-fault failure: retry may succeed.
+    Transient,
+    /// Protocol violation or corruption: retrying cannot help.
+    Permanent,
+}
+
+/// Classify an exchange error as transient (retryable) or permanent.
+///
+/// The decision walks the error chain: any connection-shaped
+/// `std::io::Error` makes the failure transient, any corruption-shaped
+/// one permanent. Failing that, known error texts from the transport
+/// stack decide; unknown errors default to **permanent** — an
+/// unclassified failure is surfaced loudly rather than silently retried.
+pub fn classify_error(err: &anyhow::Error) -> ErrorClass {
+    for cause in err.chain() {
+        if let Some(io) = cause.downcast_ref::<std::io::Error>() {
+            use std::io::ErrorKind::*;
+            return match io.kind() {
+                UnexpectedEof | ConnectionRefused | ConnectionReset | ConnectionAborted
+                | BrokenPipe | TimedOut | WouldBlock | Interrupted | NotConnected
+                | AddrNotAvailable => ErrorClass::Transient,
+                _ => ErrorClass::Permanent,
+            };
+        }
+    }
+    let text = format!("{err:#}");
+    // Transient markers: injected fetch faults (`Faulty`), a server that
+    // closed the connection between frames, a connect that failed before
+    // an io::Error made it into the chain.
+    const TRANSIENT: &[&str] = &[
+        "injected fetch error",
+        "exchange server closed the connection",
+        "connecting ",
+    ];
+    // Permanent markers: corruption and protocol violations from the
+    // wire/install guards.
+    const PERMANENT: &[&str] = &[
+        "corrupt delta payload",
+        "frame claims",
+        "frame of",
+        "bad response status",
+        "bad basis flag",
+        "bad window selection flag",
+        "unknown opcode",
+        "empty response frame",
+    ];
+    if PERMANENT.iter().any(|m| text.contains(m)) {
+        return ErrorClass::Permanent;
+    }
+    if TRANSIENT.iter().any(|m| text.contains(m)) {
+        return ErrorClass::Transient;
+    }
+    ErrorClass::Permanent
+}
+
+/// Per-operation retry policy (see module docs). The defaults — 5
+/// attempts, 1 ms base backoff doubling to 50 ms with 50% jitter — absorb
+/// the overwhelming majority of independent per-attempt faults: at a 30%
+/// transient-failure rate per attempt, fewer than 0.3% of operations
+/// exhaust the budget.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts per operation (>= 1; 1 = no retries).
+    pub max_attempts: u32,
+    /// Backoff before the second attempt; doubles per further attempt.
+    pub base_delay: Duration,
+    /// Backoff cap.
+    pub max_delay: Duration,
+    /// Jitter fraction in [0, 1]: the drawn delay is
+    /// `delay * (1 - jitter + jitter * u)` for a seeded uniform `u`.
+    pub jitter: f64,
+    /// Retry fetches answered `Ok(None)` (dropped reads look identical
+    /// to never-published members; see module docs).
+    pub retry_none: bool,
+    /// An attempt that *failed* after running at least this long is
+    /// treated as transient regardless of its error class.
+    pub attempt_deadline: Option<Duration>,
+    /// Seed of the deterministic jitter stream.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 5,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(50),
+            jitter: 0.5,
+            retry_none: true,
+            attempt_deadline: None,
+            seed: 0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// A policy for deterministic tests: `attempts` tries, no sleeping.
+    pub fn immediate(attempts: u32, seed: u64) -> Self {
+        RetryPolicy {
+            max_attempts: attempts.max(1),
+            base_delay: Duration::ZERO,
+            max_delay: Duration::ZERO,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    /// Deterministic backoff before attempt `attempt` (2-based: no delay
+    /// precedes the first attempt) of operation `op`.
+    fn backoff(&self, op: u64, attempt: u32) -> Duration {
+        if self.base_delay.is_zero() || attempt < 2 {
+            return Duration::ZERO;
+        }
+        let exp = self.base_delay.as_secs_f64() * f64::from(2u32.saturating_pow(attempt - 2));
+        let capped = exp.min(self.max_delay.as_secs_f64());
+        let j = self.jitter.clamp(0.0, 1.0);
+        let stream = op
+            .wrapping_mul(0x9e3779b97f4a7c15)
+            .wrapping_add(u64::from(attempt).wrapping_mul(0xbf58476d1ce4e5b9));
+        let u = Pcg64::with_stream(self.seed, stream).uniform();
+        Duration::from_secs_f64(capped * (1.0 - j + j * u))
+    }
+}
+
+/// Retry accounting: enough to assert "N injected transient faults, M
+/// absorbed by retry, K surfaced" from a run log.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RetryStats {
+    /// Operations gated through the retry loop.
+    pub ops: u64,
+    /// Individual attempts (>= ops).
+    pub attempts: u64,
+    /// Transient errors observed (each was retried unless it exhausted
+    /// the budget).
+    pub transient_errors: u64,
+    /// Empty fetch answers retried under [`RetryPolicy::retry_none`].
+    pub empty_retries: u64,
+    /// Operations that failed transiently at least once and then
+    /// succeeded — the faults the retry layer absorbed.
+    pub absorbed: u64,
+    /// Operations whose final attempt still failed transiently (the
+    /// error surfaced to the caller).
+    pub exhausted: u64,
+    /// Operations that still answered `Ok(None)` after the budget.
+    pub exhausted_empty: u64,
+    /// Permanent errors surfaced without retry.
+    pub permanent_errors: u64,
+}
+
+impl RetryStats {
+    /// Operations that saw at least one transient failure.
+    pub fn affected_ops(&self) -> u64 {
+        self.absorbed + self.exhausted + self.exhausted_empty
+    }
+
+    /// Fraction of transient-failure-affected operations the retry layer
+    /// rescued (1.0 when nothing failed).
+    pub fn absorption_rate(&self) -> f64 {
+        let affected = self.affected_ops();
+        if affected == 0 {
+            1.0
+        } else {
+            self.absorbed as f64 / affected as f64
+        }
+    }
+}
+
+/// One retry-relevant event, for the byte-comparable replay log.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct RetryEvent {
+    op: u64,
+    member: usize,
+    attempt: u32,
+    /// `transient` | `empty` | `permanent` | `exhausted` | `absorbed`.
+    what: &'static str,
+}
+
+#[derive(Default)]
+struct RetryState {
+    next_op: u64,
+    stats: RetryStats,
+    log: Vec<RetryEvent>,
+}
+
+/// Retrying decorator over any exchange transport (see module docs).
+/// Stack it *outside* fault injection — `Retry::wrap(Faulty::wrap(...))`
+/// — so injected faults exercise the retry loop.
+pub struct Retry {
+    inner: Arc<dyn ExchangeTransport>,
+    policy: RetryPolicy,
+    state: Mutex<RetryState>,
+}
+
+/// Outcome of one gated operation, before stats bookkeeping.
+enum OpOutcome<T> {
+    Done(Result<T>),
+    TransientErr(anyhow::Error),
+    Empty(T),
+}
+
+impl Retry {
+    pub fn wrap(inner: Arc<dyn ExchangeTransport>, policy: RetryPolicy) -> Self {
+        Retry {
+            inner,
+            policy: RetryPolicy {
+                max_attempts: policy.max_attempts.max(1),
+                ..policy
+            },
+            state: Mutex::new(RetryState::default()),
+        }
+    }
+
+    pub fn policy(&self) -> &RetryPolicy {
+        &self.policy
+    }
+
+    /// Retry accounting so far.
+    pub fn stats(&self) -> RetryStats {
+        self.state.lock().unwrap().stats
+    }
+
+    /// Canonical text rendering of the retry log: one
+    /// `op member attempt what` line per retry-relevant event, in
+    /// operation order — byte-comparable across runs with the same seed,
+    /// fault plan, and schedule (single writer assumed, like the fault
+    /// log).
+    pub fn retry_log_text(&self) -> String {
+        let mut out = String::new();
+        for e in self.state.lock().unwrap().log.iter() {
+            let _ = writeln!(out, "{} {} {} {}", e.op, e.member, e.attempt, e.what);
+        }
+        out
+    }
+
+    fn record(&self, op: u64, member: usize, attempt: u32, what: &'static str) {
+        self.state.lock().unwrap().log.push(RetryEvent {
+            op,
+            member,
+            attempt,
+            what,
+        });
+    }
+
+    /// Drive one operation through the retry loop. `member` is only used
+    /// for the log (coordinator-level ops like `gc` pass [`COORD_OP`]).
+    /// `empty` marks results that should be retried under `retry_none`.
+    fn run_op<T>(
+        &self,
+        member: usize,
+        mut op: impl FnMut() -> Result<T>,
+        empty: impl Fn(&T) -> bool,
+    ) -> Result<T> {
+        let op_id = {
+            let mut st = self.state.lock().unwrap();
+            st.stats.ops += 1;
+            let id = st.next_op;
+            st.next_op += 1;
+            id
+        };
+        let mut failed_before = false;
+        for attempt in 1..=self.policy.max_attempts {
+            let backoff = self.policy.backoff(op_id, attempt);
+            if !backoff.is_zero() {
+                std::thread::sleep(backoff);
+            }
+            self.state.lock().unwrap().stats.attempts += 1;
+            let started = Instant::now();
+            let outcome = match op() {
+                Ok(v) if self.policy.retry_none && empty(&v) => OpOutcome::Empty(v),
+                Ok(v) => OpOutcome::Done(Ok(v)),
+                Err(e) => {
+                    let over_deadline = self
+                        .policy
+                        .attempt_deadline
+                        .is_some_and(|d| started.elapsed() >= d);
+                    if over_deadline || classify_error(&e) == ErrorClass::Transient {
+                        OpOutcome::TransientErr(e)
+                    } else {
+                        OpOutcome::Done(Err(e))
+                    }
+                }
+            };
+            match outcome {
+                OpOutcome::Done(Ok(v)) => {
+                    if failed_before {
+                        self.state.lock().unwrap().stats.absorbed += 1;
+                        self.record(op_id, member, attempt, "absorbed");
+                    }
+                    return Ok(v);
+                }
+                OpOutcome::Done(Err(e)) => {
+                    self.state.lock().unwrap().stats.permanent_errors += 1;
+                    self.record(op_id, member, attempt, "permanent");
+                    return Err(e);
+                }
+                OpOutcome::TransientErr(e) => {
+                    failed_before = true;
+                    self.state.lock().unwrap().stats.transient_errors += 1;
+                    self.record(op_id, member, attempt, "transient");
+                    if attempt == self.policy.max_attempts {
+                        self.state.lock().unwrap().stats.exhausted += 1;
+                        self.record(op_id, member, attempt, "exhausted");
+                        return Err(e);
+                    }
+                }
+                OpOutcome::Empty(v) => {
+                    failed_before = true;
+                    self.state.lock().unwrap().stats.empty_retries += 1;
+                    self.record(op_id, member, attempt, "empty");
+                    if attempt == self.policy.max_attempts {
+                        self.state.lock().unwrap().stats.exhausted_empty += 1;
+                        self.record(op_id, member, attempt, "exhausted");
+                        return Ok(v);
+                    }
+                }
+            }
+        }
+        unreachable!("retry loop returns within max_attempts");
+    }
+}
+
+/// Member id the retry log uses for coordinator-level operations
+/// (`members`/`last_steps`/`gc`) that are not about one member.
+pub const COORD_OP: usize = usize::MAX;
+
+impl ExchangeTransport for Retry {
+    fn kind(&self) -> TransportKind {
+        self.inner.kind()
+    }
+
+    fn publish(&self, ckpt: Checkpoint) -> Result<()> {
+        let member = ckpt.member;
+        // Publish is idempotent on the exchange (per-member step
+        // monotonicity: re-publishing the same step overwrites the same
+        // slot), so a transient publish failure is retried like a read.
+        let mut held = Some(ckpt);
+        self.run_op(
+            member,
+            move || {
+                let ck = held.take().expect("publish retried after success");
+                match self.inner.publish(ck.clone()) {
+                    Ok(()) => Ok(()),
+                    Err(e) => {
+                        held = Some(ck);
+                        Err(e)
+                    }
+                }
+            },
+            |_| false,
+        )
+    }
+
+    fn fetch(&self, spec: &FetchSpec) -> Result<Option<FetchResult>> {
+        self.run_op(spec.member, || self.inner.fetch(spec), Option::is_none)
+    }
+
+    fn members(&self) -> Result<Vec<usize>> {
+        self.run_op(COORD_OP, || self.inner.members(), |_| false)
+    }
+
+    fn last_steps(&self) -> Result<Vec<(usize, u64)>> {
+        self.run_op(COORD_OP, || self.inner.last_steps(), |_| false)
+    }
+
+    fn gc(&self) -> Result<()> {
+        self.run_op(COORD_OP, || self.inner.gc(), |_| false)
+    }
+
+    fn flush(&self) -> Result<()> {
+        self.inner.flush()
+    }
+
+    fn retry_stats(&self) -> Option<RetryStats> {
+        Some(self.stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codistill::transport::{FaultPlan, Faulty, InProcess};
+    use crate::runtime::{Tensor, TensorMap};
+    use anyhow::{anyhow, bail};
+
+    fn ckpt(member: usize, step: u64, val: f32) -> Checkpoint {
+        let mut params = TensorMap::new();
+        params.insert("params.w", Tensor::f32(&[2], vec![val, val]).unwrap());
+        Checkpoint::new(member, step, params)
+    }
+
+    /// Scripted transport: fails the first `fail_reads` reads with the
+    /// given error builder, then behaves like its inner store.
+    struct Scripted {
+        inner: InProcess,
+        fail_reads: Mutex<u32>,
+        make_err: fn() -> anyhow::Error,
+    }
+
+    impl Scripted {
+        fn new(fail_reads: u32, make_err: fn() -> anyhow::Error) -> Self {
+            Scripted {
+                inner: InProcess::new(4),
+                fail_reads: Mutex::new(fail_reads),
+                make_err,
+            }
+        }
+    }
+
+    impl ExchangeTransport for Scripted {
+        fn kind(&self) -> TransportKind {
+            self.inner.kind()
+        }
+        fn publish(&self, ckpt: Checkpoint) -> Result<()> {
+            self.inner.publish(ckpt)
+        }
+        fn fetch(&self, spec: &FetchSpec) -> Result<Option<FetchResult>> {
+            let mut left = self.fail_reads.lock().unwrap();
+            if *left > 0 {
+                *left -= 1;
+                return Err((self.make_err)());
+            }
+            self.inner.fetch(spec)
+        }
+        fn members(&self) -> Result<Vec<usize>> {
+            self.inner.members()
+        }
+        fn gc(&self) -> Result<()> {
+            self.inner.gc()
+        }
+    }
+
+    #[test]
+    fn classifies_known_error_shapes() {
+        use std::io::{Error as IoError, ErrorKind};
+        let torn = anyhow::Error::from(IoError::new(ErrorKind::UnexpectedEof, "torn"))
+            .context("reading DELTA reply");
+        assert_eq!(classify_error(&torn), ErrorClass::Transient);
+        let refused =
+            anyhow::Error::from(IoError::new(ErrorKind::ConnectionRefused, "refused"))
+                .context("connecting 127.0.0.1:1");
+        assert_eq!(classify_error(&refused), ErrorClass::Transient);
+        let injected = anyhow!("injected fetch error for member 3 (read op 7)");
+        assert_eq!(classify_error(&injected), ErrorClass::Transient);
+        let closed = anyhow!("exchange server closed the connection");
+        assert_eq!(classify_error(&closed), ErrorClass::Transient);
+        let corrupt = anyhow!(
+            "window \"params.w\" digest 0x01 does not match table digest 0x02 — corrupt delta payload"
+        );
+        assert_eq!(classify_error(&corrupt), ErrorClass::Permanent);
+        let malformed = anyhow!("frame claims 10 windows but only 3 bytes remain");
+        assert_eq!(classify_error(&malformed), ErrorClass::Permanent);
+        let unknown = anyhow!("some novel failure");
+        assert_eq!(classify_error(&unknown), ErrorClass::Permanent);
+        // io beats text: a permanent marker riding an io::Error chain is
+        // still connection-shaped
+        let io_wins = anyhow::Error::from(IoError::new(ErrorKind::ConnectionReset, "reset"))
+            .context("bad response status said the peer");
+        assert_eq!(classify_error(&io_wins), ErrorClass::Transient);
+    }
+
+    #[test]
+    fn transient_errors_are_absorbed_and_accounted() {
+        let scripted = Arc::new(Scripted::new(2, || {
+            anyhow!("injected fetch error for member 0 (read op 0)")
+        }));
+        scripted.publish(ckpt(0, 5, 1.0)).unwrap();
+        let retry = Retry::wrap(scripted, RetryPolicy::immediate(5, 1));
+        let got = retry.latest(0).unwrap().unwrap();
+        assert_eq!(got.step, 5);
+        let s = retry.stats();
+        assert_eq!((s.ops, s.attempts), (1, 3));
+        assert_eq!((s.transient_errors, s.absorbed, s.exhausted), (2, 1, 0));
+        assert_eq!(s.permanent_errors, 0);
+        assert_eq!(
+            retry.retry_log_text(),
+            "0 0 1 transient\n0 0 2 transient\n0 0 3 absorbed\n"
+        );
+    }
+
+    #[test]
+    fn permanent_errors_surface_without_retry() {
+        let scripted = Arc::new(Scripted::new(99, || anyhow!("corrupt delta payload")));
+        scripted.publish(ckpt(0, 5, 1.0)).unwrap();
+        let retry = Retry::wrap(scripted.clone(), RetryPolicy::immediate(5, 1));
+        let err = retry.latest(0).unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt delta payload"));
+        let s = retry.stats();
+        assert_eq!((s.ops, s.attempts, s.permanent_errors), (1, 1, 1));
+        assert_eq!(s.transient_errors, 0);
+        // only one scripted failure consumed: no second attempt happened
+        assert_eq!(*scripted.fail_reads.lock().unwrap(), 98);
+    }
+
+    #[test]
+    fn exhausted_budget_surfaces_the_transient_error() {
+        let scripted = Arc::new(Scripted::new(99, || {
+            anyhow!("injected fetch error for member 0 (read op 0)")
+        }));
+        scripted.publish(ckpt(0, 5, 1.0)).unwrap();
+        let retry = Retry::wrap(scripted, RetryPolicy::immediate(3, 1));
+        assert!(retry.latest(0).is_err());
+        let s = retry.stats();
+        assert_eq!((s.ops, s.attempts), (1, 3));
+        assert_eq!((s.transient_errors, s.absorbed, s.exhausted), (3, 0, 1));
+    }
+
+    #[test]
+    fn empty_reads_retry_under_the_policy_and_give_up_clean() {
+        let store = Arc::new(InProcess::new(4));
+        let retry = Retry::wrap(store.clone(), RetryPolicy::immediate(3, 1));
+        // never-published member: retried, then surfaces as None
+        assert!(retry.latest(0).unwrap().is_none());
+        let s = retry.stats();
+        assert_eq!((s.ops, s.attempts), (1, 3));
+        assert_eq!((s.empty_retries, s.exhausted_empty), (3, 1));
+        // retry_none off: one attempt, straight None
+        let no_retry = Retry::wrap(
+            store,
+            RetryPolicy {
+                retry_none: false,
+                ..RetryPolicy::immediate(3, 1)
+            },
+        );
+        assert!(no_retry.latest(0).unwrap().is_none());
+        assert_eq!(no_retry.stats().attempts, 1);
+    }
+
+    #[test]
+    fn absorbs_faulty_drops_and_errors_deterministically() {
+        let run = |seed: u64| {
+            let faulty = Arc::new(Faulty::wrap(
+                Arc::new(InProcess::new(4)),
+                FaultPlan::new(seed)
+                    .with_dropped_fetches(0.25)
+                    .with_erroring_fetches(0.15),
+            ));
+            faulty.publish(ckpt(0, 7, 1.0)).unwrap();
+            let retry = Retry::wrap(faulty.clone(), RetryPolicy::immediate(5, seed));
+            let mut ok = 0;
+            for _ in 0..64 {
+                if retry.latest(0).unwrap().is_some() {
+                    ok += 1;
+                }
+            }
+            (ok, retry.stats(), retry.retry_log_text(), faulty.fault_log_text())
+        };
+        let (ok1, s1, rlog1, flog1) = run(9);
+        let (ok2, s2, rlog2, flog2) = run(9);
+        assert_eq!(ok1, 64, "retry failed to absorb independent faults");
+        assert!(s1.transient_errors + s1.empty_retries > 0, "no faults fired");
+        assert!(s1.absorption_rate() >= 0.9, "absorption {}", s1.absorption_rate());
+        // byte-identical replay of both logs
+        assert_eq!((s1, rlog1.as_bytes(), flog1.as_bytes()), (s2, rlog2.as_bytes(), flog2.as_bytes()));
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_bounded() {
+        let p = RetryPolicy {
+            base_delay: Duration::from_millis(4),
+            max_delay: Duration::from_millis(10),
+            jitter: 0.5,
+            seed: 3,
+            ..RetryPolicy::default()
+        };
+        // no delay before the first attempt
+        assert_eq!(p.backoff(0, 1), Duration::ZERO);
+        for op in 0..8u64 {
+            for attempt in 2..=6u32 {
+                let a = p.backoff(op, attempt);
+                let b = p.backoff(op, attempt);
+                assert_eq!(a, b, "backoff not deterministic");
+                assert!(a <= p.max_delay, "backoff {a:?} over cap");
+                // jitter 0.5 keeps at least half the exponential delay
+                let floor = Duration::from_secs_f64(
+                    (p.base_delay.as_secs_f64() * f64::from(2u32.pow(attempt - 2)))
+                        .min(p.max_delay.as_secs_f64())
+                        * 0.5,
+                );
+                assert!(a >= floor, "backoff {a:?} under jitter floor {floor:?}");
+            }
+        }
+        // different ops jitter differently
+        assert_ne!(p.backoff(0, 3), p.backoff(1, 3));
+    }
+
+    #[test]
+    fn slow_failed_attempts_count_transient_past_the_deadline() {
+        struct Slow;
+        impl ExchangeTransport for Slow {
+            fn kind(&self) -> TransportKind {
+                TransportKind::InProcess
+            }
+            fn publish(&self, _: Checkpoint) -> Result<()> {
+                Ok(())
+            }
+            fn fetch(&self, _: &FetchSpec) -> Result<Option<FetchResult>> {
+                std::thread::sleep(Duration::from_millis(5));
+                bail!("some novel failure"); // would classify permanent
+            }
+            fn members(&self) -> Result<Vec<usize>> {
+                Ok(vec![])
+            }
+            fn gc(&self) -> Result<()> {
+                Ok(())
+            }
+        }
+        let retry = Retry::wrap(
+            Arc::new(Slow),
+            RetryPolicy {
+                attempt_deadline: Some(Duration::from_millis(1)),
+                ..RetryPolicy::immediate(2, 1)
+            },
+        );
+        assert!(retry.latest(0).is_err());
+        let s = retry.stats();
+        // both attempts ran: the deadline reclassified the failure
+        assert_eq!((s.attempts, s.transient_errors, s.permanent_errors), (2, 2, 0));
+    }
+
+    #[test]
+    fn flush_and_stats_thread_through_the_stack() {
+        let store = Arc::new(InProcess::new(4));
+        let faulty = Arc::new(Faulty::wrap(
+            store.clone(),
+            FaultPlan::new(2).with_delayed_publishes(1.0),
+        ));
+        let retry = Retry::wrap(faulty, RetryPolicy::immediate(3, 0));
+        retry.publish(ckpt(0, 10, 1.0)).unwrap();
+        assert!(store.latest(0).is_none(), "delayed publish leaked");
+        // flush() reaches Faulty::flush_delayed through the Retry layer
+        retry.flush().unwrap();
+        assert_eq!(store.latest(0).unwrap().step, 10);
+        assert_eq!(retry.retry_stats().unwrap(), retry.stats());
+    }
+}

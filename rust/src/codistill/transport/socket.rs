@@ -829,6 +829,8 @@ pub struct SocketTransport {
     /// Sticky fallback: set once a capability request is rejected by a
     /// pre-capability server, so later requests skip the doomed attempt.
     legacy_peer: AtomicBool,
+    /// Per-connection response timeout (defaults to [`READ_TIMEOUT`]).
+    read_timeout: Duration,
     requests: AtomicU64,
     bytes_tx: AtomicU64,
     bytes_rx: AtomicU64,
@@ -841,6 +843,7 @@ impl SocketTransport {
             windowed: None,
             codec: Codec::Raw,
             legacy_peer: AtomicBool::new(false),
+            read_timeout: READ_TIMEOUT,
             requests: AtomicU64::new(0),
             bytes_tx: AtomicU64::new(0),
             bytes_rx: AtomicU64::new(0),
@@ -885,6 +888,17 @@ impl SocketTransport {
         self
     }
 
+    /// Bound every response read to `timeout` instead of the default
+    /// [`READ_TIMEOUT`]. A timed-out read surfaces as an `io::Error` of
+    /// kind `TimedOut`/`WouldBlock` — transient under
+    /// [`classify_error`](crate::codistill::transport::classify_error),
+    /// so a [`Retry`](crate::codistill::transport::Retry)-wrapped client
+    /// re-attempts a hung operation instead of blocking the run on it.
+    pub fn with_read_timeout(mut self, timeout: Duration) -> Self {
+        self.read_timeout = timeout;
+        self
+    }
+
     /// The codec to advertise for one spec: an explicit spec codec wins,
     /// the client default otherwise — and neither once the peer proved
     /// pre-capability.
@@ -923,14 +937,14 @@ impl SocketTransport {
             Target::Tcp(addr) => {
                 let s =
                     TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-                s.set_read_timeout(Some(READ_TIMEOUT))?;
+                s.set_read_timeout(Some(self.read_timeout))?;
                 Ok(Conn::Tcp(s))
             }
             #[cfg(unix)]
             Target::Unix(path) => {
                 let s = UnixStream::connect(path)
                     .with_context(|| format!("connecting {}", path.display()))?;
-                s.set_read_timeout(Some(READ_TIMEOUT))?;
+                s.set_read_timeout(Some(self.read_timeout))?;
                 Ok(Conn::Unix(s))
             }
         }

@@ -3,8 +3,9 @@
 
 use crate::codistill::{
     Codec, Coordinator, CoordinatorConfig, DistillSchedule, ExchangeTransport, FaultPlan, Faulty,
-    HostedMember, InProcess, LrSchedule, Member, Orchestrator, OrchestratorConfig, RunLog,
-    SocketServer, SocketTransport, SpoolDir, Topology, TransportKind,
+    HostedMember, InProcess, LrSchedule, Member, Orchestrator, OrchestratorConfig, Retry,
+    RetryPolicy, RunLog, Scenario, SocketServer, SocketTransport, SpoolDir, Topology,
+    TransportKind,
 };
 use crate::config::Settings;
 use crate::data::corpus::CorpusConfig;
@@ -228,6 +229,14 @@ pub fn make_transport(s: &Settings, history: usize) -> Result<TransportSetup> {
             if codec != Codec::Raw {
                 client = client.with_codec(codec);
             }
+            // `socket_timeout_ms=N` bounds every response read — pair
+            // with `--retry` so a hung server costs one attempt, not
+            // the run.
+            let timeout_ms = s.u64_or("socket_timeout_ms", 0)?;
+            if timeout_ms > 0 {
+                client =
+                    client.with_read_timeout(std::time::Duration::from_millis(timeout_ms));
+            }
             Ok(TransportSetup {
                 transport: Arc::new(client),
                 server,
@@ -385,6 +394,18 @@ pub fn fault_plan(s: &Settings) -> Result<Option<FaultPlan>> {
 /// teacher reloads (`--delta`), and optional deterministic fault
 /// injection (see [`fault_plan`]) over any `--transport`.
 ///
+/// `--scenario FILE` compiles a declarative churn scenario
+/// (`codistill::scenario`: `spot_wave`, `zone_outage`, `flash_crowd`,
+/// `diurnal`, `flaky_net`) into the fleet's join/downtime/cadence
+/// schedules and the fault plan; the file's `members` count (when
+/// declared) overrides `members=N`, and explicit `fault_*` settings
+/// overlay the scenario's plan (probabilities combine by max, blackouts
+/// concatenate). `--retry` (or `retry_attempts=N`) wraps the transport
+/// in a [`Retry`] decorator — `retry_base_ms=MS` and `retry_seed=N`
+/// tune the deterministic backoff — and the run summary reports the
+/// absorbed/surfaced fault accounting from
+/// [`RetryStats`](crate::codistill::RetryStats).
+///
 /// `mock=true` hosts the deterministic
 /// [`DriftMember`](crate::testkit::DriftMember) fleet instead of LM
 /// members (no artifact bundle or XLA backend needed) with
@@ -399,8 +420,17 @@ pub fn fault_plan(s: &Settings) -> Result<Option<FaultPlan>> {
 /// monotonicity.
 pub fn cmd_coordinate(s: &Settings) -> Result<()> {
     let d = lm_defaults(s)?;
-    let n = s.usize_or("members", 2)?;
     let mock = s.bool_or("mock", false)?;
+    let base = s.usize_or("member_base", 0)?;
+    let scenario = match s.get("scenario") {
+        Some(path) => Some(Scenario::from_file(std::path::Path::new(path))?),
+        None => None,
+    };
+    let n = {
+        let n = s.usize_or("members", 2)?;
+        scenario.as_ref().map_or(n, |sc| sc.fleet_size(n))
+    };
+    let compiled = scenario.as_ref().map(|sc| sc.compile(n, base)).transpose()?;
     let topology = Topology::parse(s.str_or("topology", "full")).context("bad topology")?;
     let cfg = CoordinatorConfig {
         total_steps: d.steps,
@@ -416,17 +446,55 @@ pub fn cmd_coordinate(s: &Settings) -> Result<()> {
     };
 
     let setup = make_transport(s, s.usize_or("history", 8)?)?;
-    let (transport, faulty): (Arc<dyn ExchangeTransport>, Option<Arc<Faulty>>) =
-        match fault_plan(s)? {
-            Some(fp) => {
-                let f = Arc::new(Faulty::wrap(setup.transport.clone(), fp));
-                (f.clone() as Arc<dyn ExchangeTransport>, Some(f))
+    // Fault plan: the scenario's compiled plan, with explicit `fault_*`
+    // settings overlaid (probabilities combine by max, blackouts
+    // concatenate, an explicit `fault_seed` wins).
+    let plan = {
+        let explicit = fault_plan(s)?;
+        let from_scenario = compiled
+            .as_ref()
+            .filter(|c| c.has_faults())
+            .map(|c| c.plan.clone());
+        match (from_scenario, explicit) {
+            (None, explicit) => explicit,
+            (Some(sp), None) => Some(sp),
+            (Some(mut sp), Some(ep)) => {
+                if s.get("fault_seed").is_some() {
+                    sp.seed = ep.seed;
+                }
+                sp.delay_publish_p = sp.delay_publish_p.max(ep.delay_publish_p);
+                sp.drop_fetch_p = sp.drop_fetch_p.max(ep.drop_fetch_p);
+                sp.error_fetch_p = sp.error_fetch_p.max(ep.error_fetch_p);
+                sp.stale_read_p = sp.stale_read_p.max(ep.stale_read_p);
+                sp.blackouts.extend(ep.blackouts);
+                Some(sp)
             }
-            None => (setup.transport.clone(), None),
+        }
+    };
+    let (transport, faulty): (Arc<dyn ExchangeTransport>, Option<Arc<Faulty>>) = match plan {
+        Some(fp) => {
+            let f = Arc::new(Faulty::wrap(setup.transport.clone(), fp));
+            (f.clone() as Arc<dyn ExchangeTransport>, Some(f))
+        }
+        None => (setup.transport.clone(), None),
+    };
+    // `--retry` (or any retry_* knob) wraps the stack in the retrying
+    // decorator — outermost, so injected faults exercise the retry loop.
+    let want_retry = s.bool_or("retry", false)? || s.get("retry_attempts").is_some();
+    let transport: Arc<dyn ExchangeTransport> = if want_retry {
+        let policy = RetryPolicy {
+            max_attempts: s.u64_or("retry_attempts", 5)? as u32,
+            base_delay: std::time::Duration::from_millis(s.u64_or("retry_base_ms", 1)?),
+            seed: s.u64_or("retry_seed", d.seed)?,
+            ..RetryPolicy::default()
         };
+        Arc::new(Retry::wrap(transport, policy))
+    } else {
+        transport
+    };
     if d.verbose {
         eprintln!(
-            "[coordinate] transport: {}{}{}{}",
+            "[coordinate] transport: {}{}{}{}{}",
             setup.kind.name(),
             if d.delta { " (+delta)" } else { "" },
             if setup.codec != Codec::Raw {
@@ -434,11 +502,21 @@ pub fn cmd_coordinate(s: &Settings) -> Result<()> {
             } else {
                 ""
             },
-            if faulty.is_some() { " (+faults)" } else { "" }
+            if faulty.is_some() { " (+faults)" } else { "" },
+            if want_retry { " (+retry)" } else { "" }
         );
+        if let Some(sc) = &scenario {
+            // Analytic price of each scenario event before the run.
+            let m = ClusterModel {
+                reload_interval: d.reload,
+                ..ClusterModel::gpu_cluster(n.max(1), 40_000_000)
+            };
+            for (name, cost) in sc.price(&m, n, d.steps) {
+                eprintln!("[coordinate] scenario {name}: ~{cost:.2}s modeled extra cost");
+            }
+        }
     }
 
-    let base = s.usize_or("member_base", 0)?;
     let intervals = u64_list(s, "publish_intervals")?;
     let offsets = u64_list(s, "publish_offsets")?;
     let delays = u64_list(s, "join_delays")?;
@@ -479,6 +557,11 @@ pub fn cmd_coordinate(s: &Settings) -> Result<()> {
         h.join_delay = delays.get(g).copied().unwrap_or(0);
         hosted.push(h);
     }
+    // Scenario schedules (downtimes, joins, cadences) overlay the
+    // per-member flags.
+    if let Some(c) = &compiled {
+        c.apply(&mut hosted);
+    }
 
     let coord = Coordinator::new(cfg, transport);
     let log = coord.run(&mut hosted)?;
@@ -502,6 +585,19 @@ pub fn cmd_coordinate(s: &Settings) -> Result<()> {
     }
     if let Some(f) = &faulty {
         println!("[coordinate] injected faults: {}", f.fault_log().len());
+    }
+    if let Some(r) = &log.retry {
+        println!(
+            "[coordinate] retry: ops={} attempts={} transient={} absorbed={} exhausted={} \
+             permanent={} absorption={:.3}",
+            r.ops,
+            r.attempts,
+            r.transient_errors,
+            r.absorbed,
+            r.exhausted + r.exhausted_empty,
+            r.permanent_errors,
+            r.absorption_rate()
+        );
     }
     drop(setup);
     Ok(())

@@ -255,6 +255,54 @@ impl ClusterModel {
             expected_staleness_steps: staleness,
         }
     }
+
+    // ------------------------------------------- churn-scenario pricing
+    //
+    // Analytic wall-clock price of the `codistill::scenario` patterns,
+    // so a scenario file can be costed before it is run (the same role
+    // `coordinator_run_time` plays for a healthy run). Each returns the
+    // *extra* seconds the pattern adds on top of a fault-free run.
+
+    /// A spot-preemption wave: `victims` members each lose
+    /// `mean_down_steps` steps of compute, then pay a bootstrap read plus
+    /// a rejoin publish when they come back.
+    pub fn preemption_wave_cost(&self, victims: usize, mean_down_steps: f64) -> f64 {
+        let rejoin = 2.0 * self.model_bytes as f64 / self.bandwidth_bps + self.latency_s;
+        victims as f64 * (mean_down_steps.max(0.0) * self.compute_mean_s + rejoin)
+    }
+
+    /// A zone blackout: `zone_members` keep training but every
+    /// publication over the `window_steps` window is dropped — the writes
+    /// are wasted, and each member pays one full catch-up read when the
+    /// zone comes back.
+    pub fn zone_outage_cost(&self, zone_members: usize, window_steps: u64) -> f64 {
+        let cadence = self.reload_interval.max(1) as f64;
+        let wasted_writes = (window_steps as f64 / cadence).max(1.0);
+        let per_member =
+            (wasted_writes + 1.0) * self.model_bytes as f64 / self.bandwidth_bps;
+        zone_members as f64 * per_member
+    }
+
+    /// A flash crowd: `joiners` members bootstrap at once, each pulling a
+    /// full plane and publishing its own — a serialized burst on the
+    /// shared exchange link.
+    pub fn flash_crowd_cost(&self, joiners: usize) -> f64 {
+        joiners as f64 * (2.0 * self.model_bytes as f64 / self.bandwidth_bps + self.latency_s)
+    }
+
+    /// A flaky network under a retrying client: `reads` exchange reads
+    /// each fail independently with probability `fail_p` per attempt, and
+    /// the retry layer re-issues up to `max_attempts` total. The price is
+    /// the expected *extra* attempts (`E[attempts] − 1`, geometric
+    /// truncated at the budget), each costing a plane read plus a probe.
+    pub fn flaky_net_cost(&self, reads: u64, fail_p: f64, max_attempts: u32) -> f64 {
+        let p = fail_p.clamp(0.0, 0.999);
+        let k = max_attempts.max(1) as i32;
+        // E[attempts] for a truncated geometric: (1 - p^k) / (1 - p).
+        let expected_attempts = (1.0 - p.powi(k)) / (1.0 - p);
+        let extra = (expected_attempts - 1.0).max(0.0);
+        reads as f64 * extra * (self.model_bytes as f64 / self.bandwidth_bps + self.latency_s)
+    }
 }
 
 #[cfg(test)]
@@ -432,6 +480,33 @@ mod tests {
             m.coordinator_run_time(1000, &[], 3, 0).expected_staleness_steps,
             expected_staleness_steps(50, 50)
         );
+    }
+
+    #[test]
+    fn scenario_prices_scale_with_their_knobs() {
+        let m = ClusterModel::gpu_cluster(8, 40_000_000);
+        // preemption: more victims or longer downtime costs more
+        let wave = m.preemption_wave_cost(25, 25.0);
+        assert!(wave > 0.0);
+        assert!(m.preemption_wave_cost(50, 25.0) > wave);
+        assert!(m.preemption_wave_cost(25, 50.0) > wave);
+        // a zero-length preemption still prices the rejoin traffic
+        assert!(m.preemption_wave_cost(25, 0.0) > 0.0);
+        // zone outage: wider zones and longer windows cost more
+        let outage = m.zone_outage_cost(20, 40);
+        assert!(m.zone_outage_cost(40, 40) > outage);
+        assert!(m.zone_outage_cost(20, 400) > outage);
+        // flash crowd: linear in joiners
+        assert_eq!(m.flash_crowd_cost(20), 10.0 * m.flash_crowd_cost(2));
+        // flaky net: a perfect network retries nothing, and more failure
+        // costs more up to the attempt budget
+        assert_eq!(m.flaky_net_cost(100, 0.0, 5), 0.0);
+        let flaky = m.flaky_net_cost(100, 0.3, 5);
+        assert!(flaky > 0.0);
+        assert!(m.flaky_net_cost(100, 0.6, 5) > flaky);
+        assert!(m.flaky_net_cost(200, 0.3, 5) > flaky);
+        // a single-attempt budget never pays extra attempts
+        assert_eq!(m.flaky_net_cost(100, 0.3, 1), 0.0);
     }
 
     #[test]

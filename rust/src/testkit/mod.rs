@@ -14,7 +14,7 @@
 //! misbehaved along the way — exactly the property the §2.2 scenarios
 //! assert.
 
-use crate::codistill::{Checkpoint, EvalStats, Member, StepStats};
+use crate::codistill::{Checkpoint, EvalStats, HostedMember, Member, StepStats};
 use crate::prng::Pcg64;
 use crate::runtime::{Tensor, TensorMap};
 use std::sync::{Arc, Mutex};
@@ -242,9 +242,31 @@ impl Member for DriftMember {
     }
 }
 
+/// A hosted fleet of `n` [`DriftMember`]s with global ids `0..n`, each
+/// publishing every `publish_interval` local steps — the cheap
+/// O(100)-member cohort the churn-scenario tests drive through a
+/// [`Coordinator`](crate::codistill::Coordinator). Overlay join/downtime
+/// schedules with `CompiledScenario::apply` or the `HostedMember`
+/// builders.
+pub fn drift_fleet(n: usize, publish_interval: u64) -> Vec<HostedMember> {
+    (0..n)
+        .map(|i| HostedMember::new(i, Box::new(DriftMember::new(i)), publish_interval))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn drift_fleet_ids_and_cadence() {
+        let fleet = drift_fleet(100, 10);
+        assert_eq!(fleet.len(), 100);
+        assert!(fleet.iter().enumerate().all(|(i, h)| h.id == i));
+        assert!(fleet
+            .iter()
+            .all(|h| h.publish_interval == 10 && h.join_delay == 0 && h.downtimes.is_empty()));
+    }
 
     #[test]
     fn forall_passes_trivial_property() {

@@ -259,6 +259,40 @@ fn dead_member_is_dropped_from_teacher_sets_until_it_returns() {
     );
 }
 
+/// End-of-run drain: publications `Faulty` delayed past their member's
+/// final cadence still land — `Coordinator::run` flushes the transport
+/// stack before returning, so the final manifest holds every member's
+/// last checkpoint even when its very last publish drew the delay fault.
+#[test]
+fn delayed_publishes_drain_into_the_final_manifest() {
+    for seed in fault_seeds() {
+        let faulty = Arc::new(Faulty::wrap(
+            Arc::new(InProcess::new(8)),
+            FaultPlan::new(seed).with_delayed_publishes(0.6),
+        ));
+        let _ = run_over(faulty.clone(), &[]);
+        assert!(
+            faulty
+                .fault_log()
+                .iter()
+                .any(|e| e.kind == FaultKind::DelayedPublish),
+            "seed {seed}: the delay fault never fired"
+        );
+        // Every member's last checkpoint (local step 160) is in the
+        // manifest and fetchable after the drain.
+        let beats = faulty.last_steps().unwrap();
+        assert_eq!(
+            beats,
+            vec![(0, 160), (1, 160), (2, 160)],
+            "seed {seed}: final manifest incomplete"
+        );
+        for m in 0..3 {
+            let ck = faulty.latest(m).unwrap().expect("missing final checkpoint");
+            assert_eq!(ck.step, 160, "seed {seed}: member {m} fetches a stale final");
+        }
+    }
+}
+
 /// Publish-cadence skew: members on different cadences still converge,
 /// and the observed staleness actually shows the skew (samples beyond the
 /// uniform-cadence bound).

@@ -1,0 +1,205 @@
+//! Wire-level retry semantics: a server that dies mid-`DELTA` reply (or
+//! closes before replying at all) must surface a *transient* error, and a
+//! `Retry`-wrapped client must recover on its next attempt against the
+//! healthy server — with the recovered bytes identical to a clean read.
+//!
+//! The tear is staged by a byte-level proxy between client and server:
+//! it forwards length-prefixed frames verbatim until armed, then either
+//! claims the full reply length but sends only half the payload before
+//! closing (a torn frame: the client dies in `read_exact` with an
+//! `UnexpectedEof`), or closes before any reply byte (a clean close: the
+//! client sees "exchange server closed the connection").
+
+use codistill::codistill::transport::{classify_error, ErrorClass};
+use codistill::codistill::{
+    Checkpoint, ExchangeTransport, Retry, RetryPolicy, SocketServer, SocketTransport,
+};
+use codistill::runtime::{Tensor, TensorMap};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// `DELTA` request opcode (the one read `SocketTransport::fetch` speaks —
+/// see the wire table in `codistill::transport::socket`).
+const OP_DELTA: u8 = 8;
+
+fn read_frame(r: &mut impl Read) -> Option<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len).ok()?;
+    let mut buf = vec![0u8; u32::from_le_bytes(len) as usize];
+    r.read_exact(&mut buf).ok()?;
+    Some(buf)
+}
+
+fn write_frame(w: &mut impl Write, payload: &[u8]) {
+    w.write_all(&(payload.len() as u32).to_le_bytes()).unwrap();
+    w.write_all(payload).unwrap();
+    w.flush().unwrap();
+}
+
+/// Frame-aware TCP proxy: one request/response round trip per inbound
+/// connection (the client's connection model), forwarded verbatim to the
+/// upstream server unless a tear is armed.
+struct TearProxy {
+    addr: String,
+    /// Tear the next `DELTA` reply mid-payload.
+    tear_next_delta: Arc<AtomicBool>,
+    /// Close the next connection before any reply byte.
+    close_next_request: Arc<AtomicBool>,
+    /// Connections torn or closed so far.
+    torn: Arc<AtomicUsize>,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TearProxy {
+    fn start(upstream: &str) -> Self {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let upstream = upstream.to_string();
+        let tear_next_delta = Arc::new(AtomicBool::new(false));
+        let close_next_request = Arc::new(AtomicBool::new(false));
+        let torn = Arc::new(AtomicUsize::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tear, close, count, stopping) = (
+            tear_next_delta.clone(),
+            close_next_request.clone(),
+            torn.clone(),
+            stop.clone(),
+        );
+        let handle = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stopping.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(mut client) = conn else { break };
+                let Some(request) = read_frame(&mut client) else {
+                    continue;
+                };
+                if close.swap(false, Ordering::SeqCst) {
+                    // Drop the connection before any reply byte: the
+                    // client reads a clean EOF where a frame was due.
+                    count.fetch_add(1, Ordering::SeqCst);
+                    continue;
+                }
+                let mut up = TcpStream::connect(&upstream).unwrap();
+                write_frame(&mut up, &request);
+                let Some(reply) = read_frame(&mut up) else {
+                    continue;
+                };
+                if request.first() == Some(&OP_DELTA) && tear.swap(false, Ordering::SeqCst) {
+                    // Claim the full reply, deliver half, close: the
+                    // client dies mid-payload in `read_exact`.
+                    let _ = client.write_all(&(reply.len() as u32).to_le_bytes());
+                    let _ = client.write_all(&reply[..reply.len() / 2]);
+                    count.fetch_add(1, Ordering::SeqCst);
+                    continue;
+                }
+                write_frame(&mut client, &reply);
+            }
+        });
+        TearProxy {
+            addr,
+            tear_next_delta,
+            close_next_request,
+            torn,
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept so the thread observes the flag.
+        let _ = TcpStream::connect(&self.addr);
+        self.handle.take().unwrap().join().unwrap();
+    }
+}
+
+fn ckpt(member: usize, step: u64, val: f32) -> Checkpoint {
+    let mut params = TensorMap::new();
+    params.insert("params.w", Tensor::f32(&[4], vec![val; 4]).unwrap());
+    Checkpoint::new(member, step, params)
+}
+
+#[test]
+fn torn_mid_delta_reply_is_transient_and_retry_recovers() {
+    let server = SocketServer::bind_tcp("127.0.0.1:0", 8).unwrap();
+    let proxy = TearProxy::start(server.addr());
+    let client = Arc::new(SocketTransport::connect_tcp(&proxy.addr));
+
+    // Publish rides through the proxy untouched.
+    client.publish(ckpt(0, 10, 1.5)).unwrap();
+
+    // Bare client, torn reply: the error is an io UnexpectedEof somewhere
+    // in its chain, and classifies transient — retryable, not fatal.
+    proxy.tear_next_delta.store(true, Ordering::SeqCst);
+    let err = client.latest(0).unwrap_err();
+    assert_eq!(classify_error(&err), ErrorClass::Transient, "{err:#}");
+    assert!(
+        err.chain().any(|c| c
+            .downcast_ref::<std::io::Error>()
+            .is_some_and(|e| e.kind() == std::io::ErrorKind::UnexpectedEof)),
+        "no io error in the chain: {err:#}"
+    );
+
+    // Retry-wrapped client, same tear: absorbed on the second attempt
+    // against the (healthy) server, one fresh connection per attempt.
+    let retry = Arc::new(Retry::wrap(client.clone(), RetryPolicy::immediate(3, 0)));
+    proxy.tear_next_delta.store(true, Ordering::SeqCst);
+    let ck = retry.latest(0).unwrap().expect("no checkpoint after recovery");
+    assert_eq!((ck.member, ck.step), (0, 10));
+    let stats = retry.stats();
+    assert_eq!(
+        (
+            stats.ops,
+            stats.transient_errors,
+            stats.absorbed,
+            stats.exhausted,
+            stats.permanent_errors,
+        ),
+        (1, 1, 1, 0, 0),
+        "{stats:?}"
+    );
+    assert_eq!(proxy.torn.load(Ordering::SeqCst), 2);
+
+    // The recovered plane is byte-identical to a direct healthy read.
+    let direct = SocketTransport::connect_tcp(server.addr());
+    let want = direct.latest(0).unwrap().unwrap();
+    assert_eq!((want.member, want.step), (0, 10));
+    assert_eq!(
+        ck.flat().view("params.w").unwrap(),
+        want.flat().view("params.w").unwrap()
+    );
+
+    proxy.stop();
+    drop(server);
+}
+
+#[test]
+fn clean_close_before_reply_is_transient_and_recovers_too() {
+    let server = SocketServer::bind_tcp("127.0.0.1:0", 8).unwrap();
+    let proxy = TearProxy::start(server.addr());
+    let client = Arc::new(SocketTransport::connect_tcp(&proxy.addr));
+    client.publish(ckpt(3, 20, 0.25)).unwrap();
+
+    // A close with zero reply bytes is the *clean* EOF shape — no io
+    // error in the chain, classified transient by its context text.
+    proxy.close_next_request.store(true, Ordering::SeqCst);
+    let err = client.latest(3).unwrap_err();
+    assert_eq!(classify_error(&err), ErrorClass::Transient, "{err:#}");
+    assert!(
+        format!("{err:#}").contains("exchange server closed the connection"),
+        "{err:#}"
+    );
+
+    let retry = Retry::wrap(client.clone(), RetryPolicy::immediate(3, 0));
+    proxy.close_next_request.store(true, Ordering::SeqCst);
+    let ck = retry.latest(3).unwrap().expect("no checkpoint after recovery");
+    assert_eq!((ck.member, ck.step), (3, 20));
+    assert_eq!((retry.stats().absorbed, retry.stats().exhausted), (1, 0));
+
+    proxy.stop();
+    drop(server);
+}

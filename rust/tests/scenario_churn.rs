@@ -1,0 +1,263 @@
+//! The ISSUE 6 acceptance scenario: an O(100)-member coordinator fleet
+//! driven through declarative churn scenarios (`codistill::scenario`)
+//! over a `Retry`-wrapped `Faulty` socket transport. Under a spot-wave
+//! preemption plus a flaky exchange the run must land within 5% of the
+//! fault-free in-process reference, the retry layer must absorb >= 90%
+//! of the injected transient fetch faults, and the same scenario text +
+//! seed must replay byte-identical staleness, fault, and retry logs.
+//!
+//! `make test-scenarios` runs this suite over the seed list in
+//! `CODISTILL_FAULT_SEEDS` (default `11 23 47`).
+
+use codistill::codistill::transport::FaultKind;
+use codistill::codistill::{
+    CompiledScenario, Coordinator, CoordinatorConfig, CoordinatorLog, DistillSchedule,
+    ExchangeTransport, Faulty, InProcess, LrSchedule, Retry, RetryPolicy, Scenario, SocketServer,
+    SocketTransport, Topology,
+};
+use codistill::testkit::drift_fleet;
+use std::sync::Arc;
+
+/// The acceptance scenario: a quarter of the fleet preempted in one
+/// correlated wave with staggered rejoins, over an exchange that drops
+/// 20% and errors 10% of fetches.
+const SPOT_WAVE_100: &str = "\
+# spot-preemption wave over a flaky exchange, at O(100) members
+seed = 11
+members = 100
+
+[spot_wave]
+at = 30
+fraction = 0.25
+down = 25
+stagger = 1
+
+[flaky_net]
+drop_p = 0.2
+error_p = 0.1
+";
+
+fn cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        total_steps: 120,
+        reload_interval: 20,
+        eval_every: 40,
+        distill: DistillSchedule::new(20, 10, 1.0),
+        lr: LrSchedule::Constant(0.2),
+        // Ring keeps the reload fan-in at 2 teachers per member, so the
+        // 100-member fleet stays cheap over a real socket.
+        topology: Topology::Ring,
+        liveness_grace: 25,
+        seed: 5,
+        delta: false,
+        verbose: false,
+    }
+}
+
+/// Run the compiled scenario's fleet (drift members, publish every 10)
+/// over `transport`. The scenario schedules are applied; whether its
+/// fault plan is active depends on the transport stack passed in.
+fn run_fleet(compiled: &CompiledScenario, transport: Arc<dyn ExchangeTransport>) -> CoordinatorLog {
+    let mut hosted = drift_fleet(compiled.members, 10);
+    compiled.apply(&mut hosted);
+    Coordinator::new(cfg(), transport).run(&mut hosted).unwrap()
+}
+
+/// Same churn schedules, no injected faults, in-process exchange: the
+/// reference the faulty runs must converge to.
+fn fault_free_reference(compiled: &CompiledScenario) -> f64 {
+    run_fleet(compiled, Arc::new(InProcess::new(8)))
+        .final_mean_loss()
+        .unwrap()
+}
+
+fn assert_within_pct(tag: &str, got: f64, want: f64, pct: f64) {
+    let tol = want.abs() * pct / 100.0;
+    assert!(
+        (got - want).abs() <= tol,
+        "{tag}: final mean loss {got:.5} not within {pct}% of fault-free {want:.5}"
+    );
+}
+
+/// Seeds for the scenario matrix: `CODISTILL_FAULT_SEEDS="a b c"` (the
+/// `make test-scenarios` pin) or a fixed default list.
+fn fault_seeds() -> Vec<u64> {
+    std::env::var("CODISTILL_FAULT_SEEDS")
+        .ok()
+        .map(|v| v.split_whitespace().filter_map(|t| t.parse().ok()).collect::<Vec<u64>>())
+        .filter(|v: &Vec<u64>| !v.is_empty())
+        .unwrap_or_else(|| vec![11, 23, 47])
+}
+
+/// The full acceptance criterion in one test: 100 members, spot wave +
+/// flaky net, `Retry(Faulty(SocketTransport))`, vs the fault-free
+/// in-process reference.
+#[test]
+fn hundred_member_spot_wave_over_retrying_faulty_socket() {
+    let scenario = Scenario::parse(SPOT_WAVE_100).unwrap();
+    assert_eq!(scenario.fleet_size(2), 100, "file's members must win");
+    let compiled = scenario.compile(scenario.fleet_size(2), 0).unwrap();
+    let victims: Vec<usize> = compiled
+        .schedules
+        .iter()
+        .filter(|s| !s.downtimes.is_empty())
+        .map(|s| s.member)
+        .collect();
+    assert_eq!(victims.len(), 25, "round(100 * 0.25) members preempted");
+
+    let reference = fault_free_reference(&compiled);
+
+    let run_faulty = || {
+        let server = SocketServer::bind_tcp("127.0.0.1:0", 8).unwrap();
+        let client: Arc<dyn ExchangeTransport> =
+            Arc::new(SocketTransport::connect_tcp(server.addr()));
+        let faulty = Arc::new(Faulty::wrap(client, compiled.plan.clone()));
+        let retry = Arc::new(Retry::wrap(
+            faulty.clone(),
+            RetryPolicy::immediate(5, compiled.seed),
+        ));
+        let log = run_fleet(&compiled, retry.clone());
+        let texts = (
+            log.staleness_log_text(),
+            faulty.fault_log_text(),
+            retry.retry_log_text(),
+        );
+        let faults = faulty.fault_log();
+        drop(server);
+        (log, texts, faults)
+    };
+
+    let (log1, texts1, faults1) = run_faulty();
+    let (log2, texts2, _) = run_faulty();
+
+    // Convergence: within 5% of the fault-free in-process reference.
+    assert_within_pct(
+        "spot wave over retrying faulty socket",
+        log1.final_mean_loss().unwrap(),
+        reference,
+        5.0,
+    );
+
+    // Every victim went down and came back: one rejoin record apiece,
+    // after the wave started.
+    assert_eq!(log1.joins.len(), victims.len(), "{:?}", log1.joins);
+    let mut rejoined: Vec<usize> = log1.joins.iter().map(|j| j.member).collect();
+    rejoined.sort_unstable();
+    assert_eq!(rejoined, victims);
+    assert!(log1.joins.iter().all(|j| j.tick > 30), "{:?}", log1.joins);
+
+    // The flaky net really fired: dropped AND errored fetches injected.
+    let dropped = faults1.iter().filter(|e| e.kind == FaultKind::DroppedFetch).count();
+    let errored = faults1.iter().filter(|e| e.kind == FaultKind::ErroredFetch).count();
+    assert!(
+        dropped > 0 && errored > 0,
+        "fault mix missing a class: {dropped} dropped, {errored} errored"
+    );
+
+    // ... and the retry layer absorbed >= 90% of the affected operations.
+    let stats = log1.retry.expect("no retry accounting in the coordinator log");
+    assert!(stats.transient_errors > 0 && stats.absorbed > 0, "{stats:?}");
+    assert!(
+        stats.absorption_rate() >= 0.9,
+        "retry absorbed only {:.3} of {} affected ops: {stats:?}",
+        stats.absorption_rate(),
+        stats.affected_ops()
+    );
+
+    // Reproducibility: byte-identical staleness + fault + retry logs
+    // across two runs with the same scenario text and seed.
+    let (stale1, fault1, retry1) = &texts1;
+    let (stale2, fault2, retry2) = &texts2;
+    assert!(!stale1.is_empty() && !fault1.is_empty() && !retry1.is_empty());
+    assert_eq!(stale1.as_bytes(), stale2.as_bytes(), "staleness log not reproducible");
+    assert_eq!(fault1.as_bytes(), fault2.as_bytes(), "fault log not reproducible");
+    assert_eq!(retry1.as_bytes(), retry2.as_bytes(), "retry log not reproducible");
+}
+
+/// The scenario matrix over the pinned seed list: every seed's spot wave
+/// + flaky net converges and keeps absorption above the bar (in-process
+/// inner transport so the matrix stays fast).
+#[test]
+fn scenario_matrix_converges_over_every_seed() {
+    for seed in fault_seeds() {
+        let text = format!(
+            "seed = {seed}\nmembers = 24\n\n\
+             [spot_wave]\nat = 20\nfraction = 0.25\ndown = 20\nstagger = 2\n\n\
+             [flaky_net]\ndrop_p = 0.2\nerror_p = 0.1\n"
+        );
+        let compiled = Scenario::parse(&text).unwrap().compile(24, 0).unwrap();
+        let reference = fault_free_reference(&compiled);
+
+        let faulty = Arc::new(Faulty::wrap(
+            Arc::new(InProcess::new(8)),
+            compiled.plan.clone(),
+        ));
+        let retry = Arc::new(Retry::wrap(faulty, RetryPolicy::immediate(5, seed)));
+        let log = run_fleet(&compiled, retry);
+
+        assert_within_pct(
+            &format!("scenario seed {seed}"),
+            log.final_mean_loss().unwrap(),
+            reference,
+            5.0,
+        );
+        let stats = log.retry.unwrap();
+        assert!(
+            stats.absorption_rate() >= 0.9,
+            "seed {seed}: absorption {:.3} ({stats:?})",
+            stats.absorption_rate()
+        );
+    }
+}
+
+/// Flash-crowd joiners bootstrap from a *live* peer even when the
+/// freshest-looking zone is blacked out: the zone members' heartbeats
+/// freeze below the crowd's join tick, so every bootstrap source must be
+/// a non-zone member with a recent checkpoint.
+#[test]
+fn flash_crowd_bootstraps_from_live_peers_around_a_zone_outage() {
+    const TEXT: &str = "\
+seed = 7
+members = 30
+
+[zone_outage]
+zone = 0..6
+from = 40
+until = 90
+
+[flash_crowd]
+at = 60
+joiners = 5
+";
+    let compiled = Scenario::parse(TEXT).unwrap().compile(30, 0).unwrap();
+    assert_eq!(compiled.plan.blackouts.len(), 6);
+    assert!(compiled
+        .schedules
+        .iter()
+        .filter(|s| s.join_delay == 60)
+        .map(|s| s.member)
+        .eq(25..30));
+
+    let faulty = Arc::new(Faulty::wrap(
+        Arc::new(InProcess::new(8)),
+        compiled.plan.clone(),
+    ));
+    let log = run_fleet(&compiled, faulty.clone());
+
+    // The zone really went dark: its publishes in [40, 90) were dropped.
+    assert!(faulty
+        .fault_log()
+        .iter()
+        .all(|e| e.kind == FaultKind::BlackoutPublish && e.member < 6));
+    assert!(!faulty.fault_log().is_empty());
+
+    // All five joiners seeded from a live, non-zone peer with a
+    // checkpoint no older than the zone's frozen heartbeat.
+    assert_eq!(log.joins.len(), 5, "{:?}", log.joins);
+    for j in &log.joins {
+        assert!(j.member >= 25 && j.tick == 60, "{j:?}");
+        let (peer, step) = j.bootstrapped_from.expect("joiner started cold");
+        assert!(peer >= 6, "bootstrapped from blacked-out zone member {peer}");
+        assert!(step >= 50, "bootstrap checkpoint stale: step {step}");
+    }
+}
