@@ -1,7 +1,7 @@
 # Build/test/bench entry points. The Rust workspace lives in rust/ and
 # builds fully offline (vendored deps; see rust/Cargo.toml).
 
-.PHONY: build test check test-faults test-scenarios test-procs test-wire bench artifacts python-tests clean
+.PHONY: build test check test-faults test-scenarios test-procs test-wire test-serve bench bench-snapshot artifacts python-tests clean
 
 build:
 	cd rust && cargo build --release
@@ -11,8 +11,9 @@ test:
 
 # Lint + test gate: rustfmt and clippy when the toolchain ships them
 # (skipped with a notice otherwise, so `make check` works on minimal
-# toolchains), then the tier-1 test suite.
-check:
+# toolchains), then the tier-1 test suite and the serving-tier
+# integration suite.
+check: test-serve
 	cd rust && if cargo fmt --version >/dev/null 2>&1; then \
 		cargo fmt --all -- --check; \
 	else echo "make check: rustfmt unavailable, skipping fmt"; fi
@@ -57,6 +58,15 @@ test-wire:
 	cd rust && cargo test -q --lib transport::codec
 	cd rust && cargo test -q --test transport_equivalence
 
+# Serving-tier acceptance suite: the batching inference server under
+# open-loop load with >=3 checkpoint hot swaps landing mid-traffic —
+# zero failed or torn requests (every response re-derived exactly
+# against the retained checkpoints), byte-identical churn logs across
+# two same-seed runs, and the subscription loop over spool and socket
+# transports.
+test-serve:
+	cd rust && cargo test -q --test serve_hotswap
+
 # Hot-path microbenchmarks. Writes the human table to stdout and the
 # machine-readable trajectory to BENCH_hotpath.json at the repo root.
 # Includes the concurrent-vs-serial socket fetch rows
@@ -65,6 +75,14 @@ test-wire:
 # (sections.compressed_exchange) that track the window-codec layer.
 bench:
 	cd rust && cargo bench --bench perf_hotpath -- json=../BENCH_hotpath.json
+
+# Archive the current BENCH_hotpath.json under bench_history/ with a
+# UTC timestamp, so the per-PR perf trajectory keeps its raw snapshots
+# alongside the mutable head file. Run after `make bench`.
+bench-snapshot:
+	mkdir -p bench_history
+	cp BENCH_hotpath.json "bench_history/BENCH_hotpath_$$(date -u +%Y%m%dT%H%M%SZ).json"
+	ls bench_history/
 
 # AOT-lower the JAX/Pallas models to HLO-text artifact bundles consumed by
 # the Rust coordinator (needs the python env; see python/compile/aot.py).

@@ -1,0 +1,137 @@
+//! Serving with zero-downtime hot swap, end to end over a spool-dir
+//! exchange: a publisher (deterministic drift member standing in for the
+//! distilled model's training job) writes checkpoints into a shared
+//! directory; a background subscription follows them delta-aware and
+//! hot-swaps each fresh plane into a batching inference server while an
+//! open-loop load generator keeps traffic flowing. No artifacts or XLA
+//! backend needed — the mock forward runs anywhere.
+//!
+//! Run: `cargo run --release --example serve_hotswap`
+//!
+//! The same wiring is available from the CLI as `codistill serve
+//! --transport spool` (see `codistill::experiments::serve`).
+
+use codistill::codistill::serve::{
+    open_loop, InferenceServer, LoadSpec, OpenLoopSpec, ServeConfig,
+};
+use codistill::codistill::{
+    ExchangeTransport, Member, SpoolDir, SubscribeConfig, Subscription,
+};
+use codistill::models::MockForward;
+use codistill::testkit::DriftMember;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A spool-dir exchange: publisher and subscriber hold separate
+    //    handles on the same directory, exactly like two processes would.
+    let dir = std::env::temp_dir().join(format!("serve_hotswap_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let publisher: Arc<dyn ExchangeTransport> = Arc::new(SpoolDir::open(&dir, 8)?);
+    let reader: Arc<dyn ExchangeTransport> = Arc::new(SpoolDir::open(&dir, 8)?);
+
+    // 2. The inference server: micro-batching workers over an atomically
+    //    swappable plane, with a fixed probe set for churn accounting.
+    let server = Arc::new(InferenceServer::start(
+        Arc::new(MockForward::new()),
+        ServeConfig::default(),
+    ));
+
+    // 3. The subscription: follows member 0's publications (delta-aware)
+    //    and hot-swaps each verified plane into the server.
+    let mut sub = Subscription::spawn(
+        reader,
+        SubscribeConfig {
+            poll_interval: Duration::from_millis(2),
+            ..SubscribeConfig::default()
+        },
+        {
+            let server = server.clone();
+            move |ck| server.install(ck)
+        },
+    );
+
+    // 4. The publisher: five checkpoints, each gated on the previous
+    //    install so every publication becomes a distinct hot swap.
+    let wait_install = |server: &InferenceServer, step: u64| -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        while server.installed_step() != Some(step) {
+            anyhow::ensure!(
+                t0.elapsed() < Duration::from_secs(10),
+                "install of step {step} did not land"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        Ok(())
+    };
+    let mut member = DriftMember::with_frozen(0, 256);
+    for _ in 0..5 {
+        member.train_step(0.0, 0.1)?;
+    }
+    publisher.publish(member.snapshot()?)?;
+    wait_install(&server, member.steps_done())?;
+
+    let pub_handle = std::thread::spawn({
+        let (publisher, server) = (publisher.clone(), server.clone());
+        move || -> anyhow::Result<()> {
+            for _ in 0..4 {
+                std::thread::sleep(Duration::from_millis(10));
+                for _ in 0..5 {
+                    member.train_step(0.0, 0.1)?;
+                }
+                publisher.publish(member.snapshot()?)?;
+                wait_install(&server, member.steps_done())?;
+            }
+            Ok(())
+        }
+    });
+
+    // 5. Open-loop traffic across the swaps.
+    let run = open_loop(
+        &server,
+        &OpenLoopSpec {
+            load: LoadSpec {
+                requests: 2000,
+                ..LoadSpec::default()
+            },
+            rps: 10_000.0,
+        },
+    );
+    pub_handle.join().expect("publisher panicked")?;
+    sub.stop();
+    let sub_stats = sub.stats();
+    server.shutdown();
+
+    // 6. The reports.
+    println!(
+        "load: sent={} ok={} failed={} goodput={:.0} req/s",
+        run.report.sent,
+        run.report.ok,
+        run.report.failed,
+        run.report.goodput()
+    );
+    println!("latency: {}", run.report.latency.summary_ms());
+    for line in server.stats().throughput_lines("serve") {
+        println!("{line}");
+    }
+    let (churn, log) = server.churn();
+    print!("{log}");
+    println!(
+        "hot swaps: {} — churn {:.6} ± {:.6} (mean ± half-range)",
+        server.swaps(),
+        churn.mean(),
+        churn.half_range()
+    );
+    println!(
+        "subscription: polls={} installs={} delta_fetches={} windows_unchanged={}",
+        sub_stats.polls,
+        sub_stats.installs,
+        sub_stats.delta.delta_fetches,
+        sub_stats.delta.windows_unchanged
+    );
+    anyhow::ensure!(run.report.failed == 0, "hot swap dropped requests");
+    anyhow::ensure!(server.swaps() >= 4, "expected 4 mid-traffic swaps");
+    std::fs::remove_dir_all(&dir).ok();
+    println!("serve_hotswap OK");
+    Ok(())
+}

@@ -15,6 +15,10 @@
 //!   * compressed exchange: full vs delta vs delta+codec payload bytes
 //!     (CKPT0004 spool files / encoded socket DELTA frames) at the same
 //!     changed fractions — the `sections.compressed_exchange` rows;
+//!   * the serving tier (`codistill::serve`): flat-out open-loop goodput
+//!     at several micro-batch caps over the mock forward, plus the cost
+//!     of a verified hot swap landing on a live server — the
+//!     `sections.serving` rows;
 //!   * tensor<->literal boundary cost (runtime overhead);
 //!   * explicit sync-SGD group step vs fused equivalent (coordinator
 //!     overhead).
@@ -23,11 +27,14 @@
 //! skipped gracefully and recorded as `null` in the JSON, so the pure-Rust
 //! coordinator numbers are tracked even on machines without XLA.
 
+use codistill::codistill::serve::{open_loop, InferenceServer, LoadSpec, OpenLoopSpec, ServeConfig};
 use codistill::codistill::transport::{Basis, Codec, FetchSpec, ANY_STEP};
 use codistill::codistill::{
     Checkpoint, ExchangeTransport, InProcess, Member, SocketServer, SocketTransport, SpoolDir,
 };
 use codistill::config::Settings;
+use codistill::models::MockForward;
+use codistill::testkit::DriftMember;
 use codistill::data::corpus::Batcher;
 use codistill::data::shard::{ShardMode, ShardPlan};
 use codistill::experiments::common::{corpus_for, lm_member, open_bundle};
@@ -36,7 +43,7 @@ use codistill::runtime::flat::{FlatBuffer, FlatLayout};
 use codistill::runtime::{Tensor, TensorMap};
 use codistill::sgd::allreduce::{allreduce_mean, ReduceStrategy};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
     let t0 = Instant::now();
@@ -648,6 +655,74 @@ fn main() {
         )
     };
 
+    // ---- the serving tier: flat-out open-loop goodput at several
+    // micro-batch caps (rps=0 submits without pacing, so deep queues
+    // actually exercise the cap — the throughput-vs-batch-size curve),
+    // then the cost of a verified hot swap landing on a live server
+    // (digest re-check + atomic flip + churn probe: the real install
+    // path `codistill serve` pays mid-traffic).
+    let mut serving_rows: Vec<String> = Vec::new();
+    let serving_install_ms = {
+        let snap = |steps: u64| {
+            let mut m = DriftMember::with_frozen(0, 4096);
+            for _ in 0..steps {
+                m.train_step(0.0, 0.1).unwrap();
+            }
+            Arc::new(m.snapshot().unwrap())
+        };
+        for batch in [1usize, 16, 64, 256] {
+            let srv = InferenceServer::start(
+                Arc::new(MockForward::new()),
+                ServeConfig {
+                    max_batch_items: batch,
+                    max_delay: Duration::from_millis(1),
+                    workers: 2,
+                    probe: vec![],
+                },
+            );
+            srv.install(snap(1)).unwrap();
+            let spec = OpenLoopSpec {
+                load: LoadSpec {
+                    requests: 2000,
+                    seed: 7,
+                    min_features: 1,
+                    max_features: 4,
+                },
+                rps: 0.0,
+            };
+            let run = open_loop(&srv, &spec);
+            println!(
+                "serving batch={batch:>3}:       goodput {:>8.0} req/s, p50 {:>7.3} ms, p99 {:>7.3} ms",
+                run.report.goodput(),
+                run.report.latency.p50_s() * 1e3,
+                run.report.latency.p99_s() * 1e3
+            );
+            serving_rows.push(format!(
+                "{{\"max_batch_items\": {batch}, \"requests\": {}, \"goodput_rps\": {:.0}, \
+                 \"p50_ms\": {}, \"p99_ms\": {}}}",
+                run.report.sent,
+                run.report.goodput(),
+                ms(Some(run.report.latency.p50_s())),
+                ms(Some(run.report.latency.p99_s()))
+            ));
+            srv.shutdown();
+        }
+        let srv = InferenceServer::start(Arc::new(MockForward::new()), ServeConfig::default());
+        let (a, b) = (snap(3), snap(9));
+        srv.install(a.clone()).unwrap();
+        let mut flip = false;
+        let t_install = time_n(50, || {
+            flip = !flip;
+            srv.install(if flip { b.clone() } else { a.clone() }).unwrap();
+        });
+        println!(
+            "serving hot swap:        {:>8.3} ms  (digest verify + flip + churn probe)",
+            t_install * 1e3
+        );
+        srv.shutdown();
+        t_install
+    };
+
     // ---- tensor <-> literal boundary.
     let big = Tensor::f32(&[1_048_576], vec![1.0; 1_048_576]).unwrap();
     let t_lit = time_n(50, || {
@@ -673,6 +748,8 @@ fn main() {
          \"delta_exchange\": [\n      {}\n    ],\n    \
          \"compressed_exchange\": [\n      {}\n    ],\n    \
          \"socket_concurrency\": {},\n    \
+         \"serving\": {{\n      \"throughput\": [\n        {}\n      ],\n      \
+         \"hot_swap_install_ms\": {}\n    }},\n    \
          \"to_literal_ms\": {}\n  }}\n}}\n",
         ms(art.train_step),
         ms(art.teacher_predict),
@@ -689,6 +766,8 @@ fn main() {
         delta_rows.join(",\n      "),
         compressed_rows.join(",\n      "),
         sock_concurrency,
+        serving_rows.join(",\n        "),
+        ms(Some(serving_install_ms)),
         ms(Some(t_lit)),
     );
     std::fs::write(&json_path, &json).unwrap();

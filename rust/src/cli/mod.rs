@@ -21,6 +21,15 @@
 //!               `codistill::scenario`), and a retrying transport
 //!               (--retry, retry_attempts=N, retry_base_ms=MS,
 //!               retry_seed=N, socket_timeout_ms=MS)
+//!   serve       batching inference tier over the latest published
+//!               checkpoint: a subscription follows the exchange
+//!               (--transport/--delta/--compress/--retry all apply) and
+//!               hot-swaps fresh planes mid-traffic while a seeded load
+//!               generator drives requests (requests=N, rps=R,
+//!               clients=N for closed-loop, batch=N, batch_delay_ms=MS,
+//!               workers=N, publishes=N, publish_steps=N, poll_ms=MS);
+//!               reports p50/p99/p999 latency, throughput vs batch
+//!               size, and prediction churn across swaps
 //!   figures     run every experiment (fig1a/1b, fig2a/2b, fig3, fig4,
 //!               table1, sec341) and write results/*.csv
 //!   fig1|fig2|fig3|fig4|table1|sec341   run one experiment
@@ -134,7 +143,7 @@ fn settings_dump(_s: &Settings) -> Vec<String> {
 }
 
 pub fn usage() -> String {
-    "usage: codistill <train|codistill|coordinate|figures|fig1|fig2|fig3|fig4|table1|sec341|inspect> \
+    "usage: codistill <train|codistill|coordinate|serve|figures|fig1|fig2|fig3|fig4|table1|sec341|inspect> \
      [--transport inproc|spool|socket] [--delta] [--compress] [--scenario FILE] [--retry] \
      [--set key=value]... [--config FILE] [--verbose]"
         .to_string()
@@ -159,6 +168,7 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
         "train" => crate::experiments::common::cmd_train(s),
         "codistill" => crate::experiments::common::cmd_codistill(s),
         "coordinate" => crate::experiments::common::cmd_coordinate(s),
+        "serve" => crate::experiments::serve::run(s),
         "inspect" => crate::experiments::common::cmd_inspect(s),
         "fig1" => crate::experiments::fig1::run(s).map(|_| ()),
         "fig2" => crate::experiments::fig2::run(s).map(|_| ()),

@@ -55,6 +55,16 @@
 //! every failure mode a deterministic test (`codistill coordinate` from
 //! the CLI; `tests/coordinator_faults.rs` in the suite).
 //!
+//! ## The serving tier
+//!
+//! [`serve`] closes the loop from training to traffic: an
+//! [`InferenceServer`] batches requests over the distilled model's
+//! installed plane behind an atomic [`SwapHandle`], while a
+//! [`transport::subscribe`] loop follows the run's publications over
+//! any transport (delta-aware, digest-verified) and hot-swaps fresh
+//! planes in mid-traffic — zero downtime, no request ever sees a torn
+//! plane. `codistill serve` drives it from the CLI.
+//!
 //! ### A two-process spool-dir exchange
 //!
 //! ```sh
@@ -73,6 +83,7 @@ pub mod coordinator;
 pub mod orchestrator;
 pub mod scenario;
 pub mod schedule;
+pub mod serve;
 pub mod store;
 pub mod topology;
 pub mod transport;
@@ -83,12 +94,17 @@ pub use coordinator::{
 pub use orchestrator::{Orchestrator, OrchestratorConfig, RunLog};
 pub use scenario::{CompiledScenario, MemberSchedule, Scenario, ScenarioEvent};
 pub use schedule::{DistillSchedule, LrSchedule};
+pub use serve::{
+    BatchPolicy, InferRequest, InferResponse, InferenceServer, ServeConfig, ServeStats,
+    ServingModel, ServingPlane, SwapHandle,
+};
 pub use store::Checkpoint;
 pub use topology::Topology;
 pub use transport::{
     Basis, Codec, DeltaCache, DeltaStats, ExchangeTransport, FaultPlan, Faulty, FetchResult,
     FetchSpec, InProcess, Retry, RetryPolicy, RetryStats, SocketServer, SocketTransport,
-    SpoolDir, TransportKind, WindowCodec, WindowSel, WindowedFetch,
+    SpoolDir, SubscribeConfig, SubscribeStats, Subscription, TransportKind, WindowCodec,
+    WindowSel, WindowedFetch,
 };
 
 /// The zero-copy in-process store under its historical name (it was the

@@ -1,0 +1,237 @@
+//! Size- and deadline-triggered micro-batching over mixed request sizes.
+
+use super::{InferRequest, InferResponse};
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// When a waiting batch closes: when its summed feature count reaches
+/// `max_batch_items`, or its oldest request has waited `max_delay`,
+/// whichever comes first. A request larger than `max_batch_items` forms
+/// a batch of one rather than wedging the queue.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch_items: usize,
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch_items: 64,
+            max_delay: Duration::from_millis(2),
+        }
+    }
+}
+
+/// A queued request plus its response channel and arrival time.
+pub struct Pending {
+    pub req: InferRequest,
+    pub enqueued: Instant,
+    pub tx: mpsc::Sender<Result<InferResponse>>,
+}
+
+impl Pending {
+    /// Batch-item weight of this request (at least 1 so empty feature
+    /// lists still occupy a slot).
+    pub fn items(&self) -> usize {
+        self.req.features.len().max(1)
+    }
+}
+
+struct Inner {
+    q: VecDeque<Pending>,
+    closed: bool,
+}
+
+/// MPMC queue between request submitters and batch workers. Submitters
+/// push; each worker blocks in [`BatchQueue::next_batch`] until a batch
+/// is ready under the policy.
+pub struct BatchQueue {
+    inner: Mutex<Inner>,
+    /// Signaled on push and close.
+    changed: Condvar,
+}
+
+impl BatchQueue {
+    pub fn new() -> Self {
+        BatchQueue {
+            inner: Mutex::new(Inner {
+                q: VecDeque::new(),
+                closed: false,
+            }),
+            changed: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a request; hands the request back when the queue is
+    /// already closed so the caller can fail it on its own channel.
+    pub fn push(&self, p: Pending) -> std::result::Result<(), Pending> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(p);
+        }
+        inner.q.push_back(p);
+        drop(inner);
+        self.changed.notify_one();
+        Ok(())
+    }
+
+    /// No further pushes; blocked workers drain what is queued and then
+    /// observe `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.changed.notify_all();
+    }
+
+    /// Requests currently queued (observability; racy by nature).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    /// Block until a batch is ready under `policy` and return it;
+    /// `None` once the queue is closed and drained. A batch is the
+    /// longest queue prefix whose item sum stays within
+    /// `max_batch_items` (always at least one request).
+    pub fn next_batch(&self, policy: &BatchPolicy) -> Option<Vec<Pending>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.q.is_empty() {
+                if inner.closed {
+                    return None;
+                }
+                inner = self.changed.wait(inner).unwrap();
+                continue;
+            }
+            // Size up the prefix that fits.
+            let mut items = 0usize;
+            let mut take = 0usize;
+            for p in &inner.q {
+                let n = p.items();
+                if take > 0 && items + n > policy.max_batch_items {
+                    break;
+                }
+                items += n;
+                take += 1;
+                if items >= policy.max_batch_items {
+                    break;
+                }
+            }
+            let age = inner.q.front().map(|p| p.enqueued.elapsed()).unwrap_or_default();
+            if items >= policy.max_batch_items || age >= policy.max_delay || inner.closed {
+                return Some(inner.q.drain(..take).collect());
+            }
+            // Deadline-triggered: sleep until the oldest request's
+            // deadline (a push meanwhile wakes us to re-check size).
+            let remaining = policy.max_delay - age;
+            let (guard, _timeout) = self.changed.wait_timeout(inner, remaining).unwrap();
+            inner = guard;
+        }
+    }
+}
+
+impl Default for BatchQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pending(id: u64, nfeat: usize) -> (Pending, mpsc::Receiver<Result<InferResponse>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Pending {
+                req: InferRequest {
+                    id,
+                    features: (0..nfeat as u64).collect(),
+                },
+                enqueued: Instant::now(),
+                tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn size_trigger_fills_to_cap_over_mixed_sizes() {
+        let q = BatchQueue::new();
+        // 3+3+3+3 items against a cap of 8: first batch takes 2 whole
+        // requests (6 items; a third would overflow)
+        for i in 0..4 {
+            q.push(pending(i, 3).0).unwrap();
+        }
+        let policy = BatchPolicy {
+            max_batch_items: 8,
+            max_delay: Duration::from_secs(10), // size-trigger only
+        };
+        let b = q.next_batch(&policy).unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.iter().map(|p| p.items()).sum::<usize>(), 6);
+        let b = q.next_batch(&policy).unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn oversized_request_forms_a_batch_of_one() {
+        let q = BatchQueue::new();
+        q.push(pending(0, 100).0).unwrap();
+        q.push(pending(1, 1).0).unwrap();
+        let policy = BatchPolicy {
+            max_batch_items: 8,
+            max_delay: Duration::from_secs(10),
+        };
+        let b = q.next_batch(&policy).unwrap();
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].req.id, 0);
+    }
+
+    #[test]
+    fn deadline_trigger_flushes_a_partial_batch() {
+        let q = BatchQueue::new();
+        q.push(pending(0, 1).0).unwrap();
+        let policy = BatchPolicy {
+            max_batch_items: 1_000_000,
+            max_delay: Duration::from_millis(20),
+        };
+        let t0 = Instant::now();
+        let b = q.next_batch(&policy).unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(b.len(), 1);
+        assert!(waited >= Duration::from_millis(10), "flushed too early: {waited:?}");
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q = BatchQueue::new();
+        q.push(pending(0, 1).0).unwrap();
+        q.close();
+        let policy = BatchPolicy::default();
+        assert_eq!(q.next_batch(&policy).unwrap().len(), 1);
+        assert!(q.next_batch(&policy).is_none());
+        // pushes after close hand the request back
+        assert!(q.push(pending(1, 1).0).is_err());
+    }
+
+    #[test]
+    fn push_wakes_a_waiting_worker_to_fill_the_batch() {
+        use std::sync::Arc;
+        let q = Arc::new(BatchQueue::new());
+        let policy = BatchPolicy {
+            max_batch_items: 2,
+            max_delay: Duration::from_secs(5),
+        };
+        let qt = q.clone();
+        let worker = std::thread::spawn(move || qt.next_batch(&policy));
+        q.push(pending(0, 1).0).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(pending(1, 1).0).unwrap(); // completes the size trigger
+        let b = worker.join().unwrap().unwrap();
+        assert_eq!(b.len(), 2);
+    }
+}

@@ -1,0 +1,298 @@
+//! Seeded open- and closed-loop load generators over mixed request
+//! sizes.
+//!
+//! Both generators derive every request's feature list from a
+//! [`Pcg64`] stream, so request *content* is a pure function of the
+//! seed — the hot-swap acceptance test regenerates the exact request
+//! sequence offline to verify every response against the retained
+//! checkpoints. Only arrival *timing* (and therefore batching and
+//! latency) varies between runs.
+//!
+//! * [`open_loop`]: requests arrive on a fixed schedule (`rps`),
+//!   regardless of completions — queue depth grows when the server
+//!   falls behind, the configuration that actually exercises deep
+//!   batches and tail latency.
+//! * [`closed_loop`]: `clients` synchronous callers, each waiting for
+//!   its response before sending the next — concurrency is bounded by
+//!   the client count, the configuration that measures server-paced
+//!   throughput.
+
+use super::server::InferenceServer;
+use super::InferResponse;
+use crate::metrics::LatencyHistogram;
+use crate::prng::Pcg64;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Request-content shape shared by both generators.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadSpec {
+    /// Total requests to issue.
+    pub requests: u64,
+    /// Seed for the feature streams.
+    pub seed: u64,
+    /// Features per request, drawn uniformly in
+    /// `min_features..=max_features` (mixed request sizes).
+    pub min_features: usize,
+    pub max_features: usize,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        LoadSpec {
+            requests: 1000,
+            seed: 42,
+            min_features: 1,
+            max_features: 8,
+        }
+    }
+}
+
+impl LoadSpec {
+    /// The feature list of request `i` *for a given stream*: requests
+    /// are drawn in order from one generator, so the whole sequence is
+    /// re-derivable offline.
+    fn next_features(&self, rng: &mut Pcg64) -> Vec<u64> {
+        let span = (self.max_features.max(self.min_features) - self.min_features + 1) as u64;
+        let n = self.min_features + rng.below(span) as usize;
+        (0..n).map(|_| rng.next_u64()).collect()
+    }
+
+    /// Regenerate the full open-loop request sequence (request `i` ↔
+    /// submission id `i` when the generator is the only submitter).
+    pub fn open_loop_requests(&self) -> Vec<Vec<u64>> {
+        let mut rng = Pcg64::new(self.seed);
+        (0..self.requests).map(|_| self.next_features(&mut rng)).collect()
+    }
+}
+
+/// Open-loop arrival schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct OpenLoopSpec {
+    pub load: LoadSpec,
+    /// Target arrival rate, requests/second.
+    pub rps: f64,
+}
+
+/// Aggregate counters from one generator run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub sent: u64,
+    pub ok: u64,
+    pub failed: u64,
+    /// Client-observed submit→response latency.
+    pub latency: LatencyHistogram,
+    /// Wall seconds from first submit to last response.
+    pub wall_s: f64,
+}
+
+impl LoadReport {
+    /// Completed requests per wall second.
+    pub fn goodput(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.ok as f64 / self.wall_s
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+/// A run's report plus every response and error (the acceptance test
+/// audits each response against the retained checkpoints).
+pub struct LoadRun {
+    pub report: LoadReport,
+    pub responses: Vec<InferResponse>,
+    pub errors: Vec<String>,
+}
+
+/// Issue `spec.load.requests` on a fixed `spec.rps` schedule without
+/// waiting for responses, then drain them all.
+pub fn open_loop(server: &InferenceServer, spec: &OpenLoopSpec) -> LoadRun {
+    let mut rng = Pcg64::new(spec.load.seed);
+    let interval = if spec.rps > 0.0 {
+        Duration::from_secs_f64(1.0 / spec.rps)
+    } else {
+        Duration::ZERO
+    };
+    let start = Instant::now();
+    let mut rxs = Vec::with_capacity(spec.load.requests as usize);
+    for i in 0..spec.load.requests {
+        let due = start + interval.mul_f64(i as f64);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let feats = spec.load.next_features(&mut rng);
+        rxs.push(server.submit(feats).1);
+    }
+    let mut report = LoadReport {
+        sent: spec.load.requests,
+        ok: 0,
+        failed: 0,
+        latency: LatencyHistogram::new(),
+        wall_s: 0.0,
+    };
+    let mut responses = Vec::new();
+    let mut errors = Vec::new();
+    for rx in rxs {
+        match rx.recv() {
+            Ok(Ok(resp)) => {
+                report.ok += 1;
+                report.latency.record(resp.latency);
+                responses.push(resp);
+            }
+            Ok(Err(e)) => {
+                report.failed += 1;
+                errors.push(format!("{e:#}"));
+            }
+            Err(_) => {
+                report.failed += 1;
+                errors.push("response channel dropped".to_string());
+            }
+        }
+    }
+    report.wall_s = start.elapsed().as_secs_f64();
+    LoadRun {
+        report,
+        responses,
+        errors,
+    }
+}
+
+/// `clients` synchronous callers splitting `spec.requests` as evenly as
+/// possible; client `c` draws its features from stream `c` of the seed.
+pub fn closed_loop(server: &Arc<InferenceServer>, clients: usize, spec: &LoadSpec) -> LoadRun {
+    let clients = clients.max(1);
+    let start = Instant::now();
+    let mut handles = Vec::with_capacity(clients);
+    for c in 0..clients {
+        let per = spec.requests / clients as u64
+            + u64::from((c as u64) < spec.requests % clients as u64);
+        let server = server.clone();
+        let spec = *spec;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::with_stream(spec.seed, c as u64 + 1);
+            let mut latency = LatencyHistogram::new();
+            let mut responses = Vec::new();
+            let mut errors = Vec::new();
+            for _ in 0..per {
+                let feats = spec.next_features(&mut rng);
+                match server.infer(feats) {
+                    Ok(resp) => {
+                        latency.record(resp.latency);
+                        responses.push(resp);
+                    }
+                    Err(e) => errors.push(format!("{e:#}")),
+                }
+            }
+            (per, latency, responses, errors)
+        }));
+    }
+    let mut report = LoadReport {
+        sent: 0,
+        ok: 0,
+        failed: 0,
+        latency: LatencyHistogram::new(),
+        wall_s: 0.0,
+    };
+    let mut responses = Vec::new();
+    let mut errors = Vec::new();
+    for h in handles {
+        let (sent, lat, resp, errs) = h.join().expect("loadgen client panicked");
+        report.sent += sent;
+        report.ok += resp.len() as u64;
+        report.failed += errs.len() as u64;
+        report.latency.merge(&lat);
+        responses.extend(resp);
+        errors.extend(errs);
+    }
+    report.wall_s = start.elapsed().as_secs_f64();
+    LoadRun {
+        report,
+        responses,
+        errors,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codistill::serve::ServeConfig;
+    use crate::codistill::{Checkpoint, Member};
+    use crate::models::MockForward;
+    use crate::testkit::DriftMember;
+
+    fn installed_server() -> Arc<InferenceServer> {
+        let srv = InferenceServer::start(
+            Arc::new(MockForward::new()),
+            ServeConfig {
+                max_batch_items: 16,
+                max_delay: Duration::from_millis(1),
+                workers: 2,
+                probe: vec![],
+            },
+        );
+        let mut m = DriftMember::new(0);
+        for _ in 0..3 {
+            m.train_step(0.0, 0.1).unwrap();
+        }
+        srv.install(std::sync::Arc::new(m.snapshot().unwrap())).unwrap();
+        Arc::new(srv)
+    }
+
+    fn snap_of(srv: &InferenceServer) -> Arc<Checkpoint> {
+        srv.swap_handle().current().unwrap().ckpt.clone()
+    }
+
+    #[test]
+    fn open_loop_serves_everything_and_replays_content() {
+        let srv = installed_server();
+        let spec = OpenLoopSpec {
+            load: LoadSpec {
+                requests: 200,
+                seed: 7,
+                min_features: 1,
+                max_features: 6,
+            },
+            rps: 50_000.0,
+        };
+        let run = open_loop(&srv, &spec);
+        assert_eq!(run.report.sent, 200);
+        assert_eq!(run.report.ok, 200, "errors: {:?}", run.errors);
+        assert_eq!(run.report.failed, 0);
+        assert_eq!(run.report.latency.count(), 200);
+        assert!(run.report.goodput() > 0.0);
+
+        // every response re-derives exactly from the regenerated request
+        let requests = spec.load.open_loop_requests();
+        let ck = snap_of(&srv);
+        let fwd = MockForward::new();
+        for resp in &run.responses {
+            let feats = &requests[resp.id as usize];
+            assert_eq!(resp.probs, fwd.probs(&ck, feats).unwrap());
+        }
+    }
+
+    #[test]
+    fn closed_loop_splits_requests_across_clients() {
+        let srv = installed_server();
+        let run = closed_loop(
+            &srv,
+            3,
+            &LoadSpec {
+                requests: 100,
+                seed: 11,
+                min_features: 2,
+                max_features: 4,
+            },
+        );
+        assert_eq!(run.report.sent, 100);
+        assert_eq!(run.report.ok, 100, "errors: {:?}", run.errors);
+        assert_eq!(run.responses.len(), 100);
+        // mixed sizes honored
+        assert!(run
+            .responses
+            .iter()
+            .all(|r| (2..=4).contains(&r.probs.len())));
+    }
+}

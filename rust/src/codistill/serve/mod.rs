@@ -1,0 +1,117 @@
+//! The serving tier: batched inference over installed planes with
+//! zero-downtime checkpoint hot-swap.
+//!
+//! The paper's §3.5 argument — online distillation makes the *exact
+//! predictions* of a model dramatically more reproducible — only
+//! matters once something serves predictions. This module is that
+//! something: it takes the checkpoints a codistillation run publishes
+//! through any [`ExchangeTransport`](crate::codistill::ExchangeTransport)
+//! and turns them into a live prediction endpoint that follows the run.
+//!
+//! ## Architecture
+//!
+//! ```text
+//!  publisher(s)                         serving process
+//!  ───────────                          ──────────────────────────────
+//!  train → publish ──► transport ──►  Subscription (poll last_steps,
+//!                      (spool/socket/     │         DeltaCache fetch)
+//!                       inproc, ±Retry)   ▼ install (digest-verified)
+//!                                      SwapHandle ── Arc<ServingPlane>
+//!                                          │ atomic swap, never torn
+//!        clients ──► submit ──► BatchQueue ┴► worker: snapshot plane,
+//!                    (open/closed loadgen)     predict micro-batch,
+//!                                              respond {probs, step,
+//!                                               plane_digest, latency}
+//! ```
+//!
+//! * [`SwapHandle`] (in [`swap`]) owns the current
+//!   [`ServingPlane`] — an `Arc<Checkpoint>` plus its recomputed plane
+//!   digest. `install` re-hashes every window before the pointer flip,
+//!   so a corrupt or torn plane is rejected *before* any request can
+//!   observe it; readers clone the `Arc` in O(1) and are immune to
+//!   concurrent swaps.
+//! * [`BatchQueue`] (in [`batcher`]) forms size- and deadline-triggered
+//!   micro-batches over mixed request sizes: a batch closes when its
+//!   summed feature count reaches `max_batch_items` or its oldest
+//!   request has waited `max_delay`, whichever is first.
+//! * [`InferenceServer`] (in [`server`]) drives worker threads that
+//!   snapshot the plane **once per batch** — every response in a batch
+//!   is consistent with exactly one installed plane, and each response
+//!   carries the `(step, plane_digest)` it was computed against so the
+//!   property is externally checkable.
+//! * [`loadgen`] provides seeded open-loop (fixed arrival schedule,
+//!   unbounded concurrency) and closed-loop (N synchronous clients)
+//!   generators over mixed request sizes.
+//! * Swap-to-swap prediction movement is measured against a fixed probe
+//!   set and aggregated in a
+//!   [`ChurnReport`](crate::metrics::ChurnReport) — the serving-side
+//!   Table 1: how much did the endpoint's answers move when the model
+//!   under it changed?
+//!
+//! The subscription loop that feeds `install` lives with the other
+//! transport machinery as
+//! [`transport::subscribe`](crate::codistill::transport::subscribe); it
+//! reuses [`DeltaCache`](crate::codistill::DeltaCache) so steady-state
+//! updates move only changed windows, and composes with
+//! [`Retry`](crate::codistill::Retry) for lossy media.
+//!
+//! ## Mock mode
+//!
+//! [`ServingModel`] abstracts the forward pass.
+//! [`MockForward`](crate::models::MockForward) implements it as a
+//! deterministic hash-tap function of the plane bytes, so the whole
+//! tier runs without artifacts or XLA — `codistill serve` from the CLI
+//! and `tests/serve_hotswap.rs` both drive a `DriftMember` publisher
+//! against it.
+
+pub mod batcher;
+pub mod loadgen;
+pub mod server;
+pub mod swap;
+
+pub use batcher::{BatchPolicy, BatchQueue};
+pub use loadgen::{closed_loop, open_loop, LoadReport, LoadRun, LoadSpec, OpenLoopSpec};
+pub use server::{BatchBucket, InferenceServer, ServeConfig, ServeStats};
+pub use swap::{ServingPlane, SwapHandle};
+
+use crate::codistill::Checkpoint;
+use anyhow::Result;
+use std::time::Duration;
+
+/// A forward pass the serving tier can run against any installed plane.
+///
+/// Implementations must be pure in the plane: same `(ckpt, features)`
+/// must yield bit-identical probabilities, because the hot-swap tests
+/// re-derive responses offline from retained checkpoints and compare
+/// exactly. `&self` methods run concurrently from worker threads.
+pub trait ServingModel: Send + Sync + 'static {
+    /// One probability per feature id, computed against `ckpt`'s plane.
+    fn predict(&self, ckpt: &Checkpoint, features: &[u64]) -> Result<Vec<f32>>;
+}
+
+/// One inference request: a batch-mergeable bag of feature ids.
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    /// Server-assigned submission index (dense, in submit order).
+    pub id: u64,
+    /// Feature ids to score (mixed sizes across requests are expected).
+    pub features: Vec<u64>,
+}
+
+/// One served response, carrying enough provenance to audit it.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    /// Echo of [`InferRequest::id`].
+    pub id: u64,
+    /// One probability per requested feature.
+    pub probs: Vec<f32>,
+    /// Publisher step of the plane that served this request.
+    pub step: u64,
+    /// Content digest of that plane — with `step`, pins the response to
+    /// exactly one installed plane (the torn-request check).
+    pub plane_digest: u64,
+    /// Requests that shared this micro-batch (≥ 1).
+    pub batch_requests: usize,
+    /// Queue + compute time from submit to response.
+    pub latency: Duration,
+}

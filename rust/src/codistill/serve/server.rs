@@ -1,0 +1,410 @@
+//! The batching inference server: workers over a [`BatchQueue`], one
+//! plane snapshot per batch, swap-aware churn accounting.
+
+use super::batcher::{BatchPolicy, BatchQueue, Pending};
+use super::swap::SwapHandle;
+use super::{InferRequest, InferResponse, ServingModel};
+use crate::codistill::Checkpoint;
+use crate::metrics::{mean_abs_diff, ChurnReport, LatencyHistogram};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Server construction knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Batch closes at this summed feature count.
+    pub max_batch_items: usize,
+    /// …or when its oldest request has waited this long.
+    pub max_delay: Duration,
+    /// Inference worker threads.
+    pub workers: usize,
+    /// Fixed feature set evaluated on both planes at every hot swap to
+    /// measure prediction churn (the serving-side Table 1). Empty
+    /// disables churn tracking.
+    pub probe: Vec<u64>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch_items: 64,
+            max_delay: Duration::from_millis(2),
+            workers: 1,
+            probe: (0..32).collect(),
+        }
+    }
+}
+
+/// Throughput accounting for one batch-size class.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchBucket {
+    /// Requests per batch in this class.
+    pub batch_requests: usize,
+    /// Batches served at this size.
+    pub batches: u64,
+    /// Total feature items across them.
+    pub items: u64,
+    /// Worker-busy seconds spent on them.
+    pub busy_s: f64,
+}
+
+impl BatchBucket {
+    /// Items per worker-busy second at this batch size.
+    pub fn throughput(&self) -> f64 {
+        if self.busy_s > 0.0 {
+            self.items as f64 / self.busy_s
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+/// Snapshot of the server's serving-side counters.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    /// Successfully served requests.
+    pub served: u64,
+    /// Requests that failed (no plane installed, model error).
+    pub failed: u64,
+    /// Micro-batches executed.
+    pub batches: u64,
+    /// Per-request submit→response latency.
+    pub latency: LatencyHistogram,
+    /// Throughput by requests-per-batch class, ascending.
+    pub throughput: Vec<BatchBucket>,
+}
+
+impl ServeStats {
+    /// `throughput vs batch size` table lines (the CLI/report format).
+    pub fn throughput_lines(&self, tag: &str) -> Vec<String> {
+        self.throughput
+            .iter()
+            .map(|b| {
+                format!(
+                    "[{tag}] batch={:>3} req: batches={} items={} throughput={:.0} items/s",
+                    b.batch_requests,
+                    b.batches,
+                    b.items,
+                    b.throughput()
+                )
+            })
+            .collect()
+    }
+}
+
+#[derive(Default)]
+struct StatsInner {
+    served: u64,
+    failed: u64,
+    batches: u64,
+    latency: LatencyHistogram,
+    buckets: BTreeMap<usize, BatchBucket>,
+}
+
+#[derive(Default)]
+struct ChurnState {
+    report: ChurnReport,
+    /// Fixed-format, deterministic-given-the-swap-sequence log: one
+    /// line per hot swap. Replays byte-identically across same-seed
+    /// runs (the §3.5 reproducibility check, applied to serving).
+    log: String,
+}
+
+/// The batching inference server (module docs for the architecture).
+///
+/// All methods take `&self`; wrap in an `Arc` to share with loadgen
+/// client threads. Dropping the server closes the queue and joins the
+/// workers; in-flight requests drain first.
+pub struct InferenceServer {
+    model: Arc<dyn ServingModel>,
+    swap: Arc<SwapHandle>,
+    queue: Arc<BatchQueue>,
+    cfg: ServeConfig,
+    stats: Arc<Mutex<StatsInner>>,
+    churn: Mutex<ChurnState>,
+    next_id: AtomicU64,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl InferenceServer {
+    /// Spawn the worker threads and return the (not yet installed)
+    /// server. Requests submitted before the first
+    /// [`InferenceServer::install`] fail cleanly with "no plane".
+    pub fn start(model: Arc<dyn ServingModel>, cfg: ServeConfig) -> Self {
+        let swap = Arc::new(SwapHandle::new());
+        let queue = Arc::new(BatchQueue::new());
+        let stats = Arc::new(Mutex::new(StatsInner::default()));
+        let policy = BatchPolicy {
+            max_batch_items: cfg.max_batch_items,
+            max_delay: cfg.max_delay,
+        };
+        let mut handles = Vec::new();
+        for w in 0..cfg.workers.max(1) {
+            let (model, swap, queue, stats) =
+                (model.clone(), swap.clone(), queue.clone(), stats.clone());
+            let h = std::thread::Builder::new()
+                .name(format!("serve-worker-{w}"))
+                .spawn(move || worker_loop(&*model, &swap, &queue, &stats, policy))
+                .expect("spawning inference worker");
+            handles.push(h);
+        }
+        InferenceServer {
+            model,
+            swap,
+            queue,
+            cfg,
+            stats,
+            churn: Mutex::new(ChurnState::default()),
+            next_id: AtomicU64::new(0),
+            workers: Mutex::new(handles),
+        }
+    }
+
+    /// Verify and hot-swap `ckpt` in as the serving plane, recording
+    /// prediction churn against the replaced plane over the probe set.
+    /// Traffic never pauses: in-flight batches finish on the old plane,
+    /// later batches snapshot the new one.
+    pub fn install(&self, ckpt: Arc<Checkpoint>) -> Result<()> {
+        let (old, new) = self.swap.install(ckpt)?;
+        if let Some(old) = old {
+            let probe = &self.cfg.probe;
+            if !probe.is_empty() {
+                let a = self.model.predict(&old.ckpt, probe)?;
+                let b = self.model.predict(&new.ckpt, probe)?;
+                let churn = mean_abs_diff(&a, &b)?;
+                let mut c = self.churn.lock().unwrap();
+                let idx = c.report.samples.len() + 1;
+                c.log.push_str(&format!(
+                    "swap {idx}: step {} -> {} plane {:016x} -> {:016x} churn {:.9e}\n",
+                    old.ckpt.step, new.ckpt.step, old.digest, new.digest, churn
+                ));
+                c.report.push(churn);
+            }
+        }
+        Ok(())
+    }
+
+    /// Enqueue a request; returns its id and the response channel. The
+    /// id is the dense submission index (0-based, in submit order), so
+    /// a seeded load generator's requests can be re-derived offline.
+    pub fn submit(&self, features: Vec<u64>) -> (u64, mpsc::Receiver<Result<InferResponse>>) {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = mpsc::channel();
+        let p = Pending {
+            req: InferRequest { id, features },
+            enqueued: Instant::now(),
+            tx,
+        };
+        if let Err(p) = self.queue.push(p) {
+            self.stats.lock().unwrap().failed += 1;
+            p.tx.send(Err(anyhow!("server shut down"))).ok();
+        }
+        (id, rx)
+    }
+
+    /// Synchronous submit + wait.
+    pub fn infer(&self, features: Vec<u64>) -> Result<InferResponse> {
+        let (_, rx) = self.submit(features);
+        rx.recv()
+            .map_err(|_| anyhow!("server dropped the request channel"))?
+    }
+
+    /// Completed hot swaps so far.
+    pub fn swaps(&self) -> u64 {
+        self.swap.swaps()
+    }
+
+    /// Step of the plane currently serving; `None` before first install.
+    pub fn installed_step(&self) -> Option<u64> {
+        self.swap.installed_step()
+    }
+
+    /// The swap handle (for tests that race installs against traffic).
+    pub fn swap_handle(&self) -> &Arc<SwapHandle> {
+        &self.swap
+    }
+
+    /// Requests queued right now.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    /// Snapshot the serving counters.
+    pub fn stats(&self) -> ServeStats {
+        let s = self.stats.lock().unwrap();
+        ServeStats {
+            served: s.served,
+            failed: s.failed,
+            batches: s.batches,
+            latency: s.latency.clone(),
+            throughput: s.buckets.values().copied().collect(),
+        }
+    }
+
+    /// The churn-across-swaps aggregate and its replayable log text.
+    pub fn churn(&self) -> (ChurnReport, String) {
+        let c = self.churn.lock().unwrap();
+        (c.report.clone(), c.log.clone())
+    }
+
+    /// Stop accepting requests, drain the queue, join the workers.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&self) {
+        self.queue.close();
+        let mut ws = self.workers.lock().unwrap();
+        for h in ws.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(
+    model: &dyn ServingModel,
+    swap: &SwapHandle,
+    queue: &BatchQueue,
+    stats: &Mutex<StatsInner>,
+    policy: BatchPolicy,
+) {
+    while let Some(batch) = queue.next_batch(&policy) {
+        // ONE plane snapshot per batch: every response in this batch is
+        // consistent with exactly this plane, no matter how many swaps
+        // land while it computes.
+        let plane = swap.current();
+        let nreq = batch.len();
+        let items: usize = batch.iter().map(|p| p.items()).sum();
+        let t0 = Instant::now();
+        let mut ok = 0u64;
+        let mut failed = 0u64;
+        let mut latencies: Vec<Duration> = Vec::with_capacity(nreq);
+        for p in batch {
+            let res = match &plane {
+                None => Err(anyhow!("no plane installed yet")),
+                Some(pl) => model.predict(&pl.ckpt, &p.req.features).map(|probs| {
+                    let latency = p.enqueued.elapsed();
+                    InferResponse {
+                        id: p.req.id,
+                        probs,
+                        step: pl.ckpt.step,
+                        plane_digest: pl.digest,
+                        batch_requests: nreq,
+                        latency,
+                    }
+                }),
+            };
+            match &res {
+                Ok(r) => {
+                    ok += 1;
+                    latencies.push(r.latency);
+                }
+                Err(_) => failed += 1,
+            }
+            // A dropped receiver (caller gave up) is not a serve failure.
+            p.tx.send(res).ok();
+        }
+        let busy = t0.elapsed().as_secs_f64();
+        let mut s = stats.lock().unwrap();
+        s.served += ok;
+        s.failed += failed;
+        s.batches += 1;
+        for l in latencies {
+            s.latency.record(l);
+        }
+        let b = s.buckets.entry(nreq).or_insert(BatchBucket {
+            batch_requests: nreq,
+            batches: 0,
+            items: 0,
+            busy_s: 0.0,
+        });
+        b.batches += 1;
+        b.items += items as u64;
+        b.busy_s += busy;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codistill::Member;
+    use crate::models::MockForward;
+    use crate::testkit::DriftMember;
+
+    fn snap(steps: u64) -> Arc<Checkpoint> {
+        let mut m = DriftMember::new(0);
+        for _ in 0..steps {
+            m.train_step(0.0, 0.1).unwrap();
+        }
+        Arc::new(m.snapshot().unwrap())
+    }
+
+    fn server() -> InferenceServer {
+        InferenceServer::start(
+            Arc::new(MockForward::new()),
+            ServeConfig {
+                max_batch_items: 8,
+                max_delay: Duration::from_millis(1),
+                workers: 2,
+                probe: (0..16).collect(),
+            },
+        )
+    }
+
+    #[test]
+    fn serves_and_reports_provenance() {
+        let srv = server();
+        srv.install(snap(3)).unwrap();
+        let resp = srv.infer(vec![1, 2, 3]).unwrap();
+        assert_eq!(resp.probs.len(), 3);
+        assert_eq!(resp.step, 3);
+        assert!(resp.batch_requests >= 1);
+        // the response re-derives exactly from the same plane
+        let expect = MockForward::new()
+            .probs(&srv.swap_handle().current().unwrap().ckpt, &[1, 2, 3])
+            .unwrap();
+        assert_eq!(resp.probs, expect);
+        let stats = srv.stats();
+        assert_eq!(stats.served, 1);
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.latency.count(), 1);
+        assert!(!stats.throughput.is_empty());
+    }
+
+    #[test]
+    fn requests_before_install_fail_cleanly() {
+        let srv = server();
+        let err = srv.infer(vec![1]).unwrap_err();
+        assert!(format!("{err:#}").contains("no plane"), "{err:#}");
+        assert_eq!(srv.stats().failed, 1);
+        assert_eq!(srv.stats().served, 0);
+    }
+
+    #[test]
+    fn swap_records_churn_and_log_line() {
+        let srv = server();
+        srv.install(snap(2)).unwrap();
+        srv.install(snap(6)).unwrap();
+        assert_eq!(srv.swaps(), 1);
+        let (report, log) = srv.churn();
+        assert_eq!(report.samples.len(), 1);
+        assert!(report.samples[0] > 0.0, "drift between steps must move predictions");
+        assert!(log.starts_with("swap 1: step 2 -> 6 plane "), "{log}");
+        assert!(log.contains("churn"), "{log}");
+    }
+
+    #[test]
+    fn shutdown_fails_late_submits() {
+        let srv = server();
+        srv.install(snap(1)).unwrap();
+        srv.shutdown();
+        let err = srv.infer(vec![1]).unwrap_err();
+        assert!(format!("{err:#}").contains("shut down"), "{err:#}");
+    }
+}

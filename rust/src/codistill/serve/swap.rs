@@ -1,0 +1,190 @@
+//! The atomic plane-swap handle: install verified, read torn-free.
+
+use crate::codistill::Checkpoint;
+use crate::runtime::flat::content_digest;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// One installed plane plus its identity: the whole-plane content
+/// digest recomputed at install time. Responses carry `(step, digest)`
+/// so any response can be re-derived offline from the retained
+/// checkpoint and compared exactly.
+#[derive(Debug, Clone)]
+pub struct ServingPlane {
+    pub ckpt: Arc<Checkpoint>,
+    /// `content_digest` over the full flat plane, recomputed (not
+    /// adopted) when the plane was installed.
+    pub digest: u64,
+}
+
+/// Swap point between the subscription loop (writer) and the inference
+/// workers (readers).
+///
+/// Readers call [`SwapHandle::current`] once per micro-batch and hold
+/// the returned `Arc` for the batch's lifetime: the swap is a pointer
+/// flip under a briefly-held lock, so a swap concurrent with a batch
+/// leaves the batch on the old plane — consistent, never torn. Installs
+/// re-hash every window of the incoming plane against the checkpoint's
+/// remembered digest table before the flip, so bytes corrupted anywhere
+/// between the publisher and this process are rejected here and the
+/// previous plane keeps serving.
+pub struct SwapHandle {
+    current: RwLock<Option<Arc<ServingPlane>>>,
+    /// Installs that replaced an existing plane (completed hot swaps).
+    swaps: AtomicU64,
+    /// All successful installs (first install included).
+    installs: AtomicU64,
+}
+
+impl SwapHandle {
+    pub fn new() -> Self {
+        SwapHandle {
+            current: RwLock::new(None),
+            swaps: AtomicU64::new(0),
+            installs: AtomicU64::new(0),
+        }
+    }
+
+    /// Verify `ckpt`'s plane bytes and swap it in. Returns the replaced
+    /// plane (if any) and the newly installed one, so the caller can
+    /// measure prediction churn across the swap. On verification
+    /// failure the handle is untouched and keeps serving the old plane.
+    pub fn install(
+        &self,
+        ckpt: Arc<Checkpoint>,
+    ) -> Result<(Option<Arc<ServingPlane>>, Arc<ServingPlane>)> {
+        // Re-hash every window from the actual bytes and compare with
+        // the digest table the checkpoint was exchanged under. The
+        // delta path already verified moved windows at decode time;
+        // this is the last line of defense for the serving tier —
+        // whatever the medium did, the plane we point requests at
+        // hashes to what the publisher published.
+        let fresh = ckpt.flat().window_digests();
+        let remembered = ckpt.window_digests();
+        if fresh != **remembered {
+            bail!(
+                "member {} step {}: plane bytes do not match their digest table \
+                 (torn or corrupt checkpoint refused at install)",
+                ckpt.member,
+                ckpt.step
+            );
+        }
+        let digest = content_digest(ckpt.flat().data());
+        let plane = Arc::new(ServingPlane { ckpt, digest });
+        let old = {
+            let mut cur = self.current.write().unwrap();
+            std::mem::replace(&mut *cur, Some(plane.clone()))
+        };
+        self.installs.fetch_add(1, Ordering::SeqCst);
+        if old.is_some() {
+            self.swaps.fetch_add(1, Ordering::SeqCst);
+        }
+        Ok((old, plane))
+    }
+
+    /// The plane requests should be served against right now; `None`
+    /// before the first install. O(1): clones the `Arc` under a read
+    /// lock held for the duration of the clone only.
+    pub fn current(&self) -> Option<Arc<ServingPlane>> {
+        self.current.read().unwrap().clone()
+    }
+
+    /// Completed hot swaps (installs beyond the first).
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::SeqCst)
+    }
+
+    /// All successful installs.
+    pub fn installs(&self) -> u64 {
+        self.installs.load(Ordering::SeqCst)
+    }
+
+    /// Step of the currently installed plane.
+    pub fn installed_step(&self) -> Option<u64> {
+        self.current().map(|p| p.ckpt.step)
+    }
+}
+
+impl Default for SwapHandle {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codistill::Member;
+    use crate::testkit::DriftMember;
+
+    fn snap(steps: u64) -> Arc<Checkpoint> {
+        let mut m = DriftMember::new(0);
+        for _ in 0..steps {
+            m.train_step(0.0, 0.1).unwrap();
+        }
+        Arc::new(m.snapshot().unwrap())
+    }
+
+    #[test]
+    fn install_then_swap_counts_and_identity() {
+        let h = SwapHandle::new();
+        assert!(h.current().is_none());
+        assert_eq!(h.installed_step(), None);
+
+        let (old, first) = h.install(snap(2)).unwrap();
+        assert!(old.is_none());
+        assert_eq!(h.swaps(), 0);
+        assert_eq!(h.installs(), 1);
+        assert_eq!(h.installed_step(), Some(2));
+        assert_eq!(first.digest, content_digest(first.ckpt.flat().data()));
+
+        let (old, second) = h.install(snap(5)).unwrap();
+        assert_eq!(old.unwrap().ckpt.step, 2);
+        assert_eq!(h.swaps(), 1);
+        assert_eq!(h.installs(), 2);
+        assert_eq!(h.installed_step(), Some(5));
+        assert_ne!(first.digest, second.digest);
+    }
+
+    #[test]
+    fn readers_hold_old_plane_across_a_swap() {
+        let h = SwapHandle::new();
+        h.install(snap(1)).unwrap();
+        let held = h.current().unwrap();
+        h.install(snap(4)).unwrap();
+        // the held Arc still reads the old plane, byte-for-byte
+        assert_eq!(held.ckpt.step, 1);
+        assert_eq!(held.digest, content_digest(held.ckpt.flat().data()));
+        assert_eq!(h.current().unwrap().ckpt.step, 4);
+    }
+
+    #[test]
+    fn corrupt_plane_refused_and_old_keeps_serving() {
+        let h = SwapHandle::new();
+        h.install(snap(3)).unwrap();
+        let before = h.current().unwrap().digest;
+
+        // A checkpoint whose remembered digest table was adopted from a
+        // medium that lied: honest bytes, stale table (one parameter
+        // flipped after hashing).
+        let good = snap(6);
+        let honest = good.window_digests().as_ref().clone();
+        let mut flat = (**good.flat()).clone();
+        flat.data_mut()[0] += 1.0;
+        let torn = Arc::new(Checkpoint::from_flat_with_digests(
+            good.member,
+            good.step,
+            Arc::new(flat),
+            good.residual().clone(),
+            honest,
+        ));
+        let err = h.install(torn).unwrap_err();
+        assert!(format!("{err:#}").contains("torn or corrupt"), "{err:#}");
+        // the handle is untouched: old plane still serving, no swap counted
+        assert_eq!(h.installed_step(), Some(3));
+        assert_eq!(h.current().unwrap().digest, before);
+        assert_eq!(h.swaps(), 0);
+        assert_eq!(h.installs(), 1);
+    }
+}

@@ -142,6 +142,23 @@ impl Checkpoint {
         }
     }
 
+    /// Test-only: adopt `digests` as the remembered window table without
+    /// verifying it against the bytes — models a checkpoint whose table
+    /// came from a medium that lied. The serving tier's install check
+    /// (`serve::SwapHandle::install`) must refuse such a plane.
+    #[cfg(test)]
+    pub fn from_flat_with_digests(
+        member: usize,
+        step: u64,
+        flat: Arc<FlatBuffer>,
+        residual: TensorMap,
+        digests: Vec<u64>,
+    ) -> Self {
+        let ck = Self::from_flat(member, step, flat, residual);
+        let _ = ck.digests.set(Arc::new(digests));
+        ck
+    }
+
     /// The fused f32 plane (zero-copy view shared with the store).
     pub fn flat(&self) -> &Arc<FlatBuffer> {
         &self.flat

@@ -100,6 +100,7 @@ pub mod inproc;
 pub mod retry;
 pub mod socket;
 pub mod spool;
+pub mod subscribe;
 
 pub use codec::{Codec, WindowCodec};
 pub use faulty::{Blackout, FaultEvent, FaultKind, FaultPlan, Faulty};
@@ -107,6 +108,7 @@ pub use inproc::InProcess;
 pub use retry::{classify_error, ErrorClass, Retry, RetryPolicy, RetryStats};
 pub use socket::{SocketServer, SocketTransport};
 pub use spool::SpoolDir;
+pub use subscribe::{SubscribeConfig, SubscribeStats, Subscription};
 
 use crate::codistill::store::Checkpoint;
 use crate::runtime::flat::{content_digest, FlatBuffer, FlatLayout};

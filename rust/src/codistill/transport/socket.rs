@@ -123,8 +123,11 @@ const DELTA_FLAG_CODEC: u8 = 2;
 /// `checked_count` — a clean error the client falls back on.
 const FETCH_CAP_BIT: u32 = 0x8000_0000;
 
-/// Bound on concurrently served connections: accepts past the cap wait
-/// for a worker slot to free instead of spawning unboundedly.
+/// Default bound on concurrently served connections: accepts past the
+/// cap wait for a worker slot to free instead of spawning unboundedly.
+/// Per-server override via [`SocketServer::bind_tcp_with`] /
+/// [`SocketServer::bind_unix_with`] (`socket_pool=N` from the CLI) —
+/// a serving-tier loadgen fleet easily outnumbers 64 sockets.
 pub const MAX_CONNECTIONS: usize = 64;
 
 const STATUS_OK: u8 = 0;
@@ -314,13 +317,17 @@ impl Write for Conn {
 struct ConnPool {
     active: std::sync::Mutex<usize>,
     freed: std::sync::Condvar,
+    /// Slot bound for this server ([`MAX_CONNECTIONS`] unless overridden
+    /// at bind time).
+    cap: usize,
 }
 
 impl ConnPool {
-    fn new() -> Self {
+    fn new(cap: usize) -> Self {
         ConnPool {
             active: std::sync::Mutex::new(0),
             freed: std::sync::Condvar::new(),
+            cap: cap.max(1),
         }
     }
 
@@ -332,7 +339,7 @@ impl ConnPool {
     /// failing, which drops the closure holding the guard).
     fn acquire(pool: &Arc<ConnPool>, shutdown: &AtomicBool) -> Option<ConnSlot> {
         let mut n = pool.active.lock().unwrap();
-        while *n >= MAX_CONNECTIONS {
+        while *n >= pool.cap {
             if shutdown.load(Ordering::SeqCst) {
                 return None;
             }
@@ -379,18 +386,32 @@ pub struct SocketServer {
 
 impl SocketServer {
     /// Bind a TCP endpoint (`"127.0.0.1:0"` picks a free port; the
-    /// resolved address is [`SocketServer::addr`]).
+    /// resolved address is [`SocketServer::addr`]) with the default
+    /// [`MAX_CONNECTIONS`] worker pool.
     pub fn bind_tcp(addr: &str, history: usize) -> Result<Self> {
+        Self::bind_tcp_with(addr, history, MAX_CONNECTIONS)
+    }
+
+    /// [`SocketServer::bind_tcp`] with an explicit bound on concurrently
+    /// served connections (clamped to at least 1).
+    pub fn bind_tcp_with(addr: &str, history: usize, max_connections: usize) -> Result<Self> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding tcp {addr}"))?;
         let resolved = listener.local_addr()?.to_string();
-        Self::spawn(Listener::Tcp(listener), resolved, history, None)
+        Self::spawn(Listener::Tcp(listener), resolved, history, None, max_connections)
     }
 
     /// Bind a Unix-domain socket at `path` (any stale socket file is
-    /// replaced).
+    /// replaced) with the default [`MAX_CONNECTIONS`] worker pool.
     #[cfg(unix)]
     pub fn bind_unix(path: &Path, history: usize) -> Result<Self> {
+        Self::bind_unix_with(path, history, MAX_CONNECTIONS)
+    }
+
+    /// [`SocketServer::bind_unix`] with an explicit bound on
+    /// concurrently served connections (clamped to at least 1).
+    #[cfg(unix)]
+    pub fn bind_unix_with(path: &Path, history: usize, max_connections: usize) -> Result<Self> {
         std::fs::remove_file(path).ok();
         let listener = UnixListener::bind(path)
             .with_context(|| format!("binding unix socket {}", path.display()))?;
@@ -399,6 +420,7 @@ impl SocketServer {
             path.display().to_string(),
             history,
             Some(path.to_path_buf()),
+            max_connections,
         )
     }
 
@@ -407,10 +429,11 @@ impl SocketServer {
         addr: String,
         history: usize,
         unlink: Option<PathBuf>,
+        max_connections: usize,
     ) -> Result<Self> {
         let store = Arc::new(InProcess::new(history));
         let shutdown = Arc::new(AtomicBool::new(false));
-        let pool = Arc::new(ConnPool::new());
+        let pool = Arc::new(ConnPool::new(max_connections));
         let thread_store = store.clone();
         let thread_shutdown = shutdown.clone();
         let thread_pool = pool.clone();
@@ -436,6 +459,11 @@ impl SocketServer {
     /// the concurrency tests; racy by nature).
     pub fn active_connections(&self) -> usize {
         self.pool.active()
+    }
+
+    /// This server's bound on concurrently served connections.
+    pub fn max_connections(&self) -> usize {
+        self.pool.cap
     }
 
     /// The store behind the endpoint (the server process's own members
@@ -1294,6 +1322,31 @@ mod tests {
         params.insert("params.b", Tensor::f32(&[3], vals[2..5].to_vec()).unwrap());
         params.insert("params.ids", Tensor::i32(&[2], vec![4, 2]).unwrap());
         Checkpoint::new(member, step, params)
+    }
+
+    #[test]
+    fn configurable_connection_pool() {
+        // default bind uses the crate-wide cap
+        let server = SocketServer::bind_tcp("127.0.0.1:0", 4).unwrap();
+        assert_eq!(server.max_connections(), MAX_CONNECTIONS);
+        drop(server);
+
+        // explicit cap is honored and serves traffic; zero clamps to 1
+        let server = SocketServer::bind_tcp_with("127.0.0.1:0", 4, 2).unwrap();
+        assert_eq!(server.max_connections(), 2);
+        let client = SocketTransport::connect_tcp(server.addr());
+        client.publish(ckpt(0, 1, &[1.0, 2.0, 3.0, 4.0, 5.0])).unwrap();
+        assert_eq!(client.latest(0).unwrap().unwrap().step, 1);
+        drop(server);
+
+        let server = SocketServer::bind_tcp_with("127.0.0.1:0", 4, 0).unwrap();
+        assert_eq!(server.max_connections(), 1);
+        // a 1-slot pool still serves sequential clients
+        let a = SocketTransport::connect_tcp(server.addr());
+        a.publish(ckpt(0, 2, &[1.0, 2.0, 3.0, 4.0, 5.0])).unwrap();
+        drop(a);
+        let b = SocketTransport::connect_tcp(server.addr());
+        assert_eq!(b.latest(0).unwrap().unwrap().step, 2);
     }
 
     #[test]

@@ -1,0 +1,320 @@
+//! Background checkpoint subscription over any [`ExchangeTransport`].
+//!
+//! [`Subscription::spawn`] starts a thread that polls the exchange's
+//! metadata-only [`last_steps`](ExchangeTransport::last_steps)
+//! heartbeat and, whenever the watched member has published a fresher
+//! step than the last install, pulls the checkpoint and hands it to the
+//! caller's `on_install` callback — the feed behind the serving tier's
+//! hot swap (`codistill::serve`).
+//!
+//! Two properties the serving path depends on:
+//!
+//! * **Delta-aware**: with `delta` on, fetches go through a private
+//!   [`DeltaCache`], so steady-state updates move only the windows
+//!   whose content digests changed — digest-verified installs, byte-
+//!   identical to a full fetch (`stats().delta` carries the traffic
+//!   accounting). `codec` rides along exactly as it does for training
+//!   readers.
+//! * **Error-tolerant**: a failed poll, fetch, or `on_install` is
+//!   counted (`tolerated_errors`) and retried on the next tick; the
+//!   loop never dies. Wrap the transport in
+//!   [`Retry`](crate::codistill::Retry) *underneath* the subscription
+//!   for per-operation backoff on lossy media — the loop itself only
+//!   provides the outer poll cadence.
+//!
+//! Drop (or [`Subscription::stop`]) signals the thread and joins it.
+
+use super::{Codec, DeltaCache, DeltaStats, ExchangeTransport};
+use crate::codistill::Checkpoint;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Subscription knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SubscribeConfig {
+    /// Member whose publications to follow.
+    pub member: usize,
+    /// Heartbeat poll cadence.
+    pub poll_interval: Duration,
+    /// Fetch through a [`DeltaCache`] (changed windows only) instead of
+    /// whole-plane reads.
+    pub delta: bool,
+    /// Window codec advertised on delta fetches ([`Codec::Raw`] = none).
+    pub codec: Codec,
+}
+
+impl Default for SubscribeConfig {
+    fn default() -> Self {
+        SubscribeConfig {
+            member: 0,
+            poll_interval: Duration::from_millis(5),
+            delta: true,
+            codec: Codec::Raw,
+        }
+    }
+}
+
+/// Counters the loop maintains (snapshot via [`Subscription::stats`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubscribeStats {
+    /// Heartbeat polls issued.
+    pub polls: u64,
+    /// Checkpoint fetches attempted (a poll that saw a fresher step).
+    pub fetches: u64,
+    /// Successful installs handed to `on_install`.
+    pub installs: u64,
+    /// Errors absorbed (poll, fetch, or callback); the loop continued.
+    pub tolerated_errors: u64,
+    /// Delta traffic accounting (zeroed when `delta` is off).
+    pub delta: DeltaStats,
+}
+
+/// Handle to the background subscription thread.
+pub struct Subscription {
+    stop: Arc<AtomicBool>,
+    stats: Arc<Mutex<SubscribeStats>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Subscription {
+    /// Spawn the loop. `on_install` receives each freshly fetched
+    /// checkpoint exactly once, in step order; if it errors, the step
+    /// is not marked installed and is retried on the next poll.
+    pub fn spawn<F>(
+        transport: Arc<dyn ExchangeTransport>,
+        cfg: SubscribeConfig,
+        mut on_install: F,
+    ) -> Self
+    where
+        F: FnMut(Arc<Checkpoint>) -> Result<()> + Send + 'static,
+    {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(Mutex::new(SubscribeStats::default()));
+        let (t_stop, t_stats) = (stop.clone(), stats.clone());
+        let handle = std::thread::Builder::new()
+            .name(format!("ckpt-subscribe-m{}", cfg.member))
+            .spawn(move || {
+                let mut cache = cfg
+                    .delta
+                    .then(|| DeltaCache::new().with_codec(cfg.codec));
+                let mut installed: Option<u64> = None;
+                while !t_stop.load(Ordering::SeqCst) {
+                    let outcome = poll_once(
+                        transport.as_ref(),
+                        cfg.member,
+                        &mut cache,
+                        &mut installed,
+                        &mut on_install,
+                    );
+                    {
+                        let mut s = t_stats.lock().unwrap();
+                        s.polls += 1;
+                        match outcome {
+                            Ok(PollOutcome::Installed) => {
+                                s.fetches += 1;
+                                s.installs += 1;
+                            }
+                            Ok(PollOutcome::Fresh) => {}
+                            Err(fetched) => {
+                                if fetched {
+                                    s.fetches += 1;
+                                }
+                                s.tolerated_errors += 1;
+                            }
+                        }
+                        if let Some(c) = &cache {
+                            s.delta = c.stats();
+                        }
+                    }
+                    std::thread::sleep(cfg.poll_interval);
+                }
+            })
+            .expect("spawning subscription thread");
+        Subscription {
+            stop,
+            stats,
+            handle: Some(handle),
+        }
+    }
+
+    /// Snapshot the loop's counters.
+    pub fn stats(&self) -> SubscribeStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Signal the loop and join it. Idempotent; also runs on drop.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for Subscription {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+enum PollOutcome {
+    /// Nothing fresher than the installed step.
+    Fresh,
+    /// A fresher checkpoint was fetched and handed to `on_install`.
+    Installed,
+}
+
+/// One poll tick. `Err(fetched)` reports whether the failure happened
+/// at/after the fetch (for the `fetches` counter).
+fn poll_once(
+    transport: &dyn ExchangeTransport,
+    member: usize,
+    cache: &mut Option<DeltaCache>,
+    installed: &mut Option<u64>,
+    on_install: &mut impl FnMut(Arc<Checkpoint>) -> Result<()>,
+) -> std::result::Result<PollOutcome, bool> {
+    let steps = transport.last_steps().map_err(|_| false)?;
+    let fresh = steps.iter().find(|&&(m, _)| m == member).map(|&(_, s)| s);
+    let Some(step) = fresh else {
+        return Ok(PollOutcome::Fresh); // member has never published
+    };
+    if installed.is_some_and(|i| step <= i) {
+        return Ok(PollOutcome::Fresh);
+    }
+    let ck = match cache {
+        Some(c) => c.latest(transport, member).map_err(|_| true)?,
+        None => transport.latest(member).map_err(|_| true)?,
+    };
+    let Some(ck) = ck else {
+        // heartbeat raced a gc; try again next tick
+        return Ok(PollOutcome::Fresh);
+    };
+    let got = ck.step;
+    on_install(ck).map_err(|_| true)?;
+    *installed = Some(got);
+    Ok(PollOutcome::Installed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codistill::transport::InProcess;
+    use crate::codistill::Member;
+    use crate::testkit::DriftMember;
+    use std::sync::mpsc;
+
+    fn publish(t: &dyn ExchangeTransport, m: &mut DriftMember, steps: u64) {
+        for _ in 0..steps {
+            m.train_step(0.0, 0.1).unwrap();
+        }
+        t.publish(m.snapshot().unwrap()).unwrap();
+    }
+
+    fn wait_for<const N: usize>(rx: &mpsc::Receiver<u64>) -> [u64; N] {
+        let mut out = [0u64; N];
+        for slot in &mut out {
+            *slot = rx
+                .recv_timeout(Duration::from_secs(10))
+                .expect("install did not arrive");
+        }
+        out
+    }
+
+    #[test]
+    fn installs_each_fresh_step_in_order() {
+        let t: Arc<dyn ExchangeTransport> = Arc::new(InProcess::new(4));
+        let mut m = DriftMember::new(0);
+        publish(t.as_ref(), &mut m, 2);
+
+        let (tx, rx) = mpsc::channel();
+        let mut sub = Subscription::spawn(
+            t.clone(),
+            SubscribeConfig {
+                poll_interval: Duration::from_millis(1),
+                ..SubscribeConfig::default()
+            },
+            move |ck| {
+                tx.send(ck.step).unwrap();
+                Ok(())
+            },
+        );
+        let [first] = wait_for::<1>(&rx);
+        assert_eq!(first, 2);
+        // gate each publish on the previous install so no step coalesces
+        publish(t.as_ref(), &mut m, 3);
+        let [a] = wait_for::<1>(&rx);
+        assert_eq!(a, 5);
+        publish(t.as_ref(), &mut m, 3);
+        let [b] = wait_for::<1>(&rx);
+        assert_eq!(b, 8);
+
+        sub.stop();
+        let stats = sub.stats();
+        assert!(stats.installs >= 2);
+        assert!(stats.polls >= stats.installs);
+        assert_eq!(stats.tolerated_errors, 0);
+        // delta accounting rode along (first fetch counts as full)
+        assert!(stats.delta.full_fetches >= 1);
+    }
+
+    #[test]
+    fn callback_errors_are_tolerated_and_retried() {
+        let t: Arc<dyn ExchangeTransport> = Arc::new(InProcess::new(4));
+        let mut m = DriftMember::new(0);
+        publish(t.as_ref(), &mut m, 1);
+
+        let (tx, rx) = mpsc::channel();
+        let mut failed_once = false;
+        let mut sub = Subscription::spawn(
+            t.clone(),
+            SubscribeConfig {
+                poll_interval: Duration::from_millis(1),
+                delta: false,
+                ..SubscribeConfig::default()
+            },
+            move |ck| {
+                if !failed_once {
+                    failed_once = true;
+                    anyhow::bail!("transient install failure");
+                }
+                tx.send(ck.step).unwrap();
+                Ok(())
+            },
+        );
+        // the step still arrives (second attempt), exactly once
+        let [step] = wait_for::<1>(&rx);
+        assert_eq!(step, 1);
+        sub.stop();
+        let stats = sub.stats();
+        assert!(stats.tolerated_errors >= 1);
+        assert_eq!(stats.installs, 1);
+        assert_eq!(stats.delta.full_fetches, 0, "delta off ⇒ no cache accounting");
+    }
+
+    #[test]
+    fn never_published_member_is_quietly_fresh() {
+        let t: Arc<dyn ExchangeTransport> = Arc::new(InProcess::new(4));
+        let (tx, rx) = mpsc::channel::<u64>();
+        let mut sub = Subscription::spawn(
+            t,
+            SubscribeConfig {
+                member: 9,
+                poll_interval: Duration::from_millis(1),
+                ..SubscribeConfig::default()
+            },
+            move |ck| {
+                tx.send(ck.step).unwrap();
+                Ok(())
+            },
+        );
+        std::thread::sleep(Duration::from_millis(30));
+        sub.stop();
+        assert!(rx.try_recv().is_err());
+        let stats = sub.stats();
+        assert!(stats.polls > 0);
+        assert_eq!(stats.installs, 0);
+        assert_eq!(stats.tolerated_errors, 0);
+    }
+}

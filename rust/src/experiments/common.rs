@@ -175,7 +175,9 @@ pub struct TransportSetup {
 ///   `<results>/spool`); point a second process at the same directory to
 ///   exchange with it.
 /// * `socket` — connect to `socket_addr` (`host:port` or `unix:/path`);
-///   when unset, serve the exchange in-process on a loopback port.
+///   when unset, serve the exchange in-process on a loopback port
+///   (`socket_pool=N` bounds its concurrent connections, default
+///   [`MAX_CONNECTIONS`](crate::codistill::transport::socket::MAX_CONNECTIONS)).
 ///   `socket_windows=N` (default 0 = full-plane) shards teacher reloads
 ///   to N windows per fetch.
 ///
@@ -216,7 +218,16 @@ pub fn make_transport(s: &Settings, history: usize) -> Result<TransportSetup> {
             let (server, addr) = match s.get("socket_addr") {
                 Some(addr) => (None, addr.to_string()),
                 None => {
-                    let srv = SocketServer::bind_tcp("127.0.0.1:0", history)?;
+                    // `socket_pool=N` bounds the in-process server's
+                    // concurrent connections (default MAX_CONNECTIONS) —
+                    // size it to the reader fleet (e.g. a serving
+                    // loadgen) so clients don't starve against the hub.
+                    let pool = s.usize_or("socket_pool", 0)?;
+                    let srv = if pool > 0 {
+                        SocketServer::bind_tcp_with("127.0.0.1:0", history, pool)?
+                    } else {
+                        SocketServer::bind_tcp("127.0.0.1:0", history)?
+                    };
                     let addr = srv.addr().to_string();
                     (Some(srv), addr)
                 }
@@ -245,6 +256,29 @@ pub fn make_transport(s: &Settings, history: usize) -> Result<TransportSetup> {
             })
         }
     }
+}
+
+/// Wrap `transport` in the retrying decorator when `--retry` (or any
+/// `retry_*` knob) is set: `retry_attempts=N`, `retry_base_ms=MS`,
+/// `retry_seed=N` (defaulting to `default_seed`). Returns the possibly
+/// wrapped transport and whether the wrap happened. Apply outermost —
+/// injected faults and flaky media then exercise the retry loop.
+pub fn wrap_retry(
+    s: &Settings,
+    transport: Arc<dyn ExchangeTransport>,
+    default_seed: u64,
+) -> Result<(Arc<dyn ExchangeTransport>, bool)> {
+    let want = s.bool_or("retry", false)? || s.get("retry_attempts").is_some();
+    if !want {
+        return Ok((transport, false));
+    }
+    let policy = RetryPolicy {
+        max_attempts: s.u64_or("retry_attempts", 5)? as u32,
+        base_delay: std::time::Duration::from_millis(s.u64_or("retry_base_ms", 1)?),
+        seed: s.u64_or("retry_seed", default_seed)?,
+        ..RetryPolicy::default()
+    };
+    Ok((Arc::new(Retry::wrap(transport, policy)), true))
 }
 
 /// Print a run's per-member final summary.
@@ -480,18 +514,7 @@ pub fn cmd_coordinate(s: &Settings) -> Result<()> {
     };
     // `--retry` (or any retry_* knob) wraps the stack in the retrying
     // decorator — outermost, so injected faults exercise the retry loop.
-    let want_retry = s.bool_or("retry", false)? || s.get("retry_attempts").is_some();
-    let transport: Arc<dyn ExchangeTransport> = if want_retry {
-        let policy = RetryPolicy {
-            max_attempts: s.u64_or("retry_attempts", 5)? as u32,
-            base_delay: std::time::Duration::from_millis(s.u64_or("retry_base_ms", 1)?),
-            seed: s.u64_or("retry_seed", d.seed)?,
-            ..RetryPolicy::default()
-        };
-        Arc::new(Retry::wrap(transport, policy))
-    } else {
-        transport
-    };
+    let (transport, want_retry) = wrap_retry(s, transport, d.seed)?;
     if d.verbose {
         eprintln!(
             "[coordinate] transport: {}{}{}{}{}",

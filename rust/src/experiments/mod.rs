@@ -10,5 +10,6 @@ pub mod fig1;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
+pub mod serve;
 pub mod table1;
 pub mod two_phase;

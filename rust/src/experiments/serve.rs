@@ -1,0 +1,193 @@
+//! `codistill serve`: the batching inference tier end-to-end.
+//!
+//! One publisher (a deterministic [`DriftMember`] standing in for the
+//! distilled model's training job) publishes checkpoints over the
+//! selected `--transport`; a [`Subscription`] follows them (delta-aware
+//! with `--delta`, compressed with `--compress`, retrying with
+//! `--retry`) and hot-swaps each fresh plane into an
+//! [`InferenceServer`] while a seeded load generator drives traffic.
+//! Each publish is gated on the previous install landing, so every
+//! publication becomes a distinct mid-traffic hot swap.
+//!
+//! Knobs (all `--set key=value` unless a dedicated flag exists):
+//!
+//! * `publishes=N` (4), `publish_steps=N` (5), `mock_frozen=N` (256) —
+//!   the publisher's checkpoint cadence and plane size
+//! * `requests=N` (2000), `rps=R` (5000), `clients=N` (0 = open loop;
+//!   >0 runs that many closed-loop callers instead)
+//! * `batch=N` (64), `batch_delay_ms=MS` (2), `workers=N` (2),
+//!   `probe=N` (32) — server batching and churn-probe knobs
+//! * `poll_ms=MS` (2) — subscription heartbeat cadence
+//!
+//! The run prints the load report (p50/p99/p999 latency, goodput), the
+//! server's throughput-vs-batch-size table, the churn-across-swaps
+//! aggregate (mean ± half-range, the paper's Table 1 convention applied
+//! to serving), and the subscription's delta-exchange accounting.
+
+use crate::codistill::{
+    Codec, ExchangeTransport, Member, SubscribeConfig, Subscription,
+};
+use crate::codistill::serve::{
+    closed_loop, open_loop, InferenceServer, LoadSpec, OpenLoopSpec, ServeConfig,
+};
+use crate::config::Settings;
+use crate::experiments::common::{delta_stats_line, make_transport, wrap_retry};
+use crate::models::MockForward;
+use crate::testkit::DriftMember;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Wait until `cond` holds, polling every millisecond; bail after 10s.
+fn wait_until(what: &str, cond: impl Fn() -> bool) -> Result<()> {
+    let t0 = Instant::now();
+    while !cond() {
+        if t0.elapsed() > Duration::from_secs(10) {
+            bail!("timed out waiting for {what}");
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    Ok(())
+}
+
+pub fn run(s: &Settings) -> Result<()> {
+    let seed = s.u64_or("seed", 42)?;
+    let member = s.usize_or("member", 0)?;
+    let publishes = s.u64_or("publishes", 4)?;
+    let publish_steps = s.u64_or("publish_steps", 5)?;
+    let frozen = s.usize_or("mock_frozen", 256)?;
+    let delta = s.bool_or("delta", true)?;
+    let verbose = s.bool_or("verbose", false)?;
+
+    let cfg = ServeConfig {
+        max_batch_items: s.usize_or("batch", 64)?,
+        max_delay: Duration::from_millis(s.u64_or("batch_delay_ms", 2)?),
+        workers: s.usize_or("workers", 2)?,
+        probe: (0..s.u64_or("probe", 32)?).collect(),
+    };
+    let load = LoadSpec {
+        requests: s.u64_or("requests", 2000)?,
+        seed,
+        min_features: s.usize_or("min_features", 1)?,
+        max_features: s.usize_or("max_features", 8)?,
+    };
+    let clients = s.usize_or("clients", 0)?;
+    let rps = s.f64_or("rps", 5000.0)?;
+
+    let setup = make_transport(s, s.usize_or("history", 8)?)?;
+    let (transport, want_retry) = wrap_retry(s, setup.transport.clone(), seed)?;
+    if verbose {
+        eprintln!(
+            "[serve] transport: {}{}{}{}",
+            setup.kind.name(),
+            if delta { " (+delta)" } else { "" },
+            if setup.codec != Codec::Raw { " (+compress)" } else { "" },
+            if want_retry { " (+retry)" } else { "" }
+        );
+    }
+
+    let server = Arc::new(InferenceServer::start(Arc::new(MockForward::new()), cfg));
+
+    // The subscription feeds the swap handle; every verified install is
+    // a hot swap under whatever traffic is in flight.
+    let sub_server = server.clone();
+    let mut sub = Subscription::spawn(
+        transport.clone(),
+        SubscribeConfig {
+            member,
+            poll_interval: Duration::from_millis(s.u64_or("poll_ms", 2)?),
+            delta,
+            codec: setup.codec,
+        },
+        move |ck| sub_server.install(ck),
+    );
+
+    // Publisher: gate each publish on the previous install so no
+    // checkpoint coalesces into its successor — `publishes` publications
+    // become exactly `publishes` installs (`publishes - 1` swaps).
+    let (pub_transport, pub_server) = (transport.clone(), server.clone());
+    let publisher = std::thread::Builder::new()
+        .name("serve-publisher".into())
+        .spawn(move || -> Result<()> {
+            let mut m = DriftMember::with_frozen(member, frozen);
+            for _ in 0..publishes {
+                for _ in 0..publish_steps {
+                    m.train_step(0.0, 0.1)?;
+                }
+                let step = m.steps_done();
+                pub_transport.publish(m.snapshot()?)?;
+                let t0 = Instant::now();
+                while pub_server.installed_step() != Some(step) {
+                    if t0.elapsed() > Duration::from_secs(10) {
+                        bail!("install of published step {step} did not land");
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+            Ok(())
+        })
+        .expect("spawning publisher thread");
+
+    // Open traffic only once a plane is serving, so a healthy run
+    // reports zero failed requests.
+    wait_until("first checkpoint install", || {
+        server.installed_step().is_some()
+    })?;
+
+    let run = if clients > 0 {
+        closed_loop(&server, clients, &load)
+    } else {
+        open_loop(&server, &OpenLoopSpec { load, rps })
+    };
+
+    publisher.join().expect("publisher panicked")?;
+    sub.stop();
+    let sub_stats = sub.stats();
+    server.shutdown();
+
+    println!(
+        "[serve] load: sent={} ok={} failed={} goodput={:.0} req/s",
+        run.report.sent,
+        run.report.ok,
+        run.report.failed,
+        run.report.goodput()
+    );
+    println!("[serve] latency: {}", run.report.latency.summary_ms());
+    for e in run.errors.iter().take(5) {
+        eprintln!("[serve] request error: {e}");
+    }
+    let stats = server.stats();
+    println!(
+        "[serve] server: served={} failed={} batches={}",
+        stats.served, stats.failed, stats.batches
+    );
+    for line in stats.throughput_lines("serve") {
+        println!("{line}");
+    }
+    let (churn, log) = server.churn();
+    println!(
+        "[serve] hot swaps: {} over {} installs (zero downtime: every response from exactly one plane)",
+        server.swaps(),
+        sub_stats.installs
+    );
+    if !churn.samples.is_empty() {
+        println!(
+            "[serve] churn across swaps: {:.6} ± {:.6} (mean ± half-range over {} swaps)",
+            churn.mean(),
+            churn.half_range(),
+            churn.samples.len()
+        );
+    }
+    if verbose && !log.is_empty() {
+        print!("{log}");
+    }
+    println!(
+        "[serve] subscription: polls={} fetches={} installs={} tolerated_errors={}",
+        sub_stats.polls, sub_stats.fetches, sub_stats.installs, sub_stats.tolerated_errors
+    );
+    if delta {
+        delta_stats_line("serve", &sub_stats.delta);
+    }
+    drop(setup);
+    Ok(())
+}

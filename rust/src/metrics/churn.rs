@@ -89,4 +89,44 @@ mod tests {
         assert!((r.mean() - 0.03).abs() < 1e-12);
         assert!((r.half_range() - 0.01).abs() < 1e-12);
     }
+
+    #[test]
+    fn report_empty_is_nan() {
+        let r = ChurnReport::new();
+        assert!(r.samples.is_empty());
+        assert!(r.mean().is_nan());
+        assert!(r.half_range().is_nan());
+    }
+
+    #[test]
+    fn report_single_sample() {
+        let mut r = ChurnReport::default();
+        r.push(0.0125);
+        assert_eq!(r.mean(), 0.0125);
+        assert_eq!(r.half_range(), 0.0);
+    }
+
+    #[test]
+    fn identical_predictions_report_zero_churn() {
+        // two "retrains" that agree exactly (the paper's ideal) aggregate
+        // to zero mean and zero spread, not NaN or a denormal artifact
+        let preds: Vec<f32> = (0..64).map(|i| (i as f32 * 0.013).sin() * 0.5 + 0.5).collect();
+        let mut r = ChurnReport::new();
+        for _ in 0..5 {
+            r.push(mean_abs_diff(&preds, &preds).unwrap());
+        }
+        assert_eq!(r.mean(), 0.0);
+        assert_eq!(r.half_range(), 0.0);
+    }
+
+    #[test]
+    fn report_negative_and_mixed_samples_half_range() {
+        // half_range is (max-min)/2 regardless of sign or order
+        let mut r = ChurnReport::new();
+        for v in [0.5, -0.5, 0.0] {
+            r.push(v);
+        }
+        assert_eq!(r.mean(), 0.0);
+        assert_eq!(r.half_range(), 0.5);
+    }
 }

@@ -1,0 +1,210 @@
+//! Log-linear latency histogram for the serving tier (p50/p99/p999).
+//!
+//! Request latencies span four orders of magnitude between an in-memory
+//! cache hit and a queue-backed tail, so fixed-width buckets either
+//! blur the tail or waste memory on the head. [`LatencyHistogram`]
+//! buckets `log2`-style with 4 linear sub-buckets per octave (~19%
+//! relative resolution at every scale, 256 counters total) — the
+//! standard HDR-histogram compromise, sized for a serving process that
+//! records millions of samples without allocation after construction.
+//!
+//! Percentiles are bucket lower bounds, so reported values are
+//! conservative (never above the true percentile by more than one
+//! bucket width). The histogram is a plain value type; the serving
+//! tier wraps it in its own lock.
+
+use std::time::Duration;
+
+/// Sub-buckets per power of two (fixed; 4 ⇒ ≤ ~19% relative error).
+const SUBS: usize = 4;
+/// Octaves covered: 2^0 .. 2^63 nanoseconds.
+const OCTAVES: usize = 64;
+
+/// Log-linear histogram of durations with constant memory.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    total_ns: u128,
+    max_ns: u64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: vec![0; SUBS * OCTAVES],
+            count: 0,
+            total_ns: 0,
+            max_ns: 0,
+        }
+    }
+
+    fn index(ns: u64) -> usize {
+        if ns < SUBS as u64 {
+            return ns as usize; // exact for the first few nanoseconds
+        }
+        let exp = 63 - ns.leading_zeros() as usize;
+        let sub = ((ns >> (exp - 2)) & 3) as usize; // top-2 mantissa bits
+        (exp * SUBS + sub).min(SUBS * OCTAVES - 1)
+    }
+
+    /// Lower bound of the bucket at `idx` in nanoseconds (the value
+    /// percentiles report).
+    fn lower_bound(idx: usize) -> u64 {
+        if idx < SUBS {
+            return idx as u64;
+        }
+        let exp = idx / SUBS;
+        let sub = idx % SUBS;
+        (1u64 << exp) + ((sub as u64) << (exp - 2))
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.buckets[Self::index(ns)] += 1;
+        self.count += 1;
+        self.total_ns += ns as u128;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.total_ns += other.total_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean latency in seconds (NaN when empty).
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.total_ns as f64 / self.count as f64 / 1e9
+    }
+
+    /// Largest recorded sample in seconds (NaN when empty).
+    pub fn max_s(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.max_ns as f64 / 1e9
+    }
+
+    /// The `q`-quantile (`q` in [0,1]) in seconds: lower bound of the
+    /// first bucket whose cumulative count covers `q·count`. NaN when
+    /// empty.
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // rank of the target sample, 1-based; q=1.0 → the max bucket
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::lower_bound(i) as f64 / 1e9;
+            }
+        }
+        self.max_ns as f64 / 1e9
+    }
+
+    pub fn p50_s(&self) -> f64 {
+        self.quantile_s(0.50)
+    }
+
+    pub fn p99_s(&self) -> f64 {
+        self.quantile_s(0.99)
+    }
+
+    pub fn p999_s(&self) -> f64 {
+        self.quantile_s(0.999)
+    }
+
+    /// One-line rendering in milliseconds, the serving CLI's format.
+    pub fn summary_ms(&self) -> String {
+        format!(
+            "n={} p50={:.3}ms p99={:.3}ms p999={:.3}ms max={:.3}ms",
+            self.count,
+            self.p50_s() * 1e3,
+            self.p99_s() * 1e3,
+            self.p999_s() * 1e3,
+            self.max_s() * 1e3
+        )
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_nan() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert!(h.p50_s().is_nan());
+        assert!(h.mean_s().is_nan());
+        assert!(h.max_s().is_nan());
+    }
+
+    #[test]
+    fn single_sample_every_quantile() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_micros(100));
+        for q in [0.0, 0.5, 0.99, 0.999, 1.0] {
+            let v = h.quantile_s(q);
+            // lower bound of the sample's bucket: within 19% below 100µs
+            assert!(v <= 100e-6 && v >= 80e-6, "q={q} v={v}");
+        }
+        assert!((h.max_s() - 100e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bucket_bounds_are_monotone_and_tight() {
+        // lower_bound(index(ns)) <= ns for every probe, with bounded
+        // relative error
+        for shift in 0..50u64 {
+            for off in [0u64, 1, 3] {
+                let ns = (1u64 << shift).saturating_add(off << (shift.saturating_sub(3)));
+                let lb = LatencyHistogram::lower_bound(LatencyHistogram::index(ns));
+                assert!(lb <= ns, "ns={ns} lb={lb}");
+                if ns >= SUBS as u64 {
+                    assert!((ns - lb) as f64 / ns as f64 <= 0.25, "ns={ns} lb={lb}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn percentiles_order_and_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            let h = if i % 2 == 0 { &mut a } else { &mut b };
+            h.record(Duration::from_micros(i));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 1000);
+        let (p50, p99, p999) = (a.p50_s(), a.p99_s(), a.p999_s());
+        assert!(p50 <= p99 && p99 <= p999);
+        // p50 of uniform 1..=1000µs sits near 500µs (bucket lower bound)
+        assert!(p50 > 300e-6 && p50 <= 500e-6, "p50={p50}");
+        assert!(p999 > 700e-6, "p999={p999}");
+        assert!((a.mean_s() - 500.5e-6).abs() < 1e-6);
+    }
+}

@@ -1,9 +1,12 @@
-//! Metrics: CSV emission, curve summaries, churn, and ensemble scoring.
+//! Metrics: CSV emission, curve summaries, churn, serving latency, and
+//! ensemble scoring.
 
 pub mod churn;
 pub mod csv;
 pub mod ensemble;
+pub mod latency;
 
 pub use churn::{mean_abs_diff, ChurnReport};
 pub use csv::CsvWriter;
 pub use ensemble::lm_ensemble_eval;
+pub use latency::LatencyHistogram;

@@ -1,0 +1,143 @@
+//! Deterministic mock forward path for serving without artifacts/XLA.
+//!
+//! [`MockForward`] is the serving-tier counterpart of
+//! [`testkit::DriftMember`](crate::testkit::DriftMember): a cheap, fully
+//! deterministic "model" whose predictions are a pure function of
+//! (plane bytes, feature ids, salt). Each feature id seeds a splitmix64
+//! walk that taps four parameter positions in the installed plane and
+//! squashes their weighted sum into (0, 1) with a rational sigmoid —
+//! no `exp`, no tables, no allocation beyond the output vector.
+//!
+//! Two properties make it the right fixture for the hot-swap tests:
+//!
+//! * **Plane-sensitive**: any change to a tapped parameter changes the
+//!   prediction, so swapping in a fresh checkpoint visibly moves the
+//!   outputs (nonzero churn across swaps).
+//! * **Bit-reproducible**: same plane + same features ⇒ bit-identical
+//!   probabilities, so a response can be re-derived offline from the
+//!   retained checkpoint and compared exactly — the "no torn plane"
+//!   check in `tests/serve_hotswap.rs`, and the serving analogue of the
+//!   paper's §3.5 prediction-churn measurements.
+
+use crate::codistill::serve::ServingModel;
+use crate::codistill::Checkpoint;
+use anyhow::{bail, Result};
+
+/// splitmix64 finalizer: one step of the id-keyed tap walk.
+fn mix(mut h: u64) -> u64 {
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d0_49bb_1331_11eb);
+    h ^ (h >> 31)
+}
+
+/// Deterministic hash-tap forward over an installed plane.
+#[derive(Debug, Clone)]
+pub struct MockForward {
+    /// Varies the tap pattern between logically distinct deployments.
+    pub salt: u64,
+}
+
+impl MockForward {
+    /// Taps per feature: enough that every prediction mixes several
+    /// plane positions, few enough to stay trivially cheap.
+    pub const TAPS: usize = 4;
+
+    pub fn new() -> Self {
+        MockForward { salt: 0 }
+    }
+
+    pub fn with_salt(salt: u64) -> Self {
+        MockForward { salt }
+    }
+
+    /// Probability for each feature id against `ckpt`'s plane. Pure:
+    /// same (salt, plane, features) ⇒ bit-identical output.
+    pub fn probs(&self, ckpt: &Checkpoint, features: &[u64]) -> Result<Vec<f32>> {
+        let data = ckpt.flat().data();
+        if data.is_empty() {
+            bail!("mock forward over an empty plane (member {})", ckpt.member);
+        }
+        let n = data.len() as u64;
+        let mut out = Vec::with_capacity(features.len());
+        for &f in features {
+            let mut h = mix(f ^ self.salt ^ 0x9e37_79b9_7f4a_7c15);
+            let mut acc = 0.0f32;
+            for tap in 0..Self::TAPS {
+                h = mix(h);
+                let idx = (h % n) as usize;
+                // alternating-sign taper so taps neither cancel nor blow up
+                let w = if tap % 2 == 0 { 1.0 } else { -0.5 } / (1 + tap) as f32;
+                acc += data[idx] * w;
+            }
+            // rational sigmoid: monotone, (0,1), exactly reproducible
+            out.push(0.5 + 0.5 * (acc / (1.0 + acc.abs())));
+        }
+        Ok(out)
+    }
+}
+
+impl Default for MockForward {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServingModel for MockForward {
+    fn predict(&self, ckpt: &Checkpoint, features: &[u64]) -> Result<Vec<f32>> {
+        self.probs(ckpt, features)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codistill::Member;
+    use crate::testkit::DriftMember;
+
+    fn snap(id: usize, steps: u64) -> Checkpoint {
+        let mut m = DriftMember::new(id);
+        for _ in 0..steps {
+            m.train_step(0.0, 0.1).unwrap();
+        }
+        m.snapshot().unwrap()
+    }
+
+    #[test]
+    fn deterministic_and_bounded() {
+        let ck = snap(0, 5);
+        let fwd = MockForward::new();
+        let feats: Vec<u64> = (0..64).collect();
+        let a = fwd.probs(&ck, &feats).unwrap();
+        let b = fwd.probs(&ck, &feats).unwrap();
+        assert_eq!(a, b, "same plane + features must be bit-identical");
+        assert!(a.iter().all(|p| (0.0..=1.0).contains(p)));
+        assert_eq!(a.len(), feats.len());
+    }
+
+    #[test]
+    fn sensitive_to_plane_changes() {
+        let fwd = MockForward::new();
+        let feats: Vec<u64> = (0..32).collect();
+        let a = fwd.probs(&snap(0, 2), &feats).unwrap();
+        let b = fwd.probs(&snap(0, 10), &feats).unwrap();
+        assert_ne!(a, b, "training between snapshots must move predictions");
+    }
+
+    #[test]
+    fn salt_varies_the_taps() {
+        let ck = snap(1, 3);
+        let feats: Vec<u64> = (0..32).collect();
+        let a = MockForward::with_salt(1).probs(&ck, &feats).unwrap();
+        let b = MockForward::with_salt(2).probs(&ck, &feats).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn empty_plane_errors() {
+        use crate::runtime::TensorMap;
+        let ck = Checkpoint::new(0, 0, TensorMap::new());
+        assert!(MockForward::new().probs(&ck, &[1, 2]).is_err());
+    }
+}

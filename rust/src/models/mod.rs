@@ -5,11 +5,15 @@
 //!   fused large-batch member + real allreduce worker group.
 //! * [`criteo`] — the CTR DNN (Table 1 churn experiments).
 //! * [`images`] — the convnet (Fig 3 / ImageNet experiments).
+//! * [`mock`] — the deterministic hash-tap forward the serving tier uses
+//!   in mock mode (no artifacts/XLA; pairs with `testkit::DriftMember`).
 
 pub mod criteo;
 pub mod images;
 pub mod lm;
+pub mod mock;
 
 pub use criteo::CriteoMember;
 pub use images::ImagesMember;
 pub use lm::{LmMember, LmSyncGroup, SmoothingMode};
+pub use mock::MockForward;

@@ -185,6 +185,71 @@ impl ClusterModel {
     pub fn codistill_bytes_per_step(&self) -> f64 {
         2.0 * self.model_bytes as f64 / self.reload_interval.max(1) as f64
     }
+
+    // ---------------------------------------------------- serving tier
+
+    /// Steady-state items/second of a micro-batching inference server at
+    /// a given batch size: each batch pays a fixed `batch_overhead_s`
+    /// (dispatch, plane snapshot, queue bookkeeping) plus
+    /// `item_cost_s` per feature item, so throughput rises with the
+    /// batch and saturates toward `1/item_cost_s` — the
+    /// throughput-vs-batch-size curve `sections.serving` tracks.
+    pub fn serving_throughput(
+        &self,
+        batch_items: usize,
+        item_cost_s: f64,
+        batch_overhead_s: f64,
+    ) -> f64 {
+        let b = batch_items.max(1) as f64;
+        b / (batch_overhead_s.max(0.0) + b * item_cost_s.max(1e-12))
+    }
+
+    /// Background wall cost of installing one hot swap through the
+    /// delta-aware subscription: fetch the `changed_fraction` of the
+    /// plane whose digests moved, plus a probe latency. Runs off the
+    /// request path (the subscription thread), so it prices subscriber
+    /// bandwidth, not request latency; at fraction 1.0 it degenerates to
+    /// one whole-plane read.
+    pub fn hot_swap_install_time(&self, changed_fraction: f64) -> f64 {
+        let f = changed_fraction.clamp(0.0, 1.0);
+        f * self.model_bytes as f64 / self.bandwidth_bps + self.latency_s
+    }
+
+    /// Request-visible stall of the atomic plane swap itself: a pointer
+    /// flip under a briefly-held lock — latency-scale, independent of
+    /// plane size. The zero-downtime claim in one number: compare with
+    /// [`ClusterModel::serving_restart_stall`], the naive alternative.
+    pub fn swap_stall_time(&self) -> f64 {
+        self.latency_s
+    }
+
+    /// Request-visible stall of the naive alternative to hot swap:
+    /// drain, reload the whole plane, restart — a full-plane read on the
+    /// serving path.
+    pub fn serving_restart_stall(&self) -> f64 {
+        self.model_bytes as f64 / self.bandwidth_bps + self.latency_s
+    }
+
+    /// Items/second retained when a hot swap lands every
+    /// `swap_interval_s` *and* the install shares the serving core
+    /// (worst case — a dedicated subscription thread loses nothing):
+    /// steady-state throughput scaled by the fraction of the interval
+    /// not spent installing.
+    pub fn serving_capacity_under_swaps(
+        &self,
+        batch_items: usize,
+        item_cost_s: f64,
+        batch_overhead_s: f64,
+        swap_interval_s: f64,
+        changed_fraction: f64,
+    ) -> f64 {
+        let t = self.serving_throughput(batch_items, item_cost_s, batch_overhead_s);
+        if swap_interval_s <= 0.0 {
+            return 0.0;
+        }
+        let busy = (self.hot_swap_install_time(changed_fraction) / swap_interval_s).min(1.0);
+        t * (1.0 - busy)
+    }
 }
 
 /// Expected teacher staleness (in steps) when the teacher publishes every
@@ -441,6 +506,52 @@ mod tests {
             m.compressed_exchange_time(3, 0.25, -1.0),
             m.compressed_exchange_time(3, 0.25, 0.0)
         );
+    }
+
+    #[test]
+    fn serving_throughput_rises_with_batch_and_saturates() {
+        let m = ClusterModel::gpu_cluster(8, 40_000_000);
+        let (item, overhead) = (50e-6, 200e-6);
+        // bigger batches amortize the per-batch overhead
+        let t1 = m.serving_throughput(1, item, overhead);
+        let t16 = m.serving_throughput(16, item, overhead);
+        let t256 = m.serving_throughput(256, item, overhead);
+        assert!(t1 < t16 && t16 < t256, "{t1} < {t16} < {t256}");
+        // ... but never past the per-item compute ceiling
+        let ceiling = 1.0 / item;
+        assert!(t256 < ceiling);
+        // with no overhead the ceiling is reached at any batch size
+        assert_eq!(m.serving_throughput(1, item, 0.0), ceiling);
+        // batch 0 clamps to 1 instead of dividing by zero
+        assert_eq!(
+            m.serving_throughput(0, item, overhead),
+            m.serving_throughput(1, item, overhead)
+        );
+    }
+
+    #[test]
+    fn hot_swap_stalls_price_under_a_restart() {
+        let m = ClusterModel::gpu_cluster(8, 40_000_000);
+        // the swap itself is a pointer flip: latency-scale, plane-size-free
+        assert_eq!(m.swap_stall_time(), m.latency_s);
+        assert!(m.swap_stall_time() < m.serving_restart_stall());
+        // background install cost is monotone in the changed fraction and
+        // degenerates to one whole-plane read at fraction 1.0
+        let i05 = m.hot_swap_install_time(0.05);
+        let i25 = m.hot_swap_install_time(0.25);
+        let full = m.hot_swap_install_time(1.0);
+        assert!(i05 < i25 && i25 < full, "{i05} < {i25} < {full}");
+        assert_eq!(full, m.serving_restart_stall());
+        // out-of-range fractions clamp instead of extrapolating
+        assert_eq!(m.hot_swap_install_time(2.0), m.hot_swap_install_time(1.0));
+        assert_eq!(m.hot_swap_install_time(-1.0), m.hot_swap_install_time(0.0));
+        // capacity under swaps: delta installs retain more throughput than
+        // full-plane installs, and neither exceeds the swap-free rate
+        let (item, overhead) = (50e-6, 200e-6);
+        let free = m.serving_throughput(64, item, overhead);
+        let delta = m.serving_capacity_under_swaps(64, item, overhead, 1.0, 0.05);
+        let heavy = m.serving_capacity_under_swaps(64, item, overhead, 1.0, 1.0);
+        assert!(heavy < delta && delta < free, "{heavy} < {delta} < {free}");
     }
 
     #[test]

@@ -1,0 +1,307 @@
+//! Serving-tier acceptance (`make test-serve`): the batching inference
+//! server under open-loop load while a publisher lands checkpoint hot
+//! swaps mid-traffic through the subscription loop.
+//!
+//! What is pinned here:
+//!
+//! * **Zero downtime, zero torn planes**: with >=3 hot swaps landing
+//!   under load, every request completes, and every response re-derives
+//!   *exactly* (bit-for-bit) from the retained checkpoint of the step it
+//!   reports, carrying that plane's content digest — each response is
+//!   consistent with exactly one installed plane, never a mix.
+//! * **Deterministic churn accounting**: the swap churn log replays
+//!   byte-identically across two same-seed runs, and both runs match an
+//!   independent offline recomputation from the retained checkpoints
+//!   (the pinned churn-across-swaps value, derived rather than
+//!   hardcoded so it survives plane-layout changes honestly).
+//! * **The reports exist and cohere**: p50/p99 latency quantiles and the
+//!   throughput-vs-batch-size table are populated for a loaded run.
+//! * The same harness passes over the spool-dir and socket transports
+//!   with delta-aware subscription fetches (unchanged windows skipped).
+
+use codistill::codistill::serve::{
+    open_loop, InferenceServer, LoadRun, LoadSpec, OpenLoopSpec, ServeConfig,
+};
+use codistill::codistill::{
+    Checkpoint, ExchangeTransport, InProcess, Member, ServeStats, SocketServer, SocketTransport,
+    SpoolDir, SubscribeConfig, SubscribeStats, Subscription,
+};
+use codistill::metrics::{mean_abs_diff, ChurnReport};
+use codistill::models::MockForward;
+use codistill::runtime::flat::content_digest;
+use codistill::testkit::DriftMember;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const PROBE_LEN: u64 = 32;
+
+fn wait_until(what: &str, cond: impl Fn() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "timed out waiting for {what}"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Train 5 drift steps, publish the snapshot, retain an identical copy
+/// for offline auditing, and wait for the subscription to install it —
+/// the gate makes every publication a distinct install, so the swap
+/// sequence is deterministic regardless of scheduling.
+fn publish_gated(
+    t: &dyn ExchangeTransport,
+    server: &InferenceServer,
+    member: &mut DriftMember,
+    retained: &mut BTreeMap<u64, Arc<Checkpoint>>,
+) {
+    for _ in 0..5 {
+        member.train_step(0.0, 0.1).unwrap();
+    }
+    let keep = Arc::new(member.snapshot().unwrap());
+    let step = keep.step;
+    t.publish(member.snapshot().unwrap()).unwrap();
+    retained.insert(step, keep);
+    wait_until("checkpoint install", || server.installed_step() == Some(step));
+}
+
+struct Harness {
+    load: LoadSpec,
+    run: LoadRun,
+    /// Publisher-side copies of every published checkpoint, by step.
+    retained: BTreeMap<u64, Arc<Checkpoint>>,
+    churn: ChurnReport,
+    churn_log: String,
+    swaps: u64,
+    stats: ServeStats,
+    sub_stats: SubscribeStats,
+}
+
+/// Publisher + subscription + open-loop load over a transport pair
+/// (`publish_t` writes, `subscribe_t` reads — the same handle for
+/// in-process, distinct handles for real media). The first of
+/// `publishes` checkpoints installs before traffic opens; the remaining
+/// `publishes - 1` hot-swap mid-traffic.
+fn run_harness(
+    publish_t: Arc<dyn ExchangeTransport>,
+    subscribe_t: Arc<dyn ExchangeTransport>,
+    seed: u64,
+    requests: u64,
+    rps: f64,
+    publishes: usize,
+) -> Harness {
+    let server = Arc::new(InferenceServer::start(
+        Arc::new(MockForward::new()),
+        ServeConfig {
+            max_batch_items: 24,
+            max_delay: Duration::from_millis(1),
+            workers: 2,
+            probe: (0..PROBE_LEN).collect(),
+        },
+    ));
+    let mut sub = Subscription::spawn(
+        subscribe_t,
+        SubscribeConfig {
+            poll_interval: Duration::from_millis(1),
+            ..SubscribeConfig::default()
+        },
+        {
+            let server = server.clone();
+            move |ck| server.install(ck)
+        },
+    );
+
+    let mut member = DriftMember::with_frozen(0, 64);
+    let mut retained = BTreeMap::new();
+    publish_gated(publish_t.as_ref(), &server, &mut member, &mut retained);
+
+    let load = LoadSpec {
+        requests,
+        seed,
+        min_features: 1,
+        max_features: 6,
+    };
+    let lg = std::thread::spawn({
+        let server = server.clone();
+        let spec = OpenLoopSpec { load, rps };
+        move || open_loop(&server, &spec)
+    });
+    for _ in 1..publishes {
+        std::thread::sleep(Duration::from_millis(5));
+        publish_gated(publish_t.as_ref(), &server, &mut member, &mut retained);
+    }
+    let run = lg.join().expect("load generator panicked");
+
+    sub.stop();
+    let sub_stats = sub.stats();
+    let swaps = server.swaps();
+    let (churn, churn_log) = server.churn();
+    let stats = server.stats();
+    server.shutdown();
+    Harness {
+        load,
+        run,
+        retained,
+        churn,
+        churn_log,
+        swaps,
+        stats,
+        sub_stats,
+    }
+}
+
+/// The torn-plane audit: regenerate the seeded request sequence offline
+/// and re-derive every response from the retained checkpoint of its
+/// reported step. An exact match on both the probabilities and the
+/// plane content digest means the response came from exactly one
+/// installed plane.
+fn audit(h: &Harness) {
+    assert_eq!(h.run.report.failed, 0, "errors: {:?}", h.run.errors);
+    assert_eq!(h.run.report.ok, h.load.requests);
+    let requests = h.load.open_loop_requests();
+    let fwd = MockForward::new();
+    for resp in &h.run.responses {
+        let ck = h
+            .retained
+            .get(&resp.step)
+            .unwrap_or_else(|| panic!("response claims never-published step {}", resp.step));
+        assert_eq!(
+            resp.plane_digest,
+            content_digest(ck.flat().data()),
+            "torn/corrupt plane digest on request {} (step {})",
+            resp.id,
+            resp.step
+        );
+        let expect = fwd.probs(ck, &requests[resp.id as usize]).unwrap();
+        assert_eq!(
+            resp.probs, expect,
+            "request {} diverged from the step-{} plane",
+            resp.id, resp.step
+        );
+    }
+}
+
+/// Recompute the entire churn log offline from the retained checkpoints
+/// — same probe set, same format string — the value the server's log
+/// must pin against.
+fn expected_churn_log(retained: &BTreeMap<u64, Arc<Checkpoint>>) -> (String, Vec<f64>) {
+    let fwd = MockForward::new();
+    let probe: Vec<u64> = (0..PROBE_LEN).collect();
+    let planes: Vec<&Arc<Checkpoint>> = retained.values().collect();
+    let mut log = String::new();
+    let mut samples = Vec::new();
+    for (i, pair) in planes.windows(2).enumerate() {
+        let (a, b) = (pair[0], pair[1]);
+        let churn = mean_abs_diff(
+            &fwd.probs(a, &probe).unwrap(),
+            &fwd.probs(b, &probe).unwrap(),
+        )
+        .unwrap();
+        log.push_str(&format!(
+            "swap {}: step {} -> {} plane {:016x} -> {:016x} churn {:.9e}\n",
+            i + 1,
+            a.step,
+            b.step,
+            content_digest(a.flat().data()),
+            content_digest(b.flat().data()),
+            churn
+        ));
+        samples.push(churn);
+    }
+    (log, samples)
+}
+
+#[test]
+fn hot_swaps_under_open_loop_load_leave_zero_torn_requests() {
+    let t: Arc<dyn ExchangeTransport> = Arc::new(InProcess::new(8));
+    let h = run_harness(t.clone(), t, 42, 3000, 15_000.0, 5);
+
+    assert!(h.swaps >= 3, "need >=3 mid-traffic hot swaps, got {}", h.swaps);
+    assert_eq!(h.sub_stats.installs, 5);
+    audit(&h);
+
+    // latency quantiles are populated and ordered for the loaded run
+    assert_eq!(h.run.report.latency.count(), 3000);
+    let (p50, p99, p999) = (
+        h.run.report.latency.p50_s(),
+        h.run.report.latency.p99_s(),
+        h.run.report.latency.p999_s(),
+    );
+    assert!(p50 > 0.0 && p50 <= p99 && p99 <= p999, "{p50} {p99} {p999}");
+    assert!(h.run.report.goodput() > 0.0);
+
+    // throughput-vs-batch-size table exists and accounts for every request
+    assert!(!h.stats.throughput.is_empty());
+    let reqs: u64 = h
+        .stats
+        .throughput
+        .iter()
+        .map(|b| b.batches * b.batch_requests as u64)
+        .sum();
+    assert_eq!(reqs, 3000);
+    assert_eq!(h.stats.served, 3000);
+    assert_eq!(h.stats.failed, 0);
+    for line in h.stats.throughput_lines("serve") {
+        assert!(line.contains("items/s"), "{line}");
+    }
+}
+
+#[test]
+fn churn_log_replays_byte_identically_and_matches_recomputation() {
+    let mk = || {
+        let t: Arc<dyn ExchangeTransport> = Arc::new(InProcess::new(8));
+        run_harness(t.clone(), t, 7, 600, 10_000.0, 4)
+    };
+    let (a, b) = (mk(), mk());
+
+    assert_eq!(a.churn_log.lines().count(), 3, "{}", a.churn_log);
+    assert_eq!(
+        a.churn_log, b.churn_log,
+        "same-seed runs must replay the churn log byte-identically"
+    );
+
+    // ...and the log pins against an independent offline recomputation
+    // from the retained checkpoints: sequence, digests, and churn values.
+    let (expect_log, expect_samples) = expected_churn_log(&a.retained);
+    assert_eq!(a.churn_log, expect_log);
+    assert_eq!(a.churn.samples, expect_samples);
+    assert_eq!(b.churn.samples, expect_samples);
+    assert!(a.churn.mean() > 0.0, "drifting planes must move predictions");
+    assert!(a.churn.half_range() >= 0.0);
+    audit(&a);
+    audit(&b);
+}
+
+#[test]
+fn serving_over_a_spool_dir_subscription() {
+    let dir = std::env::temp_dir().join(format!("serve_spool_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    // distinct handles: the publisher's in-memory cache cannot serve the
+    // subscriber's reads — fetches pay the real file path
+    let publisher: Arc<dyn ExchangeTransport> = Arc::new(SpoolDir::open(&dir, 8).unwrap());
+    let reader: Arc<dyn ExchangeTransport> = Arc::new(SpoolDir::open(&dir, 8).unwrap());
+    let h = run_harness(publisher, reader, 11, 800, 10_000.0, 4);
+    assert!(h.swaps >= 3, "got {} swaps", h.swaps);
+    audit(&h);
+    // the subscription's steady-state fetches were deltas that skipped
+    // the frozen (never-changing) windows
+    assert!(h.sub_stats.delta.delta_fetches >= 1, "{:?}", h.sub_stats.delta);
+    assert!(h.sub_stats.delta.windows_unchanged > 0, "{:?}", h.sub_stats.delta);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serving_over_a_socket_subscription() {
+    let hub = SocketServer::bind_tcp_with("127.0.0.1:0", 8, 4).unwrap();
+    let publisher: Arc<dyn ExchangeTransport> =
+        Arc::new(SocketTransport::connect_tcp(hub.addr()));
+    let reader: Arc<dyn ExchangeTransport> = Arc::new(SocketTransport::connect_tcp(hub.addr()));
+    let h = run_harness(publisher, reader, 23, 800, 10_000.0, 4);
+    assert!(h.swaps >= 3, "got {} swaps", h.swaps);
+    audit(&h);
+    assert!(h.sub_stats.delta.delta_fetches >= 1, "{:?}", h.sub_stats.delta);
+    assert_eq!(h.sub_stats.tolerated_errors, 0);
+    drop(hub);
+}
