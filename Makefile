@@ -1,7 +1,7 @@
 # Build/test/bench entry points. The Rust workspace lives in rust/ and
 # builds fully offline (vendored deps; see rust/Cargo.toml).
 
-.PHONY: build test check test-faults test-scenarios test-procs test-wire test-serve bench bench-snapshot artifacts python-tests clean
+.PHONY: build test check test-faults test-scenarios test-procs test-wire test-serve test-fanout bench bench-snapshot artifacts python-tests clean
 
 build:
 	cd rust && cargo build --release
@@ -13,7 +13,7 @@ test:
 # (skipped with a notice otherwise, so `make check` works on minimal
 # toolchains), then the tier-1 test suite and the serving-tier
 # integration suite.
-check: test-serve
+check: test-serve test-fanout
 	cd rust && if cargo fmt --version >/dev/null 2>&1; then \
 		cargo fmt --all -- --check; \
 	else echo "make check: rustfmt unavailable, skipping fmt"; fi
@@ -66,6 +66,14 @@ test-wire:
 # transports.
 test-serve:
 	cd rust && cargo test -q --test serve_hotswap
+
+# Fan-out soak: >=512 concurrent readers against one event-driven socket
+# server (zero protocol errors, thread count bounded — no
+# thread-per-connection), every reader byte-identical to the publisher,
+# plus a relayed soak per seed (two relays over a Faulty upstream link).
+# Same seed => byte-identical sorted digest logs across two runs.
+test-fanout:
+	cd rust && CODISTILL_FAULT_SEEDS="11 23 47" cargo test -q --test fanout_scale
 
 # Hot-path microbenchmarks. Writes the human table to stdout and the
 # machine-readable trajectory to BENCH_hotpath.json at the repo root.

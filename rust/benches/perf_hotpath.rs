@@ -15,6 +15,10 @@
 //!   * compressed exchange: full vs delta vs delta+codec payload bytes
 //!     (CKPT0004 spool files / encoded socket DELTA frames) at the same
 //!     changed fractions — the `sections.compressed_exchange` rows;
+//!   * checkpoint fan-out: {8, 64, 512} concurrent readers pulling one
+//!     small plane, direct from the hub vs through a two-relay tier
+//!     (`codistill::transport::Relay`) — the `sections.fanout` rows
+//!     behind the README fan-out recipe;
 //!   * the serving tier (`codistill::serve`): flat-out open-loop goodput
 //!     at several micro-batch caps over the mock forward, plus the cost
 //!     of a verified hot swap landing on a live server — the
@@ -30,7 +34,8 @@
 use codistill::codistill::serve::{open_loop, InferenceServer, LoadSpec, OpenLoopSpec, ServeConfig};
 use codistill::codistill::transport::{Basis, Codec, FetchSpec, ANY_STEP};
 use codistill::codistill::{
-    Checkpoint, ExchangeTransport, InProcess, Member, SocketServer, SocketTransport, SpoolDir,
+    Checkpoint, ExchangeTransport, InProcess, Member, Relay, RelayConfig, SocketServer,
+    SocketTransport, SpoolDir,
 };
 use codistill::config::Settings;
 use codistill::models::MockForward;
@@ -655,6 +660,92 @@ fn main() {
         )
     };
 
+    // ---- fan-out: N concurrent readers each pulling one small (~64 KB)
+    // plane to completion, direct from the hub vs through a two-relay
+    // tier subscribed to the same hub. The event-driven loop serves all
+    // N connections from one thread either way; the relayed rows show
+    // the tree halving the hub's per-reader fan-out (each relay answers
+    // its half from the local mirror). Readers use tiny stacks: the
+    // point at N=512 is that neither tier spawns a thread per reader.
+    let mut fanout_rows: Vec<String> = Vec::new();
+    {
+        let small_params = ragged_params(16_384); // 64 KB plane
+        let small_layout = Arc::new(FlatLayout::from_map(&small_params, "params."));
+        let small = Arc::new(FlatBuffer::gather(small_layout.clone(), &small_params).unwrap());
+        let plane_bytes = small_layout.total_len() * 4;
+        for readers in [8usize, 64, 512] {
+            let server =
+                SocketServer::bind_tcp("127.0.0.1:0", 4).expect("binding fanout bench server");
+            let seeder = SocketTransport::connect_tcp(server.addr());
+            seeder
+                .publish(Checkpoint::from_flat(0, 1, small.clone(), TensorMap::new()))
+                .unwrap();
+
+            let fetch_all = |addrs: &[String]| -> f64 {
+                let t0 = Instant::now();
+                let handles: Vec<_> = (0..readers)
+                    .map(|i| {
+                        let addr = addrs[i % addrs.len()].clone();
+                        std::thread::Builder::new()
+                            .stack_size(128 * 1024)
+                            .spawn(move || {
+                                SocketTransport::connect_tcp(&addr).latest(0).unwrap().unwrap();
+                            })
+                            .unwrap()
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().unwrap();
+                }
+                t0.elapsed().as_secs_f64()
+            };
+            let t_direct = fetch_all(&[server.addr().to_string()]);
+
+            // two-relay tier over the same hub; warm both mirrors before
+            // timing so the rows measure mirror serving, not passthrough
+            let cfg = RelayConfig {
+                poll_interval: Duration::from_millis(1),
+                ..RelayConfig::default()
+            };
+            let spawn_relay = || {
+                let up: Arc<dyn ExchangeTransport> =
+                    Arc::new(SocketTransport::connect_tcp(server.addr()));
+                Relay::spawn_tcp(up, "127.0.0.1:0", cfg.clone()).expect("spawning bench relay")
+            };
+            let relays = [spawn_relay(), spawn_relay()];
+            for r in &relays {
+                let probe = SocketTransport::connect_tcp(r.addr());
+                let t0 = Instant::now();
+                while !matches!(probe.latest(0), Ok(Some(_))) {
+                    assert!(t0.elapsed() < Duration::from_secs(10), "relay never warmed");
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+            let relay_addrs: Vec<String> =
+                relays.iter().map(|r| r.addr().to_string()).collect();
+            let t_relayed = fetch_all(&relay_addrs);
+
+            let goodput = |t: f64| readers as f64 * plane_bytes as f64 / t / 1e6;
+            println!(
+                "fanout x{readers:<3}:            direct {:>7.2} ms ({:>7.1} MB/s), \
+                 2-relay {:>7.2} ms ({:>7.1} MB/s)",
+                t_direct * 1e3,
+                goodput(t_direct),
+                t_relayed * 1e3,
+                goodput(t_relayed)
+            );
+            fanout_rows.push(format!(
+                "{{\"readers\": {readers}, \"plane_bytes\": {plane_bytes}, \
+                 \"direct_wall_ms\": {}, \"relayed_wall_ms\": {}, \
+                 \"direct_goodput_mbps\": {:.1}, \"relayed_goodput_mbps\": {:.1}}}",
+                ms(Some(t_direct)),
+                ms(Some(t_relayed)),
+                goodput(t_direct),
+                goodput(t_relayed)
+            ));
+        }
+    }
+
     // ---- the serving tier: flat-out open-loop goodput at several
     // micro-batch caps (rps=0 submits without pacing, so deep queues
     // actually exercise the cap — the throughput-vs-batch-size curve),
@@ -748,6 +839,7 @@ fn main() {
          \"delta_exchange\": [\n      {}\n    ],\n    \
          \"compressed_exchange\": [\n      {}\n    ],\n    \
          \"socket_concurrency\": {},\n    \
+         \"fanout\": [\n      {}\n    ],\n    \
          \"serving\": {{\n      \"throughput\": [\n        {}\n      ],\n      \
          \"hot_swap_install_ms\": {}\n    }},\n    \
          \"to_literal_ms\": {}\n  }}\n}}\n",
@@ -766,6 +858,7 @@ fn main() {
         delta_rows.join(",\n      "),
         compressed_rows.join(",\n      "),
         sock_concurrency,
+        fanout_rows.join(",\n      "),
         serving_rows.join(",\n        "),
         ms(Some(serving_install_ms)),
         ms(Some(t_lit)),

@@ -30,6 +30,14 @@
 //!               workers=N, publishes=N, publish_steps=N, poll_ms=MS);
 //!               reports p50/p99/p999 latency, throughput vs batch
 //!               size, and prediction churn across swaps
+//!   relay       checkpoint fan-out node: subscribe to an upstream hub
+//!               (upstream=HOST:PORT, delta-aware, digest-verified) and
+//!               serve downstream DELTA/FETCH/STEPS readers from the
+//!               mirrored planes (listen=ADDR, poll_ms=MS, history=N,
+//!               duration_s=N); with no upstream, builds a demo fan-out
+//!               tree (tree_depth=N, tree_fanout=N, readers=N) over an
+//!               in-process hub and verifies leaf readers install
+//!               byte-identical planes
 //!   figures     run every experiment (fig1a/1b, fig2a/2b, fig3, fig4,
 //!               table1, sec341) and write results/*.csv
 //!   fig1|fig2|fig3|fig4|table1|sec341   run one experiment
@@ -143,7 +151,7 @@ fn settings_dump(_s: &Settings) -> Vec<String> {
 }
 
 pub fn usage() -> String {
-    "usage: codistill <train|codistill|coordinate|serve|figures|fig1|fig2|fig3|fig4|table1|sec341|inspect> \
+    "usage: codistill <train|codistill|coordinate|serve|relay|figures|fig1|fig2|fig3|fig4|table1|sec341|inspect> \
      [--transport inproc|spool|socket] [--delta] [--compress] [--scenario FILE] [--retry] \
      [--set key=value]... [--config FILE] [--verbose]"
         .to_string()
@@ -169,6 +177,7 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
         "codistill" => crate::experiments::common::cmd_codistill(s),
         "coordinate" => crate::experiments::common::cmd_coordinate(s),
         "serve" => crate::experiments::serve::run(s),
+        "relay" => crate::experiments::relay::run(s),
         "inspect" => crate::experiments::common::cmd_inspect(s),
         "fig1" => crate::experiments::fig1::run(s).map(|_| ()),
         "fig2" => crate::experiments::fig2::run(s).map(|_| ()),

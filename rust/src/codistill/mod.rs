@@ -102,9 +102,9 @@ pub use store::Checkpoint;
 pub use topology::Topology;
 pub use transport::{
     Basis, Codec, DeltaCache, DeltaStats, ExchangeTransport, FaultPlan, Faulty, FetchResult,
-    FetchSpec, InProcess, Retry, RetryPolicy, RetryStats, SocketServer, SocketTransport,
-    SpoolDir, SubscribeConfig, SubscribeStats, Subscription, TransportKind, WindowCodec,
-    WindowSel, WindowedFetch,
+    FetchSpec, InProcess, Relay, RelayConfig, RelayStats, Retry, RetryPolicy, RetryStats,
+    SocketServer, SocketTransport, SpoolDir, SubscribeConfig, SubscribeStats, Subscription,
+    TransportKind, WindowCodec, WindowSel, WindowedFetch,
 };
 
 /// The zero-copy in-process store under its historical name (it was the

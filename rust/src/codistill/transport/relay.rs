@@ -1,0 +1,430 @@
+//! Relay tier: CDN-style checkpoint fan-out nodes.
+//!
+//! A [`Relay`] sits between an upstream publisher hub and a crowd of
+//! downstream readers. It polls the upstream exactly like a reader
+//! ([`ExchangeTransport::last_steps`] to spot fresh publications, then a
+//! delta-aware [`DeltaCache`] fetch that moves only changed windows and
+//! digest-verifies every install), mirrors the resulting planes into a
+//! local [`InProcess`] store, and serves downstream `DESCRIBE` / `FETCH`
+//! / `DELTA` / `STEPS` requests from that mirror through the
+//! event-driven [`SocketServer`]. One upstream connection amortizes over
+//! arbitrarily many downstream readers; relays stack, so `R` readers
+//! fan out as a tree of depth `ceil(log_f R)` instead of a flat hub with
+//! `R` sockets (priced against the flat hub in `netsim`).
+//!
+//! ```text
+//!                        publisher hub
+//!                             │  (1 delta subscription per relay)
+//!                ┌────────────┴────────────┐
+//!             Relay A                   Relay B
+//!         ┌──────┼──────┐            ┌──────┼──────┐
+//!      reader reader  Relay C     reader reader  reader
+//!                    ┌───┴───┐
+//!                 reader   reader
+//! ```
+//!
+//! ## Semantics
+//!
+//! - **Reads are served from the mirror.** `members`/`last_steps`/
+//!   `fetch` reflect what the relay has *installed*, not what the
+//!   upstream currently holds: a relay hop adds at most one
+//!   `poll_interval` of staleness per level — exactly the bounded
+//!   staleness the codistillation paper says the algorithm tolerates.
+//!   Readers digest-verify installs against the relay, and the relay
+//!   digest-verified them against *its* upstream, so corruption cannot
+//!   propagate silently down the tree.
+//! - **`fetch` falls through on a mirror miss.** A request for a member
+//!   the mirror has not yet installed is forwarded upstream verbatim
+//!   (counted in [`RelayStats::passthrough_fetches`]), so a freshly
+//!   started relay is correct immediately and merely warms up to cheap.
+//! - **`publish` forwards upstream.** A relay is a read-side cache, not
+//!   a coordinator: writes go to the root hub (counted in
+//!   [`RelayStats::forwarded_publishes`]) and come back down through the
+//!   normal refresh path like any other publication.
+//! - **`gc` is local-only.** The mirror bounds its own history per
+//!   member; relays never garbage-collect the upstream on behalf of
+//!   readers — only the orchestrator owning the root hub does that.
+
+use super::socket::{SocketServer, MAX_CONNECTIONS};
+use super::{Codec, DeltaCache, DeltaStats, ExchangeTransport, InProcess};
+use crate::codistill::store::Checkpoint;
+use crate::codistill::transport::{FetchResult, FetchSpec, RetryStats, TransportKind};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+/// Knobs for one relay node.
+#[derive(Debug, Clone)]
+pub struct RelayConfig {
+    /// Upstream poll cadence — the staleness this hop adds.
+    pub poll_interval: Duration,
+    /// Fetch from the upstream through a [`DeltaCache`] (moving only
+    /// changed windows) instead of full planes.
+    pub delta: bool,
+    /// Codec advertised on upstream fetches (downstream framing is
+    /// negotiated per-connection by the server as usual).
+    pub codec: Codec,
+    /// Publications retained per member in the mirror.
+    pub history: usize,
+    /// Downstream connection bound (registered readiness-loop state
+    /// machines, not threads).
+    pub max_connections: usize,
+}
+
+impl Default for RelayConfig {
+    fn default() -> Self {
+        Self {
+            poll_interval: Duration::from_millis(5),
+            delta: true,
+            codec: Codec::Raw,
+            history: 4,
+            max_connections: MAX_CONNECTIONS,
+        }
+    }
+}
+
+/// Counters for one relay node (cheap copies; see [`Relay::stats`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RelayStats {
+    /// Upstream refresh sweeps.
+    pub polls: u64,
+    /// Planes installed into the mirror (fresh steps seen upstream).
+    pub installs: u64,
+    /// Upstream errors absorbed by the refresher (retried next sweep).
+    pub tolerated_errors: u64,
+    /// Downstream fetches forwarded upstream on a mirror miss.
+    pub passthrough_fetches: u64,
+    /// Downstream publishes forwarded to the upstream hub.
+    pub forwarded_publishes: u64,
+    /// Upstream delta-fetch accounting (zeros when `delta` is off).
+    pub delta: DeltaStats,
+}
+
+/// The backend the relay's socket server dispatches to: a local
+/// [`InProcess`] mirror for reads, with writes and mirror-miss fetches
+/// forwarded to the upstream transport.
+struct RelayStore {
+    upstream: Arc<dyn ExchangeTransport>,
+    mirror: InProcess,
+    passthrough_fetches: AtomicU64,
+    forwarded_publishes: AtomicU64,
+}
+
+impl ExchangeTransport for RelayStore {
+    fn kind(&self) -> TransportKind {
+        // A relay is transparent: it reports the upstream's kind so
+        // logs/bench labels show what the tree is ultimately made of.
+        self.upstream.kind()
+    }
+
+    fn publish(&self, ckpt: Checkpoint) -> Result<()> {
+        self.forwarded_publishes.fetch_add(1, Ordering::Relaxed);
+        self.upstream.publish(ckpt)
+    }
+
+    fn fetch(&self, spec: &FetchSpec) -> Result<Option<FetchResult>> {
+        if let Some(res) = self.mirror.fetch(spec)? {
+            return Ok(Some(res));
+        }
+        // Mirror miss (member not yet refreshed, or a staleness bound
+        // older than anything installed): forward verbatim so a cold
+        // relay is correct immediately.
+        self.passthrough_fetches.fetch_add(1, Ordering::Relaxed);
+        self.upstream.fetch(spec)
+    }
+
+    fn members(&self) -> Result<Vec<usize>> {
+        Ok(self.mirror.members())
+    }
+
+    fn last_steps(&self) -> Result<Vec<(usize, u64)>> {
+        Ok(self.mirror.last_steps())
+    }
+
+    fn gc(&self) -> Result<()> {
+        // Local-only: the mirror already bounds history on publish, and
+        // relays must not gc the upstream out from under other readers.
+        Ok(())
+    }
+
+    fn retry_stats(&self) -> Option<RetryStats> {
+        self.upstream.retry_stats()
+    }
+}
+
+/// A running fan-out node: background upstream refresher + event-driven
+/// downstream socket server over the mirror. See the module docs for
+/// semantics; stacking relays (each one's upstream a
+/// [`SocketTransport`](super::SocketTransport) pointed at the previous
+/// relay's [`Relay::addr`]) builds the tree.
+pub struct Relay {
+    server: SocketServer,
+    store: Arc<RelayStore>,
+    stats: Arc<Mutex<RelayStats>>,
+    stop: Arc<AtomicBool>,
+    refresher: Option<JoinHandle<()>>,
+}
+
+impl Relay {
+    /// Bind a TCP relay on `addr` (use port 0 for an ephemeral port,
+    /// then [`Relay::addr`]) over `upstream`, and start refreshing.
+    pub fn spawn_tcp(
+        upstream: Arc<dyn ExchangeTransport>,
+        addr: &str,
+        cfg: RelayConfig,
+    ) -> Result<Relay> {
+        let store = Arc::new(RelayStore {
+            upstream,
+            mirror: InProcess::new(cfg.history),
+            passthrough_fetches: AtomicU64::new(0),
+            forwarded_publishes: AtomicU64::new(0),
+        });
+        let backend: Arc<dyn ExchangeTransport> = store.clone();
+        let server = SocketServer::bind_tcp_over(addr, backend, cfg.max_connections)?;
+
+        let stats = Arc::new(Mutex::new(RelayStats::default()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let refresher = {
+            let store = store.clone();
+            let stats = stats.clone();
+            let stop = stop.clone();
+            thread::Builder::new()
+                .name("ckpt-relay-refresh".into())
+                .spawn(move || refresh_loop(&store, &cfg, &stats, &stop))
+                .expect("spawning relay refresher thread")
+        };
+        Ok(Relay {
+            server,
+            store,
+            stats,
+            stop,
+            refresher: Some(refresher),
+        })
+    }
+
+    /// Resolved downstream listen address (`host:port`).
+    pub fn addr(&self) -> &str {
+        self.server.addr()
+    }
+
+    /// Downstream connections currently registered with the server.
+    pub fn active_connections(&self) -> usize {
+        self.server.active_connections()
+    }
+
+    /// Counters so far (refresher progress + forwarding traffic).
+    pub fn stats(&self) -> RelayStats {
+        let mut s = *self.stats.lock().expect("relay stats lock");
+        s.passthrough_fetches = self.store.passthrough_fetches.load(Ordering::Relaxed);
+        s.forwarded_publishes = self.store.forwarded_publishes.load(Ordering::Relaxed);
+        s
+    }
+
+    /// Stop refreshing and join the refresher thread. The downstream
+    /// server keeps answering from the (now frozen) mirror until the
+    /// relay is dropped.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.refresher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Relay {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One refresh sweep per `poll_interval`: list upstream steps, pull any
+/// member whose freshest step the mirror has not installed yet, publish
+/// the verified plane into the mirror. Upstream errors are tolerated
+/// and retried on the next sweep (the mirror just stays one beat
+/// staler), mirroring the [`Subscription`](super::Subscription) loop.
+fn refresh_loop(
+    store: &RelayStore,
+    cfg: &RelayConfig,
+    stats: &Arc<Mutex<RelayStats>>,
+    stop: &AtomicBool,
+) {
+    let mut cache = DeltaCache::new().with_codec(cfg.codec);
+    // Installed step per member, tracked locally so the delta-off path
+    // does not have to re-list the mirror every sweep.
+    let mut installed: HashMap<usize, u64> = HashMap::new();
+    while !stop.load(Ordering::SeqCst) {
+        let mut sweep_installs = 0u64;
+        let mut sweep_errors = 0u64;
+        match store.upstream.last_steps() {
+            Ok(steps) => {
+                for (member, step) in steps {
+                    if installed.get(&member).is_some_and(|&got| got >= step) {
+                        continue;
+                    }
+                    let fetched = if cfg.delta {
+                        cache.latest(store.upstream.as_ref(), member)
+                    } else {
+                        store.upstream.latest(member)
+                    };
+                    match fetched {
+                        Ok(Some(ck)) => {
+                            let got = ck.step;
+                            // Checkpoint clones are cheap: the flat plane
+                            // is Arc-shared, so the mirror and the cache
+                            // reference the same verified bytes.
+                            if store.mirror.publish((*ck).clone()).is_ok() {
+                                installed.insert(member, got);
+                                sweep_installs += 1;
+                            } else {
+                                sweep_errors += 1;
+                            }
+                        }
+                        Ok(None) => {}
+                        Err(_) => sweep_errors += 1,
+                    }
+                }
+            }
+            Err(_) => sweep_errors += 1,
+        }
+        {
+            let mut s = stats.lock().expect("relay stats lock");
+            s.polls += 1;
+            s.installs += sweep_installs;
+            s.tolerated_errors += sweep_errors;
+            s.delta = cache.stats();
+        }
+        thread::sleep(cfg.poll_interval);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codistill::transport::{SocketTransport, ANY_STEP};
+    use crate::testkit::DriftMember;
+    use std::time::Instant;
+
+    fn publish(t: &dyn ExchangeTransport, m: &mut DriftMember, steps: u64) {
+        for _ in 0..steps {
+            m.train_step(0.0, 0.1).unwrap();
+        }
+        t.publish(m.snapshot().unwrap()).unwrap();
+    }
+
+    fn wait_for_step(t: &dyn ExchangeTransport, member: usize, step: u64) -> Arc<Checkpoint> {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            if let Some(ck) = t.latest_at_most(member, ANY_STEP).unwrap() {
+                if ck.step >= step {
+                    return ck;
+                }
+            }
+            assert!(Instant::now() < deadline, "relay never installed step {step}");
+            thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    fn fast() -> RelayConfig {
+        RelayConfig {
+            poll_interval: Duration::from_millis(1),
+            ..RelayConfig::default()
+        }
+    }
+
+    #[test]
+    fn relay_mirrors_publisher_byte_identically() {
+        let hub: Arc<dyn ExchangeTransport> = Arc::new(InProcess::new(4));
+        let mut m = DriftMember::new(0);
+        publish(hub.as_ref(), &mut m, 3);
+
+        let mut relay = Relay::spawn_tcp(hub.clone(), "127.0.0.1:0", fast()).unwrap();
+        let reader = SocketTransport::connect_tcp(relay.addr());
+        let via_relay = wait_for_step(&reader, 0, 3);
+        let direct = hub.latest(0).unwrap().unwrap();
+        assert_eq!(via_relay.step, direct.step);
+        assert_eq!(via_relay.flat().data(), direct.flat().data());
+
+        // a fresh publication propagates without re-moving old planes
+        publish(hub.as_ref(), &mut m, 2);
+        let via_relay = wait_for_step(&reader, 0, 5);
+        assert_eq!(via_relay.flat().data(), hub.latest(0).unwrap().unwrap().flat().data());
+
+        relay.stop();
+        let stats = relay.stats();
+        assert!(stats.installs >= 2);
+        assert!(stats.polls >= stats.installs);
+        assert_eq!(stats.tolerated_errors, 0);
+        assert!(stats.delta.full_fetches >= 1, "first upstream pull is full");
+    }
+
+    #[test]
+    fn two_level_chain_serves_the_same_plane() {
+        let hub: Arc<dyn ExchangeTransport> = Arc::new(InProcess::new(4));
+        let mut m = DriftMember::new(2);
+        publish(hub.as_ref(), &mut m, 4);
+
+        let relay1 = Relay::spawn_tcp(hub.clone(), "127.0.0.1:0", fast()).unwrap();
+        let up1: Arc<dyn ExchangeTransport> =
+            Arc::new(SocketTransport::connect_tcp(relay1.addr()));
+        let relay2 = Relay::spawn_tcp(up1, "127.0.0.1:0", fast()).unwrap();
+
+        let leaf = SocketTransport::connect_tcp(relay2.addr());
+        let got = wait_for_step(&leaf, 2, 4);
+        let direct = hub.latest(2).unwrap().unwrap();
+        assert_eq!(got.step, direct.step);
+        assert_eq!(got.flat().data(), direct.flat().data());
+        assert_eq!(got.residual().len(), direct.residual().len());
+    }
+
+    #[test]
+    fn publish_through_relay_lands_on_the_hub() {
+        let hub = Arc::new(InProcess::new(4));
+        let upstream: Arc<dyn ExchangeTransport> = hub.clone();
+        let relay = Relay::spawn_tcp(upstream, "127.0.0.1:0", fast()).unwrap();
+
+        let writer = SocketTransport::connect_tcp(relay.addr());
+        let mut m = DriftMember::new(7);
+        publish(&writer, &mut m, 1);
+
+        let direct = hub.latest_at_most(7, ANY_STEP).expect("hub saw the forwarded publish");
+        assert_eq!(direct.step, 1);
+        assert_eq!(relay.stats().forwarded_publishes, 1);
+        // ...and the refresher pulls it back down to the mirror.
+        let reader = SocketTransport::connect_tcp(relay.addr());
+        let got = wait_for_step(&reader, 7, 1);
+        assert_eq!(got.flat().data(), direct.flat().data());
+    }
+
+    #[test]
+    fn cold_mirror_miss_passes_through_upstream() {
+        let hub: Arc<dyn ExchangeTransport> = Arc::new(InProcess::new(4));
+        let mut m = DriftMember::new(1);
+        publish(hub.as_ref(), &mut m, 2);
+
+        // Huge poll interval: the mirror stays cold for the duration of
+        // the test, so the first downstream fetch must fall through.
+        let cfg = RelayConfig {
+            poll_interval: Duration::from_secs(3600),
+            ..RelayConfig::default()
+        };
+        let relay = Relay::spawn_tcp(hub.clone(), "127.0.0.1:0", cfg).unwrap();
+        // let the first (cold) sweep finish before probing
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while relay.stats().polls == 0 && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(1));
+        }
+
+        let reader = SocketTransport::connect_tcp(relay.addr());
+        let got = reader.latest_at_most(1, ANY_STEP).unwrap();
+        // the cold sweep may already have mirrored member 1; either way
+        // the bytes are the hub's, and a fetch for an unknown member
+        // counts a passthrough instead of erroring
+        let direct = hub.latest(1).unwrap().unwrap();
+        assert_eq!(got.unwrap().flat().data(), direct.flat().data());
+        assert!(reader.latest_at_most(99, ANY_STEP).unwrap().is_none());
+        assert!(relay.stats().passthrough_fetches >= 1);
+    }
+}

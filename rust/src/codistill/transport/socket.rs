@@ -1,10 +1,16 @@
 //! The socket backend: checkpoint exchange over a length-prefixed
 //! request/response protocol (TCP or Unix domain sockets).
 //!
-//! A [`SocketServer`] owns an [`InProcess`] store and answers requests
-//! from any number of [`SocketTransport`] clients — the server process is
-//! the paper's "parameter checkpoint service", clients are coordinator
-//! processes hosting members.
+//! A [`SocketServer`] answers requests from any number of
+//! [`SocketTransport`] clients — the server process is the paper's
+//! "parameter checkpoint service", clients are coordinator processes
+//! hosting members. By default the server owns an [`InProcess`] store;
+//! [`SocketServer::bind_tcp_over`] / [`SocketServer::bind_unix_over`]
+//! instead serve any [`ExchangeTransport`] backend — a `SpoolDir` turns
+//! the server into a spool gateway whose `DELTA` replies stream encoded
+//! window ranges straight from their `pread`s, and
+//! [`Relay`](crate::codistill::transport::Relay) serves its mirrored
+//! planes through one to form checkpoint fan-out trees.
 //!
 //! ## Wire format
 //!
@@ -61,16 +67,46 @@
 //! (`DeltaCache` / `into_checkpoint`), which decodes and digest-verifies
 //! before any byte lands.
 //!
-//! ## Concurrency
+//! ## The readiness loop (server concurrency)
 //!
-//! The server is thread-per-connection behind a blocking accept: each
-//! accepted connection is served on its own worker thread (bounded by
-//! [`MAX_CONNECTIONS`]; further accepts wait for a free slot), so a slow
-//! or wedged client stalls only its own connection while other clients
-//! keep publishing and fetching. An idle server burns no CPU — the accept
-//! blocks in the kernel, and shutdown wakes it with a loopback connect
-//! instead of a poll loop. Request handling errors are isolated per
-//! connection: a malformed frame ends that connection, never the server.
+//! The server is one event-driven thread (`ckpt-exchange-loop`): the
+//! listener and every registered connection are nonblocking, a `poll(2)`
+//! readiness wait picks the sockets with work each tick, and each
+//! connection advances a small state machine:
+//!
+//! ```text
+//!            bytes readable                frame complete
+//!   [READ] ───────────────▶ inbox buffer ────────────────▶ [DISPATCH]
+//!     ▲                     (partial frames wait here)          │
+//!     │                                                         ▼
+//!     │   outbox drained            WouldBlock             response as
+//!     └──────────────── [WRITE] ◀──────────────▶ POLLOUT   byte segments
+//!                        vectored writes        (parked)
+//! ```
+//!
+//! * **READ** — available bytes append to the connection's `inbox`; a
+//!   complete `u32 LE length + payload` frame is split off and
+//!   dispatched. Partial frames simply wait for the next readiness
+//!   event, so a slow *writer* costs a buffer, not a thread.
+//! * **DISPATCH** — `PUBLISH`/`LATEST`/`FETCH`/`DESCRIBE`/`DELTA`/
+//!   `STEPS`/… run inline on the loop thread against the backend
+//!   (window digest compares + memcpy at exchange cadence — cheap), and
+//!   every failure becomes a `STATUS_ERR` reply isolated to that
+//!   connection.
+//! * **WRITE** — the response is a list of byte segments ([`Segments`])
+//!   flushed with vectored writes; on `WouldBlock` the connection parks
+//!   on `POLLOUT` with its segment cursor intact, so a slow *reader*
+//!   costs a parked state machine while every other socket keeps being
+//!   served. Large payloads (a full `LATEST` stream, encoded `DELTA`
+//!   windows `pread` from a spool file) are **adopted** as their own
+//!   segments instead of concatenated — the bytes the backend produced
+//!   are the bytes handed to the kernel.
+//!
+//! Up to the connection cap ([`MAX_CONNECTIONS`] by default) register at
+//! once; further accepts wait in the listen backlog until a slot frees.
+//! Connections idle past [`READ_TIMEOUT`] are swept. Shutdown flips a
+//! flag and wakes the poll with a loopback connect: the loop exits
+//! promptly, dropping any pending connections mid-state.
 //!
 //! ## Sharded (windowed) fetch
 //!
@@ -94,14 +130,14 @@ use crate::codistill::transport::{
 use crate::runtime::flat::{FlatBuffer, FlatLayout};
 use crate::runtime::{Tensor, TensorMap};
 use anyhow::{bail, Context, Result};
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 #[cfg(unix)]
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 const OP_PUBLISH: u8 = 1;
 const OP_LATEST: u8 = 2;
@@ -123,12 +159,14 @@ const DELTA_FLAG_CODEC: u8 = 2;
 /// `checked_count` — a clean error the client falls back on.
 const FETCH_CAP_BIT: u32 = 0x8000_0000;
 
-/// Default bound on concurrently served connections: accepts past the
-/// cap wait for a worker slot to free instead of spawning unboundedly.
-/// Per-server override via [`SocketServer::bind_tcp_with`] /
-/// [`SocketServer::bind_unix_with`] (`socket_pool=N` from the CLI) —
-/// a serving-tier loadgen fleet easily outnumbers 64 sockets.
-pub const MAX_CONNECTIONS: usize = 64;
+/// Default bound on concurrently *registered* connections: accepts past
+/// the cap wait in the listen backlog until a slot frees. A registered
+/// connection is a parked state machine (a buffer + a pollfd), not a
+/// thread, so the default is sized for O(1000)-reader fan-out rather
+/// than a worker pool. Per-server override via
+/// [`SocketServer::bind_tcp_with`] / [`SocketServer::bind_unix_with`]
+/// (`socket_pool=N` from the CLI).
+pub const MAX_CONNECTIONS: usize = 1024;
 
 const STATUS_OK: u8 = 0;
 const STATUS_NONE: u8 = 1;
@@ -138,10 +176,16 @@ const STATUS_ERR: u8 = 2;
 /// above any real checkpoint in this repo.
 const MAX_FRAME: usize = 1 << 30;
 
-/// Read timeout on both sides of the wire: a wedged client cannot stall
-/// the server's accept loop, and a dead server turns a client operation
-/// into an error instead of a hang.
+/// Inactivity bound on both sides of the wire: the server's readiness
+/// loop sweeps connections idle past this (a wedged client cannot hold
+/// a registration slot forever), and a client read timeout turns a dead
+/// server into an error instead of a hang.
 const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Upper bound on one readiness wait: the loop re-checks the shutdown
+/// flag at least this often even with no socket activity (the shutdown
+/// wakeup usually makes it immediate).
+const POLL_TICK: Duration = Duration::from_millis(50);
 
 // ------------------------------------------------------------------- frames
 
@@ -190,6 +234,92 @@ fn checked_count(n: usize, remaining: usize, min_bytes: usize, what: &str) -> Re
     Ok(n)
 }
 
+/// Split one complete `u32 LE length + payload` frame off the front of
+/// an accumulation buffer. `Ok(None)` when the buffer holds only a
+/// partial frame; `Err` when the length prefix exceeds [`MAX_FRAME`]
+/// (a protocol error that ends the connection).
+fn take_frame(buf: &mut Vec<u8>) -> Result<Option<Vec<u8>>> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let n = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    if n > MAX_FRAME {
+        bail!("frame of {n} bytes exceeds the {MAX_FRAME}-byte cap");
+    }
+    if buf.len() < 4 + n {
+        return Ok(None);
+    }
+    let rest = buf.split_off(4 + n);
+    let mut frame = std::mem::replace(buf, rest);
+    frame.drain(..4);
+    Ok(Some(frame))
+}
+
+/// A response assembled as a list of byte segments for the readiness
+/// loop's vectored writes. Small header fields append to the trailing
+/// segment (`Write` impl); large payloads the backend already owns —
+/// encoded window bytes `pread` from a spool file, codec output — are
+/// **adopted** as their own segment ([`Segments::adopt`]), so they reach
+/// the kernel without an intermediate concatenation copy.
+pub(crate) struct Segments {
+    parts: Vec<Vec<u8>>,
+}
+
+impl Segments {
+    fn new() -> Self {
+        Segments {
+            parts: vec![Vec::new()],
+        }
+    }
+
+    /// A one-byte status-only response.
+    fn status(status: u8) -> Self {
+        let mut s = Self::new();
+        s.push(status);
+        s
+    }
+
+    fn push(&mut self, b: u8) {
+        self.parts.last_mut().unwrap().push(b);
+    }
+
+    fn extend_from_slice(&mut self, bytes: &[u8]) {
+        self.parts.last_mut().unwrap().extend_from_slice(bytes);
+    }
+
+    /// Take ownership of a payload as its own wire segment (no copy); a
+    /// fresh tail segment is opened so later appends land after it.
+    fn adopt(&mut self, payload: Vec<u8>) {
+        self.parts.push(payload);
+        self.parts.push(Vec::new());
+    }
+
+    fn len(&self) -> usize {
+        self.parts.iter().map(|p| p.len()).sum()
+    }
+
+    /// Flatten to one contiguous buffer (the blocking-write path and the
+    /// tests; the readiness loop writes the segments directly).
+    fn concat(self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len());
+        for p in &self.parts {
+            out.extend_from_slice(p);
+        }
+        out
+    }
+}
+
+impl Write for Segments {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
 fn write_framed_tensor(w: &mut impl Write, name: &str, t: &Tensor) -> Result<()> {
     write_name(w, name)?;
     write_shape(w, t.shape())?;
@@ -209,7 +339,7 @@ fn write_framed_tensor(w: &mut impl Write, name: &str, t: &Tensor) -> Result<()>
 /// Legacy window frame: `name, shape, elems u64, f32 data`. Windows that
 /// arrive encoded are decoded first — a pre-capability reader never sees
 /// codec bytes.
-fn write_window_frame_raw(out: &mut Vec<u8>, w: &FetchedWindow) -> Result<()> {
+fn write_window_frame_raw(out: &mut Segments, w: &FetchedWindow) -> Result<()> {
     write_name(out, &w.name)?;
     write_shape(out, &w.shape)?;
     match &w.payload {
@@ -228,19 +358,21 @@ fn write_window_frame_raw(out: &mut Vec<u8>, w: &FetchedWindow) -> Result<()> {
 
 /// Capability window frame: `name, shape, codec u8, len u64, bytes` —
 /// the per-window tag records what the payload is actually encoded as.
-fn write_window_frame_tagged(out: &mut Vec<u8>, w: &FetchedWindow) -> Result<()> {
+/// Consumes the window so an encoded payload (`pread` bytes from a spool
+/// backend, codec output) is adopted as a wire segment, not copied.
+fn write_window_frame_tagged(out: &mut Segments, w: FetchedWindow) -> Result<()> {
     write_name(out, &w.name)?;
     write_shape(out, &w.shape)?;
-    match &w.payload {
+    match w.payload {
         WindowPayload::Raw(data) => {
             out.push(Codec::Raw.id());
             out.extend_from_slice(&((data.len() * 4) as u64).to_le_bytes());
-            write_f32s(out, data)?;
+            write_f32s(out, &data)?;
         }
         WindowPayload::Encoded { codec, bytes } => {
             out.push(codec.id());
             out.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
-            out.extend_from_slice(bytes);
+            out.adopt(bytes);
         }
     }
     Ok(())
@@ -279,10 +411,56 @@ enum Listener {
     Unix(UnixListener),
 }
 
+impl Listener {
+    fn set_nonblocking(&self, v: bool) -> std::io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(v),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(v),
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<Conn> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| Conn::Unix(s)),
+        }
+    }
+
+    #[cfg(unix)]
+    fn raw_fd(&self) -> std::os::unix::io::RawFd {
+        use std::os::unix::io::AsRawFd;
+        match self {
+            Listener::Tcp(l) => l.as_raw_fd(),
+            Listener::Unix(l) => l.as_raw_fd(),
+        }
+    }
+}
+
 enum Conn {
     Tcp(TcpStream),
     #[cfg(unix)]
     Unix(UnixStream),
+}
+
+impl Conn {
+    fn set_nonblocking(&self, v: bool) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_nonblocking(v),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_nonblocking(v),
+        }
+    }
+
+    #[cfg(unix)]
+    fn raw_fd(&self) -> std::os::unix::io::RawFd {
+        use std::os::unix::io::AsRawFd;
+        match self {
+            Conn::Tcp(s) => s.as_raw_fd(),
+            Conn::Unix(s) => s.as_raw_fd(),
+        }
+    }
 }
 
 impl Read for Conn {
@@ -304,6 +482,14 @@ impl Write for Conn {
         }
     }
 
+    fn write_vectored(&mut self, bufs: &[IoSlice<'_>]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write_vectored(bufs),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write_vectored(bufs),
+        }
+    }
+
     fn flush(&mut self) -> std::io::Result<()> {
         match self {
             Conn::Tcp(s) => s.flush(),
@@ -313,72 +499,146 @@ impl Write for Conn {
     }
 }
 
-/// Counting semaphore over connection-worker slots (bounded accept pool).
-struct ConnPool {
-    active: std::sync::Mutex<usize>,
-    freed: std::sync::Condvar,
-    /// Slot bound for this server ([`MAX_CONNECTIONS`] unless overridden
-    /// at bind time).
-    cap: usize,
-}
+// --------------------------------------------------------------- readiness
+//
+// The readiness primitive behind the event loop. On unix it is a
+// minimal binding to `poll(2)` — std already links libc, so the symbol
+// resolves without adding a dependency; this is the crate's only
+// `unsafe` block and it hands the kernel nothing but a stack slice of
+// repr(C) pollfd structs. Elsewhere a short-sleep fallback reports
+// every socket as possibly-ready: the sockets are nonblocking, so a
+// not-actually-ready socket costs one `WouldBlock` per tick.
 
-impl ConnPool {
-    fn new(cap: usize) -> Self {
-        ConnPool {
-            active: std::sync::Mutex::new(0),
-            freed: std::sync::Condvar::new(),
-            cap: cap.max(1),
-        }
+#[cfg(unix)]
+mod readiness {
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+
+    /// `struct pollfd` from `poll.h`.
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: std::os::unix::io::RawFd,
+        pub events: i16,
+        pub revents: i16,
     }
 
-    /// Block until a worker slot is free, then claim it; `None` once
-    /// shutdown is requested (a full pool must not wedge the accept
-    /// thread past shutdown — the loopback wakeup cannot reach a loop
-    /// that is waiting here, so the wait polls the flag). The returned
-    /// guard releases the slot on drop (worker exit — or the spawn
-    /// failing, which drops the closure holding the guard).
-    fn acquire(pool: &Arc<ConnPool>, shutdown: &AtomicBool) -> Option<ConnSlot> {
-        let mut n = pool.active.lock().unwrap();
-        while *n >= pool.cap {
-            if shutdown.load(Ordering::SeqCst) {
-                return None;
+    extern "C" {
+        fn poll(
+            fds: *mut PollFd,
+            nfds: std::os::raw::c_ulong,
+            timeout: std::os::raw::c_int,
+        ) -> std::os::raw::c_int;
+    }
+
+    /// Wait until any registered fd is ready, at most `timeout_ms`.
+    /// Readiness (including errors/hangups) lands in each entry's
+    /// `revents`; a timeout or `EINTR` leaves them all zero.
+    pub fn wait(fds: &mut [PollFd], timeout_ms: i32) {
+        if fds.is_empty() {
+            std::thread::sleep(std::time::Duration::from_millis(timeout_ms.max(0) as u64));
+            return;
+        }
+        // SAFETY: `fds` is a valid exclusively-borrowed slice of repr(C)
+        // pollfd structs for the whole call; poll(2) only writes the
+        // `revents` fields within it.
+        unsafe {
+            poll(fds.as_mut_ptr(), fds.len() as std::os::raw::c_ulong, timeout_ms);
+        }
+    }
+}
+
+/// One registered connection in the readiness loop: the nonblocking
+/// socket plus its state-machine buffers (module docs — READ accumulates
+/// into `inbox`, WRITE drains `outbox` with vectored writes).
+struct Connection {
+    conn: Conn,
+    /// Received bytes not yet consumed; complete frames are split off
+    /// the front, partial frames wait for more readable bytes.
+    inbox: Vec<u8>,
+    /// In-flight response, if any: no further request is dispatched on
+    /// this connection until it drains (per-connection ordering — and
+    /// natural backpressure for pipelined clients).
+    outbox: Option<PendingWrite>,
+    /// Last byte moved in either direction (idle sweep).
+    last_activity: Instant,
+}
+
+impl Connection {
+    fn new(conn: Conn) -> Self {
+        Connection {
+            conn,
+            inbox: Vec::new(),
+            outbox: None,
+            last_activity: Instant::now(),
+        }
+    }
+}
+
+/// A partially written response frame: the length-prefix segment plus
+/// the body segments, with a cursor (`seg`, `off`) marking how far the
+/// kernel has taken it.
+struct PendingWrite {
+    segments: Vec<Vec<u8>>,
+    seg: usize,
+    off: usize,
+}
+
+impl PendingWrite {
+    /// Frame a [`Segments`] response: the `u32 LE` length prefix becomes
+    /// its own leading segment, the body segments follow untouched.
+    fn frame(body: Segments) -> Result<Self> {
+        let len = body.len();
+        if len > MAX_FRAME {
+            bail!("frame of {len} bytes exceeds the {MAX_FRAME}-byte cap (checkpoint too large for one frame)");
+        }
+        let mut segments = Vec::with_capacity(body.parts.len() + 1);
+        segments.push((len as u32).to_le_bytes().to_vec());
+        segments.extend(body.parts);
+        Ok(PendingWrite {
+            segments,
+            seg: 0,
+            off: 0,
+        })
+    }
+
+    /// Advance the cursor past `n` written bytes.
+    fn advance(&mut self, mut n: usize) {
+        while n > 0 && self.seg < self.segments.len() {
+            let left = self.segments[self.seg].len() - self.off;
+            if n < left {
+                self.off += n;
+                return;
             }
-            let (guard, _timed_out) = pool
-                .freed
-                .wait_timeout(n, Duration::from_millis(100))
-                .unwrap();
-            n = guard;
+            n -= left;
+            self.seg += 1;
+            self.off = 0;
         }
-        *n += 1;
-        Some(ConnSlot(pool.clone()))
     }
 
-    fn active(&self) -> usize {
-        *self.active.lock().unwrap()
-    }
-}
-
-struct ConnSlot(Arc<ConnPool>);
-
-impl Drop for ConnSlot {
-    fn drop(&mut self) {
-        let mut n = self.0.active.lock().unwrap();
-        *n -= 1;
-        drop(n);
-        self.0.freed.notify_one();
+    /// Bytes not yet taken by the kernel.
+    fn remaining(&self) -> usize {
+        self.segments[self.seg.min(self.segments.len())..]
+            .iter()
+            .map(|s| s.len())
+            .sum::<usize>()
+            - self.off
     }
 }
 
-/// Serves an [`InProcess`] store over the wire protocol: a blocking
-/// accept loop on a background thread hands each connection to its own
-/// worker thread (see the module's Concurrency section). Dropping the
-/// server shuts the accept loop down; lingering connection workers exit
-/// at their next frame boundary (or read timeout).
+/// Serves an [`ExchangeTransport`] backend over the wire protocol from
+/// one event-driven readiness loop (see the module's readiness-loop
+/// section). The default binds own an [`InProcess`] store; the `_over`
+/// binds serve any backend — a spool gateway, a relay mirror. Dropping
+/// the server shuts the loop down, closing every registered connection.
 pub struct SocketServer {
     addr: String,
-    store: Arc<InProcess>,
+    /// `Some` for the default binds that own their store; `None` when
+    /// bound over an external backend.
+    store: Option<Arc<InProcess>>,
     shutdown: Arc<AtomicBool>,
-    pool: Arc<ConnPool>,
+    /// Connections currently registered in the loop (observability).
+    active: Arc<AtomicUsize>,
+    cap: usize,
     handle: Option<std::thread::JoinHandle<()>>,
     /// Unix-socket path to unlink on shutdown.
     unlink: Option<PathBuf>,
@@ -386,39 +646,70 @@ pub struct SocketServer {
 
 impl SocketServer {
     /// Bind a TCP endpoint (`"127.0.0.1:0"` picks a free port; the
-    /// resolved address is [`SocketServer::addr`]) with the default
-    /// [`MAX_CONNECTIONS`] worker pool.
+    /// resolved address is [`SocketServer::addr`]) over a server-owned
+    /// [`InProcess`] store, with the default [`MAX_CONNECTIONS`] cap.
     pub fn bind_tcp(addr: &str, history: usize) -> Result<Self> {
         Self::bind_tcp_with(addr, history, MAX_CONNECTIONS)
     }
 
-    /// [`SocketServer::bind_tcp`] with an explicit bound on concurrently
-    /// served connections (clamped to at least 1).
+    /// [`SocketServer::bind_tcp`] with an explicit bound on registered
+    /// connections (clamped to at least 1).
     pub fn bind_tcp_with(addr: &str, history: usize, max_connections: usize) -> Result<Self> {
+        let store = Arc::new(InProcess::new(history));
+        let mut server = Self::bind_tcp_over(addr, store.clone(), max_connections)?;
+        server.store = Some(store);
+        Ok(server)
+    }
+
+    /// Bind a TCP endpoint serving an arbitrary backend: every wire
+    /// request dispatches to `backend`'s trait ops. Serving a
+    /// [`SpoolDir`](crate::codistill::transport::SpoolDir) makes the
+    /// server a spool gateway (encoded `DELTA` windows stream straight
+    /// from their `pread` ranges); serving a relay mirror makes it a
+    /// fan-out node.
+    pub fn bind_tcp_over(
+        addr: &str,
+        backend: Arc<dyn ExchangeTransport>,
+        max_connections: usize,
+    ) -> Result<Self> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding tcp {addr}"))?;
         let resolved = listener.local_addr()?.to_string();
-        Self::spawn(Listener::Tcp(listener), resolved, history, None, max_connections)
+        Self::spawn(Listener::Tcp(listener), resolved, backend, None, max_connections)
     }
 
     /// Bind a Unix-domain socket at `path` (any stale socket file is
-    /// replaced) with the default [`MAX_CONNECTIONS`] worker pool.
+    /// replaced) over a server-owned [`InProcess`] store, with the
+    /// default [`MAX_CONNECTIONS`] cap.
     #[cfg(unix)]
     pub fn bind_unix(path: &Path, history: usize) -> Result<Self> {
         Self::bind_unix_with(path, history, MAX_CONNECTIONS)
     }
 
-    /// [`SocketServer::bind_unix`] with an explicit bound on
-    /// concurrently served connections (clamped to at least 1).
+    /// [`SocketServer::bind_unix`] with an explicit bound on registered
+    /// connections (clamped to at least 1).
     #[cfg(unix)]
     pub fn bind_unix_with(path: &Path, history: usize, max_connections: usize) -> Result<Self> {
+        let store = Arc::new(InProcess::new(history));
+        let mut server = Self::bind_unix_over(path, store.clone(), max_connections)?;
+        server.store = Some(store);
+        Ok(server)
+    }
+
+    /// [`SocketServer::bind_tcp_over`] on a Unix-domain socket.
+    #[cfg(unix)]
+    pub fn bind_unix_over(
+        path: &Path,
+        backend: Arc<dyn ExchangeTransport>,
+        max_connections: usize,
+    ) -> Result<Self> {
         std::fs::remove_file(path).ok();
         let listener = UnixListener::bind(path)
             .with_context(|| format!("binding unix socket {}", path.display()))?;
         Self::spawn(
             Listener::Unix(listener),
             path.display().to_string(),
-            history,
+            backend,
             Some(path.to_path_buf()),
             max_connections,
         )
@@ -427,24 +718,24 @@ impl SocketServer {
     fn spawn(
         listener: Listener,
         addr: String,
-        history: usize,
+        backend: Arc<dyn ExchangeTransport>,
         unlink: Option<PathBuf>,
         max_connections: usize,
     ) -> Result<Self> {
-        let store = Arc::new(InProcess::new(history));
+        let cap = max_connections.max(1);
         let shutdown = Arc::new(AtomicBool::new(false));
-        let pool = Arc::new(ConnPool::new(max_connections));
-        let thread_store = store.clone();
+        let active = Arc::new(AtomicUsize::new(0));
         let thread_shutdown = shutdown.clone();
-        let thread_pool = pool.clone();
+        let thread_active = active.clone();
         let handle = std::thread::Builder::new()
-            .name("ckpt-exchange-accept".into())
-            .spawn(move || accept_loop(listener, thread_store, thread_shutdown, thread_pool))?;
+            .name("ckpt-exchange-loop".into())
+            .spawn(move || event_loop(listener, backend, thread_shutdown, thread_active, cap))?;
         Ok(SocketServer {
             addr,
-            store,
+            store: None,
             shutdown,
-            pool,
+            active,
+            cap,
             handle: Some(handle),
             unlink,
         })
@@ -455,25 +746,29 @@ impl SocketServer {
         &self.addr
     }
 
-    /// Connections currently held by worker threads (observability for
-    /// the concurrency tests; racy by nature).
+    /// Connections currently registered in the readiness loop
+    /// (observability for the concurrency tests; racy by nature).
     pub fn active_connections(&self) -> usize {
-        self.pool.active()
+        self.active.load(Ordering::SeqCst)
     }
 
-    /// This server's bound on concurrently served connections.
+    /// This server's bound on concurrently registered connections.
     pub fn max_connections(&self) -> usize {
-        self.pool.cap
+        self.cap
     }
 
-    /// The store behind the endpoint (the server process's own members
-    /// can exchange through it zero-copy while remote members use the
-    /// wire).
+    /// The store behind a default-bound endpoint (the server process's
+    /// own members can exchange through it zero-copy while remote
+    /// members use the wire). Panics for a server bound `_over` an
+    /// external backend, which has no server-owned store.
     pub fn store(&self) -> &Arc<InProcess> {
-        &self.store
+        self.store
+            .as_ref()
+            .expect("server bound over an external backend has no local store")
     }
 
-    /// Wake the blocking accept so it can observe the shutdown flag.
+    /// Wake the readiness wait so it observes the shutdown flag
+    /// immediately instead of at the next [`POLL_TICK`].
     fn wake_accept(&self) {
         match &self.unlink {
             #[cfg(unix)]
@@ -502,112 +797,207 @@ impl Drop for SocketServer {
     }
 }
 
-/// Blocking accept loop: claim a worker slot (bounded pool), accept, hand
-/// the connection to a worker thread. No polling — an idle server sits in
-/// the kernel's accept until a client (or the shutdown wakeup) connects.
-fn accept_loop(
+/// The readiness loop: nonblocking accept + per-connection state
+/// machines, one thread for the whole server (module docs). Exits when
+/// the shutdown flag flips; every registered connection drops with it.
+fn event_loop(
     listener: Listener,
-    store: Arc<InProcess>,
+    backend: Arc<dyn ExchangeTransport>,
     shutdown: Arc<AtomicBool>,
-    pool: Arc<ConnPool>,
+    active: Arc<AtomicUsize>,
+    cap: usize,
 ) {
-    loop {
-        // Claim the slot before accepting so the pool bound also bounds
-        // accepted-but-unserved sockets.
-        let slot = match ConnPool::acquire(&pool, &shutdown) {
-            Some(slot) => slot,
-            None => return,
-        };
-        let conn = match &listener {
-            Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::Tcp(s)),
-            #[cfg(unix)]
-            Listener::Unix(l) => l.accept().map(|(s, _)| Conn::Unix(s)),
-        };
-        if shutdown.load(Ordering::SeqCst) {
-            return;
-        }
-        match conn {
-            Ok(conn) => {
-                let store = store.clone();
-                let shutdown = shutdown.clone();
-                // Spawn failure drops the closure (and with it the slot
-                // guard and the connection) — the server itself survives.
-                std::thread::Builder::new()
-                    .name("ckpt-exchange-conn".into())
-                    .spawn(move || {
-                        let _slot = slot;
-                        serve_connection(conn, &store, &shutdown);
-                    })
-                    .ok();
-            }
-            Err(_) => {
-                // Transient accept failure (EMFILE, aborted handshake):
-                // release the slot and retry without spinning hot. The
-                // shutdown check above still runs each iteration, so a
-                // persistently failing accept cannot outlive the server.
-                drop(slot);
-                std::thread::sleep(Duration::from_millis(5));
-            }
-        }
-    }
-}
-
-/// Serve one connection until EOF, timeout, error, or shutdown. Errors
-/// are isolated here: they end this connection and nothing else.
-fn serve_connection(mut conn: Conn, store: &InProcess, shutdown: &AtomicBool) {
-    let _ = match &mut conn {
-        Conn::Tcp(s) => s.set_read_timeout(Some(READ_TIMEOUT)),
-        #[cfg(unix)]
-        Conn::Unix(s) => s.set_read_timeout(Some(READ_TIMEOUT)),
-    };
+    let _ = listener.set_nonblocking(true);
+    let mut conns: Vec<Connection> = Vec::new();
     while !shutdown.load(Ordering::SeqCst) {
-        match read_frame(&mut conn) {
-            Ok(Some(request)) => {
-                let response = handle_request(store, &request);
-                if write_frame(&mut conn, &response).is_err() {
-                    return;
+        let accept_open = conns.len() < cap;
+        let ready = wait_for_readiness(&listener, &conns, accept_open);
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        // Drain the accept queue up to the cap. Past the cap the
+        // listener is simply not polled, so pending connects wait in the
+        // kernel backlog instead of being accepted-then-starved.
+        if accept_open && ready.accept {
+            while conns.len() < cap {
+                match listener.accept() {
+                    Ok(conn) => {
+                        let _ = conn.set_nonblocking(true);
+                        conns.push(Connection::new(conn));
+                    }
+                    // WouldBlock = queue drained; any other accept error
+                    // (EMFILE, aborted handshake) is transient — retry
+                    // next tick rather than spinning here.
+                    Err(_) => break,
                 }
             }
-            // Clean EOF, read timeout, or a torn frame: drop the
-            // connection, keep the server.
-            Ok(None) | Err(_) => return,
+        }
+        // Advance every connection the wait flagged (the non-unix
+        // fallback flags all of them). `retain_mut` visits in order, so
+        // the readiness flags line up with the connection indices.
+        let now = Instant::now();
+        let mut idx = 0;
+        conns.retain_mut(|c| {
+            let flagged = ready.conns.get(idx).copied().unwrap_or(true);
+            idx += 1;
+            let alive = !flagged || progress(c, backend.as_ref());
+            alive && now.duration_since(c.last_activity) <= READ_TIMEOUT
+        });
+        active.store(conns.len(), Ordering::SeqCst);
+    }
+    active.store(0, Ordering::SeqCst);
+}
+
+/// Which sockets have work: the listener plus one flag per connection.
+struct Ready {
+    accept: bool,
+    conns: Vec<bool>,
+}
+
+/// Readiness wait over the listener and every registered connection: a
+/// connection with a pending response waits on writability, an idle one
+/// on readability. Bounded by [`POLL_TICK`] so the shutdown flag is
+/// re-checked even with no socket activity.
+#[cfg(unix)]
+fn wait_for_readiness(listener: &Listener, conns: &[Connection], accept_open: bool) -> Ready {
+    use readiness::{PollFd, POLLIN, POLLOUT};
+    let mut fds = Vec::with_capacity(conns.len() + 1);
+    fds.push(PollFd {
+        fd: listener.raw_fd(),
+        // With the cap reached, events=0 still surfaces listener errors
+        // but suppresses accept readiness.
+        events: if accept_open { POLLIN } else { 0 },
+        revents: 0,
+    });
+    for c in conns {
+        fds.push(PollFd {
+            fd: c.conn.raw_fd(),
+            events: if c.outbox.is_some() { POLLOUT } else { POLLIN },
+            revents: 0,
+        });
+    }
+    readiness::wait(&mut fds, POLL_TICK.as_millis() as i32);
+    Ready {
+        accept: fds[0].revents != 0,
+        conns: fds[1..].iter().map(|f| f.revents != 0).collect(),
+    }
+}
+
+/// Non-unix fallback: a short sleep, then everything reported ready.
+/// The sockets are nonblocking, so a not-actually-ready socket costs a
+/// single `WouldBlock` per tick — correct, just not as idle-cheap.
+#[cfg(not(unix))]
+fn wait_for_readiness(_listener: &Listener, conns: &[Connection], _accept_open: bool) -> Ready {
+    std::thread::sleep(Duration::from_millis(2));
+    Ready {
+        accept: true,
+        conns: vec![true; conns.len()],
+    }
+}
+
+/// Advance one connection's state machine as far as its socket allows:
+/// drain the outbox, split complete request frames off the inbox,
+/// dispatch, repeat. Returns `false` when the connection is finished
+/// (EOF, error, torn or oversized frame) and should be dropped — errors
+/// are isolated here; they end this connection and nothing else.
+fn progress(c: &mut Connection, backend: &dyn ExchangeTransport) -> bool {
+    let mut scratch = [0u8; 64 * 1024];
+    loop {
+        // WRITE: an in-flight response drains before anything else —
+        // no new request is dispatched past a pending reply.
+        while let Some(pending) = c.outbox.as_mut() {
+            if pending.remaining() == 0 {
+                c.outbox = None;
+                break;
+            }
+            let slices: Vec<IoSlice<'_>> = pending.segments[pending.seg..]
+                .iter()
+                .enumerate()
+                .map(|(i, s)| IoSlice::new(if i == 0 { &s[pending.off..] } else { s }))
+                .filter(|s| !s.is_empty())
+                .collect();
+            match c.conn.write_vectored(&slices) {
+                Ok(0) => return false,
+                Ok(n) => {
+                    pending.advance(n);
+                    c.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => return false,
+            }
+        }
+        // DISPATCH: a complete buffered frame becomes the next outbox.
+        match take_frame(&mut c.inbox) {
+            Ok(Some(request)) => {
+                c.last_activity = Instant::now();
+                match PendingWrite::frame(respond(backend, &request)) {
+                    Ok(pending) => c.outbox = Some(pending),
+                    // A response too large to frame: protocol error on
+                    // this connection (same as the blocking write path).
+                    Err(_) => return false,
+                }
+                continue;
+            }
+            Ok(None) => {}
+            Err(_) => return false,
+        }
+        // READ: pull whatever the socket has into the inbox.
+        match c.conn.read(&mut scratch) {
+            // EOF — clean between frames or torn mid-frame, either way
+            // this connection is done.
+            Ok(0) => return false,
+            Ok(n) => {
+                c.inbox.extend_from_slice(&scratch[..n]);
+                c.last_activity = Instant::now();
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return false,
         }
     }
 }
 
-/// Dispatch one request payload; never panics the server thread — every
+/// Dispatch one request payload; never panics the loop thread — every
 /// failure becomes a `STATUS_ERR` response.
-fn handle_request(store: &InProcess, payload: &[u8]) -> Vec<u8> {
-    match try_handle(store, payload) {
+fn respond(backend: &dyn ExchangeTransport, payload: &[u8]) -> Segments {
+    match try_handle(backend, payload) {
         Ok(response) => response,
         Err(e) => {
-            let mut out = vec![STATUS_ERR];
+            let mut out = Segments::status(STATUS_ERR);
             out.extend_from_slice(format!("{e:#}").as_bytes());
             out
         }
     }
 }
 
-fn try_handle(store: &InProcess, payload: &[u8]) -> Result<Vec<u8>> {
+/// [`respond`] flattened to one buffer (tests and legacy-server
+/// simulations that still speak blocking `write_frame`).
+#[cfg(test)]
+fn handle_request(backend: &dyn ExchangeTransport, payload: &[u8]) -> Vec<u8> {
+    respond(backend, payload).concat()
+}
+
+fn try_handle(backend: &dyn ExchangeTransport, payload: &[u8]) -> Result<Segments> {
     let mut r = payload;
     let mut op = [0u8; 1];
     r.read_exact(&mut op)?;
     match op[0] {
         OP_PUBLISH => {
             let ckpt = Checkpoint::read_from(&mut r)?;
-            store.publish(ckpt)?;
-            Ok(vec![STATUS_OK])
+            backend.publish(ckpt)?;
+            Ok(Segments::status(STATUS_OK))
         }
         OP_LATEST => {
             let member = read_u64(&mut r)? as usize;
             let max_step = read_u64(&mut r)?;
-            match store.latest_at_most(member, max_step) {
+            match backend.latest_at_most(member, max_step)? {
                 Some(ckpt) => {
-                    let mut out = vec![STATUS_OK];
+                    let mut out = Segments::status(STATUS_OK);
                     ckpt.write_to(&mut out)?;
                     Ok(out)
                 }
-                None => Ok(vec![STATUS_NONE]),
+                None => Ok(Segments::status(STATUS_NONE)),
             }
         }
         OP_FETCH => {
@@ -630,42 +1020,43 @@ fn try_handle(store: &InProcess, payload: &[u8]) -> Result<Vec<u8>> {
             } else {
                 Codec::Raw
             };
-            match store.latest_at_most(member, max_step) {
+            match backend.latest_at_most(member, max_step)? {
                 Some(ckpt) => {
                     let fetch = windows_from_checkpoint(&ckpt, &names)?;
-                    let mut out = vec![STATUS_OK];
+                    let mut out = Segments::status(STATUS_OK);
                     out.extend_from_slice(&(fetch.member as u64).to_le_bytes());
                     out.extend_from_slice(&fetch.step.to_le_bytes());
                     out.extend_from_slice(&(fetch.windows.len() as u32).to_le_bytes());
-                    for w in &fetch.windows {
+                    for w in fetch.windows {
                         if cap {
                             // Encode straight off the window's payload —
                             // windows_from_checkpoint hands over decoded
-                            // data, so no second copy before the encode.
+                            // data, so no second copy before the encode —
+                            // and adopt the encoder's output as the wire
+                            // segment.
                             let (tag, bytes) = match &w.payload {
                                 WindowPayload::Raw(data) => codec.encode(data),
                                 WindowPayload::Encoded { .. } => codec.encode(&w.to_f32()?),
                             };
-                            write_name(&mut out, &w.name)?;
-                            write_shape(&mut out, &w.shape)?;
-                            out.push(tag.id());
-                            out.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
-                            out.extend_from_slice(&bytes);
+                            write_window_frame_tagged(
+                                &mut out,
+                                FetchedWindow::encoded(w.name, w.shape, tag, bytes),
+                            )?;
                         } else {
-                            write_window_frame_raw(&mut out, w)?;
+                            write_window_frame_raw(&mut out, &w)?;
                         }
                     }
                     Ok(out)
                 }
-                None => Ok(vec![STATUS_NONE]),
+                None => Ok(Segments::status(STATUS_NONE)),
             }
         }
         OP_DESCRIBE => {
             let member = read_u64(&mut r)? as usize;
             let max_step = read_u64(&mut r)?;
-            match store.latest_at_most(member, max_step) {
+            match backend.latest_at_most(member, max_step)? {
                 Some(ckpt) => {
-                    let mut out = vec![STATUS_OK];
+                    let mut out = Segments::status(STATUS_OK);
                     out.extend_from_slice(&(ckpt.member as u64).to_le_bytes());
                     out.extend_from_slice(&ckpt.step.to_le_bytes());
                     let layout = ckpt.flat().layout();
@@ -681,12 +1072,12 @@ fn try_handle(store: &InProcess, payload: &[u8]) -> Result<Vec<u8>> {
                     }
                     Ok(out)
                 }
-                None => Ok(vec![STATUS_NONE]),
+                None => Ok(Segments::status(STATUS_NONE)),
             }
         }
         OP_MEMBERS => {
-            let members = store.members();
-            let mut out = vec![STATUS_OK];
+            let members = backend.members()?;
+            let mut out = Segments::status(STATUS_OK);
             out.extend_from_slice(&(members.len() as u64).to_le_bytes());
             for m in members {
                 out.extend_from_slice(&(m as u64).to_le_bytes());
@@ -694,12 +1085,12 @@ fn try_handle(store: &InProcess, payload: &[u8]) -> Result<Vec<u8>> {
             Ok(out)
         }
         OP_GC => {
-            ExchangeTransport::gc(store)?;
-            Ok(vec![STATUS_OK])
+            backend.gc()?;
+            Ok(Segments::status(STATUS_OK))
         }
         OP_STEPS => {
-            let steps = store.last_steps();
-            let mut out = vec![STATUS_OK];
+            let steps = backend.last_steps()?;
+            let mut out = Segments::status(STATUS_OK);
             out.extend_from_slice(&(steps.len() as u64).to_le_bytes());
             for (m, s) in steps {
                 out.extend_from_slice(&(m as u64).to_le_bytes());
@@ -757,13 +1148,15 @@ fn try_handle(store: &InProcess, payload: &[u8]) -> Result<Vec<u8>> {
                 windows,
                 codec,
             };
-            // The server IS an InProcess store: answer with its native
-            // fetch so this path can never diverge from the reference
-            // backend (which also does the per-window encoding when the
-            // spec carries a codec).
-            match ExchangeTransport::fetch(store, &spec)? {
+            // Answer with the backend's native fetch so this path can
+            // never diverge from serving the backend directly: an
+            // InProcess store compares digests against the shared plane,
+            // a SpoolDir `pread`s exactly the changed encoded ranges —
+            // which the tagged writer below adopts as wire segments
+            // untouched — and a relay mirror serves its installed plane.
+            match backend.fetch(&spec)? {
                 Some(res) => {
-                    let mut out = vec![STATUS_OK];
+                    let mut out = Segments::status(STATUS_OK);
                     out.extend_from_slice(&(res.member as u64).to_le_bytes());
                     out.extend_from_slice(&res.step.to_le_bytes());
                     out.extend_from_slice(&(res.parts.len() as u64).to_le_bytes());
@@ -782,13 +1175,15 @@ fn try_handle(store: &InProcess, payload: &[u8]) -> Result<Vec<u8>> {
                             for e in entries {
                                 if cap {
                                     let (tag, bytes) = codec.encode(&flat.data()[e.range()]);
-                                    let w = FetchedWindow::encoded(
-                                        e.name.clone(),
-                                        e.shape.clone(),
-                                        tag,
-                                        bytes,
-                                    );
-                                    write_window_frame_tagged(&mut out, &w)?;
+                                    write_window_frame_tagged(
+                                        &mut out,
+                                        FetchedWindow::encoded(
+                                            e.name.clone(),
+                                            e.shape.clone(),
+                                            tag,
+                                            bytes,
+                                        ),
+                                    )?;
                                 } else {
                                     write_name(&mut out, &e.name)?;
                                     write_shape(&mut out, &e.shape)?;
@@ -799,11 +1194,11 @@ fn try_handle(store: &InProcess, payload: &[u8]) -> Result<Vec<u8>> {
                         }
                         None => {
                             out.extend_from_slice(&(res.windows.len() as u32).to_le_bytes());
-                            for w in &res.windows {
+                            for w in res.windows {
                                 if cap {
                                     write_window_frame_tagged(&mut out, w)?;
                                 } else {
-                                    write_window_frame_raw(&mut out, w)?;
+                                    write_window_frame_raw(&mut out, &w)?;
                                 }
                             }
                         }
@@ -819,7 +1214,7 @@ fn try_handle(store: &InProcess, payload: &[u8]) -> Result<Vec<u8>> {
                     }
                     Ok(out)
                 }
-                None => Ok(vec![STATUS_NONE]),
+                None => Ok(Segments::status(STATUS_NONE)),
             }
         }
         other => bail!("unknown opcode {other}"),
@@ -1639,7 +2034,7 @@ mod tests {
                     out.extend_from_slice(format!("bad basis flag {}", req[17]).as_bytes());
                     out
                 } else {
-                    handle_request(&thread_store, &req)
+                    handle_request(thread_store.as_ref(), &req)
                 };
                 write_frame(&mut s, &reply).ok();
             }
@@ -1751,5 +2146,255 @@ mod tests {
         drop(client);
         drop(server);
         assert!(!path.exists(), "socket file not unlinked on shutdown");
+    }
+
+    // -------------------------------------- readiness-loop edge cases
+    //
+    // Regressions for the event-driven rewrite: partial writes parked on
+    // POLLOUT, torn frames, shutdown with live state machines, and
+    // byte-compatibility with thread-pool-era blocking clients.
+
+    /// Raw LATEST request frame for `member`, unbounded staleness.
+    fn latest_request(member: u64) -> Vec<u8> {
+        let mut req = vec![OP_LATEST];
+        req.extend_from_slice(&member.to_le_bytes());
+        req.extend_from_slice(&u64::MAX.to_le_bytes());
+        req
+    }
+
+    /// A plane large enough that its reply cannot fit any kernel socket
+    /// buffer, forcing the server's vectored write to park on POLLOUT.
+    fn big_ckpt(member: usize, step: u64) -> Checkpoint {
+        let elems = 2 * 1024 * 1024; // 8 MB of f32 payload
+        let vals: Vec<f32> = (0..elems).map(|i| i as f32 * 0.5).collect();
+        let mut params = TensorMap::new();
+        params.insert("params.big", Tensor::f32(&[elems], vals).unwrap());
+        Checkpoint::new(member, step, params)
+    }
+
+    /// A reader that drains an 8 MB reply in dribs while other clients
+    /// fetch: the partial-write path must resume exactly where it parked
+    /// and deliver a byte-identical frame, without stalling the loop.
+    #[test]
+    fn slow_reader_partial_writes_resume_byte_identical() {
+        use std::io::Read as _;
+
+        let server = SocketServer::bind_tcp("127.0.0.1:0", 4).unwrap();
+        let publisher = SocketTransport::connect_tcp(server.addr());
+        publisher.publish(big_ckpt(0, 3)).unwrap();
+        let req = latest_request(0);
+        let expected = handle_request(server.store().as_ref(), &req);
+
+        // The slow reader sends its request and then reads NOTHING: the
+        // server fills the socket buffers and parks the rest on POLLOUT.
+        let mut slow = TcpStream::connect(server.addr()).unwrap();
+        write_frame(&mut slow, &req).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+
+        // Parked writer must not block anyone else.
+        let fast = SocketTransport::connect_tcp(server.addr());
+        let got = fast.latest(0).unwrap().unwrap();
+        assert_eq!(got.step, 3);
+
+        // Now drain the reply in 64 KB sips and compare every byte.
+        let mut len = [0u8; 4];
+        slow.read_exact(&mut len).unwrap();
+        let total = u32::from_le_bytes(len) as usize;
+        assert_eq!(total, expected.len());
+        let mut reply = vec![0u8; total];
+        let mut off = 0;
+        while off < total {
+            let end = (off + 64 * 1024).min(total);
+            slow.read_exact(&mut reply[off..end]).unwrap();
+            off = end;
+            if off % (1024 * 1024) < 64 * 1024 {
+                // stall every megabyte to re-exercise the park/resume path
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        assert_eq!(reply, expected, "partial-write resume corrupted the frame");
+        // the drained connection is idle again and the server healthy
+        assert_eq!(fast.latest(0).unwrap().unwrap().step, 3);
+    }
+
+    /// Clients vanishing mid-frame — half a length prefix, or a length
+    /// prefix promising bytes that never come — must cost exactly their
+    /// own connection: the state machine sees EOF, drops it, and the
+    /// loop keeps serving.
+    #[test]
+    fn mid_request_disconnect_leaves_server_healthy() {
+        let server = SocketServer::bind_tcp("127.0.0.1:0", 4).unwrap();
+        let publisher = SocketTransport::connect_tcp(server.addr());
+        publisher.publish(ckpt(0, 2, &[1.0, 2.0, 3.0, 4.0, 5.0])).unwrap();
+        let baseline = server.active_connections();
+
+        // half a length prefix, then gone
+        let mut torn_prefix = TcpStream::connect(server.addr()).unwrap();
+        torn_prefix.write_all(&[17u8, 0]).unwrap();
+        // a full prefix + the DESCRIBE opcode, but none of its body
+        let mut torn_body = TcpStream::connect(server.addr()).unwrap();
+        torn_body.write_all(&17u32.to_le_bytes()).unwrap();
+        torn_body.write_all(&[OP_DESCRIBE]).unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        drop(torn_prefix);
+        drop(torn_body);
+
+        // both EOFs are noticed within a poll tick or two
+        let t0 = std::time::Instant::now();
+        loop {
+            // only the publisher's connections are left registered
+            if server.active_connections() <= baseline {
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "torn connections never reaped: {} still active",
+                server.active_connections()
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // and the server answers new traffic as if nothing happened
+        let fresh = SocketTransport::connect_tcp(server.addr());
+        assert_eq!(fresh.latest(0).unwrap().unwrap().step, 2);
+    }
+
+    /// Dropping the server with registered connections in every state —
+    /// idle, mid-frame, reply pending — must still be prompt: the loop
+    /// notices the shutdown flag on the next tick and exits without
+    /// waiting out any timeout.
+    #[test]
+    fn shutdown_with_pending_connections_is_prompt() {
+        let server = SocketServer::bind_tcp("127.0.0.1:0", 4).unwrap();
+        let publisher = SocketTransport::connect_tcp(server.addr());
+        publisher.publish(big_ckpt(0, 1)).unwrap();
+
+        // idle registered connection
+        let idle = TcpStream::connect(server.addr()).unwrap();
+        // torn mid-frame
+        let mut torn = TcpStream::connect(server.addr()).unwrap();
+        torn.write_all(&[9u8, 0]).unwrap();
+        // reply parked on POLLOUT (8 MB response, reader never drains)
+        let mut parked = TcpStream::connect(server.addr()).unwrap();
+        write_frame(&mut parked, &latest_request(0)).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        assert!(server.active_connections() >= 3);
+
+        let t0 = std::time::Instant::now();
+        drop(server);
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "shutdown with pending connections took {:?}",
+            t0.elapsed()
+        );
+        drop((idle, torn, parked));
+    }
+
+    /// A thread-pool-era client — blocking `write_frame`/`read_frame`,
+    /// several sequential requests on ONE connection, then a pipelined
+    /// burst — must interoperate unchanged, byte-for-byte.
+    #[test]
+    fn legacy_blocking_client_interops_unchanged() {
+        use std::io::Read as _;
+
+        let server = SocketServer::bind_tcp("127.0.0.1:0", 4).unwrap();
+        let publisher = SocketTransport::connect_tcp(server.addr());
+        publisher.publish(ckpt(2, 4, &[1.0, 2.0, 3.0, 4.0, 5.0])).unwrap();
+        let store = server.store().clone();
+
+        let mut legacy = TcpStream::connect(server.addr()).unwrap();
+        let members_req = vec![OP_MEMBERS];
+        let steps_req = vec![OP_STEPS];
+        // sequential request/response, exactly like the old pool client
+        for req in [&members_req, &steps_req, &latest_request(2)] {
+            write_frame(&mut legacy, req).unwrap();
+            let reply = read_frame(&mut legacy).unwrap().expect("server hung up");
+            assert_eq!(
+                reply,
+                handle_request(store.as_ref(), req),
+                "legacy blocking roundtrip diverged"
+            );
+        }
+
+        // pipelined burst: both requests on the wire before any read;
+        // replies come back complete and in order
+        write_frame(&mut legacy, &members_req).unwrap();
+        write_frame(&mut legacy, &steps_req).unwrap();
+        let first = read_frame(&mut legacy).unwrap().unwrap();
+        let second = read_frame(&mut legacy).unwrap().unwrap();
+        assert_eq!(first, handle_request(store.as_ref(), &members_req));
+        assert_eq!(second, handle_request(store.as_ref(), &steps_req));
+
+        // and a torn pipelined tail (half a frame, then EOF) costs only
+        // this connection
+        write_frame(&mut legacy, &members_req).unwrap();
+        legacy.write_all(&[44u8, 0]).unwrap();
+        let reply = read_frame(&mut legacy).unwrap().unwrap();
+        assert_eq!(reply, handle_request(store.as_ref(), &members_req));
+        drop(legacy);
+        assert_eq!(
+            SocketTransport::connect_tcp(server.addr()).members().unwrap(),
+            vec![2]
+        );
+    }
+
+    /// `bind_tcp_over` a codec'd spool: DELTA windows stream from their
+    /// encoded pread ranges (tagged frames on the wire) and a delta
+    /// reader installs byte-identically to a direct spool read.
+    #[test]
+    fn server_over_spool_serves_encoded_windows() {
+        use crate::codistill::transport::{DeltaCache, SpoolDir};
+
+        let dir = std::env::temp_dir().join(format!(
+            "codistill_spool_gateway_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let spool =
+            Arc::new(SpoolDir::open(&dir, 4).unwrap().with_codec(Codec::Shuffle));
+        let server =
+            SocketServer::bind_tcp_over("127.0.0.1:0", spool.clone(), 8).unwrap();
+
+        // constant-valued hot window so the shuffle codec engages
+        let gateway_ckpt = |step: u64, v: f32| {
+            let mut params = TensorMap::new();
+            params.insert("params.hot", Tensor::f32(&[256], vec![v; 256]).unwrap());
+            params.insert("params.cold", Tensor::f32(&[256], vec![0.5; 256]).unwrap());
+            Checkpoint::new(0, step, params)
+        };
+        let publisher = SocketTransport::connect_tcp(server.addr());
+        publisher.publish(gateway_ckpt(1, 1.0)).unwrap();
+
+        let coded = SocketTransport::connect_tcp(server.addr()).with_codec(Codec::Shuffle);
+        let mut cache = DeltaCache::new().with_codec(Codec::Shuffle);
+        let a = cache.latest(&coded, 0).unwrap().unwrap();
+        let direct = spool.latest(0).unwrap().unwrap();
+        assert_eq!(a.flat().data(), direct.flat().data());
+
+        // second publication: the delta reply's moved window arrives
+        // encoded (streamed off the CKPT0004 pread range, never decoded
+        // server-side)
+        publisher.publish(gateway_ckpt(2, 2.0)).unwrap();
+        let basis = Basis {
+            step: 1,
+            digests: a.window_digests().as_ref().clone(),
+        };
+        let res = coded
+            .fetch(&crate::codistill::transport::FetchSpec::full(0, u64::MAX).with_basis(basis))
+            .unwrap()
+            .unwrap();
+        assert_eq!(res.unchanged, vec!["params.cold".to_string()]);
+        assert_eq!(res.windows.len(), 1);
+        assert_eq!(
+            res.windows[0].codec(),
+            Codec::Shuffle,
+            "gateway decoded the spool's encoded range instead of streaming it"
+        );
+        assert_eq!(res.windows[0].to_f32().unwrap(), vec![2.0; 256]);
+
+        // the delta cache over the gateway stays byte-identical too
+        let b = cache.latest(&coded, 0).unwrap().unwrap();
+        assert_eq!(b.flat().data(), spool.latest(0).unwrap().unwrap().flat().data());
+        drop(server);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -10,6 +10,7 @@ pub mod fig1;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
+pub mod relay;
 pub mod serve;
 pub mod table1;
 pub mod two_phase;

@@ -1,0 +1,203 @@
+//! `codistill relay`: checkpoint fan-out nodes and trees.
+//!
+//! Two modes:
+//!
+//! * **Node mode** (`upstream=HOST:PORT|unix:PATH` set): run one
+//!   [`Relay`] — subscribe to the upstream hub (or another relay) and
+//!   serve downstream readers on `listen` (default `127.0.0.1:0`; the
+//!   resolved address is printed so scripts can chain nodes). Runs for
+//!   `duration_s` seconds (0 = until killed), then prints the node's
+//!   refresh/forwarding stats.
+//! * **Demo mode** (no `upstream`): build a self-contained fan-out tree
+//!   over an in-process hub — `tree_depth` levels of `tree_fanout`
+//!   relays each, `readers` leaf readers — drive a publisher through
+//!   `publishes` publications, and verify every reader's final plane is
+//!   byte-identical to the hub's before printing per-level stats.
+//!
+//! Knobs (all `--set key=value` unless a dedicated flag exists):
+//!
+//! * `upstream=ADDR`, `listen=ADDR` (127.0.0.1:0), `duration_s=N` (0)
+//! * `poll_ms=MS` (5), `--delta` (default on; `delta=false` disables),
+//!   `--compress` / `codec=raw|shuffle`, `history=N` (4),
+//!   `max_connections=N`
+//! * demo: `tree_depth=N` (2), `tree_fanout=N` (2), `readers=N` (8),
+//!   `publishes=N` (3), `publish_steps=N` (5), `mock_frozen=N` (64),
+//!   `member=N` (0)
+
+use crate::codistill::transport::socket::MAX_CONNECTIONS;
+use crate::codistill::{
+    Codec, ExchangeTransport, Relay, RelayConfig, SocketTransport,
+};
+use crate::config::Settings;
+use crate::testkit::DriftMember;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn relay_config(s: &Settings) -> Result<RelayConfig> {
+    let codec = if s.bool_or("compress", false)? {
+        Codec::parse(s.str_or("codec", "shuffle"))?
+    } else {
+        Codec::Raw
+    };
+    Ok(RelayConfig {
+        poll_interval: Duration::from_millis(s.u64_or("poll_ms", 5)?),
+        delta: s.bool_or("delta", true)?,
+        codec,
+        history: s.usize_or("history", 4)?,
+        max_connections: s.usize_or("max_connections", MAX_CONNECTIONS)?,
+    })
+}
+
+fn stats_line(tag: &str, relay: &Relay) {
+    let st = relay.stats();
+    println!(
+        "[relay] {tag}: polls={} installs={} tolerated_errors={} passthrough={} forwarded_publishes={} \
+         delta(full={} delta={} moved={} unchanged={})",
+        st.polls,
+        st.installs,
+        st.tolerated_errors,
+        st.passthrough_fetches,
+        st.forwarded_publishes,
+        st.delta.full_fetches,
+        st.delta.delta_fetches,
+        st.delta.windows_moved,
+        st.delta.windows_unchanged
+    );
+}
+
+pub fn run(s: &Settings) -> Result<()> {
+    match s.get("upstream") {
+        Some(addr) => run_node(s, &addr.to_string()),
+        None => run_demo_tree(s),
+    }
+}
+
+/// One fan-out node between a live upstream and downstream readers.
+fn run_node(s: &Settings, upstream_addr: &str) -> Result<()> {
+    let cfg = relay_config(s)?;
+    let mut upstream = SocketTransport::connect(upstream_addr)?;
+    if cfg.codec != Codec::Raw {
+        upstream = upstream.with_codec(cfg.codec);
+    }
+    let upstream: Arc<dyn ExchangeTransport> = Arc::new(upstream);
+    let mut relay = Relay::spawn_tcp(upstream, s.str_or("listen", "127.0.0.1:0"), cfg)?;
+    println!("[relay] serving {} (upstream {upstream_addr})", relay.addr());
+
+    let duration_s = s.u64_or("duration_s", 0)?;
+    let t0 = Instant::now();
+    loop {
+        if duration_s > 0 && t0.elapsed() >= Duration::from_secs(duration_s) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    relay.stop();
+    stats_line("node", &relay);
+    Ok(())
+}
+
+/// Self-contained tree: hub -> tree_depth levels of tree_fanout relays
+/// -> leaf readers, with a byte-identity check against the hub.
+fn run_demo_tree(s: &Settings) -> Result<()> {
+    let cfg = relay_config(s)?;
+    let depth = s.usize_or("tree_depth", 2)?.max(1);
+    let fanout = s.usize_or("tree_fanout", 2)?.max(1);
+    let readers = s.usize_or("readers", 8)?;
+    let publishes = s.u64_or("publishes", 3)?;
+    let publish_steps = s.u64_or("publish_steps", 5)?;
+    let frozen = s.usize_or("mock_frozen", 64)?;
+    let member = s.usize_or("member", 0)?;
+    let verbose = s.bool_or("verbose", false)?;
+
+    let hub: Arc<dyn ExchangeTransport> =
+        Arc::new(crate::codistill::InProcess::new(cfg.history));
+
+    // Level by level: each relay's upstream is a socket connection to a
+    // parent from the previous level (the hub itself at level 1),
+    // assigned round-robin — exactly how real nodes would chain.
+    let mut levels: Vec<Vec<Relay>> = Vec::new();
+    for level in 0..depth {
+        let width = fanout.pow(level as u32 + 1);
+        let mut row = Vec::new();
+        for i in 0..width {
+            let upstream: Arc<dyn ExchangeTransport> = if level == 0 {
+                hub.clone()
+            } else {
+                let parents = &levels[level - 1];
+                let parent = &parents[i % parents.len()];
+                let mut t = SocketTransport::connect_tcp(parent.addr());
+                if cfg.codec != Codec::Raw {
+                    t = t.with_codec(cfg.codec);
+                }
+                Arc::new(t)
+            };
+            row.push(Relay::spawn_tcp(upstream, "127.0.0.1:0", cfg.clone())?);
+        }
+        if verbose {
+            println!("[relay] level {}: {} nodes", level + 1, row.len());
+        }
+        levels.push(row);
+    }
+    let leaves = levels.last().expect("depth >= 1");
+    println!(
+        "[relay] tree: depth={} fanout={} nodes={} leaf_nodes={} readers={}",
+        depth,
+        fanout,
+        levels.iter().map(Vec::len).sum::<usize>(),
+        leaves.len(),
+        readers
+    );
+
+    // Publisher drives the hub; readers follow leaf relays.
+    let mut m = DriftMember::with_frozen(member, frozen);
+    for _ in 0..publishes {
+        for _ in 0..publish_steps {
+            m.train_step(0.0, 0.1)?;
+        }
+        hub.publish(m.snapshot()?)?;
+    }
+    let final_step = publishes * publish_steps;
+
+    let mut verified = 0usize;
+    let direct = hub
+        .latest(member)?
+        .expect("hub holds the published plane");
+    for r in 0..readers {
+        let leaf = &leaves[r % leaves.len()];
+        let mut reader = SocketTransport::connect_tcp(leaf.addr());
+        if cfg.codec != Codec::Raw {
+            reader = reader.with_codec(cfg.codec);
+        }
+        let t0 = Instant::now();
+        let got = loop {
+            if let Some(ck) = reader.latest(member)? {
+                if ck.step >= final_step {
+                    break ck;
+                }
+            }
+            if t0.elapsed() > Duration::from_secs(30) {
+                bail!("reader {r} never saw step {final_step}");
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        if got.flat().data() == direct.flat().data() {
+            verified += 1;
+        } else {
+            bail!("reader {r} installed a plane that differs from the hub's");
+        }
+    }
+    println!(
+        "[relay] byte-identity: {verified}/{readers} readers match the hub at step {final_step}"
+    );
+
+    for (li, row) in levels.iter_mut().enumerate() {
+        for (ri, relay) in row.iter_mut().enumerate() {
+            relay.stop();
+            if verbose || (li + 1 == depth && ri == 0) {
+                stats_line(&format!("L{}#{ri}", li + 1), relay);
+            }
+        }
+    }
+    Ok(())
+}

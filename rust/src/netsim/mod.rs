@@ -262,6 +262,25 @@ pub fn expected_staleness_steps(reload_interval: u64, publish_interval: u64) -> 
     (reload_interval as f64 + publish_interval as f64) / 2.0
 }
 
+/// Levels in a relay tree serving `readers` leaves at `fanout` children
+/// per node: the smallest `d` with `fanout^d >= readers` (ceil of
+/// log_fanout), never below 1 — even a single reader crosses one
+/// store-and-forward hop once a relay tier exists. `fanout <= 1`
+/// degenerates to a chain of `readers` hops.
+pub fn relay_tree_depth(readers: usize, fanout: usize) -> u32 {
+    let readers = readers.max(1);
+    if fanout <= 1 {
+        return readers as u32;
+    }
+    let mut depth = 1u32;
+    let mut reach = fanout;
+    while reach < readers {
+        reach = reach.saturating_mul(fanout);
+        depth += 1;
+    }
+    depth
+}
+
 /// Analytic price of one coordinator member's run (see
 /// [`ClusterModel::coordinator_run_time`]).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -327,6 +346,61 @@ impl ClusterModel {
     // so a scenario file can be costed before it is run (the same role
     // `coordinator_run_time` plays for a healthy run). Each returns the
     // *extra* seconds the pattern adds on top of a fault-free run.
+
+    // --------------------------------------------- fan-out tier pricing
+    //
+    // The relay tier (`codistill::transport::Relay`) turns one hub with
+    // R reader sockets into a tree: the hub feeds `fanout` relays, each
+    // relay feeds `fanout` children, and readers hang off the leaves.
+    // These methods price both shapes so `tree_depth`/`tree_fanout`
+    // choices can be costed before a fleet is launched, mirroring what
+    // `sections.fanout` measures on the real sockets.
+
+    /// Wall time for one publication to reach every one of `readers`
+    /// direct readers of a flat hub: the publish write plus `readers`
+    /// delta reads serialized over the hub's single link, plus a probe
+    /// latency per reader. The `changed_fraction` is the delta-exchange
+    /// knob ([`ClusterModel::delta_exchange_time`]); at fraction 1.0
+    /// every reader pulls the whole plane.
+    pub fn hub_fanout_time(&self, readers: usize, changed_fraction: f64) -> f64 {
+        self.delta_exchange_time(readers, changed_fraction) + readers as f64 * self.latency_s
+    }
+
+    /// Wall time for one publication to reach every leaf of a relay tree
+    /// with `fanout` children per node: the publish write, then one
+    /// level at a time — each node re-serves the changed fraction to its
+    /// `fanout` children over its *own* link (levels fan out in
+    /// parallel, so the critical path is one node's outbound traffic per
+    /// level) plus a hop latency. Readers count as the final level's
+    /// children, so the critical path has
+    /// [`relay_tree_depth`]`(readers, fanout)` store-and-forward hops.
+    pub fn relay_tree_fanout_time(
+        &self,
+        readers: usize,
+        fanout: usize,
+        changed_fraction: f64,
+    ) -> f64 {
+        let f = changed_fraction.clamp(0.0, 1.0);
+        let depth = relay_tree_depth(readers, fanout) as f64;
+        let write = self.model_bytes as f64 / self.bandwidth_bps;
+        let per_level =
+            fanout as f64 * f * self.model_bytes as f64 / self.bandwidth_bps + self.latency_s;
+        write + depth * per_level
+    }
+
+    /// Extra staleness a relay tree adds over the flat hub: each
+    /// store-and-forward hop waits at most one relay refresh interval
+    /// before a fresh plane moves down a level — the price paid for the
+    /// fan-out, bounded and linear in depth (the paper's premise is that
+    /// this bounded staleness is tolerable).
+    pub fn relay_tree_staleness_s(
+        &self,
+        readers: usize,
+        fanout: usize,
+        poll_interval_s: f64,
+    ) -> f64 {
+        relay_tree_depth(readers, fanout) as f64 * poll_interval_s.max(0.0)
+    }
 
     /// A spot-preemption wave: `victims` members each lose
     /// `mean_down_steps` steps of compute, then pay a bootstrap read plus
@@ -618,6 +692,46 @@ mod tests {
         assert!(m.flaky_net_cost(200, 0.3, 5) > flaky);
         // a single-attempt budget never pays extra attempts
         assert_eq!(m.flaky_net_cost(100, 0.3, 1), 0.0);
+    }
+
+    #[test]
+    fn relay_tree_depth_is_ceil_log_fanout() {
+        assert_eq!(relay_tree_depth(8, 8), 1);
+        assert_eq!(relay_tree_depth(9, 8), 2);
+        assert_eq!(relay_tree_depth(64, 8), 2);
+        assert_eq!(relay_tree_depth(512, 8), 3);
+        assert_eq!(relay_tree_depth(1000, 8), 4);
+        // even one reader crosses one hop; fanout 1 is a chain
+        assert_eq!(relay_tree_depth(1, 8), 1);
+        assert_eq!(relay_tree_depth(0, 8), 1);
+        assert_eq!(relay_tree_depth(5, 1), 5);
+    }
+
+    #[test]
+    fn relay_tree_beats_the_flat_hub_at_scale() {
+        let m = ClusterModel::gpu_cluster(8, 40_000_000);
+        for frac in [1.0f64, 0.25, 0.05] {
+            // O(512) readers: 3 levels of 8-way fan-out move ~24 plane
+            // fractions on the critical path vs the hub's 512 serialized
+            // reads — an order of magnitude, growing with reader count
+            let hub = m.hub_fanout_time(512, frac);
+            let tree = m.relay_tree_fanout_time(512, 8, frac);
+            assert!(tree < hub / 4.0, "frac {frac}: tree {tree} !<< hub {hub}");
+            // ... and the gap widens as the fleet grows
+            let hub1k = m.hub_fanout_time(1000, frac);
+            let tree1k = m.relay_tree_fanout_time(1000, 8, frac);
+            assert!(hub1k - tree1k > hub - tree);
+        }
+        // tiny fleets: the tree's store-and-forward hop buys nothing —
+        // a hub serving fewer readers than one node's fanout is cheaper
+        let hub = m.hub_fanout_time(4, 0.25);
+        let tree = m.relay_tree_fanout_time(4, 8, 0.25);
+        assert!(hub <= tree, "hub {hub} !<= tree {tree} at 4 readers");
+        // staleness is the price: linear in depth, zero for the flat hub
+        let s512 = m.relay_tree_staleness_s(512, 8, 0.005);
+        assert_eq!(s512, 3.0 * 0.005);
+        assert!(m.relay_tree_staleness_s(1000, 8, 0.005) > s512);
+        assert_eq!(m.relay_tree_staleness_s(512, 8, -1.0), 0.0);
     }
 
     #[test]

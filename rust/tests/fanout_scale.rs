@@ -1,0 +1,337 @@
+//! Fan-out soak: the event-driven socket server must carry hundreds of
+//! concurrent readers on ONE loop thread — no thread-per-connection
+//! explosion, no protocol errors, every reader's installed plane
+//! byte-identical to the publisher's — and the relay tier must hold the
+//! same guarantee one hop further down a tree.
+//!
+//! Determinism contract: the soak is seeded (plane contents derive from
+//! the seed) and the sorted final-digest log is byte-identical across two
+//! runs of the same seed, so a failure replays. `make test-fanout` runs
+//! the relayed soak over the seed list in `CODISTILL_FAULT_SEEDS`
+//! (default `11 23 47`).
+
+use codistill::codistill::transport::DeltaCache;
+use codistill::codistill::{
+    Checkpoint, Codec, ExchangeTransport, FaultPlan, Faulty, Relay, RelayConfig, SocketServer,
+    SocketTransport,
+};
+use codistill::runtime::{Tensor, TensorMap};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Concurrent readers in the headline soak (the ISSUE floor).
+const READERS: usize = 512;
+/// Drift-fleet size: readers round-robin across these members.
+const MEMBERS: usize = 4;
+/// Publications per member; readers run until they install the last one.
+const FINAL_STEP: u64 = 6;
+/// Per-reader deadline: generous because 512 readers share one loop
+/// thread on a possibly loaded CI box — correctness, not latency, is
+/// under test here.
+const DEADLINE: Duration = Duration::from_secs(120);
+
+/// Seeds for the relayed soak matrix: `CODISTILL_FAULT_SEEDS="a b c"`
+/// (the `make test-fanout` pin) or a fixed default list.
+fn fault_seeds() -> Vec<u64> {
+    std::env::var("CODISTILL_FAULT_SEEDS")
+        .ok()
+        .map(|v| v.split_whitespace().filter_map(|t| t.parse().ok()).collect::<Vec<u64>>())
+        .filter(|v: &Vec<u64>| !v.is_empty())
+        .unwrap_or_else(|| vec![11, 23, 47])
+}
+
+/// Deterministic publication: every byte a function of (seed, member,
+/// step), so the expected digests can be recomputed without touching the
+/// wire. `params.table` is step-invariant — the frozen window a delta
+/// reader must skip on every reload after the first.
+fn plane(seed: u64, member: usize, step: u64) -> Checkpoint {
+    let hot: Vec<f32> = (0..1024u64)
+        .map(|k| ((seed * 31 + member as u64 * 13 + step * 7 + k) % 97) as f32 * 0.125)
+        .collect();
+    let mut params = TensorMap::new();
+    params.insert("params.hot", Tensor::f32(&[1024], hot).unwrap());
+    params.insert(
+        "params.table",
+        Tensor::f32(&[256], vec![0.25 * (member as f32 + 1.0); 256]).unwrap(),
+    );
+    Checkpoint::new(member, step, params)
+}
+
+/// `Threads:` from /proc/self/status — the process-wide thread count the
+/// soak bounds. Non-Linux returns None and the bound is skipped.
+fn thread_count() -> Option<usize> {
+    if !cfg!(target_os = "linux") {
+        return None;
+    }
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("Threads:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+/// One reader's terminal record: deterministic given the seed (digests
+/// derive from plane bytes, which derive from the seed), so sorting these
+/// lines yields a replay-comparable log.
+fn digest_line(reader: usize, ck: &Checkpoint) -> String {
+    let digests: Vec<String> = ck
+        .window_digests()
+        .iter()
+        .map(|d| format!("{d:016x}"))
+        .collect();
+    format!(
+        "reader={reader:04} member={} step={} digests={}",
+        ck.member,
+        ck.step,
+        digests.join(",")
+    )
+}
+
+struct SoakOutcome {
+    /// Sorted per-reader digest lines (the replay log).
+    log: Vec<String>,
+    /// Reader-visible transport errors (MUST be zero on a clean fabric).
+    errors: usize,
+    /// Peak process thread count minus the pre-spawn baseline.
+    thread_growth: Option<usize>,
+}
+
+/// Spawn `readers` small-stack reader threads against `addr` while the
+/// fleet publishes, and collect every reader's final installed plane.
+/// Even readers run the delta+codec path, odd readers the classic
+/// full-plane path — both must land on identical bytes.
+fn run_readers(addr: &str, readers: usize, errors: &Arc<AtomicUsize>) -> Vec<String> {
+    let log: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::with_capacity(readers)));
+    let mut handles = Vec::with_capacity(readers);
+    for i in 0..readers {
+        let addr = addr.to_string();
+        let log = log.clone();
+        let errors = errors.clone();
+        let h = std::thread::Builder::new()
+            .name(format!("fanout-reader-{i}"))
+            // deliberately tiny: 512 readers must not need big stacks,
+            // and the server side adds NO threads for them at all
+            .stack_size(128 * 1024)
+            .spawn(move || {
+                let member = i % MEMBERS;
+                let t = SocketTransport::connect_tcp(&addr).with_codec(Codec::Shuffle);
+                let mut cache = DeltaCache::new().with_codec(Codec::Shuffle);
+                let t0 = Instant::now();
+                loop {
+                    let got = if i % 2 == 0 {
+                        cache.latest(&t, member)
+                    } else {
+                        t.latest(member)
+                    };
+                    match got {
+                        Ok(Some(ck)) if ck.step >= FINAL_STEP => {
+                            log.lock().unwrap().push(digest_line(i, &ck));
+                            return;
+                        }
+                        Ok(_) => {}
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    assert!(
+                        t0.elapsed() < DEADLINE,
+                        "reader {i} never saw member {member} reach step {FINAL_STEP}"
+                    );
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            })
+            .unwrap();
+        handles.push(h);
+    }
+    for h in handles {
+        h.join().expect("reader thread panicked");
+    }
+    let mut lines = Arc::try_unwrap(log).unwrap().into_inner().unwrap();
+    lines.sort();
+    lines
+}
+
+/// The headline soak: `READERS` concurrent readers against one
+/// event-driven server while the fleet publishes live.
+fn run_hub_soak(seed: u64) -> SoakOutcome {
+    let baseline = thread_count();
+    let server = SocketServer::bind_tcp("127.0.0.1:0", 8).unwrap();
+    let errors = Arc::new(AtomicUsize::new(0));
+
+    // peak-thread monitor: samples while the soak runs
+    let peak = Arc::new(AtomicUsize::new(0));
+    let stop_monitor = Arc::new(AtomicBool::new(false));
+    let monitor = {
+        let peak = peak.clone();
+        let stop = stop_monitor.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                if let Some(n) = thread_count() {
+                    peak.fetch_max(n, Ordering::Relaxed);
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        })
+    };
+
+    // live publisher: first publication up front so readers never spin on
+    // an empty hub, the rest land while readers are mid-flight
+    let publisher = {
+        let addr = server.addr().to_string();
+        std::thread::spawn(move || {
+            let t = SocketTransport::connect_tcp(&addr);
+            for step in 1..=FINAL_STEP {
+                for member in 0..MEMBERS {
+                    t.publish(plane(seed, member, step)).unwrap();
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        })
+    };
+
+    let log = run_readers(server.addr(), READERS, &errors);
+    publisher.join().unwrap();
+    stop_monitor.store(true, Ordering::Relaxed);
+    monitor.join().unwrap();
+
+    SoakOutcome {
+        log,
+        errors: errors.load(Ordering::Relaxed),
+        thread_growth: baseline.map(|b| peak.load(Ordering::Relaxed).saturating_sub(b)),
+    }
+}
+
+/// Expected digest suffix for `member`'s final publication, recomputed
+/// from the seed without any transport in the loop.
+fn expected_suffix(seed: u64, member: usize) -> String {
+    let ck = plane(seed, member, FINAL_STEP);
+    let digests: Vec<String> = ck
+        .window_digests()
+        .iter()
+        .map(|d| format!("{d:016x}"))
+        .collect();
+    format!("member={member} step={FINAL_STEP} digests={}", digests.join(","))
+}
+
+#[test]
+fn soak_512_readers_zero_errors_bounded_threads_replay_identical() {
+    let seed = *fault_seeds().first().unwrap_or(&11);
+    let first = run_hub_soak(seed);
+
+    // zero protocol errors on a clean fabric
+    assert_eq!(first.errors, 0, "readers saw transport errors:\n{:?}", first.log);
+    // every reader finished and installed the publisher's exact bytes
+    assert_eq!(first.log.len(), READERS);
+    for line in &first.log {
+        let member: usize = line
+            .split("member=")
+            .nth(1)
+            .and_then(|s| s.split_whitespace().next())
+            .and_then(|s| s.parse().ok())
+            .unwrap();
+        let want = expected_suffix(seed, member);
+        assert!(
+            line.ends_with(&want),
+            "digest mismatch:\n  got  {line}\n  want ...{want}"
+        );
+    }
+
+    // the event loop serves 512 connections without a thread per
+    // connection: growth is the reader threads themselves plus slack for
+    // the loop/publisher/monitor and any sibling test running in
+    // parallel under libtest — NOT 2x the reader count
+    if let Some(growth) = first.thread_growth {
+        assert!(
+            growth <= READERS + 128,
+            "thread growth {growth} suggests thread-per-connection serving"
+        );
+    }
+
+    // replay: same seed, second run, byte-identical sorted log
+    let second = run_hub_soak(seed);
+    assert_eq!(second.errors, 0);
+    assert_eq!(first.log, second.log, "same-seed soak logs diverged");
+}
+
+/// Relayed soak, one per configured seed: hub behind a seeded `Faulty`
+/// upstream link, two relays subscribed to it, readers split across the
+/// relays. Injected upstream faults may surface to a reader whose relay
+/// mirror is still cold (the fetch passes through) — those retries are
+/// expected; what must hold is that every reader STILL lands on the
+/// hub's exact bytes and that two runs of a seed replay identically.
+#[test]
+fn relayed_soak_replays_per_seed() {
+    const RELAY_READERS: usize = 64;
+    for seed in fault_seeds() {
+        let run = |seed: u64| -> Vec<String> {
+            let hub = SocketServer::bind_tcp("127.0.0.1:0", 8).unwrap();
+            let cfg = || RelayConfig {
+                poll_interval: Duration::from_millis(2),
+                codec: Codec::Shuffle,
+                ..RelayConfig::default()
+            };
+            let make_relay = |addr: &str| {
+                let up: Arc<dyn ExchangeTransport> =
+                    Arc::new(SocketTransport::connect_tcp(addr).with_codec(Codec::Shuffle));
+                let flaky = Arc::new(Faulty::wrap(
+                    up,
+                    FaultPlan::new(seed).with_erroring_fetches(0.2),
+                ));
+                Relay::spawn_tcp(flaky, "127.0.0.1:0", cfg()).unwrap()
+            };
+            let relay_a = make_relay(hub.addr());
+            let relay_b = make_relay(hub.addr());
+
+            let publisher = {
+                let addr = hub.addr().to_string();
+                std::thread::spawn(move || {
+                    let t = SocketTransport::connect_tcp(&addr);
+                    for step in 1..=FINAL_STEP {
+                        for member in 0..MEMBERS {
+                            t.publish(plane(seed, member, step)).unwrap();
+                        }
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                })
+            };
+
+            // readers split across the two relays; injected-fault
+            // passthrough retries are tolerated (counted, not asserted)
+            let tolerated = Arc::new(AtomicUsize::new(0));
+            let half = RELAY_READERS / 2;
+            let (log_a, log_b) = (
+                run_readers(relay_a.addr(), half, &tolerated),
+                run_readers(relay_b.addr(), RELAY_READERS - half, &tolerated),
+            );
+            publisher.join().unwrap();
+
+            // both relays actually installed planes from upstream
+            assert!(relay_a.stats().installs >= 1, "relay A never installed");
+            assert!(relay_b.stats().installs >= 1, "relay B never installed");
+
+            let mut log: Vec<String> = log_a
+                .iter()
+                .map(|l| format!("relay=a {l}"))
+                .chain(log_b.iter().map(|l| format!("relay=b {l}")))
+                .collect();
+            log.sort();
+            log
+        };
+
+        let first = run(seed);
+        assert_eq!(first.len(), RELAY_READERS);
+        for line in &first {
+            let member: usize = line
+                .split("member=")
+                .nth(1)
+                .and_then(|s| s.split_whitespace().next())
+                .and_then(|s| s.parse().ok())
+                .unwrap();
+            assert!(
+                line.ends_with(&expected_suffix(seed, member)),
+                "seed {seed}: relayed reader diverged from hub bytes: {line}"
+            );
+        }
+        let second = run(seed);
+        assert_eq!(first, second, "seed {seed}: relayed soak logs diverged");
+    }
+}

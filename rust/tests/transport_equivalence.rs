@@ -937,3 +937,107 @@ fn stale_basis_after_spool_gc_falls_back_cleanly() {
     assert_eq!(cache.stats().full_fetches, 2, "reshape did not full-refetch");
     std::fs::remove_dir_all(&dir).ok();
 }
+
+// ------------------------------------------------------ relay equivalence
+//
+// The relay tier is a read-side cache, so it must be invisible to
+// correctness: planes installed through a 2-level relay chain (with
+// delta + codec on and a faulty hub link) are byte-identical to a direct
+// hub fetch, and every hop re-verifies content digests — the relay's
+// DeltaCache checks the hub's payloads, the second relay checks the
+// first's, and the leaf reader checks the last relay's.
+
+#[test]
+fn relay_chain_installs_byte_identical_to_direct_fetch() {
+    use codistill::codistill::{Relay, RelayConfig};
+    use std::time::{Duration, Instant};
+
+    let hub = Arc::new(InProcess::new(16));
+    // Half the hub-link fetches fail: the relay refresher must absorb
+    // the errors and still converge on the exact published bytes.
+    let flaky_hub: Arc<dyn ExchangeTransport> = Arc::new(Faulty::wrap(
+        hub.clone(),
+        FaultPlan::new(11).with_erroring_fetches(0.5),
+    ));
+    let fast = |codec| RelayConfig {
+        poll_interval: Duration::from_millis(1),
+        delta: true,
+        codec,
+        ..RelayConfig::default()
+    };
+    let relay1 = Relay::spawn_tcp(flaky_hub, "127.0.0.1:0", fast(Codec::Shuffle)).unwrap();
+    let mid: Arc<dyn ExchangeTransport> = Arc::new(
+        SocketTransport::connect_tcp(relay1.addr()).with_codec(Codec::Shuffle),
+    );
+    let relay2 = Relay::spawn_tcp(mid, "127.0.0.1:0", fast(Codec::Shuffle)).unwrap();
+
+    let leaf = SocketTransport::connect_tcp(relay2.addr()).with_codec(Codec::Shuffle);
+    let mut reader = DeltaCache::new().with_codec(Codec::Shuffle);
+
+    for (i, step) in [1u64, 3, 5, 7, 9, 11, 13, 15].into_iter().enumerate() {
+        hub.publish(hot_cold_ckpt(0, step, i as f32)).unwrap();
+        // Wait for the publication to ripple down both hops. A cold
+        // mirror passes the fetch through to the faulty hub link, so the
+        // leaf can see an injected error here — tolerated and retried,
+        // exactly like any reader over a flaky exchange.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let got = loop {
+            if let Ok(Some(ck)) = reader.latest(&leaf, 0) {
+                if ck.step >= step {
+                    break ck;
+                }
+            }
+            assert!(
+                Instant::now() < deadline,
+                "step {step} never reached the leaf reader"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        let direct = InProcess::latest(&hub, 0).unwrap();
+        assert_eq!(got.step, direct.step, "leaf lagged the hub");
+        assert_eq!(
+            got.flat().data(),
+            direct.flat().data(),
+            "relay-chain install diverged from the direct fetch at step {step}"
+        );
+        assert!(got.flat().layout().same_plane(direct.flat().layout()));
+        // digest re-verification at the last hop matches the source of
+        // truth (each inner hop verified the same way when it installed)
+        assert_eq!(
+            got.window_digests().as_ref(),
+            direct.window_digests().as_ref(),
+            "digest tables diverged across the chain"
+        );
+    }
+
+    // the exchange really was incremental + encoded at the leaf ...
+    let stats = reader.stats();
+    assert!(stats.delta_fetches > 0, "leaf never delta-fetched: {stats:?}");
+    assert!(
+        stats.windows_unchanged > 0,
+        "cold window moved through the chain: {stats:?}"
+    );
+    assert!(
+        stats.windows_encoded > 0,
+        "codec never engaged on the leaf hop: {stats:?}"
+    );
+    // ... and at both relay hops, which digest-verified every install
+    for (tag, relay) in [("relay1", &relay1), ("relay2", &relay2)] {
+        let rs = relay.stats();
+        assert!(rs.installs >= 1, "{tag} installed nothing: {rs:?}");
+        assert!(
+            rs.delta.full_fetches + rs.delta.delta_fetches >= rs.installs,
+            "{tag}: installs bypassed the verifying cache: {rs:?}"
+        );
+        assert!(
+            rs.delta.windows_unchanged > 0,
+            "{tag}: cold window moved upstream: {rs:?}"
+        );
+    }
+    // the flaky hub link actually fired (otherwise the fault plan is
+    // degenerate and this test proves less than it claims)
+    assert!(
+        relay1.stats().tolerated_errors > 0,
+        "fault plan never errored the hub link"
+    );
+}
