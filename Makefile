@@ -1,7 +1,7 @@
 # Build/test/bench entry points. The Rust workspace lives in rust/ and
 # builds fully offline (vendored deps; see rust/Cargo.toml).
 
-.PHONY: build test check test-faults test-scenarios test-procs test-wire test-serve test-fanout bench bench-snapshot artifacts python-tests clean
+.PHONY: build test check test-faults test-scenarios test-procs test-wire test-lossy test-serve test-fanout bench bench-snapshot artifacts python-tests clean
 
 build:
 	cd rust && cargo build --release
@@ -13,7 +13,7 @@ test:
 # (skipped with a notice otherwise, so `make check` works on minimal
 # toolchains), then the tier-1 test suite and the serving-tier
 # integration suite.
-check: test-serve test-fanout
+check: test-lossy test-serve test-fanout
 	cd rust && if cargo fmt --version >/dev/null 2>&1; then \
 		cargo fmt --all -- --check; \
 	else echo "make check: rustfmt unavailable, skipping fmt"; fi
@@ -58,6 +58,18 @@ test-wire:
 	cd rust && cargo test -q --lib transport::codec
 	cd rust && cargo test -q --test transport_equivalence
 
+# Lossy-exchange quality gate: the fp16/int8 quantizing codecs and the
+# publisher-side error-feedback accumulator. Pins the orchestrated
+# int8+feedback mock run within tolerance of the lossless reference
+# (and feedback-off measurably worse), CKPT0005 lossy installs
+# byte-identical over inproc/spool/socket/relay/faulty backends with
+# corrupt payloads failing the decoded-payload digest, and the
+# exact-or-raw codec laws over every wire id (NaN/inf/denormal edges).
+test-lossy:
+	cd rust && cargo test -q --lib transport::codec
+	cd rust && cargo test -q --lib transport::feedback
+	cd rust && cargo test -q --test lossy_exchange
+
 # Serving-tier acceptance suite: the batching inference server under
 # open-loop load with >=3 checkpoint hot swaps landing mid-traffic —
 # zero failed or torn requests (every response re-derived exactly
@@ -80,7 +92,10 @@ test-fanout:
 # Includes the concurrent-vs-serial socket fetch rows
 # (sections.socket_concurrency) that track the thread-per-connection
 # server upgrade, and the full/delta/delta+codec byte rows
-# (sections.compressed_exchange) that track the window-codec layer.
+# (sections.compressed_exchange) that track the window-codec layer —
+# including the raw/rle/fp16/int8(+feedback) lossy rows, which assert
+# the int8 delta moves <= half the delta+RLE bytes at changed
+# fraction 0.25.
 bench:
 	cd rust && cargo bench --bench perf_hotpath -- json=../BENCH_hotpath.json
 

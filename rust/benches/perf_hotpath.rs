@@ -32,7 +32,7 @@
 //! coordinator numbers are tracked even on machines without XLA.
 
 use codistill::codistill::serve::{open_loop, InferenceServer, LoadSpec, OpenLoopSpec, ServeConfig};
-use codistill::codistill::transport::{Basis, Codec, FetchSpec, ANY_STEP};
+use codistill::codistill::transport::{Basis, Codec, ErrorFeedback, FetchSpec, ANY_STEP};
 use codistill::codistill::{
     Checkpoint, ExchangeTransport, InProcess, Member, Relay, RelayConfig, SocketServer,
     SocketTransport, SpoolDir,
@@ -610,6 +610,131 @@ fn main() {
         drop(server);
         std::fs::remove_dir_all(&raw_dir).ok();
         std::fs::remove_dir_all(&enc_dir).ok();
+    }
+
+    // ---- lossy exchange: raw vs RLE vs fp16 vs int8 (± error feedback)
+    // deltas on a plane with real mantissa entropy. The constant-valued
+    // bench plane above is byte-shuffle+RLE's best case; quantizers earn
+    // their keep once window bytes stop repeating, so these rows fill
+    // the same layout with 1024 hash-scattered values per window
+    // (`0.5 + ((i·2654435761) mod 1024)·1e-3`, window amax ≈ 1.52 so
+    // every window sits on one int8 power-of-two scale) and shift the
+    // changed windows by +0.125 — exactly 8 steps of the 2⁻⁶ int8 grid,
+    // so planes prepared through the publisher-side [`ErrorFeedback`]
+    // path stay value-idempotent through CKPT0005 spool files and
+    // encoded socket DELTA frames alike. Pins the ISSUE-9 acceptance
+    // gate: at changed_fraction 0.25 the int8 delta moves at most half
+    // the payload bytes of the delta+RLE baseline.
+    {
+        let frac = 0.25f64;
+        let scatter = |b: &mut FlatBuffer| {
+            for (i, v) in b.data_mut().iter_mut().enumerate() {
+                *v = 0.5 + ((i as u64).wrapping_mul(2654435761) % 1024) as f32 * 1e-3;
+            }
+        };
+        let ramp = {
+            let mut b = (*plane).clone();
+            scatter(&mut b);
+            Arc::new(b)
+        };
+        let ramp2 = {
+            let mut b = (*ramp).clone();
+            let target = (frac * layout.total_len() as f64) as usize;
+            let mut entries: Vec<_> = layout.entries().iter().collect();
+            entries.sort_by_key(|e| e.len);
+            let mut changed = 0usize;
+            for e in entries {
+                if changed + e.len <= target {
+                    for v in &mut b.data_mut()[e.range()] {
+                        *v += 0.125;
+                    }
+                    changed += e.len;
+                }
+            }
+            Arc::new(b)
+        };
+        let server =
+            SocketServer::bind_tcp("127.0.0.1:0", 4).expect("binding lossy bench server");
+        let rows: &[(&str, Codec, bool)] = &[
+            ("raw", Codec::Raw, false),
+            ("rle", Codec::Shuffle, false),
+            ("fp16", Codec::Fp16, false),
+            ("int8", Codec::Int8, false),
+            ("int8+fb", Codec::Int8, true),
+        ];
+        let mut spool_delta: std::collections::HashMap<&str, usize> = Default::default();
+        for (member, (label, codec, feedback)) in rows.iter().enumerate() {
+            // publish exactly what the orchestrator would: planes that
+            // already went through the quantize-at-publish round trip
+            let mut prep = ErrorFeedback::new(*codec, *feedback);
+            let ck1 = prep
+                .prepare(Checkpoint::from_flat(member, 1, ramp.clone(), TensorMap::new()))
+                .unwrap();
+            let ck2 = prep
+                .prepare(Checkpoint::from_flat(member, 2, ramp2.clone(), TensorMap::new()))
+                .unwrap();
+            let basis = Basis {
+                step: 1,
+                digests: ck1.window_digests().as_ref().clone(),
+            };
+            let dir = std::env::temp_dir().join(format!(
+                "codistill_bench_lossy_{}_{member}",
+                std::process::id()
+            ));
+            std::fs::remove_dir_all(&dir).ok();
+            let spool = SpoolDir::open(&dir, 4)
+                .expect("opening lossy spool")
+                .with_codec(*codec);
+            let sock_pub = SocketTransport::connect_tcp(server.addr());
+            let sock = if *codec == Codec::Raw {
+                SocketTransport::connect_tcp(server.addr())
+            } else {
+                SocketTransport::connect_tcp(server.addr()).with_codec(*codec)
+            };
+            spool.publish(ck1.clone()).unwrap();
+            spool.publish(ck2.clone()).unwrap();
+            sock_pub.publish(ck1).unwrap();
+            sock_pub.publish(ck2).unwrap();
+            let delta_spec = FetchSpec::full(member, ANY_STEP).with_basis(basis);
+            let spool_fetch =
+                || SpoolDir::open(&dir, 4).unwrap().fetch(&delta_spec).unwrap().unwrap();
+            let spool_bytes = spool_fetch().payload_bytes();
+            let sock_bytes = sock.fetch(&delta_spec).unwrap().unwrap().payload_bytes();
+            let t_spool = time_n(3, || {
+                spool_fetch();
+            });
+            let t_sock = time_n(3, || {
+                sock.fetch(&delta_spec).unwrap().unwrap();
+            });
+            println!(
+                "lossy   {label:>7} frac={frac:<4}: delta spool {spool_bytes:>8} B / socket {sock_bytes:>8} B \
+                 ({:.2}/{:.2} ms)",
+                t_spool * 1e3,
+                t_sock * 1e3
+            );
+            spool_delta.insert(label, spool_bytes);
+            for (transport, bytes, t) in
+                [("spool", spool_bytes, t_spool), ("socket", sock_bytes, t_sock)]
+            {
+                compressed_rows.push(format!(
+                    "{{\"transport\": \"{transport}\", \"changed_fraction\": {frac}, \
+                     \"codec\": \"{label}\", \"plane\": \"scattered\", \
+                     \"delta_payload_bytes\": {bytes}, \"fetch_delta_ms\": {}}}",
+                    ms(Some(t))
+                ));
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+        drop(server);
+        let (int8, rle) = (spool_delta["int8"], spool_delta["rle"]);
+        assert!(
+            int8 * 2 <= rle,
+            "lossy gate: int8 delta ({int8} B) must move <= half the delta+RLE bytes ({rle} B)"
+        );
+        println!(
+            "lossy   gate: int8 delta moves {:.2}x fewer bytes than delta+RLE at frac={frac}",
+            rle as f64 / int8 as f64
+        );
     }
 
     // ---- concurrent vs serial socket fetches: N clients pulling the

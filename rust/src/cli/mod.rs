@@ -57,11 +57,17 @@
 //! planes and fetch only the windows whose content digests changed
 //! (`codistill::transport::DeltaCache`) — byte-identical installs,
 //! strictly less traffic. `--compress` (alias `compress=true`;
-//! `codec=raw|shuffle` picks the codec, default `shuffle`) additionally
-//! moves each window's bytes lossless-encoded: spool publications become
-//! `CKPT0004` files and socket reads negotiate encoded `DELTA`/`FETCH`
-//! frames — installs stay byte-identical (decoded + digest-verified), a
-//! no-op on the in-process transport where no bytes cross a medium.
+//! `codec=raw|shuffle|fp16|int8` picks the codec, default `shuffle`)
+//! additionally moves each window's bytes encoded: spool publications
+//! become `CKPT0004` files (`CKPT0005` for the lossy `fp16`/`int8`
+//! codecs) and socket reads negotiate encoded `DELTA`/`FETCH` frames —
+//! installs stay byte-identical to what was published (decoded +
+//! digest-verified), a no-op on the in-process transport where no bytes
+//! cross a medium. With a lossy codec the published plane itself is the
+//! dequantized round-trip, prepared once publisher-side
+//! (`codistill::transport::ErrorFeedback`); `--error-feedback` (alias
+//! `error_feedback=true`) carries each window's quantization residual
+//! into the next publish so the bias telescopes instead of accumulating.
 //! `mock=true` on `coordinate` swaps the LM
 //! members for the deterministic `testkit::DriftMember` fleet (no
 //! artifacts/XLA needed — the OS-process harness `examples/spool_procs.rs`
@@ -114,6 +120,10 @@ pub fn parse_args(args: &[String]) -> Result<Cli> {
                 settings.apply("compress=true")?;
                 i += 1;
             }
+            "--error-feedback" => {
+                settings.apply("error_feedback=true")?;
+                i += 1;
+            }
             "--transport" => {
                 let v = args.get(i + 1).context("--transport needs inproc|spool|socket")?;
                 // validate eagerly so typos fail at parse time, not mid-run
@@ -152,8 +162,8 @@ fn settings_dump(_s: &Settings) -> Vec<String> {
 
 pub fn usage() -> String {
     "usage: codistill <train|codistill|coordinate|serve|relay|figures|fig1|fig2|fig3|fig4|table1|sec341|inspect> \
-     [--transport inproc|spool|socket] [--delta] [--compress] [--scenario FILE] [--retry] \
-     [--set key=value]... [--config FILE] [--verbose]"
+     [--transport inproc|spool|socket] [--delta] [--compress] [--error-feedback] \
+     [--scenario FILE] [--retry] [--set key=value]... [--config FILE] [--verbose]"
         .to_string()
 }
 
@@ -280,6 +290,24 @@ mod tests {
             .unwrap()
             .settings
             .bool_or("compress", false)
+            .unwrap());
+    }
+
+    #[test]
+    fn error_feedback_flag_applies() {
+        let cli = parse_args(&sv(&[
+            "coordinate",
+            "--compress",
+            "codec=int8",
+            "--error-feedback",
+        ]))
+        .unwrap();
+        assert!(cli.settings.bool_or("error_feedback", false).unwrap());
+        assert_eq!(cli.settings.str_or("codec", "shuffle"), "int8");
+        assert!(!parse_args(&sv(&["coordinate"]))
+            .unwrap()
+            .settings
+            .bool_or("error_feedback", false)
             .unwrap());
     }
 }

@@ -43,7 +43,9 @@
 use crate::codistill::orchestrator::EvalPoint;
 use crate::codistill::schedule::{DistillSchedule, LrSchedule};
 use crate::codistill::topology::Topology;
-use crate::codistill::transport::{DeltaCache, DeltaStats, ExchangeTransport, RetryStats};
+use crate::codistill::transport::{
+    Codec, DeltaCache, DeltaStats, ErrorFeedback, ExchangeTransport, FeedbackStats, RetryStats,
+};
 use crate::codistill::Member;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -72,6 +74,13 @@ pub struct CoordinatorConfig {
     /// only the windows whose content changed. Installed teachers are
     /// byte-identical to full fetches; only the exchange traffic shrinks.
     pub delta: bool,
+    /// Codec the published planes are *prepared* under (see
+    /// [`OrchestratorConfig::publish_codec`](crate::codistill::OrchestratorConfig::publish_codec)):
+    /// lossy codecs quantize once, publisher-side, via [`ErrorFeedback`].
+    pub publish_codec: Codec,
+    /// Carry quantization residuals into the next publish (lossy
+    /// `publish_codec` only).
+    pub error_feedback: bool,
     pub verbose: bool,
 }
 
@@ -87,6 +96,8 @@ impl Default for CoordinatorConfig {
             liveness_grace: 120,
             seed: 0,
             delta: false,
+            publish_codec: Codec::Raw,
+            error_feedback: false,
             verbose: false,
         }
     }
@@ -289,6 +300,9 @@ pub struct CoordinatorLog {
     /// [`Retry`](crate::codistill::transport::Retry) decorator is in the
     /// transport stack).
     pub retry: Option<RetryStats>,
+    /// Publisher-side quantization accounting, summed over hosted
+    /// members (`Some` only when `publish_codec` is lossy).
+    pub feedback: Option<FeedbackStats>,
 }
 
 impl CoordinatorLog {
@@ -348,6 +362,10 @@ struct RunShared {
     /// Per-teacher installed planes for delta reloads (`Some` only when
     /// `CoordinatorConfig::delta`), shared by co-hosted members.
     delta: Option<DeltaCache>,
+    /// Per-hosted-member quantizing accumulators, keyed by global id
+    /// (empty map when `publish_codec` is lossless — `prepare` would be
+    /// a passthrough anyway, so none are created).
+    feedback: HashMap<usize, ErrorFeedback>,
 }
 
 /// Drives the hosted members of ONE process/thread against a shared
@@ -390,6 +408,7 @@ impl Coordinator {
             polled_this_tick: false,
             gc_requested: None,
             delta: self.cfg.delta.then(DeltaCache::new),
+            feedback: HashMap::new(),
         };
 
         let mut tick: u64 = 0;
@@ -445,6 +464,13 @@ impl Coordinator {
         }
         log.delta = shared.delta.as_ref().map(|c| c.stats());
         log.retry = self.transport.retry_stats();
+        if self.cfg.publish_codec.is_lossy() {
+            let mut total = FeedbackStats::default();
+            for f in shared.feedback.values() {
+                total.merge(&f.stats());
+            }
+            log.feedback = Some(total);
+        }
         Ok(log)
     }
 
@@ -473,7 +499,7 @@ impl Coordinator {
             }
         }
         // Initial publication (step = local step 0 for true joiners).
-        self.publish_member(h, 0, tick, log);
+        self.publish_member(h, 0, tick, shared, log);
         Ok(())
     }
 
@@ -501,7 +527,7 @@ impl Coordinator {
                 h.id
             );
         }
-        self.publish_member(h, local_step, tick, log);
+        self.publish_member(h, local_step, tick, shared, log);
         Ok(())
     }
 
@@ -583,7 +609,7 @@ impl Coordinator {
         st.local_step += 1;
 
         if (st.local_step + h.publish_offset) % h.publish_interval == 0 {
-            self.publish_member(h, st.local_step, tick, log);
+            self.publish_member(h, st.local_step, tick, shared, log);
             shared.gc_requested = Some(h.id);
         }
 
@@ -659,8 +685,18 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Publish a member's snapshot, tolerating exchange failures.
-    fn publish_member(&self, h: &HostedMember, step: u64, tick: u64, log: &mut CoordinatorLog) {
+    /// Publish a member's snapshot, tolerating exchange failures. With a
+    /// lossy `publish_codec` the snapshot is quantized (and, with
+    /// `error_feedback`, residual-corrected) here, through the member's
+    /// own accumulator, before it ever reaches the transport.
+    fn publish_member(
+        &self,
+        h: &HostedMember,
+        step: u64,
+        tick: u64,
+        shared: &mut RunShared,
+        log: &mut CoordinatorLog,
+    ) {
         let ck = match h.member.snapshot() {
             Ok(mut ck) => {
                 ck.member = h.id;
@@ -671,6 +707,20 @@ impl Coordinator {
                 log.exchange_errors.push((tick, h.id, format!("{e:#}")));
                 return;
             }
+        };
+        let ck = if self.cfg.publish_codec.is_lossy() {
+            let fb = shared.feedback.entry(h.id).or_insert_with(|| {
+                ErrorFeedback::new(self.cfg.publish_codec, self.cfg.error_feedback)
+            });
+            match fb.prepare(ck) {
+                Ok(ck) => ck,
+                Err(e) => {
+                    log.exchange_errors.push((tick, h.id, format!("{e:#}")));
+                    return;
+                }
+            }
+        } else {
+            ck
         };
         if let Err(e) = self.transport.publish(ck) {
             log.exchange_errors.push((tick, h.id, format!("{e:#}")));

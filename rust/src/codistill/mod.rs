@@ -43,6 +43,15 @@
 //! run rides any medium; `codistill --transport {inproc,spool,socket}`
 //! selects one from the CLI.
 //!
+//! Exchange payloads can ride a lossless codec (`--compress`, byte
+//! shuffle + RLE) or a lossy quantizer (`codec=fp16|int8`) whose
+//! quantization error is applied **once, publisher-side** by
+//! [`ErrorFeedback`]: the published plane already holds the dequantized
+//! values, every digest is a round-trip digest, and `--error-feedback`
+//! carries each window's residual into the next publish so the
+//! quantization bias telescopes instead of accumulating (see
+//! [`transport::feedback`]).
+//!
 //! ## Orchestrator vs Coordinator
 //!
 //! [`Orchestrator`] is the paper's Algorithm 1 in lockstep: every member
@@ -101,10 +110,10 @@ pub use serve::{
 pub use store::Checkpoint;
 pub use topology::Topology;
 pub use transport::{
-    Basis, Codec, DeltaCache, DeltaStats, ExchangeTransport, FaultPlan, Faulty, FetchResult,
-    FetchSpec, InProcess, Relay, RelayConfig, RelayStats, Retry, RetryPolicy, RetryStats,
-    SocketServer, SocketTransport, SpoolDir, SubscribeConfig, SubscribeStats, Subscription,
-    TransportKind, WindowCodec, WindowSel, WindowedFetch,
+    Basis, Codec, DeltaCache, DeltaStats, ErrorFeedback, ExchangeTransport, FaultPlan, Faulty,
+    FeedbackStats, FetchResult, FetchSpec, InProcess, Relay, RelayConfig, RelayStats, Retry,
+    RetryPolicy, RetryStats, SocketServer, SocketTransport, SpoolDir, SubscribeConfig,
+    SubscribeStats, Subscription, TransportKind, WindowCodec, WindowSel, WindowedFetch,
 };
 
 /// The zero-copy in-process store under its historical name (it was the

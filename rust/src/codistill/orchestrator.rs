@@ -14,7 +14,8 @@
 use crate::codistill::schedule::{DistillSchedule, LrSchedule};
 use crate::codistill::topology::Topology;
 use crate::codistill::transport::{
-    DeltaCache, DeltaStats, ExchangeTransport, InProcess, RetryStats,
+    Codec, DeltaCache, DeltaStats, ErrorFeedback, ExchangeTransport, FeedbackStats, InProcess,
+    RetryStats,
 };
 use crate::codistill::{EvalStats, Member};
 use crate::netsim::ClusterModel;
@@ -47,6 +48,17 @@ pub struct OrchestratorConfig {
     /// (`transport::DeltaCache`). Installed teachers are byte-identical
     /// to full fetches; only the exchange traffic shrinks.
     pub delta: bool,
+    /// Codec the published planes are *prepared* under. Lossless codecs
+    /// pass through untouched (the transport encodes on the wire as
+    /// usual); a lossy codec ([`Codec::is_lossy`]) quantizes every
+    /// window once, publisher-side, so the published plane already holds
+    /// the dequantized values and every digest is a round-trip digest —
+    /// see [`ErrorFeedback`].
+    pub publish_codec: Codec,
+    /// Carry each window's quantization residual into the next publish
+    /// (only meaningful with a lossy `publish_codec`): the bias
+    /// telescopes instead of accumulating across publishes.
+    pub error_feedback: bool,
     /// Print progress lines.
     pub verbose: bool,
 }
@@ -64,6 +76,8 @@ impl Default for OrchestratorConfig {
             cluster: None,
             seed: 0,
             delta: false,
+            publish_codec: Codec::Raw,
+            error_feedback: false,
             verbose: false,
         }
     }
@@ -96,6 +110,9 @@ pub struct RunLog {
     /// [`Retry`](crate::codistill::transport::Retry) decorator is in the
     /// transport stack).
     pub retry: Option<RetryStats>,
+    /// Publisher-side quantization accounting, summed over members
+    /// (`Some` only when `publish_codec` is lossy).
+    pub feedback: Option<FeedbackStats>,
 }
 
 impl RunLog {
@@ -175,10 +192,18 @@ impl Orchestrator {
             Vec::new()
         };
 
+        // One quantizing accumulator per member (no-op for lossless
+        // codecs): loss is applied HERE, once, so whatever the transport
+        // ships decodes back to exactly the plane being published.
+        let mut feedback: Vec<ErrorFeedback> = (0..n)
+            .map(|_| ErrorFeedback::new(cfg.publish_codec, cfg.error_feedback))
+            .collect();
+
         // Initial publication so teachers exist from the first reload.
         for (i, m) in members.iter().enumerate() {
             let mut ck = m.snapshot()?;
             ck.member = i;
+            let ck = feedback[i].prepare(ck)?;
             self.transport.publish(ck)?;
         }
 
@@ -247,6 +272,7 @@ impl Orchestrator {
                     let mut ck = m.snapshot()?;
                     ck.member = i;
                     ck.step = step + 1;
+                    let ck = feedback[i].prepare(ck)?;
                     self.transport.publish(ck)?;
                 }
                 // Enforce the history bound on durable backend state
@@ -288,6 +314,13 @@ impl Orchestrator {
                 total.merge(c.stats());
             }
             log.delta = Some(total);
+        }
+        if cfg.publish_codec.is_lossy() {
+            let mut total = FeedbackStats::default();
+            for f in &feedback {
+                total.merge(&f.stats());
+            }
+            log.feedback = Some(total);
         }
         // Drain anything a decorator held back, then pick up its retry
         // accounting (both no-ops on plain backends).

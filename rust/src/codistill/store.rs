@@ -59,6 +59,7 @@ pub(crate) const MAGIC_V1: &[u8; 8] = b"CKPT0001";
 pub(crate) const MAGIC_V2: &[u8; 8] = b"CKPT0002";
 pub(crate) const MAGIC_V3: &[u8; 8] = b"CKPT0003";
 pub(crate) const MAGIC_V4: &[u8; 8] = b"CKPT0004";
+pub(crate) const MAGIC_V5: &[u8; 8] = b"CKPT0005";
 
 /// Largest single window a checkpoint stream may claim (1 GiB — the
 /// socket layer's frame cap; any real plane window here is megabytes).
@@ -341,6 +342,64 @@ impl Checkpoint {
         self.write_residual(f)
     }
 
+    /// Serialize in the lossy-aware `CKPT0005` format: `CKPT0004` plus a
+    /// per-window quantization-scale f32 column in the table (the int8
+    /// scale surfaced as metadata; 0.0 for windows that carry no scale).
+    /// Spool publishers route here whenever the publish codec
+    /// [`Codec::is_lossy`] — note the *plane being written is already
+    /// dequantized* (`transport::feedback::ErrorFeedback::prepare` ran
+    /// before publish), so the stored digests verify the decoded payload
+    /// exactly as in v4.
+    pub fn save_v5(&self, path: &Path, codec: Codec) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating {}", path.display()))?,
+        );
+        self.write_to_v5(&mut f, codec)?;
+        f.flush().with_context(|| format!("flushing {}", path.display()))
+    }
+
+    /// Stream the `CKPT0005` encoding (see [`Checkpoint::save_v5`]).
+    pub fn write_to_v5(&self, f: &mut impl Write, codec: Codec) -> Result<()> {
+        f.write_all(MAGIC_V5)?;
+        f.write_all(&(self.member as u64).to_le_bytes())?;
+        f.write_all(&self.step.to_le_bytes())?;
+
+        let layout = self.flat.layout();
+        let digests = self.window_digests().clone();
+        let encoded: Vec<(Codec, Vec<u8>)> = layout
+            .entries()
+            .iter()
+            .map(|e| codec.encode(&self.flat.data()[e.range()]))
+            .collect();
+        f.write_all(&(layout.len() as u64).to_le_bytes())?;
+        for ((e, d), (tag, bytes)) in
+            layout.entries().iter().zip(digests.iter()).zip(&encoded)
+        {
+            write_name(&mut f, &e.name)?;
+            write_shape(&mut f, &e.shape)?;
+            f.write_all(&d.to_le_bytes())?;
+            f.write_all(&[tag.id()])?;
+            // scale column: the int8 header scale surfaced into the
+            // table (tools can read quantization metadata without
+            // touching payload bytes); 0.0 for every other tag
+            let scale = match tag {
+                Codec::Int8 if bytes.len() >= 4 => {
+                    f32::from_le_bytes(bytes[..4].try_into().unwrap())
+                }
+                _ => 0.0,
+            };
+            f.write_all(&scale.to_le_bytes())?;
+            f.write_all(&(bytes.len() as u64).to_le_bytes())?;
+        }
+        let total: u64 = encoded.iter().map(|(_, b)| b.len() as u64).sum();
+        f.write_all(&total.to_le_bytes())?;
+        for (_, bytes) in &encoded {
+            f.write_all(bytes)?;
+        }
+        self.write_residual(f)
+    }
+
     /// The part of the v2/v3 encodings after the window table: the whole
     /// plane as one unframed slice, then the framed residual entries.
     fn write_payload_and_residual(&self, f: &mut impl Write) -> Result<()> {
@@ -415,7 +474,8 @@ impl Checkpoint {
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
         match &magic {
-            m if m == MAGIC_V4 => Self::load_v4(f),
+            m if m == MAGIC_V5 => Self::load_encoded(f, true),
+            m if m == MAGIC_V4 => Self::load_encoded(f, false),
             m if m == MAGIC_V3 => Self::load_contiguous(f, true),
             m if m == MAGIC_V2 => Self::load_contiguous(f, false),
             m if m == MAGIC_V1 => Self::load_v1(f),
@@ -423,10 +483,14 @@ impl Checkpoint {
         }
     }
 
-    /// `CKPT0004` reader: decode every window under its recorded codec,
-    /// then verify the decoded bytes against the stored digest — a
-    /// corrupt encoded payload (or a lying table) is a load error here,
-    /// never a silently-wrong plane.
+    /// `CKPT0004`/`CKPT0005` reader (`with_scales` = v5's extra
+    /// quantization-scale table column): decode every window under its
+    /// recorded codec, then verify the decoded bytes against the stored
+    /// digest — a corrupt encoded payload (or a lying table) is a load
+    /// error here, never a silently-wrong plane. For lossy tags the
+    /// stored digests are digests of the dequantized values (the plane
+    /// was quantized once, publisher-side), so this check is exactly as
+    /// strong as for lossless windows.
     ///
     /// This stream is parsed off untrusted bytes (socket `LATEST`
     /// replies, `PUBLISH` bodies), so wire-supplied sizes never drive an
@@ -435,7 +499,7 @@ impl Checkpoint {
     /// [`MAX_WINDOW_BYTES`], and encoded payloads are read through
     /// `take(..)` so a lying length fails at EOF instead of reserving
     /// the claimed size.
-    fn load_v4(f: &mut impl Read) -> Result<Self> {
+    fn load_encoded(f: &mut impl Read, with_scales: bool) -> Result<Self> {
         let member = read_u64(f)? as usize;
         let step = read_u64(f)?;
 
@@ -458,28 +522,29 @@ impl Checkpoint {
             let mut tag = [0u8; 1];
             f.read_exact(&mut tag)?;
             let codec = Codec::from_id(tag[0])?;
-            let enc_len = read_u64(f)? as usize;
-            // The never-larger rule bounds every stored encoding; a raw
-            // tag must match the window size exactly. Checking up front
-            // turns a corrupt table into an error instead of a huge read.
-            let cap = numel * 4;
-            let ok = match codec {
-                Codec::Raw => enc_len == cap,
-                _ => enc_len <= cap,
+            let scale = if with_scales {
+                Some(f32::from_bits(read_u32(f)?))
+            } else {
+                None
             };
-            if !ok {
+            let enc_len = read_u64(f)? as usize;
+            // Every codec has a known (or never-larger-bounded) encoded
+            // size for this window. Checking up front turns a corrupt
+            // table into an error instead of a huge read.
+            if !codec.wire_len_ok(enc_len as u64, numel) {
                 bail!(
-                    "window {:?}: {} encoding of {enc_len} bytes exceeds the {cap}-byte raw size",
+                    "window {:?}: {} encoding of {enc_len} bytes is inconsistent with \
+                     {numel} elems",
                     parts.last().unwrap().0,
                     codec.name()
                 );
             }
-            encodings.push((codec, enc_len));
+            encodings.push((codec, enc_len, scale));
         }
         let layout = Arc::new(FlatLayout::from_named_shapes(parts));
 
         let payload_total = read_u64(f)?;
-        let expect: u64 = encodings.iter().map(|&(_, n)| n as u64).sum();
+        let expect: u64 = encodings.iter().map(|&(_, n, _)| n as u64).sum();
         if payload_total != expect {
             bail!("encoded payload claims {payload_total} bytes, window table wants {expect}");
         }
@@ -488,7 +553,7 @@ impl Checkpoint {
         // table claims.
         let mut decoded_windows = Vec::with_capacity(encodings.len());
         let mut bytes = Vec::new();
-        for (i, (codec, enc_len)) in encodings.iter().enumerate() {
+        for (i, (codec, enc_len, scale)) in encodings.iter().enumerate() {
             let e = &layout.entries()[i];
             bytes.clear();
             let took = f.by_ref().take(*enc_len as u64).read_to_end(&mut bytes)?;
@@ -497,6 +562,20 @@ impl Checkpoint {
                     "window {:?}: encoded payload truncated ({took} of {enc_len} bytes)",
                     e.name
                 );
+            }
+            // v5 surfaces the int8 scale as table metadata; it must
+            // agree bit-for-bit with the payload's own header or the
+            // file is corrupt
+            if let (Codec::Int8, Some(s)) = (codec, scale) {
+                if bytes.len() >= 4
+                    && f32::from_le_bytes(bytes[..4].try_into().unwrap()).to_bits()
+                        != s.to_bits()
+                {
+                    bail!(
+                        "window {:?}: table scale {s} disagrees with the int8 payload header",
+                        e.name
+                    );
+                }
             }
             let decoded = codec
                 .decode(&bytes, e.len)
@@ -857,6 +936,74 @@ mod tests {
         raw[n - 8 - 1] ^= 0x40;
         std::fs::write(&path, &raw).unwrap();
         assert!(Checkpoint::load(&path).is_err(), "corrupt v4 loaded");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v5_roundtrip_stores_lossy_windows_with_scales() {
+        let dir = std::env::temp_dir().join(format!("codistill_ckpt_v5_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c5.ckpt");
+        // values exactly on the int8 power-of-two grid: a prepared
+        // (already-dequantized) plane, as ErrorFeedback::prepare would
+        // hand to publish — the exact-or-raw rule keeps the int8 tag
+        let mut params = mixed_params();
+        params.insert("params.big", Tensor::f32(&[512], vec![0.5; 512]).unwrap());
+        let c = Checkpoint::new(5, 99, params);
+        c.save_v5(&path, Codec::Int8).unwrap();
+        let raw = std::fs::read(&path).unwrap();
+        assert_eq!(&raw[..8], MAGIC_V5);
+        // int8 moves ~1 byte/elem: the 512-elem window alone saves ~1.5 KiB
+        let v3_path = dir.join("c5_ref.ckpt");
+        c.save(&v3_path).unwrap();
+        let v3_len = std::fs::metadata(&v3_path).unwrap().len() as usize;
+        assert!(raw.len() + 1024 < v3_len, "v5 {} !<< v3 {v3_len}", raw.len());
+
+        let l = Checkpoint::load(&path).unwrap();
+        assert_eq!((l.member, l.step), (5, 99));
+        assert_eq!(l.flat().data(), c.flat().data(), "on-grid plane loads bit-identical");
+        assert_eq!(l.window_digests(), c.window_digests());
+        assert_eq!(
+            l.params().get("params.ids").unwrap().as_i32().unwrap(),
+            &[7, 8, 9]
+        );
+        // lossless tags write v5 fine too (scale column all zeros)
+        c.save_v5(&path, Codec::Shuffle).unwrap();
+        let l = Checkpoint::load(&path).unwrap();
+        assert_eq!(l.flat().data(), c.flat().data());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v5_load_rejects_corrupt_payload_and_lying_scale() {
+        let dir = std::env::temp_dir().join(format!("codistill_ckpt_v5c_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c5bad.ckpt");
+        let mut params = TensorMap::new();
+        params.insert("params.w", Tensor::f32(&[256], vec![0.5; 256]).unwrap());
+        let c = Checkpoint::new(0, 1, params);
+        c.save_v5(&path, Codec::Int8).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // flip an i8 code inside the encoded payload: decode succeeds
+        // but the digest over the dequantized values no longer matches
+        let mut raw = good.clone();
+        let n = raw.len();
+        raw[n - 8 - 1] ^= 0x40;
+        std::fs::write(&path, &raw).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("digest mismatch"), "{err:#}");
+
+        // corrupt the table's scale column so it disagrees with the
+        // payload header. The preamble is magic(8) member(8) step(8)
+        // count(8) = 32 bytes; the single row is then name(4+8)
+        // shape(4+8) digest(8) tag(1) scale(4) len(8).
+        let mut raw = good.clone();
+        let scale_off = 32 + (4 + "params.w".len()) + (4 + 8) + 8 + 1;
+        raw[scale_off] ^= 0x01;
+        std::fs::write(&path, &raw).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("disagrees"), "{err:#}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,14 +1,20 @@
-//! Lossless window codecs for the checkpoint exchange.
+//! Window codecs for the checkpoint exchange.
 //!
 //! The paper's systems budget (§2.1) is exchange bandwidth: PR 4's delta
 //! fetch cut *which* windows move (digest-matched windows are skipped);
-//! this layer cuts *how many bytes* each moved window costs. Every codec
-//! here is **lossless on the f32 bit patterns** — the decoded window is
-//! byte-identical to the publisher's plane, so digest verification and
-//! the transport-equivalence matrix hold unchanged and the prediction
-//! math never sees the codec.
+//! this layer cuts *how many bytes* each moved window costs. The codecs
+//! in this file are **lossless on the f32 bit patterns** — the decoded
+//! window is byte-identical to the publisher's plane; the [`lossy`]
+//! submodule adds quantizing codecs ([`Codec::Fp16`], [`Codec::Int8`])
+//! whose precision loss is applied ONCE, publisher-side, by
+//! `transport::feedback::ErrorFeedback` — by the time a plane reaches
+//! any transport it is already dequantized, its digests are digests of
+//! the dequantized values, and every wire/file hop is exact (enforced
+//! by [`Codec::encode`]'s exact-or-raw rule below). Digest verification
+//! and the transport-equivalence matrix therefore hold for every codec
+//! id.
 //!
-//! Two codecs ship behind the [`WindowCodec`] trait:
+//! Two lossless codecs ship behind the [`WindowCodec`] trait:
 //!
 //! * [`RawCodec`] (wire id 0) — passthrough: the window's f32s as LE
 //!   bytes, exactly what moved before this layer existed. Also the
@@ -23,12 +29,18 @@
 //!   shape this transform exploits.
 //!
 //! [`Codec`] is the wire-facing registry: a `Copy` tag that travels in
-//! `CKPT0004` window tables, socket capability bytes, and
+//! `CKPT0004`/`CKPT0005` window tables, socket capability bytes, and
 //! `FetchedWindow` payloads, dispatching to the trait impls. Encoding
 //! through [`Codec::encode`] applies the **never-larger rule**: if the
 //! preferred codec does not shrink a window, the window ships raw (tagged
 //! [`Codec::Raw`]), so an encoded payload is never bigger than the
-//! passthrough and decoders size-check against that bound.
+//! passthrough and decoders size-check against that bound
+//! ([`Codec::wire_len_ok`]). Lossy tags additionally apply the
+//! **exact-or-raw rule**: [`Codec::encode`] round-trips the encoding and
+//! ships raw unless the decode is bit-identical to the input — transports
+//! re-encoding an already-dequantized plane stay lossless in effect,
+//! while a plane that was never quantized is never silently degraded by
+//! a transport hop.
 //!
 //! Decode failures (truncated stream, bad varint, length mismatch) are
 //! hard errors; the install side additionally digest-verifies every
@@ -36,6 +48,10 @@
 //! payload fails exactly as loudly as a corrupt raw one.
 
 use anyhow::{bail, Context, Result};
+
+pub mod lossy;
+
+use lossy::{Fp16Codec, Int8Codec};
 
 /// One lossless window encoding: f32 slice in, bytes out, and back.
 /// Implementations must be pure functions of the bits — a publisher and
@@ -64,10 +80,18 @@ pub enum Codec {
     Raw,
     /// Byteshuffle + RLE/varint (wire id 1).
     Shuffle,
+    /// Lossy binary16 quantization (wire id 2, [`lossy::Fp16Codec`]).
+    Fp16,
+    /// Lossy per-window symmetric i8 quantization (wire id 3,
+    /// [`lossy::Int8Codec`]; the 4-byte scale header travels inside the
+    /// encoded payload).
+    Int8,
 }
 
 static RAW_CODEC: RawCodec = RawCodec;
 static SHUFFLE_CODEC: ShuffleRleCodec = ShuffleRleCodec;
+static FP16_CODEC: Fp16Codec = Fp16Codec;
+static INT8_CODEC: Int8Codec = Int8Codec;
 
 impl Codec {
     /// The codec implementation behind this tag.
@@ -75,6 +99,30 @@ impl Codec {
         match self {
             Codec::Raw => &RAW_CODEC,
             Codec::Shuffle => &SHUFFLE_CODEC,
+            Codec::Fp16 => &FP16_CODEC,
+            Codec::Int8 => &INT8_CODEC,
+        }
+    }
+
+    /// Whether this tag quantizes (drops precision) on encode. Lossy
+    /// tags route publishes through `save_v5`/`CKPT0005` on the spool
+    /// and are only safe to apply publisher-side (see
+    /// `transport::feedback`).
+    pub fn is_lossy(self) -> bool {
+        matches!(self, Codec::Fp16 | Codec::Int8)
+    }
+
+    /// Size sanity for a wire/file-claimed encoded length: each codec
+    /// has a known (or bounded) encoded size for `elems` elements, so a
+    /// hostile length claim becomes an error before it becomes an
+    /// allocation or a misdecode.
+    pub fn wire_len_ok(self, enc_len: u64, elems: usize) -> bool {
+        let raw = elems as u64 * 4;
+        match self {
+            Codec::Raw => enc_len == raw,
+            Codec::Shuffle => enc_len <= raw,
+            Codec::Fp16 => enc_len == elems as u64 * 2,
+            Codec::Int8 => enc_len == 4 + elems as u64,
         }
     }
 
@@ -89,6 +137,8 @@ impl Codec {
         match id {
             0 => Ok(Codec::Raw),
             1 => Ok(Codec::Shuffle),
+            2 => Ok(Codec::Fp16),
+            3 => Ok(Codec::Int8),
             other => bail!("unknown window codec id {other}"),
         }
     }
@@ -98,7 +148,9 @@ impl Codec {
         match s {
             "raw" | "none" => Ok(Codec::Raw),
             "shuffle" | "byteshuffle" | "shuffle-rle" => Ok(Codec::Shuffle),
-            other => bail!("unknown codec {other:?} (want raw|shuffle)"),
+            "fp16" | "f16" | "half" => Ok(Codec::Fp16),
+            "int8" | "i8" => Ok(Codec::Int8),
+            other => bail!("unknown codec {other:?} (want raw|shuffle|fp16|int8)"),
         }
     }
 
@@ -108,14 +160,21 @@ impl Codec {
 
     /// Encode one window under the never-larger rule: try this codec,
     /// fall back to [`Codec::Raw`] when the encoding does not shrink the
-    /// window. Returns the tag actually used alongside the bytes — the
-    /// per-window codec tag every transport carries.
+    /// window. Lossy tags additionally fall back unless the round trip
+    /// is bit-exact (the exact-or-raw rule: transports re-encode already
+    /// -dequantized planes losslessly, and never quantize a plane the
+    /// publisher didn't). Returns the tag actually used alongside the
+    /// bytes — the per-window codec tag every transport carries.
     pub fn encode(self, data: &[f32]) -> (Codec, Vec<u8>) {
         match self {
             Codec::Raw => (Codec::Raw, RAW_CODEC.encode(data)),
             other => {
                 let enc = other.imp().encode(data);
-                if enc.len() < data.len() * 4 {
+                let fits = enc.len() < data.len() * 4;
+                let exact = !other.is_lossy()
+                    || matches!(other.imp().decode(&enc, data.len()), Ok(back)
+                        if back.iter().zip(data).all(|(a, b)| a.to_bits() == b.to_bits()));
+                if fits && exact {
                     (other, enc)
                 } else {
                     (Codec::Raw, RAW_CODEC.encode(data))
@@ -341,13 +400,55 @@ mod tests {
 
     #[test]
     fn ids_and_parse_roundtrip() {
-        for c in [Codec::Raw, Codec::Shuffle] {
+        for c in [Codec::Raw, Codec::Shuffle, Codec::Fp16, Codec::Int8] {
             assert_eq!(Codec::from_id(c.id()).unwrap(), c);
             assert_eq!(Codec::parse(c.name()).unwrap(), c);
         }
         assert!(Codec::from_id(99).is_err());
         assert!(Codec::parse("gzip").is_err());
         assert_eq!(Codec::parse("byteshuffle").unwrap(), Codec::Shuffle);
+        assert_eq!(Codec::parse("half").unwrap(), Codec::Fp16);
+        assert_eq!(Codec::parse("i8").unwrap(), Codec::Int8);
+        assert!(Codec::Fp16.is_lossy() && Codec::Int8.is_lossy());
+        assert!(!Codec::Raw.is_lossy() && !Codec::Shuffle.is_lossy());
+    }
+
+    #[test]
+    fn wire_len_bounds_per_codec() {
+        assert!(Codec::Raw.wire_len_ok(40, 10));
+        assert!(!Codec::Raw.wire_len_ok(39, 10));
+        assert!(Codec::Shuffle.wire_len_ok(3, 10));
+        assert!(!Codec::Shuffle.wire_len_ok(41, 10));
+        assert!(Codec::Fp16.wire_len_ok(20, 10));
+        assert!(!Codec::Fp16.wire_len_ok(40, 10));
+        assert!(Codec::Int8.wire_len_ok(14, 10));
+        assert!(!Codec::Int8.wire_len_ok(10, 10));
+    }
+
+    #[test]
+    fn lossy_tags_ship_raw_unless_exact() {
+        // a plane that is NOT on the quantization grid: exact-or-raw
+        // falls back so no transport hop ever degrades it
+        let unquantized = vec![0.1f32, 0.2, 0.3, 0.4, 1.0 / 3.0];
+        for c in [Codec::Fp16, Codec::Int8] {
+            let (tag, bytes) = c.encode(&unquantized);
+            assert_eq!(tag, Codec::Raw, "{} quantized an unprepared plane", c.name());
+            assert_eq!(bytes.len(), unquantized.len() * 4);
+        }
+        // the same plane after one publisher-side round trip re-ships
+        // under the lossy tag (value idempotence)
+        for c in [Codec::Fp16, Codec::Int8] {
+            let enc = c.imp().encode(&unquantized);
+            let prepared = c.imp().decode(&enc, unquantized.len()).unwrap();
+            let (tag, bytes) = c.encode(&prepared);
+            assert_eq!(tag, c);
+            assert!(bytes.len() < prepared.len() * 4);
+            roundtrip(c, &prepared); // and that wire hop is bit-exact
+        }
+        // single-element int8 windows never fit (5 > 4 bytes): raw
+        let one = Int8Codec.decode(&Int8Codec.encode(&[0.5f32]), 1).unwrap();
+        let (tag, _) = Codec::Int8.encode(&one);
+        assert_eq!(tag, Codec::Raw);
     }
 
     #[test]

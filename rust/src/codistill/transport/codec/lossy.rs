@@ -1,0 +1,377 @@
+//! Lossy quantizing window codecs for the checkpoint exchange.
+//!
+//! The paper's core observation is that online distillation tolerates
+//! stale, *imprecise* teacher weights — checkpoints "only rarely get
+//! transmitted" and runs still converge — so the exchange can drop
+//! precision, not just pack bytes. These codecs quantize a window's f32s
+//! down to 16 or 8 bits per element; the dequantized window the reader
+//! installs is *not* bit-identical to the training job's plane.
+//!
+//! Two codecs:
+//!
+//! * [`Fp16Codec`] (wire id 2) — IEEE-754 binary16 with round-to-nearest
+//!   -even. 2 bytes/elem, no header. Worst-case relative error is
+//!   2^-11 (~4.9e-4) for normal values; values outside f16 range clamp
+//!   to ±inf, NaNs collapse to the canonical quiet NaN.
+//! * [`Int8Codec`] (wire id 3) — per-window symmetric linear
+//!   quantization to i8 in [-127, 127] with one power-of-two scale
+//!   stored as an f32 header. 4 + n bytes for n elems. Absolute error
+//!   per element is bounded by `scale / 2` where
+//!   `scale = 2^ceil(log2(amax / 127))` and `amax` is the window's
+//!   largest finite magnitude; non-finite inputs map to 0 (NaN) or ±127
+//!   (±inf).
+//!
+//! **Decode is exact.** Both codecs dequantize deterministically —
+//! f16→f32 widening is exact, `i8 * 2^e` is exact — so any two readers
+//! decode identical bytes to identical f32s and digest verification over
+//! the *decoded* payload still fails loudly on corruption.
+//!
+//! **Encode is value-idempotent on dequantized planes.** Feeding a
+//! codec's own output back through `encode` reproduces it bit-for-bit:
+//! every f16 value is its own nearest f16, and with power-of-two scales
+//! every `q * 2^e` re-quantizes exactly even if the second pass picks a
+//! smaller scale. This is what lets the publisher quantize ONCE (see
+//! `transport::feedback::ErrorFeedback`) and publish the dequantized
+//! plane: every transport hop after that — spool files, socket frames,
+//! relays re-encoding for downstream readers — is lossless in effect,
+//! enforced mechanically by [`super::Codec::encode`]'s exact-or-raw
+//! check.
+
+use anyhow::{bail, Result};
+
+use super::WindowCodec;
+
+// ------------------------------------------------------------- fp16
+
+/// IEEE-754 binary16 quantizer (wire id 2): 2 bytes/elem, RNE rounding.
+pub struct Fp16Codec;
+
+impl WindowCodec for Fp16Codec {
+    fn id(&self) -> u8 {
+        2
+    }
+
+    fn name(&self) -> &'static str {
+        "fp16"
+    }
+
+    fn encode(&self, data: &[f32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(data.len() * 2);
+        for v in data {
+            out.extend_from_slice(&f32_to_f16_bits(*v).to_le_bytes());
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8], elems: usize) -> Result<Vec<f32>> {
+        if bytes.len() != elems * 2 {
+            bail!(
+                "fp16 window payload has {} bytes, {elems} elems need {}",
+                bytes.len(),
+                elems * 2
+            );
+        }
+        Ok(bytes
+            .chunks_exact(2)
+            .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+            .collect())
+    }
+}
+
+/// f32 → binary16 bits with round-to-nearest-even. Overflow → ±inf,
+/// underflow past the smallest subnormal → ±0, NaN → canonical quiet
+/// NaN (payload dropped — a lossy codec keeps values, not diagnostics).
+pub(crate) fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        return if man != 0 { sign | 0x7e00 } else { sign | 0x7c00 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow to inf
+    }
+    if e <= 0 {
+        // f16 subnormal (or underflow to zero): shift the full 24-bit
+        // significand down so the implicit bit lands at its subnormal
+        // position, rounding to nearest even on the dropped bits.
+        if e < -10 {
+            return sign; // below half the smallest subnormal
+        }
+        let man = man | 0x0080_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let half = (man >> shift) as u16;
+        let round = 1u32 << (shift - 1);
+        if man & round != 0 && (man & (round - 1) != 0 || half & 1 != 0) {
+            return sign | (half + 1); // may carry into the normal range: correct
+        }
+        return sign | half;
+    }
+    let half = ((e as u16) << 10) | (man >> 13) as u16;
+    let round = 1u32 << 12;
+    if man & round != 0 && (man & (round - 1) != 0 || half & 1 != 0) {
+        return sign | (half + 1); // mantissa carry rolls the exponent: correct (incl. → inf)
+    }
+    sign | half
+}
+
+/// binary16 bits → f32. Exact: every f16 value is representable in f32.
+pub(crate) fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    if exp == 0x1f {
+        return f32::from_bits(sign | 0x7f80_0000 | (man << 13));
+    }
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign);
+        }
+        // subnormal: man * 2^-24, exact in f32
+        let v = man as f32 * f32::from_bits(0x3380_0000);
+        return if sign != 0 { -v } else { v };
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+// ------------------------------------------------------------- int8
+
+/// Per-window symmetric i8 quantizer (wire id 3): a 4-byte LE f32 scale
+/// header, then one i8 per element. `x → round(x / scale)` clamped to
+/// [-127, 127]; `q → q * scale` back.
+pub struct Int8Codec;
+
+impl WindowCodec for Int8Codec {
+    fn id(&self) -> u8 {
+        3
+    }
+
+    fn name(&self) -> &'static str {
+        "int8"
+    }
+
+    fn encode(&self, data: &[f32]) -> Vec<u8> {
+        let scale = int8_scale(data);
+        let mut out = Vec::with_capacity(4 + data.len());
+        out.extend_from_slice(&scale.to_le_bytes());
+        let s = scale as f64;
+        for &x in data {
+            // clamp BEFORE the cast: the saturating f64→i8 cast would
+            // send -inf to -128, outside the symmetric range (NaN →
+            // clamp keeps NaN → cast gives 0, which is what we want)
+            let q = (x as f64 / s).round().clamp(-127.0, 127.0) as i8;
+            out.push(q as u8);
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8], elems: usize) -> Result<Vec<f32>> {
+        if bytes.len() != 4 + elems {
+            bail!(
+                "int8 window payload has {} bytes, {elems} elems need {}",
+                bytes.len(),
+                4 + elems
+            );
+        }
+        let scale = f32::from_le_bytes(bytes[..4].try_into().unwrap());
+        if !scale.is_finite() || scale <= 0.0 {
+            bail!("int8 window header carries invalid scale {scale}");
+        }
+        Ok(bytes[4..].iter().map(|&b| b as i8 as f32 * scale).collect())
+    }
+}
+
+/// The window's quantization step: the smallest power of two `2^e ≥
+/// amax / 127` (so every finite magnitude fits in [-127, 127]), with
+/// `e` clamped to f32's representable range. Power-of-two scales make
+/// dequantization (`q * 2^e`) and re-quantization exact — the
+/// value-idempotence the module docs rely on. An all-zero (or
+/// all-non-finite) window gets scale 1.0.
+fn int8_scale(data: &[f32]) -> f32 {
+    let mut amax = 0f32;
+    for &x in data {
+        if x.is_finite() {
+            amax = amax.max(x.abs());
+        }
+    }
+    if amax == 0.0 {
+        return 1.0;
+    }
+    let target = amax as f64 / 127.0;
+    let mut e = target.log2().ceil() as i32;
+    while e > -149 && ((e - 1) as f64).exp2() >= target {
+        e -= 1;
+    }
+    while e < 127 && (e as f64).exp2() < target {
+        e += 1;
+    }
+    (e.clamp(-149, 127) as f64).exp2() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Codec;
+    use super::*;
+
+    #[test]
+    fn f16_conversion_hits_the_known_landmarks() {
+        // (f32 input, expected f16 bits)
+        let cases: &[(f32, u16)] = &[
+            (0.0, 0x0000),
+            (-0.0, 0x8000),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (65504.0, 0x7bff),       // f16 max
+            (65536.0, 0x7c00),       // overflow → inf
+            (f32::INFINITY, 0x7c00),
+            (f32::NEG_INFINITY, 0xfc00),
+            (6.103_515_6e-5, 0x0400), // smallest f16 normal, 2^-14
+            (5.960_464_5e-8, 0x0001), // smallest f16 subnormal, 2^-24
+            (2.980_232_2e-8, 0x0000), // exactly half the smallest: RNE → even (0)
+            (1e-10, 0x0000),          // deep underflow → 0
+            (0.1, 0x2e66),            // RNE on a repeating fraction
+        ];
+        for &(x, want) in cases {
+            assert_eq!(f32_to_f16_bits(x), want, "converting {x}");
+        }
+        assert_eq!(f32_to_f16_bits(f32::NAN) & 0x7e00, 0x7e00);
+        // widening every f16 bit pattern and re-narrowing is identity
+        // (NaNs collapse to canonical but stay NaN)
+        for h in 0..=u16::MAX {
+            let back = f32_to_f16_bits(f16_bits_to_f32(h));
+            let exp = (h >> 10) & 0x1f;
+            let man = h & 0x3ff;
+            if exp == 0x1f && man != 0 {
+                assert_eq!(back & 0x7e00, 0x7e00, "NaN {h:#x} must stay NaN");
+                assert_eq!(back & 0x8000, h & 0x8000, "NaN {h:#x} keeps its sign");
+            } else {
+                assert_eq!(back, h, "f16 {h:#x} not a fixed point");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1.0 + 2^-11 sits exactly between 1.0 and the next f16
+        // (1.0 + 2^-10): RNE picks the even mantissa (1.0)
+        assert_eq!(f32_to_f16_bits(1.0 + 0.000_488_281_25), 0x3c00);
+        // one ulp above the midpoint rounds up
+        assert_eq!(
+            f32_to_f16_bits(f32::from_bits((1.0f32 + 0.000_488_281_25).to_bits() + 1)),
+            0x3c01
+        );
+        // next midpoint (between 0x3c01 and 0x3c02) rounds UP to even
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 0.000_488_281_25), 0x3c02);
+    }
+
+    #[test]
+    fn int8_scale_is_a_power_of_two_covering_amax() {
+        for amax in [1.0f32, 0.1, 127.0, 1e-30, 3.4e38, 0.5, 126.9] {
+            let s = int8_scale(&[amax, -amax / 2.0]);
+            // power of two: one mantissa bit
+            let m = s.to_bits() & 0x007f_ffff;
+            let e = (s.to_bits() >> 23) & 0xff;
+            assert!(
+                (e > 0 && m == 0) || (e == 0 && m.count_ones() == 1),
+                "scale {s} for amax {amax} is not a power of two"
+            );
+            assert!(s as f64 * 127.0 >= amax as f64, "amax {amax} overflows scale {s}");
+            // not gratuitously coarse: half the scale would not cover
+            if s > f32::MIN_POSITIVE {
+                assert!(
+                    (s as f64 / 2.0) * 127.0 < amax as f64,
+                    "scale {s} for amax {amax} is coarser than needed"
+                );
+            }
+        }
+        assert_eq!(int8_scale(&[0.0, -0.0]), 1.0);
+        assert_eq!(int8_scale(&[f32::NAN, f32::INFINITY]), 1.0);
+        assert_eq!(int8_scale(&[]), 1.0);
+    }
+
+    #[test]
+    fn int8_error_is_within_half_a_scale() {
+        let data: Vec<f32> = (0..512).map(|i| (i as f32 - 256.0) * 0.003).collect();
+        let enc = Int8Codec.encode(&data);
+        let scale = f32::from_le_bytes(enc[..4].try_into().unwrap());
+        let back = Int8Codec.decode(&enc, data.len()).unwrap();
+        for (x, y) in data.iter().zip(&back) {
+            assert!(
+                (x - y).abs() as f64 <= scale as f64 / 2.0 + 1e-12,
+                "|{x} - {y}| > scale/2 ({scale})"
+            );
+        }
+    }
+
+    #[test]
+    fn int8_nonfinite_inputs_quantize_cleanly() {
+        let data = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1.0, -1.0];
+        let enc = Int8Codec.encode(&data);
+        let back = Int8Codec.decode(&enc, data.len()).unwrap();
+        let scale = f32::from_le_bytes(enc[..4].try_into().unwrap());
+        assert_eq!(back[0], 0.0); // NaN → 0
+        assert_eq!(back[1], 127.0 * scale); // +inf clamps to the top code
+        assert_eq!(back[2], -127.0 * scale); // -inf to the bottom (NOT -128)
+        assert_eq!(back[3], 1.0);
+        assert_eq!(back[4], -1.0);
+    }
+
+    #[test]
+    fn lossy_codecs_are_idempotent_on_their_own_output() {
+        let data: Vec<f32> = (0..300)
+            .map(|i| ((i * 37 % 101) as f32 - 50.0) * 0.013 + 0.1)
+            .collect();
+        for codec in [Codec::Fp16, Codec::Int8] {
+            let first = codec.imp().decode(&codec.imp().encode(&data), data.len()).unwrap();
+            let again = codec
+                .imp()
+                .decode(&codec.imp().encode(&first), first.len())
+                .unwrap();
+            let a: Vec<u32> = first.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = again.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "{} not idempotent", codec.name());
+            // and the registry-level encode agrees it is exact: the
+            // dequantized plane re-ships under the lossy tag
+            let (tag, _) = codec.encode(&first);
+            assert_eq!(tag, codec, "{} exact-or-raw rejected its own output", codec.name());
+        }
+    }
+
+    #[test]
+    fn int8_rescale_of_own_output_stays_exact() {
+        // A dequantized window whose max |q| < 64 makes the second
+        // encode pick a smaller power-of-two scale; values must still
+        // re-quantize exactly (q * 2^m with the finer scale).
+        let enc = Int8Codec.encode(&[0.1f32; 16]); // q = 102 everywhere
+        let once = Int8Codec.decode(&enc, 16).unwrap();
+        let small: Vec<f32> = once.iter().map(|v| v / 4.0).collect(); // exact: /2^2
+        let (tag, bytes) = Codec::Int8.encode(&small);
+        assert_eq!(tag, Codec::Int8);
+        let back = Codec::Int8.decode(&bytes, 16).unwrap();
+        assert_eq!(
+            small.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            back.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn wire_layout_and_length_checks() {
+        let data = [0.5f32, -0.25, 0.125];
+        let f = Fp16Codec.encode(&data);
+        assert_eq!(f.len(), 6);
+        let i = Int8Codec.encode(&data);
+        assert_eq!(i.len(), 7);
+        assert!(Fp16Codec.decode(&f, 2).is_err());
+        assert!(Fp16Codec.decode(&f[..5], 3).is_err());
+        assert!(Int8Codec.decode(&i, 2).is_err());
+        assert!(Int8Codec.decode(&i[..6], 3).is_err());
+        // invalid scale headers are protocol errors, not NaN planes
+        for bad in [0.0f32, -1.0, f32::NAN, f32::INFINITY] {
+            let mut c = i.clone();
+            c[..4].copy_from_slice(&bad.to_le_bytes());
+            assert!(Int8Codec.decode(&c, 3).is_err(), "scale {bad} accepted");
+        }
+    }
+}

@@ -96,6 +96,7 @@
 
 pub mod codec;
 pub mod faulty;
+pub mod feedback;
 pub mod inproc;
 pub mod relay;
 pub mod retry;
@@ -105,6 +106,7 @@ pub mod subscribe;
 
 pub use codec::{Codec, WindowCodec};
 pub use faulty::{Blackout, FaultEvent, FaultKind, FaultPlan, Faulty};
+pub use feedback::{ErrorFeedback, FeedbackStats};
 pub use inproc::InProcess;
 pub use relay::{Relay, RelayConfig, RelayStats};
 pub use retry::{classify_error, ErrorClass, Retry, RetryPolicy, RetryStats};

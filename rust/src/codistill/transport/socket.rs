@@ -59,8 +59,11 @@
 //! asymmetric-safe in both directions: an old client never sets the bit
 //! and keeps receiving raw frames byte-identical to before; an old server
 //! rejects the unknown bit with a clean `STATUS_ERR` ("bad basis flag" /
-//! the `checked_count` guard on the absurd name count), which the new
-//! client detects, remembers, and transparently retries raw. Replies to a
+//! the `checked_count` guard on the absurd name count), and a
+//! capability-aware server that predates a codec id (the lossy `fp16` /
+//! `int8` tags postdate `shuffle`) rejects it with "unknown window codec
+//! id" — either way the new client detects, remembers, and transparently
+//! retries raw. Replies to a
 //! capability request frame every changed window as `codec u8, len u64,
 //! bytes` with a **per-window tag**: windows the codec cannot shrink ride
 //! raw-tagged, and the client hands encoded payloads to the install side
@@ -1336,11 +1339,16 @@ impl SocketTransport {
         }
     }
 
-    /// Whether `err` is a pre-capability server rejecting a capability
-    /// request (old `DELTA` flag validation / old `FETCH` count guard).
+    /// Whether `err` is a peer rejecting a capability request: a
+    /// pre-capability server (old `DELTA` flag validation / old `FETCH`
+    /// count guard), or a capability-aware-but-older server that knows
+    /// the codec byte yet not this codec id (lossy tags postdate the
+    /// lossless ones).
     fn is_capability_rejection(err: &anyhow::Error) -> bool {
         let text = format!("{err:#}");
-        text.contains("bad basis flag") || text.contains("names but only")
+        text.contains("bad basis flag")
+            || text.contains("names but only")
+            || text.contains("unknown window codec id")
     }
 
     /// (requests, bytes sent, bytes received) so far — the numbers the
@@ -2053,6 +2061,66 @@ mod tests {
         let res = client.fetch(&spec).unwrap().unwrap();
         assert_eq!(res.windows[0].to_f32().unwrap(), vec![9.0, 9.0, 9.0]);
         legacy.join().unwrap();
+    }
+
+    /// A lossy-codec client against a capability-aware server that
+    /// predates the lossy ids: the server understands the codec byte but
+    /// rejects id 3 with "unknown window codec id", and the client falls
+    /// back (stickily) to raw frames exactly like against a
+    /// pre-capability server.
+    #[test]
+    fn lossy_capability_falls_back_against_shuffle_era_server() {
+        use std::net::TcpListener;
+
+        let store = Arc::new(InProcess::new(4));
+        store.publish(ckpt(0, 1, &[1.0, 2.0, 3.0, 4.0, 5.0])).unwrap();
+        store.publish(ckpt(0, 2, &[1.0, 2.0, 9.0, 9.0, 9.0])).unwrap();
+        let v1 = InProcess::latest_at_most(&store, 0, 1).unwrap();
+        let basis = Basis {
+            step: 1,
+            digests: v1.window_digests().as_ref().clone(),
+        };
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let thread_store = store.clone();
+        let older = std::thread::spawn(move || {
+            for _ in 0..3 {
+                let (mut s, _) = listener.accept().unwrap();
+                let req = match read_frame(&mut s).unwrap() {
+                    Some(r) => r,
+                    None => continue,
+                };
+                // a shuffle-era server accepts the capability bit but its
+                // Codec::from_id knows only ids 0 and 1 (the codec byte
+                // rides last on a DELTA request)
+                let reply = if req[0] == OP_DELTA
+                    && req[17] & DELTA_FLAG_CODEC != 0
+                    && *req.last().unwrap() > 1
+                {
+                    let mut out = vec![STATUS_ERR];
+                    out.extend_from_slice(
+                        format!("unknown window codec id {}", req.last().unwrap()).as_bytes(),
+                    );
+                    out
+                } else {
+                    handle_request(thread_store.as_ref(), &req)
+                };
+                write_frame(&mut s, &reply).ok();
+            }
+        });
+
+        let client = SocketTransport::connect_tcp(&addr).with_codec(Codec::Int8);
+        let spec =
+            crate::codistill::transport::FetchSpec::full(0, u64::MAX).with_basis(basis.clone());
+        let res = client.fetch(&spec).unwrap().unwrap();
+        assert_eq!(res.step, 2);
+        assert_eq!(res.unchanged, vec!["params.a".to_string()]);
+        assert_eq!(res.windows[0].to_f32().unwrap(), vec![9.0, 9.0, 9.0]);
+        assert_eq!(res.windows[0].codec(), Codec::Raw, "fallback still encoded?");
+        let res = client.fetch(&spec).unwrap().unwrap();
+        assert_eq!(res.windows[0].to_f32().unwrap(), vec![9.0, 9.0, 9.0]);
+        older.join().unwrap();
     }
 
     #[test]

@@ -7,10 +7,12 @@
 //!
 //! * `memberNNNN_stepNNNNNNNNNNNNNNNNNNNN.ckpt` — one `CKPT0003` file per
 //!   publication, or `CKPT0004` with per-window codec-encoded payloads
-//!   when the publisher opted in via [`SpoolDir::with_codec`] (older
-//!   `CKPT0002`/`CKPT0001` files still read; handles with different
-//!   codecs interoperate on one directory because reads are driven by
-//!   each file's own window table). Member
+//!   when the publisher opted in via [`SpoolDir::with_codec`], or
+//!   `CKPT0005` (the `CKPT0004` table plus a per-window scale column
+//!   surfacing int8 quantization metadata) when that codec is lossy
+//!   (older `CKPT0002`/`CKPT0001` files still read; handles with
+//!   different codecs interoperate on one directory because reads are
+//!   driven by each file's own window table). Member
 //!   and step are zero-padded so lexicographic directory order equals
 //!   (member, step) order: manifest recovery after a crash is a plain
 //!   sorted scan. Files are written to a hidden `.tmp_*` name and
@@ -47,8 +49,8 @@
 //! [`Basis`]: crate::codistill::transport::Basis
 
 use crate::codistill::store::{
-    read_framed_tensor, read_name, read_shape, read_u64, Checkpoint, MAGIC_V1, MAGIC_V2, MAGIC_V3,
-    MAGIC_V4,
+    read_framed_tensor, read_name, read_shape, read_u32, read_u64, Checkpoint, MAGIC_V1, MAGIC_V2,
+    MAGIC_V3, MAGIC_V4, MAGIC_V5,
 };
 use crate::codistill::transport::{
     fetch_from_checkpoint, partition_windows, Codec, ExchangeTransport, FetchResult, FetchSpec,
@@ -313,10 +315,11 @@ fn parse_plane_header(r: impl Read) -> Result<Option<PlaneHeader>> {
     if &magic == MAGIC_V1 {
         return Ok(None);
     }
-    let (with_digests, with_codecs) = match &magic {
-        m if m == MAGIC_V4 => (true, true),
-        m if m == MAGIC_V3 => (true, false),
-        m if m == MAGIC_V2 => (false, false),
+    let (with_digests, with_codecs, with_scales) = match &magic {
+        m if m == MAGIC_V5 => (true, true, true),
+        m if m == MAGIC_V4 => (true, true, false),
+        m if m == MAGIC_V3 => (true, false, false),
+        m if m == MAGIC_V2 => (false, false, false),
         _ => bail!("bad checkpoint magic"),
     };
     let member = read_u64(&mut f)? as usize;
@@ -336,6 +339,19 @@ fn parse_plane_header(r: impl Read) -> Result<Option<PlaneHeader>> {
             let mut tag = [0u8; 1];
             f.read_exact(&mut tag)?;
             let codec = Codec::from_id(tag[0])?;
+            if with_scales {
+                // v5 scale column: metadata only at this layer (the
+                // payload carries its own authoritative header, which
+                // decode validates), but an int8 row with a nonsense
+                // scale means a corrupt table — fail here, not at read.
+                let scale = f32::from_bits(read_u32(&mut f)?);
+                if codec == Codec::Int8 && !(scale.is_finite() && scale > 0.0) {
+                    bail!(
+                        "window {:?}: int8 table scale {scale} is not a positive finite value",
+                        parts.last().unwrap().0
+                    );
+                }
+            }
             let enc_len = read_u64(&mut f)?;
             encodings.push((codec, enc_len));
         }
@@ -347,16 +363,13 @@ fn parse_plane_header(r: impl Read) -> Result<Option<PlaneHeader>> {
         let mut ranges = Vec::with_capacity(encodings.len());
         let mut off = 0u64;
         for (i, (codec, enc_len)) in encodings.iter().enumerate() {
-            let cap = layout.entries()[i].len as u64 * 4;
-            let ok = match codec {
-                Codec::Raw => *enc_len == cap,
-                _ => *enc_len <= cap,
-            };
-            if !ok {
+            if !codec.wire_len_ok(*enc_len, layout.entries()[i].len) {
                 bail!(
-                    "window {:?}: {} encoding of {enc_len} bytes exceeds the {cap}-byte raw size",
+                    "window {:?}: {} encoding of {enc_len} bytes is inconsistent with \
+                     {} elems",
                     layout.entries()[i].name,
-                    codec.name()
+                    codec.name(),
+                    layout.entries()[i].len
                 );
             }
             ranges.push((*codec, off..off + enc_len));
@@ -394,10 +407,12 @@ pub struct SpoolDir {
     dir: PathBuf,
     history: usize,
     /// Codec this handle's publications are written under:
-    /// [`Codec::Raw`] = `CKPT0003` files, anything else = `CKPT0004`
-    /// files with per-window encoded payloads. Read paths are
-    /// codec-agnostic (the file's own table drives decoding), so handles
-    /// with different codecs interoperate on one directory.
+    /// [`Codec::Raw`] = `CKPT0003` files, lossless codecs = `CKPT0004`
+    /// files with per-window encoded payloads, lossy codecs = `CKPT0005`
+    /// files that additionally surface quantization scales in the
+    /// window table. Read paths are codec-agnostic (the file's own
+    /// table drives decoding), so handles with different codecs
+    /// interoperate on one directory.
     codec: Codec,
     /// Loaded checkpoints keyed by (member, step): repeated `latest`
     /// reads on the reload cadence hit memory, not the filesystem.
@@ -418,9 +433,11 @@ impl SpoolDir {
         })
     }
 
-    /// Publish through `codec`: checkpoints land as `CKPT0004` files
-    /// whose windows are individually encoded (raw-tagged when the codec
-    /// does not shrink them), so delta readers `pread` fewer bytes.
+    /// Publish through `codec`: checkpoints land as `CKPT0004` (or, for
+    /// lossy codecs, `CKPT0005`) files whose windows are individually
+    /// encoded (raw-tagged when the codec does not shrink them or, for
+    /// lossy tags, when the window does not round-trip bit-exactly), so
+    /// delta readers `pread` fewer bytes.
     pub fn with_codec(mut self, codec: Codec) -> Self {
         self.codec = codec;
         self
@@ -643,6 +660,7 @@ impl ExchangeTransport for SpoolDir {
         let tmp = self.dir.join(spool_temp_name(member, step));
         match self.codec {
             Codec::Raw => ckpt.save(&tmp)?,
+            codec if codec.is_lossy() => ckpt.save_v5(&tmp, codec)?,
             codec => ckpt.save_v4(&tmp, codec)?,
         }
         std::fs::rename(&tmp, self.dir.join(spool_file_name(member, step)))?;
@@ -930,6 +948,63 @@ mod tests {
         assert!(
             cache.latest(&SpoolDir::open(&dir, 4).unwrap(), 0).is_err(),
             "corrupt encoded payload installed silently"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lossy_spool_writes_v5_and_preads_int8_windows() {
+        use crate::codistill::transport::{Basis, DeltaCache};
+        let dir = tdir("spooldir_lossy");
+        let spool = SpoolDir::open(&dir, 4).unwrap().with_codec(Codec::Int8);
+        // values exactly on the int8 power-of-two grid, as a prepared
+        // (already-dequantized) plane from ErrorFeedback::prepare is
+        spool.publish(ckpt(0, 1, &[0.5, 0.5, 1.0, 1.0, 1.0])).unwrap();
+        let raw = std::fs::read(dir.join(spool_file_name(0, 1))).unwrap();
+        assert_eq!(&raw[..8], MAGIC_V5);
+
+        // full load (fresh handle) round-trips through the v5 reader
+        let reader = SpoolDir::open(&dir, 4).unwrap();
+        let v1 = reader.latest(0).unwrap().unwrap();
+        assert_eq!(v1.flat().view("params.a").unwrap(), &[0.5, 0.5]);
+
+        // delta pread ships the still-encoded int8 window (4-byte scale
+        // header + one code byte per elem); install decodes + verifies
+        let basis = Basis {
+            step: 1,
+            digests: v1.window_digests().as_ref().clone(),
+        };
+        spool.publish(ckpt(0, 2, &[0.75, 0.75, 1.0, 1.0, 1.0])).unwrap();
+        let fresh = SpoolDir::open(&dir, 4).unwrap();
+        let res = fresh
+            .fetch(&FetchSpec::full(0, u64::MAX).with_basis(basis))
+            .unwrap()
+            .unwrap();
+        assert_eq!(res.unchanged, vec!["params.b".to_string()]);
+        assert_eq!(res.windows.len(), 1);
+        assert_eq!(res.windows[0].codec(), Codec::Int8);
+        assert_eq!(res.payload_bytes(), 4 + 2, "int8 wire layout drifted");
+        assert_eq!(res.windows[0].to_f32().unwrap(), vec![0.75, 0.75]);
+
+        let mut cache = DeltaCache::new();
+        let reader2 = SpoolDir::open(&dir, 4).unwrap();
+        let got = cache.latest(&reader2, 0).unwrap().unwrap();
+        let direct = reader2.latest(0).unwrap().unwrap();
+        assert_eq!(got.flat().data(), direct.flat().data());
+
+        // a flipped int8 code still decodes, but to the wrong values:
+        // the install-side digest verify must reject it loudly
+        let mut cache = DeltaCache::new();
+        cache.latest(&reader2, 0).unwrap().unwrap(); // installs step 2
+        spool.publish(ckpt(0, 3, &[0.25, 0.25, 2.0, 2.0, 2.0])).unwrap();
+        let path = dir.join(spool_file_name(0, 3));
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 8 - 1] ^= 0x20; // last payload byte, before the residual count
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(
+            cache.latest(&SpoolDir::open(&dir, 4).unwrap(), 0).is_err(),
+            "corrupt int8 payload installed silently"
         );
         std::fs::remove_dir_all(&dir).ok();
     }

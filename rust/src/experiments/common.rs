@@ -108,6 +108,9 @@ pub struct LmExpDefaults {
     pub val_batches: usize,
     /// Incremental (delta) teacher reloads (`--delta` / `delta=true`).
     pub delta: bool,
+    /// Publisher-side error feedback for lossy codecs
+    /// (`--error-feedback` / `error_feedback=true`).
+    pub error_feedback: bool,
     pub verbose: bool,
 }
 
@@ -123,6 +126,7 @@ pub fn lm_defaults(s: &Settings) -> Result<LmExpDefaults> {
         seed: s.u64_or("seed", 42)?,
         val_batches: s.usize_or("val_batches", 4)?,
         delta: s.bool_or("delta", false)?,
+        error_feedback: s.bool_or("error_feedback", false)?,
         verbose: s.bool_or("verbose", false)?,
     })
 }
@@ -139,8 +143,28 @@ pub fn orch_config(d: &LmExpDefaults, distill: DistillSchedule, cluster: Option<
         cluster,
         seed: d.seed,
         delta: d.delta,
+        // callers override with the transport setup's codec once
+        // make_transport has resolved `--compress` / `codec=`
+        publish_codec: Codec::Raw,
+        error_feedback: d.error_feedback,
         verbose: d.verbose,
     }
+}
+
+/// One-line rendering of a run's publisher-side quantization accounting.
+pub fn feedback_stats_line(tag: &str, stats: &crate::codistill::FeedbackStats) {
+    println!(
+        "[{tag}] lossy publish: publishes={} quantized={} raw={} bytes={}/{} (ratio {:.3}) \
+         residual_l2={:.3e} max_bias={:.3e}",
+        stats.publishes,
+        stats.windows_quantized,
+        stats.windows_raw,
+        stats.bytes_quantized,
+        stats.bytes_raw_equiv,
+        stats.compression_ratio(),
+        stats.last_residual_l2,
+        stats.max_abs_bias
+    );
 }
 
 /// One-line rendering of a run's delta-exchange accounting.
@@ -181,8 +205,9 @@ pub struct TransportSetup {
 ///   `socket_windows=N` (default 0 = full-plane) shards teacher reloads
 ///   to N windows per fetch.
 ///
-/// `--compress` (`compress=true`; `codec=raw|shuffle`, default
-/// `shuffle`) turns on compressed window payloads: spool publications
+/// `--compress` (`compress=true`; `codec=raw|shuffle|fp16|int8`,
+/// default `shuffle`) turns on compressed window payloads: spool
+/// publications
 /// become `CKPT0004` files with per-window encoded ranges, socket reads
 /// negotiate encoded `DELTA`/`FETCH` frames via the capability byte.
 /// In-process exchange moves no bytes over a medium, so the flag is a
@@ -338,14 +363,20 @@ pub fn cmd_codistill(s: &Settings) -> Result<()> {
     );
     cfg.topology = topology;
     let setup = make_transport(s, s.usize_or("history", 8)?)?;
+    cfg.publish_codec = setup.codec;
     if d.verbose {
         eprintln!(
-            "[codistill] exchange transport: {}{}",
+            "[codistill] exchange transport: {}{}{}",
             setup.kind.name(),
             if setup.codec != Codec::Raw {
                 format!(" (+{})", setup.codec.name())
             } else {
                 String::new()
+            },
+            if setup.codec.is_lossy() && cfg.error_feedback {
+                " (error feedback)"
+            } else {
+                ""
             }
         );
     }
@@ -354,6 +385,9 @@ pub fn cmd_codistill(s: &Settings) -> Result<()> {
     print_runlog("codistill", &log);
     if let Some(stats) = &log.delta {
         delta_stats_line("codistill", stats);
+    }
+    if let Some(stats) = &log.feedback {
+        feedback_stats_line("codistill", stats);
     }
     // `setup.server` (if any) stays alive until here by ownership.
     drop(setup);
@@ -466,7 +500,7 @@ pub fn cmd_coordinate(s: &Settings) -> Result<()> {
     };
     let compiled = scenario.as_ref().map(|sc| sc.compile(n, base)).transpose()?;
     let topology = Topology::parse(s.str_or("topology", "full")).context("bad topology")?;
-    let cfg = CoordinatorConfig {
+    let mut cfg = CoordinatorConfig {
         total_steps: d.steps,
         reload_interval: d.reload,
         eval_every: d.eval_every,
@@ -476,10 +510,13 @@ pub fn cmd_coordinate(s: &Settings) -> Result<()> {
         liveness_grace: s.u64_or("liveness_grace", 2 * d.reload + d.reload / 2)?,
         seed: d.seed,
         delta: d.delta,
+        publish_codec: Codec::Raw,
+        error_feedback: d.error_feedback,
         verbose: d.verbose,
     };
 
     let setup = make_transport(s, s.usize_or("history", 8)?)?;
+    cfg.publish_codec = setup.codec;
     // Fault plan: the scenario's compiled plan, with explicit `fault_*`
     // settings overlaid (probabilities combine by max, blackouts
     // concatenate, an explicit `fault_seed` wins).
@@ -520,7 +557,13 @@ pub fn cmd_coordinate(s: &Settings) -> Result<()> {
             "[coordinate] transport: {}{}{}{}{}",
             setup.kind.name(),
             if d.delta { " (+delta)" } else { "" },
-            if setup.codec != Codec::Raw {
+            if setup.codec.is_lossy() {
+                if d.error_feedback {
+                    " (+lossy+feedback)"
+                } else {
+                    " (+lossy)"
+                }
+            } else if setup.codec != Codec::Raw {
                 " (+compress)"
             } else {
                 ""
@@ -546,11 +589,15 @@ pub fn cmd_coordinate(s: &Settings) -> Result<()> {
     let mut members: Vec<Box<dyn Member>> = Vec::with_capacity(n);
     if mock {
         let frozen = s.usize_or("mock_frozen", 256)?;
+        // `mock_value=X` pins every frozen table to X — the lossy
+        // quality gate uses a value off the int8 grid (e.g. 0.1) so the
+        // quantization bias is observable.
+        let value = s.get("mock_value").map(|v| v.parse::<f32>()).transpose()?;
         for g in 0..n {
-            members.push(Box::new(crate::testkit::DriftMember::with_frozen(
-                base + g,
-                frozen,
-            )));
+            members.push(Box::new(match value {
+                Some(v) => crate::testkit::DriftMember::with_frozen_value(base + g, frozen, v),
+                None => crate::testkit::DriftMember::with_frozen(base + g, frozen),
+            }));
         }
     } else {
         let bundle = open_bundle(s, s.str_or("bundle", "lm_b64"))?;
@@ -605,6 +652,9 @@ pub fn cmd_coordinate(s: &Settings) -> Result<()> {
     );
     if let Some(stats) = &log.delta {
         delta_stats_line("coordinate", stats);
+    }
+    if let Some(stats) = &log.feedback {
+        feedback_stats_line("coordinate", stats);
     }
     if let Some(f) = &faulty {
         println!("[coordinate] injected faults: {}", f.fault_log().len());

@@ -11,7 +11,7 @@
 //! Emits `results/fig3.csv` (arm, step, accuracy, val_loss).
 
 use crate::codistill::{
-    DistillSchedule, LrSchedule, Member, Orchestrator, OrchestratorConfig, Topology,
+    Codec, DistillSchedule, LrSchedule, Member, Orchestrator, OrchestratorConfig, Topology,
 };
 use crate::config::Settings;
 use crate::experiments::common::{open_bundle, results_dir};
@@ -84,6 +84,8 @@ pub fn run(s: &Settings) -> Result<Fig3Summary> {
             cluster: None,
             seed,
             delta: false,
+            publish_codec: Codec::Raw,
+            error_feedback: false,
             verbose: s.bool_or("verbose", false)?,
         };
         let orch = Orchestrator::new(cfg);

@@ -18,6 +18,13 @@
 //! * `batch=N` (64), `batch_delay_ms=MS` (2), `workers=N` (2),
 //!   `probe=N` (32) — server batching and churn-probe knobs
 //! * `poll_ms=MS` (2) — subscription heartbeat cadence
+//! * `upstream=relay:ADDR` — subscribe through a checkpoint relay
+//!   instead of straight off the transport: `relay:auto` spawns an
+//!   in-process [`Relay`] over the built transport (the one-process
+//!   publisher → relay → serve demo), any other `ADDR` connects the
+//!   subscription to an already-running relay tier (`codistill relay`)
+//!   at that address — the publisher keeps publishing to the base
+//!   transport the relay mirrors
 //!
 //! The run prints the load report (p50/p99/p999 latency, goodput), the
 //! server's throughput-vs-batch-size table, the churn-across-swaps
@@ -25,7 +32,8 @@
 //! to serving), and the subscription's delta-exchange accounting.
 
 use crate::codistill::{
-    Codec, ExchangeTransport, Member, SubscribeConfig, Subscription,
+    Codec, ExchangeTransport, Member, Relay, RelayConfig, SocketTransport, SubscribeConfig,
+    Subscription,
 };
 use crate::codistill::serve::{
     closed_loop, open_loop, InferenceServer, LoadSpec, OpenLoopSpec, ServeConfig,
@@ -75,13 +83,57 @@ pub fn run(s: &Settings) -> Result<()> {
     let rps = s.f64_or("rps", 5000.0)?;
 
     let setup = make_transport(s, s.usize_or("history", 8)?)?;
-    let (transport, want_retry) = wrap_retry(s, setup.transport.clone(), seed)?;
+    // `upstream=relay:ADDR` interposes a relay hop between the publisher
+    // and the subscription: the publisher keeps publishing to the base
+    // transport, the subscription reads a relay's mirror of it.
+    // `relay:auto` spawns the relay in-process (one-command demo);
+    // anything else connects to an external `codistill relay`.
+    let mut relay: Option<Relay> = None;
+    let sub_base: Arc<dyn ExchangeTransport> = match s.get("upstream") {
+        None => setup.transport.clone(),
+        Some(v) => {
+            let addr = v
+                .strip_prefix("relay:")
+                .ok_or_else(|| anyhow::anyhow!("upstream must be relay:ADDR, got {v:?}"))?;
+            let client_addr = if addr == "auto" {
+                let r = Relay::spawn_tcp(
+                    setup.transport.clone(),
+                    "127.0.0.1:0",
+                    RelayConfig {
+                        poll_interval: Duration::from_millis(s.u64_or("poll_ms", 2)?),
+                        delta,
+                        codec: setup.codec,
+                        ..RelayConfig::default()
+                    },
+                )?;
+                let a = r.addr().to_string();
+                relay = Some(r);
+                a
+            } else {
+                addr.to_string()
+            };
+            let mut t = SocketTransport::connect_tcp(&client_addr);
+            if setup.codec != Codec::Raw {
+                t = t.with_codec(setup.codec);
+            }
+            Arc::new(t)
+        }
+    };
+    let (sub_transport, want_retry) = wrap_retry(s, sub_base, seed)?;
+    let (transport, _) = wrap_retry(s, setup.transport.clone(), seed)?;
     if verbose {
         eprintln!(
-            "[serve] transport: {}{}{}{}",
+            "[serve] transport: {}{}{}{}{}",
             setup.kind.name(),
             if delta { " (+delta)" } else { "" },
             if setup.codec != Codec::Raw { " (+compress)" } else { "" },
+            if relay.is_some() {
+                " (via in-process relay)"
+            } else if s.get("upstream").is_some() {
+                " (via external relay)"
+            } else {
+                ""
+            },
             if want_retry { " (+retry)" } else { "" }
         );
     }
@@ -92,7 +144,7 @@ pub fn run(s: &Settings) -> Result<()> {
     // a hot swap under whatever traffic is in flight.
     let sub_server = server.clone();
     let mut sub = Subscription::spawn(
-        transport.clone(),
+        sub_transport.clone(),
         SubscribeConfig {
             member,
             poll_interval: Duration::from_millis(s.u64_or("poll_ms", 2)?),
@@ -187,6 +239,14 @@ pub fn run(s: &Settings) -> Result<()> {
     );
     if delta {
         delta_stats_line("serve", &sub_stats.delta);
+    }
+    if let Some(mut r) = relay.take() {
+        let rs = r.stats();
+        println!(
+            "[serve] relay hop: polls={} installs={} tolerated_errors={}",
+            rs.polls, rs.installs, rs.tolerated_errors
+        );
+        r.stop();
     }
     drop(setup);
     Ok(())

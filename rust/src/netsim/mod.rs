@@ -148,6 +148,18 @@ impl ClusterModel {
         self.sharded_exchange_time(teachers, (f * r * self.model_bytes as f64) as u64)
     }
 
+    /// [`ClusterModel::compressed_exchange_time`] priced by codec instead
+    /// of a hand-picked ratio (see [`codec_wire_ratio`]) — the shorthand
+    /// the bench and CLI summaries use for lossy exchange projections.
+    pub fn codec_exchange_time(
+        &self,
+        teachers: usize,
+        changed_fraction: f64,
+        codec: crate::codistill::transport::Codec,
+    ) -> f64 {
+        self.compressed_exchange_time(teachers, changed_fraction, codec_wire_ratio(codec))
+    }
+
     /// Exchange wall time when `dead` of a reader's `teachers` peers are
     /// unreachable (§2.2: the coordinator's liveness table drops them):
     /// the write and the live reads move planes at full bandwidth, while
@@ -279,6 +291,29 @@ pub fn relay_tree_depth(readers: usize, fanout: usize) -> u32 {
         depth += 1;
     }
     depth
+}
+
+/// Steady-state wire bytes per raw payload byte for each window codec,
+/// as priced by [`ClusterModel::codec_exchange_time`]:
+///
+/// * `Raw` — 1.0 by definition;
+/// * `Shuffle` — ~0.55, the byte-shuffle + RLE ratio the hotpath bench
+///   measures on converging-run planes (high-entropy mantissa bytes,
+///   compressible sign/exponent bytes);
+/// * `Fp16` — exactly 0.5: two wire bytes per 4-byte element;
+/// * `Int8` — ~0.26: one code byte per element plus the 4-byte
+///   per-window scale header, amortized over bench-sized windows.
+///
+/// These are modelling constants for capacity planning, not guarantees —
+/// the transport's never-larger rule only bounds each window at 1.0.
+pub fn codec_wire_ratio(codec: crate::codistill::transport::Codec) -> f64 {
+    use crate::codistill::transport::Codec;
+    match codec {
+        Codec::Raw => 1.0,
+        Codec::Shuffle => 0.55,
+        Codec::Fp16 => 0.5,
+        Codec::Int8 => 0.26,
+    }
 }
 
 /// Analytic price of one coordinator member's run (see
@@ -580,6 +615,33 @@ mod tests {
             m.compressed_exchange_time(3, 0.25, -1.0),
             m.compressed_exchange_time(3, 0.25, 0.0)
         );
+    }
+
+    #[test]
+    fn codec_pricing_orders_the_codecs() {
+        use crate::codistill::transport::Codec;
+        let m = ClusterModel::gpu_cluster(8, 40_000_000);
+        // raw pricing degenerates to the plain delta exchange
+        assert_eq!(
+            m.codec_exchange_time(3, 0.25, Codec::Raw),
+            m.delta_exchange_time(3, 0.25)
+        );
+        // heavier quantization is strictly cheaper on the wire
+        let raw = m.codec_exchange_time(3, 0.25, Codec::Raw);
+        let shuf = m.codec_exchange_time(3, 0.25, Codec::Shuffle);
+        let fp16 = m.codec_exchange_time(3, 0.25, Codec::Fp16);
+        let int8 = m.codec_exchange_time(3, 0.25, Codec::Int8);
+        assert!(
+            int8 < fp16 && fp16 < shuf && shuf < raw,
+            "{int8} < {fp16} < {shuf} < {raw}"
+        );
+        // and the int8 ratio prices ≥2× fewer read bytes than shuffle —
+        // the same margin the hotpath bench pins on real payloads
+        assert!(codec_wire_ratio(Codec::Int8) * 2.0 <= codec_wire_ratio(Codec::Shuffle));
+        for c in [Codec::Raw, Codec::Shuffle, Codec::Fp16, Codec::Int8] {
+            let r = codec_wire_ratio(c);
+            assert!(r > 0.0 && r <= 1.0, "{c:?} ratio {r} out of range");
+        }
     }
 
     #[test]

@@ -146,11 +146,20 @@ impl DriftMember {
     /// so a delta exchange must skip it; the OS-process harness asserts
     /// exactly that through the coordinator's delta accounting.
     pub fn with_frozen(id: usize, elems: usize) -> Self {
+        Self::with_frozen_value(id, elems, 0.25 * (id as f32 + 1.0))
+    }
+
+    /// [`with_frozen`](Self::with_frozen) with an explicit table value.
+    /// The lossy-exchange quality gate pins quantization bias on a value
+    /// that is *off* the int8 power-of-two grid (the default
+    /// `0.25·(id+1)` values all sit exactly on it, which would make the
+    /// gate vacuous).
+    pub fn with_frozen_value(id: usize, elems: usize, value: f32) -> Self {
         let mut m = Self::new(id);
         if elems > 0 {
             m.params.insert(
                 "params.table",
-                Tensor::f32(&[elems], vec![0.25 * (id as f32 + 1.0); elems]).unwrap(),
+                Tensor::f32(&[elems], vec![value; elems]).unwrap(),
             );
         }
         m

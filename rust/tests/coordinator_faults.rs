@@ -11,8 +11,9 @@
 
 use codistill::codistill::transport::FaultKind;
 use codistill::codistill::{
-    Coordinator, CoordinatorConfig, CoordinatorLog, DistillSchedule, ExchangeTransport, FaultPlan,
-    Faulty, HostedMember, InProcess, LrSchedule, Member, SocketServer, SocketTransport, Topology,
+    Codec, Coordinator, CoordinatorConfig, CoordinatorLog, DistillSchedule, ExchangeTransport,
+    FaultPlan, Faulty, HostedMember, InProcess, LrSchedule, Member, SocketServer, SocketTransport,
+    Topology,
 };
 use codistill::testkit::{DriftMember, DriftProbe};
 use std::sync::{Arc, Mutex};
@@ -28,6 +29,8 @@ fn cfg() -> CoordinatorConfig {
         liveness_grace: 35,
         seed: 5,
         delta: false,
+        publish_codec: Codec::Raw,
+        error_feedback: false,
         verbose: false,
     }
 }

@@ -1,0 +1,589 @@
+//! Lossy exchange quality gate (ISSUE 9).
+//!
+//! The paper's premise is that online distillation tolerates stale,
+//! *imprecise* teacher weights, so the exchange may quantize — but only
+//! the publisher may quantize, exactly once, with the error accounted
+//! for. These tests pin the three legs of that contract:
+//!
+//! 1. **Quality**: same-seed orchestrated mock runs with `--compress
+//!    codec=int8 --error-feedback` stay within a pinned tolerance of the
+//!    lossless reference, while the *feedback-off* run's accumulated
+//!    quantization bias grows linearly with publish count — measurably
+//!    (>3x) worse than the telescoping feedback-on carry.
+//! 2. **Transport invisibility**: a plane prepared by [`ErrorFeedback`]
+//!    installs byte-identically over inproc, CKPT0005 spool files,
+//!    encoded socket frames, a relay hop, and fault injection — and a
+//!    corrupt lossy payload fails the decoded-payload digest loudly.
+//! 3. **Codec laws**: for every registered wire id, `Codec::encode` is
+//!    exact-or-raw (decode(encode(x)) is bit-identical for *arbitrary*
+//!    input, NaN and inf included) and never larger than raw; loss only
+//!    ever enters through `ErrorFeedback::prepare`, within documented
+//!    bounds.
+
+use codistill::codistill::transport::spool::spool_file_name;
+use codistill::codistill::transport::{DeltaCache, ErrorFeedback};
+use codistill::codistill::{
+    Checkpoint, Codec, DistillSchedule, EvalStats, ExchangeTransport, FaultPlan, Faulty,
+    InProcess, LrSchedule, Member, Orchestrator, OrchestratorConfig, Relay, RelayConfig, RunLog,
+    SocketServer, SocketTransport, SpoolDir, StepStats, Topology,
+};
+use codistill::runtime::{Tensor, TensorMap};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+const W: usize = 4;
+/// The int8 grid step for windows with amax in (0.062, 0.124]: the
+/// power-of-two scale 2^-10. `GateMember` keeps every window inside
+/// that band so the bias arithmetic below is exact.
+const STEP: f64 = 0.0009765625;
+/// What int8 does to a frozen 0.1 window without feedback: 0.1 / 2^-10
+/// rounds to q=102, so every publish installs 102 * 2^-10 =
+/// 0.099609375 — a constant bias of one third of a step, every time.
+const TABLE_BIAS: f64 = 0.1 - 0.099609375;
+
+/// Deterministic member for the quality gate. `params.w` drifts inside
+/// [-0.124, 0.124] (one int8 scale band) and is pulled toward the
+/// installed teachers' mean; `params.table` is frozen at 0.1 — a value
+/// *off* the int8 grid, so every lossy publish quantizes it and the
+/// probe can watch the installed bias. Eval loss is `1 + mean|w|`.
+struct GateMember {
+    id: usize,
+    step: u64,
+    params: TensorMap,
+    teacher_mean: Option<Vec<f32>>,
+    /// Mean installed `params.table` value, one entry per reload.
+    table_installs: Arc<Mutex<Vec<f32>>>,
+}
+
+impl GateMember {
+    fn new(id: usize, table_installs: Arc<Mutex<Vec<f32>>>) -> Self {
+        let init: Vec<f32> = (0..W)
+            .map(|k| 0.02 + 0.03 * id as f32 + 0.01 * k as f32)
+            .collect();
+        let mut params = TensorMap::new();
+        params.insert("params.w", Tensor::f32(&[W], init).unwrap());
+        params.insert("params.table", Tensor::f32(&[16], vec![0.1; 16]).unwrap());
+        GateMember {
+            id,
+            step: 0,
+            params,
+            teacher_mean: None,
+            table_installs,
+        }
+    }
+
+    fn w(&self) -> Vec<f32> {
+        self.params
+            .get("params.w")
+            .unwrap()
+            .as_f32()
+            .unwrap()
+            .to_vec()
+    }
+}
+
+impl Member for GateMember {
+    fn train_step(&mut self, distill_w: f32, lr: f32) -> anyhow::Result<StepStats> {
+        let teacher = self.teacher_mean.clone();
+        let step = self.step;
+        let id = self.id as u64;
+        let w = self.params.get_mut("params.w")?.as_f32_mut()?;
+        let mut distill_loss = 0.0f32;
+        for (k, v) in w.iter_mut().enumerate() {
+            // drift in [-0.1, 0.1]: |w| stays under 127 * 2^-10 = 0.124
+            let drift = (((step * 7 + id * 13 + k as u64 * 5) % 11) as f32) * 0.02 - 0.1;
+            *v = *v * (1.0 - lr) + lr * drift;
+            if distill_w > 0.0 {
+                if let Some(t) = &teacher {
+                    let pull = t[k] - *v;
+                    *v += distill_w * lr * 0.5 * pull;
+                    distill_loss += pull * pull;
+                }
+            }
+        }
+        self.step += 1;
+        let loss = w.iter().map(|v| v.abs()).sum::<f32>() / W as f32;
+        Ok(StepStats {
+            step: self.step,
+            loss,
+            distill_loss,
+        })
+    }
+
+    fn snapshot(&self) -> anyhow::Result<Checkpoint> {
+        Ok(Checkpoint::new(self.id, self.step, self.params.clone()))
+    }
+
+    fn set_teachers(&mut self, peers: Vec<Arc<Checkpoint>>) -> anyhow::Result<()> {
+        let mut mean = vec![0.0f32; W];
+        let mut table = 0.0f32;
+        for p in &peers {
+            for (m, v) in mean.iter_mut().zip(p.flat().view("params.w")?) {
+                *m += *v;
+            }
+            table += p.flat().view("params.table")?[0];
+        }
+        for m in &mut mean {
+            *m /= peers.len() as f32;
+        }
+        self.teacher_mean = Some(mean);
+        self.table_installs
+            .lock()
+            .unwrap()
+            .push(table / peers.len() as f32);
+        Ok(())
+    }
+
+    fn evaluate(&mut self) -> anyhow::Result<EvalStats> {
+        let loss = 1.0 + self.w().iter().map(|v| v.abs() as f64).sum::<f64>() / W as f64;
+        Ok(EvalStats {
+            loss,
+            accuracy: None,
+        })
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.step
+    }
+
+    fn params(&self) -> &TensorMap {
+        &self.params
+    }
+}
+
+const GATE_MEMBERS: usize = 3;
+
+fn gate_cfg(codec: Codec, feedback: bool) -> OrchestratorConfig {
+    OrchestratorConfig {
+        total_steps: 400,
+        reload_interval: 5,
+        extra_staleness: 0,
+        eval_every: 100,
+        distill: DistillSchedule::new(5, 5, 1.0),
+        lr: LrSchedule::Constant(0.25),
+        topology: Topology::FullyConnected,
+        cluster: None,
+        seed: 3,
+        delta: true,
+        publish_codec: codec,
+        error_feedback: feedback,
+        verbose: false,
+    }
+}
+
+/// Run the gate fixture; returns the log and every installed teacher
+/// `params.table` mean, pooled across members in install order.
+fn gate_run(codec: Codec, feedback: bool) -> (RunLog, Vec<f32>) {
+    let installs = Arc::new(Mutex::new(Vec::new()));
+    let mut members: Vec<Box<dyn Member>> = (0..GATE_MEMBERS)
+        .map(|i| Box::new(GateMember::new(i, installs.clone())) as Box<dyn Member>)
+        .collect();
+    let log = Orchestrator::with_transport(gate_cfg(codec, feedback), Arc::new(InProcess::new(8)))
+        .run(&mut members)
+        .unwrap();
+    let got = installs.lock().unwrap().clone();
+    (log, got)
+}
+
+#[test]
+fn quality_gate_int8_with_feedback_tracks_lossless() {
+    let (reference, _) = gate_run(Codec::Raw, false);
+    let (on, on_installs) = gate_run(Codec::Int8, true);
+    let (off, off_installs) = gate_run(Codec::Int8, false);
+    assert!(reference.feedback.is_none(), "lossless run grew feedback stats");
+
+    // Eval curves: both lossy runs stay within a pinned tolerance of the
+    // lossless reference at every eval point — teacher quantization
+    // error is at most half a 2^-10 grid step per element, and the
+    // contraction in the member dynamics keeps it there.
+    for (tag, lossy) in [("feedback-on", &on), ("feedback-off", &off)] {
+        assert_eq!(lossy.eval.len(), reference.eval.len(), "{tag}");
+        for (m, (ra, la)) in reference.eval.iter().zip(&lossy.eval).enumerate() {
+            assert_eq!(ra.len(), la.len(), "{tag}: member {m} curve length");
+            for (rp, lp) in ra.iter().zip(la) {
+                assert_eq!(rp.step, lp.step, "{tag}: member {m}");
+                assert!(
+                    (rp.loss - lp.loss).abs() <= 0.02,
+                    "{tag}: member {m} step {} eval {} vs lossless {}",
+                    rp.step,
+                    lp.loss,
+                    rp.loss
+                );
+            }
+        }
+    }
+
+    // The frozen 0.1 table is off the int8 grid. Without feedback every
+    // install lands on the same rounded code: a constant bias of
+    // TABLE_BIAS per install, forever. With the carry the published code
+    // alternates around the true value, so per-install error stays
+    // under one grid step and the *accumulated* error telescopes.
+    assert!(off_installs.len() >= 50, "gate fixture barely exchanged");
+    assert_eq!(off_installs.len(), on_installs.len());
+    for v in &off_installs {
+        assert!(
+            ((0.1 - *v) as f64 - TABLE_BIAS).abs() < 1e-6,
+            "feedback-off install {v} is not the constant-bias code"
+        );
+    }
+    for v in &on_installs {
+        assert!(
+            ((0.1 - *v) as f64).abs() <= STEP + 1e-7,
+            "feedback-on install {v} strayed beyond one grid step"
+        );
+    }
+    let mean_err = |installs: &[f32]| {
+        installs.iter().map(|v| 0.1 - *v as f64).sum::<f64>() / installs.len() as f64
+    };
+    let (on_err, off_err) = (mean_err(&on_installs).abs(), mean_err(&off_installs).abs());
+    assert!(on_err < 1.5e-4, "feedback-on mean bias {on_err} too large");
+    assert!(off_err > 3.5e-4, "feedback-off mean bias {off_err} suspiciously small");
+    assert!(
+        off_err > 2.0 * on_err.max(1e-6),
+        "feedback-off bias {off_err} not measurably worse than feedback-on {on_err}"
+    );
+
+    // And the publisher-side accounting agrees: feedback-off max |bias|
+    // grows linearly in publishes; the feedback-on carry bounds it by
+    // half a grid step per window.
+    let on_stats = on.feedback.expect("feedback-on run lost its stats");
+    let off_stats = off.feedback.expect("feedback-off run lost its stats");
+    assert!(on_stats.windows_quantized > 0 && off_stats.windows_quantized > 0);
+    assert!(
+        on_stats.bytes_quantized < on_stats.bytes_raw_equiv,
+        "int8 windows did not shrink: {on_stats:?}"
+    );
+    let publishes_per_member = off_stats.publishes as f64 / GATE_MEMBERS as f64;
+    assert!(
+        off_stats.max_abs_bias >= 0.9 * publishes_per_member * TABLE_BIAS,
+        "feedback-off bias {} did not accumulate over ~{publishes_per_member} publishes",
+        off_stats.max_abs_bias
+    );
+    assert!(
+        on_stats.max_abs_bias <= 1.0e-3,
+        "feedback-on bias {} escaped the half-step carry bound",
+        on_stats.max_abs_bias
+    );
+    assert!(
+        off_stats.max_abs_bias > 3.0 * on_stats.max_abs_bias,
+        "feedback-off bias {} not >3x feedback-on {}",
+        off_stats.max_abs_bias,
+        on_stats.max_abs_bias
+    );
+}
+
+// ---------------------------------------------------- transport invisibility
+
+fn tdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("codistill_lossy_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+/// A two-window checkpoint with off-grid values: `params.hot` varies per
+/// step, `params.cold` never changes.
+fn offgrid_ckpt(member: usize, step: u64, hot: f32) -> Checkpoint {
+    let mut params = TensorMap::new();
+    let vals: Vec<f32> = (0..W).map(|k| hot + 0.0137 * k as f32).collect();
+    params.insert("params.hot", Tensor::f32(&[W], vals).unwrap());
+    params.insert("params.cold", Tensor::f32(&[W], vec![0.1; W]).unwrap());
+    Checkpoint::new(member, step, params)
+}
+
+/// The publisher-side sequence every backend below replays: off-grid
+/// planes quantized through the orchestrator's publish path. Feedback
+/// stays off here so the frozen `params.cold` window quantizes to the
+/// *same* code every publish (the carry would alternate adjacent codes,
+/// which is the point of the quality gate, not of transport
+/// invisibility) and the delta reader can digest-skip it.
+fn prepared_sequence() -> Vec<Checkpoint> {
+    let mut fb = ErrorFeedback::new(Codec::Int8, false);
+    [1u64, 5, 9]
+        .into_iter()
+        .enumerate()
+        .map(|(i, step)| {
+            fb.prepare(offgrid_ckpt(0, step, 0.31 + 0.017 * i as f32))
+                .unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn lossy_installs_byte_identical_on_all_backends() {
+    let cks = prepared_sequence();
+    let by_step = |step: u64| cks.iter().find(|c| c.step == step).unwrap();
+
+    let dir = tdir("backends");
+    let server = SocketServer::bind_tcp("127.0.0.1:0", 8).unwrap();
+    // (tag, transport, cache codec). Spool and socket negotiate the
+    // codec at the transport; inproc and faulty at the spec level.
+    let cases: Vec<(&str, Arc<dyn ExchangeTransport>, Option<Codec>)> = vec![
+        ("inproc", Arc::new(InProcess::new(8)), Some(Codec::Int8)),
+        (
+            "spool",
+            Arc::new(SpoolDir::open(&dir, 8).unwrap().with_codec(Codec::Int8)),
+            None,
+        ),
+        (
+            "socket",
+            Arc::new(SocketTransport::connect_tcp(server.addr()).with_codec(Codec::Int8)),
+            None,
+        ),
+        (
+            "faulty",
+            Arc::new(Faulty::wrap(
+                Arc::new(InProcess::new(8)),
+                FaultPlan::new(31).with_stale_reads(0.5),
+            )),
+            Some(Codec::Int8),
+        ),
+    ];
+    for (tag, transport, cache_codec) in &cases {
+        let mut cache = match cache_codec {
+            Some(c) => DeltaCache::new().with_codec(*c),
+            None => DeltaCache::new(),
+        };
+        for ck in &cks {
+            transport.publish(ck.clone()).unwrap();
+            // stale reads may serve an older publication: compare
+            // against whatever prepared step actually arrived
+            let got = cache.latest(transport.as_ref(), 0).unwrap().unwrap();
+            let want = by_step(got.step);
+            assert_eq!(
+                got.flat().data(),
+                want.flat().data(),
+                "{tag}: lossy install diverged from the prepared plane"
+            );
+            assert_eq!(
+                got.window_digests().as_ref(),
+                want.window_digests().as_ref(),
+                "{tag}: digest table diverged"
+            );
+        }
+        let stats = cache.stats();
+        assert!(
+            stats.windows_encoded > 0,
+            "{tag}: int8 never engaged on prepared planes: {stats:?}"
+        );
+        assert!(
+            stats.windows_unchanged > 0,
+            "{tag}: cold window moved every fetch: {stats:?}"
+        );
+    }
+    // the spool medium really is CKPT0005
+    let magic = &std::fs::read(dir.join(spool_file_name(0, 9))).unwrap()[..8];
+    assert_eq!(magic, b"CKPT0005");
+    drop(cases);
+    drop(server);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn lossy_installs_byte_identical_through_a_faulty_relay_hop() {
+    use std::time::{Duration, Instant};
+
+    let cks = prepared_sequence();
+    let hub = Arc::new(InProcess::new(8));
+    // half the hub-link fetches error: the relay must still converge on
+    // the exact prepared bytes
+    let flaky: Arc<dyn ExchangeTransport> = Arc::new(Faulty::wrap(
+        hub.clone(),
+        FaultPlan::new(11).with_erroring_fetches(0.5),
+    ));
+    let relay = Relay::spawn_tcp(
+        flaky,
+        "127.0.0.1:0",
+        RelayConfig {
+            poll_interval: Duration::from_millis(1),
+            delta: true,
+            codec: Codec::Int8,
+            ..RelayConfig::default()
+        },
+    )
+    .unwrap();
+    let leaf = SocketTransport::connect_tcp(relay.addr()).with_codec(Codec::Int8);
+    let mut reader = DeltaCache::new();
+
+    for ck in &cks {
+        let step = ck.step;
+        hub.publish(ck.clone()).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let got = loop {
+            if let Ok(Some(got)) = reader.latest(&leaf, 0) {
+                if got.step >= step {
+                    break got;
+                }
+            }
+            assert!(
+                Instant::now() < deadline,
+                "prepared step {step} never reached the leaf"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        assert_eq!(got.step, step);
+        assert_eq!(
+            got.flat().data(),
+            ck.flat().data(),
+            "relay hop diverged the lossy install at step {step}"
+        );
+        assert_eq!(got.window_digests().as_ref(), ck.window_digests().as_ref());
+    }
+    assert!(
+        relay.stats().tolerated_errors > 0,
+        "fault plan never errored the hub link"
+    );
+}
+
+#[test]
+fn corrupt_lossy_payload_fails_loudly() {
+    let cks = prepared_sequence();
+    let dir = tdir("corrupt");
+    let spool = SpoolDir::open(&dir, 8).unwrap().with_codec(Codec::Int8);
+    let mut cache = DeltaCache::new();
+    spool.publish(cks[0].clone()).unwrap();
+    cache.latest(&spool, 0).unwrap().unwrap();
+    spool.publish(cks[1].clone()).unwrap();
+
+    // flip one bit inside the encoded int8 payload (the file tail is
+    // payloads then an 8-byte residual count)
+    let path = dir.join(spool_file_name(0, 5));
+    let mut raw = std::fs::read(&path).unwrap();
+    let n = raw.len();
+    raw[n - 8 - 1] ^= 0x20;
+    std::fs::write(&path, &raw).unwrap();
+
+    // delta pread: the decoded-payload digest check must reject it
+    let reader = SpoolDir::open(&dir, 8).unwrap();
+    let err = format!("{:#}", cache.latest(&reader, 0).unwrap_err());
+    assert!(
+        err.contains("corrupt") || err.contains("digest mismatch"),
+        "unexpected corruption error: {err}"
+    );
+    // full load: same corruption, same loud failure
+    assert!(SpoolDir::open(&dir, 8).unwrap().latest(0).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ------------------------------------------------------------- codec laws
+
+fn edge_payloads() -> Vec<Vec<f32>> {
+    vec![
+        vec![],
+        vec![0.0],
+        vec![-0.0, 0.0, -0.0, 0.0],
+        vec![0.25; 300],                   // constant, on every grid
+        vec![0.1; 300],                    // constant, off the int8 grid
+        vec![f32::NAN, 1.0, -1.0, 0.5],
+        vec![f32::INFINITY, f32::NEG_INFINITY, 0.5, -0.5],
+        vec![1e-40, -1e-42, 1e-38, -0.0], // f32 denormals
+        vec![3.4e38, -3.4e38, 1e-45, 0.0], // extremes both ways
+        (0..257).map(|i| 0.37 + i as f32 * 1.3e-3).collect(),
+        (0..64).map(|i| ((i * 2654435761u64 as usize) % 97) as f32 * 0.011 - 0.5).collect(),
+    ]
+}
+
+#[test]
+fn every_codec_id_roundtrips_exact_or_raw_and_never_larger() {
+    for id in 0u8..=3 {
+        let codec = Codec::from_id(id).unwrap();
+        assert_eq!(codec.id(), id);
+        for (pi, p) in edge_payloads().into_iter().enumerate() {
+            let (tag, enc) = codec.encode(&p);
+            assert!(
+                enc.len() <= p.len() * 4,
+                "{} payload #{pi}: encoded {} B > raw {} B",
+                codec.name(),
+                enc.len(),
+                p.len() * 4
+            );
+            assert!(
+                tag.wire_len_ok(enc.len() as u64, p.len()),
+                "{} payload #{pi}: tag {} rejects its own length",
+                codec.name(),
+                tag.name()
+            );
+            let back = tag.decode(&enc, p.len()).unwrap();
+            let a: Vec<u32> = p.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = back.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(
+                a, b,
+                "{} payload #{pi}: transport-level encode was not exact-or-raw",
+                codec.name()
+            );
+        }
+    }
+    for bad in [4u8, 17, 255] {
+        let err = format!("{:#}", Codec::from_id(bad).unwrap_err());
+        assert!(
+            err.contains("unknown window codec id"),
+            "id {bad}: unexpected error {err}"
+        );
+    }
+}
+
+#[test]
+fn every_codec_id_roundtrips_random_windows() {
+    use codistill::testkit::{forall, in_range};
+    forall::<(u64, u64)>("codec exact-or-raw", 0x10_55, 96, |&(len_raw, bits)| {
+        let len = in_range(len_raw, 1, 96);
+        let data: Vec<f32> = (0..len)
+            .map(|i| f32::from_bits((bits as u32).wrapping_mul(2_654_435_769).wrapping_add(i as u32 * 0x9e37)))
+            .collect();
+        (0u8..=3).all(|id| {
+            let codec = Codec::from_id(id).unwrap();
+            let (tag, enc) = codec.encode(&data);
+            if enc.len() > data.len() * 4 {
+                return false;
+            }
+            match tag.decode(&enc, len) {
+                Ok(back) => back
+                    .iter()
+                    .zip(&data)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                Err(_) => false,
+            }
+        })
+    });
+}
+
+#[test]
+fn prepared_lossy_windows_stay_within_documented_tolerance() {
+    // Loss enters only via ErrorFeedback::prepare; its error bounds are
+    // the module-documented ones: fp16 relative 2^-11 (absolute 2^-24
+    // once subnormal), int8 absolute amax/127 (= scale/2 at worst).
+    let windows: Vec<Vec<f32>> = vec![
+        (0..128).map(|i| 0.001 + i as f32 * 0.0173).collect(),
+        (0..64).map(|i| -3.0 + i as f32 * 0.09).collect(),
+        vec![1e-40, 2e-40, -1e-39, 5e-41],
+        vec![0.1; 32],
+    ];
+    for codec in [Codec::Fp16, Codec::Int8] {
+        for (wi, vals) in windows.iter().enumerate() {
+            let mut params = TensorMap::new();
+            params.insert("params.x", Tensor::f32(&[vals.len()], vals.clone()).unwrap());
+            let mut fb = ErrorFeedback::new(codec, false);
+            let prepared = fb.prepare(Checkpoint::new(0, 1, params)).unwrap();
+            let got = prepared.flat().view("params.x").unwrap();
+            let amax = vals.iter().fold(0f64, |m, v| m.max(v.abs() as f64));
+            for (x, y) in vals.iter().zip(got) {
+                let err = (*x as f64 - *y as f64).abs();
+                let bound = match codec {
+                    Codec::Fp16 => (x.abs() as f64 * 2f64.powi(-11)).max(2f64.powi(-24)),
+                    _ => amax / 127.0 + 1e-12,
+                };
+                assert!(
+                    err <= bound,
+                    "{} window #{wi}: |{x} - {y}| = {err} > {bound}",
+                    codec.name()
+                );
+            }
+            // and what prepare published is exactly what transports
+            // re-encode losslessly under the lossy tag
+            let (tag, enc) = codec.encode(got);
+            if tag == codec {
+                let back = tag.decode(&enc, got.len()).unwrap();
+                assert!(back.iter().zip(got).all(|(a, b)| a.to_bits() == b.to_bits()));
+            }
+        }
+    }
+}

@@ -3,7 +3,7 @@
 //! testkit property sweep over coordinator invariants.
 
 use codistill::codistill::{
-    Checkpoint, DistillSchedule, EvalStats, LrSchedule, Member, Orchestrator,
+    Checkpoint, Codec, DistillSchedule, EvalStats, LrSchedule, Member, Orchestrator,
     OrchestratorConfig, StepStats, Topology,
 };
 use codistill::netsim::ClusterModel;
@@ -101,6 +101,8 @@ fn base_cfg(steps: u64, reload: u64) -> OrchestratorConfig {
         cluster: None,
         seed: 1,
         delta: false,
+        publish_codec: Codec::Raw,
+        error_feedback: false,
         verbose: false,
     }
 }

@@ -11,7 +11,7 @@
 
 use codistill::codistill::transport::FaultKind;
 use codistill::codistill::{
-    CompiledScenario, Coordinator, CoordinatorConfig, CoordinatorLog, DistillSchedule,
+    Codec, CompiledScenario, Coordinator, CoordinatorConfig, CoordinatorLog, DistillSchedule,
     ExchangeTransport, Faulty, InProcess, LrSchedule, Retry, RetryPolicy, Scenario, SocketServer,
     SocketTransport, Topology,
 };
@@ -50,6 +50,8 @@ fn cfg() -> CoordinatorConfig {
         liveness_grace: 25,
         seed: 5,
         delta: false,
+        publish_codec: Codec::Raw,
+        error_feedback: false,
         verbose: false,
     }
 }

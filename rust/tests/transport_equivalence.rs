@@ -133,6 +133,8 @@ fn cfg() -> OrchestratorConfig {
         cluster: None,
         seed: 3,
         delta: false,
+        publish_codec: Codec::Raw,
+        error_feedback: false,
         verbose: false,
     }
 }
