@@ -1,7 +1,7 @@
 # Build/test/bench entry points. The Rust workspace lives in rust/ and
 # builds fully offline (vendored deps; see rust/Cargo.toml).
 
-.PHONY: build test check test-faults test-scenarios test-procs test-wire test-lossy test-serve test-fanout bench bench-snapshot artifacts python-tests clean
+.PHONY: build test check test-faults test-scenarios test-procs test-wire test-lossy test-serve test-fanout test-obs bench bench-snapshot artifacts python-tests clean
 
 build:
 	cd rust && cargo build --release
@@ -13,7 +13,7 @@ test:
 # (skipped with a notice otherwise, so `make check` works on minimal
 # toolchains), then the tier-1 test suite and the serving-tier
 # integration suite.
-check: test-lossy test-serve test-fanout
+check: test-lossy test-serve test-fanout test-obs
 	cd rust && if cargo fmt --version >/dev/null 2>&1; then \
 		cargo fmt --all -- --check; \
 	else echo "make check: rustfmt unavailable, skipping fmt"; fi
@@ -86,6 +86,17 @@ test-serve:
 # Same seed => byte-identical sorted digest logs across two runs.
 test-fanout:
 	cd rust && CODISTILL_FAULT_SEEDS="11 23 47" cargo test -q --test fanout_scale
+
+# Observability suite: the codistill::obs event journal and recorder
+# (unit tests), plus the journal acceptance matrix — orchestrator,
+# coordinator, and serving tier over Retry(Faulty(Socket)) stacks, each
+# asserting same-seed byte-identical JSONL traces and replay texts, the
+# from_jsonl round trip, and the netsim::calibrate fit pinned on the
+# committed fixture trace (modeled exchange within 25% of measured).
+test-obs:
+	cd rust && cargo test -q --lib codistill::obs
+	cd rust && cargo test -q --lib netsim::calibrate
+	cd rust && cargo test -q --test obs_journal
 
 # Hot-path microbenchmarks. Writes the human table to stdout and the
 # machine-readable trajectory to BENCH_hotpath.json at the repo root.

@@ -72,6 +72,15 @@
 //! members for the deterministic `testkit::DriftMember` fleet (no
 //! artifacts/XLA needed — the OS-process harness `examples/spool_procs.rs`
 //! uses this).
+//!
+//! `--trace FILE` (alias `trace=FILE`) on `codistill` / `coordinate` /
+//! `serve` / `relay` records the run into a `codistill::obs` event
+//! journal and dumps it as JSONL on exit: publishes, fetches, delta
+//! installs, retries, fault decisions, quantizations, hot swaps, and
+//! staleness samples, each with a monotonic timestamp. `trace_clock=sim`
+//! swaps the wall clock for a seeded simulated clock (`seed=N`), making
+//! same-seed traces byte-identical; `netsim::calibrate` fits a
+//! `ClusterModel` from a wall-clock trace.
 
 use crate::config::Settings;
 use anyhow::{bail, Context, Result};
@@ -143,6 +152,11 @@ pub fn parse_args(args: &[String]) -> Result<Cli> {
                 settings.apply("retry=true")?;
                 i += 1;
             }
+            "--trace" => {
+                let path = args.get(i + 1).context("--trace needs a file path")?;
+                settings.apply(&format!("trace={path}"))?;
+                i += 2;
+            }
             other if other.starts_with("--") => bail!("unknown flag {other}\n{}", usage()),
             other => {
                 // bare key=value
@@ -163,7 +177,7 @@ fn settings_dump(_s: &Settings) -> Vec<String> {
 pub fn usage() -> String {
     "usage: codistill <train|codistill|coordinate|serve|relay|figures|fig1|fig2|fig3|fig4|table1|sec341|inspect> \
      [--transport inproc|spool|socket] [--delta] [--compress] [--error-feedback] \
-     [--scenario FILE] [--retry] [--set key=value]... [--config FILE] [--verbose]"
+     [--scenario FILE] [--retry] [--trace FILE] [--set key=value]... [--config FILE] [--verbose]"
         .to_string()
 }
 
@@ -280,6 +294,13 @@ mod tests {
     fn retry_flag_applies() {
         let cli = parse_args(&sv(&["coordinate", "--retry"])).unwrap();
         assert!(cli.settings.bool_or("retry", false).unwrap());
+    }
+
+    #[test]
+    fn trace_flag_applies() {
+        let cli = parse_args(&sv(&["codistill", "--trace", "run.jsonl"])).unwrap();
+        assert_eq!(cli.settings.str_or("trace", ""), "run.jsonl");
+        assert!(parse_args(&sv(&["codistill", "--trace"])).is_err());
     }
 
     #[test]

@@ -40,6 +40,7 @@
 //! coordinator per process it is the ROADMAP's "true multi-process
 //! orchestration".
 
+use crate::codistill::obs::{render, Event, Recorder};
 use crate::codistill::orchestrator::EvalPoint;
 use crate::codistill::schedule::{DistillSchedule, LrSchedule};
 use crate::codistill::topology::Topology;
@@ -49,7 +50,6 @@ use crate::codistill::transport::{
 use crate::codistill::Member;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
-use std::fmt::Write as _;
 use std::sync::Arc;
 
 /// Coordinator parameters. Schedules apply to member-*local* steps.
@@ -327,12 +327,14 @@ impl CoordinatorLog {
     }
 
     /// Canonical staleness log: one `step member staleness` line per
-    /// sample. Two runs with the same seed, schedule, and fault plan must
-    /// produce byte-identical text.
+    /// sample, rendered through the shared `codistill::obs` renderer so
+    /// the journal's replay of the same events is byte-identical. Two
+    /// runs with the same seed, schedule, and fault plan must produce
+    /// byte-identical text.
     pub fn staleness_log_text(&self) -> String {
         let mut out = String::new();
         for &(step, member, staleness) in &self.staleness {
-            let _ = writeln!(out, "{step} {member} {staleness}");
+            out.push_str(&render::staleness_line(step, member, staleness));
         }
         out
     }
@@ -374,11 +376,27 @@ struct RunShared {
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     transport: Arc<dyn ExchangeTransport>,
+    recorder: Option<Recorder>,
 }
 
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig, transport: Arc<dyn ExchangeTransport>) -> Self {
-        Coordinator { cfg, transport }
+        Coordinator {
+            cfg,
+            transport,
+            recorder: None,
+        }
+    }
+
+    /// Record the run into a `codistill::obs` journal: publishes,
+    /// teacher fetches/installs (via the shared [`DeltaCache`]),
+    /// publisher-side quantization, staleness samples, and mid-run
+    /// join/rejoin decisions all become typed events. Pass the same
+    /// recorder to the decorators in the transport stack to interleave
+    /// their events in one trace.
+    pub fn with_recorder(mut self, recorder: Recorder) -> Self {
+        self.recorder = Some(recorder);
+        self
     }
 
     pub fn transport(&self) -> &Arc<dyn ExchangeTransport> {
@@ -407,7 +425,13 @@ impl Coordinator {
             liveness: LivenessTable::new(),
             polled_this_tick: false,
             gc_requested: None,
-            delta: self.cfg.delta.then(DeltaCache::new),
+            delta: self.cfg.delta.then(|| {
+                let mut c = DeltaCache::new();
+                if let Some(rec) = &self.recorder {
+                    c = c.with_recorder(rec.clone());
+                }
+                c
+            }),
             feedback: HashMap::new(),
         };
 
@@ -491,6 +515,13 @@ impl Coordinator {
                 member: h.id,
                 bootstrapped_from,
             });
+            if let Some(rec) = &self.recorder {
+                rec.record(Event::Rejoin {
+                    tick,
+                    member: h.id,
+                    bootstrapped_from,
+                });
+            }
             if self.cfg.verbose {
                 eprintln!(
                     "[coord] tick {tick}: member {} joined (bootstrap: {bootstrapped_from:?})",
@@ -520,6 +551,13 @@ impl Coordinator {
             member: h.id,
             bootstrapped_from,
         });
+        if let Some(rec) = &self.recorder {
+            rec.record(Event::Rejoin {
+                tick,
+                member: h.id,
+                bootstrapped_from,
+            });
+        }
         if self.cfg.verbose {
             eprintln!(
                 "[coord] tick {tick}: member {} resumed at local step {local_step} \
@@ -594,8 +632,15 @@ impl Coordinator {
             self.reload_teachers(h, st, tick, shared, log)?;
         }
         if let Some(tstep) = st.installed {
-            log.staleness
-                .push((st.local_step, h.id, st.local_step.saturating_sub(tstep)));
+            let staleness = st.local_step.saturating_sub(tstep);
+            log.staleness.push((st.local_step, h.id, staleness));
+            if let Some(rec) = &self.recorder {
+                rec.record(Event::Staleness {
+                    step: st.local_step,
+                    member: h.id,
+                    staleness,
+                });
+            }
         }
 
         let w = cfg.distill.weight_at(st.local_step);
@@ -710,7 +755,11 @@ impl Coordinator {
         };
         let ck = if self.cfg.publish_codec.is_lossy() {
             let fb = shared.feedback.entry(h.id).or_insert_with(|| {
-                ErrorFeedback::new(self.cfg.publish_codec, self.cfg.error_feedback)
+                let mut f = ErrorFeedback::new(self.cfg.publish_codec, self.cfg.error_feedback);
+                if let Some(rec) = &self.recorder {
+                    f = f.with_recorder(rec.clone());
+                }
+                f
             });
             match fb.prepare(ck) {
                 Ok(ck) => ck,
@@ -722,8 +771,28 @@ impl Coordinator {
         } else {
             ck
         };
-        if let Err(e) = self.transport.publish(ck) {
-            log.exchange_errors.push((tick, h.id, format!("{e:#}")));
+        // Journal accounting rides the successful path only: a publish
+        // the transport rejected never landed, so it is an exchange
+        // error, not a publish event.
+        let (member, ck_step) = (ck.member, ck.step);
+        let bytes = ck.flat().layout().total_bytes() as u64;
+        let t0 = self.recorder.as_ref().map(|r| r.now_us());
+        match self.transport.publish(ck) {
+            Ok(()) => {
+                if let (Some(rec), Some(t0)) = (&self.recorder, t0) {
+                    let t1 = rec.now_us();
+                    rec.record_at(
+                        t0,
+                        Event::Publish {
+                            member,
+                            step: ck_step,
+                            bytes,
+                            dur_us: t1.saturating_sub(t0),
+                        },
+                    );
+                }
+            }
+            Err(e) => log.exchange_errors.push((tick, h.id, format!("{e:#}"))),
         }
     }
 }

@@ -89,6 +89,7 @@
 //! keeps.
 
 pub mod coordinator;
+pub mod obs;
 pub mod orchestrator;
 pub mod scenario;
 pub mod schedule;
@@ -100,6 +101,7 @@ pub mod transport;
 pub use coordinator::{
     Coordinator, CoordinatorConfig, CoordinatorLog, HostedMember, JoinRecord, LivenessTable,
 };
+pub use obs::{Clock, Event, EventJournal, Recorder, SimClock, TimedEvent, WallClock};
 pub use orchestrator::{Orchestrator, OrchestratorConfig, RunLog};
 pub use scenario::{CompiledScenario, MemberSchedule, Scenario, ScenarioEvent};
 pub use schedule::{DistillSchedule, LrSchedule};

@@ -1,0 +1,912 @@
+//! `codistill::obs` — one typed event journal for every subsystem.
+//!
+//! Nine PRs grew nine parallel accounting mechanisms (`RetryStats`,
+//! `DeltaStats`, `FeedbackStats`, `RelayStats`, `SubscribeStats`, the
+//! `Faulty` fault log, `CoordinatorLog`/`RunLog`, `ServeStats`) — each
+//! with its own counters, merge rules, and text renderer, all proving
+//! the same paper claim: same seed ⇒ byte-identical replay (§3.5 of
+//! Anil et al.). This module unifies them behind a [`Recorder`]:
+//!
+//! * a typed [`Event`] stream with monotonic timestamps from a
+//!   [`Clock`] — [`WallClock`] for real runs (so `netsim::calibrate`
+//!   can fit per-byte costs from measured durations), a seeded
+//!   [`SimClock`] for tests (so the dumped trace itself is
+//!   byte-deterministic);
+//! * a string-keyed counter registry (see [`keys`]) for totals that are
+//!   not per-event (poll counts, retry op totals) — the legacy `*Stats`
+//!   types become thin views folded from the journal;
+//! * one shared [`render`] module that re-derives every pinned replay
+//!   text (`retry_log_text`, `fault_log_text`, `staleness_log_text`,
+//!   the serve swap log) byte-identical to the pre-refactor output.
+//!
+//! The JSONL dump ([`Recorder::to_jsonl`]) contains **events only** —
+//! counters are excluded on purpose, because timing-dependent totals
+//! (e.g. subscription poll counts) must not break trace byte-identity.
+//! [`EventJournal::from_jsonl`] reads the dump back; unknown `ev` kinds
+//! are skipped so traces stay forward-compatible.
+//!
+//! Every subsystem defaults to a private `Recorder::sim(its seed)` so
+//! behavior and replay logs are unchanged when no run-level recorder is
+//! injected; the `--trace FILE` CLI flag threads one shared recorder
+//! through the whole stack and dumps it on exit.
+
+use crate::codistill::transport::feedback::FeedbackStats;
+use crate::codistill::transport::retry::RetryStats;
+use crate::codistill::transport::{DeltaStats, FaultEvent, FaultKind};
+use crate::prng::Pcg64;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Counter-registry keys used by the refactored subsystems. Collected
+/// here so views ([`EventJournal::retry_stats`]) and writers
+/// (`transport::Retry`) cannot drift apart.
+pub mod keys {
+    pub const RETRY_OPS: &str = "retry.ops";
+    pub const RETRY_ATTEMPTS: &str = "retry.attempts";
+    pub const RETRY_TRANSIENT: &str = "retry.transient_errors";
+    pub const RETRY_EMPTY: &str = "retry.empty_retries";
+    pub const RETRY_ABSORBED: &str = "retry.absorbed";
+    pub const RETRY_EXHAUSTED: &str = "retry.exhausted";
+    pub const RETRY_EXHAUSTED_EMPTY: &str = "retry.exhausted_empty";
+    pub const RETRY_PERMANENT: &str = "retry.permanent_errors";
+    pub const SUB_POLLS: &str = "sub.polls";
+    pub const SUB_FETCHES: &str = "sub.fetches";
+    pub const SUB_INSTALLS: &str = "sub.installs";
+    pub const SUB_TOLERATED: &str = "sub.tolerated_errors";
+    pub const RELAY_POLLS: &str = "relay.polls";
+    pub const RELAY_INSTALLS: &str = "relay.installs";
+    pub const RELAY_TOLERATED: &str = "relay.tolerated_errors";
+    pub const RELAY_PASSTHROUGH: &str = "relay.passthrough_fetches";
+    pub const RELAY_FORWARDED: &str = "relay.forwarded_publishes";
+}
+
+/// Monotonic microsecond clock. `Send + Sync` so one clock can stamp
+/// events from every thread of a run.
+pub trait Clock: Send + Sync {
+    /// Microseconds since some fixed origin; must be non-decreasing.
+    fn now_us(&self) -> u64;
+}
+
+/// Real time since the clock was created — use for measured runs whose
+/// traces feed `netsim::calibrate`.
+#[derive(Debug)]
+pub struct WallClock {
+    t0: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock { t0: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_us(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+}
+
+/// Deterministic clock: every call advances a seeded PRNG by 1..=128
+/// microseconds, so the Nth call always returns the same timestamp for
+/// the same seed. Same-seed runs therefore dump byte-identical traces.
+pub struct SimClock {
+    state: Mutex<(u64, Pcg64)>,
+}
+
+/// Stream key separating the sim clock from every other consumer of a
+/// run's seed (fault plans, retry backoff, load generators).
+const SIM_CLOCK_STREAM: u64 = 0x0b5e_7a11_c10c_0b5e;
+
+impl SimClock {
+    pub fn new(seed: u64) -> Self {
+        SimClock {
+            state: Mutex::new((0, Pcg64::with_stream(seed, SIM_CLOCK_STREAM))),
+        }
+    }
+}
+
+impl Clock for SimClock {
+    fn now_us(&self) -> u64 {
+        let mut g = self.state.lock().expect("sim clock lock");
+        let step = 1 + (g.1.uniform() * 127.0) as u64;
+        g.0 += step;
+        g.0
+    }
+}
+
+/// One observation. Fields mirror what the legacy per-subsystem logs
+/// recorded, so the shared [`render`] functions can re-derive those
+/// texts byte-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A checkpoint left a publisher (`bytes` = plane payload bytes,
+    /// `dur_us` = measured wall time of the transport publish; 0 when
+    /// the publish is recorded before the call for ordering reasons).
+    Publish { member: usize, step: u64, bytes: u64, dur_us: u64 },
+    /// A teacher checkpoint was fetched (`bytes` = wire payload moved).
+    Fetch { member: usize, step: u64, bytes: u64, dur_us: u64 },
+    /// A fetched checkpoint was installed into a `DeltaCache` plane.
+    DeltaInstall {
+        member: usize,
+        step: u64,
+        full: bool,
+        moved: u64,
+        unchanged: u64,
+        encoded: u64,
+        bytes: u64,
+    },
+    /// One logged attempt inside `transport::Retry` (`what` ∈
+    /// transient | empty | permanent | exhausted | absorbed).
+    RetryAttempt { op: u64, member: usize, attempt: u32, what: &'static str },
+    /// `transport::Faulty` fired an injected fault.
+    FaultDecision { kind: FaultKind, member: usize, salt: u64 },
+    /// Lossy publish accounting from `ErrorFeedback::prepare` (deltas
+    /// for this one publish, not running totals; `residual_l2` /
+    /// `max_abs_bias` are the accumulator state after the publish).
+    Quantize {
+        member: usize,
+        step: u64,
+        windows_quantized: u64,
+        windows_raw: u64,
+        bytes_quantized: u64,
+        bytes_raw_equiv: u64,
+        residual_l2: f64,
+        max_abs_bias: f64,
+    },
+    /// A serving-tier hot swap (digests are the plane content hashes
+    /// the churn log prints).
+    Swap {
+        index: u64,
+        from_step: u64,
+        to_step: u64,
+        from_digest: u64,
+        to_digest: u64,
+        churn: f64,
+    },
+    /// A coordinator member (re)joined mid-run.
+    Rejoin { tick: u64, member: usize, bootstrapped_from: Option<(usize, u64)> },
+    /// Teacher staleness observed at a training step (the
+    /// `staleness_log_text` tuple).
+    Staleness { step: u64, member: usize, staleness: u64 },
+    /// A relay forwarded a downstream publish to its upstream.
+    RelayForward { member: usize, step: u64 },
+}
+
+/// An [`Event`] plus its clock stamp.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimedEvent {
+    pub t_us: u64,
+    pub event: Event,
+}
+
+/// A snapshot of everything a [`Recorder`] collected: the ordered event
+/// stream plus the counter registry.
+#[derive(Debug, Clone, Default)]
+pub struct EventJournal {
+    pub events: Vec<TimedEvent>,
+    pub counters: BTreeMap<String, u64>,
+}
+
+struct Inner {
+    clock: Box<dyn Clock>,
+    journal: Mutex<EventJournal>,
+}
+
+/// Cloneable handle to one shared journal. Cloning is cheap (one `Arc`
+/// bump); every clone records into the same event stream, which is what
+/// lets a run-level `--trace` recorder see the whole stack.
+#[derive(Clone)]
+pub struct Recorder {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let j = self.inner.journal.lock().expect("journal lock");
+        f.debug_struct("Recorder")
+            .field("events", &j.events.len())
+            .field("counters", &j.counters.len())
+            .finish()
+    }
+}
+
+impl Recorder {
+    /// Recorder over a [`WallClock`] — measured runs, calibration traces.
+    pub fn wall() -> Self {
+        Self::with_clock(Box::new(WallClock::new()))
+    }
+
+    /// Recorder over a seeded [`SimClock`] — deterministic test traces.
+    pub fn sim(seed: u64) -> Self {
+        Self::with_clock(Box::new(SimClock::new(seed)))
+    }
+
+    pub fn with_clock(clock: Box<dyn Clock>) -> Self {
+        Recorder {
+            inner: Arc::new(Inner {
+                clock,
+                journal: Mutex::new(EventJournal::default()),
+            }),
+        }
+    }
+
+    /// Read the clock without recording — callers time an operation
+    /// with `now_us`, then stamp the event at its start time via
+    /// [`Recorder::record_at`].
+    pub fn now_us(&self) -> u64 {
+        self.inner.clock.now_us()
+    }
+
+    /// Record `event` stamped with the current clock reading.
+    pub fn record(&self, event: Event) {
+        let t_us = self.inner.clock.now_us();
+        self.record_at(t_us, event);
+    }
+
+    /// Record `event` with an explicit timestamp (from a prior
+    /// [`Recorder::now_us`] call). Events keep append order; timestamps
+    /// of concurrently recorded events may interleave.
+    pub fn record_at(&self, t_us: u64, event: Event) {
+        let mut j = self.inner.journal.lock().expect("journal lock");
+        j.events.push(TimedEvent { t_us, event });
+    }
+
+    /// Bump a registry counter (creating it at zero first).
+    pub fn incr(&self, key: &str, by: u64) {
+        let mut j = self.inner.journal.lock().expect("journal lock");
+        *j.counters.entry(key.to_string()).or_insert(0) += by;
+    }
+
+    /// Current value of a registry counter (0 if never bumped).
+    pub fn counter(&self, key: &str) -> u64 {
+        let j = self.inner.journal.lock().expect("journal lock");
+        j.counters.get(key).copied().unwrap_or(0)
+    }
+
+    /// Snapshot the whole journal (events + counters).
+    pub fn journal(&self) -> EventJournal {
+        self.inner.journal.lock().expect("journal lock").clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.journal.lock().expect("journal lock").events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Serialize the **event stream** as JSONL (counters are excluded —
+    /// see the module docs on trace byte-identity).
+    pub fn to_jsonl(&self) -> String {
+        self.journal().to_jsonl()
+    }
+}
+
+/// Write a finite f64 in round-trip form; non-finite values (which
+/// would be invalid JSON) degrade to 0.0.
+fn fmt_f64(out: &mut String, v: f64) {
+    if v.is_finite() {
+        let _ = write!(out, "{v:?}");
+    } else {
+        out.push_str("0.0");
+    }
+}
+
+impl EventJournal {
+    /// One JSON object per event, in append order, `\n`-terminated.
+    /// Field order is fixed, so same-seed journals serialize to
+    /// byte-identical text.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for te in &self.events {
+            let t = te.t_us;
+            match &te.event {
+                Event::Publish { member, step, bytes, dur_us } => {
+                    let _ = write!(
+                        out,
+                        "{{\"t_us\":{t},\"ev\":\"publish\",\"member\":{member},\"step\":{step},\"bytes\":{bytes},\"dur_us\":{dur_us}}}"
+                    );
+                }
+                Event::Fetch { member, step, bytes, dur_us } => {
+                    let _ = write!(
+                        out,
+                        "{{\"t_us\":{t},\"ev\":\"fetch\",\"member\":{member},\"step\":{step},\"bytes\":{bytes},\"dur_us\":{dur_us}}}"
+                    );
+                }
+                Event::DeltaInstall { member, step, full, moved, unchanged, encoded, bytes } => {
+                    let _ = write!(
+                        out,
+                        "{{\"t_us\":{t},\"ev\":\"delta_install\",\"member\":{member},\"step\":{step},\"full\":{full},\"moved\":{moved},\"unchanged\":{unchanged},\"encoded\":{encoded},\"bytes\":{bytes}}}"
+                    );
+                }
+                Event::RetryAttempt { op, member, attempt, what } => {
+                    let _ = write!(
+                        out,
+                        "{{\"t_us\":{t},\"ev\":\"retry\",\"op\":{op},\"member\":{member},\"attempt\":{attempt},\"what\":\"{what}\"}}"
+                    );
+                }
+                Event::FaultDecision { kind, member, salt } => {
+                    let _ = write!(
+                        out,
+                        "{{\"t_us\":{t},\"ev\":\"fault\",\"kind\":\"{}\",\"member\":{member},\"salt\":{salt}}}",
+                        kind.name()
+                    );
+                }
+                Event::Quantize {
+                    member,
+                    step,
+                    windows_quantized,
+                    windows_raw,
+                    bytes_quantized,
+                    bytes_raw_equiv,
+                    residual_l2,
+                    max_abs_bias,
+                } => {
+                    let _ = write!(
+                        out,
+                        "{{\"t_us\":{t},\"ev\":\"quantize\",\"member\":{member},\"step\":{step},\"windows_quantized\":{windows_quantized},\"windows_raw\":{windows_raw},\"bytes_quantized\":{bytes_quantized},\"bytes_raw_equiv\":{bytes_raw_equiv},\"residual_l2\":"
+                    );
+                    fmt_f64(&mut out, *residual_l2);
+                    out.push_str(",\"max_abs_bias\":");
+                    fmt_f64(&mut out, *max_abs_bias);
+                    out.push('}');
+                }
+                Event::Swap { index, from_step, to_step, from_digest, to_digest, churn } => {
+                    let _ = write!(
+                        out,
+                        "{{\"t_us\":{t},\"ev\":\"swap\",\"index\":{index},\"from_step\":{from_step},\"to_step\":{to_step},\"from_digest\":\"{from_digest:016x}\",\"to_digest\":\"{to_digest:016x}\",\"churn\":"
+                    );
+                    fmt_f64(&mut out, *churn);
+                    out.push('}');
+                }
+                Event::Rejoin { tick, member, bootstrapped_from } => {
+                    match bootstrapped_from {
+                        Some((peer, step)) => {
+                            let _ = write!(
+                                out,
+                                "{{\"t_us\":{t},\"ev\":\"rejoin\",\"tick\":{tick},\"member\":{member},\"from_peer\":{peer},\"from_step\":{step}}}"
+                            );
+                        }
+                        None => {
+                            let _ = write!(
+                                out,
+                                "{{\"t_us\":{t},\"ev\":\"rejoin\",\"tick\":{tick},\"member\":{member},\"from_peer\":null}}"
+                            );
+                        }
+                    }
+                }
+                Event::Staleness { step, member, staleness } => {
+                    let _ = write!(
+                        out,
+                        "{{\"t_us\":{t},\"ev\":\"staleness\",\"step\":{step},\"member\":{member},\"staleness\":{staleness}}}"
+                    );
+                }
+                Event::RelayForward { member, step } => {
+                    let _ = write!(
+                        out,
+                        "{{\"t_us\":{t},\"ev\":\"relay_forward\",\"member\":{member},\"step\":{step}}}"
+                    );
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a JSONL trace back into a journal (events only — counters
+    /// are never serialized). Blank lines and unknown `ev` kinds are
+    /// skipped; structurally broken lines error.
+    pub fn from_jsonl(text: &str) -> Result<EventJournal> {
+        let mut journal = EventJournal::default();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let parse = |j: &mut EventJournal| -> Result<()> {
+                let t_us = u64_field(line, "t_us")?;
+                let ev = str_field(line, "ev")?;
+                let event = match ev {
+                    "publish" => Event::Publish {
+                        member: usize_field(line, "member")?,
+                        step: u64_field(line, "step")?,
+                        bytes: u64_field(line, "bytes")?,
+                        dur_us: u64_field(line, "dur_us")?,
+                    },
+                    "fetch" => Event::Fetch {
+                        member: usize_field(line, "member")?,
+                        step: u64_field(line, "step")?,
+                        bytes: u64_field(line, "bytes")?,
+                        dur_us: u64_field(line, "dur_us")?,
+                    },
+                    "delta_install" => Event::DeltaInstall {
+                        member: usize_field(line, "member")?,
+                        step: u64_field(line, "step")?,
+                        full: bool_field(line, "full")?,
+                        moved: u64_field(line, "moved")?,
+                        unchanged: u64_field(line, "unchanged")?,
+                        encoded: u64_field(line, "encoded")?,
+                        bytes: u64_field(line, "bytes")?,
+                    },
+                    "retry" => Event::RetryAttempt {
+                        op: u64_field(line, "op")?,
+                        member: usize_field(line, "member")?,
+                        attempt: u64_field(line, "attempt")? as u32,
+                        what: retry_what(str_field(line, "what")?)?,
+                    },
+                    "fault" => Event::FaultDecision {
+                        kind: fault_kind(str_field(line, "kind")?)?,
+                        member: usize_field(line, "member")?,
+                        salt: u64_field(line, "salt")?,
+                    },
+                    "quantize" => Event::Quantize {
+                        member: usize_field(line, "member")?,
+                        step: u64_field(line, "step")?,
+                        windows_quantized: u64_field(line, "windows_quantized")?,
+                        windows_raw: u64_field(line, "windows_raw")?,
+                        bytes_quantized: u64_field(line, "bytes_quantized")?,
+                        bytes_raw_equiv: u64_field(line, "bytes_raw_equiv")?,
+                        residual_l2: f64_field(line, "residual_l2")?,
+                        max_abs_bias: f64_field(line, "max_abs_bias")?,
+                    },
+                    "swap" => Event::Swap {
+                        index: u64_field(line, "index")?,
+                        from_step: u64_field(line, "from_step")?,
+                        to_step: u64_field(line, "to_step")?,
+                        from_digest: hex_field(line, "from_digest")?,
+                        to_digest: hex_field(line, "to_digest")?,
+                        churn: f64_field(line, "churn")?,
+                    },
+                    "rejoin" => {
+                        let peer = opt_usize_field(line, "from_peer")?;
+                        let bootstrapped_from = match peer {
+                            Some(p) => Some((p, u64_field(line, "from_step")?)),
+                            None => None,
+                        };
+                        Event::Rejoin {
+                            tick: u64_field(line, "tick")?,
+                            member: usize_field(line, "member")?,
+                            bootstrapped_from,
+                        }
+                    }
+                    "staleness" => Event::Staleness {
+                        step: u64_field(line, "step")?,
+                        member: usize_field(line, "member")?,
+                        staleness: u64_field(line, "staleness")?,
+                    },
+                    "relay_forward" => Event::RelayForward {
+                        member: usize_field(line, "member")?,
+                        step: u64_field(line, "step")?,
+                    },
+                    // Forward compatibility: unknown event kinds skip.
+                    _ => return Ok(()),
+                };
+                j.events.push(TimedEvent { t_us, event });
+                Ok(())
+            };
+            parse(&mut journal).with_context(|| format!("trace line {}", ln + 1))?;
+        }
+        Ok(journal)
+    }
+
+    /// The retry replay log, byte-identical to the pre-refactor
+    /// `Retry::retry_log_text` (one `"{op} {member} {attempt} {what}"`
+    /// line per logged attempt).
+    pub fn retry_log_text(&self) -> String {
+        let mut out = String::new();
+        for te in &self.events {
+            if let Event::RetryAttempt { op, member, attempt, what } = &te.event {
+                out.push_str(&render::retry_line(*op, *member, *attempt, what));
+            }
+        }
+        out
+    }
+
+    /// Injected faults in decision order, as `transport::FaultEvent`s.
+    pub fn fault_events(&self) -> Vec<FaultEvent> {
+        self.events
+            .iter()
+            .filter_map(|te| match &te.event {
+                Event::FaultDecision { kind, member, salt } => Some(FaultEvent {
+                    kind: *kind,
+                    member: *member,
+                    salt: *salt,
+                }),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// The fault replay log, byte-identical to the pre-refactor
+    /// `Faulty::fault_log_text`.
+    pub fn fault_log_text(&self) -> String {
+        let mut out = String::new();
+        for te in &self.events {
+            if let Event::FaultDecision { kind, member, salt } = &te.event {
+                out.push_str(&render::fault_line(kind.name(), *member, *salt));
+            }
+        }
+        out
+    }
+
+    /// Staleness replay text, byte-identical to
+    /// `CoordinatorLog::staleness_log_text`.
+    pub fn staleness_log_text(&self) -> String {
+        let mut out = String::new();
+        for te in &self.events {
+            if let Event::Staleness { step, member, staleness } = &te.event {
+                out.push_str(&render::staleness_line(*step, *member, *staleness));
+            }
+        }
+        out
+    }
+
+    /// The serve churn log, byte-identical to the text
+    /// `InferenceServer` accumulates across hot swaps.
+    pub fn swap_log_text(&self) -> String {
+        let mut out = String::new();
+        for te in &self.events {
+            if let Event::Swap { index, from_step, to_step, from_digest, to_digest, churn } =
+                &te.event
+            {
+                out.push_str(&render::swap_line(
+                    *index,
+                    *from_step,
+                    *to_step,
+                    *from_digest,
+                    *to_digest,
+                    *churn,
+                ));
+            }
+        }
+        out
+    }
+
+    /// `RetryStats` view over the counter registry (zeros for a journal
+    /// parsed from JSONL, which carries no counters).
+    pub fn retry_stats(&self) -> RetryStats {
+        let c = |k: &str| self.counters.get(k).copied().unwrap_or(0);
+        RetryStats {
+            ops: c(keys::RETRY_OPS),
+            attempts: c(keys::RETRY_ATTEMPTS),
+            transient_errors: c(keys::RETRY_TRANSIENT),
+            empty_retries: c(keys::RETRY_EMPTY),
+            absorbed: c(keys::RETRY_ABSORBED),
+            exhausted: c(keys::RETRY_EXHAUSTED),
+            exhausted_empty: c(keys::RETRY_EXHAUSTED_EMPTY),
+            permanent_errors: c(keys::RETRY_PERMANENT),
+        }
+    }
+
+    /// `DeltaStats` view folded from the delta-install events.
+    pub fn delta_stats(&self) -> DeltaStats {
+        let mut d = DeltaStats::default();
+        for te in &self.events {
+            if let Event::DeltaInstall { full, moved, unchanged, encoded, bytes, .. } = &te.event {
+                if *full {
+                    d.full_fetches += 1;
+                } else {
+                    d.delta_fetches += 1;
+                }
+                d.windows_moved += *moved;
+                d.windows_unchanged += *unchanged;
+                d.windows_encoded += *encoded;
+                d.payload_bytes += *bytes;
+            }
+        }
+        d
+    }
+
+    /// `FeedbackStats` view folded from the quantize events (matches
+    /// `FeedbackStats::merge` semantics: sums for totals, last residual
+    /// per member then max across members, max bias).
+    pub fn feedback_stats(&self) -> FeedbackStats {
+        let mut s = FeedbackStats::default();
+        let mut last_residual: BTreeMap<usize, f64> = BTreeMap::new();
+        for te in &self.events {
+            if let Event::Quantize {
+                member,
+                windows_quantized,
+                windows_raw,
+                bytes_quantized,
+                bytes_raw_equiv,
+                residual_l2,
+                max_abs_bias,
+                ..
+            } = &te.event
+            {
+                s.publishes += 1;
+                s.windows_quantized += *windows_quantized;
+                s.windows_raw += *windows_raw;
+                s.bytes_quantized += *bytes_quantized;
+                s.bytes_raw_equiv += *bytes_raw_equiv;
+                s.max_abs_bias = s.max_abs_bias.max(*max_abs_bias);
+                last_residual.insert(*member, *residual_l2);
+            }
+        }
+        s.last_residual_l2 = last_residual.values().fold(0.0, |a, &b| a.max(b));
+        s
+    }
+}
+
+/// The one renderer for every pinned replay-text format. The byte
+/// layouts here are load-bearing: `tests/scenario_churn.rs`,
+/// `tests/coordinator_faults.rs`, and the serve hot-swap suite compare
+/// these strings across same-seed runs.
+pub mod render {
+    /// `"{op} {member} {attempt} {what}\n"` — the retry log line.
+    pub fn retry_line(op: u64, member: usize, attempt: u32, what: &str) -> String {
+        format!("{op} {member} {attempt} {what}\n")
+    }
+
+    /// `"{kind} {member} {salt}\n"` — the fault log line.
+    pub fn fault_line(kind: &str, member: usize, salt: u64) -> String {
+        format!("{kind} {member} {salt}\n")
+    }
+
+    /// `"{step} {member} {staleness}\n"` — the staleness log line.
+    pub fn staleness_line(step: u64, member: usize, staleness: u64) -> String {
+        format!("{step} {member} {staleness}\n")
+    }
+
+    /// The serve churn-log swap line.
+    pub fn swap_line(
+        index: u64,
+        from_step: u64,
+        to_step: u64,
+        from_digest: u64,
+        to_digest: u64,
+        churn: f64,
+    ) -> String {
+        format!(
+            "swap {index}: step {from_step} -> {to_step} plane {from_digest:016x} -> {to_digest:016x} churn {churn:.9e}\n"
+        )
+    }
+}
+
+/// Map a retry `what` string back to the static the writer used.
+fn retry_what(s: &str) -> Result<&'static str> {
+    Ok(match s {
+        "transient" => "transient",
+        "empty" => "empty",
+        "permanent" => "permanent",
+        "exhausted" => "exhausted",
+        "absorbed" => "absorbed",
+        other => bail!("unknown retry what {other:?}"),
+    })
+}
+
+/// Map a fault-kind name (as printed by `FaultKind::name`) back to the
+/// enum.
+fn fault_kind(s: &str) -> Result<FaultKind> {
+    for kind in [
+        FaultKind::DelayedPublish,
+        FaultKind::BlackoutPublish,
+        FaultKind::DroppedFetch,
+        FaultKind::ErroredFetch,
+        FaultKind::StaleRead,
+    ] {
+        if kind.name() == s {
+            return Ok(kind);
+        }
+    }
+    bail!("unknown fault kind {s:?}")
+}
+
+/// Scan a flat one-line JSON object for `"key":` and return the raw
+/// value text (quoted strings unwrapped). Our writer emits no nested
+/// objects and no commas inside strings, so scanning to the next `,` /
+/// `}` is exact; input with extra whitespace still parses.
+fn raw_field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = line[start..].trim_start();
+    if let Some(stripped) = rest.strip_prefix('"') {
+        stripped.find('"').map(|end| &stripped[..end])
+    } else {
+        let end = rest.find([',', '}']).unwrap_or(rest.len());
+        Some(rest[..end].trim_end())
+    }
+}
+
+fn str_field<'a>(line: &'a str, key: &str) -> Result<&'a str> {
+    raw_field(line, key).with_context(|| format!("missing field {key:?}"))
+}
+
+fn u64_field(line: &str, key: &str) -> Result<u64> {
+    str_field(line, key)?
+        .parse::<u64>()
+        .with_context(|| format!("field {key:?} is not a u64"))
+}
+
+fn usize_field(line: &str, key: &str) -> Result<usize> {
+    Ok(u64_field(line, key)? as usize)
+}
+
+fn f64_field(line: &str, key: &str) -> Result<f64> {
+    str_field(line, key)?
+        .parse::<f64>()
+        .with_context(|| format!("field {key:?} is not an f64"))
+}
+
+fn bool_field(line: &str, key: &str) -> Result<bool> {
+    match str_field(line, key)? {
+        "true" => Ok(true),
+        "false" => Ok(false),
+        other => bail!("field {key:?} is not a bool: {other:?}"),
+    }
+}
+
+fn hex_field(line: &str, key: &str) -> Result<u64> {
+    u64::from_str_radix(str_field(line, key)?, 16)
+        .with_context(|| format!("field {key:?} is not a hex digest"))
+}
+
+fn opt_usize_field(line: &str, key: &str) -> Result<Option<usize>> {
+    match raw_field(line, key) {
+        None => Ok(None),
+        Some("null") => Ok(None),
+        Some(v) => Ok(Some(
+            v.parse::<usize>()
+                .with_context(|| format!("field {key:?} is not a usize"))?,
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events(rec: &Recorder) {
+        rec.record(Event::Publish { member: 0, step: 5, bytes: 4096, dur_us: 120 });
+        rec.record(Event::Fetch { member: 1, step: 5, bytes: 1024, dur_us: 80 });
+        rec.record(Event::DeltaInstall {
+            member: 1,
+            step: 5,
+            full: false,
+            moved: 2,
+            unchanged: 6,
+            encoded: 2,
+            bytes: 1024,
+        });
+        rec.record(Event::RetryAttempt { op: 0, member: 1, attempt: 1, what: "transient" });
+        rec.record(Event::FaultDecision {
+            kind: FaultKind::DroppedFetch,
+            member: 1,
+            salt: 3,
+        });
+        rec.record(Event::Quantize {
+            member: 0,
+            step: 5,
+            windows_quantized: 7,
+            windows_raw: 1,
+            bytes_quantized: 900,
+            bytes_raw_equiv: 3600,
+            residual_l2: 0.125,
+            max_abs_bias: 1.5e-4,
+        });
+        rec.record(Event::Swap {
+            index: 1,
+            from_step: 2,
+            to_step: 6,
+            from_digest: 0xdead_beef,
+            to_digest: 0xfeed_f00d,
+            churn: 3.25e-2,
+        });
+        rec.record(Event::Rejoin { tick: 9, member: 2, bootstrapped_from: Some((0, 40)) });
+        rec.record(Event::Rejoin { tick: 1, member: 3, bootstrapped_from: None });
+        rec.record(Event::Staleness { step: 10, member: 0, staleness: 5 });
+        rec.record(Event::RelayForward { member: 4, step: 15 });
+    }
+
+    #[test]
+    fn sim_clock_is_deterministic_and_monotonic() {
+        let a = SimClock::new(7);
+        let b = SimClock::new(7);
+        let mut prev = 0;
+        for _ in 0..100 {
+            let ta = a.now_us();
+            assert_eq!(ta, b.now_us());
+            assert!(ta > prev, "sim clock must strictly advance");
+            prev = ta;
+        }
+        let c = SimClock::new(8);
+        let seq_a: Vec<u64> = (0..8).map(|_| SimClock::new(7).now_us()).collect();
+        let seq_c: Vec<u64> = (0..8).map(|_| c.now_us()).collect();
+        assert_ne!(seq_a, seq_c, "different seeds should diverge");
+    }
+
+    #[test]
+    fn same_seed_recorders_dump_identical_jsonl() {
+        let a = Recorder::sim(42);
+        let b = Recorder::sim(42);
+        sample_events(&a);
+        sample_events(&b);
+        assert!(!a.to_jsonl().is_empty());
+        assert_eq!(a.to_jsonl(), b.to_jsonl());
+    }
+
+    #[test]
+    fn jsonl_round_trips_every_event_kind() {
+        let rec = Recorder::sim(1);
+        sample_events(&rec);
+        let text = rec.to_jsonl();
+        let parsed = EventJournal::from_jsonl(&text).expect("parse back");
+        assert_eq!(parsed.events, rec.journal().events);
+        // Re-serializing the parsed journal is byte-identical.
+        assert_eq!(parsed.to_jsonl(), text);
+    }
+
+    #[test]
+    fn parser_skips_unknown_events_and_blank_lines() {
+        let text = "\n{\"t_us\":1,\"ev\":\"warp_core\",\"dilithium\":9}\n{\"t_us\":2,\"ev\":\"staleness\",\"step\":3,\"member\":0,\"staleness\":1}\n";
+        let j = EventJournal::from_jsonl(text).expect("tolerant parse");
+        assert_eq!(j.events.len(), 1);
+        assert_eq!(j.staleness_log_text(), "3 0 1\n");
+    }
+
+    #[test]
+    fn renderers_pin_the_legacy_byte_formats() {
+        assert_eq!(render::retry_line(0, 0, 3, "absorbed"), "0 0 3 absorbed\n");
+        assert_eq!(render::fault_line("blackout-publish", 2, 10), "blackout-publish 2 10\n");
+        assert_eq!(render::staleness_line(12, 3, 4), "12 3 4\n");
+        assert_eq!(
+            render::swap_line(1, 2, 6, 0x1, 0x2, 0.015625),
+            "swap 1: step 2 -> 6 plane 0000000000000001 -> 0000000000000002 churn 1.562500000e-2\n"
+        );
+    }
+
+    #[test]
+    fn retry_stats_view_reads_the_counter_registry() {
+        let rec = Recorder::sim(0);
+        rec.incr(keys::RETRY_OPS, 2);
+        rec.incr(keys::RETRY_ATTEMPTS, 5);
+        rec.incr(keys::RETRY_TRANSIENT, 3);
+        rec.incr(keys::RETRY_ABSORBED, 2);
+        let s = rec.journal().retry_stats();
+        assert_eq!((s.ops, s.attempts, s.transient_errors, s.absorbed), (2, 5, 3, 2));
+        assert_eq!(s.permanent_errors, 0);
+    }
+
+    #[test]
+    fn stats_views_fold_the_event_stream() {
+        let rec = Recorder::sim(3);
+        sample_events(&rec);
+        let j = rec.journal();
+        let d = j.delta_stats();
+        assert_eq!(
+            (d.full_fetches, d.delta_fetches, d.windows_moved, d.windows_unchanged),
+            (0, 1, 2, 6)
+        );
+        assert_eq!(d.payload_bytes, 1024);
+        let f = j.feedback_stats();
+        assert_eq!((f.publishes, f.windows_quantized, f.windows_raw), (1, 7, 1));
+        assert_eq!(f.bytes_quantized, 900);
+        assert!((f.last_residual_l2 - 0.125).abs() < 1e-12);
+        assert_eq!(j.fault_events().len(), 1);
+        assert_eq!(j.fault_log_text(), "dropped-fetch 1 3\n");
+        assert_eq!(j.retry_log_text(), "0 1 1 transient\n");
+        assert_eq!(j.staleness_log_text(), "10 0 5\n");
+        assert!(j.swap_log_text().starts_with("swap 1: step 2 -> 6 plane 00000000deadbeef"));
+    }
+
+    #[test]
+    fn recorder_clones_share_one_journal() {
+        let rec = Recorder::sim(11);
+        let clone = rec.clone();
+        clone.record(Event::RelayForward { member: 0, step: 1 });
+        rec.incr(keys::SUB_POLLS, 4);
+        assert_eq!(rec.len(), 1);
+        assert_eq!(clone.counter(keys::SUB_POLLS), 4);
+    }
+}

@@ -11,13 +11,14 @@
 //! — see `codistill::transport` and `runtime::flat`. The orchestrator
 //! never names a concrete backend.
 
+use crate::codistill::obs::{render, Event, Recorder};
 use crate::codistill::schedule::{DistillSchedule, LrSchedule};
 use crate::codistill::topology::Topology;
 use crate::codistill::transport::{
     Codec, DeltaCache, DeltaStats, ErrorFeedback, ExchangeTransport, FeedbackStats, InProcess,
     RetryStats,
 };
-use crate::codistill::{EvalStats, Member};
+use crate::codistill::{Checkpoint, EvalStats, Member};
 use crate::netsim::ClusterModel;
 use crate::prng::Pcg64;
 use anyhow::{Context, Result};
@@ -147,6 +148,19 @@ impl RunLog {
             Some(finals.iter().sum::<f64>() / finals.len() as f64)
         }
     }
+
+    /// Staleness samples rendered one per line (`step member staleness`)
+    /// through the shared `codistill::obs` renderer — byte-identical to
+    /// [`CoordinatorLog::staleness_log_text`]
+    /// (crate::codistill::CoordinatorLog::staleness_log_text) and to the
+    /// journal's replay of the same events.
+    pub fn staleness_log_text(&self) -> String {
+        let mut out = String::new();
+        for &(step, member, staleness) in &self.staleness {
+            out.push_str(&render::staleness_line(step, member, staleness));
+        }
+        out
+    }
 }
 
 /// Drives members in lockstep. Members run their steps sequentially in
@@ -155,6 +169,7 @@ impl RunLog {
 pub struct Orchestrator {
     cfg: OrchestratorConfig,
     transport: Arc<dyn ExchangeTransport>,
+    recorder: Option<Recorder>,
 }
 
 impl Orchestrator {
@@ -166,11 +181,50 @@ impl Orchestrator {
 
     /// Run over any checkpoint-exchange medium.
     pub fn with_transport(cfg: OrchestratorConfig, transport: Arc<dyn ExchangeTransport>) -> Self {
-        Orchestrator { cfg, transport }
+        Orchestrator {
+            cfg,
+            transport,
+            recorder: None,
+        }
+    }
+
+    /// Record the run into a `codistill::obs` journal: publishes,
+    /// teacher fetches/installs (via each reader's [`DeltaCache`]),
+    /// publisher-side quantization, and per-step staleness samples all
+    /// become typed events. Pass the same recorder to the decorators in
+    /// the transport stack to interleave their events in one trace.
+    pub fn with_recorder(mut self, recorder: Recorder) -> Self {
+        self.recorder = Some(recorder);
+        self
     }
 
     pub fn transport(&self) -> &Arc<dyn ExchangeTransport> {
         &self.transport
+    }
+
+    /// Publish with journal accounting when a recorder is attached: the
+    /// event carries the plane size and the publish wall duration.
+    fn publish_recorded(&self, ck: Checkpoint) -> Result<()> {
+        match &self.recorder {
+            Some(rec) => {
+                let (member, step) = (ck.member, ck.step);
+                let bytes = ck.flat().layout().total_bytes() as u64;
+                let t0 = rec.now_us();
+                self.transport.publish(ck)?;
+                let t1 = rec.now_us();
+                rec.record_at(
+                    t0,
+                    Event::Publish {
+                        member,
+                        step,
+                        bytes,
+                        dur_us: t1.saturating_sub(t0),
+                    },
+                );
+                Ok(())
+            }
+            None => self.transport.publish(ck),
+        }
     }
 
     /// Run the full schedule over the given members.
@@ -187,7 +241,15 @@ impl Orchestrator {
         let mut installed: Vec<Option<u64>> = vec![None; n];
         // one installed-plane cache per reader when delta exchange is on
         let mut delta_caches: Vec<DeltaCache> = if cfg.delta {
-            (0..n).map(|_| DeltaCache::new()).collect()
+            (0..n)
+                .map(|_| {
+                    let mut c = DeltaCache::new();
+                    if let Some(rec) = &self.recorder {
+                        c = c.with_recorder(rec.clone());
+                    }
+                    c
+                })
+                .collect()
         } else {
             Vec::new()
         };
@@ -196,7 +258,13 @@ impl Orchestrator {
         // codecs): loss is applied HERE, once, so whatever the transport
         // ships decodes back to exactly the plane being published.
         let mut feedback: Vec<ErrorFeedback> = (0..n)
-            .map(|_| ErrorFeedback::new(cfg.publish_codec, cfg.error_feedback))
+            .map(|_| {
+                let mut f = ErrorFeedback::new(cfg.publish_codec, cfg.error_feedback);
+                if let Some(rec) = &self.recorder {
+                    f = f.with_recorder(rec.clone());
+                }
+                f
+            })
             .collect();
 
         // Initial publication so teachers exist from the first reload.
@@ -204,7 +272,7 @@ impl Orchestrator {
             let mut ck = m.snapshot()?;
             ck.member = i;
             let ck = feedback[i].prepare(ck)?;
-            self.transport.publish(ck)?;
+            self.publish_recorded(ck)?;
         }
 
         for step in 0..cfg.total_steps {
@@ -254,7 +322,15 @@ impl Orchestrator {
             let mut max_step_time = 0.0f64;
             for (i, m) in members.iter_mut().enumerate() {
                 if let Some(tstep) = installed[i] {
-                    log.staleness.push((step, i, step.saturating_sub(tstep)));
+                    let staleness = step.saturating_sub(tstep);
+                    log.staleness.push((step, i, staleness));
+                    if let Some(rec) = &self.recorder {
+                        rec.record(Event::Staleness {
+                            step,
+                            member: i,
+                            staleness,
+                        });
+                    }
                 }
                 let stats = m.train_step(distill_w, lr)?;
                 log.train.push((step, i, stats.loss, stats.distill_loss));
@@ -273,7 +349,7 @@ impl Orchestrator {
                     ck.member = i;
                     ck.step = step + 1;
                     let ck = feedback[i].prepare(ck)?;
-                    self.transport.publish(ck)?;
+                    self.publish_recorded(ck)?;
                 }
                 // Enforce the history bound on durable backend state
                 // (spool files, server history) on the publish cadence.

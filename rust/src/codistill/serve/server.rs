@@ -4,6 +4,7 @@
 use super::batcher::{BatchPolicy, BatchQueue, Pending};
 use super::swap::SwapHandle;
 use super::{InferRequest, InferResponse, ServingModel};
+use crate::codistill::obs::{render, Event, Recorder};
 use crate::codistill::Checkpoint;
 use crate::metrics::{mean_abs_diff, ChurnReport, LatencyHistogram};
 use anyhow::{anyhow, Result};
@@ -125,6 +126,7 @@ pub struct InferenceServer {
     cfg: ServeConfig,
     stats: Arc<Mutex<StatsInner>>,
     churn: Mutex<ChurnState>,
+    recorder: Mutex<Option<Recorder>>,
     next_id: AtomicU64,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
@@ -158,9 +160,19 @@ impl InferenceServer {
             cfg,
             stats,
             churn: Mutex::new(ChurnState::default()),
+            recorder: Mutex::new(None),
             next_id: AtomicU64::new(0),
             workers: Mutex::new(handles),
         }
+    }
+
+    /// Record hot swaps into a `codistill::obs` journal: each swap
+    /// becomes a typed [`Event::Swap`] carrying the same fields as the
+    /// churn log line (which is re-derived from the journal's shared
+    /// renderer). Takes `&self` so it composes with the `Arc`-shared
+    /// server the subscription callback holds.
+    pub fn set_recorder(&self, recorder: Recorder) {
+        *self.recorder.lock().unwrap() = Some(recorder);
     }
 
     /// Verify and hot-swap `ckpt` in as the serving plane, recording
@@ -176,12 +188,28 @@ impl InferenceServer {
                 let b = self.model.predict(&new.ckpt, probe)?;
                 let churn = mean_abs_diff(&a, &b)?;
                 let mut c = self.churn.lock().unwrap();
-                let idx = c.report.samples.len() + 1;
-                c.log.push_str(&format!(
-                    "swap {idx}: step {} -> {} plane {:016x} -> {:016x} churn {:.9e}\n",
-                    old.ckpt.step, new.ckpt.step, old.digest, new.digest, churn
+                let idx = (c.report.samples.len() + 1) as u64;
+                c.log.push_str(&render::swap_line(
+                    idx,
+                    old.ckpt.step,
+                    new.ckpt.step,
+                    old.digest,
+                    new.digest,
+                    churn,
                 ));
                 c.report.push(churn);
+                // Record inside the churn critical section so the
+                // journal's swap order matches the log's.
+                if let Some(rec) = self.recorder.lock().unwrap().as_ref() {
+                    rec.record(Event::Swap {
+                        index: idx,
+                        from_step: old.ckpt.step,
+                        to_step: new.ckpt.step,
+                        from_digest: old.digest,
+                        to_digest: new.digest,
+                        churn,
+                    });
+                }
             }
         }
         Ok(())

@@ -35,6 +35,7 @@
 //! blackout is still observable through the heartbeat because the dropped
 //! publications never advance the member's published step.
 
+use crate::codistill::obs::{Event, Recorder};
 use crate::codistill::store::Checkpoint;
 use crate::codistill::transport::{
     ExchangeTransport, FetchResult, FetchSpec, TransportKind, ANY_STEP,
@@ -42,7 +43,6 @@ use crate::codistill::transport::{
 use crate::prng::Pcg64;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
-use std::fmt::Write as _;
 use std::sync::{Arc, Mutex};
 
 /// One scripted blackout: publications from `member` with
@@ -185,37 +185,45 @@ pub struct Faulty {
     delayed: Mutex<HashMap<usize, Vec<Checkpoint>>>,
     /// Per-member read-operation counters (the fetch-fault salt).
     read_ops: Mutex<HashMap<usize, u64>>,
-    log: Mutex<Vec<FaultEvent>>,
+    /// Fault decisions land here as `Event::FaultDecision` journal
+    /// entries; defaults to a private `Recorder::sim(plan.seed)`.
+    recorder: Recorder,
 }
 
 impl Faulty {
     pub fn wrap(inner: Arc<dyn ExchangeTransport>, plan: FaultPlan) -> Self {
+        let recorder = Recorder::sim(plan.seed);
         Faulty {
             inner,
             plan,
             delayed: Mutex::new(HashMap::new()),
             read_ops: Mutex::new(HashMap::new()),
-            log: Mutex::new(Vec::new()),
+            recorder,
         }
+    }
+
+    /// Record into a shared (e.g. run-level `--trace`) recorder instead
+    /// of the private seeded default.
+    pub fn with_recorder(mut self, recorder: Recorder) -> Self {
+        self.recorder = recorder;
+        self
     }
 
     pub fn plan(&self) -> &FaultPlan {
         &self.plan
     }
 
-    /// Every fault injected so far, in injection order.
+    /// Every fault injected so far, in injection order — a view folded
+    /// from the journal's fault-decision events.
     pub fn fault_log(&self) -> Vec<FaultEvent> {
-        self.log.lock().unwrap().clone()
+        self.recorder.journal().fault_events()
     }
 
     /// Canonical text rendering of the fault log (one `kind member salt`
     /// line per event) — byte-comparable across runs of the same seed.
+    /// Re-derived from the journal through the shared renderer.
     pub fn fault_log_text(&self) -> String {
-        let mut out = String::new();
-        for e in self.log.lock().unwrap().iter() {
-            let _ = writeln!(out, "{} {} {}", e.kind.name(), e.member, e.salt);
-        }
-        out
+        self.recorder.journal().fault_log_text()
     }
 
     /// Deliver every held (delayed) publication to the inner transport.
@@ -235,7 +243,7 @@ impl Faulty {
     }
 
     fn record(&self, kind: FaultKind, member: usize, salt: u64) {
-        self.log.lock().unwrap().push(FaultEvent { kind, member, salt });
+        self.recorder.record(Event::FaultDecision { kind, member, salt });
     }
 
     fn next_read_op(&self, member: usize) -> u64 {

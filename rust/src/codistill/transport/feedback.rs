@@ -32,6 +32,7 @@
 //! shape changes (or its residual turns non-finite). [`FeedbackStats`]
 //! aggregates into `RunLog`/`CoordinatorLog`.
 
+use crate::codistill::obs::{Event, Recorder};
 use crate::codistill::store::Checkpoint;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -95,6 +96,9 @@ pub struct ErrorFeedback {
     /// Per-window accumulated mean signed error vs the true plane.
     bias: HashMap<String, f64>,
     stats: FeedbackStats,
+    /// When present, every lossy `prepare` emits an `Event::Quantize`
+    /// with that publish's deltas into the journal.
+    recorder: Option<Recorder>,
 }
 
 impl ErrorFeedback {
@@ -107,7 +111,15 @@ impl ErrorFeedback {
             residuals: HashMap::new(),
             bias: HashMap::new(),
             stats: FeedbackStats::default(),
+            recorder: None,
         }
+    }
+
+    /// Emit quantize events into `recorder` in addition to the local
+    /// accounting.
+    pub fn with_recorder(mut self, recorder: Recorder) -> Self {
+        self.recorder = Some(recorder);
+        self
     }
 
     /// Quantize `ckpt`'s plane through the codec (round trip:
@@ -119,6 +131,7 @@ impl ErrorFeedback {
         if !self.codec.is_lossy() {
             return Ok(ckpt);
         }
+        let before = self.stats.clone();
         self.stats.publishes += 1;
         let imp = self.codec.imp();
         let mut buf = (**ckpt.flat()).clone();
@@ -177,6 +190,20 @@ impl ErrorFeedback {
             }
         }
         self.stats.last_residual_l2 = residual_sq.sqrt();
+        if let Some(rec) = &self.recorder {
+            // Per-publish deltas of the authoritative local stats, plus
+            // the accumulator state after this publish.
+            rec.record(Event::Quantize {
+                member: ckpt.member,
+                step: ckpt.step,
+                windows_quantized: self.stats.windows_quantized - before.windows_quantized,
+                windows_raw: self.stats.windows_raw - before.windows_raw,
+                bytes_quantized: self.stats.bytes_quantized - before.bytes_quantized,
+                bytes_raw_equiv: self.stats.bytes_raw_equiv - before.bytes_raw_equiv,
+                residual_l2: self.stats.last_residual_l2,
+                max_abs_bias: self.stats.max_abs_bias,
+            });
+        }
         Ok(Checkpoint::from_flat(
             ckpt.member,
             ckpt.step,

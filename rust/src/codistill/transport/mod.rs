@@ -114,6 +114,7 @@ pub use socket::{SocketServer, SocketTransport};
 pub use spool::SpoolDir;
 pub use subscribe::{SubscribeConfig, SubscribeStats, Subscription};
 
+use crate::codistill::obs::{Event, Recorder};
 use crate::codistill::store::Checkpoint;
 use crate::runtime::flat::{content_digest, FlatBuffer, FlatLayout};
 use crate::runtime::TensorMap;
@@ -846,6 +847,10 @@ pub struct DeltaCache {
     /// classic uncompressed frames). Installed planes are byte-identical
     /// either way — the codec only changes how moved windows are framed.
     codec: Codec,
+    /// When present, every successful read emits `Event::Fetch` +
+    /// `Event::DeltaInstall` into the journal (the local [`DeltaStats`]
+    /// stays authoritative for per-cache merges either way).
+    recorder: Option<Recorder>,
 }
 
 impl DeltaCache {
@@ -857,6 +862,13 @@ impl DeltaCache {
     /// window payloads where the backend supports them).
     pub fn with_codec(mut self, codec: Codec) -> Self {
         self.codec = codec;
+        self
+    }
+
+    /// Emit fetch/install events into `recorder` in addition to the
+    /// local accounting.
+    pub fn with_recorder(mut self, recorder: Recorder) -> Self {
+        self.recorder = Some(recorder);
         self
     }
 
@@ -887,6 +899,9 @@ impl DeltaCache {
         member: usize,
         max_step: u64,
     ) -> Result<Option<Arc<Checkpoint>>> {
+        let recorder = self.recorder.clone();
+        let t0 = recorder.as_ref().map(|r| r.now_us());
+        let before = self.stats;
         let basis = self.planes.get(&member).map(|p| Basis {
             step: p.step,
             digests: p.digests.clone(),
@@ -898,10 +913,48 @@ impl DeltaCache {
             windows: WindowSel::All,
             codec: self.codec,
         };
-        match transport.fetch(&spec)? {
-            Some(res) => self.install(transport, max_step, res, true),
-            None => Ok(None),
+        let out = match transport.fetch(&spec)? {
+            Some(res) => self.install(transport, max_step, res, true)?,
+            None => None,
+        };
+        if let (Some(rec), Some(t0), Some(ck)) = (recorder.as_ref(), t0, out.as_ref()) {
+            // Event payloads are the per-read diff of the authoritative
+            // local stats, so the journal and the struct cannot drift.
+            let d = {
+                let after = self.stats;
+                DeltaStats {
+                    full_fetches: after.full_fetches - before.full_fetches,
+                    delta_fetches: after.delta_fetches - before.delta_fetches,
+                    windows_moved: after.windows_moved - before.windows_moved,
+                    windows_unchanged: after.windows_unchanged - before.windows_unchanged,
+                    windows_encoded: after.windows_encoded - before.windows_encoded,
+                    payload_bytes: after.payload_bytes - before.payload_bytes,
+                }
+            };
+            let t1 = rec.now_us();
+            rec.record_at(
+                t0,
+                Event::Fetch {
+                    member,
+                    step: ck.step,
+                    bytes: d.payload_bytes,
+                    dur_us: t1.saturating_sub(t0),
+                },
+            );
+            rec.record_at(
+                t1,
+                Event::DeltaInstall {
+                    member,
+                    step: ck.step,
+                    full: d.full_fetches > 0,
+                    moved: d.windows_moved,
+                    unchanged: d.windows_unchanged,
+                    encoded: d.windows_encoded,
+                    bytes: d.payload_bytes,
+                },
+            );
         }
+        Ok(out)
     }
 
     /// Install one fetch result and hand out the resulting checkpoint.

@@ -46,7 +46,8 @@
 //!   readers — only the orchestrator owning the root hub does that.
 
 use super::socket::{SocketServer, MAX_CONNECTIONS};
-use super::{Codec, DeltaCache, DeltaStats, ExchangeTransport, InProcess};
+use super::{Codec, DeltaCache, DeltaStats, ExchangeTransport, InProcess, SubscribeStats};
+use crate::codistill::obs::{keys, Event, Recorder};
 use crate::codistill::store::Checkpoint;
 use crate::codistill::transport::{FetchResult, FetchSpec, RetryStats, TransportKind};
 use anyhow::Result;
@@ -111,6 +112,7 @@ struct RelayStore {
     mirror: InProcess,
     passthrough_fetches: AtomicU64,
     forwarded_publishes: AtomicU64,
+    recorder: Option<Recorder>,
 }
 
 impl ExchangeTransport for RelayStore {
@@ -122,6 +124,13 @@ impl ExchangeTransport for RelayStore {
 
     fn publish(&self, ckpt: Checkpoint) -> Result<()> {
         self.forwarded_publishes.fetch_add(1, Ordering::Relaxed);
+        if let Some(rec) = &self.recorder {
+            rec.record(Event::RelayForward {
+                member: ckpt.member,
+                step: ckpt.step,
+            });
+            rec.incr(keys::RELAY_FORWARDED, 1);
+        }
         self.upstream.publish(ckpt)
     }
 
@@ -133,6 +142,9 @@ impl ExchangeTransport for RelayStore {
         // older than anything installed): forward verbatim so a cold
         // relay is correct immediately.
         self.passthrough_fetches.fetch_add(1, Ordering::Relaxed);
+        if let Some(rec) = &self.recorder {
+            rec.incr(keys::RELAY_PASSTHROUGH, 1);
+        }
         self.upstream.fetch(spec)
     }
 
@@ -176,11 +188,27 @@ impl Relay {
         addr: &str,
         cfg: RelayConfig,
     ) -> Result<Relay> {
+        Self::spawn_tcp_recorded(upstream, addr, cfg, None)
+    }
+
+    /// [`Relay::spawn_tcp`] with an optional `codistill::obs` recorder:
+    /// forwarded publishes become journal events, the refresher's delta
+    /// cache emits fetch/install events, and the loop mirrors its
+    /// counters into the `relay.*` registry keys. Per-sweep counters are
+    /// intentionally *not* journal events — poll counts are timing-
+    /// dependent and would break trace byte-identity.
+    pub fn spawn_tcp_recorded(
+        upstream: Arc<dyn ExchangeTransport>,
+        addr: &str,
+        cfg: RelayConfig,
+        recorder: Option<Recorder>,
+    ) -> Result<Relay> {
         let store = Arc::new(RelayStore {
             upstream,
             mirror: InProcess::new(cfg.history),
             passthrough_fetches: AtomicU64::new(0),
             forwarded_publishes: AtomicU64::new(0),
+            recorder: recorder.clone(),
         });
         let backend: Arc<dyn ExchangeTransport> = store.clone();
         let server = SocketServer::bind_tcp_over(addr, backend, cfg.max_connections)?;
@@ -193,7 +221,7 @@ impl Relay {
             let stop = stop.clone();
             thread::Builder::new()
                 .name("ckpt-relay-refresh".into())
-                .spawn(move || refresh_loop(&store, &cfg, &stats, &stop))
+                .spawn(move || refresh_loop(&store, &cfg, &stats, &stop, recorder))
                 .expect("spawning relay refresher thread")
         };
         Ok(Relay {
@@ -223,6 +251,22 @@ impl Relay {
         s
     }
 
+    /// The refresher viewed as a subscription: the relay's upstream loop
+    /// is the same poll/fetch/install shape as a
+    /// [`Subscription`](super::Subscription), so its counters project
+    /// onto [`SubscribeStats`] (fetches = full + delta upstream pulls).
+    /// Lets `codistill relay` print both summaries from one node.
+    pub fn subscribe_stats(&self) -> SubscribeStats {
+        let s = self.stats();
+        SubscribeStats {
+            polls: s.polls,
+            fetches: s.delta.full_fetches + s.delta.delta_fetches,
+            installs: s.installs,
+            tolerated_errors: s.tolerated_errors,
+            delta: s.delta,
+        }
+    }
+
     /// Stop refreshing and join the refresher thread. The downstream
     /// server keeps answering from the (now frozen) mirror until the
     /// relay is dropped.
@@ -250,8 +294,12 @@ fn refresh_loop(
     cfg: &RelayConfig,
     stats: &Arc<Mutex<RelayStats>>,
     stop: &AtomicBool,
+    recorder: Option<Recorder>,
 ) {
     let mut cache = DeltaCache::new().with_codec(cfg.codec);
+    if let Some(rec) = &recorder {
+        cache = cache.with_recorder(rec.clone());
+    }
     // Installed step per member, tracked locally so the delta-off path
     // does not have to re-list the mirror every sweep.
     let mut installed: HashMap<usize, u64> = HashMap::new();
@@ -295,6 +343,11 @@ fn refresh_loop(
             s.installs += sweep_installs;
             s.tolerated_errors += sweep_errors;
             s.delta = cache.stats();
+        }
+        if let Some(rec) = &recorder {
+            rec.incr(keys::RELAY_POLLS, 1);
+            rec.incr(keys::RELAY_INSTALLS, sweep_installs);
+            rec.incr(keys::RELAY_TOLERATED, sweep_errors);
         }
         thread::sleep(cfg.poll_interval);
     }

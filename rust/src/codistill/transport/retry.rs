@@ -40,12 +40,22 @@
 //! transient failures absorbed vs surfaced — which the coordinator and
 //! orchestrator thread into their run logs so the fault matrix can assert
 //! "N injected transient faults, M absorbed by retry, K surfaced".
+//!
+//! Since the `codistill::obs` refactor both the counters and the replay
+//! log live in an [`obs::Recorder`](crate::codistill::obs::Recorder):
+//! [`Retry::stats`] is a view over the recorder's counter registry and
+//! [`Retry::retry_log_text`] re-renders the journal's retry events
+//! through the shared renderer — byte-identical to the pre-refactor
+//! output. By default each `Retry` owns a private
+//! `Recorder::sim(policy.seed)`; [`Retry::with_recorder`] injects a
+//! run-level recorder instead (note a *shared* recorder pools counters
+//! and log lines across everything recording into it).
 
+use crate::codistill::obs::{keys, Event, Recorder};
 use crate::codistill::store::Checkpoint;
 use crate::codistill::transport::{ExchangeTransport, FetchResult, FetchSpec, TransportKind};
 use crate::prng::Pcg64;
 use anyhow::Result;
-use std::fmt::Write as _;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -219,30 +229,17 @@ impl RetryStats {
     }
 }
 
-/// One retry-relevant event, for the byte-comparable replay log.
-#[derive(Debug, Clone, PartialEq, Eq)]
-struct RetryEvent {
-    op: u64,
-    member: usize,
-    attempt: u32,
-    /// `transient` | `empty` | `permanent` | `exhausted` | `absorbed`.
-    what: &'static str,
-}
-
-#[derive(Default)]
-struct RetryState {
-    next_op: u64,
-    stats: RetryStats,
-    log: Vec<RetryEvent>,
-}
-
 /// Retrying decorator over any exchange transport (see module docs).
 /// Stack it *outside* fault injection — `Retry::wrap(Faulty::wrap(...))`
 /// — so injected faults exercise the retry loop.
 pub struct Retry {
     inner: Arc<dyn ExchangeTransport>,
     policy: RetryPolicy,
-    state: Mutex<RetryState>,
+    /// Next journal op id. Ids number *logged* operations only (see
+    /// [`Retry::run_op`]), so they are deterministic even when
+    /// timing-dependent heartbeat polling drives extra silent ops.
+    next_op: Mutex<u64>,
+    recorder: Recorder,
 }
 
 /// Outcome of one gated operation, before stats bookkeeping.
@@ -254,41 +251,68 @@ enum OpOutcome<T> {
 
 impl Retry {
     pub fn wrap(inner: Arc<dyn ExchangeTransport>, policy: RetryPolicy) -> Self {
+        let recorder = Recorder::sim(policy.seed);
         Retry {
             inner,
             policy: RetryPolicy {
                 max_attempts: policy.max_attempts.max(1),
                 ..policy
             },
-            state: Mutex::new(RetryState::default()),
+            next_op: Mutex::new(0),
+            recorder,
         }
+    }
+
+    /// Record into a shared (e.g. run-level `--trace`) recorder instead
+    /// of the private seeded default.
+    pub fn with_recorder(mut self, recorder: Recorder) -> Self {
+        self.recorder = recorder;
+        self
     }
 
     pub fn policy(&self) -> &RetryPolicy {
         &self.policy
     }
 
-    /// Retry accounting so far.
+    /// Retry accounting so far — a view over the recorder's counter
+    /// registry (pooled across writers when the recorder is shared).
     pub fn stats(&self) -> RetryStats {
-        self.state.lock().unwrap().stats
+        RetryStats {
+            ops: self.recorder.counter(keys::RETRY_OPS),
+            attempts: self.recorder.counter(keys::RETRY_ATTEMPTS),
+            transient_errors: self.recorder.counter(keys::RETRY_TRANSIENT),
+            empty_retries: self.recorder.counter(keys::RETRY_EMPTY),
+            absorbed: self.recorder.counter(keys::RETRY_ABSORBED),
+            exhausted: self.recorder.counter(keys::RETRY_EXHAUSTED),
+            exhausted_empty: self.recorder.counter(keys::RETRY_EXHAUSTED_EMPTY),
+            permanent_errors: self.recorder.counter(keys::RETRY_PERMANENT),
+        }
     }
 
     /// Canonical text rendering of the retry log: one
     /// `op member attempt what` line per retry-relevant event, in
     /// operation order — byte-comparable across runs with the same seed,
     /// fault plan, and schedule (single writer assumed, like the fault
-    /// log).
+    /// log). Re-derived from the journal through the shared renderer.
     pub fn retry_log_text(&self) -> String {
-        let mut out = String::new();
-        for e in self.state.lock().unwrap().log.iter() {
-            let _ = writeln!(out, "{} {} {} {}", e.op, e.member, e.attempt, e.what);
-        }
-        out
+        self.recorder.journal().retry_log_text()
     }
 
-    fn record(&self, op: u64, member: usize, attempt: u32, what: &'static str) {
-        self.state.lock().unwrap().log.push(RetryEvent {
-            op,
+    /// Record one attempt into the journal, allocating the op id at the
+    /// first logged attempt of the operation.
+    fn record(&self, op_id: &mut Option<u64>, member: usize, attempt: u32, what: &'static str) {
+        let id = match *op_id {
+            Some(id) => id,
+            None => {
+                let mut next = self.next_op.lock().unwrap();
+                let id = *next;
+                *next += 1;
+                *op_id = Some(id);
+                id
+            }
+        };
+        self.recorder.record(Event::RetryAttempt {
+            op: id,
             member,
             attempt,
             what,
@@ -298,26 +322,28 @@ impl Retry {
     /// Drive one operation through the retry loop. `member` is only used
     /// for the log (coordinator-level ops like `gc` pass [`COORD_OP`]).
     /// `empty` marks results that should be retried under `retry_none`.
+    ///
+    /// Journal op ids are assigned lazily, at an operation's first
+    /// logged attempt: the (common) clean first-attempt success never
+    /// consumes an id, so op numbering is a pure function of the fault
+    /// sequence — not of how many silent heartbeat polls happened to run.
     fn run_op<T>(
         &self,
         member: usize,
         mut op: impl FnMut() -> Result<T>,
         empty: impl Fn(&T) -> bool,
     ) -> Result<T> {
-        let op_id = {
-            let mut st = self.state.lock().unwrap();
-            st.stats.ops += 1;
-            let id = st.next_op;
-            st.next_op += 1;
-            id
-        };
+        self.recorder.incr(keys::RETRY_OPS, 1);
+        let mut op_id: Option<u64> = None;
         let mut failed_before = false;
         for attempt in 1..=self.policy.max_attempts {
-            let backoff = self.policy.backoff(op_id, attempt);
+            // Backoff only ever precedes attempt >= 2, by which point the
+            // failed first attempt has already allocated the op id.
+            let backoff = self.policy.backoff(op_id.unwrap_or(0), attempt);
             if !backoff.is_zero() {
                 std::thread::sleep(backoff);
             }
-            self.state.lock().unwrap().stats.attempts += 1;
+            self.recorder.incr(keys::RETRY_ATTEMPTS, 1);
             let started = Instant::now();
             let outcome = match op() {
                 Ok(v) if self.policy.retry_none && empty(&v) => OpOutcome::Empty(v),
@@ -337,33 +363,33 @@ impl Retry {
             match outcome {
                 OpOutcome::Done(Ok(v)) => {
                     if failed_before {
-                        self.state.lock().unwrap().stats.absorbed += 1;
-                        self.record(op_id, member, attempt, "absorbed");
+                        self.recorder.incr(keys::RETRY_ABSORBED, 1);
+                        self.record(&mut op_id, member, attempt, "absorbed");
                     }
                     return Ok(v);
                 }
                 OpOutcome::Done(Err(e)) => {
-                    self.state.lock().unwrap().stats.permanent_errors += 1;
-                    self.record(op_id, member, attempt, "permanent");
+                    self.recorder.incr(keys::RETRY_PERMANENT, 1);
+                    self.record(&mut op_id, member, attempt, "permanent");
                     return Err(e);
                 }
                 OpOutcome::TransientErr(e) => {
                     failed_before = true;
-                    self.state.lock().unwrap().stats.transient_errors += 1;
-                    self.record(op_id, member, attempt, "transient");
+                    self.recorder.incr(keys::RETRY_TRANSIENT, 1);
+                    self.record(&mut op_id, member, attempt, "transient");
                     if attempt == self.policy.max_attempts {
-                        self.state.lock().unwrap().stats.exhausted += 1;
-                        self.record(op_id, member, attempt, "exhausted");
+                        self.recorder.incr(keys::RETRY_EXHAUSTED, 1);
+                        self.record(&mut op_id, member, attempt, "exhausted");
                         return Err(e);
                     }
                 }
                 OpOutcome::Empty(v) => {
                     failed_before = true;
-                    self.state.lock().unwrap().stats.empty_retries += 1;
-                    self.record(op_id, member, attempt, "empty");
+                    self.recorder.incr(keys::RETRY_EMPTY, 1);
+                    self.record(&mut op_id, member, attempt, "empty");
                     if attempt == self.policy.max_attempts {
-                        self.state.lock().unwrap().stats.exhausted_empty += 1;
-                        self.record(op_id, member, attempt, "exhausted");
+                        self.recorder.incr(keys::RETRY_EXHAUSTED_EMPTY, 1);
+                        self.record(&mut op_id, member, attempt, "exhausted");
                         return Ok(v);
                     }
                 }

@@ -25,6 +25,7 @@
 //! Drop (or [`Subscription::stop`]) signals the thread and joins it.
 
 use super::{Codec, DeltaCache, DeltaStats, ExchangeTransport};
+use crate::codistill::obs::{keys, Recorder};
 use crate::codistill::Checkpoint;
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -85,6 +86,24 @@ impl Subscription {
     pub fn spawn<F>(
         transport: Arc<dyn ExchangeTransport>,
         cfg: SubscribeConfig,
+        on_install: F,
+    ) -> Self
+    where
+        F: FnMut(Arc<Checkpoint>) -> Result<()> + Send + 'static,
+    {
+        Self::spawn_recorded(transport, cfg, None, on_install)
+    }
+
+    /// [`Subscription::spawn`] with an optional `codistill::obs`
+    /// recorder: the private delta cache emits fetch/install journal
+    /// events and the loop mirrors its counters into the `sub.*`
+    /// registry keys. Per-poll counters are intentionally *not* journal
+    /// events — poll counts are timing-dependent and would break trace
+    /// byte-identity.
+    pub fn spawn_recorded<F>(
+        transport: Arc<dyn ExchangeTransport>,
+        cfg: SubscribeConfig,
+        recorder: Option<Recorder>,
         mut on_install: F,
     ) -> Self
     where
@@ -96,9 +115,13 @@ impl Subscription {
         let handle = std::thread::Builder::new()
             .name(format!("ckpt-subscribe-m{}", cfg.member))
             .spawn(move || {
-                let mut cache = cfg
-                    .delta
-                    .then(|| DeltaCache::new().with_codec(cfg.codec));
+                let mut cache = cfg.delta.then(|| {
+                    let mut c = DeltaCache::new().with_codec(cfg.codec);
+                    if let Some(rec) = &recorder {
+                        c = c.with_recorder(rec.clone());
+                    }
+                    c
+                });
                 let mut installed: Option<u64> = None;
                 while !t_stop.load(Ordering::SeqCst) {
                     let outcome = poll_once(
@@ -111,21 +134,33 @@ impl Subscription {
                     {
                         let mut s = t_stats.lock().unwrap();
                         s.polls += 1;
+                        let mut fetched_now = 0u64;
+                        let mut installed_now = 0u64;
+                        let mut tolerated_now = 0u64;
                         match outcome {
                             Ok(PollOutcome::Installed) => {
-                                s.fetches += 1;
-                                s.installs += 1;
+                                fetched_now = 1;
+                                installed_now = 1;
                             }
                             Ok(PollOutcome::Fresh) => {}
                             Err(fetched) => {
                                 if fetched {
-                                    s.fetches += 1;
+                                    fetched_now = 1;
                                 }
-                                s.tolerated_errors += 1;
+                                tolerated_now = 1;
                             }
                         }
+                        s.fetches += fetched_now;
+                        s.installs += installed_now;
+                        s.tolerated_errors += tolerated_now;
                         if let Some(c) = &cache {
                             s.delta = c.stats();
+                        }
+                        if let Some(rec) = &recorder {
+                            rec.incr(keys::SUB_POLLS, 1);
+                            rec.incr(keys::SUB_FETCHES, fetched_now);
+                            rec.incr(keys::SUB_INSTALLS, installed_now);
+                            rec.incr(keys::SUB_TOLERATED, tolerated_now);
                         }
                     }
                     std::thread::sleep(cfg.poll_interval);

@@ -3,8 +3,8 @@
 
 use crate::codistill::{
     Codec, Coordinator, CoordinatorConfig, DistillSchedule, ExchangeTransport, FaultPlan, Faulty,
-    HostedMember, InProcess, LrSchedule, Member, Orchestrator, OrchestratorConfig, Retry,
-    RetryPolicy, RunLog, Scenario, SocketServer, SocketTransport, SpoolDir, Topology,
+    HostedMember, InProcess, LrSchedule, Member, Orchestrator, OrchestratorConfig, Recorder,
+    Retry, RetryPolicy, RunLog, Scenario, SocketServer, SocketTransport, SpoolDir, Topology,
     TransportKind,
 };
 use crate::config::Settings;
@@ -287,11 +287,14 @@ pub fn make_transport(s: &Settings, history: usize) -> Result<TransportSetup> {
 /// `retry_*` knob) is set: `retry_attempts=N`, `retry_base_ms=MS`,
 /// `retry_seed=N` (defaulting to `default_seed`). Returns the possibly
 /// wrapped transport and whether the wrap happened. Apply outermost —
-/// injected faults and flaky media then exercise the retry loop.
+/// injected faults and flaky media then exercise the retry loop. Pass a
+/// `recorder` to journal the retry attempts into a shared `--trace`
+/// stream instead of the decorator's private one.
 pub fn wrap_retry(
     s: &Settings,
     transport: Arc<dyn ExchangeTransport>,
     default_seed: u64,
+    recorder: Option<&Recorder>,
 ) -> Result<(Arc<dyn ExchangeTransport>, bool)> {
     let want = s.bool_or("retry", false)? || s.get("retry_attempts").is_some();
     if !want {
@@ -303,7 +306,37 @@ pub fn wrap_retry(
         seed: s.u64_or("retry_seed", default_seed)?,
         ..RetryPolicy::default()
     };
-    Ok((Arc::new(Retry::wrap(transport, policy)), true))
+    let mut retry = Retry::wrap(transport, policy);
+    if let Some(rec) = recorder {
+        retry = retry.with_recorder(rec.clone());
+    }
+    Ok((Arc::new(retry), true))
+}
+
+/// Build the `--trace` recorder when `trace=FILE` is set: `None` when
+/// tracing is off, a wall-clock recorder otherwise (`trace_clock=sim`
+/// swaps in the seeded simulated clock, making same-seed traces
+/// byte-identical — the journal-determinism tests run exactly that).
+pub fn run_recorder(s: &Settings) -> Result<Option<Recorder>> {
+    if s.get("trace").is_none() {
+        return Ok(None);
+    }
+    let rec = match s.str_or("trace_clock", "wall") {
+        "sim" => Recorder::sim(s.u64_or("seed", 42)?),
+        _ => Recorder::wall(),
+    };
+    Ok(Some(rec))
+}
+
+/// Dump a recorder's journal to the `trace=FILE` path as JSONL.
+pub fn write_trace(s: &Settings, rec: &Recorder) -> Result<()> {
+    let Some(path) = s.get("trace") else {
+        return Ok(());
+    };
+    let jsonl = rec.to_jsonl();
+    std::fs::write(path, &jsonl).with_context(|| format!("writing trace {path}"))?;
+    println!("[trace] {} events -> {path}", rec.len());
+    Ok(())
 }
 
 /// Print a run's per-member final summary.
@@ -380,7 +413,11 @@ pub fn cmd_codistill(s: &Settings) -> Result<()> {
             }
         );
     }
-    let orch = Orchestrator::with_transport(cfg, setup.transport.clone());
+    let recorder = run_recorder(s)?;
+    let mut orch = Orchestrator::with_transport(cfg, setup.transport.clone());
+    if let Some(rec) = &recorder {
+        orch = orch.with_recorder(rec.clone());
+    }
     let log = orch.run(&mut members)?;
     print_runlog("codistill", &log);
     if let Some(stats) = &log.delta {
@@ -388,6 +425,9 @@ pub fn cmd_codistill(s: &Settings) -> Result<()> {
     }
     if let Some(stats) = &log.feedback {
         feedback_stats_line("codistill", stats);
+    }
+    if let Some(rec) = &recorder {
+        write_trace(s, rec)?;
     }
     // `setup.server` (if any) stays alive until here by ownership.
     drop(setup);
@@ -542,16 +582,21 @@ pub fn cmd_coordinate(s: &Settings) -> Result<()> {
             }
         }
     };
+    let recorder = run_recorder(s)?;
     let (transport, faulty): (Arc<dyn ExchangeTransport>, Option<Arc<Faulty>>) = match plan {
         Some(fp) => {
-            let f = Arc::new(Faulty::wrap(setup.transport.clone(), fp));
+            let mut f = Faulty::wrap(setup.transport.clone(), fp);
+            if let Some(rec) = &recorder {
+                f = f.with_recorder(rec.clone());
+            }
+            let f = Arc::new(f);
             (f.clone() as Arc<dyn ExchangeTransport>, Some(f))
         }
         None => (setup.transport.clone(), None),
     };
     // `--retry` (or any retry_* knob) wraps the stack in the retrying
     // decorator — outermost, so injected faults exercise the retry loop.
-    let (transport, want_retry) = wrap_retry(s, transport, d.seed)?;
+    let (transport, want_retry) = wrap_retry(s, transport, d.seed, recorder.as_ref())?;
     if d.verbose {
         eprintln!(
             "[coordinate] transport: {}{}{}{}{}",
@@ -633,7 +678,10 @@ pub fn cmd_coordinate(s: &Settings) -> Result<()> {
         c.apply(&mut hosted);
     }
 
-    let coord = Coordinator::new(cfg, transport);
+    let mut coord = Coordinator::new(cfg, transport);
+    if let Some(rec) = &recorder {
+        coord = coord.with_recorder(rec.clone());
+    }
     let log = coord.run(&mut hosted)?;
     for (i, curve) in log.eval.iter().enumerate() {
         if let Some(last) = curve.last() {
@@ -671,6 +719,9 @@ pub fn cmd_coordinate(s: &Settings) -> Result<()> {
             r.permanent_errors,
             r.absorption_rate()
         );
+    }
+    if let Some(rec) = &recorder {
+        write_trace(s, rec)?;
     }
     drop(setup);
     Ok(())

@@ -23,12 +23,21 @@
 //! * demo: `tree_depth=N` (2), `tree_fanout=N` (2), `readers=N` (8),
 //!   `publishes=N` (3), `publish_steps=N` (5), `mock_frozen=N` (64),
 //!   `member=N` (0)
+//! * `--trace FILE` — record forward/fetch/install events from every
+//!   node into one shared [`codistill::obs`](crate::codistill::obs)
+//!   journal and dump it as JSONL on exit
+//!
+//! Both modes print each node's [`RelayStats`](crate::codistill::RelayStats)
+//! line plus the same refresh loop viewed as
+//! [`SubscribeStats`](crate::codistill::SubscribeStats) on exit.
 
+use crate::codistill::obs::Recorder;
 use crate::codistill::transport::socket::MAX_CONNECTIONS;
 use crate::codistill::{
     Codec, ExchangeTransport, Relay, RelayConfig, SocketTransport,
 };
 use crate::config::Settings;
+use crate::experiments::common::{run_recorder, write_trace};
 use crate::testkit::DriftMember;
 use anyhow::{bail, Result};
 use std::sync::Arc;
@@ -64,6 +73,13 @@ fn stats_line(tag: &str, relay: &Relay) {
         st.delta.windows_moved,
         st.delta.windows_unchanged
     );
+    // The same refresh loop seen through the subscription lens, so relay
+    // nodes and `serve` subscriptions summarise in one vocabulary.
+    let sub = relay.subscribe_stats();
+    println!(
+        "[relay] {tag} subscription: polls={} fetches={} installs={} tolerated_errors={}",
+        sub.polls, sub.fetches, sub.installs, sub.tolerated_errors
+    );
 }
 
 pub fn run(s: &Settings) -> Result<()> {
@@ -76,12 +92,18 @@ pub fn run(s: &Settings) -> Result<()> {
 /// One fan-out node between a live upstream and downstream readers.
 fn run_node(s: &Settings, upstream_addr: &str) -> Result<()> {
     let cfg = relay_config(s)?;
+    let recorder = run_recorder(s)?;
     let mut upstream = SocketTransport::connect(upstream_addr)?;
     if cfg.codec != Codec::Raw {
         upstream = upstream.with_codec(cfg.codec);
     }
     let upstream: Arc<dyn ExchangeTransport> = Arc::new(upstream);
-    let mut relay = Relay::spawn_tcp(upstream, s.str_or("listen", "127.0.0.1:0"), cfg)?;
+    let mut relay = Relay::spawn_tcp_recorded(
+        upstream,
+        s.str_or("listen", "127.0.0.1:0"),
+        cfg,
+        recorder.clone(),
+    )?;
     println!("[relay] serving {} (upstream {upstream_addr})", relay.addr());
 
     let duration_s = s.u64_or("duration_s", 0)?;
@@ -94,6 +116,9 @@ fn run_node(s: &Settings, upstream_addr: &str) -> Result<()> {
     }
     relay.stop();
     stats_line("node", &relay);
+    if let Some(rec) = &recorder {
+        write_trace(s, rec)?;
+    }
     Ok(())
 }
 
@@ -109,6 +134,10 @@ fn run_demo_tree(s: &Settings) -> Result<()> {
     let frozen = s.usize_or("mock_frozen", 64)?;
     let member = s.usize_or("member", 0)?;
     let verbose = s.bool_or("verbose", false)?;
+    // One shared journal across every node in the tree: relay.* counters
+    // pool over the whole topology and forward events interleave in
+    // arrival order.
+    let recorder: Option<Recorder> = run_recorder(s)?;
 
     let hub: Arc<dyn ExchangeTransport> =
         Arc::new(crate::codistill::InProcess::new(cfg.history));
@@ -132,7 +161,12 @@ fn run_demo_tree(s: &Settings) -> Result<()> {
                 }
                 Arc::new(t)
             };
-            row.push(Relay::spawn_tcp(upstream, "127.0.0.1:0", cfg.clone())?);
+            row.push(Relay::spawn_tcp_recorded(
+                upstream,
+                "127.0.0.1:0",
+                cfg.clone(),
+                recorder.clone(),
+            )?);
         }
         if verbose {
             println!("[relay] level {}: {} nodes", level + 1, row.len());
@@ -198,6 +232,9 @@ fn run_demo_tree(s: &Settings) -> Result<()> {
                 stats_line(&format!("L{}#{ri}", li + 1), relay);
             }
         }
+    }
+    if let Some(rec) = &recorder {
+        write_trace(s, rec)?;
     }
     Ok(())
 }

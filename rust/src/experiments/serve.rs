@@ -19,12 +19,17 @@
 //!   `probe=N` (32) — server batching and churn-probe knobs
 //! * `poll_ms=MS` (2) — subscription heartbeat cadence
 //! * `upstream=relay:ADDR` — subscribe through a checkpoint relay
-//!   instead of straight off the transport: `relay:auto` spawns an
-//!   in-process [`Relay`] over the built transport (the one-process
-//!   publisher → relay → serve demo), any other `ADDR` connects the
-//!   subscription to an already-running relay tier (`codistill relay`)
-//!   at that address — the publisher keeps publishing to the base
-//!   transport the relay mirrors
+//!   instead of straight off the transport: `relay:auto` (or the
+//!   shorthand `upstream=auto`) spawns an in-process [`Relay`] over the
+//!   built transport (the one-process publisher → relay → serve demo),
+//!   any other `ADDR` connects the subscription to an already-running
+//!   relay tier (`codistill relay`) at that address — the publisher
+//!   keeps publishing to the base transport the relay mirrors
+//!
+//! With `--trace FILE` the run records publish/fetch/install/swap (and,
+//! via `upstream=auto`, relay-forward) events into a shared
+//! [`codistill::obs`](crate::codistill::obs) journal and dumps it as
+//! JSONL on exit.
 //!
 //! The run prints the load report (p50/p99/p999 latency, goodput), the
 //! server's throughput-vs-batch-size table, the churn-across-swaps
@@ -38,8 +43,11 @@ use crate::codistill::{
 use crate::codistill::serve::{
     closed_loop, open_loop, InferenceServer, LoadSpec, OpenLoopSpec, ServeConfig,
 };
+use crate::codistill::obs::Event;
 use crate::config::Settings;
-use crate::experiments::common::{delta_stats_line, make_transport, wrap_retry};
+use crate::experiments::common::{
+    delta_stats_line, make_transport, run_recorder, wrap_retry, write_trace,
+};
 use crate::models::MockForward;
 use crate::testkit::DriftMember;
 use anyhow::{bail, Result};
@@ -83,20 +91,26 @@ pub fn run(s: &Settings) -> Result<()> {
     let rps = s.f64_or("rps", 5000.0)?;
 
     let setup = make_transport(s, s.usize_or("history", 8)?)?;
+    let recorder = run_recorder(s)?;
     // `upstream=relay:ADDR` interposes a relay hop between the publisher
     // and the subscription: the publisher keeps publishing to the base
     // transport, the subscription reads a relay's mirror of it.
-    // `relay:auto` spawns the relay in-process (one-command demo);
-    // anything else connects to an external `codistill relay`.
+    // `relay:auto` (or plain `auto`) spawns the relay in-process (the
+    // one-command demo topology — "auto" resolves to the configured
+    // relay); anything else connects to an external `codistill relay`.
     let mut relay: Option<Relay> = None;
     let sub_base: Arc<dyn ExchangeTransport> = match s.get("upstream") {
         None => setup.transport.clone(),
         Some(v) => {
-            let addr = v
-                .strip_prefix("relay:")
-                .ok_or_else(|| anyhow::anyhow!("upstream must be relay:ADDR, got {v:?}"))?;
+            let addr = if v == "auto" {
+                "auto"
+            } else {
+                v.strip_prefix("relay:").ok_or_else(|| {
+                    anyhow::anyhow!("upstream must be auto or relay:ADDR, got {v:?}")
+                })?
+            };
             let client_addr = if addr == "auto" {
-                let r = Relay::spawn_tcp(
+                let r = Relay::spawn_tcp_recorded(
                     setup.transport.clone(),
                     "127.0.0.1:0",
                     RelayConfig {
@@ -105,6 +119,7 @@ pub fn run(s: &Settings) -> Result<()> {
                         codec: setup.codec,
                         ..RelayConfig::default()
                     },
+                    recorder.clone(),
                 )?;
                 let a = r.addr().to_string();
                 relay = Some(r);
@@ -119,8 +134,8 @@ pub fn run(s: &Settings) -> Result<()> {
             Arc::new(t)
         }
     };
-    let (sub_transport, want_retry) = wrap_retry(s, sub_base, seed)?;
-    let (transport, _) = wrap_retry(s, setup.transport.clone(), seed)?;
+    let (sub_transport, want_retry) = wrap_retry(s, sub_base, seed, recorder.as_ref())?;
+    let (transport, _) = wrap_retry(s, setup.transport.clone(), seed, recorder.as_ref())?;
     if verbose {
         eprintln!(
             "[serve] transport: {}{}{}{}{}",
@@ -139,11 +154,14 @@ pub fn run(s: &Settings) -> Result<()> {
     }
 
     let server = Arc::new(InferenceServer::start(Arc::new(MockForward::new()), cfg));
+    if let Some(rec) = &recorder {
+        server.set_recorder(rec.clone());
+    }
 
     // The subscription feeds the swap handle; every verified install is
     // a hot swap under whatever traffic is in flight.
     let sub_server = server.clone();
-    let mut sub = Subscription::spawn(
+    let mut sub = Subscription::spawn_recorded(
         sub_transport.clone(),
         SubscribeConfig {
             member,
@@ -151,6 +169,7 @@ pub fn run(s: &Settings) -> Result<()> {
             delta,
             codec: setup.codec,
         },
+        recorder.clone(),
         move |ck| sub_server.install(ck),
     );
 
@@ -158,6 +177,7 @@ pub fn run(s: &Settings) -> Result<()> {
     // checkpoint coalesces into its successor — `publishes` publications
     // become exactly `publishes` installs (`publishes - 1` swaps).
     let (pub_transport, pub_server) = (transport.clone(), server.clone());
+    let pub_recorder = recorder.clone();
     let publisher = std::thread::Builder::new()
         .name("serve-publisher".into())
         .spawn(move || -> Result<()> {
@@ -167,7 +187,21 @@ pub fn run(s: &Settings) -> Result<()> {
                     m.train_step(0.0, 0.1)?;
                 }
                 let step = m.steps_done();
-                pub_transport.publish(m.snapshot()?)?;
+                let ck = m.snapshot()?;
+                // Journal the publish *before* the transport call: the
+                // subscription cannot see step N until the publish lands,
+                // so the trace always orders publish -> fetch -> swap.
+                // Duration is left 0 — the gated cadence below measures
+                // install latency, not wire time.
+                if let Some(rec) = &pub_recorder {
+                    rec.record(Event::Publish {
+                        member: ck.member,
+                        step: ck.step,
+                        bytes: ck.flat().layout().total_bytes() as u64,
+                        dur_us: 0,
+                    });
+                }
+                pub_transport.publish(ck)?;
                 let t0 = Instant::now();
                 while pub_server.installed_step() != Some(step) {
                     if t0.elapsed() > Duration::from_secs(10) {
@@ -247,6 +281,9 @@ pub fn run(s: &Settings) -> Result<()> {
             rs.polls, rs.installs, rs.tolerated_errors
         );
         r.stop();
+    }
+    if let Some(rec) = &recorder {
+        write_trace(s, rec)?;
     }
     drop(setup);
     Ok(())

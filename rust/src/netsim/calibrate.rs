@@ -1,0 +1,403 @@
+//! Fit a [`ClusterModel`] from a recorded `codistill::obs` trace.
+//!
+//! The analytic model in [`crate::netsim`] prices exchanges from
+//! hand-picked constants (bandwidth, latency, plane size). A real run
+//! recorded with `--trace` carries the measured side of the same story:
+//! every `publish` and `fetch` event holds the bytes it moved and the
+//! wall microseconds it took, and every `delta_install` holds the
+//! changed-window accounting. [`calibrate`] closes the loop — it fits
+//! the per-byte and per-exchange constants from the trace by least
+//! squares, rebuilds a [`ClusterModel`] from them, and reports how far
+//! the model's [`ClusterModel::compressed_exchange_time`] lands from
+//! the wall time the trace actually measured (the ROADMAP's
+//! "trace-validated netsim").
+//!
+//! The fit is the obvious linear one: each timed sample (a publish or a
+//! fetch) is a point `(bytes, seconds)`, and
+//!
+//! ```text
+//!   seconds ≈ latency_s + bytes / bandwidth_bps
+//! ```
+//!
+//! so slope and intercept of the least-squares line give the two
+//! transport constants. The exchange *shape* constants come from
+//! counting: plane size is the largest published plane, teachers per
+//! publish is the fetch/publish ratio, the changed fraction and wire
+//! ratio come from the steady-state (non-full) delta installs, and the
+//! reload interval is the median publish step gap.
+
+use super::ClusterModel;
+use crate::codistill::obs::{Event, EventJournal};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One timed byte-move sample lifted from the trace.
+#[derive(Debug, Clone, Copy)]
+struct Sample {
+    bytes: u64,
+    dur_s: f64,
+}
+
+/// A fitted model plus the evidence behind it (see [`calibrate`]).
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// The model rebuilt from the trace: fitted `bandwidth_bps` /
+    /// `latency_s` / `model_bytes` / `workers` / `reload_interval`;
+    /// compute and straggler knobs keep [`ClusterModel::gpu_cluster`]
+    /// defaults (a trace of exchange events cannot see compute).
+    pub model: ClusterModel,
+    /// Timed publish/fetch samples the line was fitted over.
+    pub samples: usize,
+    /// Teacher reads per publish observed in the trace.
+    pub teachers: usize,
+    /// Mean changed-window fraction over steady-state delta installs
+    /// (1.0 when the trace has none).
+    pub changed_fraction: f64,
+    /// Mean wire bytes / raw changed bytes over steady-state delta
+    /// installs (1.0 when the trace has none).
+    pub wire_ratio: f64,
+    /// Measured mean wall seconds per exchange round: one publish plus
+    /// `teachers` steady-state fetches (cold full fetches excluded).
+    pub measured_exchange_s: f64,
+    /// The fitted model's [`ClusterModel::compressed_exchange_time`]
+    /// at the observed teachers / changed fraction / wire ratio.
+    pub modeled_exchange_s: f64,
+}
+
+impl Calibration {
+    /// |modeled − measured| / measured.
+    pub fn rel_error(&self) -> f64 {
+        if self.measured_exchange_s > 0.0 {
+            (self.modeled_exchange_s - self.measured_exchange_s).abs() / self.measured_exchange_s
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Human-readable modeled-vs-measured summary (the CLI report).
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "[calibrate] fitted over {} samples: bandwidth={:.3e} B/s latency={:.1}us",
+            self.samples,
+            self.model.bandwidth_bps,
+            self.model.latency_s * 1e6,
+        );
+        let _ = writeln!(
+            out,
+            "[calibrate] exchange shape: workers={} model_bytes={} reload_interval={} \
+             teachers={} changed_fraction={:.3} wire_ratio={:.3}",
+            self.model.workers,
+            self.model.model_bytes,
+            self.model.reload_interval,
+            self.teachers,
+            self.changed_fraction,
+            self.wire_ratio,
+        );
+        let _ = writeln!(
+            out,
+            "[calibrate] exchange wall: measured={:.3e}s modeled={:.3e}s rel_error={:.1}%",
+            self.measured_exchange_s,
+            self.modeled_exchange_s,
+            self.rel_error() * 100.0,
+        );
+        out
+    }
+}
+
+/// Fit a [`ClusterModel`] from a `--trace` JSONL dump (see module docs).
+///
+/// Errors when the trace parses but holds no publish events, or no
+/// timed samples to fit from — a trace recorded under a simulated clock
+/// still works (the durations are synthetic but self-consistent), it
+/// just calibrates the simulated medium instead of a real one.
+pub fn calibrate(trace: &str) -> Result<Calibration> {
+    let journal = EventJournal::from_jsonl(trace)?;
+
+    // (member, step, bytes, dur_us) for publishes; fetches paired with
+    // the delta install recorded by the same cache call (pair by order:
+    // the cache records Fetch then DeltaInstall back to back).
+    let mut publishes: Vec<(usize, u64, u64, u64)> = Vec::new();
+    let mut fetches: Vec<(u64, u64, Option<bool>)> = Vec::new(); // (bytes, dur_us, full)
+    let mut pending_fetch: Vec<usize> = Vec::new(); // indices awaiting their install
+    let mut installs: Vec<(bool, u64, u64, u64)> = Vec::new(); // (full, moved, unchanged, bytes)
+
+    for te in &journal.events {
+        match &te.event {
+            Event::Publish { member, step, bytes, dur_us } => {
+                publishes.push((*member, *step, *bytes, *dur_us));
+            }
+            Event::Fetch { bytes, dur_us, .. } => {
+                pending_fetch.push(fetches.len());
+                fetches.push((*bytes, *dur_us, None));
+            }
+            Event::DeltaInstall { full, moved, unchanged, bytes, .. } => {
+                installs.push((*full, *moved, *unchanged, *bytes));
+                if let Some(i) = pending_fetch.pop() {
+                    fetches[i].2 = Some(*full);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    if publishes.is_empty() {
+        bail!("trace has no publish events to calibrate from");
+    }
+
+    // --- transport constants: least-squares dur_s = a + bytes/bw ------
+    let mut pts: Vec<Sample> = Vec::new();
+    for &(_, _, bytes, dur_us) in &publishes {
+        if dur_us > 0 {
+            pts.push(Sample { bytes, dur_s: dur_us as f64 * 1e-6 });
+        }
+    }
+    for &(bytes, dur_us, _) in &fetches {
+        if dur_us > 0 {
+            pts.push(Sample { bytes, dur_s: dur_us as f64 * 1e-6 });
+        }
+    }
+    if pts.is_empty() {
+        bail!("trace has no timed publish/fetch samples (all dur_us = 0)");
+    }
+    let (bandwidth_bps, latency_s) = fit_line(&pts);
+
+    // --- exchange shape ----------------------------------------------
+    let model_bytes = publishes.iter().map(|&(_, _, b, _)| b).max().unwrap_or(0);
+    let workers = {
+        let mut m: Vec<usize> = publishes.iter().map(|&(w, ..)| w).collect();
+        m.sort_unstable();
+        m.dedup();
+        m.len()
+    };
+    let reload_interval = median_publish_gap(&publishes).unwrap_or(50);
+    let teachers = if publishes.is_empty() {
+        0
+    } else {
+        ((fetches.len() as f64 / publishes.len() as f64).round() as usize).max(1)
+    };
+
+    // Steady-state delta shape: full installs are the cold start, not
+    // the steady state the model prices.
+    let steady: Vec<&(bool, u64, u64, u64)> = installs
+        .iter()
+        .filter(|&&(full, moved, unchanged, _)| !full && moved + unchanged > 0)
+        .collect();
+    let changed_fraction = if steady.is_empty() {
+        1.0
+    } else {
+        steady
+            .iter()
+            .map(|&&(_, moved, unchanged, _)| moved as f64 / (moved + unchanged) as f64)
+            .sum::<f64>()
+            / steady.len() as f64
+    };
+    let wire_ratio = if steady.is_empty() || model_bytes == 0 || changed_fraction <= 0.0 {
+        1.0
+    } else {
+        let r = steady
+            .iter()
+            .map(|&&(_, moved, unchanged, bytes)| {
+                let f = moved as f64 / (moved + unchanged) as f64;
+                if f > 0.0 {
+                    bytes as f64 / (f * model_bytes as f64)
+                } else {
+                    1.0
+                }
+            })
+            .sum::<f64>()
+            / steady.len() as f64;
+        r.clamp(0.0, 1.0)
+    };
+
+    // --- measured vs modeled wall per exchange round ------------------
+    let timed_pub: Vec<f64> = publishes
+        .iter()
+        .filter(|&&(_, _, _, d)| d > 0)
+        .map(|&(_, _, _, d)| d as f64 * 1e-6)
+        .collect();
+    // Steady fetches: the pairing above marks each fetch with its
+    // install's `full` flag; unpaired fetches (no delta cache in the
+    // stack) count as steady.
+    let timed_fetch: Vec<f64> = fetches
+        .iter()
+        .filter(|&&(_, d, full)| d > 0 && full != Some(true))
+        .map(|&(_, d, _)| d as f64 * 1e-6)
+        .collect();
+    let mean = |v: &[f64]| {
+        if v.is_empty() {
+            0.0
+        } else {
+            v.iter().sum::<f64>() / v.len() as f64
+        }
+    };
+    let measured_exchange_s = mean(&timed_pub) + teachers as f64 * mean(&timed_fetch);
+
+    let mut model = ClusterModel::gpu_cluster(workers.max(1), model_bytes);
+    model.bandwidth_bps = bandwidth_bps;
+    model.latency_s = latency_s;
+    model.reload_interval = reload_interval;
+    let modeled_exchange_s = model.compressed_exchange_time(teachers, changed_fraction, wire_ratio);
+
+    Ok(Calibration {
+        model,
+        samples: pts.len(),
+        teachers,
+        changed_fraction,
+        wire_ratio,
+        measured_exchange_s,
+        modeled_exchange_s,
+    })
+}
+
+/// Least-squares `dur_s = latency + bytes/bandwidth` over the samples.
+/// Degenerate inputs (one distinct size, or a non-positive slope) fall
+/// back to the aggregate rate with zero base latency.
+fn fit_line(pts: &[Sample]) -> (f64, f64) {
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.bytes as f64).sum();
+    let sy: f64 = pts.iter().map(|p| p.dur_s).sum();
+    let sxx: f64 = pts.iter().map(|p| (p.bytes as f64) * (p.bytes as f64)).sum();
+    let sxy: f64 = pts.iter().map(|p| (p.bytes as f64) * p.dur_s).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() > f64::EPSILON {
+        let slope = (n * sxy - sx * sy) / denom;
+        if slope > 0.0 {
+            let intercept = (sy - slope * sx) / n;
+            return (1.0 / slope, intercept.max(0.0));
+        }
+    }
+    // Fallback: aggregate bytes-per-second, all time on the wire.
+    if sy > 0.0 {
+        (sx / sy, 0.0)
+    } else {
+        (1.0, 0.0)
+    }
+}
+
+/// Median gap between consecutive published steps, per member, pooled.
+fn median_publish_gap(publishes: &[(usize, u64, u64, u64)]) -> Option<u64> {
+    let mut per_member: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
+    for &(member, step, _, _) in publishes {
+        per_member.entry(member).or_default().push(step);
+    }
+    let mut gaps: Vec<u64> = Vec::new();
+    for steps in per_member.values_mut() {
+        steps.sort_unstable();
+        gaps.extend(steps.windows(2).map(|w| w[1] - w[0]).filter(|&g| g > 0));
+    }
+    if gaps.is_empty() {
+        return None;
+    }
+    gaps.sort_unstable();
+    Some(gaps[gaps.len() / 2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a synthetic trace: `rounds` exchange rounds of 2 members,
+    /// plane of `model_bytes`, durations `base_us + bytes/1000` (i.e. a
+    /// 1 GB/s medium with `base_us` latency), steady delta installs
+    /// moving 2 of 8 windows at an int8-ish wire ratio.
+    fn synthetic_trace(rounds: u64, model_bytes: u64) -> String {
+        let mut out = String::new();
+        let mut t = 0u64;
+        let dur = |bytes: u64| 200 + bytes / 1000;
+        let delta_bytes = 260 * model_bytes / 4000; // 0.25 changed × 0.26 wire
+        for round in 1..=rounds {
+            let step = round * 50;
+            for member in 0..2usize {
+                t += 7;
+                out.push_str(&format!(
+                    "{{\"t_us\":{t},\"ev\":\"publish\",\"member\":{member},\"step\":{step},\"bytes\":{model_bytes},\"dur_us\":{}}}\n",
+                    dur(model_bytes)
+                ));
+            }
+            for member in 0..2usize {
+                let teacher = 1 - member;
+                let (bytes, full) = if round == 1 {
+                    (model_bytes, true)
+                } else {
+                    (delta_bytes, false)
+                };
+                t += 5;
+                out.push_str(&format!(
+                    "{{\"t_us\":{t},\"ev\":\"fetch\",\"member\":{teacher},\"step\":{step},\"bytes\":{bytes},\"dur_us\":{}}}\n",
+                    dur(bytes)
+                ));
+                t += 3;
+                let (moved, unchanged) = if full { (8, 0) } else { (2, 6) };
+                out.push_str(&format!(
+                    "{{\"t_us\":{t},\"ev\":\"delta_install\",\"member\":{teacher},\"step\":{step},\"full\":{full},\"moved\":{moved},\"unchanged\":{unchanged},\"encoded\":{moved},\"bytes\":{bytes}}}\n"
+                ));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fits_the_synthetic_medium_within_tolerance() {
+        let trace = synthetic_trace(10, 4_000_000);
+        let cal = calibrate(&trace).unwrap();
+        // 1 GB/s, 200us latency, 4 MB plane, 2 workers, interval 50.
+        assert!(
+            (cal.model.bandwidth_bps - 1e9).abs() / 1e9 < 0.05,
+            "bandwidth {:.3e}",
+            cal.model.bandwidth_bps
+        );
+        assert!(
+            (cal.model.latency_s - 200e-6).abs() < 50e-6,
+            "latency {:.1}us",
+            cal.model.latency_s * 1e6
+        );
+        assert_eq!(cal.model.model_bytes, 4_000_000);
+        assert_eq!(cal.model.workers, 2);
+        assert_eq!(cal.model.reload_interval, 50);
+        assert_eq!(cal.teachers, 1);
+        assert!((cal.changed_fraction - 0.25).abs() < 1e-9);
+        assert!((cal.wire_ratio - 0.26).abs() < 1e-3, "ratio {}", cal.wire_ratio);
+        // The headline acceptance bound: modeled within 25% of measured.
+        assert!(cal.rel_error() < 0.25, "rel_error {:.3}", cal.rel_error());
+        let report = cal.report();
+        assert!(report.contains("rel_error"), "{report}");
+    }
+
+    #[test]
+    fn cold_full_fetches_are_excluded_from_the_steady_state() {
+        // One round only: every fetch is the cold full fetch, so the
+        // steady-state delta shape falls back to full-plane constants.
+        let trace = synthetic_trace(1, 4_000_000);
+        let cal = calibrate(&trace).unwrap();
+        assert_eq!(cal.changed_fraction, 1.0);
+        assert_eq!(cal.wire_ratio, 1.0);
+    }
+
+    #[test]
+    fn empty_and_eventless_traces_error() {
+        assert!(calibrate("").is_err());
+        // parseable but publish-free
+        let only_fault = "{\"t_us\":1,\"ev\":\"fault\",\"kind\":\"dropped-fetch\",\"member\":0,\"salt\":9}\n";
+        assert!(calibrate(only_fault).is_err());
+    }
+
+    #[test]
+    fn fallback_rate_fit_on_a_single_sample_size() {
+        // Every sample the same size: the line is degenerate, the
+        // aggregate-rate fallback still produces a usable bandwidth.
+        let mut trace = String::new();
+        for i in 0..4 {
+            trace.push_str(&format!(
+                "{{\"t_us\":{},\"ev\":\"publish\",\"member\":0,\"step\":{},\"bytes\":1000000,\"dur_us\":1000}}\n",
+                i + 1,
+                (i + 1) * 50
+            ));
+        }
+        let cal = calibrate(&trace).unwrap();
+        assert!((cal.model.bandwidth_bps - 1e9).abs() / 1e9 < 1e-6);
+        assert_eq!(cal.model.latency_s, 0.0);
+    }
+}

@@ -19,7 +19,10 @@
 
 use crate::prng::Pcg64;
 
+pub mod calibrate;
 pub mod sweep;
+
+pub use calibrate::{calibrate, Calibration};
 
 /// Analytic wall-clock model for one synchronous worker group.
 #[derive(Debug, Clone)]
